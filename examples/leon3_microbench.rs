@@ -1,0 +1,65 @@
+//! The FPGA-prototype experiments (paper Section 6.2): vector addition
+//! (Figure 15) and matrix multiplication (Figure 16) on the modeled
+//! 4-core Leon3 SMP @75 MHz, plus Tables 2 and 3.
+//!
+//!     cargo run --release --example leon3_microbench
+
+use pgas_hw::leon3::microbench::{
+    run_matmul, run_vecadd, MatmulVariant, VecAddVariant,
+};
+use pgas_hw::leon3::{table2, table3};
+use pgas_hw::util::table::{fnum, Table};
+
+fn main() {
+    println!("{}", table2());
+    println!("{}", table3());
+
+    // ---- Figure 15: vector addition ----
+    let n = 8192;
+    let mut fig15 = Table::new(
+        &format!("Figure 15: Leon 3 — Vector Addition ({n} x u32, ms @75MHz)"),
+        &["threads", "dynamic", "static", "privatized", "hw", "hw speedup vs dynamic"],
+    );
+    for threads in [1u32, 2, 4] {
+        let dy = run_vecadd(threads, VecAddVariant::Dynamic, n);
+        let st = run_vecadd(threads, VecAddVariant::Static, n);
+        let pv = run_vecadd(threads, VecAddVariant::Privatized, n);
+        let hw = run_vecadd(threads, VecAddVariant::Hw, n);
+        fig15.row(&[
+            threads.to_string(),
+            fnum(dy.runtime_ms(), 3),
+            fnum(st.runtime_ms(), 3),
+            fnum(pv.runtime_ms(), 3),
+            fnum(hw.runtime_ms(), 3),
+            format!("{:.1}x", dy.cycles as f64 / hw.cycles as f64),
+        ]);
+    }
+    println!("{}", fig15.render());
+    println!(
+        "note: the hw executable needs no static recompilation — the\n\
+         `threads` special register is set at run time (paper 6.2).\n"
+    );
+
+    // ---- Figure 16: matrix multiplication ----
+    let n = 32;
+    let mut fig16 = Table::new(
+        &format!("Figure 16: Leon 3 — Matrix Multiplication ({n}x{n} u32, ms @75MHz)"),
+        &["threads", "static", "privatization 1", "privatization 2", "hw", "hw/priv2"],
+    );
+    for threads in [1u32, 2, 4] {
+        let st = run_matmul(threads, MatmulVariant::Static, n);
+        let p1 = run_matmul(threads, MatmulVariant::Priv1, n);
+        let p2 = run_matmul(threads, MatmulVariant::Priv2, n);
+        let hw = run_matmul(threads, MatmulVariant::Hw, n);
+        fig16.row(&[
+            threads.to_string(),
+            fnum(st.runtime_ms(), 3),
+            fnum(p1.runtime_ms(), 3),
+            fnum(p2.runtime_ms(), 3),
+            fnum(hw.runtime_ms(), 3),
+            format!("{:.2}", hw.cycles as f64 / p2.cycles as f64),
+        ]);
+    }
+    println!("{}", fig16.render());
+    println!("all runs validated element-exact against host references.");
+}

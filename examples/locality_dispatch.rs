@@ -1,0 +1,121 @@
+//! Branch-on-locality in action (paper §4.2/§5.2, Table 3's `cb`):
+//! "testing for the locality of a shared pointer … can be used to
+//! quickly call a communication sub-routine if the data is off-node."
+//!
+//! A thread walks a cyclic shared array; **local** elements take the
+//! fast in-line path, **remote** elements take a slow path (standing in
+//! for a communication call).  The dispatch itself is compared two
+//! ways:
+//!
+//! * software: unpack the thread field, compare with MYTHREAD, branch
+//!   (4 instructions per element);
+//! * hardware: the PGAS increment already set the locality condition
+//!   code — one `pgas_brloc` does the dispatch.
+//!
+//!     cargo run --release --example locality_dispatch
+
+use pgas_hw::cpu::{AtomicCpu, Cpu, HierLatency, SharedLevel};
+use pgas_hw::isa::{Cond, Inst, IntOp, MemWidth, Program};
+use pgas_hw::mem::MemSystem;
+use pgas_hw::sptr::{pack, ArrayLayout, SharedPtr, VA_BITS};
+use pgas_hw::util::table::Table;
+
+const N: i64 = 4096;
+const THREADS: u32 = 4;
+
+/// Build the walk with hardware locality dispatch: counts local
+/// elements in r2 and remote ones in r3.
+fn hw_dispatch() -> Program {
+    let layout = ArrayLayout::new(1, 8, THREADS);
+    let start = pack(&SharedPtr::for_index(&layout, 0, 0)) as i64;
+    Program::new(
+        "hw_dispatch",
+        vec![
+            Inst::Ldi { rd: 1, imm: start },
+            Inst::Ldi { rd: 4, imm: N },
+            // loop: 2
+            Inst::PgasIncI { rd: 1, ra: 1, l2es: 3, l2bs: 0, l2inc: 0 },
+            // cc was set by the increment: branch if anything non-local
+            Inst::PgasBrLoc { mask: 0b1110, target: 6 },
+            Inst::Opi { op: IntOp::Add, rd: 2, ra: 2, imm: 1 }, // local++
+            Inst::Jmp { target: 7 },
+            Inst::Opi { op: IntOp::Add, rd: 3, ra: 3, imm: 1 }, // remote++ (6)
+            // 7:
+            Inst::Opi { op: IntOp::Add, rd: 4, ra: 4, imm: -1 },
+            Inst::Br { cond: Cond::Gt, ra: 4, target: 2 },
+            Inst::Halt,
+        ],
+    )
+}
+
+/// The same walk with the software locality test: unpack + compare.
+fn soft_dispatch() -> Program {
+    let layout = ArrayLayout::new(1, 8, THREADS);
+    let start = pack(&SharedPtr::for_index(&layout, 0, 0)) as i64;
+    Program::new(
+        "soft_dispatch",
+        vec![
+            Inst::Ldi { rd: 1, imm: start },
+            Inst::Ldi { rd: 4, imm: N },
+            // loop: 2  (hardware inc, software locality test)
+            Inst::PgasIncI { rd: 1, ra: 1, l2es: 3, l2bs: 0, l2inc: 0 },
+            Inst::Opi { op: IntOp::Srl, rd: 5, ra: 1, imm: VA_BITS as i32 },
+            Inst::Opi { op: IntOp::And, rd: 5, ra: 5, imm: 0x3FF },
+            Inst::Opr { op: IntOp::CmpEq, rd: 5, ra: 5, rb: 28 /* MYTHREAD */ },
+            Inst::Br { cond: Cond::Eq, ra: 5, target: 9 },
+            Inst::Opi { op: IntOp::Add, rd: 2, ra: 2, imm: 1 }, // local++
+            Inst::Jmp { target: 10 },
+            Inst::Opi { op: IntOp::Add, rd: 3, ra: 3, imm: 1 }, // remote++ (9)
+            // 10:
+            Inst::Opi { op: IntOp::Add, rd: 4, ra: 4, imm: -1 },
+            Inst::Br { cond: Cond::Gt, ra: 4, target: 2 },
+            Inst::Halt,
+        ],
+    )
+}
+
+fn run(prog: &Program) -> (u64, u64, u64) {
+    let mut cpu = AtomicCpu::new(0, THREADS);
+    cpu.state_mut().set_r(28, 0);
+    cpu.state_mut().set_r(29, THREADS as u64);
+    let mut mem = MemSystem::new(THREADS);
+    let mut sh = SharedLevel::new(1, HierLatency::default());
+    cpu.run(prog, &mut mem, &mut sh, u64::MAX);
+    (cpu.stats().cycles, cpu.state().r(2), cpu.state().r(3))
+}
+
+fn main() {
+    let (hw_cyc, hw_local, hw_remote) = run(&hw_dispatch());
+    let (sw_cyc, sw_local, sw_remote) = run(&soft_dispatch());
+    assert_eq!((hw_local, hw_remote), (sw_local, sw_remote));
+    // cyclic layout over 4 threads: 1/4 of elements are local to t0
+    assert_eq!(hw_local, (N as u64) / THREADS as u64);
+    assert_eq!(hw_remote, (N as u64) * 3 / THREADS as u64);
+
+    let mut t = Table::new(
+        "locality dispatch: walk 4096 cyclic elements, branch local/remote",
+        &["dispatch", "cycles (atomic)", "local", "remote", "vs software"],
+    );
+    t.row(&[
+        "software (unpack+cmp+branch)".into(),
+        sw_cyc.to_string(),
+        sw_local.to_string(),
+        sw_remote.to_string(),
+        "1.00x".into(),
+    ]);
+    t.row(&[
+        "hardware (pgas_brloc on cc)".into(),
+        hw_cyc.to_string(),
+        hw_local.to_string(),
+        hw_remote.to_string(),
+        format!("{:.2}x", sw_cyc as f64 / hw_cyc as f64),
+    ]);
+    println!("{}", t.render());
+    println!(
+        "the increment's condition code makes the local/remote dispatch\n\
+         a single branch — the mechanism the paper proposes for fast\n\
+         communication-call gating (condition codes 0..3, Table 3)."
+    );
+    // also demonstrate a read via the MemWidth to silence unused import
+    let _ = MemWidth::U64;
+}

@@ -1,0 +1,74 @@
+//! End-to-end driver (the deliverable-(b) headline example): run the
+//! paper's full Gem5 evaluation — the NAS kernels EP/IS/CG/MG/FT, three
+//! variants each, across CPU models and core counts — on the simulated
+//! machine, validate every run's numerics against host references, and
+//! print every figure's table plus the headline summary.
+//!
+//!     cargo run --release --example npb_campaign             # full
+//!     cargo run --release --example npb_campaign -- --quick  # smoke
+//!
+//! Results are archived to results/npb_campaign.csv.
+
+use pgas_hw::coordinator::{self, Campaign};
+use pgas_hw::cpu::CpuModel;
+use pgas_hw::npb::{Kernel, Scale};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let campaign = if quick {
+        Campaign::quick()
+    } else {
+        Campaign {
+            kernels: Kernel::ALL.to_vec(),
+            // atomic up to 64 cores (Figs 6-10); timing (Figs 11-14
+            // series) up to 16; detailed runs are the slowest, matching
+            // the paper's "multiple days are needed for a detailed run"
+            models: vec![CpuModel::Atomic, CpuModel::Timing, CpuModel::Detailed],
+            cores: vec![1, 2, 4, 8, 16, 32, 64],
+            variants: pgas_hw::npb::PaperVariant::ALL.to_vec(),
+            scale: Scale { factor: 128 },
+            jobs: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    };
+    eprintln!(
+        "NPB campaign: {} validated simulation points (scale 1/{})",
+        campaign.points().len(),
+        campaign.scale.factor
+    );
+    let t0 = std::time::Instant::now();
+    let outs = campaign.run(true);
+    eprintln!("campaign wall time: {:.1}s", t0.elapsed().as_secs_f64());
+
+    for &(k, fig) in &[
+        (Kernel::Ep, "Figure 6"),
+        (Kernel::Cg, "Figure 7"),
+        (Kernel::Ft, "Figure 8"),
+        (Kernel::Is, "Figure 9"),
+        (Kernel::Mg, "Figure 10"),
+    ] {
+        let t = coordinator::figure_table(&outs, k, CpuModel::Atomic, fig);
+        if !t.is_empty() {
+            println!("{}", t.render());
+        }
+    }
+    for &(k, fig) in &[
+        (Kernel::Cg, "Figure 11"),
+        (Kernel::Ft, "Figure 12"),
+        (Kernel::Is, "Figure 13"),
+        (Kernel::Mg, "Figure 14"),
+    ] {
+        for model in [CpuModel::Timing, CpuModel::Detailed] {
+            let t = coordinator::figure_table(&outs, k, model, fig);
+            if !t.is_empty() {
+                println!("{}", t.render());
+            }
+        }
+    }
+    println!("{}", coordinator::headline_summary(&outs).render());
+
+    std::fs::create_dir_all("results").expect("mkdir results");
+    std::fs::write("results/npb_campaign.csv", coordinator::outcomes_csv(&outs))
+        .expect("write csv");
+    eprintln!("wrote results/npb_campaign.csv ({} rows)", outs.len());
+    println!("ALL RUNS VALIDATED against host references.");
+}

@@ -1,0 +1,82 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the Rust runtime.
+
+HLO text -- NOT ``.serialize()`` -- is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).  The text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Emits:
+  sptr_unit.hlo.txt    -- batched fused increment+translate+locality
+  sptr_inc.hlo.txt     -- batched increment only
+  trace_walker.hlo.txt -- scan-based address-trace generator
+  manifest.txt         -- shapes/dtypes the Rust side asserts against
+"""
+
+import argparse
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> XLA HLO text via stablehlo (id-safe round trip)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# (artifact name, graph fn, example-args fn, human description)
+ARTIFACTS = [
+    ("sptr_unit", model.address_unit, model.unit_example_args,
+     "fused increment+translate+locality over UNIT_BATCH pointers"),
+    ("sptr_inc", model.sptr_increment, model.inc_example_args,
+     "increment-only over UNIT_BATCH pointers"),
+    ("trace_walker", model.trace_walker, model.walker_example_args,
+     "WALK_LEN-step address-trace scan"),
+]
+
+
+def emit_all(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = [
+        f"UNIT_BATCH={model.UNIT_BATCH}",
+        f"WALK_LEN={model.WALK_LEN}",
+        f"MAX_THREADS={model.k.MAX_THREADS}",
+        f"CFG_LEN={model.k.CFG_LEN}",
+    ]
+    for name, fn, args_fn, desc in ARTIFACTS:
+        lowered = jax.jit(fn).lower(*args_fn())
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest.append(f"{name}: {desc} ({len(text)} chars)")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts",
+                   help="directory for the .hlo.txt artifacts")
+    p.add_argument("--out", default=None,
+                   help="(compat) single-file target; emits all artifacts "
+                        "into its directory")
+    args = p.parse_args()
+    out_dir = os.path.dirname(args.out) if args.out else args.out_dir
+    emit_all(out_dir or ".")
+
+
+if __name__ == "__main__":
+    main()

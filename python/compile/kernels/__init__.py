@@ -1,0 +1,3 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.
+from . import ref  # noqa: F401
+from . import sptr_unit  # noqa: F401

@@ -1,0 +1,113 @@
+"""Pure-jnp oracle for the PGAS address-mapping unit.
+
+This is the *general* software path: Algorithm 1 of the paper implemented
+with true integer division/modulo, valid for any (blocksize, elemsize,
+numthreads) -- including the non-power-of-2 cases the hardware does not
+support (e.g. CG's ``w``/``w_tmp`` arrays with elemsize 56016).  The Pallas
+kernel (``sptr_unit.py``) implements only the power-of-2 fast path with
+shifts and masks, exactly like the paper's 2-stage pipelined datapath; on
+power-of-2 configurations the two must agree bit-for-bit, which is the core
+correctness signal checked by ``python/tests/``.
+
+All threads/phases are int32; virtual addresses are int64 (the paper's
+64-bit shared-pointer ``va`` field).
+"""
+
+import jax.numpy as jnp
+
+# Locality condition codes (paper 5.2): 0 = local, 1 = same memory
+# controller, 2 = reachable by shared load/store instructions (same node),
+# 3 = other node.
+LOC_LOCAL = 0
+LOC_SAME_MC = 1
+LOC_SAME_NODE = 2
+LOC_REMOTE = 3
+
+
+def sptr_increment_ref(thread, phase, va, increment, blocksize, elemsize,
+                       numthreads):
+    """Algorithm 1 (shared pointer incrementation), general path.
+
+    input : blocksize, elemsize, increment, numthreads, shptr
+    output: nshptr
+      phinc        = shptr.phase + increment
+      thinc        = phinc / blocksize
+      nshptr.phase = phinc % blocksize
+      blockinc     = (shptr.thread + thinc) / numthreads
+      nshptr.thread= (shptr.thread + thinc) % numthreads
+      eaddrinc     = (nshptr.phase - shptr.phase) + blockinc * blocksize
+      nshptr.va    = shptr.va + eaddrinc * elemsize
+
+    All array args broadcast; scalar config args may be python ints or
+    jnp scalars.  ``increment`` must be non-negative (the paper's
+    immediate form encodes powers of two; the register form is used with
+    non-negative strides by the prototype compiler).
+    """
+    thread = jnp.asarray(thread, jnp.int32)
+    phase = jnp.asarray(phase, jnp.int32)
+    va = jnp.asarray(va, jnp.int64)
+    increment = jnp.asarray(increment, jnp.int32)
+    blocksize = jnp.asarray(blocksize, jnp.int32)
+    elemsize = jnp.asarray(elemsize, jnp.int64)
+    numthreads = jnp.asarray(numthreads, jnp.int32)
+
+    phinc = phase + increment
+    thinc = phinc // blocksize
+    nphase = phinc % blocksize
+    tsum = thread + thinc
+    blockinc = tsum // numthreads
+    nthread = tsum % numthreads
+    eaddrinc = (nphase - phase).astype(jnp.int64) + (
+        blockinc.astype(jnp.int64) * blocksize.astype(jnp.int64))
+    nva = va + eaddrinc * elemsize
+    return nthread, nphase, nva
+
+
+def translate_ref(thread, va, base_table):
+    """Shared pointer -> system virtual address.
+
+    ``base_table`` is the per-thread base-address lookup table (the paper's
+    second, LUT-based translation option, used by both their prototypes):
+    sysva = base_table[thread] + va.
+    """
+    thread = jnp.asarray(thread, jnp.int32)
+    va = jnp.asarray(va, jnp.int64)
+    base_table = jnp.asarray(base_table, jnp.int64)
+    return jnp.take(base_table, thread, axis=0) + va
+
+
+def locality_ref(thread, mythread, log2_threads_per_mc, log2_threads_per_node):
+    """Coprocessor condition code for the incremented address (paper 5.2).
+
+    0 if the pointed data is owned by the current thread, 1 if it lives on
+    the same memory controller, 2 if it is on the same node (reachable by
+    the shared load/store instructions), 3 otherwise.
+    """
+    thread = jnp.asarray(thread, jnp.int32)
+    mythread = jnp.asarray(mythread, jnp.int32)
+    same = thread == mythread
+    same_mc = (thread >> log2_threads_per_mc) == (mythread >> log2_threads_per_mc)
+    same_node = (thread >> log2_threads_per_node) == (mythread >> log2_threads_per_node)
+    return jnp.where(same, LOC_LOCAL,
+                     jnp.where(same_mc, LOC_SAME_MC,
+                               jnp.where(same_node, LOC_SAME_NODE,
+                                         LOC_REMOTE))).astype(jnp.int32)
+
+
+def address_unit_ref(thread, phase, va, increment, log2_blocksize,
+                     log2_elemsize, log2_numthreads, base_table, mythread,
+                     log2_threads_per_mc, log2_threads_per_node):
+    """Full address-unit reference: increment + translate + locality.
+
+    Takes log2 config values (the hardware's 5-bit one-hot immediates of
+    Figure 3) so its interface matches the Pallas kernel exactly.
+    """
+    blocksize = jnp.int32(1) << jnp.asarray(log2_blocksize, jnp.int32)
+    elemsize = jnp.int64(1) << jnp.asarray(log2_elemsize, jnp.int64)
+    numthreads = jnp.int32(1) << jnp.asarray(log2_numthreads, jnp.int32)
+    nthread, nphase, nva = sptr_increment_ref(
+        thread, phase, va, increment, blocksize, elemsize, numthreads)
+    sysva = translate_ref(nthread, nva, base_table)
+    loc = locality_ref(nthread, mythread, log2_threads_per_mc,
+                       log2_threads_per_node)
+    return nthread, nphase, nva, sysva, loc

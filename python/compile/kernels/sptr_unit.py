@@ -1,0 +1,194 @@
+"""L1 Pallas kernels: the PGAS address-mapping datapath, batched.
+
+The paper's hardware is a 2-stage pipelined shift/mask/add network that
+(1) increments a UPC shared pointer through a block-cyclic layout
+(Algorithm 1, power-of-2 fast path), (2) translates the resulting pointer
+to a system virtual address via a per-thread base-address LUT, and
+(3) emits a 2-bit locality condition code.  Here that datapath is realized
+as a batched Pallas kernel: one lane per shared pointer.
+
+TPU adaptation (DESIGN.md section "Hardware-Adaptation"): the paper's
+per-cycle pipeline throughput becomes per-lane VPU throughput; the
+coprocessor register file becomes a VMEM-resident tile; BlockSpec expresses
+the HBM<->VMEM schedule that the paper expressed with its register file and
+2-stage pipeline.  The base-address LUT gather is realized as a
+broadcast-compare-select reduction (TPU-safe: no dynamic gather inside the
+kernel), mirroring how a hardware LUT is a mux tree rather than indexed
+DRAM.
+
+Kernels must be lowered with ``interpret=True`` -- real TPU lowering emits
+a Mosaic custom-call the CPU PJRT plugin cannot execute (see
+/opt/xla-example/README.md).
+
+Config layout (``cfg``, int32[8], one value per hardware config register /
+Figure-3 immediate field):
+  cfg[0] = log2(blocksize)    -- Bsize immediate (5-bit one-hot encoded)
+  cfg[1] = log2(elemsize)     -- Esize immediate
+  cfg[2] = log2(numthreads)   -- the special 'threads' register
+  cfg[3] = mythread           -- executing thread id (for locality)
+  cfg[4] = log2(threads per memory controller)
+  cfg[5] = log2(threads per node)
+  cfg[6], cfg[7]              -- reserved (0)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# One pointer per lane; 8x128-style tiles would apply on real TPU VMEM.
+# 1024 lanes keeps the per-block VMEM footprint at
+# (3 outputs + 4 inputs) * 1024 * 8B ~ 56 KiB << 16 MiB VMEM.
+BLOCK = 1024
+
+# Fixed LUT capacity: the unit supports up to 64 threads (the paper's
+# BigTsunami limit).  Smaller thread counts pad the table with zeros.
+MAX_THREADS = 64
+
+CFG_LEN = 8
+
+
+def _inc_body(cfg_ref, thread_ref, phase_ref, va_ref, inc_ref,
+              nthread_ref, nphase_ref, nva_ref):
+    """Power-of-2 Algorithm 1: pure shift/mask/add (the hardware pipeline).
+
+    Stage 1 of the paper's pipeline computes phinc/thinc/nphase;
+    stage 2 computes the thread wraparound and the address increment.
+    """
+    l2bs = cfg_ref[0]
+    l2es = cfg_ref[1]
+    l2nt = cfg_ref[2]
+    bs_mask = (jnp.int32(1) << l2bs) - 1
+    nt_mask = (jnp.int32(1) << l2nt) - 1
+
+    thread = thread_ref[...]
+    phase = phase_ref[...]
+    va = va_ref[...]
+    inc = inc_ref[...]
+
+    # -- pipeline stage 1 --
+    phinc = phase + inc
+    thinc = phinc >> l2bs          # phinc / blocksize
+    nphase = phinc & bs_mask       # phinc % blocksize
+    # -- pipeline stage 2 --
+    tsum = thread + thinc
+    blockinc = tsum >> l2nt        # tsum / numthreads
+    nthread = tsum & nt_mask       # tsum % numthreads
+    eaddrinc = (nphase - phase).astype(jnp.int64) + (
+        blockinc.astype(jnp.int64) << l2bs.astype(jnp.int64))
+    nva = va + (eaddrinc << l2es.astype(jnp.int64))
+
+    nthread_ref[...] = nthread
+    nphase_ref[...] = nphase
+    nva_ref[...] = nva
+
+
+def _lut_select(base_block, thread):
+    """Hardware LUT as a mux tree: sum_t (thread == t) * base[t].
+
+    ``base_block`` is int64[MAX_THREADS]; ``thread`` is int32[B].  The
+    broadcast compare/select avoids dynamic gather inside the kernel
+    (TPU-unfriendly); on MAX_THREADS=64 this is a 64-way select, the same
+    structure as the FPGA prototype's BRAM-backed LUT read port.
+    """
+    tids = jax.lax.broadcasted_iota(jnp.int32, (MAX_THREADS,), 0)
+    onehot = (thread[:, None] == tids[None, :])
+    return jnp.sum(jnp.where(onehot, base_block[None, :], jnp.int64(0)),
+                   axis=1)
+
+
+def _unit_body(cfg_ref, base_ref, thread_ref, phase_ref, va_ref, inc_ref,
+               nthread_ref, nphase_ref, nva_ref, sysva_ref, loc_ref):
+    """Fused increment + translate + locality (the full coprocessor op).
+
+    Fusing keeps each pointer's intermediate state in registers/VMEM for
+    the whole round trip -- the paper's point that the unit sits *inside*
+    the processor pipeline rather than out by the NIC (T3E centrifuge).
+    """
+    _inc_body(cfg_ref, thread_ref, phase_ref, va_ref, inc_ref,
+              nthread_ref, nphase_ref, nva_ref)
+    nthread = nthread_ref[...]
+    nva = nva_ref[...]
+
+    # Translation: sysva = base_table[nthread] + nva.
+    sysva_ref[...] = _lut_select(base_ref[...], nthread) + nva
+
+    # Locality condition code (00 local / 01 same-MC / 10 same-node /
+    # 11 remote), used by the Coprocessor Branch instruction.
+    mythread = cfg_ref[3]
+    l2mc = cfg_ref[4]
+    l2node = cfg_ref[5]
+    same = nthread == mythread
+    same_mc = (nthread >> l2mc) == (mythread >> l2mc)
+    same_node = (nthread >> l2node) == (mythread >> l2node)
+    loc_ref[...] = jnp.where(
+        same, jnp.int32(0),
+        jnp.where(same_mc, jnp.int32(1),
+                  jnp.where(same_node, jnp.int32(2), jnp.int32(3))))
+
+
+def _whole(shape=None):
+    """BlockSpec pinning a small operand (cfg / LUT) into every block."""
+    return pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sptr_increment(cfg, thread, phase, va, inc):
+    """Batched power-of-2 shared-pointer increment.
+
+    Args:
+      cfg:    int32[8]  config registers (see module docstring).
+      thread: int32[N]  pointer thread fields.
+      phase:  int32[N]  pointer phase fields.
+      va:     int64[N]  pointer virtual-address fields.
+      inc:    int32[N]  element increments (non-negative).
+    Returns:
+      (nthread int32[N], nphase int32[N], nva int64[N]).
+    N must be a multiple of BLOCK (callers pad).
+    """
+    n = thread.shape[0]
+    assert n % BLOCK == 0, f"batch {n} not a multiple of {BLOCK}"
+    grid = (n // BLOCK,)
+    lane = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        _inc_body,
+        grid=grid,
+        in_specs=[_whole((CFG_LEN,)), lane, lane, lane, lane],
+        out_specs=[lane, lane, lane],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int64),
+        ],
+        interpret=True,
+    )(cfg, thread, phase, va, inc)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def sptr_unit(cfg, base_table, thread, phase, va, inc):
+    """Batched fused increment + translate + locality.
+
+    Args are as in :func:`sptr_increment` plus ``base_table`` int64[64]
+    (the per-thread base-address LUT, zero-padded past numthreads).
+    Returns ``(nthread, nphase, nva, sysva, loc)``.
+    """
+    n = thread.shape[0]
+    assert n % BLOCK == 0, f"batch {n} not a multiple of {BLOCK}"
+    grid = (n // BLOCK,)
+    lane = pl.BlockSpec((BLOCK,), lambda i: (i,))
+    return pl.pallas_call(
+        _unit_body,
+        grid=grid,
+        in_specs=[_whole((CFG_LEN,)), _whole((MAX_THREADS,)),
+                  lane, lane, lane, lane],
+        out_specs=[lane, lane, lane, lane, lane],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int64),
+            jax.ShapeDtypeStruct((n,), jnp.int64),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,
+    )(cfg, base_table, thread, phase, va, inc)

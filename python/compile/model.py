@@ -1,0 +1,140 @@
+"""L2: the JAX address-unit compute graph, calling the L1 Pallas kernels.
+
+The paper's "model" is not a neural network -- its compute graph is the
+PGAS address-mapping unit.  Two graphs are lowered to AOT artifacts:
+
+* ``address_unit`` -- batched fused increment + translate + locality over
+  UNIT_BATCH shared pointers (wraps the Pallas kernel).  The Rust
+  coordinator offloads bulk pointer streams to this executable and uses it
+  as the batch verification oracle against its own scalar implementation.
+* ``trace_walker`` -- a ``lax.scan`` that walks one shared pointer
+  WALK_LEN steps through a block-cyclic array, emitting the system virtual
+  address at every step: the address trace of a UPC loop nest, produced
+  entirely on-device.  This is what the simulator replays to validate the
+  address streams its compiled NPB kernels generate.
+
+Everything here runs at *build* time only (``make artifacts``); the Rust
+binary loads the resulting HLO text and never touches Python.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import sptr_unit as k  # noqa: E402
+
+# Fixed AOT shapes (PJRT executables are monomorphic; Rust pads batches).
+UNIT_BATCH = 8192
+WALK_LEN = 4096
+
+
+def address_unit(cfg, base_table, thread, phase, va, inc):
+    """Fused batched address-mapping unit (see kernels.sptr_unit).
+
+    Returns a 5-tuple ``(nthread, nphase, nva, sysva, loc)``.
+    """
+    return tuple(k.sptr_unit(cfg, base_table, thread, phase, va, inc))
+
+
+def _inc_pow2(cfg, thread, phase, va, inc):
+    """Scalar power-of-2 Algorithm 1 in plain jnp (scan-body form).
+
+    Identical arithmetic to the Pallas kernel's pipeline; kept in jnp so it
+    can live inside ``lax.scan`` without a per-step pallas_call.
+    """
+    l2bs, l2es, l2nt = cfg[0], cfg[1], cfg[2]
+    bs_mask = (jnp.int32(1) << l2bs) - 1
+    nt_mask = (jnp.int32(1) << l2nt) - 1
+    phinc = phase + inc
+    thinc = phinc >> l2bs
+    nphase = phinc & bs_mask
+    tsum = thread + thinc
+    blockinc = tsum >> l2nt
+    nthread = tsum & nt_mask
+    eaddrinc = (nphase - phase).astype(jnp.int64) + (
+        blockinc.astype(jnp.int64) << l2bs.astype(jnp.int64))
+    nva = va + (eaddrinc << l2es.astype(jnp.int64))
+    return nthread, nphase, nva
+
+
+def trace_walker(cfg, base_table, thread0, phase0, va0, inc):
+    """Walk a shared pointer WALK_LEN steps; emit the sysva trace.
+
+    Args:
+      cfg:        int32[8] config registers (see kernels.sptr_unit).
+      base_table: int64[64] per-thread base-address LUT.
+      thread0, phase0: int32 scalars -- starting pointer fields.
+      va0:        int64 scalar -- starting pointer va.
+      inc:        int32 scalar -- per-step element increment.
+    Returns:
+      (sysva int64[WALK_LEN], thread int32[WALK_LEN], loc int32[WALK_LEN])
+      where entry i is the state *after* i increments (entry 0 is the
+      starting pointer itself).
+    """
+    mythread = cfg[3]
+    l2mc, l2node = cfg[4], cfg[5]
+
+    def emit(thread, va):
+        sysva = jnp.take(base_table, thread) + va
+        same = thread == mythread
+        same_mc = (thread >> l2mc) == (mythread >> l2mc)
+        same_node = (thread >> l2node) == (mythread >> l2node)
+        loc = jnp.where(same, 0, jnp.where(same_mc, 1,
+                        jnp.where(same_node, 2, 3))).astype(jnp.int32)
+        return sysva, loc
+
+    def step(carry, _):
+        thread, phase, va = carry
+        sysva, loc = emit(thread, va)
+        out = (sysva, thread, loc)
+        nthread, nphase, nva = _inc_pow2(cfg, thread, phase, va, inc)
+        return (nthread, nphase, nva), out
+
+    _, (sysva, thread, loc) = jax.lax.scan(
+        step, (thread0, phase0, va0), None, length=WALK_LEN)
+    return sysva, thread, loc
+
+
+def sptr_increment(cfg, thread, phase, va, inc):
+    """Increment-only batched kernel (no translation)."""
+    return tuple(k.sptr_increment(cfg, thread, phase, va, inc))
+
+
+def unit_example_args():
+    """ShapeDtypeStructs for lowering ``address_unit``."""
+    i32, i64, s = jnp.int32, jnp.int64, jax.ShapeDtypeStruct
+    return (
+        s((k.CFG_LEN,), i32),
+        s((k.MAX_THREADS,), i64),
+        s((UNIT_BATCH,), i32),
+        s((UNIT_BATCH,), i32),
+        s((UNIT_BATCH,), i64),
+        s((UNIT_BATCH,), i32),
+    )
+
+
+def inc_example_args():
+    """ShapeDtypeStructs for lowering the increment-only kernel."""
+    i32, i64, s = jnp.int32, jnp.int64, jax.ShapeDtypeStruct
+    return (
+        s((k.CFG_LEN,), i32),
+        s((UNIT_BATCH,), i32),
+        s((UNIT_BATCH,), i32),
+        s((UNIT_BATCH,), i64),
+        s((UNIT_BATCH,), i32),
+    )
+
+
+def walker_example_args():
+    """ShapeDtypeStructs for lowering ``trace_walker``."""
+    i32, i64, s = jnp.int32, jnp.int64, jax.ShapeDtypeStruct
+    return (
+        s((k.CFG_LEN,), i32),
+        s((k.MAX_THREADS,), i64),
+        s((), i32),
+        s((), i32),
+        s((), i64),
+        s((), i32),
+    )

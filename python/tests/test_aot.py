@@ -1,0 +1,31 @@
+"""AOT emission smoke tests: artifacts are valid, parseable HLO text."""
+
+import os
+
+from compile import aot, model
+
+
+def test_emit_all_artifacts(tmp_path):
+    out = str(tmp_path)
+    aot.emit_all(out)
+    for name, _, _, _ in aot.ARTIFACTS:
+        path = os.path.join(out, f"{name}.hlo.txt")
+        assert os.path.exists(path), name
+        text = open(path).read()
+        # HLO text header + an ENTRY computation
+        assert "HloModule" in text, name
+        assert "ENTRY" in text, name
+        # interchange must be text, never a serialized proto blob
+        assert text.isprintable() or "\n" in text
+    manifest = open(os.path.join(out, "manifest.txt")).read()
+    assert f"UNIT_BATCH={model.UNIT_BATCH}" in manifest
+    assert f"WALK_LEN={model.WALK_LEN}" in manifest
+
+
+def test_unit_artifact_has_expected_parameters(tmp_path):
+    out = str(tmp_path)
+    aot.emit_all(out)
+    text = open(os.path.join(out, "sptr_unit.hlo.txt")).read()
+    # 6 parameters: cfg, base_table, thread, phase, va, inc
+    for want in (f"s32[{model.UNIT_BATCH}]", "s64[64]", "s32[8]"):
+        assert want in text, want

@@ -1,0 +1,94 @@
+"""Boundary-condition sweeps for the Pallas kernels: the edges the
+hardware's bit-widths define — max threads (64), max blocksize exponent,
+zero-length effective configs, and increments that cross many blocks and
+wrap the thread ring many times."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from compile.kernels import ref  # noqa: E402
+from compile.kernels import sptr_unit as k  # noqa: E402
+
+N = k.BLOCK
+
+
+def cfg(l2bs, l2es, l2nt, myt=0, l2mc=1, l2node=6):
+    return jnp.array([l2bs, l2es, l2nt, myt, l2mc, l2node, 0, 0], jnp.int32)
+
+
+def test_max_threads_boundary():
+    """64 threads (the artifact LUT capacity, the paper's core limit)."""
+    l2nt = 6
+    thread = jnp.asarray(np.arange(N, dtype=np.int32) % 64)
+    phase = jnp.zeros(N, jnp.int32)
+    va = jnp.zeros(N, jnp.int64)
+    inc = jnp.full((N,), 1, jnp.int32)
+    nt, nph, nva = k.sptr_increment(cfg(0, 3, l2nt), thread, phase, va, inc)
+    want = ref.sptr_increment_ref(thread, phase, va, inc, 1, 8, 64)
+    np.testing.assert_array_equal(np.asarray(nt), np.asarray(want[0]))
+    # thread 63 + 1 wraps to 0 with a va bump
+    idx63 = np.where(np.asarray(thread) == 63)[0][0]
+    assert int(nt[idx63]) == 0
+    assert int(nva[idx63]) == 8
+
+
+def test_single_thread_is_linear_memory():
+    """THREADS=1: the shared array degenerates to a private array."""
+    thread = jnp.zeros(N, jnp.int32)
+    phase = jnp.asarray(np.arange(N, dtype=np.int32) % 16)
+    va = (jnp.asarray(np.arange(N, dtype=np.int64))) * 4
+    inc = jnp.full((N,), 5, jnp.int32)
+    nt, _, nva = k.sptr_increment(cfg(4, 2, 0), thread, phase, va, inc)
+    assert (np.asarray(nt) == 0).all()
+    np.testing.assert_array_equal(np.asarray(nva), np.asarray(va) + 20)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_huge_increments_cross_many_rings(seed):
+    """Increments up to 2^20 elements: many block and ring wraps."""
+    rng = np.random.default_rng(seed)
+    l2bs, l2es, l2nt = 3, 3, 4
+    thread = jnp.asarray(rng.integers(0, 16, N, dtype=np.int32))
+    phase = jnp.asarray(rng.integers(0, 8, N, dtype=np.int32))
+    va = jnp.asarray(
+        ((rng.integers(0, 1 << 10, N).astype(np.int64) * 8)
+         + np.asarray(phase)) << l2es)
+    inc = jnp.asarray(rng.integers(0, 1 << 20, N, dtype=np.int32))
+    got = k.sptr_increment(cfg(l2bs, l2es, l2nt), thread, phase, va, inc)
+    want = ref.sptr_increment_ref(thread, phase, va, inc, 8, 8, 16)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_locality_mc_equals_node_granularity():
+    """When MC == node granularity, code 1 absorbs code 2."""
+    thread = jnp.asarray(np.arange(N, dtype=np.int32) % 8)
+    loc = ref.locality_ref(thread, 0, 2, 2)
+    loc = np.asarray(loc)
+    th = np.asarray(thread)
+    assert (loc[th == 0] == 0).all()
+    assert (loc[(th > 0) & (th < 4)] == 1).all()
+    assert (loc[th >= 4] == 3).all()
+
+
+def test_unit_batch_full_lut_padding():
+    """Threads < 64 leave LUT tail zero; sysva must never read the tail."""
+    t = 4
+    tbl = np.zeros(k.MAX_THREADS, np.int64)
+    tbl[:t] = [0x1_0000_0000 * (i + 1) for i in range(t)]
+    thread = jnp.asarray(np.arange(N, dtype=np.int32) % t)
+    phase = jnp.zeros(N, jnp.int32)
+    va = jnp.full((N,), 0x100, jnp.int64)
+    inc = jnp.zeros(N, jnp.int32)
+    *_, sysva, _ = k.sptr_unit(
+        cfg(2, 2, 2), jnp.asarray(tbl), thread, phase, va, inc)
+    sysva = np.asarray(sysva)
+    for i in range(64):
+        th = i % t
+        assert sysva[i] == tbl[th] + 0x100, i

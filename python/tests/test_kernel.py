@@ -1,0 +1,181 @@
+"""Pallas kernel vs pure-jnp oracle -- the CORE correctness signal.
+
+The Pallas kernel implements only the power-of-2 fast path (shift/mask,
+like the paper's pipeline); the oracle implements general Algorithm 1 with
+division/modulo.  On power-of-2 configurations they must agree exactly
+(integer outputs -> bit equality, not allclose).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from compile.kernels import ref  # noqa: E402
+from compile.kernels import sptr_unit as k  # noqa: E402
+
+N = k.BLOCK  # single-block batches keep hypothesis runs fast
+
+
+def make_cfg(l2bs, l2es, l2nt, mythread=0, l2mc=1, l2node=3):
+    return jnp.array([l2bs, l2es, l2nt, mythread, l2mc, l2node, 0, 0],
+                     jnp.int32)
+
+
+def random_pointers(rng, l2bs, l2es, l2nt, n=N):
+    """Valid pointers: thread < T, 0 <= phase < blocksize, va consistent.
+
+    va is block-aligned with the phase: va = (blocks_so_far * bs + phase)
+    * esize for some small non-negative block count per thread.
+    """
+    bs, es, t = 1 << l2bs, 1 << l2es, 1 << l2nt
+    thread = rng.integers(0, t, n, dtype=np.int32)
+    phase = rng.integers(0, bs, n, dtype=np.int32)
+    nblocks = rng.integers(0, 1 << 10, n).astype(np.int64)
+    va = (nblocks * bs + phase) * es
+    return (jnp.asarray(thread), jnp.asarray(phase), jnp.asarray(va))
+
+
+def base_table(rng, t):
+    tbl = np.zeros(k.MAX_THREADS, np.int64)
+    # 0xff0b000000000-style distinct per-thread bases (paper 4.2 example)
+    tbl[:t] = (0xFF0B << 36) + rng.integers(0, 1 << 20, t) * 0x10000
+    return jnp.asarray(tbl)
+
+
+cfg_strategy = st.tuples(
+    st.integers(0, 10),   # log2 blocksize  (1 .. 1024 elements/block)
+    st.integers(0, 6),    # log2 elemsize   (1 .. 64 bytes)
+    st.integers(0, 6),    # log2 numthreads (1 .. 64 threads)
+    st.integers(0, 2**31 - 1),  # rng seed
+    st.integers(0, 1 << 16),    # max increment magnitude
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(cfg_strategy)
+def test_increment_kernel_matches_general_algorithm(params):
+    l2bs, l2es, l2nt, seed, max_inc = params
+    rng = np.random.default_rng(seed)
+    thread, phase, va = random_pointers(rng, l2bs, l2es, l2nt)
+    inc = jnp.asarray(rng.integers(0, max_inc + 1, N, dtype=np.int32))
+    cfg = make_cfg(l2bs, l2es, l2nt)
+
+    nt_k, np_k, nva_k = k.sptr_increment(cfg, thread, phase, va, inc)
+    nt_r, np_r, nva_r = ref.sptr_increment_ref(
+        thread, phase, va, inc, 1 << l2bs, 1 << l2es, 1 << l2nt)
+
+    np.testing.assert_array_equal(np.asarray(nt_k), np.asarray(nt_r))
+    np.testing.assert_array_equal(np.asarray(np_k), np.asarray(np_r))
+    np.testing.assert_array_equal(np.asarray(nva_k), np.asarray(nva_r))
+
+
+@settings(max_examples=25, deadline=None)
+@given(cfg_strategy, st.integers(0, 63))
+def test_fused_unit_matches_reference(params, myt):
+    l2bs, l2es, l2nt, seed, max_inc = params
+    t = 1 << l2nt
+    mythread = myt % t
+    rng = np.random.default_rng(seed)
+    thread, phase, va = random_pointers(rng, l2bs, l2es, l2nt)
+    inc = jnp.asarray(rng.integers(0, max_inc + 1, N, dtype=np.int32))
+    l2mc = max(0, l2nt - 2)
+    l2node = max(0, l2nt - 1)
+    cfg = make_cfg(l2bs, l2es, l2nt, mythread, l2mc, l2node)
+    tbl = base_table(rng, t)
+
+    outs_k = k.sptr_unit(cfg, tbl, thread, phase, va, inc)
+    outs_r = ref.address_unit_ref(
+        thread, phase, va, inc, l2bs, l2es, l2nt, tbl, mythread, l2mc,
+        l2node)
+    for got, want in zip(outs_k, outs_r):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_zero_increment_is_identity_on_fields():
+    cfg = make_cfg(4, 3, 2)
+    rng = np.random.default_rng(7)
+    thread, phase, va = random_pointers(rng, 4, 3, 2)
+    z = jnp.zeros(N, jnp.int32)
+    nt, nph, nva = k.sptr_increment(cfg, thread, phase, va, z)
+    np.testing.assert_array_equal(np.asarray(nt), np.asarray(thread))
+    np.testing.assert_array_equal(np.asarray(nph), np.asarray(phase))
+    np.testing.assert_array_equal(np.asarray(nva), np.asarray(va))
+
+
+def test_unit_increment_walks_figure2_layout():
+    """shared [4] int arrayA[32] over 4 threads (paper Figure 2).
+
+    Walking the array element-by-element must visit threads
+    0,0,0,0,1,1,1,1,2,2,2,2,3,3,3,3,0,... and bump va by 4 bytes within a
+    block and by 16 bytes when wrapping back to a thread.
+    """
+    l2bs, l2es, l2nt = 2, 2, 2  # blocksize 4, int (4 bytes), 4 threads
+    cfg = make_cfg(l2bs, l2es, l2nt)
+    thread = jnp.zeros(N, jnp.int32)
+    phase = jnp.zeros(N, jnp.int32)
+    va = jnp.zeros(N, jnp.int64)
+    one = jnp.ones(N, jnp.int32)
+
+    seen = []
+    t, ph, v = thread, phase, va
+    for _ in range(32):
+        seen.append((int(t[0]), int(ph[0]), int(v[0])))
+        t, ph, v = k.sptr_increment(cfg, t, ph, v, one)
+
+    for i, (ti, pi, vi) in enumerate(seen):
+        blk, off = divmod(i, 4)
+        assert ti == blk % 4, (i, seen[i])
+        assert pi == off, (i, seen[i])
+        assert vi == (blk // 4) * 16 + off * 4, (i, seen[i])
+
+
+def test_locality_codes_all_four_levels():
+    # 8 threads, 2 per MC, 4 per node, mythread = 0
+    cfg = make_cfg(0, 0, 3, mythread=0, l2mc=1, l2node=2)
+    tbl = jnp.zeros(k.MAX_THREADS, jnp.int64)
+    thread = jnp.asarray(np.arange(N, dtype=np.int32) % 8)
+    phase = jnp.zeros(N, jnp.int32)
+    va = jnp.zeros(N, jnp.int64)
+    z = jnp.zeros(N, jnp.int32)
+    *_, loc = k.sptr_unit(cfg, tbl, thread, phase, va, z)
+    loc = np.asarray(loc)
+    want = {0: 0, 1: 1, 2: 2, 3: 2, 4: 3, 5: 3, 6: 3, 7: 3}
+    for tid, code in want.items():
+        assert (loc[np.asarray(thread) == tid] == code).all(), (tid, code)
+
+
+def test_translation_matches_paper_example():
+    """ptrC of Figure 2: base(thread 1) + 0x3f00 = 0xff0b00003f00.
+
+    (The paper prints the base as 0xff0b000000000, one zero too many for
+    its own sum 0xff0b00003f00; we use the self-consistent reading.)
+    """
+    tbl = np.zeros(k.MAX_THREADS, np.int64)
+    tbl[1] = 0xFF0B00000000
+    got = ref.translate_ref(jnp.int32(1), jnp.int64(0x3F00),
+                            jnp.asarray(tbl))
+    assert int(got) == 0xFF0B00003F00
+
+
+@pytest.mark.parametrize("l2nt", [0, 2, 6])
+def test_many_wraparounds(l2nt):
+    """Incrementing past the end of many blocks stays consistent with a
+    step-by-step walk (inc(a) o inc(b) == inc(a+b))."""
+    l2bs, l2es = 3, 2
+    cfg = make_cfg(l2bs, l2es, l2nt)
+    rng = np.random.default_rng(42)
+    thread, phase, va = random_pointers(rng, l2bs, l2es, l2nt)
+    a = jnp.asarray(rng.integers(0, 1000, N, dtype=np.int32))
+    b = jnp.asarray(rng.integers(0, 1000, N, dtype=np.int32))
+
+    t1, p1, v1 = k.sptr_increment(cfg, thread, phase, va, a)
+    t2, p2, v2 = k.sptr_increment(cfg, t1, p1, v1, b)
+    t3, p3, v3 = k.sptr_increment(cfg, thread, phase, va, a + b)
+    np.testing.assert_array_equal(np.asarray(t2), np.asarray(t3))
+    np.testing.assert_array_equal(np.asarray(p2), np.asarray(p3))
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(v3))

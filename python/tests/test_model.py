@@ -1,0 +1,80 @@
+"""L2 model tests: trace walker vs step-by-step oracle, shape contracts."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from compile import model  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+from compile.kernels import sptr_unit as k  # noqa: E402
+
+
+def make_cfg(l2bs, l2es, l2nt, mythread=0, l2mc=1, l2node=3):
+    return jnp.array([l2bs, l2es, l2nt, mythread, l2mc, l2node, 0, 0],
+                     jnp.int32)
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 6), st.integers(0, 3), st.integers(0, 4),
+       st.integers(1, 9), st.integers(0, 2**31 - 1))
+def test_walker_matches_stepwise_reference(l2bs, l2es, l2nt, inc, seed):
+    rng = np.random.default_rng(seed)
+    t = 1 << l2nt
+    mythread = int(rng.integers(0, t))
+    cfg = make_cfg(l2bs, l2es, l2nt, mythread,
+                   max(0, l2nt - 2), max(0, l2nt - 1))
+    tbl = np.zeros(k.MAX_THREADS, np.int64)
+    tbl[:t] = rng.integers(0, 1 << 40, t)
+    tbl = jnp.asarray(tbl)
+
+    sysva, thread, loc = model.trace_walker(
+        cfg, tbl, jnp.int32(0), jnp.int32(0), jnp.int64(0), jnp.int32(inc))
+    assert sysva.shape == (model.WALK_LEN,)
+
+    # step-by-step with the general-path oracle
+    th, ph, va = jnp.int32(0), jnp.int32(0), jnp.int64(0)
+    check = min(200, model.WALK_LEN)
+    for i in range(check):
+        want_sysva = ref.translate_ref(th, va, tbl)
+        assert int(sysva[i]) == int(want_sysva), i
+        assert int(thread[i]) == int(th), i
+        th, ph, va = ref.sptr_increment_ref(
+            th, ph, va, inc, 1 << l2bs, 1 << l2es, 1 << l2nt)
+
+
+def test_walker_locality_against_ref():
+    cfg = make_cfg(2, 2, 3, mythread=2, l2mc=1, l2node=2)
+    tbl = jnp.zeros(k.MAX_THREADS, jnp.int64)
+    _, thread, loc = model.trace_walker(
+        cfg, tbl, jnp.int32(0), jnp.int32(0), jnp.int64(0), jnp.int32(1))
+    want = ref.locality_ref(thread, 2, 1, 2)
+    np.testing.assert_array_equal(np.asarray(loc), np.asarray(want))
+
+
+def test_address_unit_full_batch_shapes_and_values():
+    n = model.UNIT_BATCH
+    rng = np.random.default_rng(3)
+    l2bs, l2es, l2nt = 5, 3, 4
+    t = 1 << l2nt
+    cfg = make_cfg(l2bs, l2es, l2nt, mythread=3, l2mc=2, l2node=3)
+    tbl = np.zeros(k.MAX_THREADS, np.int64)
+    tbl[:t] = rng.integers(0, 1 << 44, t)
+    thread = jnp.asarray(rng.integers(0, t, n, dtype=np.int32))
+    phase = jnp.asarray(rng.integers(0, 1 << l2bs, n, dtype=np.int32))
+    va = jnp.asarray(
+        (rng.integers(0, 1 << 8, n).astype(np.int64) * (1 << l2bs)
+         + np.asarray(phase)) << l2es)
+    inc = jnp.asarray(rng.integers(0, 4096, n, dtype=np.int32))
+
+    nt, nph, nva, sysva, loc = model.address_unit(
+        cfg, jnp.asarray(tbl), thread, phase, va, inc)
+    assert nt.shape == (n,) and sysva.dtype == jnp.int64
+
+    want = ref.address_unit_ref(thread, phase, va, inc, l2bs, l2es, l2nt,
+                                jnp.asarray(tbl), 3, 2, 3)
+    for got, w in zip((nt, nph, nva, sysva, loc), want):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(w))

@@ -1,0 +1,15 @@
+//! `cargo bench` target regenerating the paper's Figure 6.
+//! Shape expectation: EP gains ~nothing from HW (no shared pointers in the main loop)
+use pgas_hw::coordinator::bench_figure;
+use pgas_hw::cpu::CpuModel;
+use pgas_hw::npb::{Kernel, Scale};
+
+fn main() {
+    bench_figure(
+        "Figure 6",
+        Kernel::Ep,
+        &[CpuModel::Atomic],
+        &[1, 2, 4, 8, 16, 32, 64],
+        Scale { factor: 1024 },
+    );
+}

@@ -1,0 +1,15 @@
+//! `cargo bench` target regenerating the paper's Figure 7.
+//! Shape expectation: HW ~2.6x over unopt, ~+17% over manual; w/w_tmp incs fall back to software
+use pgas_hw::coordinator::bench_figure;
+use pgas_hw::cpu::CpuModel;
+use pgas_hw::npb::{Kernel, Scale};
+
+fn main() {
+    bench_figure(
+        "Figure 7",
+        Kernel::Cg,
+        &[CpuModel::Atomic],
+        &[1, 2, 4, 8, 16, 32, 64],
+        Scale { factor: 128 },
+    );
+}

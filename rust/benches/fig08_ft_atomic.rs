@@ -1,0 +1,15 @@
+//! `cargo bench` target regenerating the paper's Figure 8.
+//! Shape expectation: HW ~2.3x over unopt, ahead of manual; run capped at 16 cores (class-W slabs)
+use pgas_hw::coordinator::bench_figure;
+use pgas_hw::cpu::CpuModel;
+use pgas_hw::npb::{Kernel, Scale};
+
+fn main() {
+    bench_figure(
+        "Figure 8",
+        Kernel::Ft,
+        &[CpuModel::Atomic],
+        &[1, 2, 4, 8, 16],
+        Scale { factor: 512 },
+    );
+}

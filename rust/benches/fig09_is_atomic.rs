@@ -1,0 +1,15 @@
+//! `cargo bench` target regenerating the paper's Figure 9.
+//! Shape expectation: HW ~3x over unopt but ~13% behind manual (volatile-store reloads)
+use pgas_hw::coordinator::bench_figure;
+use pgas_hw::cpu::CpuModel;
+use pgas_hw::npb::{Kernel, Scale};
+
+fn main() {
+    bench_figure(
+        "Figure 9",
+        Kernel::Is,
+        &[CpuModel::Atomic],
+        &[1, 2, 4, 8, 16, 32, 64],
+        Scale { factor: 512 },
+    );
+}

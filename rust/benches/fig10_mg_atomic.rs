@@ -1,0 +1,15 @@
+//! `cargo bench` target regenerating the paper's Figure 10.
+//! Shape expectation: the headline: HW ~5.5x over unopt, ~10% behind manual
+use pgas_hw::coordinator::bench_figure;
+use pgas_hw::cpu::CpuModel;
+use pgas_hw::npb::{Kernel, Scale};
+
+fn main() {
+    bench_figure(
+        "Figure 10",
+        Kernel::Mg,
+        &[CpuModel::Atomic],
+        &[1, 2, 4, 8, 16, 32, 64],
+        Scale { factor: 1024 },
+    );
+}

@@ -1,0 +1,15 @@
+//! `cargo bench` target regenerating the paper's Figure 11.
+//! Shape expectation: timing/detailed models: smaller relative gains; shared L2 bottleneck from 16 cores
+use pgas_hw::coordinator::bench_figure;
+use pgas_hw::cpu::CpuModel;
+use pgas_hw::npb::{Kernel, Scale};
+
+fn main() {
+    bench_figure(
+        "Figure 11",
+        Kernel::Cg,
+        &[CpuModel::Timing, CpuModel::Detailed],
+        &[1, 2, 4, 8, 16],
+        Scale { factor: 256 },
+    );
+}

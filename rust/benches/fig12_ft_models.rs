@@ -1,0 +1,15 @@
+//! `cargo bench` target regenerating the paper's Figure 12.
+//! Shape expectation: timing/detailed FT
+use pgas_hw::coordinator::bench_figure;
+use pgas_hw::cpu::CpuModel;
+use pgas_hw::npb::{Kernel, Scale};
+
+fn main() {
+    bench_figure(
+        "Figure 12",
+        Kernel::Ft,
+        &[CpuModel::Timing, CpuModel::Detailed],
+        &[1, 2, 4, 8, 16],
+        Scale { factor: 1024 },
+    );
+}

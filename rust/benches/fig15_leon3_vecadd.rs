@@ -1,0 +1,36 @@
+//! `cargo bench` target regenerating the paper's Figure 15 (Leon3
+//! vector addition).  Shape expectation: static ~5x over dynamic;
+//! privatized and hw ~16x over dynamic and within noise of each other;
+//! gains shrink with threads as the AMBA bus saturates.
+
+use pgas_hw::leon3::microbench::{run_vecadd, VecAddVariant};
+use pgas_hw::util::bench::{bench, black_box};
+use pgas_hw::util::table::{fnum, Table};
+
+fn main() {
+    let n = 8192;
+    let mut t = Table::new(
+        "Figure 15: Leon 3 — Vector Addition (ms @75MHz)",
+        &["threads", "dynamic", "static", "privatized", "hw", "dyn/hw"],
+    );
+    for threads in [1u32, 2, 4] {
+        let dy = run_vecadd(threads, VecAddVariant::Dynamic, n);
+        let st = run_vecadd(threads, VecAddVariant::Static, n);
+        let pv = run_vecadd(threads, VecAddVariant::Privatized, n);
+        let hw = run_vecadd(threads, VecAddVariant::Hw, n);
+        t.row(&[
+            threads.to_string(),
+            fnum(dy.runtime_ms(), 3),
+            fnum(st.runtime_ms(), 3),
+            fnum(pv.runtime_ms(), 3),
+            fnum(hw.runtime_ms(), 3),
+            format!("{:.1}x", dy.cycles as f64 / hw.cycles as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    for v in VecAddVariant::ALL {
+        bench(&format!("leon3 vecadd {} x4", v.label()), 1, 5, || {
+            black_box(run_vecadd(4, v, n));
+        });
+    }
+}

@@ -1,0 +1,36 @@
+//! `cargo bench` target regenerating the paper's Figure 16 (Leon3
+//! matrix multiplication).  Shape expectation: static slowest, then
+//! privatization 1, then privatization 2; the hardware variant matches
+//! the fully-privatized code.
+
+use pgas_hw::leon3::microbench::{run_matmul, MatmulVariant};
+use pgas_hw::util::bench::{bench, black_box};
+use pgas_hw::util::table::{fnum, Table};
+
+fn main() {
+    let n = 32;
+    let mut t = Table::new(
+        "Figure 16: Leon 3 — Matrix Multiplication (ms @75MHz)",
+        &["threads", "static", "priv 1", "priv 2", "hw", "hw/priv2"],
+    );
+    for threads in [1u32, 2, 4] {
+        let st = run_matmul(threads, MatmulVariant::Static, n);
+        let p1 = run_matmul(threads, MatmulVariant::Priv1, n);
+        let p2 = run_matmul(threads, MatmulVariant::Priv2, n);
+        let hw = run_matmul(threads, MatmulVariant::Hw, n);
+        t.row(&[
+            threads.to_string(),
+            fnum(st.runtime_ms(), 3),
+            fnum(p1.runtime_ms(), 3),
+            fnum(p2.runtime_ms(), 3),
+            fnum(hw.runtime_ms(), 3),
+            format!("{:.2}", hw.cycles as f64 / p2.cycles as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    for v in MatmulVariant::ALL {
+        bench(&format!("leon3 matmul {} x4", v.label()), 1, 3, || {
+            black_box(run_matmul(4, v, n));
+        });
+    }
+}

@@ -1,0 +1,68 @@
+//! Hot-path micro-bench: PJRT batch-offload throughput of the XLA
+//! address-mapping unit vs the scalar Rust path (§Perf L1/L2 metric on
+//! this CPU testbed; the TPU estimate lives in DESIGN.md).
+//!
+//! Requires `make artifacts`.
+
+use pgas_hw::runtime::{unit_batch_scalar, UnitCfg, XlaUnit, UNIT_BATCH};
+use pgas_hw::sptr::{ArrayLayout, BaseTable, SharedPtr};
+use pgas_hw::util::bench::{bench, black_box};
+use pgas_hw::util::rng::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    let unit = match XlaUnit::load("artifacts") {
+        Ok(u) => u,
+        Err(e) => {
+            eprintln!("skipping offload bench: {e:#} (run `make artifacts`)");
+            return Ok(());
+        }
+    };
+    let cfg = UnitCfg {
+        log2_blocksize: 6,
+        log2_elemsize: 3,
+        log2_numthreads: 4,
+        mythread: 0,
+        log2_threads_per_mc: 1,
+        log2_threads_per_node: 6,
+    };
+    let table = BaseTable::regular(16, 1 << 32, 1 << 32);
+    let layout = ArrayLayout::new(64, 8, 16);
+    let mut rng = Xoshiro256::new(1);
+    let ptrs: Vec<SharedPtr> = (0..UNIT_BATCH)
+        .map(|_| SharedPtr::for_index(&layout, 0, rng.below(1 << 20)))
+        .collect();
+    let incs: Vec<u32> = (0..UNIT_BATCH).map(|_| rng.below(4096) as u32).collect();
+
+    let r = bench("XLA unit_batch (8192 ptrs)", 3, 20, || {
+        black_box(unit.unit_batch(&cfg, &table, &ptrs, &incs).unwrap());
+    });
+    println!(
+        "  -> {:.1} M ptr/s through PJRT",
+        UNIT_BATCH as f64 / r.mean_secs() / 1e6
+    );
+
+    let r = bench("XLA inc_batch (8192 ptrs)", 3, 20, || {
+        black_box(unit.inc_batch(&cfg, &ptrs, &incs).unwrap());
+    });
+    println!(
+        "  -> {:.1} M ptr/s through PJRT (inc only)",
+        UNIT_BATCH as f64 / r.mean_secs() / 1e6
+    );
+
+    let r = bench("scalar unit_batch (8192 ptrs)", 3, 20, || {
+        black_box(unit_batch_scalar(&cfg, &table, &ptrs, &incs));
+    });
+    println!(
+        "  -> {:.1} M ptr/s scalar Rust",
+        UNIT_BATCH as f64 / r.mean_secs() / 1e6
+    );
+
+    let r = bench("XLA trace_walker (4096 steps)", 3, 20, || {
+        black_box(unit.walk(&cfg, &table, &SharedPtr::NULL, 1).unwrap());
+    });
+    println!(
+        "  -> {:.1} M steps/s through PJRT scan",
+        4096.0 / r.mean_secs() / 1e6
+    );
+    Ok(())
+}

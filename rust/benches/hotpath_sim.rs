@@ -1,0 +1,37 @@
+//! Hot-path micro-bench: raw simulator speed (simulated instructions
+//! per host second) per CPU model — the §Perf L3 metric. The atomic
+//! model is the campaign's workhorse; its M instr/s bound the wall time
+//! of every figure sweep.
+
+use pgas_hw::cpu::CpuModel;
+use pgas_hw::npb::{run, Kernel, PaperVariant, Scale};
+use pgas_hw::util::bench::{bench, black_box};
+
+fn main() {
+    let scale = Scale { factor: 256 };
+    for model in CpuModel::ALL {
+        let mut insts = 0u64;
+        let r = bench(&format!("MG unopt x4 [{model}]"), 1, 3, || {
+            let out = run(Kernel::Mg, PaperVariant::Unopt, model, 4, &scale);
+            insts = out.result.total.instructions;
+            black_box(out);
+        });
+        println!(
+            "  -> {:.1} M simulated instr/s ({} instrs)",
+            insts as f64 / r.mean_secs() / 1e6,
+            insts
+        );
+    }
+    // pure-ISA interpreter ceiling: EP (no shared ops, no validation
+    // overhead beyond the reduction)
+    let mut insts = 0u64;
+    let r = bench("EP unopt x4 [atomic] (interpreter ceiling)", 1, 3, || {
+        let out = run(Kernel::Ep, PaperVariant::Unopt, CpuModel::Atomic, 4, &scale);
+        insts = out.result.total.instructions;
+        black_box(out);
+    });
+    println!(
+        "  -> {:.1} M simulated instr/s",
+        insts as f64 / r.mean_secs() / 1e6
+    );
+}

@@ -1,0 +1,52 @@
+//! Hot-path micro-bench: the shared-pointer algebra itself — the
+//! operations the simulator executes billions of times. §Perf L3 target:
+//! the simulator's per-instruction cost must not be dominated by
+//! Algorithm 1 bookkeeping.
+
+use pgas_hw::sptr::{increment_general, increment_pow2, pack, unpack, ArrayLayout, BaseTable, SharedPtr};
+use pgas_hw::util::bench::{bench, black_box};
+
+fn main() {
+    let layout = ArrayLayout::new(64, 8, 16);
+    let table = BaseTable::regular(16, 1 << 32, 1 << 32);
+    let n = 1_000_000u64;
+
+    let r = bench("increment_general x1M", 2, 10, || {
+        let mut p = SharedPtr::NULL;
+        for i in 0..n {
+            p = increment_general(&p, (i & 7) + 1, &layout);
+        }
+        black_box(p);
+    });
+    println!("  -> {:.1} M inc/s", n as f64 / r.mean_secs() / 1e6);
+
+    let r = bench("increment_pow2 x1M (the hw datapath)", 2, 10, || {
+        let mut p = SharedPtr::NULL;
+        for i in 0..n {
+            p = increment_pow2(&p, (i & 7) + 1, 6, 3, 4);
+        }
+        black_box(p);
+    });
+    println!("  -> {:.1} M inc/s", n as f64 / r.mean_secs() / 1e6);
+
+    let r = bench("pack/unpack roundtrip x1M", 2, 10, || {
+        let mut acc = 0u64;
+        for i in 0..n {
+            let p = unpack(i.wrapping_mul(0x9E3779B97F4A7C15) & ((1 << 62) - 1));
+            acc ^= pack(&p);
+        }
+        black_box(acc);
+    });
+    println!("  -> {:.1} M roundtrips/s", n as f64 / r.mean_secs() / 1e6);
+
+    let r = bench("translate x1M", 2, 10, || {
+        let mut acc = 0u64;
+        let mut p = SharedPtr::NULL;
+        for _ in 0..n {
+            p = increment_pow2(&p, 3, 6, 3, 4);
+            acc ^= p.translate(&table);
+        }
+        black_box(acc);
+    });
+    println!("  -> {:.1} M translations/s", n as f64 / r.mean_secs() / 1e6);
+}

@@ -1,0 +1,16 @@
+//! `cargo bench` target regenerating the paper's Table 4 and asserting
+//! the reproduced Increase row matches the paper exactly.
+
+use pgas_hw::area;
+
+fn main() {
+    println!("{}", area::table4().render());
+    println!("{}", area::component_breakdown().render());
+    let inc = area::pgas_support_total(4);
+    assert_eq!(
+        (inc.registers, inc.luts, inc.bram18, inc.dsp48),
+        (2607, 3337, 20, 8),
+        "Table 4 Increase row must match the paper"
+    );
+    println!("table4_area: Increase row matches the paper exactly (2607/3337/20/8)");
+}

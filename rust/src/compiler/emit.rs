@@ -1,0 +1,119 @@
+//! A tiny label-resolving assembler over [`crate::isa::Inst`].
+
+use crate::isa::{Cond, Inst, Program};
+
+/// A forward-referenceable label.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Label(usize);
+
+/// Assembler: emit instructions, bind labels, resolve at `finish`.
+pub struct Asm {
+    insts: Vec<Inst>,
+    // for each label: bound target (inst index) once known
+    labels: Vec<Option<u32>>,
+    // (inst index, label) pairs to patch
+    fixups: Vec<(usize, Label)>,
+}
+
+impl Asm {
+    pub fn new() -> Self {
+        Self { insts: Vec::new(), labels: Vec::new(), fixups: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.insts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.insts.is_empty()
+    }
+
+    pub fn emit(&mut self, inst: Inst) {
+        self.insts.push(inst);
+    }
+
+    pub fn label(&mut self) -> Label {
+        self.labels.push(None);
+        Label(self.labels.len() - 1)
+    }
+
+    pub fn bind(&mut self, l: Label) {
+        assert!(self.labels[l.0].is_none(), "label bound twice");
+        self.labels[l.0] = Some(self.insts.len() as u32);
+    }
+
+    /// Emit a conditional branch to `l`.
+    pub fn br(&mut self, cond: Cond, ra: u8, l: Label) {
+        self.fixups.push((self.insts.len(), l));
+        self.insts.push(Inst::Br { cond, ra, target: u32::MAX });
+    }
+
+    pub fn jmp(&mut self, l: Label) {
+        self.fixups.push((self.insts.len(), l));
+        self.insts.push(Inst::Jmp { target: u32::MAX });
+    }
+
+    pub fn brloc(&mut self, mask: u8, l: Label) {
+        self.fixups.push((self.insts.len(), l));
+        self.insts.push(Inst::PgasBrLoc { mask, target: u32::MAX });
+    }
+
+    /// Resolve all fixups and produce the program.
+    pub fn finish(mut self, name: &str) -> Program {
+        for (idx, l) in std::mem::take(&mut self.fixups) {
+            let target = self.labels[l.0].expect("unbound label at finish");
+            match &mut self.insts[idx] {
+                Inst::Br { target: t, .. }
+                | Inst::Jmp { target: t }
+                | Inst::PgasBrLoc { target: t, .. } => *t = target,
+                other => panic!("fixup on non-branch {other}"),
+            }
+        }
+        Program::new(name, self.insts)
+    }
+}
+
+impl Default for Asm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::IntOp;
+
+    #[test]
+    fn forward_and_backward_labels() {
+        let mut a = Asm::new();
+        let top = a.label();
+        let end = a.label();
+        a.emit(Inst::Ldi { rd: 1, imm: 3 });
+        a.bind(top);
+        a.emit(Inst::Opi { op: IntOp::Add, rd: 1, ra: 1, imm: -1 });
+        a.br(Cond::Eq, 1, end); // forward
+        a.jmp(top); // backward
+        a.bind(end);
+        a.emit(Inst::Halt);
+        let p = a.finish("t");
+        assert_eq!(p.insts.len(), 5);
+        match p.insts[2] {
+            Inst::Br { target, .. } => assert_eq!(target, 4),
+            _ => panic!(),
+        }
+        match p.insts[3] {
+            Inst::Jmp { target } => assert_eq!(target, 1),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unbound label")]
+    fn unbound_label_rejected() {
+        let mut a = Asm::new();
+        let l = a.label();
+        a.jmp(l);
+        let _ = a.finish("bad");
+    }
+}

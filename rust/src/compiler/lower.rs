@@ -1,0 +1,760 @@
+//! Lowering: kernel IR → SimAlpha, in `Soft` or `Hw` configuration.
+//!
+//! `Soft` expands every shared-pointer operation into the software
+//! sequences the Berkeley runtime executes (Algorithm 1 with real
+//! divides when THREADS is a run-time value, plus LUT translation
+//! through a private copy of the base-address table).  `Hw` emits the
+//! paper's new instructions, with the same software expansion as a
+//! fallback when an array's geometry is not power-of-2 — exactly the
+//! prototype compiler's behaviour on CG's 56016-byte elements.
+//!
+//! Scratch-register budget (never handed to the IR builder):
+//! `r20..r25` (S0..S5), `r27`, `r30`; ABI registers per [`crate::sim::abi`].
+
+use std::collections::BTreeMap;
+
+use super::emit::Asm;
+use super::{IrModule, Op, Val};
+use crate::isa::{Cond, Inst, IntOp, MemWidth, Program, ZERO};
+use crate::mem::seg_base;
+use crate::sim::abi;
+use crate::sptr::{pack, ArrayLayout, THREAD_BITS, VA_BITS};
+use crate::upc::UpcRuntime;
+use crate::util::log2_exact;
+
+const S0: u8 = 20;
+const S1: u8 = 21;
+const S2: u8 = 22;
+const S3: u8 = 23;
+const S4: u8 = 24;
+const S5: u8 = 25;
+const SCR: u8 = abi::R_SCRATCH; // r27
+const SCR2: u8 = abi::R_SCRATCH2; // r30
+
+/// Private-space offset of the base-table copy used by soft translation.
+pub const BT_OFF: i32 = 0x800;
+/// Private-space offset of the f64 constant pool.
+pub const FPOOL_OFF: i32 = 0x0;
+/// Private-space slot standing in for the GCC spill slot reloaded after
+/// every volatile PGAS store (see [`CompileOpts::volatile_stores`]).
+pub const VOLATILE_SPILL_OFF: i32 = 0xFF8;
+
+/// Shared-pointer lowering strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Lowering {
+    /// Software Algorithm 1 + LUT translation (the unmodified compiler).
+    Soft,
+    /// The paper's PGAS instructions (with software fallback).
+    Hw,
+}
+
+/// Compile-time options.
+#[derive(Clone, Copy, Debug)]
+pub struct CompileOpts {
+    pub lowering: Lowering,
+    /// Berkeley "static mode": THREADS is a compile-time constant, so
+    /// the soft path can strength-reduce /THREADS to shifts. The paper's
+    /// Gem5 runs use the dynamic mode (false); the Leon3 vector-addition
+    /// microbenchmark compares both (Fig. 15).
+    pub static_threads: bool,
+    pub numthreads: u32,
+    /// Model the prototype's `volatile` + memory-clobber `asm()` PGAS
+    /// stores (paper 6.1): after every hardware store GCC must reload a
+    /// register-cached value, emitted here as one extra private load.
+    /// This is the effect the paper blames for HW code trailing the
+    /// manually-privatized code by ~10–13% on IS and MG.
+    pub volatile_stores: bool,
+}
+
+impl CompileOpts {
+    pub fn soft(numthreads: u32) -> Self {
+        Self {
+            lowering: Lowering::Soft,
+            static_threads: false,
+            numthreads,
+            volatile_stores: true,
+        }
+    }
+
+    pub fn hw(numthreads: u32) -> Self {
+        Self {
+            lowering: Lowering::Hw,
+            static_threads: false,
+            numthreads,
+            volatile_stores: true,
+        }
+    }
+}
+
+/// What the compiler did with the shared ops (the paper reports these:
+/// "the generated code contained 309 shared address incrementations but
+/// 20 of those were [software]; 236 loads and stores [were hardware]").
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CompileStats {
+    pub hw_incs: u32,
+    pub soft_incs: u32,
+    pub hw_mems: u32,
+    pub soft_mems: u32,
+    pub insts: u32,
+}
+
+/// A compiled kernel.
+#[derive(Clone, Debug)]
+pub struct CompiledKernel {
+    pub program: Program,
+    pub stats: CompileStats,
+}
+
+struct Ctx<'a> {
+    asm: Asm,
+    rt: &'a UpcRuntime,
+    opts: CompileOpts,
+    stats: CompileStats,
+    fpool: BTreeMap<u64, i32>, // f64 bits -> private offset
+}
+
+fn negate(c: Cond) -> Cond {
+    match c {
+        Cond::Eq => Cond::Ne,
+        Cond::Ne => Cond::Eq,
+        Cond::Lt => Cond::Ge,
+        Cond::Ge => Cond::Lt,
+        Cond::Le => Cond::Gt,
+        Cond::Gt => Cond::Le,
+    }
+}
+
+fn collect_fconsts(ops: &[Op], pool: &mut BTreeMap<u64, i32>) {
+    for op in ops {
+        match op {
+            Op::FConst { v, .. } => {
+                let bits = v.to_bits();
+                let next = FPOOL_OFF + (pool.len() as i32) * 8;
+                pool.entry(bits).or_insert(next);
+            }
+            Op::For { body, .. } | Op::DoWhile { body, .. } => {
+                collect_fconsts(body, pool)
+            }
+            Op::If { then, els, .. } => {
+                collect_fconsts(then, pool);
+                collect_fconsts(els, pool);
+            }
+            _ => {}
+        }
+    }
+}
+
+impl<'a> Ctx<'a> {
+    /// Emit `d = a op imm`, materializing wide immediates via SCR2.
+    fn bin_imm(&mut self, op: IntOp, d: u8, a: u8, imm: i64) {
+        if (i32::MIN as i64..=i32::MAX as i64).contains(&imm) {
+            self.asm.emit(Inst::Opi { op, rd: d, ra: a, imm: imm as i32 });
+        } else {
+            self.asm.emit(Inst::Ldi { rd: SCR2, imm });
+            self.asm.emit(Inst::Opr { op, rd: d, ra: a, rb: SCR2 });
+        }
+    }
+
+    fn bin(&mut self, op: IntOp, d: u8, a: u8, b: Val) {
+        match b {
+            Val::R(r) => self.asm.emit(Inst::Opr { op, rd: d, ra: a, rb: r }),
+            Val::I(i) => self.bin_imm(op, d, a, i),
+        }
+    }
+
+    // ---------------- soft shared-pointer expansion ----------------
+
+    /// Algorithm 1 in software over the packed pointer in `p`.
+    fn soft_inc(&mut self, p: u8, layout: &ArrayLayout, inc: Val) {
+        self.stats.soft_incs += 1;
+        let a = &mut self.asm;
+        let bs = layout.blocksize as i64;
+        let es = layout.elemsize as i64;
+        // unpack: S0 = old phase, S1 = thread, S2 = va
+        a.emit(Inst::Opi { op: IntOp::Srl, rd: S0, ra: p, imm: (THREAD_BITS + VA_BITS) as i32 });
+        a.emit(Inst::Opi { op: IntOp::Srl, rd: S1, ra: p, imm: VA_BITS as i32 });
+        a.emit(Inst::Opi { op: IntOp::And, rd: S1, ra: S1, imm: 0x3FF });
+        a.emit(Inst::Ldi { rd: SCR2, imm: ((1u64 << VA_BITS) - 1) as i64 });
+        a.emit(Inst::Opr { op: IntOp::And, rd: S2, ra: p, rb: SCR2 });
+        // S3 = phinc = phase + inc
+        match inc {
+            Val::R(r) => a.emit(Inst::Opr { op: IntOp::Add, rd: S3, ra: S0, rb: r }),
+            Val::I(i) => a.emit(Inst::Opi { op: IntOp::Add, rd: S3, ra: S0, imm: i as i32 }),
+        }
+        // S4 = thinc = phinc / bs ; S5 = nphase = phinc % bs
+        // (blocksize is a compile-time constant in UPC: strength-reduced
+        // when pow2 even by the unmodified compiler)
+        if let Some(l2) = log2_exact(bs as u64) {
+            a.emit(Inst::Opi { op: IntOp::Srl, rd: S4, ra: S3, imm: l2 as i32 });
+            a.emit(Inst::Opi { op: IntOp::And, rd: S5, ra: S3, imm: (bs - 1) as i32 });
+        } else {
+            a.emit(Inst::Ldi { rd: SCR2, imm: bs });
+            a.emit(Inst::Opr { op: IntOp::Div, rd: S4, ra: S3, rb: SCR2 });
+            a.emit(Inst::Opr { op: IntOp::Rem, rd: S5, ra: S3, rb: SCR2 });
+        }
+        // S1 = tsum = thread + thinc
+        a.emit(Inst::Opr { op: IntOp::Add, rd: S1, ra: S1, rb: S4 });
+        // S4 = blockinc = tsum / T ; S1 = nthread = tsum % T
+        let t = self.opts.numthreads as i64;
+        if self.opts.static_threads && (t as u64).is_power_of_two() {
+            let l2 = log2_exact(t as u64).unwrap();
+            a.emit(Inst::Opi { op: IntOp::Srl, rd: S4, ra: S1, imm: l2 as i32 });
+            a.emit(Inst::Opi { op: IntOp::And, rd: S1, ra: S1, imm: (t - 1) as i32 });
+        } else {
+            // dynamic THREADS: real divide + remainder (the expensive
+            // path the paper's unoptimized baseline takes)
+            a.emit(Inst::Opr { op: IntOp::Div, rd: S4, ra: S1, rb: abi::R_THREADS });
+            a.emit(Inst::Opr { op: IntOp::Rem, rd: S1, ra: S1, rb: abi::R_THREADS });
+        }
+        // SCR = eaddrinc = (nphase - oldphase) + blockinc * bs
+        a.emit(Inst::Opr { op: IntOp::Sub, rd: SCR, ra: S5, rb: S0 });
+        if let Some(l2) = log2_exact(bs as u64) {
+            a.emit(Inst::Opi { op: IntOp::Sll, rd: S4, ra: S4, imm: l2 as i32 });
+        } else {
+            a.emit(Inst::Opi { op: IntOp::Mul, rd: S4, ra: S4, imm: bs as i32 });
+        }
+        a.emit(Inst::Opr { op: IntOp::Add, rd: SCR, ra: SCR, rb: S4 });
+        // S2 = va + eaddrinc * es
+        if let Some(l2) = log2_exact(es as u64) {
+            a.emit(Inst::Opi { op: IntOp::Sll, rd: SCR, ra: SCR, imm: l2 as i32 });
+        } else {
+            a.emit(Inst::Opi { op: IntOp::Mul, rd: SCR, ra: SCR, imm: es as i32 });
+        }
+        a.emit(Inst::Opr { op: IntOp::Add, rd: S2, ra: S2, rb: SCR });
+        // repack p = (nphase << 48) | (nthread << 38) | va
+        a.emit(Inst::Opi { op: IntOp::Sll, rd: S5, ra: S5, imm: (THREAD_BITS + VA_BITS) as i32 });
+        a.emit(Inst::Opi { op: IntOp::Sll, rd: S1, ra: S1, imm: VA_BITS as i32 });
+        a.emit(Inst::Opr { op: IntOp::Or, rd: p, ra: S5, rb: S1 });
+        a.emit(Inst::Opr { op: IntOp::Or, rd: p, ra: p, rb: S2 });
+    }
+
+    /// Software translation + access: LUT lookup through the private
+    /// base-table copy, then the load/store.
+    fn soft_mem(&mut self, w: MemWidth, reg: u8, p: u8, disp: i16, store: bool) {
+        self.stats.soft_mems += 1;
+        let a = &mut self.asm;
+        a.emit(Inst::Opi { op: IntOp::Srl, rd: S1, ra: p, imm: VA_BITS as i32 });
+        a.emit(Inst::Opi { op: IntOp::And, rd: S1, ra: S1, imm: 0x3FF });
+        a.emit(Inst::Opi { op: IntOp::Sll, rd: S1, ra: S1, imm: 3 });
+        a.emit(Inst::Opr { op: IntOp::Add, rd: S1, ra: S1, rb: abi::R_PRIV });
+        a.emit(Inst::Ld { w: MemWidth::U64, rd: S1, base: S1, disp: BT_OFF });
+        a.emit(Inst::Ldi { rd: SCR2, imm: ((1u64 << VA_BITS) - 1) as i64 });
+        a.emit(Inst::Opr { op: IntOp::And, rd: S2, ra: p, rb: SCR2 });
+        a.emit(Inst::Opr { op: IntOp::Add, rd: S2, ra: S1, rb: S2 });
+        if store {
+            a.emit(Inst::St { w, rs: reg, base: S2, disp: disp as i32 });
+        } else {
+            a.emit(Inst::Ld { w, rd: reg, base: S2, disp: disp as i32 });
+        }
+    }
+
+    // ---------------- shared-op dispatch ----------------
+
+    fn sptr_inc(&mut self, p: u8, layout: &ArrayLayout, inc: Val) {
+        let hw_ok = self.opts.lowering == Lowering::Hw && layout.hw_supported();
+        if !hw_ok {
+            return self.soft_inc(p, layout, inc);
+        }
+        let (l2bs, l2es, _) = layout.log2s().unwrap();
+        let (l2bs, l2es) = (l2bs as u8, l2es as u8);
+        match inc {
+            Val::I(0) => {}
+            Val::I(c) if c > 0 && (c as u64).is_power_of_two() => {
+                self.stats.hw_incs += 1;
+                self.asm.emit(Inst::PgasIncI {
+                    rd: p,
+                    ra: p,
+                    l2es,
+                    l2bs,
+                    l2inc: (c as u64).trailing_zeros() as u8,
+                });
+            }
+            Val::I(c) if c > 0 && (c as u64).count_ones() == 2 => {
+                // the prototype's 2-immediates trick: inc by 3 = 1 + 2
+                self.stats.hw_incs += 2;
+                let c = c as u64;
+                let lo = c.trailing_zeros() as u8;
+                let hi = (63 - c.leading_zeros()) as u8;
+                for l2inc in [lo, hi] {
+                    self.asm.emit(Inst::PgasIncI { rd: p, ra: p, l2es, l2bs, l2inc });
+                }
+            }
+            Val::I(c) => {
+                self.stats.hw_incs += 1;
+                self.asm.emit(Inst::Ldi { rd: SCR, imm: c });
+                self.asm.emit(Inst::PgasIncR { rd: p, ra: p, rb: SCR, l2es, l2bs });
+            }
+            Val::R(r) => {
+                self.stats.hw_incs += 1;
+                self.asm.emit(Inst::PgasIncR { rd: p, ra: p, rb: r, l2es, l2bs });
+            }
+        }
+    }
+
+    fn sptr_mem(&mut self, w: MemWidth, reg: u8, p: u8, disp: i16, store: bool, layout: &ArrayLayout) {
+        let hw_ok = self.opts.lowering == Lowering::Hw && layout.hw_supported();
+        if hw_ok {
+            self.stats.hw_mems += 1;
+            if store {
+                self.asm.emit(Inst::PgasSt { w, rs: reg, rptr: p, disp });
+                if self.opts.volatile_stores {
+                    // GCC reload forced by the memory clobber: one spilled
+                    // loop value comes back from the stack (paper 6.1)
+                    self.asm.emit(Inst::Ld {
+                        w: MemWidth::U64,
+                        rd: SCR2,
+                        base: abi::R_PRIV,
+                        disp: VOLATILE_SPILL_OFF,
+                    });
+                }
+            } else {
+                self.asm.emit(Inst::PgasLd { w, rd: reg, rptr: p, disp });
+            }
+        } else {
+            self.soft_mem(w, reg, p, disp, store);
+        }
+    }
+
+    // ---------------- statement walk ----------------
+
+    fn lower_ops(&mut self, ops: &[Op]) {
+        for op in ops {
+            self.lower_op(op);
+        }
+    }
+
+    fn lower_op(&mut self, op: &Op) {
+        match op {
+            Op::Bin { op, d, a, b } => self.bin(*op, *d, *a, *b),
+            Op::Mov { d, v } => match v {
+                Val::R(r) => self.asm.emit(Inst::Opr {
+                    op: IntOp::Add,
+                    rd: *d,
+                    ra: *r,
+                    rb: ZERO,
+                }),
+                Val::I(i) => self.asm.emit(Inst::Ldi { rd: *d, imm: *i }),
+            },
+            Op::FBin { op, d, a, b } => {
+                self.asm.emit(Inst::Fop { op: *op, fd: *d, fa: *a, fb: *b })
+            }
+            Op::FConst { d, v } => {
+                let off = self.fpool[&v.to_bits()];
+                self.asm.emit(Inst::Ld {
+                    w: MemWidth::F64,
+                    rd: *d,
+                    base: abi::R_PRIV,
+                    disp: off,
+                });
+            }
+            Op::FCmpLt { d, a, b } => {
+                self.asm.emit(Inst::FCmpLt { rd: *d, fa: *a, fb: *b })
+            }
+            Op::CvtIF { d, a } => self.asm.emit(Inst::CvtIF { fd: *d, ra: *a }),
+            Op::CvtFI { d, a } => self.asm.emit(Inst::CvtFI { rd: *d, fa: *a }),
+            Op::MyThread { d } => self.asm.emit(Inst::Opr {
+                op: IntOp::Add,
+                rd: *d,
+                ra: abi::R_MYTHREAD,
+                rb: ZERO,
+            }),
+            Op::Threads { d } => self.asm.emit(Inst::Opr {
+                op: IntOp::Add,
+                rd: *d,
+                ra: abi::R_THREADS,
+                rb: ZERO,
+            }),
+            Op::PrivBase { d } => self.asm.emit(Inst::Opr {
+                op: IntOp::Add,
+                rd: *d,
+                ra: abi::R_PRIV,
+                rb: ZERO,
+            }),
+            Op::Ld { w, d, base, disp } => {
+                self.asm.emit(Inst::Ld { w: *w, rd: *d, base: *base, disp: *disp })
+            }
+            Op::St { w, s, base, disp } => {
+                self.asm.emit(Inst::St { w: *w, rs: *s, base: *base, disp: *disp })
+            }
+            Op::SptrInit { d, arr, idx } => {
+                let a = self.rt.array(*arr);
+                match idx {
+                    Val::I(c) => {
+                        let packed = pack(&a.ptr(*c as u64)) as i64;
+                        self.asm.emit(Inst::Ldi { rd: *d, imm: packed });
+                    }
+                    Val::R(r) => {
+                        let packed = pack(&a.ptr(0)) as i64;
+                        self.asm.emit(Inst::Ldi { rd: *d, imm: packed });
+                        let layout = a.layout;
+                        self.sptr_inc(*d, &layout, Val::R(*r));
+                    }
+                }
+            }
+            Op::SptrInc { p, arr, inc } => {
+                let layout = self.rt.array(*arr).layout;
+                self.sptr_inc(*p, &layout, *inc);
+            }
+            Op::SptrLd { w, d, p, disp } => {
+                // layout of the array the pointer came from is tracked by
+                // the builder; for loads/stores only hw-support matters,
+                // so we use the pointer's array via disp-free convention:
+                // the builder guarantees `p` was initialized from an
+                // array; conservatively we must know pow2-ness. We thread
+                // it through SptrLd's width-independent path: the builder
+                // stores the ArrayId in the op (see SptrLdA) — kept
+                // simple: all SptrLd go through the same decision as the
+                // *last* SptrInit/SptrInc... (handled in lower(), which
+                // rewrites SptrLd/SptrSt to carry the ArrayId).
+                unreachable!("SptrLd must be rewritten to SptrLdA {w:?} {d} {p} {disp}")
+            }
+            Op::SptrSt { .. } => unreachable!("SptrSt must be rewritten"),
+            Op::LocalAddr { d, arr, off } => {
+                let a = self.rt.array(*arr);
+                let base_va = a.base_va as i64;
+                let es = a.layout.elemsize as i64;
+                // d = ((MYTHREAD + 1) << 32) + base_va + off*es
+                self.asm.emit(Inst::Opi {
+                    op: IntOp::Add,
+                    rd: *d,
+                    ra: abi::R_MYTHREAD,
+                    imm: 1,
+                });
+                self.asm.emit(Inst::Opi { op: IntOp::Sll, rd: *d, ra: *d, imm: 32 });
+                match off {
+                    Val::I(c) => {
+                        self.bin_imm(IntOp::Add, *d, *d, base_va + c * es);
+                    }
+                    Val::R(r) => {
+                        self.bin_imm(IntOp::Add, *d, *d, base_va);
+                        if let Some(l2) = log2_exact(es as u64) {
+                            self.asm.emit(Inst::Opi {
+                                op: IntOp::Sll,
+                                rd: SCR,
+                                ra: *r,
+                                imm: l2 as i32,
+                            });
+                        } else {
+                            self.asm.emit(Inst::Opi {
+                                op: IntOp::Mul,
+                                rd: SCR,
+                                ra: *r,
+                                imm: es as i32,
+                            });
+                        }
+                        self.asm.emit(Inst::Opr {
+                            op: IntOp::Add,
+                            rd: *d,
+                            ra: *d,
+                            rb: SCR,
+                        });
+                    }
+                }
+            }
+            Op::For { i, from, to, step, body } => {
+                assert!(*step > 0, "for_range requires positive step");
+                self.lower_op(&Op::Mov { d: *i, v: *from });
+                let top = self.asm.label();
+                let exit = self.asm.label();
+                self.asm.bind(top);
+                match to {
+                    Val::I(c) => self.bin_imm(IntOp::CmpLt, SCR, *i, *c),
+                    Val::R(r) => self.asm.emit(Inst::Opr {
+                        op: IntOp::CmpLt,
+                        rd: SCR,
+                        ra: *i,
+                        rb: *r,
+                    }),
+                }
+                self.asm.br(Cond::Eq, SCR, exit);
+                self.lower_ops(body);
+                self.bin_imm(IntOp::Add, *i, *i, *step);
+                self.asm.jmp(top);
+                self.asm.bind(exit);
+            }
+            Op::If { cond, r, then, els } => {
+                let after = self.asm.label();
+                if els.is_empty() {
+                    self.asm.br(negate(*cond), *r, after);
+                    self.lower_ops(then);
+                    self.asm.bind(after);
+                } else {
+                    let else_l = self.asm.label();
+                    self.asm.br(negate(*cond), *r, else_l);
+                    self.lower_ops(then);
+                    self.asm.jmp(after);
+                    self.asm.bind(else_l);
+                    self.lower_ops(els);
+                    self.asm.bind(after);
+                }
+            }
+            Op::DoWhile { body, cond, r } => {
+                let top = self.asm.label();
+                self.asm.bind(top);
+                self.lower_ops(body);
+                self.asm.br(*cond, *r, top);
+            }
+            Op::Barrier => self.asm.emit(Inst::Barrier),
+        }
+    }
+}
+
+/// Compile an IR module against a runtime instance.
+pub fn compile(m: &IrModule, rt: &UpcRuntime, opts: &CompileOpts) -> CompiledKernel {
+    assert_eq!(opts.numthreads, rt.numthreads, "opts/runtime thread mismatch");
+    let mut fpool = BTreeMap::new();
+    collect_fconsts(&m.ops, &mut fpool);
+    assert!(fpool.len() * 8 <= BT_OFF as usize, "f64 const pool overflow");
+
+    // pointer-register -> array bindings, updated flow-sensitively as
+    // SptrInit ops are encountered (registers are pool-reused, so a
+    // register may point into different arrays at different points; the
+    // binding visible at each SptrLd/SptrSt is the syntactically
+    // preceding SptrInit, which is exactly the builder's discipline).
+    let mut ptr_arrays: std::collections::HashMap<u8, crate::upc::ArrayId> =
+        std::collections::HashMap::new();
+
+    let mut ctx = Ctx {
+        asm: Asm::new(),
+        rt,
+        opts: *opts,
+        stats: CompileStats::default(),
+        fpool,
+    };
+
+    // ---------------- prologue ----------------
+    if opts.lowering == Lowering::Hw {
+        // initialize the special 'threads' register and the base LUT
+        // with the paper's initialization instructions (Table 1)
+        ctx.asm.emit(Inst::PgasSetThreads { ra: abi::R_THREADS });
+    }
+    for t in 0..rt.numthreads {
+        ctx.asm.emit(Inst::Ldi { rd: SCR, imm: t as i64 });
+        ctx.asm.emit(Inst::Ldi { rd: SCR2, imm: seg_base(t) as i64 });
+        if opts.lowering == Lowering::Hw {
+            ctx.asm.emit(Inst::PgasSetBase { rthread: SCR, raddr: SCR2 });
+        }
+        // private copy of the LUT for the soft translation path
+        ctx.bin_imm(IntOp::Sll, SCR, SCR, 3);
+        ctx.asm.emit(Inst::Opr { op: IntOp::Add, rd: SCR, ra: SCR, rb: abi::R_PRIV });
+        ctx.asm.emit(Inst::St { w: MemWidth::U64, rs: SCR2, base: SCR, disp: BT_OFF });
+    }
+    for (bits, off) in ctx.fpool.clone() {
+        ctx.asm.emit(Inst::Ldi { rd: SCR, imm: bits as i64 });
+        ctx.asm.emit(Inst::St { w: MemWidth::U64, rs: SCR, base: abi::R_PRIV, disp: off });
+    }
+
+    // ---------------- body ----------------
+    // rewrite SptrLd/SptrSt via the pointer->array map at dispatch time
+    fn lower_with_mem(
+        ctx: &mut Ctx,
+        ops: &[Op],
+        ptr_arrays: &mut std::collections::HashMap<u8, crate::upc::ArrayId>,
+    ) {
+        for op in ops {
+            match op {
+                Op::SptrInit { d, arr, .. } => {
+                    ptr_arrays.insert(*d, *arr);
+                    ctx.lower_op(op);
+                }
+                Op::SptrLd { w, d, p, disp } => {
+                    let arr = *ptr_arrays
+                        .get(p)
+                        .unwrap_or_else(|| panic!("r{p} used as sptr but never SptrInit"));
+                    let layout = ctx.rt.array(arr).layout;
+                    ctx.sptr_mem(*w, *d, *p, *disp, false, &layout);
+                }
+                Op::SptrSt { w, s, p, disp } => {
+                    let arr = *ptr_arrays
+                        .get(p)
+                        .unwrap_or_else(|| panic!("r{p} used as sptr but never SptrInit"));
+                    let layout = ctx.rt.array(arr).layout;
+                    ctx.sptr_mem(*w, *s, *p, *disp, true, &layout);
+                }
+                Op::For { i, from, to, step, body } => {
+                    assert!(*step > 0);
+                    ctx.lower_op(&Op::Mov { d: *i, v: *from });
+                    let top = ctx.asm.label();
+                    let exit = ctx.asm.label();
+                    ctx.asm.bind(top);
+                    match to {
+                        Val::I(c) => ctx.bin_imm(IntOp::CmpLt, SCR, *i, *c),
+                        Val::R(r) => ctx.asm.emit(Inst::Opr {
+                            op: IntOp::CmpLt,
+                            rd: SCR,
+                            ra: *i,
+                            rb: *r,
+                        }),
+                    }
+                    ctx.asm.br(Cond::Eq, SCR, exit);
+                    lower_with_mem(ctx, body, ptr_arrays);
+                    ctx.bin_imm(IntOp::Add, *i, *i, *step);
+                    ctx.asm.jmp(top);
+                    ctx.asm.bind(exit);
+                }
+                Op::If { cond, r, then, els } => {
+                    let after = ctx.asm.label();
+                    if els.is_empty() {
+                        ctx.asm.br(negate(*cond), *r, after);
+                        lower_with_mem(ctx, then, ptr_arrays);
+                        ctx.asm.bind(after);
+                    } else {
+                        let else_l = ctx.asm.label();
+                        ctx.asm.br(negate(*cond), *r, else_l);
+                        lower_with_mem(ctx, then, ptr_arrays);
+                        ctx.asm.jmp(after);
+                        ctx.asm.bind(else_l);
+                        lower_with_mem(ctx, els, ptr_arrays);
+                        ctx.asm.bind(after);
+                    }
+                }
+                Op::DoWhile { body, cond, r } => {
+                    let top = ctx.asm.label();
+                    ctx.asm.bind(top);
+                    lower_with_mem(ctx, body, ptr_arrays);
+                    ctx.asm.br(*cond, *r, top);
+                }
+                other => ctx.lower_op(other),
+            }
+        }
+    }
+    lower_with_mem(&mut ctx, &m.ops, &mut ptr_arrays);
+
+    ctx.asm.emit(Inst::Halt);
+    let mut stats = ctx.stats;
+    let program = ctx.asm.finish(&m.name);
+    stats.insts = program.len() as u32;
+    CompiledKernel { program, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::IrBuilder;
+    use crate::cpu::CpuModel;
+    use crate::sim::{Machine, MachineCfg};
+    use crate::upc::UpcRuntime;
+
+    /// Sum a shared array both ways; results must match and the HW
+    /// variant must execute far fewer instructions.
+    fn sum_kernel(rt: &mut UpcRuntime, arr: crate::upc::ArrayId, n: u64) -> IrModule {
+        let mut b = IrBuilder::new(rt);
+        let acc = b.it();
+        b.mov(acc, Val::I(0));
+        let p = b.sptr_init(arr, Val::I(0));
+        b.for_range(Val::I(0), Val::I(n as i64), 1, |b, _| {
+            let t = b.it();
+            b.sptr_ld(MemWidth::U64, t, p, 0);
+            b.add(acc, acc, Val::R(t));
+            b.sptr_inc(p, arr, Val::I(1));
+            b.free_i(t);
+        });
+        // only thread 0 stores the result
+        let m = b.mythread();
+        b.iff(Cond::Eq, m, |b| {
+            let pb = b.priv_base();
+            b.st(MemWidth::U64, acc, pb, 0);
+            b.free_i(pb);
+        });
+        b.finish("sum")
+    }
+
+    fn run_sum(lowering: Lowering, threads: u32, n: u64) -> (u64, u64, CompileStats) {
+        let mut rt = UpcRuntime::new(threads);
+        let arr = rt.alloc_shared("a", 4, 8, n);
+        let m = sum_kernel(&mut rt, arr, n);
+        let opts = CompileOpts { lowering, static_threads: false, numthreads: threads, volatile_stores: true };
+        let ck = compile(&m, &rt, &opts);
+        let mut machine = Machine::new(MachineCfg::new(threads, CpuModel::Atomic));
+        for i in 0..n {
+            rt.write_u64(machine.mem_mut(), arr, i, i * 3);
+        }
+        let res = machine.run(&ck.program);
+        let got = machine.mem.read(
+            MemWidth::U64,
+            crate::mem::seg_base(0) + crate::mem::PRIV_OFF,
+        );
+        (got, res.total.instructions, ck.stats)
+    }
+
+    #[test]
+    fn soft_and_hw_agree_and_hw_is_cheaper() {
+        let n = 64u64;
+        let want: u64 = (0..n).map(|i| i * 3).sum();
+        let (soft_sum, soft_insts, soft_stats) = run_sum(Lowering::Soft, 4, n);
+        let (hw_sum, hw_insts, hw_stats) = run_sum(Lowering::Hw, 4, n);
+        assert_eq!(soft_sum, want);
+        assert_eq!(hw_sum, want);
+        assert!(
+            soft_insts > 3 * hw_insts,
+            "soft {soft_insts} should dwarf hw {hw_insts}"
+        );
+        assert_eq!(soft_stats.hw_incs, 0);
+        assert!(hw_stats.hw_incs > 0);
+        assert_eq!(hw_stats.soft_incs, 0);
+    }
+
+    #[test]
+    fn nonpow2_geometry_falls_back_to_soft() {
+        let mut rt = UpcRuntime::new(4);
+        // elemsize 56016: the CG w/w_tmp case
+        let arr = rt.alloc_shared("w", 1, 56016, 16);
+        let mut b = IrBuilder::new(&mut rt);
+        let p = b.sptr_init(arr, Val::I(0));
+        b.sptr_inc(p, arr, Val::I(1));
+        let m = b.finish("fallback");
+        let ck = compile(&m, &rt, &CompileOpts::hw(4));
+        assert_eq!(ck.stats.hw_incs, 0);
+        assert_eq!(ck.stats.soft_incs, 1);
+    }
+
+    #[test]
+    fn two_bit_increment_uses_two_immediates() {
+        let mut rt = UpcRuntime::new(4);
+        let arr = rt.alloc_shared("a", 4, 8, 64);
+        let mut b = IrBuilder::new(&mut rt);
+        let p = b.sptr_init(arr, Val::I(0));
+        b.sptr_inc(p, arr, Val::I(3)); // 3 = 1 + 2
+        let m = b.finish("inc3");
+        let ck = compile(&m, &rt, &CompileOpts::hw(4));
+        assert_eq!(ck.stats.hw_incs, 2);
+        let n_inci = ck
+            .program
+            .insts
+            .iter()
+            .filter(|i| matches!(i, Inst::PgasIncI { .. }))
+            .count();
+        assert_eq!(n_inci, 2);
+    }
+
+    #[test]
+    fn privatized_local_cursor_matches_shared_walk() {
+        // write MYTHREAD's own block-cyclic elements through a local
+        // cursor; read back through host-side indexing
+        let threads = 4u32;
+        let mut rt = UpcRuntime::new(threads);
+        let arr = rt.alloc_shared("a", 8, 8, 8 * threads as u64);
+        let mut b = IrBuilder::new(&mut rt);
+        let cursor = b.local_addr(arr, Val::I(0));
+        b.for_range(Val::I(0), Val::I(8), 1, |b, i| {
+            let t = b.it();
+            b.bin(IntOp::Sll, t, i, Val::I(3));
+            let addr = b.it();
+            b.bin(IntOp::Add, addr, cursor, Val::R(t));
+            b.st(MemWidth::U64, i, addr, 0);
+            b.free_i(addr);
+            b.free_i(t);
+        });
+        let m = b.finish("privwrite");
+        let ck = compile(&m, &rt, &CompileOpts::soft(threads));
+        let mut machine = Machine::new(MachineCfg::new(threads, CpuModel::Atomic));
+        machine.run(&ck.program);
+        // thread t's j-th local element is logical element t*8 + j
+        for t in 0..threads as u64 {
+            for j in 0..8u64 {
+                let got = rt.read_u64(machine.mem_mut(), arr, t * 8 + j);
+                assert_eq!(got, j, "thread {t} elem {j}");
+            }
+        }
+    }
+}

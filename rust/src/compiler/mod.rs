@@ -1,0 +1,325 @@
+//! The mini-UPC compiler: a kernel IR and its lowering to SimAlpha in
+//! the paper's three configurations.
+//!
+//! The paper's prototype extends the Berkeley UPC source-to-source
+//! compiler: shared-pointer operations are either expanded to the
+//! software Algorithm 1 (+ LUT translation), or replaced with `asm()`
+//! statements using the new instructions.  Manual optimization
+//! ("privatization") is a *source-level* transform: the programmer
+//! rewrites shared accesses with affinity-local raw pointers.
+//!
+//! Correspondingly, here:
+//!
+//! * a **source variant** is chosen by the kernel builder
+//!   ([`SourceVariant::Unoptimized`] uses `Sptr*` ops everywhere;
+//!   [`SourceVariant::Privatized`] mirrors the hand-privatized NPB
+//!   sources — local traversals through [`Op::LocalAddr`] raw cursors,
+//!   with only the genuinely non-privatizable accesses left as `Sptr*`);
+//! * a **lowering** is chosen at compile time: [`Lowering::Soft`]
+//!   expands `Sptr*` to the software sequences, [`Lowering::Hw`] uses
+//!   the PGAS instructions, falling back to software for non-power-of-2
+//!   geometries exactly like the prototype (CG's 56016-byte elements).
+//!
+//! The paper's three measured configurations are then:
+//! `(Unoptimized, Soft)`, `(Privatized, Soft)`, `(Unoptimized, Hw)`.
+
+pub mod emit;
+pub mod lower;
+
+pub use lower::{compile, CompileOpts, CompileStats, CompiledKernel, Lowering};
+
+use crate::isa::{Cond, FpOp, IntOp, MemWidth};
+use crate::upc::{ArrayId, UpcRuntime};
+
+/// Which source text the kernel builder should mirror.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SourceVariant {
+    /// The plain UPC source: every shared access via shared pointers.
+    Unoptimized,
+    /// The hand-tuned source with privatized local accesses.
+    Privatized,
+}
+
+/// A value: virtual (= architectural, see below) register or immediate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Val {
+    R(u8),
+    I(i64),
+}
+
+/// Kernel IR. Registers are architectural already: the builder hands out
+/// `r0..r19` (int) and `f0..f29` (fp) and panics on exhaustion — the
+/// builders below are written to stay inside the envelope, mirroring how
+/// the real kernels fit the Alpha register file.
+#[derive(Clone, Debug)]
+pub enum Op {
+    // ---- integer ----
+    Bin { op: IntOp, d: u8, a: u8, b: Val },
+    Mov { d: u8, v: Val },
+    // ---- floating point ----
+    FBin { op: FpOp, d: u8, a: u8, b: u8 },
+    FConst { d: u8, v: f64 },
+    FCmpLt { d: u8, a: u8, b: u8 },
+    CvtIF { d: u8, a: u8 },
+    CvtFI { d: u8, a: u8 },
+    // ---- special registers ----
+    MyThread { d: u8 },
+    Threads { d: u8 },
+    PrivBase { d: u8 },
+    // ---- private / raw-pointer memory ----
+    Ld { w: MemWidth, d: u8, base: u8, disp: i32 },
+    St { w: MemWidth, s: u8, base: u8, disp: i32 },
+    // ---- UPC shared ops (lowering-dependent) ----
+    /// d = &arr[idx]
+    SptrInit { d: u8, arr: ArrayId, idx: Val },
+    /// p = p + inc elements (through arr's block-cyclic layout)
+    SptrInc { p: u8, arr: ArrayId, inc: Val },
+    SptrLd { w: MemWidth, d: u8, p: u8, disp: i16 },
+    SptrSt { w: MemWidth, s: u8, p: u8, disp: i16 },
+    /// d = raw sysva of MYTHREAD's chunk of `arr`, element offset `off`
+    /// (the manual-privatization cast `(int*)&A[MYTHREAD*chunk]`).
+    LocalAddr { d: u8, arr: ArrayId, off: Val },
+    // ---- control ----
+    For { i: u8, from: Val, to: Val, step: i64, body: Vec<Op> },
+    If { cond: Cond, r: u8, then: Vec<Op>, els: Vec<Op> },
+    DoWhile { body: Vec<Op>, cond: Cond, r: u8 },
+    Barrier,
+}
+
+/// A complete kernel module.
+#[derive(Clone, Debug)]
+pub struct IrModule {
+    pub name: String,
+    pub ops: Vec<Op>,
+}
+
+/// Builder with scoped register pools and structured control flow.
+pub struct IrBuilder<'rt> {
+    pub rt: &'rt mut UpcRuntime,
+    frames: Vec<Vec<Op>>,
+    int_free: Vec<u8>,
+    fp_free: Vec<u8>,
+}
+
+impl<'rt> IrBuilder<'rt> {
+    pub fn new(rt: &'rt mut UpcRuntime) -> Self {
+        Self {
+            rt,
+            frames: vec![Vec::new()],
+            int_free: (0..20).rev().collect(),
+            fp_free: (0..30).rev().collect(),
+        }
+    }
+
+    fn push(&mut self, op: Op) {
+        self.frames.last_mut().unwrap().push(op);
+    }
+
+    // ---- register management ----
+
+    /// Allocate an integer register for the rest of its scope.
+    pub fn it(&mut self) -> u8 {
+        self.int_free.pop().expect("int register pool exhausted")
+    }
+
+    pub fn ft(&mut self) -> u8 {
+        self.fp_free.pop().expect("fp register pool exhausted")
+    }
+
+    pub fn free_i(&mut self, r: u8) {
+        debug_assert!(!self.int_free.contains(&r));
+        self.int_free.push(r);
+    }
+
+    pub fn free_f(&mut self, r: u8) {
+        debug_assert!(!self.fp_free.contains(&r));
+        self.fp_free.push(r);
+    }
+
+    // ---- straight-line ops ----
+
+    pub fn mov(&mut self, d: u8, v: Val) {
+        self.push(Op::Mov { d, v });
+    }
+
+    pub fn iconst(&mut self, v: i64) -> u8 {
+        let d = self.it();
+        self.mov(d, Val::I(v));
+        d
+    }
+
+    pub fn bin(&mut self, op: IntOp, d: u8, a: u8, b: Val) {
+        self.push(Op::Bin { op, d, a, b });
+    }
+
+    pub fn add(&mut self, d: u8, a: u8, b: Val) {
+        self.bin(IntOp::Add, d, a, b);
+    }
+
+    pub fn fbin(&mut self, op: FpOp, d: u8, a: u8, b: u8) {
+        self.push(Op::FBin { op, d, a, b });
+    }
+
+    pub fn fconst(&mut self, v: f64) -> u8 {
+        let d = self.ft();
+        self.push(Op::FConst { d, v });
+        d
+    }
+
+    pub fn fcmplt(&mut self, d: u8, a: u8, b: u8) {
+        self.push(Op::FCmpLt { d, a, b });
+    }
+
+    pub fn cvt_if(&mut self, d: u8, a: u8) {
+        self.push(Op::CvtIF { d, a });
+    }
+
+    pub fn cvt_fi(&mut self, d: u8, a: u8) {
+        self.push(Op::CvtFI { d, a });
+    }
+
+    pub fn mythread(&mut self) -> u8 {
+        let d = self.it();
+        self.push(Op::MyThread { d });
+        d
+    }
+
+    pub fn threads(&mut self) -> u8 {
+        let d = self.it();
+        self.push(Op::Threads { d });
+        d
+    }
+
+    pub fn priv_base(&mut self) -> u8 {
+        let d = self.it();
+        self.push(Op::PrivBase { d });
+        d
+    }
+
+    pub fn ld(&mut self, w: MemWidth, d: u8, base: u8, disp: i32) {
+        self.push(Op::Ld { w, d, base, disp });
+    }
+
+    pub fn st(&mut self, w: MemWidth, s: u8, base: u8, disp: i32) {
+        self.push(Op::St { w, s, base, disp });
+    }
+
+    // ---- shared ops ----
+
+    pub fn sptr_init(&mut self, arr: ArrayId, idx: Val) -> u8 {
+        let d = self.it();
+        self.push(Op::SptrInit { d, arr, idx });
+        d
+    }
+
+    pub fn sptr_inc(&mut self, p: u8, arr: ArrayId, inc: Val) {
+        self.push(Op::SptrInc { p, arr, inc });
+    }
+
+    pub fn sptr_ld(&mut self, w: MemWidth, d: u8, p: u8, disp: i16) {
+        self.push(Op::SptrLd { w, d, p, disp });
+    }
+
+    pub fn sptr_st(&mut self, w: MemWidth, s: u8, p: u8, disp: i16) {
+        self.push(Op::SptrSt { w, s, p, disp });
+    }
+
+    pub fn local_addr(&mut self, arr: ArrayId, off: Val) -> u8 {
+        let d = self.it();
+        self.push(Op::LocalAddr { d, arr, off });
+        d
+    }
+
+    // ---- control flow ----
+
+    /// `for i in (from..to).step_by(step)` — `i` is freed afterwards.
+    pub fn for_range<F>(&mut self, from: Val, to: Val, step: i64, f: F)
+    where
+        F: FnOnce(&mut Self, u8),
+    {
+        let i = self.it();
+        self.frames.push(Vec::new());
+        f(self, i);
+        let body = self.frames.pop().unwrap();
+        self.push(Op::For { i, from, to, step, body });
+        self.free_i(i);
+    }
+
+    pub fn iff<F>(&mut self, cond: Cond, r: u8, f: F)
+    where
+        F: FnOnce(&mut Self),
+    {
+        self.frames.push(Vec::new());
+        f(self);
+        let then = self.frames.pop().unwrap();
+        self.push(Op::If { cond, r, then, els: Vec::new() });
+    }
+
+    pub fn if_else<F, G>(&mut self, cond: Cond, r: u8, f: F, g: G)
+    where
+        F: FnOnce(&mut Self),
+        G: FnOnce(&mut Self),
+    {
+        self.frames.push(Vec::new());
+        f(self);
+        let then = self.frames.pop().unwrap();
+        self.frames.push(Vec::new());
+        g(self);
+        let els = self.frames.pop().unwrap();
+        self.push(Op::If { cond, r, then, els });
+    }
+
+    pub fn do_while<F>(&mut self, cond: Cond, r: u8, f: F)
+    where
+        F: FnOnce(&mut Self),
+    {
+        self.frames.push(Vec::new());
+        f(self);
+        let body = self.frames.pop().unwrap();
+        self.push(Op::DoWhile { body, cond, r });
+    }
+
+    pub fn barrier(&mut self) {
+        self.push(Op::Barrier);
+    }
+
+    pub fn finish(mut self, name: &str) -> IrModule {
+        assert_eq!(self.frames.len(), 1, "unbalanced control-flow frames");
+        IrModule { name: name.to_string(), ops: self.frames.pop().unwrap() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_scopes_and_pools() {
+        let mut rt = UpcRuntime::new(4);
+        let a = rt.alloc_shared("a", 4, 8, 64);
+        let mut b = IrBuilder::new(&mut rt);
+        let acc = b.it();
+        b.mov(acc, Val::I(0));
+        let p = b.sptr_init(a, Val::I(0));
+        b.for_range(Val::I(0), Val::I(64), 1, |b, _i| {
+            let t = b.it();
+            b.sptr_ld(MemWidth::U64, t, p, 0);
+            b.add(acc, acc, Val::R(t));
+            b.sptr_inc(p, a, Val::I(1));
+            b.free_i(t);
+        });
+        let m = b.finish("sum");
+        assert_eq!(m.name, "sum");
+        assert!(matches!(m.ops.last().unwrap(), Op::For { .. }));
+    }
+
+    #[test]
+    #[should_panic(expected = "exhausted")]
+    fn pool_exhaustion_panics() {
+        let mut rt = UpcRuntime::new(2);
+        let mut b = IrBuilder::new(&mut rt);
+        for _ in 0..25 {
+            let _ = b.it();
+        }
+    }
+}

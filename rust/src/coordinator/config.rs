@@ -1,0 +1,129 @@
+//! Minimal campaign-config parser (a TOML-subset: `key = value` lines,
+//! `#` comments, comma-separated lists).  The offline build environment
+//! vendors no TOML crate; campaigns are simple enough for this format:
+//!
+//! ```text
+//! # campaign.cfg
+//! kernels  = EP, CG, MG
+//! models   = atomic, timing
+//! cores    = 1, 2, 4, 8
+//! variants = unopt, manual, hw
+//! scale    = 64
+//! jobs     = 8
+//! ```
+
+use super::Campaign;
+use crate::cpu::CpuModel;
+use crate::npb::{Kernel, PaperVariant, Scale};
+
+fn parse_variant(s: &str) -> Option<PaperVariant> {
+    match s.to_ascii_lowercase().as_str() {
+        "unopt" | "no-manual-opt" => Some(PaperVariant::Unopt),
+        "manual" | "manual-opt" | "privatized" => Some(PaperVariant::Manual),
+        "hw" | "hardware" => Some(PaperVariant::Hw),
+        _ => None,
+    }
+}
+
+/// Parse a campaign config; unknown keys are errors (typo safety).
+pub fn parse_campaign(text: &str) -> Result<Campaign, String> {
+    let mut c = Campaign::default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim().to_ascii_lowercase();
+        let items: Vec<&str> = value.split(',').map(|s| s.trim()).collect();
+        match key.as_str() {
+            "kernels" => {
+                c.kernels = items
+                    .iter()
+                    .map(|s| {
+                        Kernel::parse(s)
+                            .ok_or_else(|| format!("line {}: unknown kernel `{s}`", lineno + 1))
+                    })
+                    .collect::<Result<_, _>>()?;
+            }
+            "models" => {
+                c.models = items
+                    .iter()
+                    .map(|s| {
+                        CpuModel::parse(s)
+                            .ok_or_else(|| format!("line {}: unknown model `{s}`", lineno + 1))
+                    })
+                    .collect::<Result<_, _>>()?;
+            }
+            "variants" => {
+                c.variants = items
+                    .iter()
+                    .map(|s| {
+                        parse_variant(s)
+                            .ok_or_else(|| format!("line {}: unknown variant `{s}`", lineno + 1))
+                    })
+                    .collect::<Result<_, _>>()?;
+            }
+            "cores" => {
+                c.cores = items
+                    .iter()
+                    .map(|s| {
+                        s.parse::<u32>()
+                            .map_err(|_| format!("line {}: bad core count `{s}`", lineno + 1))
+                    })
+                    .collect::<Result<_, _>>()?;
+            }
+            "scale" => {
+                let f = value
+                    .trim()
+                    .parse::<u32>()
+                    .map_err(|_| format!("line {}: bad scale", lineno + 1))?;
+                c.scale = Scale { factor: f.max(1) };
+            }
+            "jobs" => {
+                c.jobs = value
+                    .trim()
+                    .parse::<usize>()
+                    .map_err(|_| format!("line {}: bad jobs", lineno + 1))?;
+            }
+            other => return Err(format!("line {}: unknown key `{other}`", lineno + 1)),
+        }
+    }
+    Ok(c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_config() {
+        let c = parse_campaign(
+            "# demo\nkernels = EP, cg\nmodels = atomic, detailed\n\
+             cores = 1,2 , 4\nvariants = unopt, hw\nscale = 128\njobs = 3\n",
+        )
+        .unwrap();
+        assert_eq!(c.kernels, vec![Kernel::Ep, Kernel::Cg]);
+        assert_eq!(c.models.len(), 2);
+        assert_eq!(c.cores, vec![1, 2, 4]);
+        assert_eq!(c.variants.len(), 2);
+        assert_eq!(c.scale.factor, 128);
+        assert_eq!(c.jobs, 3);
+    }
+
+    #[test]
+    fn rejects_unknown_keys_and_values() {
+        assert!(parse_campaign("kernls = EP").is_err());
+        assert!(parse_campaign("kernels = QQ").is_err());
+        assert!(parse_campaign("models = riscy").is_err());
+        assert!(parse_campaign("cores = four").is_err());
+    }
+
+    #[test]
+    fn comments_and_blanks_ok() {
+        let c = parse_campaign("\n# nothing but comments\n\n").unwrap();
+        assert_eq!(c.kernels.len(), 5); // defaults
+    }
+}

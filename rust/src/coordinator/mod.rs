@@ -1,0 +1,359 @@
+//! The benchmark coordinator: campaign configuration, parallel sweep
+//! scheduling, result collection, and the per-figure reporters that
+//! regenerate the paper's tables.
+//!
+//! A *campaign* is the cross product kernels × variants × models ×
+//! core-counts (bounded per-kernel, e.g. FT ≤ 16).  Runs are scheduled
+//! over a pool of host threads (each simulation is single-threaded and
+//! self-contained), results validate on the fly, and the reporters
+//! lay out one table per figure: rows = simulated core count, columns =
+//! the paper's three variants plus derived speedups.
+
+pub mod config;
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+use crate::cpu::CpuModel;
+use crate::npb::{self, Kernel, PaperVariant, RunOutcome, Scale};
+use crate::util::table::{fnum, Table};
+
+/// A full sweep specification.
+#[derive(Clone, Debug)]
+pub struct Campaign {
+    pub kernels: Vec<Kernel>,
+    pub models: Vec<CpuModel>,
+    pub cores: Vec<u32>,
+    pub variants: Vec<PaperVariant>,
+    pub scale: Scale,
+    /// Host worker threads.
+    pub jobs: usize,
+}
+
+impl Default for Campaign {
+    fn default() -> Self {
+        Self {
+            kernels: Kernel::ALL.to_vec(),
+            models: vec![CpuModel::Atomic],
+            cores: vec![1, 2, 4, 8, 16, 32, 64],
+            variants: PaperVariant::ALL.to_vec(),
+            scale: Scale::default(),
+            jobs: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4),
+        }
+    }
+}
+
+impl Campaign {
+    /// A fast smoke campaign (examples' `--quick` mode).
+    pub fn quick() -> Self {
+        Self {
+            kernels: Kernel::ALL.to_vec(),
+            models: vec![CpuModel::Atomic],
+            cores: vec![1, 4],
+            variants: PaperVariant::ALL.to_vec(),
+            scale: Scale::quick(),
+            jobs: Self::default().jobs,
+        }
+    }
+
+    /// Enumerate the concrete run points.
+    pub fn points(&self) -> Vec<(Kernel, PaperVariant, CpuModel, u32)> {
+        let mut pts = Vec::new();
+        for &k in &self.kernels {
+            for &m in &self.models {
+                for &c in &self.cores {
+                    if c > k.max_cores() {
+                        continue; // FT's class-W slab limit
+                    }
+                    for &v in &self.variants {
+                        pts.push((k, v, m, c));
+                    }
+                }
+            }
+        }
+        pts
+    }
+
+    /// Run the whole campaign on a host-thread pool; every run validates
+    /// its numerics (panics otherwise).
+    pub fn run(&self, verbose: bool) -> Vec<RunOutcome> {
+        let points = self.points();
+        let total = points.len();
+        let queue = Arc::new(Mutex::new(points));
+        let (tx, rx) = mpsc::channel::<RunOutcome>();
+        let scale = self.scale;
+        let jobs = self.jobs.max(1);
+        let mut handles = Vec::new();
+        for _ in 0..jobs {
+            let queue = Arc::clone(&queue);
+            let tx = tx.clone();
+            handles.push(std::thread::spawn(move || loop {
+                let pt = { queue.lock().unwrap().pop() };
+                match pt {
+                    Some((k, v, m, c)) => {
+                        let out = npb::run(k, v, m, c, &scale);
+                        if tx.send(out).is_err() {
+                            return;
+                        }
+                    }
+                    None => return,
+                }
+            }));
+        }
+        drop(tx);
+        let mut outcomes = Vec::with_capacity(total);
+        for out in rx {
+            if verbose {
+                eprintln!(
+                    "  [{}/{}] {} {:<16} {:<8} x{:<2} -> {} cycles ({:.3} ms simulated)",
+                    outcomes.len() + 1,
+                    total,
+                    out.kernel,
+                    out.variant.label(),
+                    out.model.name(),
+                    out.cores,
+                    out.result.cycles,
+                    out.result.runtime_secs() * 1e3,
+                );
+            }
+            outcomes.push(out);
+        }
+        for h in handles {
+            h.join().expect("worker panicked");
+        }
+        // deterministic ordering for reports
+        outcomes.sort_by_key(|o| {
+            (
+                o.kernel.name(),
+                o.model.name(),
+                o.cores,
+                o.variant.label(),
+            )
+        });
+        outcomes
+    }
+}
+
+/// Find one outcome.
+pub fn find<'a>(
+    outs: &'a [RunOutcome],
+    kernel: Kernel,
+    variant: PaperVariant,
+    model: CpuModel,
+    cores: u32,
+) -> Option<&'a RunOutcome> {
+    outs.iter().find(|o| {
+        o.kernel == kernel && o.variant == variant && o.model == model && o.cores == cores
+    })
+}
+
+/// The paper-figure table for one (kernel, model): runtime per variant
+/// per core count plus the two derived ratios the text quotes.
+pub fn figure_table(
+    outs: &[RunOutcome],
+    kernel: Kernel,
+    model: CpuModel,
+    fig: &str,
+) -> Table {
+    let mut t = Table::new(
+        &format!("{fig}: NAS {kernel} class W (scaled), Gem5-like {model} model"),
+        &[
+            "cores",
+            "no-manual-opt [Mcyc]",
+            "manual-opt [Mcyc]",
+            "+HW [Mcyc]",
+            "HW speedup vs unopt",
+            "HW vs manual",
+        ],
+    );
+    let mut cores: Vec<u32> = outs
+        .iter()
+        .filter(|o| o.kernel == kernel && o.model == model)
+        .map(|o| o.cores)
+        .collect();
+    cores.sort_unstable();
+    cores.dedup();
+    for c in cores {
+        let get = |v| find(outs, kernel, v, model, c).map(|o| o.result.cycles);
+        let (u, m, h) = (
+            get(PaperVariant::Unopt),
+            get(PaperVariant::Manual),
+            get(PaperVariant::Hw),
+        );
+        if let (Some(u), Some(m), Some(h)) = (u, m, h) {
+            t.row(&[
+                c.to_string(),
+                fnum(u as f64 / 1e6, 2),
+                fnum(m as f64 / 1e6, 2),
+                fnum(h as f64 / 1e6, 2),
+                format!("{:.2}x", u as f64 / h as f64),
+                format!("{:+.1}%", (m as f64 / h as f64 - 1.0) * 100.0),
+            ]);
+        }
+    }
+    t
+}
+
+/// CSV archival of raw outcomes.
+pub fn outcomes_csv(outs: &[RunOutcome]) -> String {
+    let mut t = Table::new(
+        "",
+        &[
+            "kernel", "variant", "model", "cores", "cycles", "instructions",
+            "sim_ms", "hw_incs", "soft_incs", "hw_mems", "soft_mems",
+        ],
+    );
+    for o in outs {
+        t.row(&[
+            o.kernel.name().into(),
+            o.variant.label().into(),
+            o.model.name().into(),
+            o.cores.to_string(),
+            o.result.cycles.to_string(),
+            o.result.total.instructions.to_string(),
+            fnum(o.result.runtime_secs() * 1e3, 4),
+            o.compile_stats.hw_incs.to_string(),
+            o.compile_stats.soft_incs.to_string(),
+            o.compile_stats.hw_mems.to_string(),
+            o.compile_stats.soft_mems.to_string(),
+        ]);
+    }
+    t.to_csv()
+}
+
+/// Summary of headline numbers across a campaign (the abstract's
+/// claims): max HW speedup, and HW-vs-manual spread.
+pub fn headline_summary(outs: &[RunOutcome]) -> Table {
+    let mut t = Table::new(
+        "Headline summary (paper abstract: up to 5.5x speedup; up to +10% over manual)",
+        &["kernel", "model", "best HW speedup", "best HW vs manual", "worst HW vs manual"],
+    );
+    for &k in &Kernel::ALL {
+        for &m in &CpuModel::ALL {
+            let pts: Vec<&RunOutcome> = outs
+                .iter()
+                .filter(|o| o.kernel == k && o.model == m)
+                .collect();
+            if pts.is_empty() {
+                continue;
+            }
+            let mut best_speedup: f64 = 0.0;
+            let mut best_vs_manual = f64::NEG_INFINITY;
+            let mut worst_vs_manual = f64::INFINITY;
+            let mut any = false;
+            let mut cores: Vec<u32> = pts.iter().map(|o| o.cores).collect();
+            cores.sort_unstable();
+            cores.dedup();
+            for c in cores {
+                let get = |v| find(outs, k, v, m, c).map(|o| o.result.cycles);
+                if let (Some(u), Some(man), Some(h)) = (
+                    get(PaperVariant::Unopt),
+                    get(PaperVariant::Manual),
+                    get(PaperVariant::Hw),
+                ) {
+                    any = true;
+                    best_speedup = best_speedup.max(u as f64 / h as f64);
+                    let vs = (man as f64 / h as f64 - 1.0) * 100.0;
+                    best_vs_manual = best_vs_manual.max(vs);
+                    worst_vs_manual = worst_vs_manual.min(vs);
+                }
+            }
+            if any {
+                t.row(&[
+                    k.name().into(),
+                    m.name().into(),
+                    format!("{best_speedup:.2}x"),
+                    format!("{best_vs_manual:+.1}%"),
+                    format!("{worst_vs_manual:+.1}%"),
+                ]);
+            }
+        }
+    }
+    t
+}
+
+/// Shared driver for the per-figure `cargo bench` targets: regenerate
+/// the figure's table at bench scale, then wall-time the representative
+/// point with the micro-bench harness.
+pub fn bench_figure(
+    fig: &str,
+    kernel: Kernel,
+    models: &[CpuModel],
+    cores: &[u32],
+    scale: Scale,
+) {
+    let campaign = Campaign {
+        kernels: vec![kernel],
+        models: models.to_vec(),
+        cores: cores.to_vec(),
+        variants: PaperVariant::ALL.to_vec(),
+        scale,
+        jobs: Campaign::default().jobs,
+    };
+    let t0 = std::time::Instant::now();
+    let outs = campaign.run(false);
+    for &m in models {
+        println!("{}", figure_table(&outs, kernel, m, fig).render());
+    }
+    println!(
+        "figure regenerated from {} validated runs in {:.2}s\n",
+        outs.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    // harness timing of the representative mid-size point
+    let mid = cores[cores.len() / 2].min(kernel.max_cores());
+    for v in PaperVariant::ALL {
+        crate::util::bench::bench(
+            &format!("{kernel} {} {} x{mid}", v.label(), models[0]),
+            1,
+            3,
+            || {
+                crate::util::bench::black_box(npb::run(
+                    kernel, v, models[0], mid, &scale,
+                ));
+            },
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn points_respect_ft_limit() {
+        let c = Campaign {
+            kernels: vec![Kernel::Ft, Kernel::Ep],
+            cores: vec![16, 32],
+            models: vec![CpuModel::Atomic],
+            variants: vec![PaperVariant::Unopt],
+            scale: Scale::quick(),
+            jobs: 1,
+        };
+        let pts = c.points();
+        assert!(pts.iter().any(|p| p.0 == Kernel::Ft && p.3 == 16));
+        assert!(!pts.iter().any(|p| p.0 == Kernel::Ft && p.3 == 32));
+        assert!(pts.iter().any(|p| p.0 == Kernel::Ep && p.3 == 32));
+    }
+
+    #[test]
+    fn tiny_campaign_runs_and_reports() {
+        let c = Campaign {
+            kernels: vec![Kernel::Ep],
+            cores: vec![2],
+            models: vec![CpuModel::Atomic],
+            variants: PaperVariant::ALL.to_vec(),
+            scale: Scale { factor: 4096 },
+            jobs: 2,
+        };
+        let outs = c.run(false);
+        assert_eq!(outs.len(), 3);
+        let tab = figure_table(&outs, Kernel::Ep, CpuModel::Atomic, "Fig 6");
+        assert!(!tab.is_empty());
+        let csv = outcomes_csv(&outs);
+        assert!(csv.lines().count() == 4);
+        assert!(!headline_summary(&outs).is_empty());
+    }
+}

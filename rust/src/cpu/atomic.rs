@@ -1,0 +1,162 @@
+//! The `atomic` CPU model: one instruction per cycle, no memory timing —
+//! Gem5's AtomicSimpleCPU, the model behind Figures 6–10.
+//!
+//! With this model the HW-support speedup is exactly the dynamic
+//! instruction-count ratio: a software Algorithm-1 expansion of ~25–45
+//! ops against one `pgas_inc`, and a 3–4 op software translation against
+//! one `pgas_ld`/`pgas_st`.
+
+use super::{ArchState, CoreStats, Cpu, SharedLevel, StopReason};
+use crate::cpu::exec::{step, StepEffect};
+use crate::isa::Program;
+use crate::mem::MemSystem;
+
+/// 1-IPC core.
+pub struct AtomicCpu {
+    state: ArchState,
+    stats: CoreStats,
+}
+
+impl AtomicCpu {
+    pub fn new(mythread: u32, numthreads: u32) -> Self {
+        Self {
+            state: ArchState::new(mythread, numthreads),
+            stats: CoreStats::default(),
+        }
+    }
+}
+
+impl Cpu for AtomicCpu {
+    fn run(
+        &mut self,
+        prog: &Program,
+        mem: &mut MemSystem,
+        _shared: &mut SharedLevel,
+        max_insts: u64,
+    ) -> StopReason {
+        let mut budget = max_insts;
+        while budget > 0 {
+            if self.state.halted {
+                return StopReason::Halted;
+            }
+            let inst = prog.insts[self.state.pc as usize];
+            let effect = step(&mut self.state, mem, &inst);
+            self.stats.instructions += 1;
+            self.stats.cycles += 1;
+            budget -= 1;
+            match effect {
+                StepEffect::Mem { write, shared, local, .. } => {
+                    if write {
+                        self.stats.mem_writes += 1;
+                    } else {
+                        self.stats.mem_reads += 1;
+                    }
+                    if shared {
+                        if inst.is_pgas() {
+                            self.stats.pgas_mems += 1;
+                        }
+                        if local {
+                            self.stats.local_shared_accesses += 1;
+                        } else {
+                            self.stats.remote_shared_accesses += 1;
+                        }
+                    }
+                }
+                StepEffect::Branch { .. } => self.stats.branches += 1,
+                StepEffect::Barrier => {
+                    self.stats.barriers += 1;
+                    return StopReason::Barrier;
+                }
+                StepEffect::Halt => return StopReason::Halted,
+                StepEffect::Normal => {
+                    if matches!(
+                        inst,
+                        crate::isa::Inst::PgasIncI { .. } | crate::isa::Inst::PgasIncR { .. }
+                    ) {
+                        self.stats.pgas_incs += 1;
+                    }
+                }
+            }
+        }
+        StopReason::QuantumExpired
+    }
+
+    fn state(&self) -> &ArchState {
+        &self.state
+    }
+
+    fn state_mut(&mut self) -> &mut ArchState {
+        &mut self.state
+    }
+
+    fn stats(&self) -> &CoreStats {
+        &self.stats
+    }
+
+    fn stats_mut(&mut self) -> &mut CoreStats {
+        &mut self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::HierLatency;
+    use crate::isa::{Cond, Inst, IntOp};
+
+    fn shared1() -> SharedLevel {
+        SharedLevel::new(1, HierLatency::default())
+    }
+
+    #[test]
+    fn one_cycle_per_instruction() {
+        let prog = Program::new(
+            "loop10",
+            vec![
+                Inst::Ldi { rd: 1, imm: 10 },
+                Inst::Opi { op: IntOp::Add, rd: 1, ra: 1, imm: -1 }, // 1
+                Inst::Br { cond: Cond::Gt, ra: 1, target: 1 },
+                Inst::Halt,
+            ],
+        );
+        let mut cpu = AtomicCpu::new(0, 1);
+        let mut mem = MemSystem::new(1);
+        let r = cpu.run(&prog, &mut mem, &mut shared1(), u64::MAX);
+        assert_eq!(r, StopReason::Halted);
+        // 1 ldi + 10*(add+br) + halt = 22 dynamic instructions
+        assert_eq!(cpu.stats().instructions, 22);
+        assert_eq!(cpu.stats().cycles, 22);
+        assert!((cpu.stats().ipc() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stops_at_barrier_and_resumes() {
+        let prog = Program::new(
+            "bar",
+            vec![Inst::Nop, Inst::Barrier, Inst::Nop, Inst::Halt],
+        );
+        let mut cpu = AtomicCpu::new(0, 1);
+        let mut mem = MemSystem::new(1);
+        assert_eq!(
+            cpu.run(&prog, &mut mem, &mut shared1(), u64::MAX),
+            StopReason::Barrier
+        );
+        assert_eq!(cpu.state().pc, 2, "pc advanced past the barrier");
+        assert_eq!(
+            cpu.run(&prog, &mut mem, &mut shared1(), u64::MAX),
+            StopReason::Halted
+        );
+    }
+
+    #[test]
+    fn quantum_expiry() {
+        let prog = Program::new("spin", vec![Inst::Jmp { target: 0 }]);
+        let mut cpu = AtomicCpu::new(0, 1);
+        let mut mem = MemSystem::new(1);
+        assert_eq!(
+            cpu.run(&prog, &mut mem, &mut shared1(), 100),
+            StopReason::QuantumExpired
+        );
+        assert_eq!(cpu.stats().instructions, 100);
+    }
+}

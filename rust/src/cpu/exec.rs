@@ -1,0 +1,447 @@
+//! The shared functional executor: architectural semantics of every
+//! SimAlpha instruction, including the PGAS extension.
+//!
+//! All three CPU models call [`step`]; they differ only in the cycle
+//! accounting layered on the returned [`StepEffect`].
+
+use crate::isa::{Cond, FpOp, Inst, IntOp, MemWidth, ZERO};
+use crate::mem::MemSystem;
+use crate::sptr::{self, increment_pow2, pack, unpack, Topology};
+use crate::util::log2_floor;
+
+/// Architectural state of one core.
+#[derive(Clone, Debug)]
+pub struct ArchState {
+    pub pc: u32,
+    iregs: [u64; 32],
+    fregs: [f64; 32],
+    /// This core's UPC thread id (MYTHREAD).
+    pub mythread: u32,
+    /// The special `threads` register (paper 4.3) and its log2.
+    pub threads_reg: u32,
+    pub l2_threads: u32,
+    /// Locality condition code of the most recent PGAS increment.
+    pub cc_loc: u8,
+    pub halted: bool,
+    pub topo: Topology,
+}
+
+impl ArchState {
+    pub fn new(mythread: u32, numthreads: u32) -> Self {
+        assert!(numthreads.is_power_of_two(), "hw path needs pow2 THREADS");
+        Self {
+            pc: 0,
+            iregs: [0; 32],
+            fregs: [0.0; 32],
+            mythread,
+            threads_reg: numthreads,
+            l2_threads: log2_floor(numthreads as u64),
+            cc_loc: 0,
+            halted: false,
+            topo: Topology::default(),
+        }
+    }
+
+    #[inline]
+    pub fn r(&self, r: u8) -> u64 {
+        if r == ZERO {
+            0
+        } else {
+            self.iregs[r as usize]
+        }
+    }
+
+    #[inline]
+    pub fn set_r(&mut self, r: u8, v: u64) {
+        if r != ZERO {
+            self.iregs[r as usize] = v;
+        }
+    }
+
+    #[inline]
+    pub fn f(&self, r: u8) -> f64 {
+        if r == ZERO {
+            0.0
+        } else {
+            self.fregs[r as usize]
+        }
+    }
+
+    #[inline]
+    pub fn set_f(&mut self, r: u8, v: f64) {
+        if r != ZERO {
+            self.fregs[r as usize] = v;
+        }
+    }
+}
+
+/// What a dynamic instruction did — consumed by the timing models.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StepEffect {
+    /// Plain register op.
+    Normal,
+    /// Memory access at `sysva` (already performed functionally).
+    Mem { sysva: u64, write: bool, width: MemWidth, shared: bool, local: bool },
+    /// Control transfer; `taken` for conditional stats.
+    Branch { taken: bool },
+    /// Barrier rendezvous requested (pc already advanced past it).
+    Barrier,
+    /// Program finished.
+    Halt,
+}
+
+#[inline]
+fn int_op(op: IntOp, a: u64, b: u64) -> u64 {
+    let (sa, sb) = (a as i64, b as i64);
+    match op {
+        IntOp::Add => sa.wrapping_add(sb) as u64,
+        IntOp::Sub => sa.wrapping_sub(sb) as u64,
+        IntOp::Mul => sa.wrapping_mul(sb) as u64,
+        IntOp::Div => {
+            if sb == 0 {
+                0
+            } else {
+                sa.wrapping_div(sb) as u64
+            }
+        }
+        IntOp::Rem => {
+            if sb == 0 {
+                0
+            } else {
+                sa.wrapping_rem(sb) as u64
+            }
+        }
+        IntOp::And => a & b,
+        IntOp::Or => a | b,
+        IntOp::Xor => a ^ b,
+        IntOp::Sll => a.wrapping_shl(b as u32 & 63),
+        IntOp::Srl => a.wrapping_shr(b as u32 & 63),
+        IntOp::Sra => (sa.wrapping_shr(b as u32 & 63)) as u64,
+        IntOp::CmpEq => (a == b) as u64,
+        IntOp::CmpLt => (sa < sb) as u64,
+        IntOp::CmpLtU => (a < b) as u64,
+        IntOp::CmpLe => (sa <= sb) as u64,
+    }
+}
+
+#[inline]
+fn fp_op(op: FpOp, a: f64, b: f64) -> f64 {
+    match op {
+        FpOp::FAdd => a + b,
+        FpOp::FSub => a - b,
+        FpOp::FMul => a * b,
+        FpOp::FDiv => a / b,
+        FpOp::FSqrt => a.sqrt(),
+        FpOp::FMax => a.max(b),
+        FpOp::FAbs => a.abs(),
+        FpOp::FNeg => -a,
+        FpOp::FMov => a,
+    }
+}
+
+#[inline]
+fn cond_holds(c: Cond, v: i64) -> bool {
+    match c {
+        Cond::Eq => v == 0,
+        Cond::Ne => v != 0,
+        Cond::Lt => v < 0,
+        Cond::Ge => v >= 0,
+        Cond::Le => v <= 0,
+        Cond::Gt => v > 0,
+    }
+}
+
+/// Execute one instruction functionally; advance `st.pc`; return the
+/// effect for timing accounting.
+pub fn step(st: &mut ArchState, mem: &mut MemSystem, inst: &Inst) -> StepEffect {
+    let next = st.pc + 1;
+    let mut effect = StepEffect::Normal;
+    match *inst {
+        Inst::Opi { op, rd, ra, imm } => {
+            let v = int_op(op, st.r(ra), imm as i64 as u64);
+            st.set_r(rd, v);
+        }
+        Inst::Opr { op, rd, ra, rb } => {
+            let v = int_op(op, st.r(ra), st.r(rb));
+            st.set_r(rd, v);
+        }
+        Inst::Ldi { rd, imm } => st.set_r(rd, imm as u64),
+        Inst::Ld { w, rd, base, disp } => {
+            let sysva = st.r(base).wrapping_add(disp as i64 as u64);
+            if w.is_float() {
+                let v = if w == MemWidth::F32 {
+                    mem.read_f32(sysva) as f64
+                } else {
+                    mem.read_f64(sysva)
+                };
+                st.set_f(rd, v);
+            } else {
+                st.set_r(rd, mem.read(w, sysva));
+            }
+            effect = StepEffect::Mem { sysva, write: false, width: w, shared: false, local: true };
+        }
+        Inst::St { w, rs, base, disp } => {
+            let sysva = st.r(base).wrapping_add(disp as i64 as u64);
+            if w.is_float() {
+                if w == MemWidth::F32 {
+                    mem.write_f32(sysva, st.f(rs) as f32);
+                } else {
+                    mem.write_f64(sysva, st.f(rs));
+                }
+            } else {
+                mem.write(w, sysva, st.r(rs));
+            }
+            effect = StepEffect::Mem { sysva, write: true, width: w, shared: false, local: true };
+        }
+        Inst::Fop { op, fd, fa, fb } => {
+            let v = fp_op(op, st.f(fa), st.f(fb));
+            st.set_f(fd, v);
+        }
+        Inst::FCmpLt { rd, fa, fb } => {
+            st.set_r(rd, (st.f(fa) < st.f(fb)) as u64);
+        }
+        Inst::CvtIF { fd, ra } => st.set_f(fd, st.r(ra) as i64 as f64),
+        Inst::CvtFI { rd, fa } => st.set_r(rd, st.f(fa) as i64 as u64),
+        Inst::Br { cond, ra, target } => {
+            let taken = cond_holds(cond, st.r(ra) as i64);
+            st.pc = if taken { target } else { next };
+            return StepEffect::Branch { taken };
+        }
+        Inst::Jmp { target } => {
+            st.pc = target;
+            return StepEffect::Branch { taken: true };
+        }
+        Inst::PgasLd { w, rd, rptr, disp } => {
+            let p = unpack(st.r(rptr));
+            let sysva = (p.translate(&mem.base_table) as i64 + disp as i64) as u64;
+            if w.is_float() {
+                let v = if w == MemWidth::F32 {
+                    mem.read_f32(sysva) as f64
+                } else {
+                    mem.read_f64(sysva)
+                };
+                st.set_f(rd, v);
+            } else {
+                st.set_r(rd, mem.read(w, sysva));
+            }
+            effect = StepEffect::Mem {
+                sysva,
+                write: false,
+                width: w,
+                shared: true,
+                local: p.thread == st.mythread,
+            };
+        }
+        Inst::PgasSt { w, rs, rptr, disp } => {
+            let p = unpack(st.r(rptr));
+            let sysva = (p.translate(&mem.base_table) as i64 + disp as i64) as u64;
+            if w.is_float() {
+                if w == MemWidth::F32 {
+                    mem.write_f32(sysva, st.f(rs) as f32);
+                } else {
+                    mem.write_f64(sysva, st.f(rs));
+                }
+            } else {
+                mem.write(w, sysva, st.r(rs));
+            }
+            effect = StepEffect::Mem {
+                sysva,
+                write: true,
+                width: w,
+                shared: true,
+                local: p.thread == st.mythread,
+            };
+        }
+        Inst::PgasIncI { rd, ra, l2es, l2bs, l2inc } => {
+            let p = unpack(st.r(ra));
+            let q = increment_pow2(&p, 1u64 << l2inc, l2bs as u32, l2es as u32, st.l2_threads);
+            st.cc_loc = sptr::locality(q.thread, st.mythread, &st.topo) as u8;
+            st.set_r(rd, pack(&q));
+        }
+        Inst::PgasIncR { rd, ra, rb, l2es, l2bs } => {
+            let p = unpack(st.r(ra));
+            let q = increment_pow2(&p, st.r(rb), l2bs as u32, l2es as u32, st.l2_threads);
+            st.cc_loc = sptr::locality(q.thread, st.mythread, &st.topo) as u8;
+            st.set_r(rd, pack(&q));
+        }
+        Inst::PgasSetThreads { ra } => {
+            let t = st.r(ra) as u32;
+            assert!(t.is_power_of_two(), "threads register must be pow2 for hw");
+            st.threads_reg = t;
+            st.l2_threads = log2_floor(t as u64);
+        }
+        Inst::PgasSetBase { rthread, raddr } => {
+            let t = st.r(rthread) as u32;
+            let addr = st.r(raddr);
+            let mut bases = mem.base_table.bases().to_vec();
+            if (t as usize) < bases.len() {
+                bases[t as usize] = addr;
+                mem.base_table = crate::sptr::BaseTable::new(bases);
+            }
+        }
+        Inst::PgasBrLoc { mask, target } => {
+            let taken = mask & (1 << st.cc_loc) != 0;
+            st.pc = if taken { target } else { next };
+            return StepEffect::Branch { taken };
+        }
+        Inst::Barrier => {
+            st.pc = next;
+            return StepEffect::Barrier;
+        }
+        Inst::Halt => {
+            st.halted = true;
+            return StepEffect::Halt;
+        }
+        Inst::Nop => {}
+    }
+    st.pc = next;
+    effect
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::Program;
+    use crate::mem::seg_base;
+    use crate::sptr::{ArrayLayout, SharedPtr};
+
+    fn run_to_halt(prog: &Program, st: &mut ArchState, mem: &mut MemSystem) {
+        let mut fuel = 100_000;
+        while !st.halted {
+            let inst = prog.insts[st.pc as usize];
+            step(st, mem, &inst);
+            fuel -= 1;
+            assert!(fuel > 0, "runaway program");
+        }
+    }
+
+    #[test]
+    fn zero_register_is_hardwired() {
+        let mut st = ArchState::new(0, 4);
+        st.set_r(ZERO, 99);
+        assert_eq!(st.r(ZERO), 0);
+    }
+
+    #[test]
+    fn arithmetic_and_branching_loop() {
+        // sum 0..10 via a loop
+        let prog = Program::new(
+            "sum",
+            vec![
+                Inst::Ldi { rd: 0, imm: 0 },  // acc
+                Inst::Ldi { rd: 1, imm: 10 }, // n
+                // loop:
+                Inst::Opr { op: IntOp::Add, rd: 0, ra: 0, rb: 1 }, // 2
+                Inst::Opi { op: IntOp::Add, rd: 1, ra: 1, imm: -1 },
+                Inst::Br { cond: Cond::Gt, ra: 1, target: 2 },
+                Inst::Halt,
+            ],
+        );
+        let mut st = ArchState::new(0, 1);
+        let mut mem = MemSystem::new(1);
+        run_to_halt(&prog, &mut st, &mut mem);
+        assert_eq!(st.r(0), 55);
+    }
+
+    #[test]
+    fn pgas_increment_and_load_walk_shared_array() {
+        // shared [4] u64 A[32] over 4 threads; A[i] = i preloaded into
+        // memory; core 0 sums all 32 elements via pgas_inci + pgas_ldq.
+        let layout = ArrayLayout::new(4, 8, 4);
+        let mut mem = MemSystem::new(4);
+        for i in 0..32u64 {
+            let p = SharedPtr::for_index(&layout, 0, i);
+            let sysva = p.translate(&mem.base_table);
+            mem.write(MemWidth::U64, sysva, i);
+        }
+        let prog = Program::new(
+            "walk",
+            vec![
+                Inst::Ldi { rd: 0, imm: 0 },  // acc
+                Inst::Ldi { rd: 1, imm: 0 },  // packed ptr to A[0]
+                Inst::Ldi { rd: 2, imm: 32 }, // counter
+                // loop:
+                Inst::PgasLd { w: MemWidth::U64, rd: 3, rptr: 1, disp: 0 }, // 3
+                Inst::Opr { op: IntOp::Add, rd: 0, ra: 0, rb: 3 },
+                Inst::PgasIncI { rd: 1, ra: 1, l2es: 3, l2bs: 2, l2inc: 0 },
+                Inst::Opi { op: IntOp::Add, rd: 2, ra: 2, imm: -1 },
+                Inst::Br { cond: Cond::Gt, ra: 2, target: 3 },
+                Inst::Halt,
+            ],
+        );
+        let mut st = ArchState::new(0, 4);
+        run_to_halt(&prog, &mut st, &mut mem);
+        assert_eq!(st.r(0), (0..32).sum::<u64>());
+    }
+
+    #[test]
+    fn pgas_store_respects_affinity() {
+        // store 7 at A[5] (thread 1) through a shared pointer from core 0
+        let layout = ArrayLayout::new(4, 8, 4);
+        let mut mem = MemSystem::new(4);
+        let p = SharedPtr::for_index(&layout, 0, 5);
+        let prog = Program::new(
+            "st",
+            vec![
+                Inst::Ldi { rd: 1, imm: pack(&p) as i64 },
+                Inst::Ldi { rd: 2, imm: 7 },
+                Inst::PgasSt { w: MemWidth::U64, rs: 2, rptr: 1, disp: 0 },
+                Inst::Halt,
+            ],
+        );
+        let mut st = ArchState::new(0, 4);
+        run_to_halt(&prog, &mut st, &mut mem);
+        let sysva = p.translate(&mem.base_table);
+        assert_eq!(mem.read(MemWidth::U64, sysva), 7);
+        assert_eq!(sysva >> 32, 2, "element 5 lives on thread 1");
+    }
+
+    #[test]
+    fn brloc_branches_on_locality() {
+        // increment from A[3] (thread 0, local) to A[4] (thread 1):
+        // cc becomes non-local; brloc mask=0b1110 must take.
+        let layout = ArrayLayout::new(4, 8, 4);
+        let p = SharedPtr::for_index(&layout, 0, 3);
+        let prog = Program::new(
+            "loc",
+            vec![
+                Inst::Ldi { rd: 1, imm: pack(&p) as i64 },
+                Inst::PgasIncI { rd: 1, ra: 1, l2es: 3, l2bs: 2, l2inc: 0 },
+                Inst::PgasBrLoc { mask: 0b1110, target: 4 },
+                Inst::Ldi { rd: 5, imm: 111 }, // skipped when taken
+                Inst::Halt,
+            ],
+        );
+        let mut st = ArchState::new(0, 4);
+        let mut mem = MemSystem::new(4);
+        run_to_halt(&prog, &mut st, &mut mem);
+        assert_eq!(st.r(5), 0, "branch must skip the ldi");
+        assert_ne!(st.cc_loc, 0);
+    }
+
+    #[test]
+    fn fp_path() {
+        let mut mem = MemSystem::new(1);
+        let a = seg_base(0) + 64;
+        mem.write_f64(a, 2.25);
+        let prog = Program::new(
+            "fp",
+            vec![
+                Inst::Ldi { rd: 1, imm: a as i64 },
+                Inst::Ld { w: MemWidth::F64, rd: 2, base: 1, disp: 0 },
+                Inst::Fop { op: FpOp::FMul, fd: 3, fa: 2, fb: 2 },
+                Inst::St { w: MemWidth::F64, rs: 3, base: 1, disp: 8 },
+                Inst::Halt,
+            ],
+        );
+        let mut st = ArchState::new(0, 1);
+        run_to_halt(&prog, &mut st, &mut mem);
+        assert_eq!(mem.read_f64(a + 8), 2.25 * 2.25);
+    }
+
+    #[test]
+    fn div_by_zero_defined() {
+        assert_eq!(int_op(IntOp::Div, 5, 0), 0);
+        assert_eq!(int_op(IntOp::Rem, 5, 0), 0);
+    }
+}

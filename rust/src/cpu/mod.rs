@@ -1,0 +1,218 @@
+//! CPU models — the three Gem5 models the paper evaluates with:
+//!
+//! * [`atomic`]   — 1 instruction per cycle, no memory timing: the model
+//!   behind Figures 6–10. The HW-vs-software gap here is purely dynamic
+//!   instruction count, exactly as in Gem5's atomic CPU.
+//! * [`timing`]   — in-order issue plus cache-hierarchy and DRAM
+//!   latencies (Figures 11–14 "timing" series).
+//! * [`detailed`] — an out-of-order 7-stage-class core modeled with a
+//!   dependency/functional-unit scheduler over a ROB window (Figures
+//!   11–14 "detailed"/O3 series).
+//!
+//! All three share one *functional* executor ([`exec`]) so architectural
+//! results are identical across models; the models differ only in how
+//! many cycles each dynamic instruction costs.
+
+pub mod atomic;
+pub mod detailed;
+pub mod exec;
+pub mod timing;
+
+pub use atomic::AtomicCpu;
+pub use detailed::{DetailedCfg, DetailedCpu};
+pub use exec::{ArchState, StepEffect};
+pub use timing::{HierLatency, TimingCpu};
+
+use crate::cache::{CacheCfg, Directory, SetAssocCache};
+use crate::isa::Program;
+use crate::mem::{MemSystem, Tlb};
+
+/// Which CPU model to simulate (CLI / config selectable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CpuModel {
+    Atomic,
+    Timing,
+    Detailed,
+}
+
+impl CpuModel {
+    pub const ALL: [CpuModel; 3] =
+        [CpuModel::Atomic, CpuModel::Timing, CpuModel::Detailed];
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "atomic" => Some(CpuModel::Atomic),
+            "timing" => Some(CpuModel::Timing),
+            "detailed" | "o3" => Some(CpuModel::Detailed),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CpuModel::Atomic => "atomic",
+            CpuModel::Timing => "timing",
+            CpuModel::Detailed => "detailed",
+        }
+    }
+}
+
+impl std::fmt::Display for CpuModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Why a core stopped running its quantum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StopReason {
+    /// Hit a `barrier` instruction (consumed; core must rendezvous).
+    Barrier,
+    /// Executed `halt`.
+    Halted,
+    /// Ran out of quantum budget.
+    QuantumExpired,
+}
+
+/// Per-core execution statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct CoreStats {
+    pub instructions: u64,
+    pub cycles: u64,
+    pub mem_reads: u64,
+    pub mem_writes: u64,
+    pub pgas_incs: u64,
+    pub pgas_mems: u64,
+    pub local_shared_accesses: u64,
+    pub remote_shared_accesses: u64,
+    pub branches: u64,
+    pub barriers: u64,
+}
+
+impl CoreStats {
+    pub fn merge(&mut self, o: &CoreStats) {
+        self.instructions += o.instructions;
+        self.cycles += o.cycles;
+        self.mem_reads += o.mem_reads;
+        self.mem_writes += o.mem_writes;
+        self.pgas_incs += o.pgas_incs;
+        self.pgas_mems += o.pgas_mems;
+        self.local_shared_accesses += o.local_shared_accesses;
+        self.remote_shared_accesses += o.remote_shared_accesses;
+        self.branches += o.branches;
+        self.barriers += o.barriers;
+    }
+
+    pub fn ipc(&self) -> f64 {
+        if self.cycles == 0 {
+            0.0
+        } else {
+            self.instructions as f64 / self.cycles as f64
+        }
+    }
+}
+
+/// The memory-hierarchy level shared by all cores: per-core L1s (placed
+/// here so the directory can invalidate across cores), the single shared
+/// L2, the MESI-lite directory, TLBs, and the per-quantum bus counters
+/// the machine-level contention model reads.
+pub struct SharedLevel {
+    pub l1d: Vec<SetAssocCache>,
+    pub l1i: Vec<SetAssocCache>,
+    pub tlb: Vec<Tlb>,
+    pub l2: SetAssocCache,
+    pub dir: Directory,
+    pub lat: HierLatency,
+    /// L2/bus transactions issued by each core in the current quantum.
+    pub quantum_l2: Vec<u64>,
+}
+
+impl SharedLevel {
+    pub fn new(cores: usize, lat: HierLatency) -> Self {
+        Self {
+            l1d: (0..cores).map(|_| SetAssocCache::new(CacheCfg::l1_32k())).collect(),
+            l1i: (0..cores).map(|_| SetAssocCache::new(CacheCfg::l1_32k())).collect(),
+            tlb: (0..cores).map(|_| Tlb::alpha_dtb()).collect(),
+            l2: SetAssocCache::new(CacheCfg::l2_4m()),
+            dir: Directory::default(),
+            lat,
+            quantum_l2: vec![0; cores],
+        }
+    }
+
+    /// Data access by `core`; returns the hierarchy latency in cycles.
+    /// Handles directory coherence (a write invalidates other L1 copies).
+    pub fn access(&mut self, core: usize, sysva: u64, write: bool) -> u64 {
+        let line = sysva & !(self.lat.line - 1);
+        let mut cycles = 0;
+        if !self.tlb[core].access(sysva) {
+            cycles += self.lat.tlb_miss;
+        }
+        if write {
+            let victims = self.dir.on_write(line, core);
+            let mut v = victims;
+            while v != 0 {
+                let c = v.trailing_zeros() as usize;
+                self.l1d[c].invalidate(line);
+                v &= v - 1;
+            }
+        } else {
+            self.dir.on_read(line, core);
+        }
+        if self.l1d[core].access(line) {
+            cycles + self.lat.l1
+        } else {
+            self.quantum_l2[core] += 1;
+            if self.l2.access(line) {
+                cycles + self.lat.l1 + self.lat.l2
+            } else {
+                cycles + self.lat.l1 + self.lat.l2 + self.lat.mem
+            }
+        }
+    }
+
+    /// Instruction fetch of the line holding `pc_addr`.
+    pub fn fetch(&mut self, core: usize, pc_addr: u64) -> u64 {
+        let line = pc_addr & !(self.lat.line - 1);
+        if self.l1i[core].access(line) {
+            0 // overlapped with decode on a hit
+        } else if self.l2.access(line) {
+            self.quantum_l2[core] += 1;
+            self.lat.l2
+        } else {
+            self.quantum_l2[core] += 1;
+            self.lat.l2 + self.lat.mem
+        }
+    }
+
+    /// Take and reset the per-quantum bus counters.
+    pub fn drain_quantum(&mut self) -> Vec<u64> {
+        let out = self.quantum_l2.clone();
+        self.quantum_l2.iter_mut().for_each(|c| *c = 0);
+        out
+    }
+}
+
+/// The common interface of the three CPU models: run until barrier, halt
+/// or quantum expiry; report cycles consumed via `stats().cycles`.
+pub trait Cpu {
+    /// Run up to `max_insts` dynamic instructions.
+    fn run(
+        &mut self,
+        prog: &Program,
+        mem: &mut MemSystem,
+        shared: &mut SharedLevel,
+        max_insts: u64,
+    ) -> StopReason;
+
+    fn state(&self) -> &ArchState;
+    fn state_mut(&mut self) -> &mut ArchState;
+    fn stats(&self) -> &CoreStats;
+    fn stats_mut(&mut self) -> &mut CoreStats;
+
+    /// Account `extra` stall cycles imposed from outside (bus contention
+    /// computed by the machine-level contention model).
+    fn add_stall_cycles(&mut self, extra: u64) {
+        self.stats_mut().cycles += extra;
+    }
+}

@@ -1,0 +1,251 @@
+//! The `timing` CPU model: in-order execution with cache-hierarchy and
+//! DRAM latencies — Gem5's TimingSimpleCPU plus the Classic memory model
+//! (Figures 11–14 "timing" series).
+//!
+//! Every instruction costs its latency-class cycles (multiply and the
+//! non-pipelined divide are charged in full — the ops that dominate the
+//! software Algorithm 1); loads and stores additionally pay L1/L2/DRAM
+//! time, and instruction fetch pays L1I misses at line granularity.
+
+use super::{ArchState, CoreStats, Cpu, SharedLevel, StopReason};
+use crate::cpu::exec::{step, StepEffect};
+use crate::isa::latency::LatencyModel;
+use crate::isa::{Inst, Program};
+use crate::mem::MemSystem;
+
+/// Hierarchy latencies in core cycles at 2 GHz.
+#[derive(Clone, Copy, Debug)]
+pub struct HierLatency {
+    pub line: u64,
+    /// L1 hit.
+    pub l1: u64,
+    /// Additional cycles for an L2 hit.
+    pub l2: u64,
+    /// Additional cycles for DRAM.
+    pub mem: u64,
+    /// TLB refill penalty.
+    pub tlb_miss: u64,
+    /// Shared-bus occupancy per L2 transaction (contention model).
+    pub bus_per_txn: u64,
+}
+
+impl Default for HierLatency {
+    fn default() -> Self {
+        Self { line: 64, l1: 2, l2: 14, mem: 110, tlb_miss: 30, bus_per_txn: 8 }
+    }
+}
+
+/// In-order timing core.
+pub struct TimingCpu {
+    state: ArchState,
+    stats: CoreStats,
+    lat: LatencyModel,
+    core: usize,
+    /// Last instruction-fetch line (fetch charged on line crossings).
+    last_fetch_line: u64,
+}
+
+impl TimingCpu {
+    pub fn new(mythread: u32, numthreads: u32) -> Self {
+        Self {
+            state: ArchState::new(mythread, numthreads),
+            stats: CoreStats::default(),
+            lat: LatencyModel::default(),
+            core: mythread as usize,
+            last_fetch_line: u64::MAX,
+        }
+    }
+
+    /// Simulated code addresses: place the program at sysva 0 of the
+    /// core's own segment-page for i-cache purposes (4 bytes/inst).
+    #[inline]
+    fn fetch_addr(&self, pc: u32) -> u64 {
+        crate::mem::seg_base(self.state.mythread) + 0x4000_0000 + (pc as u64) * 4
+    }
+}
+
+impl Cpu for TimingCpu {
+    fn run(
+        &mut self,
+        prog: &Program,
+        mem: &mut MemSystem,
+        shared: &mut SharedLevel,
+        max_insts: u64,
+    ) -> StopReason {
+        let mut budget = max_insts;
+        while budget > 0 {
+            if self.state.halted {
+                return StopReason::Halted;
+            }
+            let pc = self.state.pc;
+            let inst = prog.insts[pc as usize];
+
+            // instruction fetch at line granularity
+            let faddr = self.fetch_addr(pc);
+            let fline = faddr & !(shared.lat.line - 1);
+            if fline != self.last_fetch_line {
+                self.stats.cycles += shared.fetch(self.core, faddr);
+                self.last_fetch_line = fline;
+            }
+
+            let effect = step(&mut self.state, mem, &inst);
+            self.stats.instructions += 1;
+            budget -= 1;
+            let cost = self.lat.cost(&inst);
+            // The PGAS increment unit is fully pipelined (1/cycle issue,
+            // Fig. 5) and the 7-stage in-order pipe forwards its result;
+            // charge issue occupancy, not the 2-cycle result latency
+            // (which only a back-to-back dependent use would expose).
+            let cycles = if matches!(inst, Inst::PgasIncI { .. } | Inst::PgasIncR { .. })
+            {
+                cost.init_interval
+            } else {
+                cost.latency
+            };
+            self.stats.cycles += cycles as u64;
+
+            match effect {
+                StepEffect::Mem { sysva, write, shared: is_shared, local, .. } => {
+                    self.stats.cycles += shared.access(self.core, sysva, write);
+                    if write {
+                        self.stats.mem_writes += 1;
+                    } else {
+                        self.stats.mem_reads += 1;
+                    }
+                    if is_shared {
+                        if inst.is_pgas() {
+                            self.stats.pgas_mems += 1;
+                        }
+                        if local {
+                            self.stats.local_shared_accesses += 1;
+                        } else {
+                            self.stats.remote_shared_accesses += 1;
+                        }
+                    }
+                }
+                StepEffect::Branch { taken } => {
+                    self.stats.branches += 1;
+                    if taken {
+                        // redirect bubble on the 7-stage in-order pipe
+                        self.stats.cycles += 2;
+                    }
+                }
+                StepEffect::Barrier => {
+                    self.stats.barriers += 1;
+                    return StopReason::Barrier;
+                }
+                StepEffect::Halt => return StopReason::Halted,
+                StepEffect::Normal => {
+                    if matches!(inst, Inst::PgasIncI { .. } | Inst::PgasIncR { .. }) {
+                        self.stats.pgas_incs += 1;
+                    }
+                }
+            }
+        }
+        StopReason::QuantumExpired
+    }
+
+    fn state(&self) -> &ArchState {
+        &self.state
+    }
+
+    fn state_mut(&mut self) -> &mut ArchState {
+        &mut self.state
+    }
+
+    fn stats(&self) -> &CoreStats {
+        &self.stats
+    }
+
+    fn stats_mut(&mut self) -> &mut CoreStats {
+        &mut self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::{IntOp, MemWidth};
+    use crate::mem::seg_base;
+
+    fn shared1() -> SharedLevel {
+        SharedLevel::new(1, HierLatency::default())
+    }
+
+    #[test]
+    fn divide_costs_more_than_add() {
+        let mk = |op| {
+            Program::new(
+                "p",
+                vec![
+                    Inst::Ldi { rd: 1, imm: 100 },
+                    Inst::Ldi { rd: 2, imm: 7 },
+                    Inst::Opr { op, rd: 3, ra: 1, rb: 2 },
+                    Inst::Halt,
+                ],
+            )
+        };
+        let run = |prog: &Program| {
+            let mut cpu = TimingCpu::new(0, 1);
+            let mut mem = MemSystem::new(1);
+            cpu.run(prog, &mut mem, &mut shared1(), u64::MAX);
+            cpu.stats().cycles
+        };
+        let add = run(&mk(IntOp::Add));
+        let div = run(&mk(IntOp::Div));
+        assert!(div >= add + 19, "div {div} vs add {add}");
+    }
+
+    #[test]
+    fn repeated_loads_hit_in_l1() {
+        let a = seg_base(0) + 256;
+        let prog = Program::new(
+            "ld2",
+            vec![
+                Inst::Ldi { rd: 1, imm: a as i64 },
+                Inst::Ld { w: MemWidth::U64, rd: 2, base: 1, disp: 0 },
+                Inst::Ld { w: MemWidth::U64, rd: 3, base: 1, disp: 0 },
+                Inst::Halt,
+            ],
+        );
+        let mut cpu = TimingCpu::new(0, 1);
+        let mut mem = MemSystem::new(1);
+        let mut sh = shared1();
+        cpu.run(&prog, &mut mem, &mut sh, u64::MAX);
+        assert_eq!(sh.l1d[0].stats.misses, 1);
+        assert_eq!(sh.l1d[0].stats.hits, 1);
+    }
+
+    #[test]
+    fn pgas_load_costs_like_normal_load() {
+        // Same line accessed: first by a pgas_ld, then normal ld — both
+        // should traverse the same hierarchy path.
+        use crate::sptr::{pack, ArrayLayout, SharedPtr};
+        let layout = ArrayLayout::new(4, 8, 1);
+        // element 2 so both programs materialize wide immediates
+        let p = SharedPtr::for_index(&layout, 0, 2);
+        let prog_pgas = Program::new(
+            "pg",
+            vec![
+                Inst::Ldi { rd: 1, imm: pack(&p) as i64 },
+                Inst::PgasLd { w: MemWidth::U64, rd: 2, rptr: 1, disp: 0 },
+                Inst::Halt,
+            ],
+        );
+        let prog_norm = Program::new(
+            "nm",
+            vec![
+                Inst::Ldi { rd: 1, imm: (seg_base(0) + 16) as i64 },
+                Inst::Ld { w: MemWidth::U64, rd: 2, base: 1, disp: 0 },
+                Inst::Halt,
+            ],
+        );
+        let run = |prog: &Program| {
+            let mut cpu = TimingCpu::new(0, 1);
+            let mut mem = MemSystem::new(1);
+            cpu.run(prog, &mut mem, &mut shared1(), u64::MAX);
+            cpu.stats().cycles
+        };
+        assert_eq!(run(&prog_pgas), run(&prog_norm));
+    }
+}

@@ -1,0 +1,152 @@
+//! Per-instruction latency classes for the timing models.
+//!
+//! Values are 21264-class (the Gem5 Alpha core the paper simulates):
+//! pipelined 1-cycle ALU, 7-cycle pipelined multiply, ~20-cycle
+//! *non-pipelined* integer divide (the op that makes the software
+//! Algorithm 1 expensive when blocksize/threads are not compile-time
+//! powers of two), 4-cycle pipelined FP, 12/15-cycle FP divide/sqrt.
+//!
+//! The PGAS increment is the paper's 2-stage pipelined unit: 1-cycle
+//! issue (throughput 1/cycle), 2-cycle result latency for dependent uses.
+//! PGAS loads/stores cost the same as ordinary loads/stores ("performed
+//! as fast as the normal SPARC load and store instructions").
+
+use super::{FpOp, Inst, IntOp};
+
+/// Functional unit kinds for the detailed (OoO) model's port limits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FuKind {
+    IntAlu,
+    IntMulDiv,
+    FpAlu,
+    FpMulDiv,
+    MemPort,
+    /// The new PGAS address unit (one per core in the prototype).
+    PgasUnit,
+    /// No FU needed (control, pseudo-ops resolved at fetch).
+    None,
+}
+
+/// Execution cost of one instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cost {
+    /// Result latency in cycles (producer -> dependent consumer).
+    pub latency: u32,
+    /// Issue-to-issue interval on the FU (1 = fully pipelined).
+    pub init_interval: u32,
+    /// Which FU executes it.
+    pub fu: FuKind,
+}
+
+const fn cost(latency: u32, init_interval: u32, fu: FuKind) -> Cost {
+    Cost { latency, init_interval, fu }
+}
+
+/// Tunable latency model (defaults are the 21264-class values above).
+#[derive(Clone, Debug)]
+pub struct LatencyModel {
+    pub alu: u32,
+    pub mul: u32,
+    pub div: u32,
+    pub fp: u32,
+    pub fdiv: u32,
+    pub fsqrt: u32,
+    /// PGAS increment dependent-use latency (2-stage pipeline).
+    pub pgas_inc: u32,
+    /// Extra cycles a *software* shared access pays beyond the raw loads
+    /// (none — the cost is in the instruction stream itself).
+    pub ldi_long: u32,
+}
+
+impl Default for LatencyModel {
+    fn default() -> Self {
+        Self {
+            alu: 1,
+            mul: 7,
+            div: 20,
+            fp: 4,
+            fdiv: 12,
+            fsqrt: 15,
+            pgas_inc: 2,
+            ldi_long: 2,
+        }
+    }
+}
+
+impl LatencyModel {
+    /// Cost of `inst`, excluding memory-hierarchy time (added by the
+    /// cache model for loads/stores).
+    pub fn cost(&self, inst: &Inst) -> Cost {
+        match inst {
+            Inst::Opi { op, .. } | Inst::Opr { op, .. } => match op {
+                IntOp::Mul => cost(self.mul, 1, FuKind::IntMulDiv),
+                // divide is non-pipelined on 21264-class cores
+                IntOp::Div | IntOp::Rem => cost(self.div, self.div, FuKind::IntMulDiv),
+                _ => cost(self.alu, 1, FuKind::IntAlu),
+            },
+            Inst::Ldi { imm, .. } => {
+                // wide immediates need an lda/ldah pair
+                if *imm >= -32768 && *imm < 32768 {
+                    cost(self.alu, 1, FuKind::IntAlu)
+                } else {
+                    cost(self.ldi_long, 1, FuKind::IntAlu)
+                }
+            }
+            Inst::Ld { .. } | Inst::St { .. } => cost(1, 1, FuKind::MemPort),
+            Inst::Fop { op, .. } => match op {
+                FpOp::FDiv => cost(self.fdiv, self.fdiv, FuKind::FpMulDiv),
+                FpOp::FSqrt => cost(self.fsqrt, self.fsqrt, FuKind::FpMulDiv),
+                FpOp::FMul => cost(self.fp, 1, FuKind::FpMulDiv),
+                _ => cost(self.fp, 1, FuKind::FpAlu),
+            },
+            Inst::FCmpLt { .. } => cost(self.fp, 1, FuKind::FpAlu),
+            Inst::CvtIF { .. } | Inst::CvtFI { .. } => cost(self.fp, 1, FuKind::FpAlu),
+            Inst::Br { .. } | Inst::Jmp { .. } | Inst::PgasBrLoc { .. } => {
+                cost(1, 1, FuKind::None)
+            }
+            // The contribution: 2-stage pipelined increment, 1/cycle.
+            Inst::PgasIncI { .. } | Inst::PgasIncR { .. } => {
+                cost(self.pgas_inc, 1, FuKind::PgasUnit)
+            }
+            // As fast as normal loads/stores; hierarchy time added on top.
+            Inst::PgasLd { .. } | Inst::PgasSt { .. } => cost(1, 1, FuKind::MemPort),
+            Inst::PgasSetThreads { .. } | Inst::PgasSetBase { .. } => {
+                cost(1, 1, FuKind::PgasUnit)
+            }
+            Inst::Barrier | Inst::Halt | Inst::Nop => cost(1, 1, FuKind::None),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::MemWidth;
+
+    #[test]
+    fn divide_dominates_software_increment() {
+        let m = LatencyModel::default();
+        let div = m.cost(&Inst::Opr { op: IntOp::Div, rd: 0, ra: 1, rb: 2 });
+        let inc = m.cost(&Inst::PgasIncI { rd: 0, ra: 1, l2es: 2, l2bs: 2, l2inc: 0 });
+        assert!(div.latency >= 10 * inc.init_interval);
+        assert_eq!(inc.init_interval, 1, "pipelined unit: 1/cycle");
+        assert_eq!(div.init_interval, div.latency, "div non-pipelined");
+    }
+
+    #[test]
+    fn pgas_mem_costs_match_normal_mem() {
+        let m = LatencyModel::default();
+        let ld = m.cost(&Inst::Ld { w: MemWidth::U64, rd: 0, base: 1, disp: 0 });
+        let pld = m.cost(&Inst::PgasLd { w: MemWidth::U64, rd: 0, rptr: 1, disp: 0 });
+        assert_eq!(ld.latency, pld.latency);
+        assert_eq!(ld.fu, FuKind::MemPort);
+        assert_eq!(pld.fu, FuKind::MemPort);
+    }
+
+    #[test]
+    fn wide_immediates_cost_a_pair() {
+        let m = LatencyModel::default();
+        assert_eq!(m.cost(&Inst::Ldi { rd: 0, imm: 4 }).latency, 1);
+        assert_eq!(m.cost(&Inst::Ldi { rd: 0, imm: 1 << 40 }).latency, 2);
+    }
+}

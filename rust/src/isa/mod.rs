@@ -1,0 +1,473 @@
+//! *SimAlpha*: the simulated 64-bit RISC ISA plus the paper's PGAS
+//! extension (Table 1), with the Figure-3 instruction formats.
+//!
+//! The base ISA is a compact Alpha-21264-flavoured RISC: 32 integer
+//! registers (`r31` reads as zero), 32 FP registers, compare-to-zero
+//! branches, and explicit multiply/divide.  On top of it sit the paper's
+//! new instructions:
+//!
+//! * shared-address loads/stores (6 widths each, short displacement),
+//! * shared-address increment (immediate and register forms),
+//! * the `threads` special register and base-address-LUT initialization,
+//! * branch-on-locality (the SPARC/Leon3 Table-3 coprocessor branch,
+//!   included in SimAlpha so both prototypes share one core ISA).
+//!
+//! Only the extension instructions get binary encodings here
+//! ([`encoding`], Figure 3); the base ISA is executed from its decoded
+//! form — the paper's contribution is the extension, and the base
+//! encoding is irrelevant to every measured result.
+
+pub mod encoding;
+pub mod latency;
+
+use std::fmt;
+
+/// Architectural register index (0..=31). `r31`/`f31` read as zero.
+pub type Reg = u8;
+
+/// The zero register.
+pub const ZERO: Reg = 31;
+
+/// Memory access widths of the Table-1 loads/stores.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MemWidth {
+    /// Load Byte Unsigned (8 bits)
+    U8,
+    /// Load Word Unsigned (16 bits)
+    U16,
+    /// Load Long Unsigned (32 bits)
+    U32,
+    /// Load Quad Unsigned (64 bits)
+    U64,
+    /// Load S_float (32 bits, float) — targets the FP register file
+    F32,
+    /// Load T_float (64 bits, double) — targets the FP register file
+    F64,
+}
+
+impl MemWidth {
+    pub fn bytes(&self) -> u64 {
+        match self {
+            MemWidth::U8 => 1,
+            MemWidth::U16 => 2,
+            MemWidth::U32 => 4,
+            MemWidth::U64 | MemWidth::F64 => 8,
+            MemWidth::F32 => 4,
+        }
+    }
+
+    pub fn is_float(&self) -> bool {
+        matches!(self, MemWidth::F32 | MemWidth::F64)
+    }
+
+    pub const ALL: [MemWidth; 6] = [
+        MemWidth::U8,
+        MemWidth::U16,
+        MemWidth::U32,
+        MemWidth::U64,
+        MemWidth::F32,
+        MemWidth::F64,
+    ];
+}
+
+/// Integer ALU operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum IntOp {
+    Add,
+    Sub,
+    Mul,
+    /// Signed 64-bit divide (multi-cycle, non-pipelined — the expensive
+    /// op in the software Algorithm 1).
+    Div,
+    /// Signed remainder.
+    Rem,
+    And,
+    Or,
+    Xor,
+    Sll,
+    Srl,
+    Sra,
+    /// rd = (ra == rb) ? 1 : 0
+    CmpEq,
+    /// rd = (ra < rb) signed ? 1 : 0
+    CmpLt,
+    /// rd = (ra < rb) unsigned ? 1 : 0
+    CmpLtU,
+    /// rd = (ra <= rb) signed ? 1 : 0
+    CmpLe,
+}
+
+/// Floating-point operations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FpOp {
+    FAdd,
+    FSub,
+    FMul,
+    FDiv,
+    FSqrt,
+    /// fd = max(fa, fb)
+    FMax,
+    /// fd = |fa| (fb ignored)
+    FAbs,
+    /// fd = -fa (fb ignored)
+    FNeg,
+    /// fd = fa (fb ignored)
+    FMov,
+}
+
+/// Branch conditions (compare register to zero, Alpha style).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Cond {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+    Le,
+    Gt,
+}
+
+/// One SimAlpha instruction. Branch targets are resolved instruction
+/// indices (the assembler turns labels into these).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Inst {
+    // ---------------- base integer ----------------
+    /// rd = ra `op` imm
+    Opi { op: IntOp, rd: Reg, ra: Reg, imm: i32 },
+    /// rd = ra `op` rb
+    Opr { op: IntOp, rd: Reg, ra: Reg, rb: Reg },
+    /// rd = imm (64-bit immediate materialization; counts as 1–2 ops in
+    /// the timing models depending on magnitude, like lda/ldah pairs)
+    Ldi { rd: Reg, imm: i64 },
+    /// rd = mem[ra + disp]
+    Ld { w: MemWidth, rd: Reg, base: Reg, disp: i32 },
+    /// mem[ra + disp] = rs
+    St { w: MemWidth, rs: Reg, base: Reg, disp: i32 },
+    // ---------------- base floating point ----------------
+    /// fd = fa `op` fb
+    Fop { op: FpOp, fd: Reg, fa: Reg, fb: Reg },
+    /// rd = (fa < fb) ? 1 : 0  (into the *integer* file, for branching)
+    FCmpLt { rd: Reg, fa: Reg, fb: Reg },
+    /// fd = (double) ra
+    CvtIF { fd: Reg, ra: Reg },
+    /// rd = (int64) fa, truncating
+    CvtFI { rd: Reg, fa: Reg },
+    // ---------------- control ----------------
+    /// if (ra `cond` 0) pc = target
+    Br { cond: Cond, ra: Reg, target: u32 },
+    /// pc = target
+    Jmp { target: u32 },
+    // ---------------- PGAS extension (Table 1) ----------------
+    /// rd = mem[translate(rptr) + disp]  — shared-address load
+    PgasLd { w: MemWidth, rd: Reg, rptr: Reg, disp: i16 },
+    /// mem[translate(rptr) + disp] = rs  — shared-address store.
+    /// Emitted as `volatile` by the prototype compiler (paper 6.1), which
+    /// the detailed model honours as a scheduling fence.
+    PgasSt { w: MemWidth, rs: Reg, rptr: Reg, disp: i16 },
+    /// rd = pgas_inc(ra, 1<<l2inc) with esize=1<<l2es, bsize=1<<l2bs.
+    /// Immediate form: all three parameters are Figure-3 5-bit one-hot
+    /// immediates (stored here as the log2 exponents).
+    PgasIncI { rd: Reg, ra: Reg, l2es: u8, l2bs: u8, l2inc: u8 },
+    /// rd = pgas_inc(ra, rb): register increment form.
+    PgasIncR { rd: Reg, ra: Reg, rb: Reg, l2es: u8, l2bs: u8 },
+    /// threads-special-register = ra (log2 numthreads is derived).
+    PgasSetThreads { ra: Reg },
+    /// base_table[rthread] = raddr
+    PgasSetBase { rthread: Reg, raddr: Reg },
+    /// Branch if the locality condition code of the most recent PGAS
+    /// increment matches any bit of `mask` (Table 3 "Branch on
+    /// locality"; bit i of mask = condition code i).
+    PgasBrLoc { mask: u8, target: u32 },
+    // ---------------- system / pseudo ----------------
+    /// UPC barrier: rendezvous of all cores (runtime service in the
+    /// simulated machine, a syscall in the real prototypes).
+    Barrier,
+    /// End of program for this thread.
+    Halt,
+    Nop,
+}
+
+impl Inst {
+    /// Is this one of the new PGAS instructions?
+    pub fn is_pgas(&self) -> bool {
+        matches!(
+            self,
+            Inst::PgasLd { .. }
+                | Inst::PgasSt { .. }
+                | Inst::PgasIncI { .. }
+                | Inst::PgasIncR { .. }
+                | Inst::PgasSetThreads { .. }
+                | Inst::PgasSetBase { .. }
+                | Inst::PgasBrLoc { .. }
+        )
+    }
+
+    /// Does this instruction access memory?
+    pub fn is_mem(&self) -> bool {
+        matches!(
+            self,
+            Inst::Ld { .. } | Inst::St { .. } | Inst::PgasLd { .. } | Inst::PgasSt { .. }
+        )
+    }
+
+    /// Is this a store?
+    pub fn is_store(&self) -> bool {
+        matches!(self, Inst::St { .. } | Inst::PgasSt { .. })
+    }
+
+    /// Branch/jump?
+    pub fn is_control(&self) -> bool {
+        matches!(
+            self,
+            Inst::Br { .. } | Inst::Jmp { .. } | Inst::PgasBrLoc { .. }
+        )
+    }
+}
+
+impl fmt::Display for Inst {
+    /// Disassembly, one instruction per line, Alpha-flavoured mnemonics.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fn w_suffix(w: &MemWidth) -> &'static str {
+            match w {
+                MemWidth::U8 => "bu",
+                MemWidth::U16 => "wu",
+                MemWidth::U32 => "lu",
+                MemWidth::U64 => "q",
+                MemWidth::F32 => "s",
+                MemWidth::F64 => "t",
+            }
+        }
+        match self {
+            Inst::Opi { op, rd, ra, imm } => {
+                write!(f, "{:?} r{}, r{}, #{}", op, rd, ra, imm)
+            }
+            Inst::Opr { op, rd, ra, rb } => {
+                write!(f, "{:?} r{}, r{}, r{}", op, rd, ra, rb)
+            }
+            Inst::Ldi { rd, imm } => write!(f, "ldi r{}, #{}", rd, imm),
+            Inst::Ld { w, rd, base, disp } => {
+                let file = if w.is_float() { "f" } else { "r" };
+                write!(f, "ld{} {}{}, {}(r{})", w_suffix(w), file, rd, disp, base)
+            }
+            Inst::St { w, rs, base, disp } => {
+                let file = if w.is_float() { "f" } else { "r" };
+                write!(f, "st{} {}{}, {}(r{})", w_suffix(w), file, rs, disp, base)
+            }
+            Inst::Fop { op, fd, fa, fb } => {
+                write!(f, "{:?} f{}, f{}, f{}", op, fd, fa, fb)
+            }
+            Inst::FCmpLt { rd, fa, fb } => {
+                write!(f, "fcmplt r{}, f{}, f{}", rd, fa, fb)
+            }
+            Inst::CvtIF { fd, ra } => write!(f, "cvtif f{}, r{}", fd, ra),
+            Inst::CvtFI { rd, fa } => write!(f, "cvtfi r{}, f{}", rd, fa),
+            Inst::Br { cond, ra, target } => {
+                write!(f, "b{:?} r{}, @{}", cond, ra, target)
+            }
+            Inst::Jmp { target } => write!(f, "jmp @{}", target),
+            Inst::PgasLd { w, rd, rptr, disp } => {
+                let file = if w.is_float() { "f" } else { "r" };
+                write!(f, "pgas_ld{} {}{}, {}(r{})", w_suffix(w), file, rd, disp, rptr)
+            }
+            Inst::PgasSt { w, rs, rptr, disp } => {
+                let file = if w.is_float() { "f" } else { "r" };
+                write!(f, "pgas_st{} {}{}, {}(r{})", w_suffix(w), file, rs, disp, rptr)
+            }
+            Inst::PgasIncI { rd, ra, l2es, l2bs, l2inc } => write!(
+                f,
+                "pgas_inci r{}, r{}, es=1<<{}, bs=1<<{}, inc=1<<{}",
+                rd, ra, l2es, l2bs, l2inc
+            ),
+            Inst::PgasIncR { rd, ra, rb, l2es, l2bs } => write!(
+                f,
+                "pgas_incr r{}, r{}, r{}, es=1<<{}, bs=1<<{}",
+                rd, ra, rb, l2es, l2bs
+            ),
+            Inst::PgasSetThreads { ra } => write!(f, "pgas_setthreads r{}", ra),
+            Inst::PgasSetBase { rthread, raddr } => {
+                write!(f, "pgas_setbase [r{}] = r{}", rthread, raddr)
+            }
+            Inst::PgasBrLoc { mask, target } => {
+                write!(f, "pgas_brloc mask={:#06b}, @{}", mask, target)
+            }
+            Inst::Barrier => write!(f, "barrier"),
+            Inst::Halt => write!(f, "halt"),
+            Inst::Nop => write!(f, "nop"),
+        }
+    }
+}
+
+/// A SimAlpha program: a flat instruction vector; branch targets index
+/// into it. SPMD execution runs the same program on every core.
+#[derive(Clone, Debug, Default)]
+pub struct Program {
+    pub name: String,
+    pub insts: Vec<Inst>,
+}
+
+impl Program {
+    pub fn new(name: &str, insts: Vec<Inst>) -> Self {
+        let p = Self { name: name.to_string(), insts };
+        p.validate().expect("invalid program");
+        p
+    }
+
+    /// Check branch targets and register ranges.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.insts.len() as u32;
+        for (i, inst) in self.insts.iter().enumerate() {
+            let t = match inst {
+                Inst::Br { target, .. }
+                | Inst::Jmp { target }
+                | Inst::PgasBrLoc { target, .. } => Some(*target),
+                _ => None,
+            };
+            if let Some(t) = t {
+                if t >= n {
+                    return Err(format!(
+                        "inst {i} `{inst}` targets {t} out of range {n}"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.insts.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.insts.is_empty()
+    }
+
+    /// Count of PGAS-extension instructions (static), mirroring the
+    /// paper's per-kernel counts ("309 shared address incrementations,
+    /// 236 loads and stores" for CG).
+    pub fn pgas_static_counts(&self) -> PgasCounts {
+        let mut c = PgasCounts::default();
+        for i in &self.insts {
+            match i {
+                Inst::PgasIncI { .. } | Inst::PgasIncR { .. } => c.increments += 1,
+                Inst::PgasLd { .. } | Inst::PgasSt { .. } => c.loads_stores += 1,
+                Inst::PgasBrLoc { .. } => c.branches += 1,
+                Inst::PgasSetThreads { .. } | Inst::PgasSetBase { .. } => c.inits += 1,
+                _ => {}
+            }
+        }
+        c
+    }
+
+    /// Full disassembly listing.
+    pub fn disassemble(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("; program `{}` ({} insts)\n", self.name, self.len()));
+        for (i, inst) in self.insts.iter().enumerate() {
+            out.push_str(&format!("{i:6}:  {inst}\n"));
+        }
+        out
+    }
+}
+
+/// Static PGAS instruction census of a program.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PgasCounts {
+    pub increments: u32,
+    pub loads_stores: u32,
+    pub branches: u32,
+    pub inits: u32,
+}
+
+/// Render the paper's Table 1 (the Alpha ISA extension listing).
+pub fn table1() -> String {
+    let mut s = String::new();
+    s.push_str("Table 1: Instructions Added to the Alpha ISA (SimAlpha)\n");
+    s.push_str("  Shared Address Loads\n");
+    for (w, n, b) in [
+        ("bu", "Byte Unsigned", 8),
+        ("wu", "Word Unsigned", 16),
+        ("lu", "Long Unsigned", 32),
+        ("q", "Quad Unsigned", 64),
+        ("s", "S_float (float)", 32),
+        ("t", "T_float (double)", 64),
+    ] {
+        s.push_str(&format!("    pgas_ld{w:<3} Load {n} ({b} bits)\n"));
+    }
+    s.push_str("  Shared Address Stores\n");
+    for (w, n, b) in [
+        ("bu", "Byte Unsigned", 8),
+        ("wu", "Word Unsigned", 16),
+        ("lu", "Long Unsigned", 32),
+        ("q", "Quad Unsigned", 64),
+        ("s", "S_float (float)", 32),
+        ("t", "T_float (double)", 64),
+    ] {
+        s.push_str(&format!("    pgas_st{w:<3} Store {n} ({b} bits)\n"));
+    }
+    s.push_str("  Shared Address Incrementations\n");
+    s.push_str("    pgas_inci  Address increment, immediate\n");
+    s.push_str("    pgas_incr  Address increment, register\n");
+    s.push_str("  Initialization\n");
+    s.push_str("    pgas_setthreads  Initialize the 'threads' register\n");
+    s.push_str("    pgas_setbase     Set the base address look-up table\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn program_validation_rejects_bad_targets() {
+        let p = Program {
+            name: "bad".into(),
+            insts: vec![Inst::Jmp { target: 5 }],
+        };
+        assert!(p.validate().is_err());
+        let ok = Program::new("ok", vec![Inst::Nop, Inst::Halt]);
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn pgas_census() {
+        let p = Program::new(
+            "c",
+            vec![
+                Inst::PgasIncI { rd: 0, ra: 0, l2es: 2, l2bs: 2, l2inc: 0 },
+                Inst::PgasLd { w: MemWidth::U32, rd: 1, rptr: 0, disp: 0 },
+                Inst::PgasSt { w: MemWidth::U32, rs: 1, rptr: 0, disp: 0 },
+                Inst::Halt,
+            ],
+        );
+        let c = p.pgas_static_counts();
+        assert_eq!(c.increments, 1);
+        assert_eq!(c.loads_stores, 2);
+    }
+
+    #[test]
+    fn disassembly_is_stable() {
+        let i = Inst::PgasIncI { rd: 3, ra: 4, l2es: 2, l2bs: 5, l2inc: 0 };
+        assert_eq!(
+            i.to_string(),
+            "pgas_inci r3, r4, es=1<<2, bs=1<<5, inc=1<<0"
+        );
+        assert!(Inst::Barrier.to_string().contains("barrier"));
+    }
+
+    #[test]
+    fn table1_lists_all_sixteen_plus_inits() {
+        let t = table1();
+        assert_eq!(t.matches("pgas_ld").count(), 6);
+        assert_eq!(t.matches("pgas_st").count(), 6);
+        assert!(t.contains("pgas_inci"));
+        assert!(t.contains("pgas_setthreads"));
+    }
+
+    #[test]
+    fn classifiers() {
+        let ld = Inst::PgasLd { w: MemWidth::F64, rd: 0, rptr: 1, disp: 8 };
+        assert!(ld.is_pgas() && ld.is_mem() && !ld.is_store());
+        let st = Inst::St { w: MemWidth::U8, rs: 0, base: 1, disp: 0 };
+        assert!(st.is_store() && !st.is_pgas());
+        assert!(Inst::Jmp { target: 0 }.is_control());
+    }
+}

@@ -1,0 +1,414 @@
+//! The two FPGA microbenchmarks of Section 6.2: vector addition
+//! (Figure 15) and matrix multiplication (Figure 16), in the exact
+//! compilation variants the paper measures.
+//!
+//! * Vector addition: *dynamic* (unoptimized, run-time THREADS — the
+//!   compiler cannot strength-reduce the division in Algorithm 1),
+//!   *static* (compile-time THREADS — divisions become shifts, ~5×
+//!   faster), *privatized* (~16× over dynamic), and *hw* — which matches
+//!   privatized **without** needing static compilation: the `threads`
+//!   special register is set at run time, so one executable serves any
+//!   thread count (the paper's productivity point).
+//! * Matrix multiplication: *static*, *privatization 1* (A and C rows
+//!   privatized), *privatization 2* (the non-standard-extension variant
+//!   that also reaches B through raw per-thread base pointers), and
+//!   *hw*, which matches the fully privatized version.
+//!
+//! The Leon3 prototype's HW paths were partly hand-written assembly
+//! (no GCC volatile-asm reload issue), so these compile with
+//! `volatile_stores: false`.
+
+use super::{Leon3Machine, Leon3Result};
+use crate::compiler::{compile, CompileOpts, IrBuilder, Lowering, Val};
+use crate::isa::{IntOp, MemWidth};
+use crate::upc::UpcRuntime;
+
+/// Figure 15 variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum VecAddVariant {
+    /// Unoptimized, dynamic THREADS (divisions in Algorithm 1).
+    Dynamic,
+    /// Unoptimized, static THREADS (shifts in Algorithm 1).
+    Static,
+    /// Manually privatized.
+    Privatized,
+    /// PGAS hardware (dynamic THREADS — no static compilation needed).
+    Hw,
+}
+
+impl VecAddVariant {
+    pub const ALL: [VecAddVariant; 4] = [
+        VecAddVariant::Dynamic,
+        VecAddVariant::Static,
+        VecAddVariant::Privatized,
+        VecAddVariant::Hw,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            VecAddVariant::Dynamic => "dynamic",
+            VecAddVariant::Static => "static",
+            VecAddVariant::Privatized => "privatized",
+            VecAddVariant::Hw => "hw",
+        }
+    }
+}
+
+/// Figure 16 variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MatmulVariant {
+    /// Static compilation, all accesses through shared pointers.
+    Static,
+    /// A and C privatized; B through shared pointers.
+    Priv1,
+    /// All three matrices through private pointers (the non-standard
+    /// `upc_cast`-style extension).
+    Priv2,
+    /// PGAS hardware.
+    Hw,
+}
+
+impl MatmulVariant {
+    pub const ALL: [MatmulVariant; 4] = [
+        MatmulVariant::Static,
+        MatmulVariant::Priv1,
+        MatmulVariant::Priv2,
+        MatmulVariant::Hw,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            MatmulVariant::Static => "static",
+            MatmulVariant::Priv1 => "privatization 1",
+            MatmulVariant::Priv2 => "privatization 2 (ext)",
+            MatmulVariant::Hw => "hw",
+        }
+    }
+}
+
+fn leon3_opts(lowering: Lowering, static_threads: bool, threads: u32) -> CompileOpts {
+    CompileOpts {
+        lowering,
+        static_threads,
+        numthreads: threads,
+        volatile_stores: false, // hand-written assembly on the board
+    }
+}
+
+/// Run `c[i] = a[i] + b[i]` over cyclic arrays of `n` u32 elements.
+pub fn run_vecadd(threads: u32, variant: VecAddVariant, n: u64) -> Leon3Result {
+    assert!(n % threads as u64 == 0);
+    let per = n / threads as u64;
+    let mut rt = UpcRuntime::new(threads);
+    let a = rt.alloc_shared("va_a", 1, 4, n);
+    let bb = rt.alloc_shared("va_b", 1, 4, n);
+    let c = rt.alloc_shared("va_c", 1, 4, n);
+
+    let mut b = IrBuilder::new(&mut rt);
+    let myt = b.mythread();
+    match variant {
+        VecAddVariant::Dynamic | VecAddVariant::Static | VecAddVariant::Hw => {
+            // upc_forall(i; i<n; i++; i%THREADS==MYTHREAD):
+            // walk three shared pointers with stride THREADS
+            let pa = b.sptr_init(a, Val::R(myt));
+            let pb = b.sptr_init(bb, Val::R(myt));
+            let pc = b.sptr_init(c, Val::R(myt));
+            b.for_range(Val::I(0), Val::I(per as i64), 1, |b, _| {
+                let (x, y) = (b.it(), b.it());
+                b.sptr_ld(MemWidth::U32, x, pa, 0);
+                b.sptr_ld(MemWidth::U32, y, pb, 0);
+                b.bin(IntOp::Add, x, x, Val::R(y));
+                b.sptr_st(MemWidth::U32, x, pc, 0);
+                b.free_i(y);
+                b.free_i(x);
+                b.sptr_inc(pa, a, Val::I(threads as i64));
+                b.sptr_inc(pb, bb, Val::I(threads as i64));
+                b.sptr_inc(pc, c, Val::I(threads as i64));
+            });
+            b.free_i(pc);
+            b.free_i(pb);
+            b.free_i(pa);
+        }
+        VecAddVariant::Privatized => {
+            // a thread's cyclic elements are locally contiguous
+            let ca = b.local_addr(a, Val::I(0));
+            let cb = b.local_addr(bb, Val::I(0));
+            let cc = b.local_addr(c, Val::I(0));
+            b.for_range(Val::I(0), Val::I(per as i64), 1, |b, _| {
+                let (x, y) = (b.it(), b.it());
+                b.ld(MemWidth::U32, x, ca, 0);
+                b.ld(MemWidth::U32, y, cb, 0);
+                b.bin(IntOp::Add, x, x, Val::R(y));
+                b.st(MemWidth::U32, x, cc, 0);
+                b.free_i(y);
+                b.free_i(x);
+                b.add(ca, ca, Val::I(4));
+                b.add(cb, cb, Val::I(4));
+                b.add(cc, cc, Val::I(4));
+            });
+            b.free_i(cc);
+            b.free_i(cb);
+            b.free_i(ca);
+        }
+    }
+    let module = b.finish("vecadd");
+
+    let (lowering, static_threads) = match variant {
+        VecAddVariant::Dynamic => (Lowering::Soft, false),
+        VecAddVariant::Static => (Lowering::Soft, true),
+        VecAddVariant::Privatized => (Lowering::Soft, true),
+        VecAddVariant::Hw => (Lowering::Hw, false),
+    };
+    let ck = compile(&module, &rt, &leon3_opts(lowering, static_threads, threads));
+
+    let mut m = Leon3Machine::new(threads);
+    for i in 0..n {
+        rt.write_u64(m.mem_mut(), a, i, i & 0xFFFF);
+        rt.write_u64(m.mem_mut(), bb, i, (3 * i + 1) & 0xFFFF);
+    }
+    let res = m.run(&ck.program);
+    for i in 0..n {
+        let got = rt.read_u64(m.mem_mut(), c, i);
+        let want = ((i & 0xFFFF) + ((3 * i + 1) & 0xFFFF)) & 0xFFFF_FFFF;
+        assert_eq!(got, want, "vecadd[{}] {variant:?}", i);
+    }
+    res
+}
+
+/// Run C = A×B over N×N u32 matrices, rows distributed cyclically.
+pub fn run_matmul(threads: u32, variant: MatmulVariant, n: u64) -> Leon3Result {
+    assert!(n.is_power_of_two() && n >= threads as u64);
+    let mut rt = UpcRuntime::new(threads);
+    // one row per block, rows cyclic over threads
+    let a = rt.alloc_shared("mm_a", n, 4, n * n);
+    let bmat = rt.alloc_shared("mm_b", n, 4, n * n);
+    let c = rt.alloc_shared("mm_c", n, 4, n * n);
+    // private per-thread base-pointer table for the Priv2 variant
+    let bp_off = rt.alloc_private(threads as u64 * 8);
+
+    let l2n = n.trailing_zeros() as i64;
+    let _l2t = (threads as u64).next_power_of_two().trailing_zeros() as i64;
+
+    let mut b = IrBuilder::new(&mut rt);
+    let myt = b.mythread();
+
+    // Priv2 prologue: bp[t] = raw base of B's data on thread t
+    if variant == MatmulVariant::Priv2 {
+        let pb = b.priv_base();
+        let base_va = b.rt.array(bmat).base_va as i64;
+        b.for_range(Val::I(0), Val::I(threads as i64), 1, |b, t| {
+            let addr = b.it();
+            b.bin(IntOp::Add, addr, t, Val::I(1));
+            b.bin(IntOp::Sll, addr, addr, Val::I(32));
+            b.bin(IntOp::Add, addr, addr, Val::I(base_va));
+            let slot = b.it();
+            b.bin(IntOp::Sll, slot, t, Val::I(3));
+            b.bin(IntOp::Add, slot, slot, Val::R(pb));
+            b.st(MemWidth::U64, addr, slot, bp_off as i32);
+            b.free_i(slot);
+            b.free_i(addr);
+        });
+        b.free_i(pb);
+    }
+
+    // rows r = myt, myt+T, ... — build as loop over local row index
+    let rows_per = n / threads as u64; // assumes T divides n (pow2)
+    b.for_range(Val::I(0), Val::I(rows_per as i64), 1, |b, lr| {
+        // global row r = lr*T + myt
+        let r = b.it();
+        b.bin(IntOp::Mul, r, lr, Val::I(threads as i64));
+        b.bin(IntOp::Add, r, r, Val::R(myt));
+        let rbase = b.it();
+        b.bin(IntOp::Sll, rbase, r, Val::I(l2n)); // r*N
+
+        b.for_range(Val::I(0), Val::I(n as i64), 1, |b, j| {
+            let acc = b.iconst(0);
+            match variant {
+                MatmulVariant::Static | MatmulVariant::Hw => {
+                    // A row walk + B column walk via shared pointers
+                    let pa = b.sptr_init(a, Val::R(rbase));
+                    let pbm = b.sptr_init(bmat, Val::R(j));
+                    b.for_range(Val::I(0), Val::I(n as i64), 1, |b, _k| {
+                        let (x, y) = (b.it(), b.it());
+                        b.sptr_ld(MemWidth::U32, x, pa, 0);
+                        b.sptr_ld(MemWidth::U32, y, pbm, 0);
+                        b.bin(IntOp::Mul, x, x, Val::R(y));
+                        b.bin(IntOp::Add, acc, acc, Val::R(x));
+                        b.free_i(y);
+                        b.free_i(x);
+                        b.sptr_inc(pa, a, Val::I(1));
+                        b.sptr_inc(pbm, bmat, Val::I(n as i64));
+                    });
+                    b.free_i(pbm);
+                    b.free_i(pa);
+                    // C[r*N + j]
+                    let idx = b.it();
+                    b.bin(IntOp::Add, idx, rbase, Val::R(j));
+                    let pcp = b.sptr_init(c, Val::R(idx));
+                    b.sptr_st(MemWidth::U32, acc, pcp, 0);
+                    b.free_i(pcp);
+                    b.free_i(idx);
+                }
+                MatmulVariant::Priv1 | MatmulVariant::Priv2 => {
+                    // A row is local: raw cursor (local row index = lr)
+                    let ca = b.it();
+                    b.bin(IntOp::Sll, ca, lr, Val::I(l2n + 2)); // lr*N*4
+                    let la = b.local_addr(a, Val::I(0));
+                    b.bin(IntOp::Add, ca, ca, Val::R(la));
+                    b.free_i(la);
+                    match variant {
+                        MatmulVariant::Priv1 => {
+                            // B column via shared pointer
+                            let pbm = b.sptr_init(bmat, Val::R(j));
+                            b.for_range(Val::I(0), Val::I(n as i64), 1, |b, _k| {
+                                let (x, y) = (b.it(), b.it());
+                                b.ld(MemWidth::U32, x, ca, 0);
+                                b.sptr_ld(MemWidth::U32, y, pbm, 0);
+                                b.bin(IntOp::Mul, x, x, Val::R(y));
+                                b.bin(IntOp::Add, acc, acc, Val::R(x));
+                                b.free_i(y);
+                                b.free_i(x);
+                                b.add(ca, ca, Val::I(4));
+                                b.sptr_inc(pbm, bmat, Val::I(n as i64));
+                            });
+                            b.free_i(pbm);
+                        }
+                        MatmulVariant::Priv2 => {
+                            // the fully hand-optimized structure: split
+                            // the k loop by owner thread so every B
+                            // access is a stride-N raw cursor off that
+                            // thread's base pointer (exact for integer
+                            // sums — reassociation is value-safe).
+                            // B[k*N+j] with k = tt + T*kk lives on
+                            // thread tt at local offset (kk*N + j)*4;
+                            // A[r*N + k] walks stride T*4 from base+tt*4.
+                            let pb = b.priv_base();
+                            b.for_range(Val::I(0), Val::I(threads as i64), 1, |b, tt| {
+                                // cb = bp[tt] + j*4, stride N*4
+                                let cb = b.it();
+                                b.bin(IntOp::Sll, cb, tt, Val::I(3));
+                                b.bin(IntOp::Add, cb, cb, Val::R(pb));
+                                b.ld(MemWidth::U64, cb, cb, bp_off as i32);
+                                let j4 = b.it();
+                                b.bin(IntOp::Sll, j4, j, Val::I(2));
+                                b.bin(IntOp::Add, cb, cb, Val::R(j4));
+                                b.free_i(j4);
+                                // cak = ca + tt*4, stride T*4
+                                let cak = b.it();
+                                b.bin(IntOp::Sll, cak, tt, Val::I(2));
+                                b.bin(IntOp::Add, cak, cak, Val::R(ca));
+                                b.for_range(
+                                    Val::I(0),
+                                    Val::I((n / threads as u64) as i64),
+                                    1,
+                                    |b, _kk| {
+                                        let (x, y) = (b.it(), b.it());
+                                        b.ld(MemWidth::U32, x, cak, 0);
+                                        b.ld(MemWidth::U32, y, cb, 0);
+                                        b.bin(IntOp::Mul, x, x, Val::R(y));
+                                        b.bin(IntOp::Add, acc, acc, Val::R(x));
+                                        b.free_i(y);
+                                        b.free_i(x);
+                                        b.add(cak, cak, Val::I(4 * threads as i64));
+                                        b.add(cb, cb, Val::I((n * 4) as i64));
+                                    },
+                                );
+                                b.free_i(cak);
+                                b.free_i(cb);
+                            });
+                            b.free_i(pb);
+                        }
+                        _ => unreachable!(),
+                    }
+                    b.free_i(ca);
+                    // C row is local too
+                    let cc = b.it();
+                    b.bin(IntOp::Sll, cc, lr, Val::I(l2n + 2));
+                    let lc = b.local_addr(c, Val::I(0));
+                    b.bin(IntOp::Add, cc, cc, Val::R(lc));
+                    b.free_i(lc);
+                    let cj = b.it();
+                    b.bin(IntOp::Sll, cj, j, Val::I(2));
+                    b.bin(IntOp::Add, cc, cc, Val::R(cj));
+                    b.free_i(cj);
+                    b.st(MemWidth::U32, acc, cc, 0);
+                    b.free_i(cc);
+                }
+            }
+            b.free_i(acc);
+        });
+        b.free_i(rbase);
+        b.free_i(r);
+    });
+    let module = b.finish("matmul");
+
+    let lowering = if variant == MatmulVariant::Hw {
+        Lowering::Hw
+    } else {
+        Lowering::Soft
+    };
+    // matmul was compiled in static mode in the paper
+    let ck = compile(&module, &rt, &leon3_opts(lowering, true, threads));
+
+    let mut m = Leon3Machine::new(threads);
+    let av: Vec<u64> = (0..n * n).map(|i| (i * 7 + 3) % 50).collect();
+    let bv: Vec<u64> = (0..n * n).map(|i| (i * 13 + 1) % 50).collect();
+    for i in 0..(n * n) {
+        rt.write_u64(m.mem_mut(), a, i, av[i as usize]);
+        rt.write_u64(m.mem_mut(), bmat, i, bv[i as usize]);
+    }
+    let res = m.run(&ck.program);
+    for r in 0..n {
+        for j in 0..n {
+            let want: u64 = (0..n)
+                .map(|k| av[(r * n + k) as usize] * bv[(k * n + j) as usize])
+                .sum::<u64>()
+                & 0xFFFF_FFFF;
+            let got = rt.read_u64(m.mem_mut(), c, r * n + j);
+            assert_eq!(got, want, "matmul[{r},{j}] {variant:?}");
+        }
+    }
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vecadd_variant_ordering_matches_figure15() {
+        let n = 2048;
+        let t = 2;
+        let dy = run_vecadd(t, VecAddVariant::Dynamic, n).cycles as f64;
+        let st = run_vecadd(t, VecAddVariant::Static, n).cycles as f64;
+        let pv = run_vecadd(t, VecAddVariant::Privatized, n).cycles as f64;
+        let hw = run_vecadd(t, VecAddVariant::Hw, n).cycles as f64;
+        // static ~5x over dynamic; priv/hw ~16x over dynamic; hw ≈ priv
+        assert!(dy / st > 2.0, "static speedup {:.2}", dy / st);
+        assert!(dy / pv > 6.0, "priv speedup {:.2}", dy / pv);
+        assert!(dy / hw > 6.0, "hw speedup {:.2}", dy / hw);
+        let ratio = hw / pv;
+        assert!((0.6..1.4).contains(&ratio), "hw/priv = {ratio:.2}");
+    }
+
+    #[test]
+    fn matmul_hw_matches_full_privatization() {
+        let n = 16;
+        let t = 2;
+        let st = run_matmul(t, MatmulVariant::Static, n).cycles as f64;
+        let p1 = run_matmul(t, MatmulVariant::Priv1, n).cycles as f64;
+        let p2 = run_matmul(t, MatmulVariant::Priv2, n).cycles as f64;
+        let hw = run_matmul(t, MatmulVariant::Hw, n).cycles as f64;
+        assert!(st > p1 && p1 > p2, "ordering: {st} > {p1} > {p2}");
+        let ratio = hw / p2;
+        assert!((0.5..1.5).contains(&ratio), "hw/priv2 = {ratio:.2}");
+    }
+
+    #[test]
+    fn vecadd_single_thread_all_variants_validate() {
+        for v in VecAddVariant::ALL {
+            let r = run_vecadd(1, v, 512);
+            assert!(r.cycles > 0, "{v:?}");
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! # pgas-hw — Hardware Support for Address Mapping in PGAS Languages
+//!
+//! A full-system reproduction of Serres et al., *"Hardware Support for
+//! Address Mapping in PGAS Languages; a UPC Case Study"* (CS.DC 2013).
+//!
+//! The paper proposes ISA-level hardware for UPC shared pointers: an
+//! address-increment instruction implementing the block-cyclic traversal
+//! (their Algorithm 1) in a 2-stage pipeline, and shared load/store
+//! instructions that translate `(thread, phase, va)` pointers through a
+//! per-thread base-address LUT at the cost of an ordinary memory access.
+//!
+//! This crate rebuilds the paper's entire evaluation stack:
+//!
+//! * [`sptr`] — UPC shared-pointer algebra: Algorithm 1 (general and
+//!   power-of-2 paths), LUT translation, locality codes, packing.
+//! * [`isa`] — *SimAlpha*: a 64-bit RISC ISA plus the paper's Table-1
+//!   PGAS extension with Figure-3 instruction formats.
+//! * [`mem`] / [`cache`] — memory system and L1/L2 hierarchy with
+//!   MESI-lite snooping (the Gem5 "classic" memory model analogue).
+//! * [`cpu`] — the three Gem5 CPU models: `atomic`, `timing`, `detailed`.
+//! * [`sim`] — an N-core SPMD machine (up to 64 cores, the paper's
+//!   BigTsunami limit) with UPC barriers.
+//! * [`upc`] — the UPC runtime model: block-cyclic shared arrays,
+//!   per-thread heaps, affinity.
+//! * [`compiler`] — a mini Berkeley-UPC-like code generator lowering a
+//!   kernel IR to SimAlpha in three variants: `Soft` (software Algorithm
+//!   1), `Privatized` (manual pointer privatization), `Hw` (the new
+//!   instructions, with software fallback for non-power-of-2 layouts).
+//! * [`npb`] — the five NAS Parallel Benchmark kernels of the paper
+//!   (EP, IS, CG, MG, FT) expressed against the UPC runtime.
+//! * [`leon3`] — the FPGA prototype: SPARC-V8-class 7-stage in-order
+//!   pipeline with the Table-3 coprocessor, AMBA AHB bus contention and
+//!   DDR3 timing; vector-add and matmul microbenchmarks (Figs 15/16).
+//! * [`area`] — the FPGA resource model regenerating Table 4.
+//! * [`runtime`] — PJRT/XLA executor for the AOT-compiled batched
+//!   address-mapping unit (the L1 Pallas kernel), loaded from
+//!   `artifacts/*.hlo.txt`.
+//! * [`coordinator`] — campaign configuration, sweep scheduling, result
+//!   collection and the figure/table reporters.
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
+//! simulator and benchmarks never touch it at run time.
+
+pub mod area;
+pub mod cache;
+pub mod compiler;
+pub mod coordinator;
+pub mod cpu;
+pub mod isa;
+pub mod leon3;
+pub mod mem;
+pub mod npb;
+pub mod runtime;
+pub mod sim;
+pub mod sptr;
+pub mod upc;
+pub mod util;
+
+pub use sptr::{ArrayLayout, BaseTable, Locality, SharedPtr};

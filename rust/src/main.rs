@@ -1,0 +1,391 @@
+//! `pgas-hw` — CLI for the PGAS address-mapping-hardware reproduction.
+//!
+//! Subcommands:
+//!   run      one kernel/variant/model/core-count simulation
+//!   sweep    a full campaign (defaults reproduce Figs. 6–14), CSV out
+//!   leon3    the FPGA prototype microbenchmarks (Figs. 15/16)
+//!   area     Table 4 + the component breakdown
+//!   disasm   compile a kernel and print program + PGAS census + Table 1
+//!   verify   cross-check the XLA batch unit against the scalar oracle
+//!   walk     demo: trace a pointer walk through a layout (XLA walker)
+//!
+//! (Hand-rolled argument parsing: the offline environment vendors no
+//! clap.)
+
+use std::collections::HashMap;
+use std::process::ExitCode;
+
+use pgas_hw::coordinator::{self, Campaign};
+use pgas_hw::cpu::CpuModel;
+use pgas_hw::npb::{self, Kernel, PaperVariant, Scale};
+use pgas_hw::runtime::{unit_batch_scalar, UnitCfg, XlaUnit};
+use pgas_hw::sptr::{BaseTable, SharedPtr};
+use pgas_hw::util::rng::Xoshiro256;
+use pgas_hw::{area, isa, leon3};
+
+fn usage() -> &'static str {
+    "usage: pgas-hw <run|sweep|leon3|area|disasm|verify|walk> [--key value ...]
+  run    --kernel EP|IS|CG|MG|FT --variant unopt|manual|hw
+         --model atomic|timing|detailed --cores N [--scale F]
+  sweep  [--kernels ..] [--models ..] [--cores 1,2,4,..] [--scale F]
+         [--config campaign.cfg] [--out results/]
+  leon3  [--bench vecadd|matmul|all] [--threads 1|2|4] [--tables]
+  area
+  disasm --kernel K [--variant V] [--full]
+  verify [--batches N] [--artifacts DIR]
+  walk   [--blocksize B] [--elemsize E] [--threads T] [--inc I]
+         [--artifacts DIR]"
+}
+
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let k = args[i]
+            .strip_prefix("--")
+            .ok_or_else(|| format!("expected --flag, got `{}`", args[i]))?;
+        if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            m.insert(k.to_string(), args[i + 1].clone());
+            i += 2;
+        } else {
+            m.insert(k.to_string(), "true".to_string());
+            i += 1;
+        }
+    }
+    Ok(m)
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprintln!("{}", usage());
+        return ExitCode::FAILURE;
+    };
+    let flags = match parse_flags(&args[1..]) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("error: {e}\n{}", usage());
+            return ExitCode::FAILURE;
+        }
+    };
+    let result = match cmd.as_str() {
+        "run" => cmd_run(&flags),
+        "sweep" => cmd_sweep(&flags),
+        "leon3" => cmd_leon3(&flags),
+        "area" => cmd_area(),
+        "disasm" => cmd_disasm(&flags),
+        "verify" => cmd_verify(&flags),
+        "walk" => cmd_walk(&flags),
+        _ => Err(format!("unknown command `{cmd}`\n{}", usage())),
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn get_scale(flags: &HashMap<String, String>) -> Result<Scale, String> {
+    Ok(match flags.get("scale") {
+        Some(s) => Scale {
+            factor: s.parse().map_err(|_| format!("bad scale `{s}`"))?,
+        },
+        None => Scale::default(),
+    })
+}
+
+fn parse_variant(flags: &HashMap<String, String>) -> Result<PaperVariant, String> {
+    match flags.get("variant").map(|s| s.as_str()).unwrap_or("hw") {
+        "unopt" => Ok(PaperVariant::Unopt),
+        "manual" => Ok(PaperVariant::Manual),
+        "hw" => Ok(PaperVariant::Hw),
+        other => Err(format!("unknown variant `{other}`")),
+    }
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
+    let kernel = Kernel::parse(flags.get("kernel").ok_or("missing --kernel")?)
+        .ok_or("unknown kernel")?;
+    let variant = parse_variant(flags)?;
+    let model = CpuModel::parse(flags.get("model").map(|s| s.as_str()).unwrap_or("atomic"))
+        .ok_or("unknown model")?;
+    let cores: u32 = flags
+        .get("cores")
+        .map(|s| s.parse().map_err(|_| "bad cores"))
+        .unwrap_or(Ok(4))?;
+    let scale = get_scale(flags)?;
+    let out = npb::run(kernel, variant, model, cores, &scale);
+    println!(
+        "{} [{}] {} x{}: {} cycles = {:.3} ms simulated @2GHz (validated OK)",
+        kernel,
+        variant.label(),
+        model,
+        cores,
+        out.result.cycles,
+        out.result.runtime_secs() * 1e3
+    );
+    println!(
+        "  instructions={} ipc(core0)={:.2} pgas: {} hw incs / {} soft incs, {} hw mem / {} soft mem",
+        out.result.total.instructions,
+        out.result.per_core[0].ipc(),
+        out.compile_stats.hw_incs,
+        out.compile_stats.soft_incs,
+        out.compile_stats.hw_mems,
+        out.compile_stats.soft_mems,
+    );
+    if flags.contains_key("stats") {
+        println!("\n{}", out.result.stats_txt());
+    }
+    Ok(())
+}
+
+fn cmd_sweep(flags: &HashMap<String, String>) -> Result<(), String> {
+    let mut campaign = if let Some(path) = flags.get("config") {
+        let text = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        coordinator::config::parse_campaign(&text)?
+    } else {
+        Campaign::default()
+    };
+    if let Some(ks) = flags.get("kernels") {
+        campaign.kernels = ks
+            .split(',')
+            .map(|s| Kernel::parse(s.trim()).ok_or(format!("unknown kernel {s}")))
+            .collect::<Result<_, _>>()?;
+    }
+    if let Some(ms) = flags.get("models") {
+        campaign.models = ms
+            .split(',')
+            .map(|s| CpuModel::parse(s.trim()).ok_or(format!("unknown model {s}")))
+            .collect::<Result<_, _>>()?;
+    }
+    if let Some(cs) = flags.get("cores") {
+        campaign.cores = cs
+            .split(',')
+            .map(|s| s.trim().parse().map_err(|_| format!("bad cores {s}")))
+            .collect::<Result<_, _>>()?;
+    }
+    if let Some(s) = flags.get("scale") {
+        campaign.scale = Scale {
+            factor: s.parse().map_err(|_| "bad scale")?,
+        };
+    }
+    eprintln!(
+        "campaign: {} points, scale 1/{}, {} jobs",
+        campaign.points().len(),
+        campaign.scale.factor,
+        campaign.jobs
+    );
+    let outs = campaign.run(true);
+    let figs = [
+        (Kernel::Ep, "Fig 6"),
+        (Kernel::Cg, "Fig 7/11"),
+        (Kernel::Ft, "Fig 8/12"),
+        (Kernel::Is, "Fig 9/13"),
+        (Kernel::Mg, "Fig 10/14"),
+    ];
+    for &(k, fig) in &figs {
+        for &m in &campaign.models {
+            if campaign.kernels.contains(&k) {
+                let t = coordinator::figure_table(&outs, k, m, fig);
+                if !t.is_empty() {
+                    println!("{}", t.render());
+                }
+            }
+        }
+    }
+    println!("{}", coordinator::headline_summary(&outs).render());
+    if let Some(dir) = flags.get("out") {
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        let path = format!("{dir}/outcomes.csv");
+        std::fs::write(&path, coordinator::outcomes_csv(&outs))
+            .map_err(|e| e.to_string())?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_leon3(flags: &HashMap<String, String>) -> Result<(), String> {
+    use leon3::microbench::{run_matmul, run_vecadd, MatmulVariant, VecAddVariant};
+    use pgas_hw::util::table::{fnum, Table};
+    if flags.contains_key("tables") {
+        println!("{}", leon3::table2());
+        println!("{}", leon3::table3());
+    }
+    let bench = flags.get("bench").map(|s| s.as_str()).unwrap_or("all");
+    let threads: Vec<u32> = match flags.get("threads") {
+        Some(t) => vec![t.parse().map_err(|_| "bad threads")?],
+        None => vec![1, 2, 4],
+    };
+    if bench == "vecadd" || bench == "all" {
+        let n = 8192;
+        let mut t = Table::new(
+            "Fig 15: Leon3 vector addition (runtime ms @75MHz)",
+            &["threads", "dynamic", "static", "privatized", "hw"],
+        );
+        for &th in &threads {
+            let ms = |v| fnum(run_vecadd(th, v, n).runtime_ms(), 3);
+            t.row(&[
+                th.to_string(),
+                ms(VecAddVariant::Dynamic),
+                ms(VecAddVariant::Static),
+                ms(VecAddVariant::Privatized),
+                ms(VecAddVariant::Hw),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    if bench == "matmul" || bench == "all" {
+        let n = 32;
+        let mut t = Table::new(
+            "Fig 16: Leon3 matrix multiplication (runtime ms @75MHz)",
+            &["threads", "static", "privatization 1", "privatization 2", "hw"],
+        );
+        for &th in &threads {
+            let ms = |v| fnum(run_matmul(th, v, n).runtime_ms(), 3);
+            t.row(&[
+                th.to_string(),
+                ms(MatmulVariant::Static),
+                ms(MatmulVariant::Priv1),
+                ms(MatmulVariant::Priv2),
+                ms(MatmulVariant::Hw),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+fn cmd_area() -> Result<(), String> {
+    println!("{}", area::table4().render());
+    println!("{}", area::component_breakdown().render());
+    Ok(())
+}
+
+fn cmd_disasm(flags: &HashMap<String, String>) -> Result<(), String> {
+    let kernel = Kernel::parse(flags.get("kernel").ok_or("missing --kernel")?)
+        .ok_or("unknown kernel")?;
+    let variant = parse_variant(flags)?;
+    println!("{}", isa::table1());
+    let built = npb::build(kernel, 4, variant.source(), &Scale::quick());
+    let ck = pgas_hw::compiler::compile(
+        &built.module,
+        &built.rt,
+        &pgas_hw::compiler::CompileOpts {
+            lowering: variant.lowering(),
+            static_threads: false,
+            numthreads: 4,
+            volatile_stores: true,
+        },
+    );
+    println!(
+        "kernel {kernel} [{}]: {} instructions; census: {:?}; \
+         pgas static counts: {:?}",
+        variant.label(),
+        ck.program.len(),
+        ck.stats,
+        ck.program.pgas_static_counts()
+    );
+    if flags.contains_key("full") {
+        println!("{}", ck.program.disassemble());
+    } else {
+        for (i, inst) in ck.program.insts.iter().take(80).enumerate() {
+            println!("{i:6}:  {inst}");
+        }
+        if ck.program.len() > 80 {
+            println!("... ({} more)", ck.program.len() - 80);
+        }
+    }
+    Ok(())
+}
+
+fn artifacts_dir(flags: &HashMap<String, String>) -> String {
+    flags
+        .get("artifacts")
+        .cloned()
+        .unwrap_or_else(|| "artifacts".to_string())
+}
+
+fn cmd_verify(flags: &HashMap<String, String>) -> Result<(), String> {
+    let batches: u32 = flags
+        .get("batches")
+        .map(|s| s.parse().map_err(|_| "bad batches"))
+        .unwrap_or(Ok(8))?;
+    let unit = XlaUnit::load(artifacts_dir(flags)).map_err(|e| format!("{e:#}"))?;
+    println!("PJRT platform: {}", unit.platform());
+    let mut rng = Xoshiro256::new(0xFEED);
+    for batch in 0..batches {
+        let l2bs = rng.below(8) as u32;
+        let l2es = rng.below(4) as u32;
+        let l2nt = rng.below(7) as u32;
+        let t = 1u32 << l2nt;
+        let cfg = UnitCfg {
+            log2_blocksize: l2bs,
+            log2_elemsize: l2es,
+            log2_numthreads: l2nt,
+            mythread: rng.below(t as u64) as u32,
+            log2_threads_per_mc: 1,
+            log2_threads_per_node: 6,
+        };
+        let table = BaseTable::regular(t, 1 << 32, 1 << 32);
+        let layout = pgas_hw::sptr::ArrayLayout::new(1 << l2bs, 1 << l2es, t);
+        let n = 1 + rng.below(8192) as usize;
+        let ptrs: Vec<SharedPtr> = (0..n)
+            .map(|_| SharedPtr::for_index(&layout, 0, rng.below(1 << 16)))
+            .collect();
+        let incs: Vec<u32> = (0..n).map(|_| rng.below(4096) as u32).collect();
+        let got = unit
+            .unit_batch(&cfg, &table, &ptrs, &incs)
+            .map_err(|e| format!("{e:#}"))?;
+        let want = unit_batch_scalar(&cfg, &table, &ptrs, &incs);
+        if got.thread != want.thread
+            || got.phase != want.phase
+            || got.va != want.va
+            || got.sysva != want.sysva
+            || got.loc != want.loc
+        {
+            return Err(format!("batch {batch}: XLA unit != scalar oracle"));
+        }
+        println!("batch {batch}: {n} pointers OK (T={t}, bs=2^{l2bs}, es=2^{l2es})");
+    }
+    println!("verify: all {batches} batches agree with the scalar oracle");
+    Ok(())
+}
+
+fn cmd_walk(flags: &HashMap<String, String>) -> Result<(), String> {
+    let bs: u64 = flags.get("blocksize").map(|s| s.parse().unwrap_or(4)).unwrap_or(4);
+    let es: u64 = flags.get("elemsize").map(|s| s.parse().unwrap_or(4)).unwrap_or(4);
+    let t: u32 = flags.get("threads").map(|s| s.parse().unwrap_or(4)).unwrap_or(4);
+    let inc: u32 = flags.get("inc").map(|s| s.parse().unwrap_or(1)).unwrap_or(1);
+    if !(bs.is_power_of_two() && es.is_power_of_two() && t.is_power_of_two()) {
+        return Err("walk demo requires power-of-2 geometry (like the hardware)".into());
+    }
+    let unit = XlaUnit::load(artifacts_dir(flags)).map_err(|e| format!("{e:#}"))?;
+    let cfg = UnitCfg {
+        log2_blocksize: bs.trailing_zeros(),
+        log2_elemsize: es.trailing_zeros(),
+        log2_numthreads: t.trailing_zeros(),
+        mythread: 0,
+        log2_threads_per_mc: 1,
+        log2_threads_per_node: 6,
+    };
+    let table = BaseTable::regular(t, 1 << 32, 1 << 32);
+    let (sysva, thread, loc) = unit
+        .walk(&cfg, &table, &SharedPtr::NULL, inc)
+        .map_err(|e| format!("{e:#}"))?;
+    println!(
+        "walking shared [{bs}] (elem {es}B) over {t} threads, inc {inc} \
+         — first 24 steps (XLA trace_walker artifact):"
+    );
+    for i in 0..24.min(sysva.len()) {
+        println!(
+            "  elem {:3}: thread {} sysva {:#x} locality {}",
+            i as u32 * inc,
+            thread[i],
+            sysva[i],
+            loc[i]
+        );
+    }
+    Ok(())
+}

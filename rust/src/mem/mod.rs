@@ -1,0 +1,197 @@
+//! Simulated physical memory and address-space layout.
+//!
+//! The machine gives every UPC thread a segment at a regular interval:
+//! thread `t`'s shared segment starts at sysva `(t+1) << SEG_SHIFT`.
+//! This realizes the paper's first translation option (base computable
+//! from the thread number) while the executing programs still go through
+//! the base-address LUT — the option both prototypes implement — so the
+//! two schemes can be cross-checked against each other.
+//!
+//! Layout of one 4 GiB segment:
+//! ```text
+//!   +0x0000_0000  shared heap of thread t (UPC shared space, affinity t)
+//!   +0xC000_0000  private space of thread t (stack, temporaries, tables)
+//! ```
+
+mod tlb;
+
+pub use tlb::{Tlb, TlbStats};
+
+use crate::isa::MemWidth;
+use crate::sptr::BaseTable;
+
+/// log2 of the per-thread segment stride.
+pub const SEG_SHIFT: u32 = 32;
+/// Offset of the private space inside a segment.
+pub const PRIV_OFF: u64 = 0xC000_0000;
+/// Maximum bytes backed per segment (shared + private)
+pub const SEG_CAP: u64 = 1 << SEG_SHIFT;
+
+/// sysva of the start of thread `t`'s segment.
+#[inline]
+pub fn seg_base(t: u32) -> u64 {
+    ((t as u64) + 1) << SEG_SHIFT
+}
+
+/// One thread segment, stored sparsely as two lazily-grown regions:
+/// the shared heap (offset 0..) and the private space (PRIV_OFF..).
+/// Sparseness matters: a dense 4 GiB vector per thread would zero-fill
+/// gigabytes on the first private-space access (measured at ~7 s per
+/// simulation before this split — see EXPERIMENTS.md §Perf).
+#[derive(Default)]
+struct Segment {
+    shared: Vec<u8>,
+    private: Vec<u8>,
+}
+
+/// The simulated memory. All values little-endian; floats as IEEE bits.
+pub struct MemSystem {
+    segs: Vec<Segment>,
+    /// The PGAS base-address LUT (installed by `pgas_setbase`).
+    pub base_table: BaseTable,
+    numthreads: u32,
+}
+
+impl MemSystem {
+    pub fn new(numthreads: u32) -> Self {
+        Self {
+            segs: (0..numthreads).map(|_| Segment::default()).collect(),
+            base_table: BaseTable::regular(numthreads, seg_base(0), 1 << SEG_SHIFT),
+            numthreads,
+        }
+    }
+
+    pub fn numthreads(&self) -> u32 {
+        self.numthreads
+    }
+
+    /// Mutable window of `n` bytes at `sysva`; grows the containing
+    /// region. Panics on unmapped addresses — an unmapped access is a
+    /// simulator bug, not a workload condition.
+    #[inline]
+    fn window(&mut self, sysva: u64, n: usize) -> &mut [u8] {
+        let seg = (sysva >> SEG_SHIFT) as usize;
+        assert!(
+            seg >= 1 && seg <= self.numthreads as usize,
+            "sysva {sysva:#x} outside all thread segments"
+        );
+        let off = (sysva & (SEG_CAP - 1)) as usize;
+        let s = &mut self.segs[seg - 1];
+        let (region, roff) = if off as u64 >= PRIV_OFF {
+            (&mut s.private, off - PRIV_OFF as usize)
+        } else {
+            assert!(
+                (off + n) as u64 <= PRIV_OFF,
+                "shared-heap access {off:#x} crosses into private space"
+            );
+            (&mut s.shared, off)
+        };
+        if region.len() < roff + n {
+            // grow geometrically to amortize
+            let want = (roff + n).next_power_of_two().max(4096);
+            region.resize(want, 0);
+        }
+        &mut region[roff..roff + n]
+    }
+
+    /// Raw read of `w.bytes()` little-endian bytes, zero-extended.
+    /// Float widths return the raw bit pattern.
+    pub fn read(&mut self, w: MemWidth, sysva: u64) -> u64 {
+        let n = w.bytes() as usize;
+        let win = self.window(sysva, n);
+        let mut buf = [0u8; 8];
+        buf[..n].copy_from_slice(win);
+        u64::from_le_bytes(buf)
+    }
+
+    /// Raw write of the low `w.bytes()` bytes of `val`.
+    pub fn write(&mut self, w: MemWidth, sysva: u64, val: u64) {
+        let n = w.bytes() as usize;
+        let win = self.window(sysva, n);
+        win.copy_from_slice(&val.to_le_bytes()[..n]);
+    }
+
+    /// f64 view (T_float).
+    pub fn read_f64(&mut self, sysva: u64) -> f64 {
+        f64::from_bits(self.read(MemWidth::F64, sysva))
+    }
+
+    pub fn write_f64(&mut self, sysva: u64, val: f64) {
+        self.write(MemWidth::F64, sysva, val.to_bits());
+    }
+
+    /// f32 view (S_float).
+    pub fn read_f32(&mut self, sysva: u64) -> f32 {
+        f32::from_bits(self.read(MemWidth::F32, sysva) as u32)
+    }
+
+    pub fn write_f32(&mut self, sysva: u64, val: f32) {
+        self.write(MemWidth::F32, sysva, val.to_bits() as u64);
+    }
+
+    /// Bytes currently backed (for footprint reporting).
+    pub fn resident_bytes(&self) -> u64 {
+        self.segs
+            .iter()
+            .map(|s| (s.shared.len() + s.private.len()) as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn segment_bases_are_regular() {
+        assert_eq!(seg_base(0), 1 << 32);
+        assert_eq!(seg_base(3), 4 << 32);
+        let m = MemSystem::new(4);
+        for t in 0..4 {
+            assert_eq!(m.base_table.base(t), seg_base(t));
+        }
+    }
+
+    #[test]
+    fn rw_roundtrip_all_widths() {
+        let mut m = MemSystem::new(2);
+        let a = seg_base(1) + 0x100;
+        m.write(MemWidth::U8, a, 0xAB);
+        assert_eq!(m.read(MemWidth::U8, a), 0xAB);
+        m.write(MemWidth::U16, a, 0xBEEF);
+        assert_eq!(m.read(MemWidth::U16, a), 0xBEEF);
+        m.write(MemWidth::U32, a, 0xDEAD_BEEF);
+        assert_eq!(m.read(MemWidth::U32, a), 0xDEAD_BEEF);
+        m.write(MemWidth::U64, a, 0x0123_4567_89AB_CDEF);
+        assert_eq!(m.read(MemWidth::U64, a), 0x0123_4567_89AB_CDEF);
+        m.write_f64(a, -3.25);
+        assert_eq!(m.read_f64(a), -3.25);
+        m.write_f32(a, 1.5);
+        assert_eq!(m.read_f32(a), 1.5);
+    }
+
+    #[test]
+    fn widths_zero_extend() {
+        let mut m = MemSystem::new(1);
+        let a = seg_base(0) + 8;
+        m.write(MemWidth::U64, a, u64::MAX);
+        assert_eq!(m.read(MemWidth::U8, a), 0xFF);
+        assert_eq!(m.read(MemWidth::U32, a), 0xFFFF_FFFF);
+    }
+
+    #[test]
+    fn private_and_shared_disjoint() {
+        let mut m = MemSystem::new(1);
+        m.write(MemWidth::U64, seg_base(0), 1);
+        m.write(MemWidth::U64, seg_base(0) + PRIV_OFF, 2);
+        assert_eq!(m.read(MemWidth::U64, seg_base(0)), 1);
+        assert_eq!(m.read(MemWidth::U64, seg_base(0) + PRIV_OFF), 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn unmapped_access_is_a_bug() {
+        let mut m = MemSystem::new(1);
+        m.read(MemWidth::U8, 0x10); // below all segments
+    }
+}

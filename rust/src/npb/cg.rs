@@ -1,0 +1,372 @@
+//! CG — Conjugate Gradient kernel (sparse matrix–vector iteration).
+//!
+//! Structure follows the UPC NPB CG inner loop: repeated `q = A·p` with a
+//! fixed-degree sparse matrix (8 nonzeros/row), a global reduction of q,
+//! and a vector update — plus the paper's famous non-power-of-2 detail:
+//! a struct array with **elemsize 56016** (scaled here to a 112-byte
+//! struct, still non-pow2) whose pointer increments the HW variant must
+//! execute in software ("the generated code contained 309 shared address
+//! incrementations but 20 of those were using a non-power of 2 element
+//! size (the arrays w and w_tmp)").
+//!
+//! Paper shape (Figs. 7/11): HW ≈ 2.6× over unoptimized and ~17% *ahead*
+//! of the manually-privatized code, because the random-column accesses
+//! `p[colidx[j]]` cannot be privatized — the hand-tuned source still pays
+//! the software translation there, while the hardware does not.
+
+use super::{BuiltKernel, Scale};
+use crate::compiler::{IrBuilder, SourceVariant, Val};
+use crate::isa::{Cond, FpOp, IntOp, MemWidth};
+use crate::upc::UpcRuntime;
+use crate::util::rng::Xoshiro256;
+
+/// class W: na = 7000 rows; scaled, rounded to a pow2 multiple of T.
+const CLASS_W_ROWS: u64 = 7000;
+const NNZ_PER_ROW: u64 = 8;
+const NITER: u64 = 3;
+/// The w/w_tmp struct size, scaled from 56016 (non-pow2: 112 = 16·7).
+const WTMP_ELEMSIZE: u64 = 112;
+
+fn gen_matrix(n: u64, seed: u64) -> (Vec<u32>, Vec<f64>) {
+    let mut rng = Xoshiro256::new(seed);
+    let mut colidx = Vec::with_capacity((n * NNZ_PER_ROW) as usize);
+    let mut aval = Vec::with_capacity((n * NNZ_PER_ROW) as usize);
+    for r in 0..n {
+        for j in 0..NNZ_PER_ROW {
+            // one diagonal element per row keeps the iteration stable
+            let c = if j == 0 { r } else { rng.below(n) };
+            colidx.push(c as u32);
+            aval.push(if j == 0 { 1.5 } else { (rng.f64() - 0.5) * 0.25 });
+        }
+    }
+    (colidx, aval)
+}
+
+/// Host mirror of the exact simulated computation (same op order).
+fn host_reference(n: u64, threads: u32, colidx: &[u32], aval: &[f64]) -> Vec<f64> {
+    let chunk = n / threads as u64;
+    let mut p: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64 * 0.125).collect();
+    let mut q = vec![0.0f64; n as usize];
+    for _ in 0..NITER {
+        for r in 0..n as usize {
+            let mut acc = 0.0f64;
+            for j in 0..NNZ_PER_ROW as usize {
+                let k = r * NNZ_PER_ROW as usize + j;
+                acc += aval[k] * p[colidx[k] as usize];
+            }
+            q[r] = acc;
+        }
+        // thread-0 sequential global sum (the kernel's reduction order)
+        let mut s = 0.0f64;
+        for r in 0..n as usize {
+            s += q[r];
+        }
+        let scale = 1.0 / (1.0 + (s / n as f64).abs());
+        let _ = chunk;
+        for r in 0..n as usize {
+            p[r] = q[r] * scale;
+        }
+    }
+    p
+}
+
+pub fn build(threads: u32, source: SourceVariant, scale: &Scale) -> BuiltKernel {
+    // rows: pow2-per-thread chunks (blocked layout stays hw-supported)
+    let chunk = scale.dim(CLASS_W_ROWS, 64).next_power_of_two() / threads as u64;
+    let chunk = chunk.max(8);
+    let n = chunk * threads as u64;
+
+    let mut rt = UpcRuntime::new(threads);
+    let colidx = rt.alloc_shared("cg_colidx", chunk * NNZ_PER_ROW, 4, n * NNZ_PER_ROW);
+    let aval = rt.alloc_shared("cg_aval", chunk * NNZ_PER_ROW, 8, n * NNZ_PER_ROW);
+    let p = rt.alloc_shared("cg_p", chunk, 8, n);
+    let q = rt.alloc_shared("cg_q", chunk, 8, n);
+    // global sum cell + the non-pow2 w_tmp struct array (1 per thread)
+    let gsum = rt.alloc_shared("cg_gsum", 1, 8, 1);
+    let wtmp = rt.alloc_shared("cg_wtmp", 1, WTMP_ELEMSIZE, threads as u64);
+
+    let (colidx_data, aval_data) = gen_matrix(n, 0xC6_0001);
+
+    let mut b = IrBuilder::new(&mut rt);
+    let myt = b.mythread();
+    let rowstart = b.it();
+    b.bin(IntOp::Mul, rowstart, myt, Val::I(chunk as i64));
+
+    let fone = b.fconst(1.0);
+    let fninv = b.fconst(1.0 / n as f64);
+
+    // NITER outer iterations as a countdown do-while
+    let iter = b.it();
+    b.mov(iter, Val::I(NITER as i64));
+    b.do_while(Cond::Gt, iter, |b| {
+        // ---------- q = A·p over my rows ----------
+        match source {
+            SourceVariant::Unoptimized => {
+                let nzstart = b.it();
+                b.bin(IntOp::Mul, nzstart, rowstart, Val::I(NNZ_PER_ROW as i64));
+                let pa = b.sptr_init(aval, Val::R(nzstart));
+                let pc = b.sptr_init(colidx, Val::R(nzstart));
+                let pq = b.sptr_init(q, Val::R(rowstart));
+                b.free_i(nzstart);
+                b.for_range(Val::I(0), Val::I(chunk as i64), 1, |b, _r| {
+                    let facc = b.fconst(0.0);
+                    b.for_range(Val::I(0), Val::I(NNZ_PER_ROW as i64), 1, |b, _j| {
+                        let col = b.it();
+                        b.sptr_ld(MemWidth::U32, col, pc, 0);
+                        // p[col]: fresh shared pointer per access — the
+                        // unoptimized `p[colidx[k]]`
+                        let pp = b.sptr_init(p, Val::R(col));
+                        let fv = b.ft();
+                        let fa = b.ft();
+                        b.sptr_ld(MemWidth::F64, fv, pp, 0);
+                        b.sptr_ld(MemWidth::F64, fa, pa, 0);
+                        b.fbin(FpOp::FMul, fv, fv, fa);
+                        b.fbin(FpOp::FAdd, facc, facc, fv);
+                        b.free_f(fa);
+                        b.free_f(fv);
+                        b.free_i(pp);
+                        b.free_i(col);
+                        b.sptr_inc(pa, aval, Val::I(1));
+                        b.sptr_inc(pc, colidx, Val::I(1));
+                    });
+                    b.sptr_st(MemWidth::F64, facc, pq, 0);
+                    b.sptr_inc(pq, q, Val::I(1));
+                    b.free_f(facc);
+                });
+                b.free_i(pq);
+                b.free_i(pc);
+                b.free_i(pa);
+            }
+            SourceVariant::Privatized => {
+                // own-chunk walks privatized; p[col] is random-access,
+                // so the hand-tuned SMP code reaches it through a raw
+                // cast address (thread = col/chunk, offset = col%chunk)
+                // — cheaper than Algorithm 1 but still 6 extra ops per
+                // access that the hardware does in zero
+                let p_va = b.rt.array(p).base_va as i64;
+                let l2chunk = chunk.trailing_zeros() as i64;
+                let ca = b.local_addr(aval, Val::I(0));
+                let cc = b.local_addr(colidx, Val::I(0));
+                let cq = b.local_addr(q, Val::I(0));
+                b.for_range(Val::I(0), Val::I(chunk as i64), 1, |b, _r| {
+                    let facc = b.fconst(0.0);
+                    b.for_range(Val::I(0), Val::I(NNZ_PER_ROW as i64), 1, |b, _j| {
+                        let col = b.it();
+                        b.ld(MemWidth::U32, col, cc, 0);
+                        // raw addr of p[col]
+                        let th = b.it();
+                        b.bin(IntOp::Srl, th, col, Val::I(l2chunk));
+                        b.bin(IntOp::Add, th, th, Val::I(1));
+                        b.bin(IntOp::Sll, th, th, Val::I(32));
+                        let off = b.it();
+                        b.bin(IntOp::And, off, col, Val::I(chunk as i64 - 1));
+                        b.bin(IntOp::Sll, off, off, Val::I(3));
+                        b.bin(IntOp::Add, th, th, Val::R(off));
+                        b.free_i(off);
+                        let fv = b.ft();
+                        let fa = b.ft();
+                        b.ld(MemWidth::F64, fv, th, p_va as i32);
+                        b.free_i(th);
+                        b.ld(MemWidth::F64, fa, ca, 0);
+                        b.fbin(FpOp::FMul, fv, fv, fa);
+                        b.fbin(FpOp::FAdd, facc, facc, fv);
+                        b.free_f(fa);
+                        b.free_f(fv);
+                        b.free_i(col);
+                        b.add(ca, ca, Val::I(8));
+                        b.add(cc, cc, Val::I(4));
+                    });
+                    b.st(MemWidth::F64, facc, cq, 0);
+                    b.add(cq, cq, Val::I(8));
+                    b.free_f(facc);
+                });
+                b.free_i(cq);
+                b.free_i(cc);
+                b.free_i(ca);
+            }
+        }
+
+        // record my partial into the non-pow2 w_tmp struct (first f64
+        // field) — HW must fall back to software increments here
+        {
+            let pw = b.sptr_init(wtmp, Val::I(0));
+            b.sptr_inc(pw, wtmp, Val::R(myt));
+            b.sptr_st(MemWidth::F64, fone, pw, 0);
+            b.free_i(pw);
+        }
+        b.barrier();
+
+        // ---------- thread 0: s = Σ q[i] (remote-heavy) ----------
+        b.iff(Cond::Eq, myt, |b| {
+            let fs = b.fconst(0.0);
+            match source {
+                SourceVariant::Unoptimized => {
+                    let pqa = b.sptr_init(q, Val::I(0));
+                    b.for_range(Val::I(0), Val::I(n as i64), 1, |b, _| {
+                        let fv = b.ft();
+                        b.sptr_ld(MemWidth::F64, fv, pqa, 0);
+                        b.fbin(FpOp::FAdd, fs, fs, fv);
+                        b.free_f(fv);
+                        b.sptr_inc(pqa, q, Val::I(1));
+                    });
+                    b.free_i(pqa);
+                }
+                SourceVariant::Privatized => {
+                    // hand-tuned reduction: raw cursor per remote chunk
+                    // (the blocked layout is contiguous per thread).
+                    // NB: summation order over q is identical to the
+                    // shared-pointer walk (thread-major), so the f64
+                    // result is bit-identical.
+                    let q_va = b.rt.array(q).base_va as i64;
+                    b.for_range(Val::I(0), Val::I(threads as i64), 1, |b, u| {
+                        let raw = b.it();
+                        b.bin(IntOp::Add, raw, u, Val::I(1));
+                        b.bin(IntOp::Sll, raw, raw, Val::I(32));
+                        b.bin(IntOp::Add, raw, raw, Val::I(q_va));
+                        b.for_range(Val::I(0), Val::I(chunk as i64), 1, |b, _| {
+                            let fv = b.ft();
+                            b.ld(MemWidth::F64, fv, raw, 0);
+                            b.fbin(FpOp::FAdd, fs, fs, fv);
+                            b.free_f(fv);
+                            b.add(raw, raw, Val::I(8));
+                        });
+                        b.free_i(raw);
+                    });
+                }
+            }
+            let pg = b.sptr_init(gsum, Val::I(0));
+            b.sptr_st(MemWidth::F64, fs, pg, 0);
+            b.free_i(pg);
+            b.free_f(fs);
+        });
+        b.barrier();
+
+        // ---------- p = q * 1/(1 + |s|/n) over my rows ----------
+        {
+            let pg = b.sptr_init(gsum, Val::I(0));
+            let fs = b.ft();
+            b.sptr_ld(MemWidth::F64, fs, pg, 0);
+            b.free_i(pg);
+            b.fbin(FpOp::FMul, fs, fs, fninv);
+            b.fbin(FpOp::FAbs, fs, fs, fs);
+            b.fbin(FpOp::FAdd, fs, fs, fone);
+            let fscale = b.ft();
+            b.fbin(FpOp::FDiv, fscale, fone, fs);
+            b.free_f(fs);
+            match source {
+                SourceVariant::Unoptimized => {
+                    let pq2 = b.sptr_init(q, Val::R(rowstart));
+                    let pp2 = b.sptr_init(p, Val::R(rowstart));
+                    b.for_range(Val::I(0), Val::I(chunk as i64), 1, |b, _| {
+                        let fv = b.ft();
+                        b.sptr_ld(MemWidth::F64, fv, pq2, 0);
+                        b.fbin(FpOp::FMul, fv, fv, fscale);
+                        b.sptr_st(MemWidth::F64, fv, pp2, 0);
+                        b.free_f(fv);
+                        b.sptr_inc(pq2, q, Val::I(1));
+                        b.sptr_inc(pp2, p, Val::I(1));
+                    });
+                    b.free_i(pp2);
+                    b.free_i(pq2);
+                }
+                SourceVariant::Privatized => {
+                    let cq = b.local_addr(q, Val::I(0));
+                    let cp = b.local_addr(p, Val::I(0));
+                    b.for_range(Val::I(0), Val::I(chunk as i64), 1, |b, _| {
+                        let fv = b.ft();
+                        b.ld(MemWidth::F64, fv, cq, 0);
+                        b.fbin(FpOp::FMul, fv, fv, fscale);
+                        b.st(MemWidth::F64, fv, cp, 0);
+                        b.free_f(fv);
+                        b.add(cq, cq, Val::I(8));
+                        b.add(cp, cp, Val::I(8));
+                    });
+                    b.free_i(cp);
+                    b.free_i(cq);
+                }
+            }
+            b.free_f(fscale);
+        }
+        b.barrier();
+
+        b.bin(IntOp::Sub, iter, iter, Val::I(1));
+    });
+    b.free_i(iter);
+    let module = b.finish("cg");
+
+    let colidx_setup = colidx_data.clone();
+    let aval_setup = aval_data.clone();
+    let setup = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
+        for (i, &c) in colidx_setup.iter().enumerate() {
+            rt.write_u64(mem, colidx, i as u64, c as u64);
+        }
+        for (i, &v) in aval_setup.iter().enumerate() {
+            rt.write_f64(mem, aval, i as u64, v);
+        }
+        for i in 0..n {
+            rt.write_f64(mem, p, i, 1.0 + (i % 7) as f64 * 0.125);
+            rt.write_f64(mem, q, i, 0.0);
+        }
+    });
+
+    let validate = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
+        let want = host_reference(n, threads, &colidx_data, &aval_data);
+        for i in 0..n {
+            let got = rt.read_f64(mem, p, i);
+            let w = want[i as usize];
+            if (got - w).abs() > 1e-9 * w.abs().max(1.0) {
+                return Err(format!("p[{i}] = {got}, want {w}"));
+            }
+        }
+        Ok(())
+    });
+
+    BuiltKernel { rt, module, setup, validate }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::CpuModel;
+    use crate::npb::{compile_only, run, Kernel, PaperVariant};
+
+    #[test]
+    fn cg_validates_in_all_variants() {
+        let scale = Scale { factor: 64 };
+        for v in PaperVariant::ALL {
+            let out = run(Kernel::Cg, v, CpuModel::Atomic, 4, &scale);
+            assert!(out.result.cycles > 0, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn cg_hw_beats_manual_and_has_soft_fallback() {
+        let scale = Scale { factor: 64 };
+        let t = 4;
+        let unopt = run(Kernel::Cg, PaperVariant::Unopt, CpuModel::Atomic, t, &scale);
+        let manual = run(Kernel::Cg, PaperVariant::Manual, CpuModel::Atomic, t, &scale);
+        let hw = run(Kernel::Cg, PaperVariant::Hw, CpuModel::Atomic, t, &scale);
+        let (cu, cm, ch) = (
+            unopt.result.cycles as f64,
+            manual.result.cycles as f64,
+            hw.result.cycles as f64,
+        );
+        assert!(cu / ch > 1.8, "CG hw speedup {:.2} should be ~2.6x", cu / ch);
+        assert!(ch < cm, "hw ({ch}) should beat manual ({cm}) on CG");
+        // the non-pow2 w_tmp array forces software fallback increments
+        assert!(hw.compile_stats.soft_incs > 0, "w_tmp must fall back");
+        assert!(hw.compile_stats.hw_incs > 0);
+    }
+
+    #[test]
+    fn cg_census_mixes_hw_and_soft() {
+        let (_, stats) = compile_only(
+            Kernel::Cg,
+            4,
+            PaperVariant::Hw,
+            &Scale { factor: 64 },
+        );
+        assert!(stats.hw_mems > 0);
+        assert!(stats.soft_incs > 0 && stats.hw_incs > stats.soft_incs);
+    }
+}

@@ -1,0 +1,246 @@
+//! EP — Embarrassingly Parallel (pair generation + acceptance counting).
+//!
+//! The paper's control case: the main loop contains **no shared-pointer
+//! operations**, so hardware support buys nothing (Figure 6).  Each
+//! thread generates its share of pseudo-random pairs with a 30-bit LCG
+//! (an ISA-friendly stand-in for the NAS `randlc` whose 46-bit modular
+//! product needs split arithmetic), counts pairs inside the unit circle,
+//! and accumulates the coordinate sums.  The only shared traffic is the
+//! final reduction of THREADS partial results.
+
+use super::{BuiltKernel, Scale};
+use crate::compiler::{IrBuilder, SourceVariant, Val};
+use crate::isa::{Cond, FpOp, IntOp, MemWidth};
+use crate::upc::UpcRuntime;
+
+/// LCG parameters (Numerical Recipes 32-bit, truncated to 30 bits so
+/// `a * x` never overflows the 64-bit multiply).
+const LCG_A: i64 = 1664525;
+const LCG_C: i64 = 1013904223;
+const LCG_MASK: i64 = (1 << 30) - 1;
+
+/// class W: 2^25 pairs.
+const CLASS_W_PAIRS: u64 = 1 << 25;
+
+fn lcg_next(x: u64) -> u64 {
+    ((LCG_A as u64).wrapping_mul(x).wrapping_add(LCG_C as u64)) & LCG_MASK as u64
+}
+
+/// Host-side reference: (accepted count, sum of accepted x, sum of y).
+fn host_reference(thread: u32, pairs: u64) -> (u64, f64, f64) {
+    let mut x = (0x2DEAD + 0x9E37 * thread as u64) & LCG_MASK as u64;
+    let (mut acc, mut sx, mut sy) = (0u64, 0.0f64, 0.0f64);
+    let scale = 1.0 / (1u64 << 30) as f64;
+    for _ in 0..pairs {
+        x = lcg_next(x);
+        let u1 = x as f64 * scale;
+        x = lcg_next(x);
+        let u2 = x as f64 * scale;
+        let (a, b) = (2.0 * u1 - 1.0, 2.0 * u2 - 1.0);
+        if a * a + b * b <= 1.0 {
+            acc += 1;
+            sx += a;
+            sy += b;
+        }
+    }
+    (acc, sx, sy)
+}
+
+pub fn build(threads: u32, source: SourceVariant, scale: &Scale) -> BuiltKernel {
+    let pairs_total = scale.dim(CLASS_W_PAIRS, 1 << 10);
+    let pairs_per = pairs_total / threads as u64;
+
+    let mut rt = UpcRuntime::new(threads);
+    // results: counts (u64) and sums (f64), cyclically distributed so
+    // slot t has affinity to thread t
+    let counts = rt.alloc_shared("ep_counts", 1, 8, threads as u64);
+    let sums_x = rt.alloc_shared("ep_sx", 1, 8, threads as u64);
+    let sums_y = rt.alloc_shared("ep_sy", 1, 8, threads as u64);
+    // reduced outputs (affinity thread 0)
+    let out = rt.alloc_shared("ep_out", 4, 8, 4);
+
+    let mut b = IrBuilder::new(&mut rt);
+    // ---- per-thread generation loop (no shared ops) ----
+    let myt = b.mythread();
+    let seed = b.it();
+    b.bin(IntOp::Mul, seed, myt, Val::I(0x9E37));
+    b.bin(IntOp::Add, seed, seed, Val::I(0x2DEAD));
+    b.bin(IntOp::And, seed, seed, Val::I(LCG_MASK));
+    let acc = b.iconst(0);
+    let fsx = b.fconst(0.0);
+    let fsy = b.fconst(0.0);
+    let fone = b.fconst(1.0);
+    let ftwo = b.fconst(2.0);
+    let fscale = b.fconst(1.0 / (1u64 << 30) as f64);
+
+    b.for_range(Val::I(0), Val::I(pairs_per as i64), 1, |b, _i| {
+        let fa = b.ft();
+        let fb = b.ft();
+        let ft = b.ft();
+        // u1
+        b.bin(IntOp::Mul, seed, seed, Val::I(LCG_A));
+        b.bin(IntOp::Add, seed, seed, Val::I(LCG_C));
+        b.bin(IntOp::And, seed, seed, Val::I(LCG_MASK));
+        b.cvt_if(fa, seed);
+        b.fbin(FpOp::FMul, fa, fa, fscale);
+        b.fbin(FpOp::FMul, fa, fa, ftwo);
+        b.fbin(FpOp::FSub, fa, fa, fone);
+        // u2
+        b.bin(IntOp::Mul, seed, seed, Val::I(LCG_A));
+        b.bin(IntOp::Add, seed, seed, Val::I(LCG_C));
+        b.bin(IntOp::And, seed, seed, Val::I(LCG_MASK));
+        b.cvt_if(fb, seed);
+        b.fbin(FpOp::FMul, fb, fb, fscale);
+        b.fbin(FpOp::FMul, fb, fb, ftwo);
+        b.fbin(FpOp::FSub, fb, fb, fone);
+        // t = a*a + b*b ; accept if t <= 1 (i.e. !(1 < t))
+        let fa2 = b.ft();
+        b.fbin(FpOp::FMul, fa2, fa, fa);
+        b.fbin(FpOp::FMul, ft, fb, fb);
+        b.fbin(FpOp::FAdd, ft, ft, fa2);
+        let cmp = b.it();
+        b.fcmplt(cmp, fone, ft); // 1 < t → reject
+        b.iff(Cond::Eq, cmp, |b| {
+            b.bin(IntOp::Add, acc, acc, Val::I(1));
+            b.fbin(FpOp::FAdd, fsx, fsx, fa);
+            b.fbin(FpOp::FAdd, fsy, fsy, fb);
+        });
+        b.free_i(cmp);
+        b.free_f(fa2);
+        b.free_f(ft);
+        b.free_f(fb);
+        b.free_f(fa);
+    });
+
+    // ---- publish partial results (tiny shared traffic) ----
+    match source {
+        SourceVariant::Unoptimized => {
+            let pc = b.sptr_init(counts, Val::R(myt));
+            let px = b.sptr_init(sums_x, Val::R(myt));
+            let py = b.sptr_init(sums_y, Val::R(myt));
+            b.sptr_st(MemWidth::U64, acc, pc, 0);
+            b.sptr_st(MemWidth::F64, fsx, px, 0);
+            b.sptr_st(MemWidth::F64, fsy, py, 0);
+            b.free_i(py);
+            b.free_i(px);
+            b.free_i(pc);
+        }
+        SourceVariant::Privatized => {
+            // own slot is affinity-local: store through a raw cursor
+            let ac = b.local_addr(counts, Val::I(0));
+            let ax = b.local_addr(sums_x, Val::I(0));
+            let ay = b.local_addr(sums_y, Val::I(0));
+            b.st(MemWidth::U64, acc, ac, 0);
+            b.st(MemWidth::F64, fsx, ax, 0);
+            b.st(MemWidth::F64, fsy, ay, 0);
+            b.free_i(ay);
+            b.free_i(ax);
+            b.free_i(ac);
+        }
+    }
+    b.barrier();
+
+    // ---- thread 0 reduces ----
+    b.iff(Cond::Eq, myt, |b| {
+        let tot = b.iconst(0);
+        let ftx = b.fconst(0.0);
+        let fty = b.fconst(0.0);
+        let pc = b.sptr_init(counts, Val::I(0));
+        let px = b.sptr_init(sums_x, Val::I(0));
+        let py = b.sptr_init(sums_y, Val::I(0));
+        let nt = b.threads();
+        b.for_range(Val::I(0), Val::R(nt), 1, |b, _t| {
+            let v = b.it();
+            b.sptr_ld(MemWidth::U64, v, pc, 0);
+            b.bin(IntOp::Add, tot, tot, Val::R(v));
+            let fv = b.ft();
+            b.sptr_ld(MemWidth::F64, fv, px, 0);
+            b.fbin(FpOp::FAdd, ftx, ftx, fv);
+            b.sptr_ld(MemWidth::F64, fv, py, 0);
+            b.fbin(FpOp::FAdd, fty, fty, fv);
+            b.sptr_inc(pc, counts, Val::I(1));
+            b.sptr_inc(px, sums_x, Val::I(1));
+            b.sptr_inc(py, sums_y, Val::I(1));
+            b.free_f(fv);
+            b.free_i(v);
+        });
+        let po = b.sptr_init(out, Val::I(0));
+        b.sptr_st(MemWidth::U64, tot, po, 0);
+        b.sptr_st(MemWidth::F64, ftx, po, 8);
+        b.sptr_st(MemWidth::F64, fty, po, 16);
+        b.free_i(po);
+        b.free_i(nt);
+        b.free_i(py);
+        b.free_i(px);
+        b.free_i(pc);
+        b.free_f(fty);
+        b.free_f(ftx);
+        b.free_i(tot);
+    });
+
+    let module = b.finish("ep");
+
+    let setup = Box::new(move |_rt: &UpcRuntime, _mem: &mut crate::mem::MemSystem| {});
+    let validate = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
+        let (mut want_n, mut want_x, mut want_y) = (0u64, 0.0, 0.0);
+        for t in 0..threads {
+            let (n, x, y) = host_reference(t, pairs_per);
+            want_n += n;
+            want_x += x;
+            want_y += y;
+        }
+        let got_n = rt.read_u64(mem, out, 0);
+        let a0 = rt.sysva(mem, out, 0);
+        let got_x = mem.read_f64(a0 + 8);
+        let got_y = mem.read_f64(a0 + 16);
+        if got_n != want_n {
+            return Err(format!("count {got_n} != {want_n}"));
+        }
+        if (got_x - want_x).abs() > 1e-9 * want_x.abs().max(1.0) {
+            return Err(format!("sx {got_x} != {want_x}"));
+        }
+        if (got_y - want_y).abs() > 1e-9 * want_y.abs().max(1.0) {
+            return Err(format!("sy {got_y} != {want_y}"));
+        }
+        Ok(())
+    });
+
+    BuiltKernel { rt, module, setup, validate }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::CpuModel;
+    use crate::npb::{run, Kernel, PaperVariant};
+
+    #[test]
+    fn ep_validates_in_all_variants() {
+        let scale = Scale { factor: 2048 };
+        for v in PaperVariant::ALL {
+            let out = run(Kernel::Ep, v, CpuModel::Atomic, 4, &scale);
+            assert!(out.result.cycles > 0);
+        }
+    }
+
+    #[test]
+    fn ep_hw_gains_are_negligible() {
+        // the paper's control: no shared pointers in the main loop
+        let scale = Scale { factor: 1024 };
+        let unopt = run(Kernel::Ep, PaperVariant::Unopt, CpuModel::Atomic, 4, &scale);
+        let hw = run(Kernel::Ep, PaperVariant::Hw, CpuModel::Atomic, 4, &scale);
+        let speedup = unopt.result.cycles as f64 / hw.result.cycles as f64;
+        assert!(
+            (0.95..1.10).contains(&speedup),
+            "EP speedup should be ~1.0, got {speedup:.3}"
+        );
+    }
+
+    #[test]
+    fn host_reference_acceptance_rate_sane() {
+        // ~π/4 of pairs fall in the unit circle
+        let (n, _, _) = host_reference(0, 10_000);
+        let rate = n as f64 / 10_000.0;
+        assert!((rate - std::f64::consts::FRAC_PI_4).abs() < 0.02, "{rate}");
+    }
+}

@@ -1,0 +1,540 @@
+//! FT — Fourier Transform kernel.
+//!
+//! Hardware adaptation: the paper's 3D FFT is realized as the canonical
+//! distributed 2-step FFT — radix-2 FFTs over the rows each thread owns,
+//! a global transpose (the all-to-all that dominates shared traffic),
+//! then FFTs over the transposed rows.  Twiddle factors and bit-reversal
+//! tables are precomputed into private memory, as the real FT does.
+//!
+//! The slab distribution limits the run to `N1 = 16` threads, exactly
+//! the paper's class-W constraint ("The FT kernel runs were limited to
+//! 16 cores due to the data distribution of the W class", Fig. 8).
+//!
+//! Paper shape (Figs. 8/12): HW ≈ 2.3× over unoptimized and ~17% ahead
+//! of the privatized code — the transpose's scattered remote stores
+//! cannot be privatized, so the hand-tuned source still pays software
+//! translation there.
+
+use super::{BuiltKernel, Scale};
+use crate::compiler::{IrBuilder, SourceVariant, Val};
+use crate::isa::{FpOp, IntOp, MemWidth};
+use crate::upc::{ArrayId, UpcRuntime};
+use crate::util::rng::Xoshiro256;
+
+/// Slab count (rows of the first FFT): the paper's 16-core cap.
+const N1: u64 = 16;
+/// class W second dimension: 128·128 columns, scaled.
+const CLASS_W_N2: u64 = 128 * 128;
+
+/// Complex values as (re, im) f64 pairs; element size 16 bytes.
+type Cpx = (f64, f64);
+
+fn bitrev(i: u64, bits: u32) -> u64 {
+    i.reverse_bits() >> (64 - bits)
+}
+
+/// In-place radix-2 DIT FFT, mirroring the simulated op order exactly.
+fn host_fft_row(x: &mut [Cpx], tw: &[Cpx]) {
+    let n = x.len() as u64;
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let r = bitrev(i, bits);
+        if i < r {
+            x.swap(i as usize, r as usize);
+        }
+    }
+    let mut half = 1u64;
+    while half < n {
+        let step = n / (2 * half);
+        let mut k = 0u64;
+        while k < n {
+            for j in 0..half {
+                let (wr, wi) = tw[(j * step) as usize];
+                let (ar, ai) = x[(k + j) as usize];
+                let (br, bi) = x[(k + j + half) as usize];
+                let tr = br * wr - bi * wi;
+                let ti = br * wi + bi * wr;
+                x[(k + j) as usize] = (ar + tr, ai + ti);
+                x[(k + j + half) as usize] = (ar - tr, ai - ti);
+            }
+            k += 2 * half;
+        }
+        half *= 2;
+    }
+}
+
+fn twiddles(n: u64) -> Vec<Cpx> {
+    (0..n / 2)
+        .map(|i| {
+            let ang = -2.0 * std::f64::consts::PI * i as f64 / n as f64;
+            (ang.cos(), ang.sin())
+        })
+        .collect()
+}
+
+fn input_data(n1: u64, n2: u64) -> Vec<Cpx> {
+    let mut rng = Xoshiro256::new(0xF7_0001);
+    (0..n1 * n2)
+        .map(|_| (rng.f64() - 0.5, rng.f64() - 0.5))
+        .collect()
+}
+
+/// Full host mirror: FFT rows of x (N1 x N2), transpose into y
+/// (N2 x N1), FFT rows of y.
+fn host_reference(n2: u64) -> Vec<Cpx> {
+    let mut x = input_data(N1, n2);
+    let twx = twiddles(n2);
+    for r in 0..N1 {
+        host_fft_row(&mut x[(r * n2) as usize..((r + 1) * n2) as usize], &twx);
+    }
+    let mut y = vec![(0.0, 0.0); (N1 * n2) as usize];
+    for r in 0..N1 {
+        for c in 0..n2 {
+            y[(c * N1 + r) as usize] = x[(r * n2 + c) as usize];
+        }
+    }
+    let twy = twiddles(N1);
+    for r in 0..n2 {
+        host_fft_row(&mut y[(r * N1) as usize..((r + 1) * N1) as usize], &twy);
+    }
+    y
+}
+
+pub fn build(threads: u32, source: SourceVariant, scale: &Scale) -> BuiltKernel {
+    assert!(threads as u64 <= N1, "FT slab distribution caps at {N1} threads");
+    let n2 = scale.dim(CLASS_W_N2, 64).next_power_of_two();
+    let rows_per = N1 / threads as u64; // rows of x per thread
+    let yrows_per = n2 / threads as u64; // rows of y per thread
+
+    let mut rt = UpcRuntime::new(threads);
+    // x: N1 x N2 complex, blocked so each thread owns its slab
+    let x = rt.alloc_shared("ft_x", rows_per * n2, 16, N1 * n2);
+    // y: N2 x N1 complex (transposed), blocked by y-rows
+    let y = rt.alloc_shared("ft_y", yrows_per * N1, 16, N1 * n2);
+
+    // private tables: twiddles for n2-point and N1-point FFTs, and
+    // bit-reversal tables for both lengths
+    let twx_off = rt.alloc_private(n2 / 2 * 16);
+    let twy_off = rt.alloc_private(N1 / 2 * 16);
+    let revx_off = rt.alloc_private(n2 * 8);
+    let revy_off = rt.alloc_private(N1 * 8);
+
+    let mut b = IrBuilder::new(&mut rt);
+    let myt = b.mythread();
+
+    /// Emit the FFT of `nrows` rows of `arr` (row length `n`, power of
+    /// 2), rows starting at `rowstart_mul * MYTHREAD`.  tw/rev are
+    /// private-table offsets.
+    #[allow(clippy::too_many_arguments)]
+    fn emit_fft_rows(
+        b: &mut IrBuilder,
+        source: SourceVariant,
+        myt: u8,
+        arr: ArrayId,
+        nrows: u64,
+        n: u64,
+        tw_off: u64,
+        rev_off: u64,
+    ) {
+        let l2n = n.trailing_zeros() as i64;
+        let pb = b.priv_base();
+        // row loop
+        b.for_range(Val::I(0), Val::I(nrows as i64), 1, |b, row| {
+            // global row = MYTHREAD * nrows + row;
+            // base element index of this row within arr
+            let rowbase = b.it();
+            b.bin(IntOp::Mul, rowbase, myt, Val::I(nrows as i64));
+            b.bin(IntOp::Add, rowbase, rowbase, Val::R(row));
+            b.bin(IntOp::Sll, rowbase, rowbase, Val::I(l2n));
+
+            // helper to produce the address/pointer of element
+            // rowbase + idx and read/write (re, im)
+            // -- bit-reversal permutation --
+            b.for_range(Val::I(0), Val::I(n as i64), 1, |b, i| {
+                // ri = rev[i]
+                let ri = b.it();
+                b.bin(IntOp::Sll, ri, i, Val::I(3));
+                b.bin(IntOp::Add, ri, ri, Val::R(pb));
+                b.ld(MemWidth::U64, ri, ri, rev_off as i32);
+                // if i < ri: swap elements rowbase+i, rowbase+ri
+                let cmp = b.it();
+                b.bin(IntOp::CmpLt, cmp, i, Val::R(ri));
+                b.iff(crate::isa::Cond::Ne, cmp, |b| {
+                    let ia = b.it();
+                    b.bin(IntOp::Add, ia, rowbase, Val::R(i));
+                    let ib = b.it();
+                    b.bin(IntOp::Add, ib, rowbase, Val::R(ri));
+                    let (fr1, fi1, fr2, fi2) = (b.ft(), b.ft(), b.ft(), b.ft());
+                    match source {
+                        SourceVariant::Unoptimized => {
+                            let pa = b.sptr_init(arr, Val::R(ia));
+                            let pc = b.sptr_init(arr, Val::R(ib));
+                            b.sptr_ld(MemWidth::F64, fr1, pa, 0);
+                            b.sptr_ld(MemWidth::F64, fi1, pa, 8);
+                            b.sptr_ld(MemWidth::F64, fr2, pc, 0);
+                            b.sptr_ld(MemWidth::F64, fi2, pc, 8);
+                            b.sptr_st(MemWidth::F64, fr2, pa, 0);
+                            b.sptr_st(MemWidth::F64, fi2, pa, 8);
+                            b.sptr_st(MemWidth::F64, fr1, pc, 0);
+                            b.sptr_st(MemWidth::F64, fi1, pc, 8);
+                            b.free_i(pc);
+                            b.free_i(pa);
+                        }
+                        SourceVariant::Privatized => {
+                            // own row: raw cursor arithmetic off the
+                            // thread-local base of arr
+                            let la = b.local_addr(arr, Val::I(0));
+                            // local element offset = ia - MYTHREAD*rows*n
+                            let loff = b.it();
+                            b.bin(IntOp::Mul, loff, myt, Val::I((nrows * n) as i64));
+                            let aa = b.it();
+                            b.bin(IntOp::Sub, aa, ia, Val::R(loff));
+                            b.bin(IntOp::Sll, aa, aa, Val::I(4));
+                            b.bin(IntOp::Add, aa, aa, Val::R(la));
+                            let ab = b.it();
+                            b.bin(IntOp::Sub, ab, ib, Val::R(loff));
+                            b.bin(IntOp::Sll, ab, ab, Val::I(4));
+                            b.bin(IntOp::Add, ab, ab, Val::R(la));
+                            b.ld(MemWidth::F64, fr1, aa, 0);
+                            b.ld(MemWidth::F64, fi1, aa, 8);
+                            b.ld(MemWidth::F64, fr2, ab, 0);
+                            b.ld(MemWidth::F64, fi2, ab, 8);
+                            b.st(MemWidth::F64, fr2, aa, 0);
+                            b.st(MemWidth::F64, fi2, aa, 8);
+                            b.st(MemWidth::F64, fr1, ab, 0);
+                            b.st(MemWidth::F64, fi1, ab, 8);
+                            b.free_i(ab);
+                            b.free_i(aa);
+                            b.free_i(loff);
+                            b.free_i(la);
+                        }
+                    }
+                    b.free_f(fi2);
+                    b.free_f(fr2);
+                    b.free_f(fi1);
+                    b.free_f(fr1);
+                    b.free_i(ib);
+                    b.free_i(ia);
+                });
+                b.free_i(cmp);
+                b.free_i(ri);
+            });
+
+            // -- butterfly levels --
+            let half = b.it();
+            b.mov(half, Val::I(1));
+            let level_count = b.iconst(l2n);
+            b.do_while(crate::isa::Cond::Gt, level_count, |b| {
+                // step = n / (2*half): tw stride for this level
+                let step = b.it();
+                b.mov(step, Val::I(n as i64));
+                b.bin(IntOp::Srl, step, step, Val::I(1));
+                let tmp = b.it();
+                // step = (n/2) / half via divide-by-shift: half is pow2
+                // but its log2 is dynamic → use Div (cheap once/level)
+                b.bin(IntOp::Div, step, step, Val::R(half));
+                b.free_i(tmp);
+                // k loop: k += 2*half
+                let k = b.it();
+                b.mov(k, Val::I(0));
+                let nreg = b.iconst(n as i64);
+                let kcond = b.it();
+                b.do_while(crate::isa::Cond::Ne, kcond, |b| {
+                    b.for_range(Val::I(0), Val::R(half), 1, |b, j| {
+                        // twiddle = tw[j * step]
+                        let ti = b.it();
+                        b.bin(IntOp::Mul, ti, j, Val::R(step));
+                        b.bin(IntOp::Sll, ti, ti, Val::I(4));
+                        b.bin(IntOp::Add, ti, ti, Val::R(pb));
+                        let (fwr, fwi) = (b.ft(), b.ft());
+                        b.ld(MemWidth::F64, fwr, ti, tw_off as i32);
+                        b.ld(MemWidth::F64, fwi, ti, tw_off as i32 + 8);
+                        b.free_i(ti);
+                        // element indices a = rowbase+k+j, c = a+half
+                        let ia = b.it();
+                        b.bin(IntOp::Add, ia, rowbase, Val::R(k));
+                        b.bin(IntOp::Add, ia, ia, Val::R(j));
+                        let ib = b.it();
+                        b.bin(IntOp::Add, ib, ia, Val::R(half));
+                        let (far, fai, fbr, fbi) = (b.ft(), b.ft(), b.ft(), b.ft());
+                        let (ftr, fti) = (b.ft(), b.ft());
+                        // load a and b elements
+                        let do_rw = |b: &mut IrBuilder,
+                                     load: bool,
+                                     idx: u8,
+                                     fr: u8,
+                                     fi: u8| {
+                            match source {
+                                SourceVariant::Unoptimized => {
+                                    let pp = b.sptr_init(arr, Val::R(idx));
+                                    if load {
+                                        b.sptr_ld(MemWidth::F64, fr, pp, 0);
+                                        b.sptr_ld(MemWidth::F64, fi, pp, 8);
+                                    } else {
+                                        b.sptr_st(MemWidth::F64, fr, pp, 0);
+                                        b.sptr_st(MemWidth::F64, fi, pp, 8);
+                                    }
+                                    b.free_i(pp);
+                                }
+                                SourceVariant::Privatized => {
+                                    let la = b.local_addr(arr, Val::I(0));
+                                    let loff = b.it();
+                                    b.bin(
+                                        IntOp::Mul,
+                                        loff,
+                                        myt,
+                                        Val::I((nrows * n) as i64),
+                                    );
+                                    let aa = b.it();
+                                    b.bin(IntOp::Sub, aa, idx, Val::R(loff));
+                                    b.bin(IntOp::Sll, aa, aa, Val::I(4));
+                                    b.bin(IntOp::Add, aa, aa, Val::R(la));
+                                    if load {
+                                        b.ld(MemWidth::F64, fr, aa, 0);
+                                        b.ld(MemWidth::F64, fi, aa, 8);
+                                    } else {
+                                        b.st(MemWidth::F64, fr, aa, 0);
+                                        b.st(MemWidth::F64, fi, aa, 8);
+                                    }
+                                    b.free_i(aa);
+                                    b.free_i(loff);
+                                    b.free_i(la);
+                                }
+                            }
+                        };
+                        do_rw(b, true, ia, far, fai);
+                        do_rw(b, true, ib, fbr, fbi);
+                        // t = b * w (complex)
+                        let fs = b.ft();
+                        b.fbin(FpOp::FMul, ftr, fbr, fwr);
+                        b.fbin(FpOp::FMul, fs, fbi, fwi);
+                        b.fbin(FpOp::FSub, ftr, ftr, fs);
+                        b.fbin(FpOp::FMul, fti, fbr, fwi);
+                        b.fbin(FpOp::FMul, fs, fbi, fwr);
+                        b.fbin(FpOp::FAdd, fti, fti, fs);
+                        b.free_f(fs);
+                        // a' = a + t ; b' = a - t
+                        b.fbin(FpOp::FSub, fbr, far, ftr);
+                        b.fbin(FpOp::FSub, fbi, fai, fti);
+                        b.fbin(FpOp::FAdd, far, far, ftr);
+                        b.fbin(FpOp::FAdd, fai, fai, fti);
+                        do_rw(b, false, ia, far, fai);
+                        do_rw(b, false, ib, fbr, fbi);
+                        b.free_f(fti);
+                        b.free_f(ftr);
+                        b.free_f(fbi);
+                        b.free_f(fbr);
+                        b.free_f(fai);
+                        b.free_f(far);
+                        b.free_i(ib);
+                        b.free_i(ia);
+                        b.free_f(fwi);
+                        b.free_f(fwr);
+                    });
+                    // k += 2*half ; continue while k != n
+                    b.bin(IntOp::Add, k, k, Val::R(half));
+                    b.bin(IntOp::Add, k, k, Val::R(half));
+                    b.bin(IntOp::Sub, kcond, k, Val::R(nreg));
+                });
+                b.free_i(kcond);
+                b.free_i(nreg);
+                b.free_i(k);
+                b.free_i(step);
+                // half *= 2 ; level_count -= 1
+                b.bin(IntOp::Sll, half, half, Val::I(1));
+                b.bin(IntOp::Add, level_count, level_count, Val::I(-1));
+            });
+            b.free_i(level_count);
+            b.free_i(half);
+            b.free_i(rowbase);
+        });
+        b.free_i(pb);
+    }
+
+    // ---- step 1: FFT my rows of x (length n2) ----
+    emit_fft_rows(&mut b, source, myt, x, rows_per, n2, twx_off, revx_off);
+    b.barrier();
+
+    // ---- step 2: transpose x -> y (scattered remote stores) ----
+    // y[c*N1 + r] = x[r*n2 + c] for my rows r.  Reads of x are local
+    // (privatizable); writes to y land on every thread — they stay on
+    // shared pointers in all source variants.
+    {
+        let r0 = b.it();
+        b.bin(IntOp::Mul, r0, myt, Val::I(rows_per as i64));
+        b.for_range(Val::I(0), Val::I(rows_per as i64), 1, |b, rr| {
+            let rg = b.it();
+            b.bin(IntOp::Add, rg, r0, Val::R(rr));
+            b.for_range(Val::I(0), Val::I(n2 as i64), 1, |b, c| {
+                let (fr, fi) = (b.ft(), b.ft());
+                // read x[rg*n2 + c]
+                let ix = b.it();
+                b.bin(IntOp::Mul, ix, rg, Val::I(n2 as i64));
+                b.bin(IntOp::Add, ix, ix, Val::R(c));
+                match source {
+                    SourceVariant::Unoptimized => {
+                        let px = b.sptr_init(x, Val::R(ix));
+                        b.sptr_ld(MemWidth::F64, fr, px, 0);
+                        b.sptr_ld(MemWidth::F64, fi, px, 8);
+                        b.free_i(px);
+                    }
+                    SourceVariant::Privatized => {
+                        let la = b.local_addr(x, Val::I(0));
+                        let loff = b.it();
+                        b.bin(IntOp::Mul, loff, myt, Val::I((rows_per * n2) as i64));
+                        let aa = b.it();
+                        b.bin(IntOp::Sub, aa, ix, Val::R(loff));
+                        b.bin(IntOp::Sll, aa, aa, Val::I(4));
+                        b.bin(IntOp::Add, aa, aa, Val::R(la));
+                        b.ld(MemWidth::F64, fr, aa, 0);
+                        b.ld(MemWidth::F64, fi, aa, 8);
+                        b.free_i(aa);
+                        b.free_i(loff);
+                        b.free_i(la);
+                    }
+                }
+                b.free_i(ix);
+                // write y[c*N1 + rg] — the remote scatter
+                let iy = b.it();
+                b.bin(IntOp::Mul, iy, c, Val::I(N1 as i64));
+                b.bin(IntOp::Add, iy, iy, Val::R(rg));
+                match source {
+                    SourceVariant::Unoptimized => {
+                        let py = b.sptr_init(y, Val::R(iy));
+                        b.sptr_st(MemWidth::F64, fr, py, 0);
+                        b.sptr_st(MemWidth::F64, fi, py, 8);
+                        b.free_i(py);
+                    }
+                    SourceVariant::Privatized => {
+                        // hand-tuned scatter: raw cast address — the
+                        // software translation the hardware eliminates,
+                        // but without Algorithm 1's divisions
+                        let y_va = b.rt.array(y).base_va as i64;
+                        let blk = yrows_per * N1; // elems per thread
+                        let l2blk = blk.trailing_zeros() as i64;
+                        let th = b.it();
+                        b.bin(IntOp::Srl, th, iy, Val::I(l2blk));
+                        b.bin(IntOp::Add, th, th, Val::I(1));
+                        b.bin(IntOp::Sll, th, th, Val::I(32));
+                        let off = b.it();
+                        b.bin(IntOp::And, off, iy, Val::I(blk as i64 - 1));
+                        b.bin(IntOp::Sll, off, off, Val::I(4));
+                        b.bin(IntOp::Add, th, th, Val::R(off));
+                        b.free_i(off);
+                        b.bin(IntOp::Add, th, th, Val::I(y_va));
+                        b.st(MemWidth::F64, fr, th, 0);
+                        b.st(MemWidth::F64, fi, th, 8);
+                        b.free_i(th);
+                    }
+                }
+                b.free_i(iy);
+                b.free_f(fi);
+                b.free_f(fr);
+            });
+            b.free_i(rg);
+        });
+        b.free_i(r0);
+    }
+    b.barrier();
+
+    // ---- step 3: FFT my rows of y (length N1) ----
+    emit_fft_rows(&mut b, source, myt, y, yrows_per, N1, twy_off, revy_off);
+
+    let module = b.finish("ft");
+
+    let data = input_data(N1, n2);
+    let setup = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
+        for (i, &(re, im)) in data.iter().enumerate() {
+            let a = rt.sysva(mem, x, i as u64);
+            mem.write_f64(a, re);
+            mem.write_f64(a + 8, im);
+        }
+        // private tables, identical on every thread
+        let twx = twiddles(n2);
+        let twy = twiddles(N1);
+        for t in 0..threads {
+            for (i, &(re, im)) in twx.iter().enumerate() {
+                let a = rt.priv_sysva(t, twx_off + i as u64 * 16);
+                mem.write_f64(a, re);
+                mem.write_f64(a + 8, im);
+            }
+            for (i, &(re, im)) in twy.iter().enumerate() {
+                let a = rt.priv_sysva(t, twy_off + i as u64 * 16);
+                mem.write_f64(a, re);
+                mem.write_f64(a + 8, im);
+            }
+            for i in 0..n2 {
+                let a = rt.priv_sysva(t, revx_off + i * 8);
+                mem.write(MemWidth::U64, a, bitrev(i, n2.trailing_zeros()));
+            }
+            for i in 0..N1 {
+                let a = rt.priv_sysva(t, revy_off + i * 8);
+                mem.write(MemWidth::U64, a, bitrev(i, N1.trailing_zeros()));
+            }
+        }
+    });
+
+    let validate = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
+        let want = host_reference(n2);
+        for i in 0..(N1 * n2) {
+            let a = rt.sysva(mem, y, i);
+            let gr = mem.read_f64(a);
+            let gi = mem.read_f64(a + 8);
+            let (wr, wi) = want[i as usize];
+            if (gr - wr).abs() > 1e-9 * wr.abs().max(1.0)
+                || (gi - wi).abs() > 1e-9 * wi.abs().max(1.0)
+            {
+                return Err(format!("y[{i}] = ({gr},{gi}), want ({wr},{wi})"));
+            }
+        }
+        Ok(())
+    });
+
+    BuiltKernel { rt, module, setup, validate }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::CpuModel;
+    use crate::npb::{run, Kernel, PaperVariant};
+
+    #[test]
+    fn host_fft_parseval() {
+        let n = 64;
+        let mut x: Vec<Cpx> = (0..n).map(|i| ((i % 5) as f64 - 2.0, 0.0)).collect();
+        let energy_t: f64 = x.iter().map(|(r, i)| r * r + i * i).sum();
+        let tw = twiddles(n as u64);
+        host_fft_row(&mut x, &tw);
+        let energy_f: f64 = x.iter().map(|(r, i)| r * r + i * i).sum();
+        assert!(
+            ((energy_f / n as f64) - energy_t).abs() < 1e-9 * energy_t,
+            "Parseval violated: {energy_f} vs {energy_t}"
+        );
+    }
+
+    #[test]
+    fn ft_validates_in_all_variants() {
+        let scale = Scale { factor: 256 };
+        for v in PaperVariant::ALL {
+            let out = run(Kernel::Ft, v, CpuModel::Atomic, 4, &scale);
+            assert!(out.result.cycles > 0, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn ft_hw_beats_manual() {
+        let scale = Scale { factor: 256 };
+        let t = 4;
+        let unopt = run(Kernel::Ft, PaperVariant::Unopt, CpuModel::Atomic, t, &scale);
+        let manual = run(Kernel::Ft, PaperVariant::Manual, CpuModel::Atomic, t, &scale);
+        let hw = run(Kernel::Ft, PaperVariant::Hw, CpuModel::Atomic, t, &scale);
+        let (cu, cm, ch) = (
+            unopt.result.cycles as f64,
+            manual.result.cycles as f64,
+            hw.result.cycles as f64,
+        );
+        assert!(cu / ch > 1.5, "FT hw speedup {:.2} should be ~2.3x", cu / ch);
+        assert!(ch < cm, "hw ({ch}) should beat manual ({cm}) on FT");
+    }
+}

@@ -1,0 +1,307 @@
+//! IS — Integer Sort (bucket/counting sort of small integers).
+//!
+//! Structure follows the UPC NPB IS: each thread histograms its own
+//! blocked chunk of the key array into its own slice of a shared
+//! histogram (phase 1), then after a barrier the threads cooperatively
+//! reduce the per-thread histograms into global bucket counts (phase 2,
+//! inherently remote).  The manual optimization privatizes phase 1 (own
+//! chunk, own histogram slice are affinity-local); phase 2 cannot be
+//! privatized and stays on shared pointers in every variant.
+//!
+//! Paper shape (Figs. 9/13): HW ≈ 3× over unoptimized, but ~13% behind
+//! the privatized code — phase 1 is store-heavy and every HW store pays
+//! the volatile-asm reload (see `CompileOpts::volatile_stores`).
+
+use super::{BuiltKernel, Scale};
+use crate::compiler::{IrBuilder, SourceVariant, Val};
+use crate::isa::{IntOp, MemWidth};
+use crate::upc::UpcRuntime;
+use crate::util::rng::Xoshiro256;
+
+/// class W: 2^20 keys.
+const CLASS_W_KEYS: u64 = 1 << 20;
+/// Bucket count (scaled-down key range).
+const NBUCKETS: u64 = 512;
+
+fn host_keys(n: u64) -> Vec<u32> {
+    let mut rng = Xoshiro256::new(0x15AB_0001);
+    (0..n).map(|_| rng.below(NBUCKETS) as u32).collect()
+}
+
+pub fn build(threads: u32, source: SourceVariant, scale: &Scale) -> BuiltKernel {
+    let n = scale.dim(CLASS_W_KEYS, 1 << 10).next_power_of_two();
+    let chunk = n / threads as u64;
+    assert!(chunk >= 1);
+    let kb = NBUCKETS / threads as u64; // buckets ranked per thread
+    assert!(kb >= 1, "too many threads for {NBUCKETS} buckets");
+
+    let mut rt = UpcRuntime::new(threads);
+    // keys: blocked so thread t owns keys[t*chunk .. (t+1)*chunk)
+    let keys = rt.alloc_shared("is_keys", chunk, 4, n);
+    // per-thread histograms: thread t owns hist[t*NB .. (t+1)*NB)
+    let hist = rt.alloc_shared("is_hist", NBUCKETS, 8, NBUCKETS * threads as u64);
+    // global bucket totals, cyclic
+    let totals = rt.alloc_shared("is_totals", 1, 8, NBUCKETS);
+
+    let mut b = IrBuilder::new(&mut rt);
+    let myt = b.mythread();
+
+    // ---- zero own histogram slice ----
+    match source {
+        SourceVariant::Unoptimized => {
+            let base = b.it();
+            b.bin(IntOp::Mul, base, myt, Val::I(NBUCKETS as i64));
+            let ph = b.sptr_init(hist, Val::R(base));
+            let zero = b.iconst(0);
+            b.for_range(Val::I(0), Val::I(NBUCKETS as i64), 1, |b, _| {
+                b.sptr_st(MemWidth::U64, zero, ph, 0);
+                b.sptr_inc(ph, hist, Val::I(1));
+            });
+            b.free_i(zero);
+            b.free_i(ph);
+            b.free_i(base);
+        }
+        SourceVariant::Privatized => {
+            let cur = b.local_addr(hist, Val::I(0));
+            let zero = b.iconst(0);
+            b.for_range(Val::I(0), Val::I(NBUCKETS as i64), 1, |b, _| {
+                b.st(MemWidth::U64, zero, cur, 0);
+                b.add(cur, cur, Val::I(8));
+            });
+            b.free_i(zero);
+            b.free_i(cur);
+        }
+    }
+    b.barrier();
+
+    // ---- phase 1: histogram own chunk ----
+    match source {
+        SourceVariant::Unoptimized => {
+            // walk own chunk through a shared pointer; update the
+            // histogram through per-key shared pointer arithmetic
+            let start = b.it();
+            b.bin(IntOp::Mul, start, myt, Val::I(chunk as i64));
+            let pk = b.sptr_init(keys, Val::R(start));
+            let hbase = b.it();
+            b.bin(IntOp::Mul, hbase, myt, Val::I(NBUCKETS as i64));
+            b.for_range(Val::I(0), Val::I(chunk as i64), 1, |b, _| {
+                let key = b.it();
+                b.sptr_ld(MemWidth::U32, key, pk, 0);
+                b.bin(IntOp::Add, key, key, Val::R(hbase));
+                // hist[myt*NB + key] += 1  (fresh pointer per access,
+                // as the unoptimized `hist[idx]++` compiles)
+                let ph = b.sptr_init(hist, Val::R(key));
+                let c = b.it();
+                b.sptr_ld(MemWidth::U64, c, ph, 0);
+                b.bin(IntOp::Add, c, c, Val::I(1));
+                b.sptr_st(MemWidth::U64, c, ph, 0);
+                b.free_i(c);
+                b.free_i(ph);
+                b.free_i(key);
+                b.sptr_inc(pk, keys, Val::I(1));
+            });
+            b.free_i(hbase);
+            b.free_i(pk);
+            b.free_i(start);
+        }
+        SourceVariant::Privatized => {
+            // both the chunk and the histogram slice are local: raw
+            // pointers (the hand-optimized IS)
+            let ck = b.local_addr(keys, Val::I(0));
+            let hb = b.local_addr(hist, Val::I(0));
+            b.for_range(Val::I(0), Val::I(chunk as i64), 1, |b, _| {
+                let key = b.it();
+                b.ld(MemWidth::U32, key, ck, 0);
+                b.bin(IntOp::Sll, key, key, Val::I(3));
+                let ha = b.it();
+                b.bin(IntOp::Add, ha, hb, Val::R(key));
+                let c = b.it();
+                b.ld(MemWidth::U64, c, ha, 0);
+                b.bin(IntOp::Add, c, c, Val::I(1));
+                b.st(MemWidth::U64, c, ha, 0);
+                b.free_i(c);
+                b.free_i(ha);
+                b.free_i(key);
+                b.add(ck, ck, Val::I(4));
+            });
+            b.free_i(hb);
+            b.free_i(ck);
+        }
+    }
+    b.barrier();
+
+    // ---- phase 2: rank my bucket range (remote reads) ----
+    match source {
+        SourceVariant::Unoptimized => {
+            // per-bucket stride-NBUCKETS shared-pointer walk
+            let kstart = b.it();
+            b.bin(IntOp::Mul, kstart, myt, Val::I(kb as i64));
+            let kend = b.it();
+            b.bin(IntOp::Add, kend, kstart, Val::I(kb as i64));
+            // running output pointer over totals[kstart..kend)
+            let pt = b.sptr_init(totals, Val::R(kstart));
+            let nt = b.threads();
+            b.for_range(Val::R(kstart), Val::R(kend), 1, |b, k| {
+                let acc = b.iconst(0);
+                // sum hist[u*NB + k] over u — stride NBUCKETS walk
+                let ph = b.sptr_init(hist, Val::R(k));
+                b.for_range(Val::I(0), Val::R(nt), 1, |b, _| {
+                    let v = b.it();
+                    b.sptr_ld(MemWidth::U64, v, ph, 0);
+                    b.bin(IntOp::Add, acc, acc, Val::R(v));
+                    b.sptr_inc(ph, hist, Val::I(NBUCKETS as i64));
+                    b.free_i(v);
+                });
+                b.sptr_st(MemWidth::U64, acc, pt, 0);
+                b.sptr_inc(pt, totals, Val::I(1));
+                b.free_i(ph);
+                b.free_i(acc);
+            });
+            b.free_i(nt);
+            b.free_i(pt);
+            b.free_i(kend);
+            b.free_i(kstart);
+        }
+        SourceVariant::Privatized => {
+            // the hand-tuned IS bulk-copies each thread's histogram
+            // slice (upc_memget / raw-cast on SMP) and reduces in
+            // private memory; even the totals stores go through raw
+            // per-thread base pointers — no per-element Algorithm 1.
+            let hist_va = b.rt.array(hist).base_va as i64;
+            let totals_va = b.rt.array(totals).base_va as i64;
+            let acc_off = b.rt.alloc_private(kb * 8) as i32;
+            let pb = b.priv_base();
+            // zero the private accumulator
+            let zero = b.iconst(0);
+            let pa = b.it();
+            b.bin(IntOp::Add, pa, pb, Val::I(acc_off as i64));
+            b.for_range(Val::I(0), Val::I(kb as i64), 1, |b, _| {
+                b.st(MemWidth::U64, zero, pa, 0);
+                b.add(pa, pa, Val::I(8));
+            });
+            b.free_i(pa);
+            b.free_i(zero);
+            let kstart = b.it();
+            b.bin(IntOp::Mul, kstart, myt, Val::I(kb as i64));
+            // accumulate each thread's slice
+            b.for_range(Val::I(0), Val::I(threads as i64), 1, |b, u| {
+                // raw = seg_base(u) + hist_va + kstart*8
+                let raw = b.it();
+                b.bin(IntOp::Add, raw, u, Val::I(1));
+                b.bin(IntOp::Sll, raw, raw, Val::I(32));
+                b.bin(IntOp::Add, raw, raw, Val::I(hist_va));
+                let ks8 = b.it();
+                b.bin(IntOp::Sll, ks8, kstart, Val::I(3));
+                b.bin(IntOp::Add, raw, raw, Val::R(ks8));
+                b.free_i(ks8);
+                let acc = b.it();
+                b.bin(IntOp::Add, acc, pb, Val::I(acc_off as i64));
+                b.for_range(Val::I(0), Val::I(kb as i64), 1, |b, _| {
+                    let v = b.it();
+                    b.ld(MemWidth::U64, v, raw, 0);
+                    let s = b.it();
+                    b.ld(MemWidth::U64, s, acc, 0);
+                    b.bin(IntOp::Add, s, s, Val::R(v));
+                    b.st(MemWidth::U64, s, acc, 0);
+                    b.free_i(s);
+                    b.free_i(v);
+                    b.add(raw, raw, Val::I(8));
+                    b.add(acc, acc, Val::I(8));
+                });
+                b.free_i(acc);
+                b.free_i(raw);
+            });
+            // write totals[kstart+i] via raw per-thread bases:
+            // thread(k) = k & (T-1), local offset = (k >> l2t)*8
+            let l2t = (threads as u64).trailing_zeros() as i64;
+            let acc = b.it();
+            b.bin(IntOp::Add, acc, pb, Val::I(acc_off as i64));
+            b.for_range(Val::I(0), Val::I(kb as i64), 1, |b, i| {
+                let k = b.it();
+                b.bin(IntOp::Add, k, kstart, Val::R(i));
+                let th = b.it();
+                b.bin(IntOp::And, th, k, Val::I(threads as i64 - 1));
+                b.bin(IntOp::Add, th, th, Val::I(1));
+                b.bin(IntOp::Sll, th, th, Val::I(32));
+                let off = b.it();
+                b.bin(IntOp::Srl, off, k, Val::I(l2t));
+                b.bin(IntOp::Sll, off, off, Val::I(3));
+                b.bin(IntOp::Add, th, th, Val::R(off));
+                b.free_i(off);
+                let v = b.it();
+                b.ld(MemWidth::U64, v, acc, 0);
+                b.st(MemWidth::U64, v, th, totals_va as i32);
+                b.free_i(v);
+                b.free_i(th);
+                b.free_i(k);
+                b.add(acc, acc, Val::I(8));
+            });
+            b.free_i(acc);
+            b.free_i(kstart);
+            b.free_i(pb);
+        }
+    }
+
+    let module = b.finish("is");
+
+    let keys_data = host_keys(n);
+    let keys_for_setup = keys_data.clone();
+    let setup = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
+        for (i, &k) in keys_for_setup.iter().enumerate() {
+            rt.write_u64(mem, keys, i as u64, k as u64);
+        }
+    });
+
+    let validate = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
+        let mut want = vec![0u64; NBUCKETS as usize];
+        for &k in &keys_data {
+            want[k as usize] += 1;
+        }
+        for k in 0..NBUCKETS {
+            let got = rt.read_u64(mem, totals, k);
+            if got != want[k as usize] {
+                return Err(format!(
+                    "bucket {k}: got {got}, want {}",
+                    want[k as usize]
+                ));
+            }
+        }
+        Ok(())
+    });
+
+    BuiltKernel { rt, module, setup, validate }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::CpuModel;
+    use crate::npb::{run, Kernel, PaperVariant};
+
+    #[test]
+    fn is_validates_in_all_variants() {
+        let scale = Scale { factor: 512 };
+        for v in PaperVariant::ALL {
+            let out = run(Kernel::Is, v, CpuModel::Atomic, 4, &scale);
+            assert!(out.result.cycles > 0, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn is_paper_ordering_holds() {
+        // unopt slowest; hw large gain; privatized slightly ahead of hw
+        let scale = Scale { factor: 256 };
+        let t = 4;
+        let unopt = run(Kernel::Is, PaperVariant::Unopt, CpuModel::Atomic, t, &scale);
+        let manual = run(Kernel::Is, PaperVariant::Manual, CpuModel::Atomic, t, &scale);
+        let hw = run(Kernel::Is, PaperVariant::Hw, CpuModel::Atomic, t, &scale);
+        let (cu, cm, ch) = (
+            unopt.result.cycles as f64,
+            manual.result.cycles as f64,
+            hw.result.cycles as f64,
+        );
+        assert!(cu / ch > 2.0, "IS hw speedup {:.2} should be ~3x", cu / ch);
+        assert!(cm < ch, "manual ({cm}) should edge out hw ({ch})");
+        assert!(ch / cm < 1.4, "hw should trail manual by ~13%, not {:.2}x", ch / cm);
+    }
+}

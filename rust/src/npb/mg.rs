@@ -1,0 +1,622 @@
+//! MG — Multi-Grid V-cycle (Poisson relaxation hierarchy).
+//!
+//! Hardware adaptation: the paper's 3D Poisson V-cycle is realized as a
+//! 1D multigrid V-cycle (relax → restrict → relax → prolong → relax)
+//! over blocked shared arrays.  What the figures measure — the density
+//! of shared-pointer traffic per grid point (every sweep reads three
+//! neighbours and writes one point through shared pointers in the
+//! unoptimized source) — is preserved; the dimensionality is not, and
+//! DESIGN.md documents the substitution.
+//!
+//! Chunk-edge halo reads are genuinely remote and stay on shared
+//! pointers even in the privatized source, exactly like the ghost-cell
+//! exchanges of the hand-tuned NPB MG.
+//!
+//! Paper shape (Figs. 10/14): the biggest win — HW ≈ 5.5× over the
+//! unoptimized code — but ~10% behind the privatized code (the sweeps
+//! are store-per-point; every HW store pays the volatile-asm reload).
+
+use super::{BuiltKernel, Scale};
+use crate::compiler::{IrBuilder, SourceVariant, Val};
+use crate::isa::{Cond, FpOp, MemWidth};
+use crate::upc::{ArrayId, UpcRuntime};
+
+/// class W: 64^3 grid points; scaled to a 1D grid of the same count.
+const CLASS_W_POINTS: u64 = 64 * 64 * 64;
+/// V-cycle depth (3 levels like the scaled-down W hierarchy).
+const LEVELS: usize = 3;
+/// Jacobi sweeps per level visit.
+const SWEEPS: u64 = 2;
+
+/// Host mirror of the simulated computation, bit-identical op order.
+struct HostMg {
+    u: Vec<Vec<f64>>,
+    r: Vec<Vec<f64>>,
+    v: Vec<Vec<f64>>, // sweep targets (double buffering)
+    n: Vec<u64>,
+}
+
+impl HostMg {
+    fn new(n0: u64) -> Self {
+        let mut u = Vec::new();
+        let mut r = Vec::new();
+        let mut v = Vec::new();
+        let mut n = Vec::new();
+        let mut sz = n0;
+        for _ in 0..LEVELS {
+            u.push(vec![0.0; sz as usize]);
+            v.push(vec![0.0; sz as usize]);
+            r.push(vec![0.0; sz as usize]);
+            n.push(sz);
+            sz /= 2;
+        }
+        Self { u, r, v, n }
+    }
+
+    fn init(&mut self) {
+        let n0 = self.n[0];
+        for i in 0..n0 as usize {
+            // deterministic "charge" pattern
+            self.r[0][i] = if i % 37 == 0 { 1.0 } else { 0.0 }
+                + (i % 11) as f64 * 0.01;
+            self.u[0][i] = 0.0;
+        }
+    }
+
+    fn sweep(&mut self, l: usize) {
+        let n = self.n[l] as usize;
+        for _ in 0..SWEEPS {
+            for i in 0..n {
+                let um = if i == 0 { 0.0 } else { self.u[l][i - 1] };
+                let up = if i == n - 1 { 0.0 } else { self.u[l][i + 1] };
+                self.v[l][i] = 0.25 * (um + up) + 0.5 * self.r[l][i];
+            }
+            std::mem::swap(&mut self.u[l], &mut self.v[l]);
+        }
+    }
+
+    fn restrict(&mut self, l: usize) {
+        let nc = self.n[l + 1] as usize;
+        for i in 0..nc {
+            self.r[l + 1][i] = 0.5 * self.r[l][2 * i]
+                + 0.25 * (self.r[l][2 * i + 1] + self.u[l][2 * i]);
+            self.u[l + 1][i] = 0.0;
+        }
+    }
+
+    fn prolong(&mut self, l: usize) {
+        let nc = self.n[l + 1] as usize;
+        for i in 0..nc {
+            self.u[l][2 * i] += self.u[l + 1][i];
+            self.u[l][2 * i + 1] += 0.5 * self.u[l + 1][i];
+        }
+    }
+
+    fn vcycle(&mut self) {
+        self.sweep(0);
+        self.restrict(0);
+        self.sweep(1);
+        self.restrict(1);
+        self.sweep(2);
+        self.prolong(1);
+        self.sweep(1);
+        self.prolong(0);
+        self.sweep(0);
+    }
+}
+
+pub fn build(threads: u32, source: SourceVariant, scale: &Scale) -> BuiltKernel {
+    // finest grid: pow2, at least 8 points per thread at every level
+    let n0 = scale
+        .dim(CLASS_W_POINTS, threads as u64 * 8 << (LEVELS - 1))
+        .next_power_of_two();
+    let n0 = n0.max(threads as u64 * 8 << (LEVELS - 1));
+
+    let mut rt = UpcRuntime::new(threads);
+    let mut u_ids: Vec<ArrayId> = Vec::new();
+    let mut v_ids: Vec<ArrayId> = Vec::new();
+    let mut r_ids: Vec<ArrayId> = Vec::new();
+    let mut sizes = Vec::new();
+    let mut sz = n0;
+    for l in 0..LEVELS {
+        let chunk = sz / threads as u64;
+        u_ids.push(rt.alloc_shared(&format!("mg_u{l}"), chunk, 8, sz));
+        v_ids.push(rt.alloc_shared(&format!("mg_v{l}"), chunk, 8, sz));
+        r_ids.push(rt.alloc_shared(&format!("mg_r{l}"), chunk, 8, sz));
+        sizes.push(sz);
+        sz /= 2;
+    }
+
+    let mut b = IrBuilder::new(&mut rt);
+    let myt = b.mythread();
+
+    // One Jacobi sweep at level l: v[i] = 0.25*(u[i-1]+u[i+1]) + 0.5*r[i]
+    // over my chunk, then copy v back into u (second half-sweep of the
+    // double buffer, also a chunk walk).  `src`/`dst` swap per sweep is
+    // unrolled since SWEEPS = 2: u->v then v->u.
+    let emit_sweep = |b: &mut IrBuilder,
+                      myt: u8,
+                      src: ArrayId,
+                      dst: ArrayId,
+                      rr: ArrayId,
+                      nl: u64| {
+        let chunk = nl / threads as u64;
+        let start = b.it();
+        b.bin(crate::isa::IntOp::Mul, start, myt, Val::I(chunk as i64));
+        let fq = b.fconst(0.25);
+        let fh = b.fconst(0.5);
+        match source {
+            SourceVariant::Unoptimized => {
+                // three read walks (u[i-1], u[i], skipped, u[i+1]), one
+                // r walk, one write walk — all shared pointers
+                let pm = b.sptr_init(src, Val::R(start)); // u[i-1] lag
+                let pp = b.sptr_init(src, Val::R(start)); // u[i+1] lead
+                b.sptr_inc(pp, src, Val::I(1));
+                let pr = b.sptr_init(rr, Val::R(start));
+                let pd = b.sptr_init(dst, Val::R(start));
+                b.for_range(Val::I(0), Val::I(chunk as i64), 1, |b, i| {
+                    let fm = b.ft();
+                    let fp = b.ft();
+                    let fr = b.ft();
+                    // boundary handling: global index gidx = start + i;
+                    // u[-1] and u[n] read as 0 via an edge test
+                    let gidx = b.it();
+                    b.bin(crate::isa::IntOp::Add, gidx, start, Val::R(i));
+                    // fm = (gidx == 0) ? 0 : u[gidx-1].  The lagging
+                    // pointer pm is valid from i >= 1; the chunk's first
+                    // element reads its left halo through a one-off
+                    // shared pointer (remote for t > 0).
+                    b.if_else(
+                        Cond::Eq,
+                        gidx,
+                        |b| {
+                            let z = b.fconst(0.0);
+                            b.fbin(FpOp::FMov, fm, z, z);
+                            b.free_f(z);
+                        },
+                        |b| {
+                            b.if_else(
+                                Cond::Eq,
+                                i,
+                                |b| {
+                                    let hm = b.it();
+                                    b.bin(
+                                        crate::isa::IntOp::Add,
+                                        hm,
+                                        gidx,
+                                        Val::I(-1),
+                                    );
+                                    let ph = b.sptr_init(src, Val::R(hm));
+                                    b.sptr_ld(MemWidth::F64, fm, ph, 0);
+                                    b.free_i(ph);
+                                    b.free_i(hm);
+                                },
+                                |b| {
+                                    // pm trails by one: u[gidx-1]
+                                    b.sptr_ld(MemWidth::F64, fm, pm, 0);
+                                },
+                            );
+                        },
+                    );
+                    // fp = (gidx == nl-1) ? 0 : u[gidx+1]
+                    let edge = b.it();
+                    b.bin(crate::isa::IntOp::CmpEq, edge, gidx, Val::I((nl - 1) as i64));
+                    b.if_else(
+                        Cond::Ne,
+                        edge,
+                        |b| {
+                            let z = b.fconst(0.0);
+                            b.fbin(FpOp::FMov, fp, z, z);
+                            b.free_f(z);
+                        },
+                        |b| {
+                            b.sptr_ld(MemWidth::F64, fp, pp, 0);
+                        },
+                    );
+                    b.free_i(edge);
+                    b.free_i(gidx);
+                    b.sptr_ld(MemWidth::F64, fr, pr, 0);
+                    b.fbin(FpOp::FAdd, fm, fm, fp);
+                    b.fbin(FpOp::FMul, fm, fm, fq);
+                    b.fbin(FpOp::FMul, fr, fr, fh);
+                    b.fbin(FpOp::FAdd, fm, fm, fr);
+                    b.sptr_st(MemWidth::F64, fm, pd, 0);
+                    // advance all walks (pm lags: skip its first inc)
+                    b.iff(Cond::Ne, i, |b| {
+                        b.sptr_inc(pm, src, Val::I(1));
+                    });
+                    b.sptr_inc(pp, src, Val::I(1));
+                    b.sptr_inc(pr, rr, Val::I(1));
+                    b.sptr_inc(pd, dst, Val::I(1));
+                    b.free_f(fr);
+                    b.free_f(fp);
+                    b.free_f(fm);
+                });
+                b.free_i(pd);
+                b.free_i(pr);
+                b.free_i(pp);
+                b.free_i(pm);
+            }
+            SourceVariant::Privatized => {
+                // interior via raw local cursors; the two chunk-edge
+                // neighbours via shared pointers (the halo)
+                let cu = b.local_addr(src, Val::I(0));
+                let cr = b.local_addr(rr, Val::I(0));
+                let cd = b.local_addr(dst, Val::I(0));
+                b.for_range(Val::I(0), Val::I(chunk as i64), 1, |b, i| {
+                    let fm = b.ft();
+                    let fp = b.ft();
+                    let fr = b.ft();
+                    let gidx = b.it();
+                    b.bin(crate::isa::IntOp::Add, gidx, start, Val::R(i));
+                    // left neighbour
+                    b.if_else(
+                        Cond::Eq,
+                        i,
+                        |b| {
+                            // chunk edge: u[gidx-1] remote (or 0 at wall)
+                            b.if_else(
+                                Cond::Eq,
+                                gidx,
+                                |b| {
+                                    let z = b.fconst(0.0);
+                                    b.fbin(FpOp::FMov, fm, z, z);
+                                    b.free_f(z);
+                                },
+                                |b| {
+                                    let hm = b.it();
+                                    b.bin(
+                                        crate::isa::IntOp::Add,
+                                        hm,
+                                        gidx,
+                                        Val::I(-1),
+                                    );
+                                    let ph = b.sptr_init(src, Val::R(hm));
+                                    b.sptr_ld(MemWidth::F64, fm, ph, 0);
+                                    b.free_i(ph);
+                                    b.free_i(hm);
+                                },
+                            );
+                        },
+                        |b| {
+                            b.ld(MemWidth::F64, fm, cu, -8);
+                        },
+                    );
+                    // right neighbour
+                    let last = b.it();
+                    b.bin(
+                        crate::isa::IntOp::CmpEq,
+                        last,
+                        i,
+                        Val::I((chunk - 1) as i64),
+                    );
+                    b.if_else(
+                        Cond::Ne,
+                        last,
+                        |b| {
+                            let wall = b.it();
+                            b.bin(
+                                crate::isa::IntOp::CmpEq,
+                                wall,
+                                gidx,
+                                Val::I((nl - 1) as i64),
+                            );
+                            b.if_else(
+                                Cond::Ne,
+                                wall,
+                                |b| {
+                                    let z = b.fconst(0.0);
+                                    b.fbin(FpOp::FMov, fp, z, z);
+                                    b.free_f(z);
+                                },
+                                |b| {
+                                    let hp = b.it();
+                                    b.bin(
+                                        crate::isa::IntOp::Add,
+                                        hp,
+                                        gidx,
+                                        Val::I(1),
+                                    );
+                                    let ph = b.sptr_init(src, Val::R(hp));
+                                    b.sptr_ld(MemWidth::F64, fp, ph, 0);
+                                    b.free_i(ph);
+                                    b.free_i(hp);
+                                },
+                            );
+                            b.free_i(wall);
+                        },
+                        |b| {
+                            b.ld(MemWidth::F64, fp, cu, 8);
+                        },
+                    );
+                    b.free_i(last);
+                    b.free_i(gidx);
+                    b.ld(MemWidth::F64, fr, cr, 0);
+                    b.fbin(FpOp::FAdd, fm, fm, fp);
+                    b.fbin(FpOp::FMul, fm, fm, fq);
+                    b.fbin(FpOp::FMul, fr, fr, fh);
+                    b.fbin(FpOp::FAdd, fm, fm, fr);
+                    b.st(MemWidth::F64, fm, cd, 0);
+                    b.add(cu, cu, Val::I(8));
+                    b.add(cr, cr, Val::I(8));
+                    b.add(cd, cd, Val::I(8));
+                    b.free_f(fr);
+                    b.free_f(fp);
+                    b.free_f(fm);
+                });
+                b.free_i(cd);
+                b.free_i(cr);
+                b.free_i(cu);
+            }
+        }
+        b.free_f(fh);
+        b.free_f(fq);
+        b.free_i(start);
+        b.barrier();
+    };
+
+    // copy dst -> src over my chunk (the swap half of double buffering)
+    let emit_copy = |b: &mut IrBuilder, myt: u8, from: ArrayId, to: ArrayId, nl: u64| {
+        let chunk = nl / threads as u64;
+        let start = b.it();
+        b.bin(crate::isa::IntOp::Mul, start, myt, Val::I(chunk as i64));
+        match source {
+            SourceVariant::Unoptimized => {
+                let pf = b.sptr_init(from, Val::R(start));
+                let pt = b.sptr_init(to, Val::R(start));
+                b.for_range(Val::I(0), Val::I(chunk as i64), 1, |b, _| {
+                    let f = b.ft();
+                    b.sptr_ld(MemWidth::F64, f, pf, 0);
+                    b.sptr_st(MemWidth::F64, f, pt, 0);
+                    b.free_f(f);
+                    b.sptr_inc(pf, from, Val::I(1));
+                    b.sptr_inc(pt, to, Val::I(1));
+                });
+                b.free_i(pt);
+                b.free_i(pf);
+            }
+            SourceVariant::Privatized => {
+                let cf = b.local_addr(from, Val::I(0));
+                let ct = b.local_addr(to, Val::I(0));
+                b.for_range(Val::I(0), Val::I(chunk as i64), 1, |b, _| {
+                    let f = b.ft();
+                    b.ld(MemWidth::F64, f, cf, 0);
+                    b.st(MemWidth::F64, f, ct, 0);
+                    b.free_f(f);
+                    b.add(cf, cf, Val::I(8));
+                    b.add(ct, ct, Val::I(8));
+                });
+                b.free_i(ct);
+                b.free_i(cf);
+            }
+        }
+        b.free_i(start);
+        b.barrier();
+    };
+
+    // restriction: r[l+1][i] = 0.5*r[l][2i] + 0.25*(r[l][2i+1] + u[l][2i])
+    // walking the fine arrays with stride 2 and the coarse with stride 1.
+    let emit_restrict = |b: &mut IrBuilder, myt: u8, l: usize| {
+        let nc = sizes[l + 1];
+        let chunk = nc / threads as u64;
+        let startc = b.it();
+        b.bin(crate::isa::IntOp::Mul, startc, myt, Val::I(chunk as i64));
+        let startf = b.it();
+        b.bin(crate::isa::IntOp::Sll, startf, startc, Val::I(1));
+        let fh = b.fconst(0.5);
+        let fq = b.fconst(0.25);
+        let zero = b.fconst(0.0);
+        match source {
+            SourceVariant::Unoptimized => {
+                let prf = b.sptr_init(r_ids[l], Val::R(startf));
+                let puf = b.sptr_init(u_ids[l], Val::R(startf));
+                let prc = b.sptr_init(r_ids[l + 1], Val::R(startc));
+                let puc = b.sptr_init(u_ids[l + 1], Val::R(startc));
+                b.for_range(Val::I(0), Val::I(chunk as i64), 1, |b, _| {
+                    let f0 = b.ft();
+                    let f1 = b.ft();
+                    let fu = b.ft();
+                    b.sptr_ld(MemWidth::F64, f0, prf, 0);
+                    b.sptr_ld(MemWidth::F64, f1, prf, 8); // r[2i+1]: same block
+                    b.sptr_ld(MemWidth::F64, fu, puf, 0);
+                    b.fbin(FpOp::FAdd, f1, f1, fu);
+                    b.fbin(FpOp::FMul, f1, f1, fq);
+                    b.fbin(FpOp::FMul, f0, f0, fh);
+                    b.fbin(FpOp::FAdd, f0, f0, f1);
+                    b.sptr_st(MemWidth::F64, f0, prc, 0);
+                    b.sptr_st(MemWidth::F64, zero, puc, 0);
+                    b.sptr_inc(prf, r_ids[l], Val::I(2));
+                    b.sptr_inc(puf, u_ids[l], Val::I(2));
+                    b.sptr_inc(prc, r_ids[l + 1], Val::I(1));
+                    b.sptr_inc(puc, u_ids[l + 1], Val::I(1));
+                    b.free_f(fu);
+                    b.free_f(f1);
+                    b.free_f(f0);
+                });
+                b.free_i(puc);
+                b.free_i(prc);
+                b.free_i(puf);
+                b.free_i(prf);
+            }
+            SourceVariant::Privatized => {
+                let crf = b.local_addr(r_ids[l], Val::I(0));
+                let cuf = b.local_addr(u_ids[l], Val::I(0));
+                let crc = b.local_addr(r_ids[l + 1], Val::I(0));
+                let cuc = b.local_addr(u_ids[l + 1], Val::I(0));
+                b.for_range(Val::I(0), Val::I(chunk as i64), 1, |b, _| {
+                    let f0 = b.ft();
+                    let f1 = b.ft();
+                    let fu = b.ft();
+                    b.ld(MemWidth::F64, f0, crf, 0);
+                    b.ld(MemWidth::F64, f1, crf, 8);
+                    b.ld(MemWidth::F64, fu, cuf, 0);
+                    b.fbin(FpOp::FAdd, f1, f1, fu);
+                    b.fbin(FpOp::FMul, f1, f1, fq);
+                    b.fbin(FpOp::FMul, f0, f0, fh);
+                    b.fbin(FpOp::FAdd, f0, f0, f1);
+                    b.st(MemWidth::F64, f0, crc, 0);
+                    b.st(MemWidth::F64, zero, cuc, 0);
+                    b.add(crf, crf, Val::I(16));
+                    b.add(cuf, cuf, Val::I(16));
+                    b.add(crc, crc, Val::I(8));
+                    b.add(cuc, cuc, Val::I(8));
+                    b.free_f(fu);
+                    b.free_f(f1);
+                    b.free_f(f0);
+                });
+                b.free_i(cuc);
+                b.free_i(crc);
+                b.free_i(cuf);
+                b.free_i(crf);
+            }
+        }
+        b.free_f(zero);
+        b.free_f(fq);
+        b.free_f(fh);
+        b.free_i(startf);
+        b.free_i(startc);
+        b.barrier();
+    };
+
+    // prolongation: u[l][2i] += u[l+1][i]; u[l][2i+1] += 0.5*u[l+1][i]
+    let emit_prolong = |b: &mut IrBuilder, myt: u8, l: usize| {
+        let nc = sizes[l + 1];
+        let chunk = nc / threads as u64;
+        let startc = b.it();
+        b.bin(crate::isa::IntOp::Mul, startc, myt, Val::I(chunk as i64));
+        let startf = b.it();
+        b.bin(crate::isa::IntOp::Sll, startf, startc, Val::I(1));
+        let fh = b.fconst(0.5);
+        match source {
+            SourceVariant::Unoptimized => {
+                let puc = b.sptr_init(u_ids[l + 1], Val::R(startc));
+                let puf = b.sptr_init(u_ids[l], Val::R(startf));
+                b.for_range(Val::I(0), Val::I(chunk as i64), 1, |b, _| {
+                    let fc = b.ft();
+                    let f0 = b.ft();
+                    b.sptr_ld(MemWidth::F64, fc, puc, 0);
+                    b.sptr_ld(MemWidth::F64, f0, puf, 0);
+                    b.fbin(FpOp::FAdd, f0, f0, fc);
+                    b.sptr_st(MemWidth::F64, f0, puf, 0);
+                    b.sptr_ld(MemWidth::F64, f0, puf, 8);
+                    b.fbin(FpOp::FMul, fc, fc, fh);
+                    b.fbin(FpOp::FAdd, f0, f0, fc);
+                    b.sptr_st(MemWidth::F64, f0, puf, 8);
+                    b.sptr_inc(puc, u_ids[l + 1], Val::I(1));
+                    b.sptr_inc(puf, u_ids[l], Val::I(2));
+                    b.free_f(f0);
+                    b.free_f(fc);
+                });
+                b.free_i(puf);
+                b.free_i(puc);
+            }
+            SourceVariant::Privatized => {
+                let cuc = b.local_addr(u_ids[l + 1], Val::I(0));
+                let cuf = b.local_addr(u_ids[l], Val::I(0));
+                b.for_range(Val::I(0), Val::I(chunk as i64), 1, |b, _| {
+                    let fc = b.ft();
+                    let f0 = b.ft();
+                    b.ld(MemWidth::F64, fc, cuc, 0);
+                    b.ld(MemWidth::F64, f0, cuf, 0);
+                    b.fbin(FpOp::FAdd, f0, f0, fc);
+                    b.st(MemWidth::F64, f0, cuf, 0);
+                    b.ld(MemWidth::F64, f0, cuf, 8);
+                    b.fbin(FpOp::FMul, fc, fc, fh);
+                    b.fbin(FpOp::FAdd, f0, f0, fc);
+                    b.st(MemWidth::F64, f0, cuf, 8);
+                    b.add(cuc, cuc, Val::I(8));
+                    b.add(cuf, cuf, Val::I(16));
+                    b.free_f(f0);
+                    b.free_f(fc);
+                });
+                b.free_i(cuf);
+                b.free_i(cuc);
+            }
+        }
+        b.free_f(fh);
+        b.free_i(startf);
+        b.free_i(startc);
+        b.barrier();
+    };
+
+    // sweep twice with explicit copy-back (u->v, v copied to u)
+    let full_sweep = |b: &mut IrBuilder, myt: u8, l: usize| {
+        for _ in 0..SWEEPS {
+            emit_sweep(b, myt, u_ids[l], v_ids[l], r_ids[l], sizes[l]);
+            emit_copy(b, myt, v_ids[l], u_ids[l], sizes[l]);
+        }
+    };
+
+    // ---- the V-cycle ----
+    full_sweep(&mut b, myt, 0);
+    emit_restrict(&mut b, myt, 0);
+    full_sweep(&mut b, myt, 1);
+    emit_restrict(&mut b, myt, 1);
+    full_sweep(&mut b, myt, 2);
+    emit_prolong(&mut b, myt, 1);
+    full_sweep(&mut b, myt, 1);
+    emit_prolong(&mut b, myt, 0);
+    full_sweep(&mut b, myt, 0);
+
+    let module = b.finish("mg");
+
+    let u0 = u_ids[0];
+    let r0 = r_ids[0];
+    let setup = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
+        for i in 0..n0 {
+            let rv = if i % 37 == 0 { 1.0 } else { 0.0 } + (i % 11) as f64 * 0.01;
+            rt.write_f64(mem, r0, i, rv);
+            rt.write_f64(mem, u0, i, 0.0);
+        }
+    });
+
+    let validate = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
+        let mut host = HostMg::new(n0);
+        host.init();
+        host.vcycle();
+        for i in 0..n0 {
+            let got = rt.read_f64(mem, u0, i);
+            let want = host.u[0][i as usize];
+            if (got - want).abs() > 1e-12 * want.abs().max(1.0) {
+                return Err(format!("u[{i}] = {got}, want {want}"));
+            }
+        }
+        Ok(())
+    });
+
+    BuiltKernel { rt, module, setup, validate }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::CpuModel;
+    use crate::npb::{run, Kernel, PaperVariant};
+
+    #[test]
+    fn mg_validates_in_all_variants() {
+        let scale = Scale { factor: 1024 };
+        for v in PaperVariant::ALL {
+            let out = run(Kernel::Mg, v, CpuModel::Atomic, 4, &scale);
+            assert!(out.result.cycles > 0, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn mg_paper_ordering_holds() {
+        // the headline: large hw speedup, but manual keeps ~10% edge
+        let scale = Scale { factor: 512 };
+        let t = 4;
+        let unopt = run(Kernel::Mg, PaperVariant::Unopt, CpuModel::Atomic, t, &scale);
+        let manual = run(Kernel::Mg, PaperVariant::Manual, CpuModel::Atomic, t, &scale);
+        let hw = run(Kernel::Mg, PaperVariant::Hw, CpuModel::Atomic, t, &scale);
+        let (cu, cm, ch) = (
+            unopt.result.cycles as f64,
+            manual.result.cycles as f64,
+            hw.result.cycles as f64,
+        );
+        assert!(cu / ch > 3.0, "MG hw speedup {:.2} should be ~5.5x", cu / ch);
+        assert!(cm < ch, "manual ({cm}) should edge out hw ({ch}) on MG");
+        assert!(ch / cm < 1.5, "hw should trail manual by ~10%, got {:.2}x", ch / cm);
+    }
+}

@@ -1,0 +1,272 @@
+//! The five NAS Parallel Benchmark kernels of the paper's evaluation
+//! (EP, IS, CG, MG, FT), expressed against the UPC runtime and compiled
+//! by the mini-UPC compiler in the paper's three configurations.
+//!
+//! Class-W problem shapes are preserved structurally but scaled down by
+//! a configurable factor (cycle-level simulation of full class W takes
+//! days even in the paper); every kernel validates its numerical output
+//! against a host-side reference, in every variant.
+//!
+//! Hardware adaptation notes (also in DESIGN.md): MG's 3D Poisson
+//! V-cycle is realized as a 1D multigrid V-cycle and FT's 3D FFT as the
+//! distributed row-FFT + transpose + row-FFT structure; both preserve
+//! the property the figures measure — the density and locality mix of
+//! shared-pointer operations per unit of computation.
+
+pub mod cg;
+pub mod ep;
+pub mod ft;
+pub mod is;
+pub mod mg;
+
+use crate::compiler::{
+    compile, CompileOpts, CompileStats, IrModule, Lowering, SourceVariant,
+};
+use crate::cpu::CpuModel;
+use crate::mem::MemSystem;
+use crate::sim::{Machine, MachineCfg, MachineResult};
+use crate::upc::UpcRuntime;
+
+/// The five kernels.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Kernel {
+    Ep,
+    Is,
+    Cg,
+    Mg,
+    Ft,
+}
+
+impl Kernel {
+    pub const ALL: [Kernel; 5] =
+        [Kernel::Ep, Kernel::Is, Kernel::Cg, Kernel::Mg, Kernel::Ft];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Ep => "EP",
+            Kernel::Is => "IS",
+            Kernel::Cg => "CG",
+            Kernel::Mg => "MG",
+            Kernel::Ft => "FT",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_uppercase().as_str() {
+            "EP" => Some(Kernel::Ep),
+            "IS" => Some(Kernel::Is),
+            "CG" => Some(Kernel::Cg),
+            "MG" => Some(Kernel::Mg),
+            "FT" => Some(Kernel::Ft),
+            _ => None,
+        }
+    }
+
+    /// Core-count ceiling (FT's class-W slab distribution caps at 16,
+    /// as in the paper's Figure 8).
+    pub fn max_cores(&self) -> u32 {
+        match self {
+            Kernel::Ft => 16,
+            _ => 64,
+        }
+    }
+}
+
+impl std::fmt::Display for Kernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The paper's three measured configurations.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PaperVariant {
+    /// "Without Manual Optimizations": plain source, software pointers.
+    Unopt,
+    /// "Manual Optimization": privatized source, software pointers.
+    Manual,
+    /// "Without Manual Optimizations, but with HW support".
+    Hw,
+}
+
+impl PaperVariant {
+    pub const ALL: [PaperVariant; 3] =
+        [PaperVariant::Unopt, PaperVariant::Manual, PaperVariant::Hw];
+
+    pub fn source(&self) -> SourceVariant {
+        match self {
+            PaperVariant::Manual => SourceVariant::Privatized,
+            _ => SourceVariant::Unoptimized,
+        }
+    }
+
+    pub fn lowering(&self) -> Lowering {
+        match self {
+            PaperVariant::Hw => Lowering::Hw,
+            _ => Lowering::Soft,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PaperVariant::Unopt => "no-manual-opt",
+            PaperVariant::Manual => "manual-opt",
+            PaperVariant::Hw => "no-manual-opt+HW",
+        }
+    }
+}
+
+/// Problem-size scaling: class-W dimensions divided by `factor`
+/// (factor 1 = full class W; the default keeps atomic-model 64-core
+/// sweeps in seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Scale {
+    pub factor: u32,
+}
+
+impl Default for Scale {
+    fn default() -> Self {
+        Scale { factor: 64 }
+    }
+}
+
+impl Scale {
+    pub fn quick() -> Self {
+        Scale { factor: 256 }
+    }
+
+    /// Scale a class-W dimension down, keeping a floor.
+    pub fn dim(&self, class_w: u64, floor: u64) -> u64 {
+        (class_w / self.factor as u64).max(floor)
+    }
+}
+
+/// A kernel instance ready to run: runtime, IR, setup and validation.
+pub struct BuiltKernel {
+    pub rt: UpcRuntime,
+    pub module: IrModule,
+    /// Write workload inputs into simulated memory.
+    pub setup: Box<dyn Fn(&UpcRuntime, &mut MemSystem)>,
+    /// Check outputs against the host reference.
+    pub validate: Box<dyn Fn(&UpcRuntime, &mut MemSystem) -> Result<(), String>>,
+}
+
+/// Build `kernel` for `threads` UPC threads in the given source variant.
+pub fn build(
+    kernel: Kernel,
+    threads: u32,
+    source: SourceVariant,
+    scale: &Scale,
+) -> BuiltKernel {
+    assert!(
+        threads <= kernel.max_cores(),
+        "{kernel} supports at most {} cores (class-W data distribution)",
+        kernel.max_cores()
+    );
+    match kernel {
+        Kernel::Ep => ep::build(threads, source, scale),
+        Kernel::Is => is::build(threads, source, scale),
+        Kernel::Cg => cg::build(threads, source, scale),
+        Kernel::Mg => mg::build(threads, source, scale),
+        Kernel::Ft => ft::build(threads, source, scale),
+    }
+}
+
+/// Outcome of one simulated benchmark run.
+#[derive(Clone, Debug)]
+pub struct RunOutcome {
+    pub kernel: Kernel,
+    pub variant: PaperVariant,
+    pub model: CpuModel,
+    pub cores: u32,
+    pub result: MachineResult,
+    pub compile_stats: CompileStats,
+}
+
+impl RunOutcome {
+    pub fn mops(&self, ops: u64) -> f64 {
+        ops as f64 / self.result.runtime_secs() / 1e6
+    }
+}
+
+/// Build, compile, setup, run and validate one configuration.
+/// Panics on validation failure — a wrong answer invalidates the figure.
+pub fn run(
+    kernel: Kernel,
+    variant: PaperVariant,
+    model: CpuModel,
+    cores: u32,
+    scale: &Scale,
+) -> RunOutcome {
+    let built = build(kernel, cores, variant.source(), scale);
+    let opts = CompileOpts {
+        lowering: variant.lowering(),
+        static_threads: false,
+        numthreads: cores,
+        volatile_stores: true,
+    };
+    let ck = compile(&built.module, &built.rt, &opts);
+    let mut machine = Machine::new(MachineCfg::new(cores, model));
+    (built.setup)(&built.rt, machine.mem_mut());
+    let result = machine.run(&ck.program);
+    if let Err(e) = (built.validate)(&built.rt, machine.mem_mut()) {
+        panic!(
+            "{kernel} [{}] x{cores} {model}: validation failed: {e}",
+            variant.label()
+        );
+    }
+    RunOutcome {
+        kernel,
+        variant,
+        model,
+        cores,
+        result,
+        compile_stats: ck.stats,
+    }
+}
+
+/// Compile a kernel only (for instruction-census reports).
+pub fn compile_only(
+    kernel: Kernel,
+    threads: u32,
+    variant: PaperVariant,
+    scale: &Scale,
+) -> (IrModule, CompileStats) {
+    let built = build(kernel, threads, variant.source(), scale);
+    let opts = CompileOpts {
+        lowering: variant.lowering(),
+        static_threads: false,
+        numthreads: threads,
+        volatile_stores: true,
+    };
+    let ck = compile(&built.module, &built.rt, &opts);
+    (built.module, ck.stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kernel_parse_and_limits() {
+        assert_eq!(Kernel::parse("mg"), Some(Kernel::Mg));
+        assert_eq!(Kernel::parse("xx"), None);
+        assert_eq!(Kernel::Ft.max_cores(), 16);
+        assert_eq!(Kernel::Ep.max_cores(), 64);
+    }
+
+    #[test]
+    fn scale_dims() {
+        let s = Scale { factor: 64 };
+        assert_eq!(s.dim(1 << 20, 1 << 10), 1 << 14);
+        assert_eq!(s.dim(64, 128), 128); // floor applies
+    }
+
+    #[test]
+    fn paper_variant_mapping() {
+        assert_eq!(PaperVariant::Manual.source(), SourceVariant::Privatized);
+        assert_eq!(PaperVariant::Manual.lowering(), Lowering::Soft);
+        assert_eq!(PaperVariant::Hw.lowering(), Lowering::Hw);
+        assert_eq!(PaperVariant::Hw.source(), SourceVariant::Unoptimized);
+    }
+}

@@ -1,0 +1,323 @@
+//! PJRT/XLA runtime: loads the AOT-compiled address-mapping unit (the L1
+//! Pallas kernel lowered through the L2 JAX graph) from
+//! `artifacts/*.hlo.txt` and executes it from Rust.
+//!
+//! This is the three-layer architecture's run-time bridge: Python runs
+//! once at build time (`make artifacts`); here the HLO **text** (never a
+//! serialized proto — xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit
+//! instruction ids) is parsed, compiled by the PJRT CPU client, and
+//! invoked with concrete pointer batches.
+//!
+//! The coordinator uses it two ways:
+//! * as the **batch engine**: bulk shared-pointer increment/translate
+//!   offload (the "hardware unit" datapath, vectorized);
+//! * as the **verification oracle**: every batch is cross-checked
+//!   against the scalar Rust implementation in tests and in
+//!   `pgas-hw verify`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::sptr::{BaseTable, SharedPtr};
+
+/// Batch size every artifact was lowered with (monomorphic shapes).
+pub const UNIT_BATCH: usize = 8192;
+/// Trace length of the walker artifact.
+pub const WALK_LEN: usize = 4096;
+/// LUT capacity baked into the artifacts.
+pub const MAX_THREADS: usize = 64;
+/// Config vector length.
+pub const CFG_LEN: usize = 8;
+
+/// Hardware-config registers for a batch (mirrors
+/// `python/compile/kernels/sptr_unit.py`).
+#[derive(Clone, Copy, Debug)]
+pub struct UnitCfg {
+    pub log2_blocksize: u32,
+    pub log2_elemsize: u32,
+    pub log2_numthreads: u32,
+    pub mythread: u32,
+    pub log2_threads_per_mc: u32,
+    pub log2_threads_per_node: u32,
+}
+
+impl UnitCfg {
+    fn to_vec(self) -> Vec<i32> {
+        vec![
+            self.log2_blocksize as i32,
+            self.log2_elemsize as i32,
+            self.log2_numthreads as i32,
+            self.mythread as i32,
+            self.log2_threads_per_mc as i32,
+            self.log2_threads_per_node as i32,
+            0,
+            0,
+        ]
+    }
+}
+
+/// Result of a fused unit batch.
+#[derive(Clone, Debug, Default)]
+pub struct UnitBatchOut {
+    pub thread: Vec<i32>,
+    pub phase: Vec<i32>,
+    pub va: Vec<i64>,
+    pub sysva: Vec<i64>,
+    pub loc: Vec<i32>,
+}
+
+/// The loaded PJRT executables.
+pub struct XlaUnit {
+    client: xla::PjRtClient,
+    unit: xla::PjRtLoadedExecutable,
+    inc: xla::PjRtLoadedExecutable,
+    walker: xla::PjRtLoadedExecutable,
+}
+
+fn load_exe(
+    client: &xla::PjRtClient,
+    dir: &Path,
+    name: &str,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path = dir.join(format!("{name}.hlo.txt"));
+    let text_path = path
+        .to_str()
+        .with_context(|| format!("non-utf8 path {path:?}"))?;
+    let proto = xla::HloModuleProto::from_text_file(text_path)
+        .with_context(|| format!("parsing {path:?} (run `make artifacts`)"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .with_context(|| format!("compiling {name}"))
+}
+
+impl XlaUnit {
+    /// Load all artifacts from `dir` (default: ./artifacts).
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        if !dir.join("sptr_unit.hlo.txt").exists() {
+            bail!(
+                "artifacts not found in {dir:?}; run `make artifacts` first"
+            );
+        }
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            unit: load_exe(&client, dir, "sptr_unit")?,
+            inc: load_exe(&client, dir, "sptr_inc")?,
+            walker: load_exe(&client, dir, "trace_walker")?,
+            client,
+        })
+    }
+
+    /// Default artifacts directory (next to the workspace root).
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn base_vec(table: &BaseTable) -> Result<Vec<i64>> {
+        if table.numthreads() as usize > MAX_THREADS {
+            bail!("base table larger than artifact capacity {MAX_THREADS}");
+        }
+        let mut v = vec![0i64; MAX_THREADS];
+        for (t, &b) in table.bases().iter().enumerate() {
+            v[t] = b as i64;
+        }
+        Ok(v)
+    }
+
+    /// Fused increment + translate + locality over up to UNIT_BATCH
+    /// pointers (shorter batches are padded and trimmed).
+    pub fn unit_batch(
+        &self,
+        cfg: &UnitCfg,
+        table: &BaseTable,
+        ptrs: &[SharedPtr],
+        incs: &[u32],
+    ) -> Result<UnitBatchOut> {
+        assert_eq!(ptrs.len(), incs.len());
+        if ptrs.len() > UNIT_BATCH {
+            bail!("batch {} exceeds UNIT_BATCH {UNIT_BATCH}", ptrs.len());
+        }
+        let n = ptrs.len();
+        let mut thread = vec![0i32; UNIT_BATCH];
+        let mut phase = vec![0i32; UNIT_BATCH];
+        let mut va = vec![0i64; UNIT_BATCH];
+        let mut inc = vec![0i32; UNIT_BATCH];
+        for (i, p) in ptrs.iter().enumerate() {
+            thread[i] = p.thread as i32;
+            phase[i] = p.phase as i32;
+            va[i] = p.va as i64;
+            inc[i] = incs[i] as i32;
+        }
+        let args = [
+            xla::Literal::vec1(&cfg.to_vec()),
+            xla::Literal::vec1(&Self::base_vec(table)?),
+            xla::Literal::vec1(&thread),
+            xla::Literal::vec1(&phase),
+            xla::Literal::vec1(&va),
+            xla::Literal::vec1(&inc),
+        ];
+        let result = self.unit.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != 5 {
+            bail!("unit returned {} outputs, want 5", outs.len());
+        }
+        let mut it = outs.into_iter();
+        let mut out = UnitBatchOut {
+            thread: it.next().unwrap().to_vec::<i32>()?,
+            phase: it.next().unwrap().to_vec::<i32>()?,
+            va: it.next().unwrap().to_vec::<i64>()?,
+            sysva: it.next().unwrap().to_vec::<i64>()?,
+            loc: it.next().unwrap().to_vec::<i32>()?,
+        };
+        out.thread.truncate(n);
+        out.phase.truncate(n);
+        out.va.truncate(n);
+        out.sysva.truncate(n);
+        out.loc.truncate(n);
+        Ok(out)
+    }
+
+    /// Increment-only batch; returns the incremented pointers.
+    pub fn inc_batch(
+        &self,
+        cfg: &UnitCfg,
+        ptrs: &[SharedPtr],
+        incs: &[u32],
+    ) -> Result<Vec<SharedPtr>> {
+        assert_eq!(ptrs.len(), incs.len());
+        if ptrs.len() > UNIT_BATCH {
+            bail!("batch {} exceeds UNIT_BATCH {UNIT_BATCH}", ptrs.len());
+        }
+        let n = ptrs.len();
+        let mut thread = vec![0i32; UNIT_BATCH];
+        let mut phase = vec![0i32; UNIT_BATCH];
+        let mut va = vec![0i64; UNIT_BATCH];
+        let mut inc = vec![0i32; UNIT_BATCH];
+        for (i, p) in ptrs.iter().enumerate() {
+            thread[i] = p.thread as i32;
+            phase[i] = p.phase as i32;
+            va[i] = p.va as i64;
+            inc[i] = incs[i] as i32;
+        }
+        let args = [
+            xla::Literal::vec1(&cfg.to_vec()),
+            xla::Literal::vec1(&thread),
+            xla::Literal::vec1(&phase),
+            xla::Literal::vec1(&va),
+            xla::Literal::vec1(&inc),
+        ];
+        let result = self.inc.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != 3 {
+            bail!("inc returned {} outputs, want 3", outs.len());
+        }
+        let mut it = outs.into_iter();
+        let nthread = it.next().unwrap().to_vec::<i32>()?;
+        let nphase = it.next().unwrap().to_vec::<i32>()?;
+        let nva = it.next().unwrap().to_vec::<i64>()?;
+        Ok((0..n)
+            .map(|i| SharedPtr {
+                thread: nthread[i] as u32,
+                phase: nphase[i] as u64,
+                va: nva[i] as u64,
+            })
+            .collect())
+    }
+
+    /// Walk a pointer WALK_LEN steps; returns (sysva, thread, locality)
+    /// per step (step 0 = the start pointer).
+    pub fn walk(
+        &self,
+        cfg: &UnitCfg,
+        table: &BaseTable,
+        start: &SharedPtr,
+        inc: u32,
+    ) -> Result<(Vec<i64>, Vec<i32>, Vec<i32>)> {
+        let args = [
+            xla::Literal::vec1(&cfg.to_vec()),
+            xla::Literal::vec1(&Self::base_vec(table)?),
+            xla::Literal::from(start.thread as i32),
+            xla::Literal::from(start.phase as i32),
+            xla::Literal::from(start.va as i64),
+            xla::Literal::from(inc as i32),
+        ];
+        let result = self.walker.execute::<xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        if outs.len() != 3 {
+            bail!("walker returned {} outputs, want 3", outs.len());
+        }
+        let mut it = outs.into_iter();
+        Ok((
+            it.next().unwrap().to_vec::<i64>()?,
+            it.next().unwrap().to_vec::<i32>()?,
+            it.next().unwrap().to_vec::<i32>()?,
+        ))
+    }
+}
+
+/// Scalar Rust reference for one batch (the verification oracle's other
+/// half): must agree exactly with the XLA unit on pow2 configs.
+pub fn unit_batch_scalar(
+    cfg: &UnitCfg,
+    table: &BaseTable,
+    ptrs: &[SharedPtr],
+    incs: &[u32],
+) -> UnitBatchOut {
+    use crate::sptr::{increment_pow2, locality, Locality, Topology};
+    let topo = Topology {
+        log2_threads_per_mc: cfg.log2_threads_per_mc,
+        log2_threads_per_node: cfg.log2_threads_per_node,
+    };
+    let mut out = UnitBatchOut::default();
+    for (p, &inc) in ptrs.iter().zip(incs) {
+        let q = increment_pow2(
+            p,
+            inc as u64,
+            cfg.log2_blocksize,
+            cfg.log2_elemsize,
+            cfg.log2_numthreads,
+        );
+        out.thread.push(q.thread as i32);
+        out.phase.push(q.phase as i32);
+        out.va.push(q.va as i64);
+        out.sysva.push((table.base(q.thread) + q.va) as i64);
+        let l: Locality = locality(q.thread, cfg.mythread, &topo);
+        out.loc.push(l as i32);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // XLA-backed tests live in rust/tests/xla_unit.rs (they need the
+    // artifacts); here only the scalar oracle is exercised.
+    #[test]
+    fn scalar_oracle_basics() {
+        let cfg = UnitCfg {
+            log2_blocksize: 2,
+            log2_elemsize: 2,
+            log2_numthreads: 2,
+            mythread: 0,
+            log2_threads_per_mc: 1,
+            log2_threads_per_node: 6,
+        };
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ptrs = vec![SharedPtr::NULL; 3];
+        let incs = vec![1u32, 4, 5];
+        let out = unit_batch_scalar(&cfg, &table, &ptrs, &incs);
+        assert_eq!(out.thread, vec![0, 1, 1]);
+        assert_eq!(out.phase, vec![1, 0, 1]);
+        assert_eq!(out.sysva.len(), 3);
+    }
+}

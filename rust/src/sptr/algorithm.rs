@@ -1,0 +1,168 @@
+//! Algorithm 1 of the paper: shared-pointer incrementation.
+//!
+//! Two implementations mirror the two execution paths the paper's
+//! prototype compiler chooses between:
+//!
+//! * [`increment_general`] — divisions/modulo, valid for any layout; this
+//!   is what the Berkeley runtime executes in software and what our
+//!   SimAlpha `Soft` codegen expands to (~[`SOFT_INC_OP_COUNT`] ops).
+//! * [`increment_pow2`] — shift/mask form, only valid when blocksize,
+//!   elemsize and numthreads are all powers of two; this is the datapath
+//!   the hardware pipelines over two stages (and what the Pallas kernel
+//!   `python/compile/kernels/sptr_unit.py` computes batched).
+
+use super::{ArrayLayout, SharedPtr};
+
+/// Approximate dynamic op count of the compiled software increment on a
+/// 64-bit RISC (loads of layout constants + 2 divs + 2 mods + muls/adds).
+/// Used only for documentation / quick cost estimates; the simulator gets
+/// its costs from the actual instruction streams the compiler emits.
+pub const SOFT_INC_OP_COUNT: u32 = 31;
+
+/// Algorithm 1 verbatim (general path).
+///
+/// ```text
+/// phinc         = shptr.phase + increment
+/// thinc         = phinc / blocksize
+/// nshptr.phase  = phinc % blocksize
+/// blockinc      = (shptr.thread + thinc) / numthreads
+/// nshptr.thread = (shptr.thread + thinc) % numthreads
+/// eaddrinc      = (nshptr.phase - shptr.phase) + blockinc * blocksize
+/// nshptr.va     = shptr.va + eaddrinc * elemsize
+/// ```
+#[inline]
+pub fn increment_general(
+    ptr: &SharedPtr,
+    increment: u64,
+    layout: &ArrayLayout,
+) -> SharedPtr {
+    let phinc = ptr.phase + increment;
+    let thinc = phinc / layout.blocksize;
+    let nphase = phinc % layout.blocksize;
+    let tsum = ptr.thread as u64 + thinc;
+    let blockinc = tsum / layout.numthreads as u64;
+    let nthread = (tsum % layout.numthreads as u64) as u32;
+    // eaddrinc can be negative in the first term; do signed math then
+    // scale. (nphase - phase) in [-(blocksize-1), blocksize-1].
+    let eaddrinc =
+        (nphase as i64 - ptr.phase as i64) + (blockinc * layout.blocksize) as i64;
+    let nva = (ptr.va as i64 + eaddrinc * layout.elemsize as i64) as u64;
+    SharedPtr { thread: nthread, phase: nphase, va: nva }
+}
+
+/// Power-of-2 fast path: the hardware pipeline (shift/mask only).
+///
+/// `l2bs`, `l2es`, `l2nt` are log2 of blocksize / elemsize / numthreads —
+/// the Figure-3 5-bit one-hot immediates plus the `threads` register.
+#[inline]
+pub fn increment_pow2(
+    ptr: &SharedPtr,
+    increment: u64,
+    l2bs: u32,
+    l2es: u32,
+    l2nt: u32,
+) -> SharedPtr {
+    // -- pipeline stage 1 --
+    let phinc = ptr.phase + increment;
+    let thinc = phinc >> l2bs;
+    let nphase = phinc & ((1u64 << l2bs) - 1);
+    // -- pipeline stage 2 --
+    let tsum = ptr.thread as u64 + thinc;
+    let blockinc = tsum >> l2nt;
+    let nthread = (tsum & ((1u64 << l2nt) - 1)) as u32;
+    let eaddrinc = (nphase as i64 - ptr.phase as i64) + ((blockinc << l2bs) as i64);
+    let nva = (ptr.va as i64 + (eaddrinc << l2es)) as u64;
+    SharedPtr { thread: nthread, phase: nphase, va: nva }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::check_default;
+
+    fn pow2_layout(l2bs: u32, l2es: u32, l2nt: u32) -> ArrayLayout {
+        ArrayLayout::new(1 << l2bs, 1 << l2es, 1 << l2nt)
+    }
+
+    #[test]
+    fn pow2_matches_general_on_pow2_layouts() {
+        check_default("pow2 == general", |rng| {
+            let l2bs = rng.below(11) as u32;
+            let l2es = rng.below(7) as u32;
+            let l2nt = rng.below(7) as u32;
+            let layout = pow2_layout(l2bs, l2es, l2nt);
+            let idx = rng.below(1 << 16);
+            let ptr = SharedPtr::for_index(&layout, 0, idx);
+            let inc = rng.below(1 << 14);
+            let a = increment_general(&ptr, inc, &layout);
+            let b = increment_pow2(&ptr, inc, l2bs, l2es, l2nt);
+            assert_eq!(a, b, "layout={layout:?} ptr={ptr:?} inc={inc}");
+        });
+    }
+
+    #[test]
+    fn increment_matches_logical_index_walk() {
+        check_default("inc == index arithmetic", |rng| {
+            let layout = ArrayLayout::new(
+                rng.below(64) + 1,
+                rng.below(128) + 1,
+                rng.below(63) as u32 + 1,
+            );
+            let base = rng.below(1 << 20);
+            let idx = rng.below(1 << 12);
+            let inc = rng.below(1 << 12);
+            let p = SharedPtr::for_index(&layout, base, idx);
+            let q = increment_general(&p, inc, &layout);
+            let want = SharedPtr::for_index(&layout, base, idx + inc);
+            assert_eq!(q, want, "layout={layout:?} idx={idx} inc={inc}");
+        });
+    }
+
+    #[test]
+    fn composition_law() {
+        // inc(a) then inc(b) == inc(a+b)
+        check_default("inc composes", |rng| {
+            let layout = ArrayLayout::new(
+                rng.below(32) + 1,
+                rng.below(64) + 1,
+                rng.below(16) as u32 + 1,
+            );
+            let p = SharedPtr::for_index(&layout, 0, rng.below(4096));
+            let a = rng.below(2048);
+            let b = rng.below(2048);
+            let q1 = increment_general(&increment_general(&p, a, &layout), b, &layout);
+            let q2 = increment_general(&p, a + b, &layout);
+            assert_eq!(q1, q2);
+        });
+    }
+
+    #[test]
+    fn zero_increment_is_identity() {
+        let layout = ArrayLayout::new(8, 8, 4);
+        let p = SharedPtr::for_index(&layout, 128, 77);
+        assert_eq!(increment_general(&p, 0, &layout), p);
+        assert_eq!(increment_pow2(&p, 0, 3, 3, 2), p);
+    }
+
+    #[test]
+    fn single_thread_degenerates_to_linear() {
+        // With THREADS==1 the shared array is a plain local array.
+        let layout = ArrayLayout::new(4, 8, 1);
+        let p = SharedPtr::for_index(&layout, 0, 0);
+        let q = increment_general(&p, 13, &layout);
+        assert_eq!(q.thread, 0);
+        assert_eq!(q.va, 13 * 8);
+    }
+
+    #[test]
+    fn blocksize_one_is_pure_cyclic() {
+        let layout = ArrayLayout::new(1, 4, 4);
+        let mut p = SharedPtr::for_index(&layout, 0, 0);
+        for i in 1..=16u64 {
+            p = increment_general(&p, 1, &layout);
+            assert_eq!(p.thread as u64, i % 4);
+            assert_eq!(p.phase, 0);
+            assert_eq!(p.va, (i / 4) * 4);
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Per-thread base-address lookup table (paper 4.2).
+//!
+//! The paper describes two translation options: bases at regular
+//! intervals (computable from the thread id) or an arbitrary LUT.  Both
+//! prototypes use the LUT "for simplicity"; we support both, and
+//! [`BaseTable::regular`] doubles as the interval scheme.
+
+/// The per-thread shared-segment base-address table installed by the
+/// `PGAS_SETBASE` instruction at program start.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BaseTable {
+    bases: Vec<u64>,
+}
+
+impl BaseTable {
+    /// Arbitrary bases (the LUT option).
+    pub fn new(bases: Vec<u64>) -> Self {
+        assert!(!bases.is_empty());
+        Self { bases }
+    }
+
+    /// Regular-interval bases: `base0 + t * stride` (the scalable option;
+    /// also how our simulated machine lays out thread segments).
+    pub fn regular(numthreads: u32, base0: u64, stride: u64) -> Self {
+        Self {
+            bases: (0..numthreads as u64).map(|t| base0 + t * stride).collect(),
+        }
+    }
+
+    #[inline]
+    pub fn base(&self, thread: u32) -> u64 {
+        self.bases[thread as usize]
+    }
+
+    pub fn numthreads(&self) -> u32 {
+        self.bases.len() as u32
+    }
+
+    pub fn bases(&self) -> &[u64] {
+        &self.bases
+    }
+
+    /// Inverse mapping: which thread's segment contains `sysva`?
+    /// (Linear scan — used only by debug assertions and tests.)
+    pub fn thread_of_sysva(&self, sysva: u64) -> Option<u32> {
+        let mut best: Option<(u32, u64)> = None;
+        for (t, &b) in self.bases.iter().enumerate() {
+            if sysva >= b {
+                let off = sysva - b;
+                if best.map_or(true, |(_, o)| off < o) {
+                    best = Some((t as u32, off));
+                }
+            }
+        }
+        best.map(|(t, _)| t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regular_layout() {
+        let t = BaseTable::regular(4, 1 << 32, 1 << 32);
+        assert_eq!(t.base(0), 1 << 32);
+        assert_eq!(t.base(3), 4 << 32);
+        assert_eq!(t.numthreads(), 4);
+    }
+
+    #[test]
+    fn inverse_lookup() {
+        let t = BaseTable::regular(8, 1 << 32, 1 << 32);
+        for th in 0..8u32 {
+            let mid = t.base(th) + 12345;
+            assert_eq!(t.thread_of_sysva(mid), Some(th));
+        }
+        assert_eq!(t.thread_of_sysva(0), None);
+    }
+}

@@ -1,0 +1,268 @@
+//! UPC shared-pointer algebra — the paper's Section 2 memory model and
+//! Section 4 Algorithm 1, in both the general (divide/modulo) software
+//! form and the power-of-2 shift/mask form the hardware implements.
+//!
+//! A UPC shared pointer has three fields (paper Fig. 2):
+//!
+//! * `thread` — affinity of the pointed element,
+//! * `phase`  — position inside the current block,
+//! * `va`     — address of the element in that thread's local space
+//!   (stored here as an offset into the thread's shared segment).
+//!
+//! A `shared [B] T A[N]` array distributes elements round-robin in blocks
+//! of `B` over `THREADS` threads; each thread stores its blocks
+//! contiguously from the array's local base offset.
+
+mod algorithm;
+mod base_table;
+mod pack;
+
+pub use algorithm::{increment_general, increment_pow2, SOFT_INC_OP_COUNT};
+pub use base_table::BaseTable;
+pub use pack::{pack, unpack, PackedPtr, PHASE_BITS, THREAD_BITS, VA_BITS};
+
+use crate::util::{is_pow2, log2_exact};
+
+/// Distribution geometry of one shared array (+ element size in bytes).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ArrayLayout {
+    /// Block size in elements (the `[B]` in `shared [B] int A[..]`).
+    pub blocksize: u64,
+    /// Element size in bytes.
+    pub elemsize: u64,
+    /// Number of UPC threads.
+    pub numthreads: u32,
+}
+
+impl ArrayLayout {
+    pub fn new(blocksize: u64, elemsize: u64, numthreads: u32) -> Self {
+        assert!(blocksize > 0 && elemsize > 0 && numthreads > 0);
+        Self { blocksize, elemsize, numthreads }
+    }
+
+    /// The hardware fast path requires all three parameters to be powers
+    /// of two (paper 4.2); the compiler falls back to software otherwise.
+    pub fn hw_supported(&self) -> bool {
+        is_pow2(self.blocksize)
+            && is_pow2(self.elemsize)
+            && is_pow2(self.numthreads as u64)
+    }
+
+    /// (log2 blocksize, log2 elemsize, log2 numthreads) when pow2.
+    pub fn log2s(&self) -> Option<(u32, u32, u32)> {
+        Some((
+            log2_exact(self.blocksize)?,
+            log2_exact(self.elemsize)?,
+            log2_exact(self.numthreads as u64)?,
+        ))
+    }
+
+    /// Bytes occupied on thread `t` by the first `n` elements of the
+    /// array (used by the allocator to size per-thread chunks).
+    pub fn bytes_on_thread(&self, n: u64, t: u32) -> u64 {
+        let full_rounds = n / (self.blocksize * self.numthreads as u64);
+        let rem = n % (self.blocksize * self.numthreads as u64);
+        let rem_t = rem
+            .saturating_sub(t as u64 * self.blocksize)
+            .min(self.blocksize);
+        (full_rounds * self.blocksize + rem_t) * self.elemsize
+    }
+}
+
+/// A UPC shared pointer. `va` is the element's byte offset inside its
+/// thread's shared segment; translation to a system virtual address adds
+/// the thread's base from the [`BaseTable`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SharedPtr {
+    pub thread: u32,
+    pub phase: u64,
+    pub va: u64,
+}
+
+impl SharedPtr {
+    pub const NULL: SharedPtr = SharedPtr { thread: 0, phase: 0, va: 0 };
+
+    /// Pointer to logical element `idx` of an array whose per-thread data
+    /// starts at local offset `base_va` (identical on every thread, as in
+    /// the Berkeley runtime's symmetric heaps).
+    pub fn for_index(layout: &ArrayLayout, base_va: u64, idx: u64) -> Self {
+        let block = idx / layout.blocksize;
+        let phase = idx % layout.blocksize;
+        let thread = (block % layout.numthreads as u64) as u32;
+        let local_block = block / layout.numthreads as u64;
+        let va = base_va
+            + (local_block * layout.blocksize + phase) * layout.elemsize;
+        SharedPtr { thread, phase, va }
+    }
+
+    /// Inverse of [`SharedPtr::for_index`] — the logical index this
+    /// pointer refers to. Requires the pointer to be well-formed for
+    /// `layout` / `base_va`.
+    pub fn to_index(&self, layout: &ArrayLayout, base_va: u64) -> u64 {
+        let local_off = (self.va - base_va) / layout.elemsize;
+        let local_block = local_off / layout.blocksize;
+        debug_assert_eq!(local_off % layout.blocksize, self.phase);
+        (local_block * layout.numthreads as u64 + self.thread as u64)
+            * layout.blocksize
+            + self.phase
+    }
+
+    /// `upc_threadof`.
+    pub fn threadof(&self) -> u32 {
+        self.thread
+    }
+
+    /// `upc_phaseof`.
+    pub fn phaseof(&self) -> u64 {
+        self.phase
+    }
+
+    /// `upc_addrfieldof`.
+    pub fn addrfieldof(&self) -> u64 {
+        self.va
+    }
+
+    /// `upc_resetphase` — pointer to the start of the current block.
+    pub fn resetphase(&self, layout: &ArrayLayout) -> SharedPtr {
+        SharedPtr {
+            thread: self.thread,
+            phase: 0,
+            va: self.va - self.phase * layout.elemsize,
+        }
+    }
+
+    /// Translate to a system virtual address (paper 4.2: LUT + add).
+    #[inline]
+    pub fn translate(&self, table: &BaseTable) -> u64 {
+        table.base(self.thread) + self.va
+    }
+
+    /// Increment through the array layout (general path).
+    pub fn incremented(&self, inc: u64, layout: &ArrayLayout) -> SharedPtr {
+        increment_general(self, inc, layout)
+    }
+}
+
+/// Locality condition codes produced by the increment unit (paper 5.2),
+/// consumed by the Coprocessor-Branch instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Locality {
+    /// Pointed data owned by the executing thread.
+    Local = 0,
+    /// Same memory controller.
+    SameMc = 1,
+    /// Same node: reachable via the shared load/store instructions.
+    SameNode = 2,
+    /// Other node: requires network communication.
+    Remote = 3,
+}
+
+/// Machine topology used for locality classification.
+#[derive(Clone, Copy, Debug)]
+pub struct Topology {
+    pub log2_threads_per_mc: u32,
+    pub log2_threads_per_node: u32,
+}
+
+impl Default for Topology {
+    /// Single-node SMP with 2 threads per memory controller — the
+    /// Leon3 prototype shape (everything is at worst `SameNode`).
+    fn default() -> Self {
+        Topology { log2_threads_per_mc: 1, log2_threads_per_node: 6 }
+    }
+}
+
+/// Classify `thread` relative to the executing `mythread`.
+#[inline]
+pub fn locality(thread: u32, mythread: u32, topo: &Topology) -> Locality {
+    if thread == mythread {
+        Locality::Local
+    } else if thread >> topo.log2_threads_per_mc
+        == mythread >> topo.log2_threads_per_mc
+    {
+        Locality::SameMc
+    } else if thread >> topo.log2_threads_per_node
+        == mythread >> topo.log2_threads_per_node
+    {
+        Locality::SameNode
+    } else {
+        Locality::Remote
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Figure 2: `shared [4] int arrayA[32]` over 4 threads.
+    fn fig2() -> ArrayLayout {
+        ArrayLayout::new(4, 4, 4)
+    }
+
+    #[test]
+    fn figure2_element_placement() {
+        let l = fig2();
+        // Elements 0..3 on thread 0, 4..7 on thread 1, ..., 16..19 wrap
+        // to thread 0's second block.
+        for i in 0..32u64 {
+            let p = SharedPtr::for_index(&l, 0, i);
+            assert_eq!(p.thread as u64, (i / 4) % 4, "elem {i}");
+            assert_eq!(p.phase, i % 4, "elem {i}");
+            let local_block = i / 16;
+            assert_eq!(p.va, (local_block * 4 + i % 4) * 4, "elem {i}");
+            assert_eq!(p.to_index(&l, 0), i);
+        }
+    }
+
+    #[test]
+    fn index_roundtrip_nonpow2() {
+        // CG's w/w_tmp-style array: elemsize 56016 (non-pow2).
+        let l = ArrayLayout::new(3, 56016, 5);
+        for i in 0..200u64 {
+            let p = SharedPtr::for_index(&l, 4096, i);
+            assert_eq!(p.to_index(&l, 4096), i);
+            assert!(!l.hw_supported());
+        }
+    }
+
+    #[test]
+    fn accessor_functions() {
+        let l = fig2();
+        let p = SharedPtr::for_index(&l, 0, 9);
+        assert_eq!(p.threadof(), 2);
+        assert_eq!(p.phaseof(), 1);
+        assert_eq!(p.addrfieldof(), 4);
+        let r = p.resetphase(&l);
+        assert_eq!(r.phase, 0);
+        assert_eq!(r.va, 0);
+        assert_eq!(r.thread, 2);
+    }
+
+    #[test]
+    fn translation_uses_base_table() {
+        let table = BaseTable::regular(4, 0xFF0B_0000_0000, 1 << 32);
+        let p = SharedPtr { thread: 1, phase: 0, va: 0x3F00 };
+        assert_eq!(p.translate(&table), 0xFF0B_0000_0000 + (1 << 32) + 0x3F00);
+    }
+
+    #[test]
+    fn locality_codes() {
+        let topo = Topology { log2_threads_per_mc: 1, log2_threads_per_node: 2 };
+        assert_eq!(locality(0, 0, &topo), Locality::Local);
+        assert_eq!(locality(1, 0, &topo), Locality::SameMc);
+        assert_eq!(locality(2, 0, &topo), Locality::SameNode);
+        assert_eq!(locality(3, 0, &topo), Locality::SameNode);
+        assert_eq!(locality(4, 0, &topo), Locality::Remote);
+    }
+
+    #[test]
+    fn bytes_on_thread_partial_rounds() {
+        let l = fig2(); // 4 threads, blocks of 4 ints
+        // 18 elements: threads 0..3 get 4,4,4,4 then thread 0 gets 2 more.
+        assert_eq!(l.bytes_on_thread(18, 0), (4 + 2) * 4);
+        assert_eq!(l.bytes_on_thread(18, 1), 4 * 4);
+        assert_eq!(l.bytes_on_thread(18, 3), 4 * 4);
+        assert_eq!(l.bytes_on_thread(16, 0), 16);
+    }
+}

@@ -1,0 +1,84 @@
+//! 64-bit packed representation of a shared pointer.
+//!
+//! "Current implementations of UPC usually use 64 bits to represent a
+//! shared pointer" (paper Section 2).  The PGAS instructions operate on
+//! pointers held in ordinary 64-bit integer registers, so the simulator
+//! needs a canonical packing.  We use the Berkeley-style split:
+//!
+//! ```text
+//!  63          48 47        38 37                              0
+//! +--------------+------------+----------------------------------+
+//! |  phase (16)  | thread(10) |         va offset (38)           |
+//! +--------------+------------+----------------------------------+
+//! ```
+//!
+//! 10 thread bits cover the paper's 64-core BigTsunami limit with room;
+//! 38 va bits address 256 GiB per thread segment.
+
+use super::SharedPtr;
+
+pub const PHASE_BITS: u32 = 16;
+pub const THREAD_BITS: u32 = 10;
+pub const VA_BITS: u32 = 38;
+
+const VA_MASK: u64 = (1 << VA_BITS) - 1;
+const THREAD_MASK: u64 = (1 << THREAD_BITS) - 1;
+const PHASE_MASK: u64 = (1 << PHASE_BITS) - 1;
+
+/// A shared pointer packed into one integer register.
+pub type PackedPtr = u64;
+
+/// Pack. Fields out of range are a programming error (debug-asserted),
+/// matching real compilers which reject oversized block sizes.
+#[inline]
+pub fn pack(p: &SharedPtr) -> PackedPtr {
+    debug_assert!(p.phase <= PHASE_MASK, "phase {} overflows", p.phase);
+    debug_assert!((p.thread as u64) <= THREAD_MASK);
+    debug_assert!(p.va <= VA_MASK, "va {:#x} overflows", p.va);
+    (p.phase << (THREAD_BITS + VA_BITS))
+        | ((p.thread as u64) << VA_BITS)
+        | (p.va & VA_MASK)
+}
+
+/// Unpack.
+#[inline]
+pub fn unpack(bits: PackedPtr) -> SharedPtr {
+    SharedPtr {
+        phase: (bits >> (THREAD_BITS + VA_BITS)) & PHASE_MASK,
+        thread: ((bits >> VA_BITS) & THREAD_MASK) as u32,
+        va: bits & VA_MASK,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit::check_default;
+
+    #[test]
+    fn roundtrip() {
+        check_default("pack/unpack roundtrip", |rng| {
+            let p = SharedPtr {
+                thread: rng.below(1 << THREAD_BITS) as u32,
+                phase: rng.below(1 << PHASE_BITS),
+                va: rng.below(1 << VA_BITS),
+            };
+            assert_eq!(unpack(pack(&p)), p);
+        });
+    }
+
+    #[test]
+    fn null_is_zero() {
+        assert_eq!(pack(&SharedPtr::NULL), 0);
+        assert_eq!(unpack(0), SharedPtr::NULL);
+    }
+
+    #[test]
+    fn field_isolation() {
+        let p = SharedPtr { thread: 63, phase: 0, va: 0 };
+        let bits = pack(&p);
+        assert_eq!(bits, 63 << VA_BITS);
+        let q = SharedPtr { thread: 0, phase: 5, va: 0 };
+        assert_eq!(pack(&q), 5 << (THREAD_BITS + VA_BITS));
+    }
+}

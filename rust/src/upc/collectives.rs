@@ -1,0 +1,224 @@
+//! UPC language constructs as reusable IR-emitting helpers:
+//! `upc_forall` affinity loops and the collectives (`upc_all_reduce`,
+//! `upc_all_broadcast`) the NPB kernels hand-roll.
+//!
+//! These generate the same shared-pointer traffic the Berkeley
+//! translations produce, so they inherit the Soft/Hw lowering split —
+//! a collective compiled with `Lowering::Hw` uses the PGAS instructions
+//! for its internal traversals.
+
+use crate::compiler::{IrBuilder, Val};
+use crate::isa::{Cond, FpOp, IntOp, MemWidth};
+use crate::upc::ArrayId;
+
+/// `upc_forall(i = 0; i < n; i++; &A[i])` over a **cyclic** array
+/// (blocksize 1): each thread visits i ≡ MYTHREAD (mod THREADS),
+/// walking a shared pointer with stride THREADS.  The closure receives
+/// the pointer register positioned at the current element.
+pub fn forall_cyclic<F>(b: &mut IrBuilder, arr: ArrayId, n: u64, f: F)
+where
+    F: FnOnce(&mut IrBuilder, u8) + Copy,
+{
+    let layout = b.rt.array(arr).layout;
+    assert_eq!(layout.blocksize, 1, "forall_cyclic requires blocksize 1");
+    let threads = layout.numthreads as i64;
+    let myt = b.mythread();
+    let p = b.sptr_init(arr, Val::R(myt));
+    b.free_i(myt);
+    let iters = (n / layout.numthreads as u64) as i64;
+    b.for_range(Val::I(0), Val::I(iters), 1, |b, _| {
+        f(b, p);
+        b.sptr_inc(p, arr, Val::I(threads));
+    });
+    b.free_i(p);
+}
+
+/// `upc_forall` over a **blocked** array (blocksize = n/THREADS): each
+/// thread walks its contiguous chunk with stride 1.
+pub fn forall_blocked<F>(b: &mut IrBuilder, arr: ArrayId, n: u64, f: F)
+where
+    F: FnOnce(&mut IrBuilder, u8) + Copy,
+{
+    let layout = b.rt.array(arr).layout;
+    let chunk = n / layout.numthreads as u64;
+    assert_eq!(layout.blocksize, chunk, "forall_blocked: blocksize must equal n/THREADS");
+    let myt = b.mythread();
+    let start = b.it();
+    b.bin(IntOp::Mul, start, myt, Val::I(chunk as i64));
+    b.free_i(myt);
+    let p = b.sptr_init(arr, Val::R(start));
+    b.free_i(start);
+    b.for_range(Val::I(0), Val::I(chunk as i64), 1, |b, _| {
+        f(b, p);
+        b.sptr_inc(p, arr, Val::I(1));
+    });
+    b.free_i(p);
+}
+
+/// `upc_all_reduce(UPC_ADD, double)`: every thread contributes the f64
+/// in `fval` via `contrib` (a cyclic THREADS-element array); after the
+/// barrier, thread 0 sums and stores into `out[0]`; a second barrier
+/// publishes. Afterwards every thread loads the result into `fdst`.
+pub fn all_reduce_sum_f64(
+    b: &mut IrBuilder,
+    contrib: ArrayId,
+    out: ArrayId,
+    fval: u8,
+    fdst: u8,
+) {
+    assert_eq!(b.rt.array(contrib).layout.blocksize, 1);
+    // publish my contribution to my affinity slot
+    let myt = b.mythread();
+    let pc = b.sptr_init(contrib, Val::R(myt));
+    b.sptr_st(MemWidth::F64, fval, pc, 0);
+    b.free_i(pc);
+    b.barrier();
+    // thread 0 reduces
+    b.iff(Cond::Eq, myt, |b| {
+        let facc = b.fconst(0.0);
+        let p = b.sptr_init(contrib, Val::I(0));
+        let nt = b.threads();
+        b.for_range(Val::I(0), Val::R(nt), 1, |b, _| {
+            let fv = b.ft();
+            b.sptr_ld(MemWidth::F64, fv, p, 0);
+            b.fbin(FpOp::FAdd, facc, facc, fv);
+            b.free_f(fv);
+            b.sptr_inc(p, contrib, Val::I(1));
+        });
+        b.free_i(nt);
+        b.free_i(p);
+        let po = b.sptr_init(out, Val::I(0));
+        b.sptr_st(MemWidth::F64, facc, po, 0);
+        b.free_i(po);
+        b.free_f(facc);
+    });
+    b.free_i(myt);
+    b.barrier();
+    // everyone reads the result
+    let po = b.sptr_init(out, Val::I(0));
+    b.sptr_ld(MemWidth::F64, fdst, po, 0);
+    b.free_i(po);
+}
+
+/// `upc_all_broadcast`: thread `root` writes `fval` to `out[0]`;
+/// everyone reads it into `fdst` after the barrier.
+pub fn all_broadcast_f64(
+    b: &mut IrBuilder,
+    out: ArrayId,
+    root: i64,
+    fval: u8,
+    fdst: u8,
+) {
+    let myt = b.mythread();
+    let cmp = b.it();
+    b.bin(IntOp::CmpEq, cmp, myt, Val::I(root));
+    b.free_i(myt);
+    b.iff(Cond::Ne, cmp, |b| {
+        let po = b.sptr_init(out, Val::I(0));
+        b.sptr_st(MemWidth::F64, fval, po, 0);
+        b.free_i(po);
+    });
+    b.free_i(cmp);
+    b.barrier();
+    let po = b.sptr_init(out, Val::I(0));
+    b.sptr_ld(MemWidth::F64, fdst, po, 0);
+    b.free_i(po);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::{compile, CompileOpts, Lowering};
+    use crate::cpu::CpuModel;
+    use crate::mem::{seg_base, PRIV_OFF};
+    use crate::sim::{Machine, MachineCfg};
+    use crate::upc::UpcRuntime;
+
+    fn run_collective(lowering: Lowering, threads: u32) -> (f64, Vec<f64>) {
+        let mut rt = UpcRuntime::new(threads);
+        let contrib = rt.alloc_shared("contrib", 1, 8, threads as u64);
+        let out = rt.alloc_shared("out", 1, 8, 1);
+        let data = rt.alloc_shared("data", 1, 8, threads as u64 * 8);
+
+        let mut b = IrBuilder::new(&mut rt);
+        // every thread: val = MYTHREAD + 1 (as f64)
+        let myt = b.mythread();
+        let v1 = b.it();
+        b.bin(IntOp::Add, v1, myt, Val::I(1));
+        let fval = b.ft();
+        b.cvt_if(fval, v1);
+        b.free_i(v1);
+        b.free_i(myt);
+        let fsum = b.ft();
+        all_reduce_sum_f64(&mut b, contrib, out, fval, fsum);
+        // broadcast double the sum from thread 0
+        let ftwo = b.fconst(2.0);
+        b.fbin(FpOp::FMul, fval, fsum, ftwo);
+        b.free_f(ftwo);
+        let fbc = b.ft();
+        all_broadcast_f64(&mut b, out, 0, fval, fbc);
+        // forall over the cyclic data array: data[i] = broadcast value
+        forall_cyclic(&mut b, data, threads as u64 * 8, |b, p| {
+            b.sptr_st(MemWidth::F64, fbc, p, 0);
+        });
+        // each thread writes its received broadcast to private space
+        let pb = b.priv_base();
+        b.st(MemWidth::F64, fbc, pb, 0);
+        b.free_i(pb);
+        let m = b.finish("collectives");
+
+        let ck = compile(
+            &m,
+            &rt,
+            &CompileOpts {
+                lowering,
+                static_threads: false,
+                numthreads: threads,
+                volatile_stores: false,
+            },
+        );
+        let mut machine = Machine::new(MachineCfg::new(threads, CpuModel::Atomic));
+        machine.run(&ck.program);
+        let bc0 = machine.mem.read_f64(seg_base(0) + PRIV_OFF);
+        let data_vals: Vec<f64> = (0..threads as u64 * 8)
+            .map(|i| rt.read_f64(machine.mem_mut(), data, i))
+            .collect();
+        (bc0, data_vals)
+    }
+
+    #[test]
+    fn reduce_broadcast_forall_roundtrip() {
+        for threads in [1u32, 2, 8] {
+            let want = 2.0 * (1..=threads as u64).sum::<u64>() as f64;
+            for lowering in [Lowering::Soft, Lowering::Hw] {
+                let (bc, data) = run_collective(lowering, threads);
+                assert_eq!(bc, want, "{lowering:?} x{threads}");
+                assert!(
+                    data.iter().all(|&v| v == want),
+                    "{lowering:?} x{threads}: forall must cover every element"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn forall_blocked_covers_all_elements() {
+        let threads = 4u32;
+        let n = 64u64;
+        let mut rt = UpcRuntime::new(threads);
+        let arr = rt.alloc_shared("a", n / threads as u64, 8, n);
+        let mut b = IrBuilder::new(&mut rt);
+        let one = b.iconst(1);
+        forall_blocked(&mut b, arr, n, |b, p| {
+            b.sptr_st(MemWidth::U64, one, p, 0);
+        });
+        b.free_i(one);
+        let m = b.finish("blocked");
+        let ck = compile(&m, &rt, &CompileOpts::hw(threads));
+        let mut machine = Machine::new(MachineCfg::new(threads, CpuModel::Atomic));
+        machine.run(&ck.program);
+        for i in 0..n {
+            assert_eq!(rt.read_u64(machine.mem_mut(), arr, i), 1, "elem {i}");
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! The UPC runtime model: symmetric shared heaps with block-cyclic
+//! arrays (paper Fig. 1/2), a symmetric private-space allocator, and
+//! host-side element access for workload initialization and validation.
+//!
+//! The runtime is *symmetric*: every shared allocation starts at the same
+//! local offset in every thread's shared segment (as in the Berkeley
+//! runtime), which is what makes the single `va` field of a shared
+//! pointer meaningful on all threads.
+
+pub mod collectives;
+
+use crate::isa::MemWidth;
+use crate::mem::{MemSystem, PRIV_OFF};
+use crate::sptr::{ArrayLayout, SharedPtr};
+
+/// Identifier of a shared array within a [`UpcRuntime`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ArrayId(pub usize);
+
+/// One `shared [B] T name[N]` declaration.
+#[derive(Clone, Debug)]
+pub struct SharedArray {
+    pub name: String,
+    pub layout: ArrayLayout,
+    pub nelems: u64,
+    /// Local offset of the array's data in every thread's shared segment.
+    pub base_va: u64,
+}
+
+impl SharedArray {
+    /// Shared pointer to logical element `idx`.
+    pub fn ptr(&self, idx: u64) -> SharedPtr {
+        debug_assert!(idx <= self.nelems, "{}[{idx}] out of bounds", self.name);
+        SharedPtr::for_index(&self.layout, self.base_va, idx)
+    }
+
+    /// Can the PGAS hardware traverse this array (pow2 geometry)?
+    pub fn hw_supported(&self) -> bool {
+        self.layout.hw_supported()
+    }
+}
+
+/// The per-program UPC runtime state: allocators + array directory.
+pub struct UpcRuntime {
+    pub numthreads: u32,
+    arrays: Vec<SharedArray>,
+    shared_top: u64,
+    priv_top: u64,
+}
+
+/// Alignment of every allocation (one cache line).
+const ALIGN: u64 = 64;
+
+impl UpcRuntime {
+    pub fn new(numthreads: u32) -> Self {
+        Self {
+            numthreads,
+            arrays: Vec::new(),
+            shared_top: 0,
+            // private space starts after the compiler's reserved area
+            // (fp-constant pool + spill slots, see compiler::emit)
+            priv_top: 0x1000,
+        }
+    }
+
+    /// Declare + allocate `shared [blocksize] T name[nelems]` with
+    /// `elemsize = sizeof(T)`. Returns the array id.
+    pub fn alloc_shared(
+        &mut self,
+        name: &str,
+        blocksize: u64,
+        elemsize: u64,
+        nelems: u64,
+    ) -> ArrayId {
+        let layout = ArrayLayout::new(blocksize, elemsize, self.numthreads);
+        // symmetric allocation: every thread reserves the worst-case
+        // (thread-0) footprint so base_va is identical everywhere.
+        let worst = (0..self.numthreads)
+            .map(|t| layout.bytes_on_thread(nelems, t))
+            .max()
+            .unwrap_or(0);
+        let base_va = self.shared_top;
+        self.shared_top += worst.div_ceil(ALIGN) * ALIGN;
+        let id = ArrayId(self.arrays.len());
+        self.arrays.push(SharedArray {
+            name: name.to_string(),
+            layout,
+            nelems,
+            base_va,
+        });
+        id
+    }
+
+    /// Allocate `bytes` of per-thread private space; returns the offset
+    /// from the private base (identical on every thread).
+    pub fn alloc_private(&mut self, bytes: u64) -> u64 {
+        let off = self.priv_top;
+        self.priv_top += bytes.div_ceil(ALIGN) * ALIGN;
+        assert!(self.priv_top < 0x3000_0000, "private space exhausted");
+        off
+    }
+
+    pub fn array(&self, id: ArrayId) -> &SharedArray {
+        &self.arrays[id.0]
+    }
+
+    pub fn arrays(&self) -> &[SharedArray] {
+        &self.arrays
+    }
+
+    pub fn shared_bytes_per_thread(&self) -> u64 {
+        self.shared_top
+    }
+
+    // ---------- host-side access (init / validation only) ----------
+
+    /// sysva of element `idx` of `id`.
+    pub fn sysva(&self, mem: &MemSystem, id: ArrayId, idx: u64) -> u64 {
+        self.array(id).ptr(idx).translate(&mem.base_table)
+    }
+
+    fn elem_width(&self, id: ArrayId) -> MemWidth {
+        match self.array(id).layout.elemsize {
+            1 => MemWidth::U8,
+            2 => MemWidth::U16,
+            4 => MemWidth::U32,
+            _ => MemWidth::U64,
+        }
+    }
+
+    pub fn write_u64(&self, mem: &mut MemSystem, id: ArrayId, idx: u64, v: u64) {
+        let a = self.sysva(mem, id, idx);
+        mem.write(self.elem_width(id), a, v);
+    }
+
+    pub fn read_u64(&self, mem: &mut MemSystem, id: ArrayId, idx: u64) -> u64 {
+        let a = self.sysva(mem, id, idx);
+        mem.read(self.elem_width(id), a)
+    }
+
+    pub fn write_f64(&self, mem: &mut MemSystem, id: ArrayId, idx: u64, v: f64) {
+        let a = self.sysva(mem, id, idx);
+        mem.write_f64(a, v);
+    }
+
+    pub fn read_f64(&self, mem: &mut MemSystem, id: ArrayId, idx: u64) -> f64 {
+        let a = self.sysva(mem, id, idx);
+        mem.read_f64(a)
+    }
+
+    /// Private-space sysva for thread `t` at offset `off`.
+    pub fn priv_sysva(&self, t: u32, off: u64) -> u64 {
+        crate::mem::seg_base(t) + PRIV_OFF + off
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn symmetric_allocation() {
+        let mut rt = UpcRuntime::new(4);
+        let a = rt.alloc_shared("a", 4, 8, 32);
+        let b = rt.alloc_shared("b", 2, 4, 100);
+        assert_eq!(rt.array(a).base_va, 0);
+        // a occupies 8 elems * 8B = 64B per thread (32 elems/4 threads)
+        assert_eq!(rt.array(b).base_va, 64);
+        assert!(rt.array(a).hw_supported());
+    }
+
+    #[test]
+    fn nonpow2_array_not_hw_supported() {
+        let mut rt = UpcRuntime::new(4);
+        // the CG w/w_tmp case: elemsize 56016
+        let w = rt.alloc_shared("w", 1, 56016, 8);
+        assert!(!rt.array(w).hw_supported());
+    }
+
+    #[test]
+    fn host_rw_roundtrip_follows_layout() {
+        let mut rt = UpcRuntime::new(4);
+        let a = rt.alloc_shared("a", 4, 8, 32);
+        let mut mem = MemSystem::new(4);
+        for i in 0..32 {
+            rt.write_u64(&mut mem, a, i, i * i);
+        }
+        for i in 0..32 {
+            assert_eq!(rt.read_u64(&mut mem, a, i), i * i);
+        }
+        // element 5 must live in thread 1's segment
+        let sysva = rt.sysva(&mem, a, 5);
+        assert_eq!(sysva >> 32, 2);
+    }
+
+    #[test]
+    fn f64_elements() {
+        let mut rt = UpcRuntime::new(2);
+        let a = rt.alloc_shared("x", 8, 8, 64);
+        let mut mem = MemSystem::new(2);
+        rt.write_f64(&mut mem, a, 63, 2.5);
+        assert_eq!(rt.read_f64(&mut mem, a, 63), 2.5);
+    }
+
+    #[test]
+    fn private_allocator_is_symmetric() {
+        let mut rt = UpcRuntime::new(2);
+        let o1 = rt.alloc_private(100);
+        let o2 = rt.alloc_private(8);
+        assert!(o2 >= o1 + 100);
+        assert_eq!(rt.priv_sysva(0, o1) + (1 << 32), rt.priv_sysva(1, o1));
+    }
+}

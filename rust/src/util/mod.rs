@@ -1,0 +1,77 @@
+//! Small shared utilities: deterministic RNG, stats helpers, table
+//! rendering, and a tiny randomized-property-test kit (`testkit`).
+//!
+//! The offline build environment vendors only the `xla` closure, so the
+//! usual suspects (rand, proptest, criterion, prettytable) are hand-rolled
+//! here at the size this crate actually needs.
+
+pub mod bench;
+pub mod rng;
+pub mod table;
+pub mod testkit;
+
+/// `true` iff `x` is a power of two (0 is not).
+#[inline]
+pub fn is_pow2(x: u64) -> bool {
+    x != 0 && (x & (x - 1)) == 0
+}
+
+/// floor(log2(x)) for x > 0.
+#[inline]
+pub fn log2_floor(x: u64) -> u32 {
+    63 - x.leading_zeros()
+}
+
+/// Exact log2 for powers of two.
+#[inline]
+pub fn log2_exact(x: u64) -> Option<u32> {
+    if is_pow2(x) {
+        Some(log2_floor(x))
+    } else {
+        None
+    }
+}
+
+/// Round `n` up to a multiple of `m`.
+#[inline]
+pub fn round_up(n: usize, m: usize) -> usize {
+    n.div_ceil(m) * m
+}
+
+/// Geometric mean of a slice (used for speedup summaries).
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    (xs.iter().map(|x| x.ln()).sum::<f64>() / xs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_predicates() {
+        assert!(is_pow2(1));
+        assert!(is_pow2(64));
+        assert!(!is_pow2(0));
+        assert!(!is_pow2(56016)); // CG's w/w_tmp element size
+        assert_eq!(log2_exact(1024), Some(10));
+        assert_eq!(log2_exact(56016), None);
+        assert_eq!(log2_floor(7), 2);
+    }
+
+    #[test]
+    fn round_up_works() {
+        assert_eq!(round_up(0, 8192), 0);
+        assert_eq!(round_up(1, 8192), 8192);
+        assert_eq!(round_up(8192, 8192), 8192);
+        assert_eq!(round_up(8193, 8192), 16384);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert!(geomean(&[]).is_nan());
+    }
+}

@@ -1,0 +1,72 @@
+//! A small randomized property-test kit (proptest is not vendored in this
+//! offline environment).  Properties run over many seeded random cases;
+//! on failure the failing seed is printed so the case can be replayed.
+
+use super::rng::Xoshiro256;
+
+/// Number of cases per property (override with `PGAS_PROPTEST_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("PGAS_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(96)
+}
+
+/// Run `prop` over `cases` seeded RNGs; panic with the seed on failure.
+///
+/// ```
+/// use pgas_hw::util::testkit::check;
+/// check("addition commutes", 64, |rng| {
+///     let (a, b) = (rng.below(1000) as u64, rng.below(1000) as u64);
+///     assert_eq!(a + b, b + a);
+/// });
+/// ```
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Xoshiro256),
+{
+    let base = std::env::var("PGAS_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_0000u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case);
+        let mut rng = Xoshiro256::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || prop(&mut rng),
+        ));
+        if let Err(err) = result {
+            eprintln!(
+                "property `{name}` failed at case {case} \
+                 (replay with PGAS_PROPTEST_SEED={seed} and cases=1)"
+            );
+            std::panic::resume_unwind(err);
+        }
+    }
+}
+
+/// Convenience: run with the default number of cases.
+pub fn check_default<F>(name: &str, prop: F)
+where
+    F: FnMut(&mut Xoshiro256),
+{
+    check(name, default_cases(), prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check("count", 10, |_| n += 1);
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn failing_property_panics() {
+        check("always-fails", 3, |_| panic!("boom"));
+    }
+}

@@ -1,0 +1,95 @@
+//! Integration: full campaign slices across models, validated numerics,
+//! and the paper's qualitative orderings.
+
+use pgas_hw::coordinator::{figure_table, find, Campaign};
+use pgas_hw::cpu::CpuModel;
+use pgas_hw::npb::{self, Kernel, PaperVariant, Scale};
+
+#[test]
+fn small_campaign_all_kernels_atomic() {
+    let c = Campaign {
+        kernels: Kernel::ALL.to_vec(),
+        models: vec![CpuModel::Atomic],
+        cores: vec![1, 4],
+        variants: PaperVariant::ALL.to_vec(),
+        scale: Scale { factor: 1024 },
+        jobs: 8,
+    };
+    let outs = c.run(false);
+    // 5 kernels x 2 core counts x 3 variants (every run validated)
+    assert_eq!(outs.len(), 30);
+    for k in Kernel::ALL {
+        let t = figure_table(&outs, k, CpuModel::Atomic, "fig");
+        assert!(!t.is_empty(), "{k}");
+    }
+}
+
+#[test]
+fn all_three_models_agree_functionally() {
+    // same kernel, same answer on atomic/timing/detailed (validation
+    // inside run() checks numerics against the host reference)
+    let scale = Scale { factor: 2048 };
+    for model in CpuModel::ALL {
+        let out = npb::run(Kernel::Is, PaperVariant::Hw, model, 4, &scale);
+        assert!(out.result.cycles > 0, "{model}");
+    }
+}
+
+#[test]
+fn timing_costs_more_than_atomic_and_detailed_between() {
+    let scale = Scale { factor: 1024 };
+    let atomic = npb::run(Kernel::Mg, PaperVariant::Hw, CpuModel::Atomic, 2, &scale);
+    let timing = npb::run(Kernel::Mg, PaperVariant::Hw, CpuModel::Timing, 2, &scale);
+    let detailed = npb::run(Kernel::Mg, PaperVariant::Hw, CpuModel::Detailed, 2, &scale);
+    assert!(timing.result.cycles > atomic.result.cycles);
+    assert!(
+        detailed.result.cycles < timing.result.cycles,
+        "OoO should beat in-order timing: {} vs {}",
+        detailed.result.cycles,
+        timing.result.cycles
+    );
+}
+
+#[test]
+fn scaling_with_cores_reduces_runtime() {
+    // more cores => fewer max-cycles (atomic model, embarrassingly
+    // parallel workload)
+    let scale = Scale { factor: 256 };
+    let c1 = npb::run(Kernel::Ep, PaperVariant::Unopt, CpuModel::Atomic, 1, &scale);
+    let c4 = npb::run(Kernel::Ep, PaperVariant::Unopt, CpuModel::Atomic, 4, &scale);
+    let s = c1.result.cycles as f64 / c4.result.cycles as f64;
+    assert!(s > 3.0, "EP should scale ~linearly, got {s:.2}x at 4 cores");
+}
+
+#[test]
+fn hw_variant_reduces_dynamic_instructions_everywhere() {
+    let scale = Scale { factor: 1024 };
+    for k in Kernel::ALL {
+        let u = npb::run(k, PaperVariant::Unopt, CpuModel::Atomic, 4, &scale);
+        let h = npb::run(k, PaperVariant::Hw, CpuModel::Atomic, 4, &scale);
+        assert!(
+            h.result.total.instructions <= u.result.total.instructions,
+            "{k}: hw must not execute more instructions than soft"
+        );
+    }
+}
+
+#[test]
+fn figure7_qualitative_shape_cg() {
+    // the CG story at one point: hw > manual > unopt (in speed)
+    let scale = Scale { factor: 128 };
+    let c = Campaign {
+        kernels: vec![Kernel::Cg],
+        models: vec![CpuModel::Atomic],
+        cores: vec![4],
+        variants: PaperVariant::ALL.to_vec(),
+        scale,
+        jobs: 3,
+    };
+    let outs = c.run(false);
+    let u = find(&outs, Kernel::Cg, PaperVariant::Unopt, CpuModel::Atomic, 4).unwrap();
+    let m = find(&outs, Kernel::Cg, PaperVariant::Manual, CpuModel::Atomic, 4).unwrap();
+    let h = find(&outs, Kernel::Cg, PaperVariant::Hw, CpuModel::Atomic, 4).unwrap();
+    assert!(h.result.cycles < m.result.cycles);
+    assert!(m.result.cycles < u.result.cycles);
+}

@@ -1,0 +1,137 @@
+//! Integration: the XLA/PJRT address-mapping unit (AOT artifacts from
+//! the Python compile path) against the scalar Rust oracle and the
+//! simulated machine's own PGAS instructions.
+//!
+//! Requires `make artifacts`; the Makefile's `test` target guarantees
+//! the ordering.
+
+use pgas_hw::runtime::{unit_batch_scalar, UnitCfg, XlaUnit, UNIT_BATCH, WALK_LEN};
+use pgas_hw::sptr::{increment_pow2, ArrayLayout, BaseTable, SharedPtr};
+use pgas_hw::util::rng::Xoshiro256;
+
+fn load() -> XlaUnit {
+    XlaUnit::load("artifacts").expect("run `make artifacts` before `cargo test`")
+}
+
+fn cfg(l2bs: u32, l2es: u32, l2nt: u32, mythread: u32) -> UnitCfg {
+    UnitCfg {
+        log2_blocksize: l2bs,
+        log2_elemsize: l2es,
+        log2_numthreads: l2nt,
+        mythread,
+        log2_threads_per_mc: 1,
+        log2_threads_per_node: 6,
+    }
+}
+
+#[test]
+fn unit_matches_scalar_oracle_on_random_batches() {
+    let unit = load();
+    let mut rng = Xoshiro256::new(0xA11CE);
+    for round in 0..6 {
+        let l2bs = rng.below(9) as u32;
+        let l2es = rng.below(4) as u32;
+        let l2nt = rng.below(7) as u32;
+        let t = 1u32 << l2nt;
+        let c = cfg(l2bs, l2es, l2nt, rng.below(t as u64) as u32);
+        let table = BaseTable::regular(t, 1 << 32, 1 << 32);
+        let layout = ArrayLayout::new(1 << l2bs, 1 << l2es, t);
+        let n = 1 + rng.below(UNIT_BATCH as u64) as usize;
+        let ptrs: Vec<SharedPtr> = (0..n)
+            .map(|_| SharedPtr::for_index(&layout, 0, rng.below(1 << 18)))
+            .collect();
+        let incs: Vec<u32> = (0..n).map(|_| rng.below(1 << 13) as u32).collect();
+        let got = unit.unit_batch(&c, &table, &ptrs, &incs).unwrap();
+        let want = unit_batch_scalar(&c, &table, &ptrs, &incs);
+        assert_eq!(got.thread, want.thread, "round {round}");
+        assert_eq!(got.phase, want.phase, "round {round}");
+        assert_eq!(got.va, want.va, "round {round}");
+        assert_eq!(got.sysva, want.sysva, "round {round}");
+        assert_eq!(got.loc, want.loc, "round {round}");
+    }
+}
+
+#[test]
+fn inc_batch_matches_increment_pow2() {
+    let unit = load();
+    let c = cfg(4, 3, 3, 0);
+    let layout = ArrayLayout::new(16, 8, 8);
+    let mut rng = Xoshiro256::new(7);
+    let ptrs: Vec<SharedPtr> = (0..100)
+        .map(|_| SharedPtr::for_index(&layout, 0, rng.below(1 << 12)))
+        .collect();
+    let incs: Vec<u32> = (0..100).map(|_| rng.below(100) as u32).collect();
+    let got = unit.inc_batch(&c, &ptrs, &incs).unwrap();
+    for i in 0..100 {
+        let want = increment_pow2(&ptrs[i], incs[i] as u64, 4, 3, 3);
+        assert_eq!(got[i], want, "ptr {i}");
+    }
+}
+
+#[test]
+fn walker_trace_matches_scalar_walk_and_simulated_machine() {
+    let unit = load();
+    let c = cfg(2, 2, 2, 0);
+    let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+    let (sysva, thread, loc) = unit.walk(&c, &table, &SharedPtr::NULL, 1).unwrap();
+    assert_eq!(sysva.len(), WALK_LEN);
+    // scalar walk
+    let mut p = SharedPtr::NULL;
+    for i in 0..WALK_LEN {
+        assert_eq!(thread[i] as u32, p.thread, "step {i}");
+        assert_eq!(sysva[i] as u64, table.base(p.thread) + p.va, "step {i}");
+        let want_loc = pgas_hw::sptr::locality(
+            p.thread,
+            0,
+            &pgas_hw::sptr::Topology {
+                log2_threads_per_mc: 1,
+                log2_threads_per_node: 6,
+            },
+        ) as i32;
+        assert_eq!(loc[i], want_loc, "step {i}");
+        p = increment_pow2(&p, 1, 2, 2, 2);
+    }
+    // the walk visits the Figure-2 pattern: threads 0,0,0,0,1,1,1,1,...
+    for (i, &th) in thread.iter().take(32).enumerate() {
+        assert_eq!(th as u64, (i as u64 / 4) % 4, "figure-2 pattern at {i}");
+    }
+}
+
+#[test]
+fn unit_agrees_with_simulated_pgas_instructions() {
+    // the same semantics three ways: XLA unit, scalar Rust, and the
+    // machine executing actual PgasIncI instructions
+    use pgas_hw::cpu::{AtomicCpu, Cpu, HierLatency, SharedLevel};
+    use pgas_hw::isa::{Inst, Program};
+    use pgas_hw::mem::MemSystem;
+    use pgas_hw::sptr::{pack, unpack};
+
+    let unit = load();
+    let c = cfg(3, 2, 2, 0);
+    let layout = ArrayLayout::new(8, 4, 4);
+    let start = SharedPtr::for_index(&layout, 0, 5);
+    let steps = 64u32;
+
+    // machine path
+    let mut insts = vec![Inst::Ldi { rd: 1, imm: pack(&start) as i64 }];
+    for _ in 0..steps {
+        insts.push(Inst::PgasIncI { rd: 1, ra: 1, l2es: 2, l2bs: 3, l2inc: 0 });
+    }
+    insts.push(Inst::Halt);
+    let prog = Program::new("incs", insts);
+    let mut cpu = AtomicCpu::new(0, 4);
+    let mut mem = MemSystem::new(4);
+    let mut sh = SharedLevel::new(1, HierLatency::default());
+    cpu.run(&prog, &mut mem, &mut sh, u64::MAX);
+    let machine_result = unpack(cpu.state().r(1));
+
+    // XLA path
+    let got = unit
+        .inc_batch(&c, &[start], &[steps])
+        .unwrap();
+    assert_eq!(got[0], machine_result);
+
+    // scalar path
+    let scalar = increment_pow2(&start, steps as u64, 3, 2, 2);
+    assert_eq!(scalar, machine_result);
+}
