@@ -1,88 +1,84 @@
-//! The three-layer bridge in action: load the AOT-compiled batched
-//! address-mapping unit (Pallas kernel -> JAX -> HLO text ->
-//! PJRT executable) and stream a million shared-pointer increments
-//! through it, cross-checking every batch against the scalar Rust
-//! implementation and reporting throughput.
+//! The three-layer bridge in action, through the unified `AddressEngine`
+//! API: load the AOT-compiled batched address-mapping unit (Pallas
+//! kernel -> JAX -> HLO text -> PJRT executable) as the `XlaBatchEngine`
+//! backend, stream a million shared-pointer increments through it in one
+//! trait call (the adapter chunks through the fixed `UNIT_BATCH`
+//! artifact shape), and cross-check bit-for-bit against the software and
+//! pow2 backends serving the *same* contract.
 //!
-//! Requires `make artifacts` (build-time Python; never run here).
+//! Requires `make artifacts` and `--features xla-unit`.
 //!
-//!     cargo run --release --example hw_unit_offload
+//!     cargo run --release --features xla-unit --example hw_unit_offload
 
 use std::time::Instant;
 
-use pgas_hw::runtime::{unit_batch_scalar, UnitCfg, XlaUnit, UNIT_BATCH};
+use pgas_hw::engine::{
+    AddressEngine, BatchOut, EngineCtx, EngineSelector, Pow2Engine, PtrBatch,
+    SoftwareEngine, XlaBatchEngine,
+};
+use pgas_hw::runtime::{UNIT_BATCH, WALK_LEN};
 use pgas_hw::sptr::{ArrayLayout, BaseTable, SharedPtr};
 use pgas_hw::util::rng::Xoshiro256;
 
-fn main() -> anyhow::Result<()> {
-    let unit = XlaUnit::load("artifacts")?;
-    println!("PJRT platform: {}", unit.platform());
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let xla = XlaBatchEngine::load("artifacts")?;
+    println!("PJRT platform: {}", xla.platform());
 
     let threads = 16u32;
     let layout = ArrayLayout::new(64, 8, threads); // shared [64] double
-    let cfg = UnitCfg {
-        log2_blocksize: 6,
-        log2_elemsize: 3,
-        log2_numthreads: 4,
-        mythread: 0,
-        log2_threads_per_mc: 1,
-        log2_threads_per_node: 6,
-    };
     let table = BaseTable::regular(threads, 1 << 32, 1 << 32);
+    let ctx = EngineCtx::new(layout, &table, 0);
 
-    let total: usize = 1 << 20; // a million pointer increments
+    // one request batch of a million pointers: the engine chunks it
+    // through the artifacts' fixed 8192-wide shape internally
+    let total: usize = 1 << 20;
     let mut rng = Xoshiro256::new(42);
-    let ptrs: Vec<SharedPtr> = (0..UNIT_BATCH)
-        .map(|_| SharedPtr::for_index(&layout, 0, rng.below(1 << 20)))
-        .collect();
-    let incs: Vec<u32> = (0..UNIT_BATCH).map(|_| rng.below(1 << 12) as u32).collect();
-
-    // correctness first: XLA unit vs scalar oracle, bit-exact
-    let got = unit.unit_batch(&cfg, &table, &ptrs, &incs)?;
-    let want = unit_batch_scalar(&cfg, &table, &ptrs, &incs);
-    assert_eq!(got.thread, want.thread);
-    assert_eq!(got.sysva, want.sysva);
-    assert_eq!(got.loc, want.loc);
-    println!("correctness: XLA unit == scalar oracle on {UNIT_BATCH} pointers");
-
-    // throughput: stream `total` pointers through the unit
-    let batches = total / UNIT_BATCH;
-    let t0 = Instant::now();
-    let mut checksum = 0i64;
-    for _ in 0..batches {
-        let out = unit.unit_batch(&cfg, &table, &ptrs, &incs)?;
-        checksum ^= out.sysva[0];
+    let mut req = PtrBatch::with_capacity(total);
+    for _ in 0..total {
+        req.push(
+            SharedPtr::for_index(&layout, 0, rng.below(1 << 20)),
+            rng.below(1 << 12),
+        );
     }
-    let dt = t0.elapsed().as_secs_f64();
-    let xla_rate = total as f64 / dt / 1e6;
+
+    // correctness first: all three backends, bit-exact on the contract
+    let (mut xla_out, mut soft_out, mut pow2_out) =
+        (BatchOut::new(), BatchOut::new(), BatchOut::new());
+    xla.translate(&ctx, &req, &mut xla_out)?;
+    SoftwareEngine.translate(&ctx, &req, &mut soft_out)?;
+    Pow2Engine.translate(&ctx, &req, &mut pow2_out)?;
+    assert_eq!(xla_out, soft_out);
+    assert_eq!(xla_out, pow2_out);
     println!(
-        "XLA unit:    {total} increments+translations in {dt:.3}s = {xla_rate:.2} M ptr/s \
-         (checksum {checksum:#x})"
+        "correctness: xla-batch == software == pow2 on {total} pointers \
+         ({} UNIT_BATCH chunks)",
+        total.div_ceil(UNIT_BATCH)
     );
 
-    // same stream through the scalar hot path
-    let t0 = Instant::now();
-    let mut checksum2 = 0i64;
-    for _ in 0..batches {
-        let out = unit_batch_scalar(&cfg, &table, &ptrs, &incs);
-        checksum2 ^= out.sysva[0];
+    // throughput of the same translate through each backend
+    for engine in [&xla as &dyn AddressEngine, &Pow2Engine, &SoftwareEngine] {
+        let t0 = Instant::now();
+        engine.translate(&ctx, &req, &mut xla_out)?;
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<10} {total} increments+translations in {dt:.3}s = {:.2} M ptr/s",
+            engine.name(),
+            total as f64 / dt / 1e6
+        );
     }
-    let dt2 = t0.elapsed().as_secs_f64();
-    println!(
-        "scalar Rust: {total} increments+translations in {dt2:.3}s = {:.2} M ptr/s",
-        total as f64 / dt2 / 1e6
-    );
-    assert_eq!(checksum, checksum2);
 
-    // the walker artifact: one pointer traced 4096 steps on-device
-    let (sysva, thread, _loc) = unit.walk(&cfg, &table, &SharedPtr::NULL, 1)?;
-    // cross-check against scalar walk
-    let mut p = SharedPtr::NULL;
-    for i in 0..sysva.len() {
-        assert_eq!(sysva[i], (table.base(p.thread) + p.va) as i64, "step {i}");
-        assert_eq!(thread[i] as u32, p.thread, "step {i}");
-        p = pgas_hw::sptr::increment_pow2(&p, 1, 6, 3, 4);
-    }
-    println!("walker: 4096-step on-device trace matches the scalar walk");
+    // the selector routes this big pow2 batch to the unit automatically
+    let sel = EngineSelector::new().with_xla(xla);
+    assert_eq!(sel.select(&layout, req.len()).name(), "xla-batch");
+    println!("selector: {}-ptr pow2 batch -> `xla-batch`", req.len());
+
+    // the walker artifact through the trait: one pointer traced
+    // WALK_LEN steps on-device, checked against the software walk
+    let mut walk_out = BatchOut::new();
+    sel.walk(&ctx, SharedPtr::NULL, 1, WALK_LEN, &mut walk_out)?;
+    let mut soft_walk = BatchOut::new();
+    SoftwareEngine.walk(&ctx, SharedPtr::NULL, 1, WALK_LEN, &mut soft_walk)?;
+    assert_eq!(walk_out, soft_walk);
+    println!("walker: {WALK_LEN}-step on-device trace matches the software walk");
     Ok(())
 }

@@ -35,6 +35,12 @@ fn main() {
         campaign.points().len(),
         campaign.scale.factor
     );
+    // which AddressEngine backend serves each kernel's arrays (the
+    // runtime mirror of the compiler's variant choice)
+    println!(
+        "{}",
+        coordinator::engine_report(&campaign.kernels, 4, &campaign.scale).render()
+    );
     let t0 = std::time::Instant::now();
     let outs = campaign.run(true);
     eprintln!("campaign wall time: {:.1}s", t0.elapsed().as_secs_f64());

@@ -1,23 +1,61 @@
-//! Quickstart: the paper's idea in 80 lines.
+//! Quickstart: the paper's idea in ~100 lines, through the unified
+//! `AddressEngine` API.
 //!
-//! Builds `shared [4] int A[N]` over 4 UPC threads (the paper's Figure 2
-//! layout), writes a kernel that sums it through a shared pointer, and
-//! compiles it twice: with the software Algorithm 1 (the unmodified
-//! compiler) and with the PGAS instructions (Table 1).  Both validate;
-//! the cycle counts show the gap the hardware closes.
+//! One address-mapping contract — Algorithm 1 incrementation + base-LUT
+//! translation + locality — served by interchangeable backends:
+//!
+//! 1. the **engine view**: an [`EngineSelector`] walks the paper's
+//!    Figure-2 array (`shared [4] int A[..]` over 4 threads) with the
+//!    backend the layout allows — shift/mask `pow2` here, software
+//!    divide/modulo for non-pow2 geometry — and both agree bit-for-bit;
+//! 2. the **compiled view**: the same contract lowered by the mini-UPC
+//!    compiler twice, with software Algorithm 1 and with the paper's
+//!    PGAS instructions.  Both validate; the cycle counts show the gap
+//!    the hardware closes.
 //!
 //!     cargo run --release --example quickstart
 
 use pgas_hw::compiler::{compile, CompileOpts, IrBuilder, Lowering, Val};
 use pgas_hw::cpu::CpuModel;
+use pgas_hw::engine::{AddressEngine, BatchOut, EngineCtx, EngineSelector};
 use pgas_hw::isa::{Cond, IntOp, MemWidth};
 use pgas_hw::sim::{Machine, MachineCfg};
+use pgas_hw::sptr::{ArrayLayout, BaseTable, SharedPtr};
 use pgas_hw::upc::UpcRuntime;
 use pgas_hw::util::table::Table;
 
 const N: u64 = 4096;
 const THREADS: u32 = 4;
 
+/// Part 1: one contract, pluggable backends.
+fn engine_demo() {
+    let sel = EngineSelector::new();
+    let table = BaseTable::regular(THREADS, 1 << 32, 1 << 32);
+
+    // the paper's Figure 2: shared [4] int A[..] — pow2 geometry, so
+    // the selector picks the hardware fast path
+    let fig2 = ArrayLayout::new(4, 4, THREADS);
+    let engine = sel.select(&fig2, 16);
+    let mut out = BatchOut::new();
+    engine
+        .walk(&EngineCtx::new(fig2, &table, 0), SharedPtr::NULL, 1, 16, &mut out)
+        .unwrap();
+    let threads: Vec<u32> = out.ptrs.iter().map(|p| p.thread).collect();
+    println!("`{}` engine walks A[0..16]: threads {threads:?}", engine.name());
+
+    // CG's w_tmp-style non-pow2 element: same call, software backend
+    let odd = ArrayLayout::new(1, 56016, THREADS);
+    let engine = sel.select(&odd, 16);
+    engine
+        .walk(&EngineCtx::new(odd, &table, 0), SharedPtr::NULL, 1, 4, &mut out)
+        .unwrap();
+    println!(
+        "`{}` engine serves the non-pow2 layout the hardware refuses\n",
+        engine.name()
+    );
+}
+
+/// Part 2: the same contract, compiled and simulated.
 fn build_and_run(lowering: Lowering, model: CpuModel) -> (u64, u64, u64) {
     let mut rt = UpcRuntime::new(THREADS);
     // the paper's Figure 2: shared [4] int arrayA[...]
@@ -54,9 +92,9 @@ fn build_and_run(lowering: Lowering, model: CpuModel) -> (u64, u64, u64) {
         },
     );
     let mut m = Machine::new(MachineCfg::new(THREADS, model));
-    for i in 0..N {
-        rt.write_u64(m.mem_mut(), arr, i, i % 97);
-    }
+    // host-side init goes through the runtime's engine in one batch
+    let vals: Vec<u64> = (0..N).map(|i| i % 97).collect();
+    rt.write_u64_seq(m.mem_mut(), arr, 0, &vals);
     let res = m.run(&ck.program);
     let got = m
         .mem
@@ -68,6 +106,7 @@ fn build_and_run(lowering: Lowering, model: CpuModel) -> (u64, u64, u64) {
 
 fn main() {
     println!("pgas-hw quickstart: shared [4] int A[{N}] over {THREADS} threads\n");
+    engine_demo();
     let mut t = Table::new(
         "software Algorithm 1 vs PGAS hardware instructions",
         &["model", "variant", "cycles", "instructions", "speedup"],
@@ -91,5 +130,5 @@ fn main() {
         ]);
     }
     println!("{}", t.render());
-    println!("(both variants validated the same sum — the hardware only\n changes *how fast* shared pointers move, never what they mean)");
+    println!("(both variants validated the same sum — the backends only\n change *how fast* shared pointers move, never what they mean)");
 }

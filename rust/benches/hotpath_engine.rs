@@ -1,0 +1,86 @@
+//! Hot-path micro-bench: the `AddressEngine` backends head-to-head on
+//! the increment/translate contract — the operation count that bounds
+//! every host-side array init/validation and any future engine service.
+//! Emits a `BENCH_engine.json` trajectory point.
+//!
+//! The xla-batch backend joins automatically when built with
+//! `--features xla-unit` and artifacts are present.
+
+use pgas_hw::engine::{AddressEngine, BatchOut, EngineCtx, Pow2Engine, PtrBatch, SoftwareEngine};
+use pgas_hw::sptr::{ArrayLayout, BaseTable, SharedPtr};
+use pgas_hw::util::bench::{bench, black_box};
+use pgas_hw::util::rng::Xoshiro256;
+
+fn main() {
+    let layout = ArrayLayout::new(64, 8, 16); // shared [64] double over 16 threads
+    let table = BaseTable::regular(16, 1 << 32, 1 << 32);
+    let ctx = EngineCtx::new(layout, &table, 0);
+
+    let n: usize = 1 << 16;
+    let mut rng = Xoshiro256::new(0xBE7C);
+    let mut batch = PtrBatch::with_capacity(n);
+    for _ in 0..n {
+        batch.push(
+            SharedPtr::for_index(&layout, 0, rng.below(1 << 20)),
+            rng.below(1 << 12),
+        );
+    }
+
+    let mut engines: Vec<&dyn AddressEngine> = vec![&SoftwareEngine, &Pow2Engine];
+    #[cfg(feature = "xla-unit")]
+    let xla = match pgas_hw::engine::XlaBatchEngine::load("artifacts") {
+        Ok(x) => Some(x),
+        Err(e) => {
+            eprintln!("xla-batch backend skipped: {e}");
+            None
+        }
+    };
+    #[cfg(feature = "xla-unit")]
+    if let Some(x) = &xla {
+        engines.push(x);
+    }
+
+    let mut rows = Vec::new();
+    for engine in engines {
+        let mut out = BatchOut::new();
+        let r = bench(
+            &format!("engine::{} translate x{n}", engine.name()),
+            2,
+            10,
+            || {
+                engine.translate(&ctx, &batch, &mut out).unwrap();
+                black_box(&out);
+            },
+        );
+        let translate_mptr_s = n as f64 / r.mean_secs() / 1e6;
+        println!("  -> {translate_mptr_s:.1} M ptr/s (increment+translate+locality)");
+
+        let mut incs = Vec::new();
+        let r = bench(
+            &format!("engine::{} increment x{n}", engine.name()),
+            2,
+            10,
+            || {
+                engine.increment(&ctx, &batch, &mut incs).unwrap();
+                black_box(&incs);
+            },
+        );
+        let increment_mptr_s = n as f64 / r.mean_secs() / 1e6;
+        println!("  -> {increment_mptr_s:.1} M ptr/s (increment only)");
+
+        rows.push(format!(
+            "    {{\"name\": \"{}\", \"translate_mptr_s\": {translate_mptr_s:.2}, \
+             \"increment_mptr_s\": {increment_mptr_s:.2}}}",
+            engine.name()
+        ));
+    }
+
+    let json = format!(
+        "{{\n  \"bench\": \"hotpath_engine\",\n  \"batch\": {n},\n  \
+         \"layout\": {{\"blocksize\": 64, \"elemsize\": 8, \"numthreads\": 16}},\n  \
+         \"backends\": [\n{}\n  ]\n}}\n",
+        rows.join(",\n")
+    );
+    std::fs::write("BENCH_engine.json", &json).expect("write BENCH_engine.json");
+    println!("wrote BENCH_engine.json");
+}

@@ -14,6 +14,7 @@ pub mod config;
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
+use crate::compiler::SourceVariant;
 use crate::cpu::CpuModel;
 use crate::npb::{self, Kernel, PaperVariant, RunOutcome, Scale};
 use crate::util::table::{fnum, Table};
@@ -196,6 +197,40 @@ pub fn figure_table(
     t
 }
 
+/// The runtime mirror of the compiler's Soft/Hw variant choice: which
+/// [`AddressEngine`](crate::engine::AddressEngine) backend the runtime's
+/// selector serves each shared array of a campaign's kernels with.
+/// Printed alongside sweeps so a figure's engine mix is archived with
+/// its numbers.
+///
+/// Builds each kernel once at the given scale — array layouts (and
+/// thus pow2-ness) are scale-dependent, so there is no cheaper source
+/// of truth; call this once per campaign, not per point.
+pub fn engine_report(kernels: &[Kernel], cores: u32, scale: &Scale) -> Table {
+    let mut t = Table::new(
+        "AddressEngine selection (runtime mirror of the compiler's Soft/Hw lowering)",
+        &["kernel", "array", "blocksize", "elemsize", "nelems", "pow2", "engine"],
+    );
+    for &k in kernels {
+        let threads = cores.min(k.max_cores());
+        let built = npb::build(k, threads, SourceVariant::Unoptimized, scale);
+        for a in built.rt.arrays() {
+            let choice = built.rt.engine().choice(&a.layout, a.nelems as usize);
+            let pow2 = if a.layout.hw_supported() { "yes" } else { "no" };
+            t.row(&[
+                k.name().into(),
+                a.name.clone(),
+                a.layout.blocksize.to_string(),
+                a.layout.elemsize.to_string(),
+                a.nelems.to_string(),
+                pow2.into(),
+                choice.name().into(),
+            ]);
+        }
+    }
+    t
+}
+
 /// CSV archival of raw outcomes.
 pub fn outcomes_csv(outs: &[RunOutcome]) -> String {
     let mut t = Table::new(
@@ -336,6 +371,27 @@ mod tests {
         assert!(pts.iter().any(|p| p.0 == Kernel::Ft && p.3 == 16));
         assert!(!pts.iter().any(|p| p.0 == Kernel::Ft && p.3 == 32));
         assert!(pts.iter().any(|p| p.0 == Kernel::Ep && p.3 == 32));
+    }
+
+    #[test]
+    fn engine_report_mixes_pow2_and_software() {
+        // CG carries the non-pow2 w_tmp array -> software fallback;
+        // its pow2 arrays (e.g. the gsum cell) stay on the fast path.
+        let t = engine_report(&[Kernel::Cg], 4, &Scale::quick());
+        assert!(!t.is_empty());
+        let rendered = t.render();
+        assert!(
+            rendered
+                .lines()
+                .any(|l| l.contains("cg_wtmp") && l.contains("software")),
+            "{rendered}"
+        );
+        assert!(
+            rendered
+                .lines()
+                .any(|l| l.contains("cg_gsum") && l.contains("pow2")),
+            "{rendered}"
+        );
     }
 
     #[test]

@@ -1,0 +1,298 @@
+//! The unified `AddressEngine` API: one pluggable backend contract for
+//! UPC shared-pointer address mapping.
+//!
+//! The paper's central claim is that the address-mapping contract —
+//! Algorithm 1 incrementation plus base-LUT translation plus locality
+//! classification — is *one* interface that interchangeable
+//! implementations can serve: a software divide/modulo path, a pow2
+//! shift/mask hardware path, or a dedicated batched unit.  Before this
+//! module the repo re-implemented that contract four times with four
+//! incompatible calling conventions; every host-side consumer now goes
+//! through the [`AddressEngine`] trait instead.
+//!
+//! * [`SoftwareEngine`] — the general Algorithm 1 (divide/modulo),
+//!   legal for every layout; the Berkeley-runtime software path.
+//! * [`Pow2Engine`] — the shift/mask fast path the hardware pipelines;
+//!   refuses layouts whose geometry is not all powers of two.
+//! * `XlaBatchEngine` (behind the `xla-unit` cargo feature) — the
+//!   PJRT/XLA batched unit, chunking arbitrary batch sizes through the
+//!   artifacts' fixed `UNIT_BATCH` shape.
+//! * [`EngineSelector`] — picks the fastest legal backend per
+//!   [`ArrayLayout`], the runtime mirror of the compiler's `Soft`/`Hw`
+//!   lowering choice.
+//!
+//! All backends must agree bit-for-bit on `(thread, phase, va, sysva,
+//! loc)` for every layout they support; `rust/tests/engine_conformance.rs`
+//! enforces this differentially.  Future backends (the Leon3 coprocessor
+//! model, sharded/remote engines) plug into the same trait.
+
+mod pow2;
+mod select;
+mod software;
+#[cfg(feature = "xla-unit")]
+mod xla_batch;
+
+pub use pow2::Pow2Engine;
+pub use select::{EngineChoice, EngineSelector};
+pub use software::SoftwareEngine;
+#[cfg(feature = "xla-unit")]
+pub use xla_batch::XlaBatchEngine;
+
+use crate::sptr::{ArrayLayout, BaseTable, Locality, SharedPtr, Topology};
+
+/// Why an engine refused a request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum EngineError {
+    /// The backend cannot serve this distribution geometry at all
+    /// (e.g. a non-pow2 layout on the hardware fast path).
+    UnsupportedLayout {
+        engine: &'static str,
+        layout: ArrayLayout,
+    },
+    /// `ptrs` and `incs` of a [`PtrBatch`] differ in length.
+    LengthMismatch { ptrs: usize, incs: usize },
+    /// Backend-specific failure (artifact loading, PJRT execution, a
+    /// value outside the artifact's lane width, ...).
+    Backend(String),
+}
+
+impl std::fmt::Display for EngineError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            EngineError::UnsupportedLayout { engine, layout } => write!(
+                f,
+                "engine `{engine}` does not support layout \
+                 [blocksize {}, elemsize {}, threads {}]",
+                layout.blocksize, layout.elemsize, layout.numthreads
+            ),
+            EngineError::LengthMismatch { ptrs, incs } => {
+                write!(f, "batch has {ptrs} pointers but {incs} increments")
+            }
+            EngineError::Backend(msg) => write!(f, "backend error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Everything a backend needs besides the pointers themselves: the
+/// array's distribution geometry, the per-thread base LUT, and the
+/// executing thread + topology for locality classification.
+///
+/// `table` must cover at least `layout.numthreads` threads.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineCtx<'a> {
+    pub layout: ArrayLayout,
+    pub table: &'a BaseTable,
+    /// The executing thread (`MYTHREAD`) locality is classified against.
+    pub mythread: u32,
+    pub topo: Topology,
+}
+
+impl<'a> EngineCtx<'a> {
+    pub fn new(layout: ArrayLayout, table: &'a BaseTable, mythread: u32) -> Self {
+        debug_assert!(
+            table.numthreads() >= layout.numthreads,
+            "base table covers {} threads, layout needs {}",
+            table.numthreads(),
+            layout.numthreads
+        );
+        Self { layout, table, mythread, topo: Topology::default() }
+    }
+
+    pub fn with_topology(mut self, topo: Topology) -> Self {
+        self.topo = topo;
+        self
+    }
+}
+
+/// A reusable structure-of-arrays request batch: pointer `i` is to be
+/// incremented by `incs[i]` elements (0 = pure translation).
+#[derive(Clone, Debug, Default)]
+pub struct PtrBatch {
+    pub ptrs: Vec<SharedPtr>,
+    pub incs: Vec<u64>,
+}
+
+impl PtrBatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self { ptrs: Vec::with_capacity(n), incs: Vec::with_capacity(n) }
+    }
+
+    /// Drop all requests, keeping the allocations.
+    pub fn clear(&mut self) {
+        self.ptrs.clear();
+        self.incs.clear();
+    }
+
+    pub fn push(&mut self, ptr: SharedPtr, inc: u64) {
+        self.ptrs.push(ptr);
+        self.incs.push(inc);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ptrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ptrs.is_empty()
+    }
+
+    /// Validate the SoA invariant before a backend consumes the batch.
+    pub fn check(&self) -> Result<(), EngineError> {
+        if self.ptrs.len() == self.incs.len() {
+            Ok(())
+        } else {
+            Err(EngineError::LengthMismatch {
+                ptrs: self.ptrs.len(),
+                incs: self.incs.len(),
+            })
+        }
+    }
+}
+
+/// Structure-of-arrays response: the post-increment pointer, its system
+/// virtual address, and its locality relative to `EngineCtx::mythread`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BatchOut {
+    pub ptrs: Vec<SharedPtr>,
+    pub sysva: Vec<u64>,
+    pub loc: Vec<Locality>,
+}
+
+impl BatchOut {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Drop all results, keeping the allocations (backends call this at
+    /// the top of every request so outputs can be reused across calls).
+    pub fn clear(&mut self) {
+        self.ptrs.clear();
+        self.sysva.clear();
+        self.loc.clear();
+    }
+
+    pub fn reserve(&mut self, n: usize) {
+        self.ptrs.reserve(n);
+        self.sysva.reserve(n);
+        self.loc.reserve(n);
+    }
+
+    pub fn push(&mut self, ptr: SharedPtr, sysva: u64, loc: Locality) {
+        self.ptrs.push(ptr);
+        self.sysva.push(sysva);
+        self.loc.push(loc);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ptrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ptrs.is_empty()
+    }
+}
+
+/// The one address-mapping contract every backend implements.
+///
+/// Semantics (identical across backends, differentially tested):
+///
+/// * [`translate`](AddressEngine::translate) — the fused unit: each
+///   pointer is incremented by its per-request element count (which may
+///   be 0), translated through the base LUT, and locality-classified.
+/// * [`increment`](AddressEngine::increment) — Algorithm 1 only; no
+///   LUT access.
+/// * [`walk`](AddressEngine::walk) — `steps` outputs starting *at*
+///   `start` (step 0 is the untouched start pointer), advancing by
+///   `inc` elements per step — the sequential-traversal shape host-side
+///   array initialization and validation use.
+pub trait AddressEngine {
+    /// Stable backend name (reports, selection tables, errors).
+    fn name(&self) -> &'static str;
+
+    /// Can this backend serve `layout` at all?  Engines must return an
+    /// [`EngineError::UnsupportedLayout`] from the mapping calls when
+    /// this is false, never a wrong answer.
+    fn supports(&self, layout: &ArrayLayout) -> bool;
+
+    /// Fused increment + LUT translation + locality over a batch.
+    fn translate(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError>;
+
+    /// Increment-only over a batch; `out` is cleared and refilled.
+    fn increment(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut Vec<SharedPtr>,
+    ) -> Result<(), EngineError>;
+
+    /// Walk `start` for `steps` steps of `inc` elements; `out` is
+    /// cleared and refilled with one entry per step (step 0 = `start`).
+    fn walk(
+        &self,
+        ctx: &EngineCtx,
+        start: SharedPtr,
+        inc: u64,
+        steps: usize,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError>;
+
+    /// Scalar convenience for host paths that map one pointer at a
+    /// time.  Backends with a cheap scalar path override this to avoid
+    /// the batch round-trip.
+    fn translate_one(
+        &self,
+        ctx: &EngineCtx,
+        ptr: SharedPtr,
+        inc: u64,
+    ) -> Result<(SharedPtr, u64, Locality), EngineError> {
+        let mut batch = PtrBatch::with_capacity(1);
+        batch.push(ptr, inc);
+        let mut out = BatchOut::new();
+        self.translate(ctx, &batch, &mut out)?;
+        Ok((out.ptrs[0], out.sysva[0], out.loc[0]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_push_and_clear_keep_soa_invariant() {
+        let mut b = PtrBatch::with_capacity(4);
+        assert!(b.is_empty());
+        b.push(SharedPtr::NULL, 3);
+        b.push(SharedPtr { thread: 1, phase: 2, va: 8 }, 0);
+        assert_eq!(b.len(), 2);
+        assert!(b.check().is_ok());
+        b.clear();
+        assert!(b.is_empty());
+        b.incs.push(1); // corrupt the invariant directly
+        assert_eq!(
+            b.check(),
+            Err(EngineError::LengthMismatch { ptrs: 0, incs: 1 })
+        );
+    }
+
+    #[test]
+    fn error_display_names_the_engine() {
+        let e = EngineError::UnsupportedLayout {
+            engine: "pow2",
+            layout: ArrayLayout::new(3, 8, 4),
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("pow2"));
+        assert!(msg.contains("blocksize 3"));
+    }
+}

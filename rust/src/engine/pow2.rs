@@ -1,0 +1,132 @@
+//! The hardware fast-path backend: Algorithm 1 in shift/mask form — the
+//! datapath the paper's increment unit pipelines over two stages.  Only
+//! legal when blocksize, elemsize and numthreads are all powers of two
+//! (paper 4.2); any other layout is refused, mirroring the compiler's
+//! software fallback for the `Hw` lowering.
+
+use super::{AddressEngine, BatchOut, EngineCtx, EngineError, PtrBatch};
+use crate::sptr::{increment_pow2, locality, ArrayLayout, Locality, SharedPtr};
+
+/// Shift/mask Algorithm 1.  Refuses non-pow2 layouts.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Pow2Engine;
+
+impl Pow2Engine {
+    /// The Figure-3 log2 immediates, or `UnsupportedLayout`.
+    fn log2s(layout: &ArrayLayout) -> Result<(u32, u32, u32), EngineError> {
+        layout.log2s().ok_or(EngineError::UnsupportedLayout {
+            engine: "pow2",
+            layout: *layout,
+        })
+    }
+}
+
+impl AddressEngine for Pow2Engine {
+    fn name(&self) -> &'static str {
+        "pow2"
+    }
+
+    fn supports(&self, layout: &ArrayLayout) -> bool {
+        layout.hw_supported()
+    }
+
+    fn translate(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        let (l2bs, l2es, l2nt) = Self::log2s(&ctx.layout)?;
+        batch.check()?;
+        out.clear();
+        out.reserve(batch.len());
+        for (p, &inc) in batch.ptrs.iter().zip(&batch.incs) {
+            let q = increment_pow2(p, inc, l2bs, l2es, l2nt);
+            let sysva = q.translate(ctx.table);
+            out.push(q, sysva, locality(q.thread, ctx.mythread, &ctx.topo));
+        }
+        Ok(())
+    }
+
+    fn increment(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut Vec<SharedPtr>,
+    ) -> Result<(), EngineError> {
+        let (l2bs, l2es, l2nt) = Self::log2s(&ctx.layout)?;
+        batch.check()?;
+        out.clear();
+        out.reserve(batch.len());
+        for (p, &inc) in batch.ptrs.iter().zip(&batch.incs) {
+            out.push(increment_pow2(p, inc, l2bs, l2es, l2nt));
+        }
+        Ok(())
+    }
+
+    fn walk(
+        &self,
+        ctx: &EngineCtx,
+        start: SharedPtr,
+        inc: u64,
+        steps: usize,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        let (l2bs, l2es, l2nt) = Self::log2s(&ctx.layout)?;
+        out.clear();
+        out.reserve(steps);
+        let mut p = start;
+        for _ in 0..steps {
+            let sysva = p.translate(ctx.table);
+            out.push(p, sysva, locality(p.thread, ctx.mythread, &ctx.topo));
+            p = increment_pow2(&p, inc, l2bs, l2es, l2nt);
+        }
+        Ok(())
+    }
+
+    fn translate_one(
+        &self,
+        ctx: &EngineCtx,
+        ptr: SharedPtr,
+        inc: u64,
+    ) -> Result<(SharedPtr, u64, Locality), EngineError> {
+        let (l2bs, l2es, l2nt) = Self::log2s(&ctx.layout)?;
+        let q = increment_pow2(&ptr, inc, l2bs, l2es, l2nt);
+        let sysva = q.translate(ctx.table);
+        Ok((q, sysva, locality(q.thread, ctx.mythread, &ctx.topo)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sptr::BaseTable;
+
+    #[test]
+    fn refuses_nonpow2_layouts() {
+        let layout = ArrayLayout::new(3, 8, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0);
+        let e = Pow2Engine;
+        assert!(!e.supports(&layout));
+        let mut out = BatchOut::new();
+        let err = e.walk(&ctx, SharedPtr::NULL, 1, 4, &mut out).unwrap_err();
+        assert!(matches!(err, EngineError::UnsupportedLayout { engine: "pow2", .. }));
+    }
+
+    #[test]
+    fn agrees_with_software_on_pow2_layout() {
+        use super::super::SoftwareEngine;
+        let layout = ArrayLayout::new(8, 4, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 1);
+        let mut batch = PtrBatch::new();
+        for i in 0..64 {
+            batch.push(SharedPtr::for_index(&layout, 0, i * 3), i);
+        }
+        let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
+        Pow2Engine.translate(&ctx, &batch, &mut a).unwrap();
+        SoftwareEngine.translate(&ctx, &batch, &mut b).unwrap();
+        assert_eq!(a, b);
+    }
+}

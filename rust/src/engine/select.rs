@@ -1,0 +1,193 @@
+//! Layout-driven backend selection — the runtime mirror of the
+//! compiler's `Soft`/`Hw` lowering choice.
+//!
+//! The policy is the paper's: the shift/mask hardware path whenever the
+//! geometry allows it, software Algorithm 1 otherwise.  When the XLA
+//! batch unit is compiled in (`--features xla-unit`) and loaded, batches
+//! big enough to amortize the PJRT dispatch go to it instead.
+
+use super::{AddressEngine, BatchOut, EngineCtx, EngineError, Pow2Engine, PtrBatch, SoftwareEngine};
+use crate::sptr::{ArrayLayout, Locality, SharedPtr};
+
+/// Which backend the selector picked (stable, reportable).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EngineChoice {
+    Software,
+    Pow2,
+    XlaBatch,
+}
+
+impl EngineChoice {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineChoice::Software => "software",
+            EngineChoice::Pow2 => "pow2",
+            EngineChoice::XlaBatch => "xla-batch",
+        }
+    }
+}
+
+/// Owns one instance of every available backend and picks the fastest
+/// legal one per request.  This is the seam future backends (the Leon3
+/// coprocessor model, sharded/remote engines) plug into.
+pub struct EngineSelector {
+    software: SoftwareEngine,
+    pow2: Pow2Engine,
+    #[cfg(feature = "xla-unit")]
+    xla: Option<super::XlaBatchEngine>,
+    /// Minimum batch size worth a PJRT round-trip.
+    #[cfg_attr(not(feature = "xla-unit"), allow(dead_code))]
+    xla_threshold: usize,
+}
+
+impl EngineSelector {
+    /// Default minimum batch size routed to the XLA unit (dispatch to
+    /// PJRT costs tens of microseconds; small batches stay scalar).
+    pub const DEFAULT_XLA_THRESHOLD: usize = 1024;
+
+    pub fn new() -> Self {
+        Self {
+            software: SoftwareEngine,
+            pow2: Pow2Engine,
+            #[cfg(feature = "xla-unit")]
+            xla: None,
+            xla_threshold: Self::DEFAULT_XLA_THRESHOLD,
+        }
+    }
+
+    /// Install the XLA batch backend (takes priority for large pow2
+    /// batches).
+    #[cfg(feature = "xla-unit")]
+    pub fn with_xla(mut self, engine: super::XlaBatchEngine) -> Self {
+        self.xla = Some(engine);
+        self
+    }
+
+    /// Route batches of at least `n` pointers to the XLA unit.
+    #[cfg(feature = "xla-unit")]
+    pub fn with_xla_threshold(mut self, n: usize) -> Self {
+        self.xla_threshold = n;
+        self
+    }
+
+    #[cfg(feature = "xla-unit")]
+    pub fn has_xla(&self) -> bool {
+        self.xla.is_some()
+    }
+
+    /// The backend the selector would use for `layout` at `batch_len`.
+    pub fn choice(&self, layout: &ArrayLayout, batch_len: usize) -> EngineChoice {
+        let _ = batch_len; // consulted only when the xla-unit backend is built in
+        if !layout.hw_supported() {
+            return EngineChoice::Software;
+        }
+        #[cfg(feature = "xla-unit")]
+        if let Some(x) = &self.xla {
+            if batch_len >= self.xla_threshold && x.supports(layout) {
+                return EngineChoice::XlaBatch;
+            }
+        }
+        EngineChoice::Pow2
+    }
+
+    /// Pick the fastest legal backend for `layout` at `batch_len`.
+    pub fn select(&self, layout: &ArrayLayout, batch_len: usize) -> &dyn AddressEngine {
+        match self.choice(layout, batch_len) {
+            EngineChoice::Software => &self.software,
+            EngineChoice::Pow2 => &self.pow2,
+            #[cfg(feature = "xla-unit")]
+            EngineChoice::XlaBatch => {
+                self.xla.as_ref().expect("choice() returned XlaBatch without a unit")
+            }
+            #[cfg(not(feature = "xla-unit"))]
+            EngineChoice::XlaBatch => &self.software,
+        }
+    }
+
+    // ---- convenience passthroughs (select per call) ----
+
+    pub fn translate(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        self.select(&ctx.layout, batch.len()).translate(ctx, batch, out)
+    }
+
+    pub fn increment(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut Vec<SharedPtr>,
+    ) -> Result<(), EngineError> {
+        self.select(&ctx.layout, batch.len()).increment(ctx, batch, out)
+    }
+
+    pub fn walk(
+        &self,
+        ctx: &EngineCtx,
+        start: SharedPtr,
+        inc: u64,
+        steps: usize,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        self.select(&ctx.layout, steps).walk(ctx, start, inc, steps, out)
+    }
+
+    pub fn translate_one(
+        &self,
+        ctx: &EngineCtx,
+        ptr: SharedPtr,
+        inc: u64,
+    ) -> Result<(SharedPtr, u64, Locality), EngineError> {
+        self.select(&ctx.layout, 1).translate_one(ctx, ptr, inc)
+    }
+}
+
+impl Default for EngineSelector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sptr::BaseTable;
+
+    #[test]
+    fn selection_mirrors_the_compiler_variant_choice() {
+        let sel = EngineSelector::new();
+        // pow2 geometry -> hardware fast path (any batch size)
+        assert_eq!(sel.choice(&ArrayLayout::new(4, 4, 4), 1), EngineChoice::Pow2);
+        assert_eq!(
+            sel.choice(&ArrayLayout::new(64, 8, 16), 1 << 20),
+            EngineChoice::Pow2
+        );
+        // the CG w/w_tmp case (elemsize 56016) -> software fallback
+        assert_eq!(
+            sel.choice(&ArrayLayout::new(1, 56016, 8), 1 << 20),
+            EngineChoice::Software
+        );
+        assert_eq!(sel.select(&ArrayLayout::new(1, 56016, 8), 4).name(), "software");
+        assert_eq!(sel.select(&ArrayLayout::new(4, 4, 4), 4).name(), "pow2");
+    }
+
+    #[test]
+    fn passthroughs_dispatch_to_the_selected_backend() {
+        let sel = EngineSelector::new();
+        let layout = ArrayLayout::new(4, 8, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0);
+        let mut out = BatchOut::new();
+        sel.walk(&ctx, SharedPtr::NULL, 1, 12, &mut out).unwrap();
+        assert_eq!(out.len(), 12);
+        for (i, p) in out.ptrs.iter().enumerate() {
+            assert_eq!(*p, SharedPtr::for_index(&layout, 0, i as u64));
+        }
+        let (q, sysva, _) = sel.translate_one(&ctx, SharedPtr::NULL, 5).unwrap();
+        assert_eq!(q, SharedPtr::for_index(&layout, 0, 5));
+        assert_eq!(sysva, table.base(q.thread) + q.va);
+    }
+}

@@ -1,0 +1,131 @@
+//! The general-path backend: Algorithm 1 with divide/modulo, legal for
+//! every distribution geometry — what the Berkeley runtime executes in
+//! software and the baseline every other backend must agree with.
+
+use super::{AddressEngine, BatchOut, EngineCtx, EngineError, PtrBatch};
+use crate::sptr::{increment_general, locality, ArrayLayout, Locality, SharedPtr};
+
+/// Software Algorithm 1 (divide/modulo).  Supports all layouts.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SoftwareEngine;
+
+impl SoftwareEngine {
+    #[inline]
+    fn map_one(
+        ctx: &EngineCtx,
+        ptr: &SharedPtr,
+        inc: u64,
+    ) -> (SharedPtr, u64, Locality) {
+        let q = increment_general(ptr, inc, &ctx.layout);
+        let sysva = q.translate(ctx.table);
+        let loc = locality(q.thread, ctx.mythread, &ctx.topo);
+        (q, sysva, loc)
+    }
+}
+
+impl AddressEngine for SoftwareEngine {
+    fn name(&self) -> &'static str {
+        "software"
+    }
+
+    fn supports(&self, _layout: &ArrayLayout) -> bool {
+        true
+    }
+
+    fn translate(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        batch.check()?;
+        out.clear();
+        out.reserve(batch.len());
+        for (p, &inc) in batch.ptrs.iter().zip(&batch.incs) {
+            let (q, sysva, loc) = Self::map_one(ctx, p, inc);
+            out.push(q, sysva, loc);
+        }
+        Ok(())
+    }
+
+    fn increment(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut Vec<SharedPtr>,
+    ) -> Result<(), EngineError> {
+        batch.check()?;
+        out.clear();
+        out.reserve(batch.len());
+        for (p, &inc) in batch.ptrs.iter().zip(&batch.incs) {
+            out.push(increment_general(p, inc, &ctx.layout));
+        }
+        Ok(())
+    }
+
+    fn walk(
+        &self,
+        ctx: &EngineCtx,
+        start: SharedPtr,
+        inc: u64,
+        steps: usize,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        out.clear();
+        out.reserve(steps);
+        let mut p = start;
+        for _ in 0..steps {
+            let sysva = p.translate(ctx.table);
+            out.push(p, sysva, locality(p.thread, ctx.mythread, &ctx.topo));
+            p = increment_general(&p, inc, &ctx.layout);
+        }
+        Ok(())
+    }
+
+    fn translate_one(
+        &self,
+        ctx: &EngineCtx,
+        ptr: SharedPtr,
+        inc: u64,
+    ) -> Result<(SharedPtr, u64, Locality), EngineError> {
+        Ok(Self::map_one(ctx, &ptr, inc))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sptr::BaseTable;
+
+    #[test]
+    fn walk_matches_for_index_on_nonpow2_layout() {
+        // CG-style non-pow2 geometry: only this backend is legal.
+        let layout = ArrayLayout::new(3, 24, 5);
+        let table = BaseTable::regular(5, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 2);
+        let e = SoftwareEngine;
+        assert!(e.supports(&layout));
+        let mut out = BatchOut::new();
+        e.walk(&ctx, SharedPtr::for_index(&layout, 64, 0), 1, 40, &mut out)
+            .unwrap();
+        for (i, p) in out.ptrs.iter().enumerate() {
+            assert_eq!(*p, SharedPtr::for_index(&layout, 64, i as u64));
+            assert_eq!(out.sysva[i], table.base(p.thread) + p.va);
+        }
+    }
+
+    #[test]
+    fn translate_one_agrees_with_batched_translate() {
+        let layout = ArrayLayout::new(4, 4, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0);
+        let e = SoftwareEngine;
+        let p = SharedPtr::for_index(&layout, 0, 7);
+        let mut batch = PtrBatch::new();
+        batch.push(p, 9);
+        let mut out = BatchOut::new();
+        e.translate(&ctx, &batch, &mut out).unwrap();
+        let (q, sysva, loc) = e.translate_one(&ctx, p, 9).unwrap();
+        assert_eq!((q, sysva, loc), (out.ptrs[0], out.sysva[0], out.loc[0]));
+    }
+}

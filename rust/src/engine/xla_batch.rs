@@ -1,0 +1,180 @@
+//! The batched-unit backend: wraps the PJRT/XLA address-mapping unit
+//! (the AOT-compiled Pallas kernel) behind the [`AddressEngine`] trait.
+//!
+//! The artifacts are monomorphic: every executable was lowered with a
+//! fixed `UNIT_BATCH` request shape and a fixed `WALK_LEN` trace length.
+//! This adapter chunks arbitrary batch and walk sizes through those
+//! fixed shapes, so callers never see the artifact geometry.
+//!
+//! Constraints inherited from the artifacts (all reported as errors,
+//! never silently wrong): pow2 layouts only, at most
+//! [`MAX_THREADS`](crate::runtime::MAX_THREADS) threads, increments
+//! within the i32 lane width.
+
+use super::{AddressEngine, BatchOut, EngineCtx, EngineError, PtrBatch};
+use crate::runtime::{UnitCfg, XlaUnit, MAX_THREADS, UNIT_BATCH, WALK_LEN};
+use crate::sptr::{increment_pow2, ArrayLayout, Locality, SharedPtr};
+
+/// The XLA batch unit as an `AddressEngine` backend.
+pub struct XlaBatchEngine {
+    unit: XlaUnit,
+}
+
+impl XlaBatchEngine {
+    pub fn new(unit: XlaUnit) -> Self {
+        Self { unit }
+    }
+
+    /// Load the PJRT artifacts from `dir` (see `make artifacts`).
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self, EngineError> {
+        XlaUnit::load(dir)
+            .map(Self::new)
+            .map_err(|e| EngineError::Backend(format!("{e:#}")))
+    }
+
+    /// PJRT platform the unit executes on.
+    pub fn platform(&self) -> String {
+        self.unit.platform()
+    }
+
+    /// Artifact hardware-config registers for `ctx`, plus the log2
+    /// immediates for the scalar continuation path.
+    fn cfg(&self, ctx: &EngineCtx) -> Result<(UnitCfg, (u32, u32, u32)), EngineError> {
+        let unsupported = EngineError::UnsupportedLayout {
+            engine: self.name(),
+            layout: ctx.layout,
+        };
+        let Some((l2bs, l2es, l2nt)) = ctx.layout.log2s() else {
+            return Err(unsupported);
+        };
+        if ctx.layout.numthreads as usize > MAX_THREADS {
+            return Err(unsupported);
+        }
+        let cfg = UnitCfg {
+            log2_blocksize: l2bs,
+            log2_elemsize: l2es,
+            log2_numthreads: l2nt,
+            mythread: ctx.mythread,
+            log2_threads_per_mc: ctx.topo.log2_threads_per_mc,
+            log2_threads_per_node: ctx.topo.log2_threads_per_node,
+        };
+        Ok((cfg, (l2bs, l2es, l2nt)))
+    }
+
+    /// The artifact carries increments in an i32 lane.
+    fn lane_inc(inc: u64) -> Result<u32, EngineError> {
+        if inc <= i32::MAX as u64 {
+            Ok(inc as u32)
+        } else {
+            Err(EngineError::Backend(format!(
+                "increment {inc} exceeds the artifact's i32 lane"
+            )))
+        }
+    }
+
+    fn lane_incs(incs: &[u64]) -> Result<Vec<u32>, EngineError> {
+        incs.iter().map(|&i| Self::lane_inc(i)).collect()
+    }
+
+    fn lane_loc(code: i32) -> Result<Locality, EngineError> {
+        u8::try_from(code)
+            .ok()
+            .and_then(Locality::from_code)
+            .ok_or_else(|| {
+                EngineError::Backend(format!("unit returned locality code {code}"))
+            })
+    }
+}
+
+impl AddressEngine for XlaBatchEngine {
+    fn name(&self) -> &'static str {
+        "xla-batch"
+    }
+
+    fn supports(&self, layout: &ArrayLayout) -> bool {
+        layout.hw_supported() && layout.numthreads as usize <= MAX_THREADS
+    }
+
+    fn translate(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        let (cfg, _) = self.cfg(ctx)?;
+        batch.check()?;
+        let incs = Self::lane_incs(&batch.incs)?;
+        out.clear();
+        out.reserve(batch.len());
+        for (ptrs, incs) in batch.ptrs.chunks(UNIT_BATCH).zip(incs.chunks(UNIT_BATCH)) {
+            let res = self
+                .unit
+                .unit_batch(&cfg, ctx.table, ptrs, incs)
+                .map_err(|e| EngineError::Backend(format!("{e:#}")))?;
+            for i in 0..ptrs.len() {
+                let q = SharedPtr {
+                    thread: res.thread[i] as u32,
+                    phase: res.phase[i] as u64,
+                    va: res.va[i] as u64,
+                };
+                out.push(q, res.sysva[i] as u64, Self::lane_loc(res.loc[i])?);
+            }
+        }
+        Ok(())
+    }
+
+    fn increment(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut Vec<SharedPtr>,
+    ) -> Result<(), EngineError> {
+        let (cfg, _) = self.cfg(ctx)?;
+        batch.check()?;
+        let incs = Self::lane_incs(&batch.incs)?;
+        out.clear();
+        out.reserve(batch.len());
+        for (ptrs, incs) in batch.ptrs.chunks(UNIT_BATCH).zip(incs.chunks(UNIT_BATCH)) {
+            let res = self
+                .unit
+                .inc_batch(&cfg, ptrs, incs)
+                .map_err(|e| EngineError::Backend(format!("{e:#}")))?;
+            out.extend_from_slice(&res);
+        }
+        Ok(())
+    }
+
+    fn walk(
+        &self,
+        ctx: &EngineCtx,
+        start: SharedPtr,
+        inc: u64,
+        steps: usize,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        let (cfg, (l2bs, l2es, l2nt)) = self.cfg(ctx)?;
+        let inc32 = Self::lane_inc(inc)?;
+        out.clear();
+        out.reserve(steps);
+        // The walker artifact always traces WALK_LEN steps; longer walks
+        // chunk through it, shorter ones truncate.  sysva/thread/loc come
+        // from the artifact; phase/va are reconstructed with the scalar
+        // pow2 pipeline (the walker does not emit them).
+        let mut p = start;
+        let mut remaining = steps;
+        while remaining > 0 {
+            let n = remaining.min(WALK_LEN);
+            let (sysva, thread, loc) = self
+                .unit
+                .walk(&cfg, ctx.table, &p, inc32)
+                .map_err(|e| EngineError::Backend(format!("{e:#}")))?;
+            for i in 0..n {
+                debug_assert_eq!(thread[i] as u32, p.thread, "walker step {i}");
+                out.push(p, sysva[i] as u64, Self::lane_loc(loc[i])?);
+                p = increment_pow2(&p, inc, l2bs, l2es, l2nt);
+            }
+            remaining -= n;
+        }
+        Ok(())
+    }
+}

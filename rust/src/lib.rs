@@ -9,8 +9,42 @@
 //! instructions that translate `(thread, phase, va)` pointers through a
 //! per-thread base-address LUT at the cost of an ordinary memory access.
 //!
-//! This crate rebuilds the paper's entire evaluation stack:
+//! ## The `AddressEngine` contract
 //!
+//! The paper's core claim is that this address-mapping contract —
+//! Algorithm 1 + LUT translation + locality classification — is **one
+//! interface** that interchangeable implementations can serve without
+//! the program changing.  This crate makes that literal: the [`engine`]
+//! module defines the [`AddressEngine`] trait with a batched
+//! request/response API (`translate`, `increment`, `walk` over a
+//! reusable [`PtrBatch`]), three first-class backends
+//! (`SoftwareEngine` for any layout, `Pow2Engine` for the shift/mask
+//! hardware datapath, `XlaBatchEngine` for the PJRT batch unit behind
+//! the `xla-unit` feature), and an [`EngineSelector`] that picks the
+//! fastest legal backend per [`ArrayLayout`] — the runtime mirror of
+//! the compiler's `Soft`/`Hw` lowering choice.  Every host-side
+//! consumer (the UPC runtime, NPB workload init/validation, the
+//! campaign coordinator, the CLI) goes through it.
+//!
+//! ```no_run
+//! use pgas_hw::engine::{AddressEngine, BatchOut, EngineCtx, EngineSelector};
+//! use pgas_hw::{ArrayLayout, BaseTable, SharedPtr};
+//!
+//! // shared [4] int A[...] over 4 threads (the paper's Figure 2)
+//! let layout = ArrayLayout::new(4, 4, 4);
+//! let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+//! let sel = EngineSelector::new();
+//! let engine = sel.select(&layout, 32); // pow2 geometry -> "pow2"
+//! let mut out = BatchOut::new();
+//! engine
+//!     .walk(&EngineCtx::new(layout, &table, 0), SharedPtr::NULL, 1, 32, &mut out)
+//!     .unwrap();
+//! assert_eq!(out.ptrs[5].thread, 1); // elements 4..7 live on thread 1
+//! ```
+//!
+//! ## The full evaluation stack
+//!
+//! * [`engine`] — the unified `AddressEngine` API described above.
 //! * [`sptr`] — UPC shared-pointer algebra: Algorithm 1 (general and
 //!   power-of-2 paths), LUT translation, locality codes, packing.
 //! * [`isa`] — *SimAlpha*: a 64-bit RISC ISA plus the paper's Table-1
@@ -21,7 +55,8 @@
 //! * [`sim`] — an N-core SPMD machine (up to 64 cores, the paper's
 //!   BigTsunami limit) with UPC barriers.
 //! * [`upc`] — the UPC runtime model: block-cyclic shared arrays,
-//!   per-thread heaps, affinity.
+//!   per-thread heaps, affinity; host-side access is served by the
+//!   engine selector.
 //! * [`compiler`] — a mini Berkeley-UPC-like code generator lowering a
 //!   kernel IR to SimAlpha in three variants: `Soft` (software Algorithm
 //!   1), `Privatized` (manual pointer privatization), `Hw` (the new
@@ -32,9 +67,9 @@
 //!   pipeline with the Table-3 coprocessor, AMBA AHB bus contention and
 //!   DDR3 timing; vector-add and matmul microbenchmarks (Figs 15/16).
 //! * [`area`] — the FPGA resource model regenerating Table 4.
-//! * [`runtime`] — PJRT/XLA executor for the AOT-compiled batched
-//!   address-mapping unit (the L1 Pallas kernel), loaded from
-//!   `artifacts/*.hlo.txt`.
+//! * [`runtime`] — artifact geometry + scalar oracle for the batched
+//!   unit; the PJRT/XLA executor itself is behind the `xla-unit`
+//!   cargo feature.
 //! * [`coordinator`] — campaign configuration, sweep scheduling, result
 //!   collection and the figure/table reporters.
 //!
@@ -46,6 +81,7 @@ pub mod cache;
 pub mod compiler;
 pub mod coordinator;
 pub mod cpu;
+pub mod engine;
 pub mod isa;
 pub mod leon3;
 pub mod mem;
@@ -56,4 +92,5 @@ pub mod sptr;
 pub mod upc;
 pub mod util;
 
+pub use engine::{AddressEngine, EngineSelector, PtrBatch};
 pub use sptr::{ArrayLayout, BaseTable, Locality, SharedPtr};

@@ -6,8 +6,11 @@
 //!   leon3    the FPGA prototype microbenchmarks (Figs. 15/16)
 //!   area     Table 4 + the component breakdown
 //!   disasm   compile a kernel and print program + PGAS census + Table 1
-//!   verify   cross-check the XLA batch unit against the scalar oracle
-//!   walk     demo: trace a pointer walk through a layout (XLA walker)
+//!   verify   differential check of the AddressEngine backends
+//!            (software vs pow2; + the XLA batch unit with
+//!            `--features xla-unit` and artifacts present)
+//!   walk     demo: trace a pointer walk through a layout via the
+//!            selected AddressEngine backend
 //!
 //! (Hand-rolled argument parsing: the offline environment vendors no
 //! clap.)
@@ -17,9 +20,12 @@ use std::process::ExitCode;
 
 use pgas_hw::coordinator::{self, Campaign};
 use pgas_hw::cpu::CpuModel;
+use pgas_hw::engine::{
+    AddressEngine, BatchOut, EngineCtx, EngineSelector, Pow2Engine, PtrBatch,
+    SoftwareEngine,
+};
 use pgas_hw::npb::{self, Kernel, PaperVariant, Scale};
-use pgas_hw::runtime::{unit_batch_scalar, UnitCfg, XlaUnit};
-use pgas_hw::sptr::{BaseTable, SharedPtr};
+use pgas_hw::sptr::{ArrayLayout, BaseTable, SharedPtr};
 use pgas_hw::util::rng::Xoshiro256;
 use pgas_hw::{area, isa, leon3};
 
@@ -33,8 +39,7 @@ fn usage() -> &'static str {
   area
   disasm --kernel K [--variant V] [--full]
   verify [--batches N] [--artifacts DIR]
-  walk   [--blocksize B] [--elemsize E] [--threads T] [--inc I]
-         [--artifacts DIR]"
+  walk   [--blocksize B] [--elemsize E] [--threads T] [--inc I]"
 }
 
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>, String> {
@@ -177,6 +182,12 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<(), String> {
         campaign.scale.factor,
         campaign.jobs
     );
+    let report_cores = campaign.cores.first().copied().unwrap_or(4);
+    println!(
+        "{}",
+        coordinator::engine_report(&campaign.kernels, report_cores, &campaign.scale)
+            .render()
+    );
     let outs = campaign.run(true);
     let figs = [
         (Kernel::Ep, "Fig 6"),
@@ -300,6 +311,7 @@ fn cmd_disasm(flags: &HashMap<String, String>) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(feature = "xla-unit")]
 fn artifacts_dir(flags: &HashMap<String, String>) -> String {
     flags
         .get("artifacts")
@@ -307,84 +319,101 @@ fn artifacts_dir(flags: &HashMap<String, String>) -> String {
         .unwrap_or_else(|| "artifacts".to_string())
 }
 
+/// Differential conformance of the AddressEngine backends on randomized
+/// pow2 layouts: software (general Algorithm 1) vs pow2 (shift/mask),
+/// and — when compiled with `xla-unit` and artifacts are present — the
+/// XLA batch unit as well.  All must agree bit-for-bit.
 fn cmd_verify(flags: &HashMap<String, String>) -> Result<(), String> {
     let batches: u32 = flags
         .get("batches")
         .map(|s| s.parse().map_err(|_| "bad batches"))
         .unwrap_or(Ok(8))?;
-    let unit = XlaUnit::load(artifacts_dir(flags)).map_err(|e| format!("{e:#}"))?;
-    println!("PJRT platform: {}", unit.platform());
+    let software = SoftwareEngine;
+    let pow2 = Pow2Engine;
+    #[cfg(feature = "xla-unit")]
+    let xla = match pgas_hw::engine::XlaBatchEngine::load(artifacts_dir(flags)) {
+        Ok(x) => {
+            println!("PJRT platform: {}", x.platform());
+            Some(x)
+        }
+        Err(e) => {
+            eprintln!("note: XLA batch engine unavailable ({e}); checking software vs pow2 only");
+            None
+        }
+    };
     let mut rng = Xoshiro256::new(0xFEED);
     for batch in 0..batches {
         let l2bs = rng.below(8) as u32;
         let l2es = rng.below(4) as u32;
         let l2nt = rng.below(7) as u32;
         let t = 1u32 << l2nt;
-        let cfg = UnitCfg {
-            log2_blocksize: l2bs,
-            log2_elemsize: l2es,
-            log2_numthreads: l2nt,
-            mythread: rng.below(t as u64) as u32,
-            log2_threads_per_mc: 1,
-            log2_threads_per_node: 6,
-        };
         let table = BaseTable::regular(t, 1 << 32, 1 << 32);
-        let layout = pgas_hw::sptr::ArrayLayout::new(1 << l2bs, 1 << l2es, t);
+        let layout = ArrayLayout::new(1 << l2bs, 1 << l2es, t);
+        let ctx = EngineCtx::new(layout, &table, rng.below(t as u64) as u32);
         let n = 1 + rng.below(8192) as usize;
-        let ptrs: Vec<SharedPtr> = (0..n)
-            .map(|_| SharedPtr::for_index(&layout, 0, rng.below(1 << 16)))
-            .collect();
-        let incs: Vec<u32> = (0..n).map(|_| rng.below(4096) as u32).collect();
-        let got = unit
-            .unit_batch(&cfg, &table, &ptrs, &incs)
-            .map_err(|e| format!("{e:#}"))?;
-        let want = unit_batch_scalar(&cfg, &table, &ptrs, &incs);
-        if got.thread != want.thread
-            || got.phase != want.phase
-            || got.va != want.va
-            || got.sysva != want.sysva
-            || got.loc != want.loc
-        {
-            return Err(format!("batch {batch}: XLA unit != scalar oracle"));
+        let mut req = PtrBatch::with_capacity(n);
+        for _ in 0..n {
+            req.push(
+                SharedPtr::for_index(&layout, 0, rng.below(1 << 16)),
+                rng.below(4096),
+            );
         }
-        println!("batch {batch}: {n} pointers OK (T={t}, bs=2^{l2bs}, es=2^{l2es})");
+        let mut want = BatchOut::new();
+        software
+            .translate(&ctx, &req, &mut want)
+            .map_err(|e| e.to_string())?;
+        let mut got = BatchOut::new();
+        pow2.translate(&ctx, &req, &mut got).map_err(|e| e.to_string())?;
+        if got != want {
+            return Err(format!("batch {batch}: pow2 engine != software engine"));
+        }
+        #[cfg_attr(not(feature = "xla-unit"), allow(unused_mut))]
+        let mut engines = "software == pow2";
+        #[cfg(feature = "xla-unit")]
+        if let Some(x) = &xla {
+            x.translate(&ctx, &req, &mut got).map_err(|e| e.to_string())?;
+            if got != want {
+                return Err(format!("batch {batch}: xla-batch engine != software engine"));
+            }
+            engines = "software == pow2 == xla-batch";
+        }
+        println!(
+            "batch {batch}: {n} pointers OK, {engines} (T={t}, bs=2^{l2bs}, es=2^{l2es})"
+        );
     }
-    println!("verify: all {batches} batches agree with the scalar oracle");
+    println!("verify: all {batches} batches agree across engines");
     Ok(())
 }
 
+/// Trace a pointer walk through a layout with whichever backend the
+/// selector picks — non-pow2 geometries now work too (software engine).
 fn cmd_walk(flags: &HashMap<String, String>) -> Result<(), String> {
     let bs: u64 = flags.get("blocksize").map(|s| s.parse().unwrap_or(4)).unwrap_or(4);
     let es: u64 = flags.get("elemsize").map(|s| s.parse().unwrap_or(4)).unwrap_or(4);
     let t: u32 = flags.get("threads").map(|s| s.parse().unwrap_or(4)).unwrap_or(4);
-    let inc: u32 = flags.get("inc").map(|s| s.parse().unwrap_or(1)).unwrap_or(1);
-    if !(bs.is_power_of_two() && es.is_power_of_two() && t.is_power_of_two()) {
-        return Err("walk demo requires power-of-2 geometry (like the hardware)".into());
-    }
-    let unit = XlaUnit::load(artifacts_dir(flags)).map_err(|e| format!("{e:#}"))?;
-    let cfg = UnitCfg {
-        log2_blocksize: bs.trailing_zeros(),
-        log2_elemsize: es.trailing_zeros(),
-        log2_numthreads: t.trailing_zeros(),
-        mythread: 0,
-        log2_threads_per_mc: 1,
-        log2_threads_per_node: 6,
-    };
+    let inc: u64 = flags.get("inc").map(|s| s.parse().unwrap_or(1)).unwrap_or(1);
+    const STEPS: usize = 24;
+    let layout = ArrayLayout::new(bs, es, t);
     let table = BaseTable::regular(t, 1 << 32, 1 << 32);
-    let (sysva, thread, loc) = unit
-        .walk(&cfg, &table, &SharedPtr::NULL, inc)
-        .map_err(|e| format!("{e:#}"))?;
+    let sel = EngineSelector::new();
+    let engine = sel.select(&layout, STEPS);
+    let ctx = EngineCtx::new(layout, &table, 0);
+    let mut out = BatchOut::new();
+    engine
+        .walk(&ctx, SharedPtr::NULL, inc, STEPS, &mut out)
+        .map_err(|e| e.to_string())?;
     println!(
         "walking shared [{bs}] (elem {es}B) over {t} threads, inc {inc} \
-         — first 24 steps (XLA trace_walker artifact):"
+         — first {STEPS} steps (`{}` engine):",
+        engine.name()
     );
-    for i in 0..24.min(sysva.len()) {
+    for i in 0..out.len() {
         println!(
-            "  elem {:3}: thread {} sysva {:#x} locality {}",
-            i as u32 * inc,
-            thread[i],
-            sysva[i],
-            loc[i]
+            "  elem {:3}: thread {} sysva {:#x} locality {:?}",
+            i as u64 * inc,
+            out.ptrs[i].thread,
+            out.sysva[i],
+            out.loc[i]
         );
     }
     Ok(())

@@ -297,25 +297,21 @@ pub fn build(threads: u32, source: SourceVariant, scale: &Scale) -> BuiltKernel 
     let colidx_setup = colidx_data.clone();
     let aval_setup = aval_data.clone();
     let setup = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
-        for (i, &c) in colidx_setup.iter().enumerate() {
-            rt.write_u64(mem, colidx, i as u64, c as u64);
-        }
-        for (i, &v) in aval_setup.iter().enumerate() {
-            rt.write_f64(mem, aval, i as u64, v);
-        }
-        for i in 0..n {
-            rt.write_f64(mem, p, i, 1.0 + (i % 7) as f64 * 0.125);
-            rt.write_f64(mem, q, i, 0.0);
-        }
+        // batched init through the runtime's AddressEngine walk
+        let cols: Vec<u64> = colidx_setup.iter().map(|&c| c as u64).collect();
+        rt.write_u64_seq(mem, colidx, 0, &cols);
+        rt.write_f64_seq(mem, aval, 0, &aval_setup);
+        let pv: Vec<f64> = (0..n).map(|i| 1.0 + (i % 7) as f64 * 0.125).collect();
+        rt.write_f64_seq(mem, p, 0, &pv);
+        rt.write_f64_seq(mem, q, 0, &vec![0.0; n as usize]);
     });
 
     let validate = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
         let want = host_reference(n, threads, &colidx_data, &aval_data);
-        for i in 0..n {
-            let got = rt.read_f64(mem, p, i);
-            let w = want[i as usize];
-            if (got - w).abs() > 1e-9 * w.abs().max(1.0) {
-                return Err(format!("p[{i}] = {got}, want {w}"));
+        let got = rt.read_f64_seq(mem, p, 0, n as usize);
+        for (i, (&g, &w)) in got.iter().zip(&want).enumerate() {
+            if (g - w).abs() > 1e-9 * w.abs().max(1.0) {
+                return Err(format!("p[{i}] = {g}, want {w}"));
             }
         }
         Ok(())

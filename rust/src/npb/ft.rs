@@ -444,8 +444,10 @@ pub fn build(threads: u32, source: SourceVariant, scale: &Scale) -> BuiltKernel 
 
     let data = input_data(N1, n2);
     let setup = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
-        for (i, &(re, im)) in data.iter().enumerate() {
-            let a = rt.sysva(mem, x, i as u64);
+        // batched address generation through the AddressEngine walk;
+        // each 16-byte complex element stores (re, im) at (a, a+8)
+        let addrs = rt.sysva_seq(mem, x, 0, data.len());
+        for (&a, &(re, im)) in addrs.iter().zip(&data) {
             mem.write_f64(a, re);
             mem.write_f64(a + 8, im);
         }
@@ -476,11 +478,11 @@ pub fn build(threads: u32, source: SourceVariant, scale: &Scale) -> BuiltKernel 
 
     let validate = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
         let want = host_reference(n2);
-        for i in 0..(N1 * n2) {
-            let a = rt.sysva(mem, y, i);
+        let addrs = rt.sysva_seq(mem, y, 0, (N1 * n2) as usize);
+        for (i, &a) in addrs.iter().enumerate() {
             let gr = mem.read_f64(a);
             let gi = mem.read_f64(a + 8);
-            let (wr, wi) = want[i as usize];
+            let (wr, wi) = want[i];
             if (gr - wr).abs() > 1e-9 * wr.abs().max(1.0)
                 || (gi - wi).abs() > 1e-9 * wi.abs().max(1.0)
             {

@@ -247,9 +247,9 @@ pub fn build(threads: u32, source: SourceVariant, scale: &Scale) -> BuiltKernel 
     let keys_data = host_keys(n);
     let keys_for_setup = keys_data.clone();
     let setup = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
-        for (i, &k) in keys_for_setup.iter().enumerate() {
-            rt.write_u64(mem, keys, i as u64, k as u64);
-        }
+        // batched init through the runtime's AddressEngine walk
+        let vals: Vec<u64> = keys_for_setup.iter().map(|&k| k as u64).collect();
+        rt.write_u64_seq(mem, keys, 0, &vals);
     });
 
     let validate = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
@@ -257,13 +257,10 @@ pub fn build(threads: u32, source: SourceVariant, scale: &Scale) -> BuiltKernel 
         for &k in &keys_data {
             want[k as usize] += 1;
         }
-        for k in 0..NBUCKETS {
-            let got = rt.read_u64(mem, totals, k);
-            if got != want[k as usize] {
-                return Err(format!(
-                    "bucket {k}: got {got}, want {}",
-                    want[k as usize]
-                ));
+        let got = rt.read_u64_seq(mem, totals, 0, NBUCKETS as usize);
+        for (k, (&g, &w)) in got.iter().zip(&want).enumerate() {
+            if g != w {
+                return Err(format!("bucket {k}: got {g}, want {w}"));
             }
         }
         Ok(())

@@ -563,22 +563,22 @@ pub fn build(threads: u32, source: SourceVariant, scale: &Scale) -> BuiltKernel 
     let u0 = u_ids[0];
     let r0 = r_ids[0];
     let setup = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
-        for i in 0..n0 {
-            let rv = if i % 37 == 0 { 1.0 } else { 0.0 } + (i % 11) as f64 * 0.01;
-            rt.write_f64(mem, r0, i, rv);
-            rt.write_f64(mem, u0, i, 0.0);
-        }
+        // batched init through the runtime's AddressEngine walk
+        let rv: Vec<f64> = (0..n0)
+            .map(|i| (if i % 37 == 0 { 1.0 } else { 0.0 }) + (i % 11) as f64 * 0.01)
+            .collect();
+        rt.write_f64_seq(mem, r0, 0, &rv);
+        rt.write_f64_seq(mem, u0, 0, &vec![0.0; n0 as usize]);
     });
 
     let validate = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
         let mut host = HostMg::new(n0);
         host.init();
         host.vcycle();
-        for i in 0..n0 {
-            let got = rt.read_f64(mem, u0, i);
-            let want = host.u[0][i as usize];
-            if (got - want).abs() > 1e-12 * want.abs().max(1.0) {
-                return Err(format!("u[{i}] = {got}, want {want}"));
+        let got = rt.read_f64_seq(mem, u0, 0, n0 as usize);
+        for (i, (&g, &want)) in got.iter().zip(&host.u[0]).enumerate() {
+            if (g - want).abs() > 1e-12 * want.abs().max(1.0) {
+                return Err(format!("u[{i}] = {g}, want {want}"));
             }
         }
         Ok(())

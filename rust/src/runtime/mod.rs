@@ -1,23 +1,29 @@
-//! PJRT/XLA runtime: loads the AOT-compiled address-mapping unit (the L1
-//! Pallas kernel lowered through the L2 JAX graph) from
-//! `artifacts/*.hlo.txt` and executes it from Rust.
+//! PJRT/XLA runtime bridge for the AOT-compiled batched address-mapping
+//! unit (the L1 Pallas kernel lowered through the L2 JAX graph), loaded
+//! from `artifacts/*.hlo.txt`.
 //!
-//! This is the three-layer architecture's run-time bridge: Python runs
-//! once at build time (`make artifacts`); here the HLO **text** (never a
-//! serialized proto — xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit
-//! instruction ids) is parsed, compiled by the PJRT CPU client, and
-//! invoked with concrete pointer batches.
+//! The artifact geometry (batch shape, LUT capacity), the hardware
+//! config-register layout ([`UnitCfg`]) and the scalar verification
+//! oracle ([`unit_batch_scalar`]) are always compiled; the PJRT
+//! executables themselves ([`XlaUnit`]) need the `xla` crate and the
+//! artifacts, so they sit behind the off-by-default `xla-unit` cargo
+//! feature — tier-1 builds and tests never touch PJRT.
 //!
-//! The coordinator uses it two ways:
-//! * as the **batch engine**: bulk shared-pointer increment/translate
-//!   offload (the "hardware unit" datapath, vectorized);
-//! * as the **verification oracle**: every batch is cross-checked
-//!   against the scalar Rust implementation in tests and in
-//!   `pgas-hw verify`.
+//! Python runs only at build time (`make artifacts`): the HLO **text**
+//! (never a serialized proto — xla_extension 0.5.1 rejects jax ≥ 0.5's
+//! 64-bit instruction ids) is parsed, compiled by the PJRT CPU client,
+//! and invoked with concrete pointer batches.
+//!
+//! Callers should not use [`XlaUnit`] directly: the
+//! [`XlaBatchEngine`](crate::engine) adapter serves it through the
+//! [`AddressEngine`](crate::engine::AddressEngine) contract, chunking
+//! arbitrary batch sizes through the fixed `UNIT_BATCH` artifact shape.
 
-use std::path::{Path, PathBuf};
+#[cfg(feature = "xla-unit")]
+mod xla_unit;
 
-use anyhow::{bail, Context, Result};
+#[cfg(feature = "xla-unit")]
+pub use xla_unit::XlaUnit;
 
 use crate::sptr::{BaseTable, SharedPtr};
 
@@ -42,21 +48,6 @@ pub struct UnitCfg {
     pub log2_threads_per_node: u32,
 }
 
-impl UnitCfg {
-    fn to_vec(self) -> Vec<i32> {
-        vec![
-            self.log2_blocksize as i32,
-            self.log2_elemsize as i32,
-            self.log2_numthreads as i32,
-            self.mythread as i32,
-            self.log2_threads_per_mc as i32,
-            self.log2_threads_per_node as i32,
-            0,
-            0,
-        ]
-    }
-}
-
 /// Result of a fused unit batch.
 #[derive(Clone, Debug, Default)]
 pub struct UnitBatchOut {
@@ -65,203 +56,6 @@ pub struct UnitBatchOut {
     pub va: Vec<i64>,
     pub sysva: Vec<i64>,
     pub loc: Vec<i32>,
-}
-
-/// The loaded PJRT executables.
-pub struct XlaUnit {
-    client: xla::PjRtClient,
-    unit: xla::PjRtLoadedExecutable,
-    inc: xla::PjRtLoadedExecutable,
-    walker: xla::PjRtLoadedExecutable,
-}
-
-fn load_exe(
-    client: &xla::PjRtClient,
-    dir: &Path,
-    name: &str,
-) -> Result<xla::PjRtLoadedExecutable> {
-    let path = dir.join(format!("{name}.hlo.txt"));
-    let text_path = path
-        .to_str()
-        .with_context(|| format!("non-utf8 path {path:?}"))?;
-    let proto = xla::HloModuleProto::from_text_file(text_path)
-        .with_context(|| format!("parsing {path:?} (run `make artifacts`)"))?;
-    let comp = xla::XlaComputation::from_proto(&proto);
-    client
-        .compile(&comp)
-        .with_context(|| format!("compiling {name}"))
-}
-
-impl XlaUnit {
-    /// Load all artifacts from `dir` (default: ./artifacts).
-    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
-        let dir = dir.as_ref();
-        if !dir.join("sptr_unit.hlo.txt").exists() {
-            bail!(
-                "artifacts not found in {dir:?}; run `make artifacts` first"
-            );
-        }
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self {
-            unit: load_exe(&client, dir, "sptr_unit")?,
-            inc: load_exe(&client, dir, "sptr_inc")?,
-            walker: load_exe(&client, dir, "trace_walker")?,
-            client,
-        })
-    }
-
-    /// Default artifacts directory (next to the workspace root).
-    pub fn default_dir() -> PathBuf {
-        PathBuf::from("artifacts")
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn base_vec(table: &BaseTable) -> Result<Vec<i64>> {
-        if table.numthreads() as usize > MAX_THREADS {
-            bail!("base table larger than artifact capacity {MAX_THREADS}");
-        }
-        let mut v = vec![0i64; MAX_THREADS];
-        for (t, &b) in table.bases().iter().enumerate() {
-            v[t] = b as i64;
-        }
-        Ok(v)
-    }
-
-    /// Fused increment + translate + locality over up to UNIT_BATCH
-    /// pointers (shorter batches are padded and trimmed).
-    pub fn unit_batch(
-        &self,
-        cfg: &UnitCfg,
-        table: &BaseTable,
-        ptrs: &[SharedPtr],
-        incs: &[u32],
-    ) -> Result<UnitBatchOut> {
-        assert_eq!(ptrs.len(), incs.len());
-        if ptrs.len() > UNIT_BATCH {
-            bail!("batch {} exceeds UNIT_BATCH {UNIT_BATCH}", ptrs.len());
-        }
-        let n = ptrs.len();
-        let mut thread = vec![0i32; UNIT_BATCH];
-        let mut phase = vec![0i32; UNIT_BATCH];
-        let mut va = vec![0i64; UNIT_BATCH];
-        let mut inc = vec![0i32; UNIT_BATCH];
-        for (i, p) in ptrs.iter().enumerate() {
-            thread[i] = p.thread as i32;
-            phase[i] = p.phase as i32;
-            va[i] = p.va as i64;
-            inc[i] = incs[i] as i32;
-        }
-        let args = [
-            xla::Literal::vec1(&cfg.to_vec()),
-            xla::Literal::vec1(&Self::base_vec(table)?),
-            xla::Literal::vec1(&thread),
-            xla::Literal::vec1(&phase),
-            xla::Literal::vec1(&va),
-            xla::Literal::vec1(&inc),
-        ];
-        let result = self.unit.execute::<xla::Literal>(&args)?[0][0]
-            .to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        if outs.len() != 5 {
-            bail!("unit returned {} outputs, want 5", outs.len());
-        }
-        let mut it = outs.into_iter();
-        let mut out = UnitBatchOut {
-            thread: it.next().unwrap().to_vec::<i32>()?,
-            phase: it.next().unwrap().to_vec::<i32>()?,
-            va: it.next().unwrap().to_vec::<i64>()?,
-            sysva: it.next().unwrap().to_vec::<i64>()?,
-            loc: it.next().unwrap().to_vec::<i32>()?,
-        };
-        out.thread.truncate(n);
-        out.phase.truncate(n);
-        out.va.truncate(n);
-        out.sysva.truncate(n);
-        out.loc.truncate(n);
-        Ok(out)
-    }
-
-    /// Increment-only batch; returns the incremented pointers.
-    pub fn inc_batch(
-        &self,
-        cfg: &UnitCfg,
-        ptrs: &[SharedPtr],
-        incs: &[u32],
-    ) -> Result<Vec<SharedPtr>> {
-        assert_eq!(ptrs.len(), incs.len());
-        if ptrs.len() > UNIT_BATCH {
-            bail!("batch {} exceeds UNIT_BATCH {UNIT_BATCH}", ptrs.len());
-        }
-        let n = ptrs.len();
-        let mut thread = vec![0i32; UNIT_BATCH];
-        let mut phase = vec![0i32; UNIT_BATCH];
-        let mut va = vec![0i64; UNIT_BATCH];
-        let mut inc = vec![0i32; UNIT_BATCH];
-        for (i, p) in ptrs.iter().enumerate() {
-            thread[i] = p.thread as i32;
-            phase[i] = p.phase as i32;
-            va[i] = p.va as i64;
-            inc[i] = incs[i] as i32;
-        }
-        let args = [
-            xla::Literal::vec1(&cfg.to_vec()),
-            xla::Literal::vec1(&thread),
-            xla::Literal::vec1(&phase),
-            xla::Literal::vec1(&va),
-            xla::Literal::vec1(&inc),
-        ];
-        let result = self.inc.execute::<xla::Literal>(&args)?[0][0]
-            .to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        if outs.len() != 3 {
-            bail!("inc returned {} outputs, want 3", outs.len());
-        }
-        let mut it = outs.into_iter();
-        let nthread = it.next().unwrap().to_vec::<i32>()?;
-        let nphase = it.next().unwrap().to_vec::<i32>()?;
-        let nva = it.next().unwrap().to_vec::<i64>()?;
-        Ok((0..n)
-            .map(|i| SharedPtr {
-                thread: nthread[i] as u32,
-                phase: nphase[i] as u64,
-                va: nva[i] as u64,
-            })
-            .collect())
-    }
-
-    /// Walk a pointer WALK_LEN steps; returns (sysva, thread, locality)
-    /// per step (step 0 = the start pointer).
-    pub fn walk(
-        &self,
-        cfg: &UnitCfg,
-        table: &BaseTable,
-        start: &SharedPtr,
-        inc: u32,
-    ) -> Result<(Vec<i64>, Vec<i32>, Vec<i32>)> {
-        let args = [
-            xla::Literal::vec1(&cfg.to_vec()),
-            xla::Literal::vec1(&Self::base_vec(table)?),
-            xla::Literal::from(start.thread as i32),
-            xla::Literal::from(start.phase as i32),
-            xla::Literal::from(start.va as i64),
-            xla::Literal::from(inc as i32),
-        ];
-        let result = self.walker.execute::<xla::Literal>(&args)?[0][0]
-            .to_literal_sync()?;
-        let outs = result.to_tuple()?;
-        if outs.len() != 3 {
-            bail!("walker returned {} outputs, want 3", outs.len());
-        }
-        let mut it = outs.into_iter();
-        Ok((
-            it.next().unwrap().to_vec::<i64>()?,
-            it.next().unwrap().to_vec::<i32>()?,
-            it.next().unwrap().to_vec::<i32>()?,
-        ))
-    }
 }
 
 /// Scalar Rust reference for one batch (the verification oracle's other
@@ -301,7 +95,8 @@ mod tests {
     use super::*;
 
     // XLA-backed tests live in rust/tests/xla_unit.rs (they need the
-    // artifacts); here only the scalar oracle is exercised.
+    // artifacts and --features xla-unit); here only the scalar oracle
+    // is exercised.
     #[test]
     fn scalar_oracle_basics() {
         let cfg = UnitCfg {

@@ -158,6 +158,20 @@ pub enum Locality {
     Remote = 3,
 }
 
+impl Locality {
+    /// Inverse of `as u8` — decodes condition codes coming back from the
+    /// simulated hardware or the batched XLA unit.
+    pub fn from_code(code: u8) -> Option<Locality> {
+        match code {
+            0 => Some(Locality::Local),
+            1 => Some(Locality::SameMc),
+            2 => Some(Locality::SameNode),
+            3 => Some(Locality::Remote),
+            _ => None,
+        }
+    }
+}
+
 /// Machine topology used for locality classification.
 #[derive(Clone, Copy, Debug)]
 pub struct Topology {
@@ -254,6 +268,14 @@ mod tests {
         assert_eq!(locality(2, 0, &topo), Locality::SameNode);
         assert_eq!(locality(3, 0, &topo), Locality::SameNode);
         assert_eq!(locality(4, 0, &topo), Locality::Remote);
+    }
+
+    #[test]
+    fn locality_code_roundtrip() {
+        for l in [Locality::Local, Locality::SameMc, Locality::SameNode, Locality::Remote] {
+            assert_eq!(Locality::from_code(l as u8), Some(l));
+        }
+        assert_eq!(Locality::from_code(4), None);
     }
 
     #[test]

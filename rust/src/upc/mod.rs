@@ -6,9 +6,15 @@
 //! local offset in every thread's shared segment (as in the Berkeley
 //! runtime), which is what makes the single `va` field of a shared
 //! pointer meaningful on all threads.
+//!
+//! All host-side address mapping goes through the runtime's
+//! [`EngineSelector`]: scalar accesses use the selected backend's
+//! scalar path, and the `*_seq` bulk initialization/validation helpers
+//! batch whole array traversals through one engine `walk`.
 
 pub mod collectives;
 
+use crate::engine::{BatchOut, EngineCtx, EngineSelector};
 use crate::isa::MemWidth;
 use crate::mem::{MemSystem, PRIV_OFF};
 use crate::sptr::{ArrayLayout, SharedPtr};
@@ -28,10 +34,24 @@ pub struct SharedArray {
 }
 
 impl SharedArray {
-    /// Shared pointer to logical element `idx`.
+    /// Shared pointer to logical element `idx`, which must be an actual
+    /// element (`idx < nelems`).  The one-past-the-end pointer UPC
+    /// arithmetic may legally form is *not* an element access; use
+    /// [`SharedArray::end_ptr`] for it.
     pub fn ptr(&self, idx: u64) -> SharedPtr {
-        debug_assert!(idx <= self.nelems, "{}[{idx}] out of bounds", self.name);
+        debug_assert!(
+            idx < self.nelems,
+            "{}[{idx}] out of bounds (nelems {})",
+            self.name,
+            self.nelems
+        );
         SharedPtr::for_index(&self.layout, self.base_va, idx)
+    }
+
+    /// The one-past-the-end pointer (`&A[nelems]` in UPC terms): legal
+    /// to form and compare against, never to dereference.
+    pub fn end_ptr(&self) -> SharedPtr {
+        SharedPtr::for_index(&self.layout, self.base_va, self.nelems)
     }
 
     /// Can the PGAS hardware traverse this array (pow2 geometry)?
@@ -40,12 +60,14 @@ impl SharedArray {
     }
 }
 
-/// The per-program UPC runtime state: allocators + array directory.
+/// The per-program UPC runtime state: allocators + array directory +
+/// the address-mapping engine serving host-side accesses.
 pub struct UpcRuntime {
     pub numthreads: u32,
     arrays: Vec<SharedArray>,
     shared_top: u64,
     priv_top: u64,
+    engine: EngineSelector,
 }
 
 /// Alignment of every allocation (one cache line).
@@ -60,7 +82,19 @@ impl UpcRuntime {
             // private space starts after the compiler's reserved area
             // (fp-constant pool + spill slots, see compiler::emit)
             priv_top: 0x1000,
+            engine: EngineSelector::new(),
         }
+    }
+
+    /// The address-mapping engine serving host-side accesses.
+    pub fn engine(&self) -> &EngineSelector {
+        &self.engine
+    }
+
+    /// Replace the engine selector (e.g. one with the XLA batch
+    /// backend installed).
+    pub fn install_engine(&mut self, engine: EngineSelector) {
+        self.engine = engine;
     }
 
     /// Declare + allocate `shared [blocksize] T name[nelems]` with
@@ -113,10 +147,98 @@ impl UpcRuntime {
     }
 
     // ---------- host-side access (init / validation only) ----------
+    //
+    // Every address below is produced by the AddressEngine the selector
+    // picks for the array's layout — the same contract the simulated
+    // hardware implements — never by ad-hoc pointer arithmetic.
+
+    /// Engine context for one array's accesses.
+    fn ctx<'a>(&self, mem: &'a MemSystem, id: ArrayId) -> EngineCtx<'a> {
+        EngineCtx::new(self.array(id).layout, &mem.base_table, 0)
+    }
 
     /// sysva of element `idx` of `id`.
     pub fn sysva(&self, mem: &MemSystem, id: ArrayId, idx: u64) -> u64 {
-        self.array(id).ptr(idx).translate(&mem.base_table)
+        let ctx = self.ctx(mem, id);
+        let (_, sysva, _) = self
+            .engine
+            .translate_one(&ctx, self.array(id).ptr(idx), 0)
+            .expect("host-side translate");
+        sysva
+    }
+
+    /// sysvas of `n` consecutive elements starting at `start` — one
+    /// batched engine walk instead of `n` scalar translations.
+    pub fn sysva_seq(
+        &self,
+        mem: &MemSystem,
+        id: ArrayId,
+        start: u64,
+        n: usize,
+    ) -> Vec<u64> {
+        if n == 0 {
+            return Vec::new();
+        }
+        let ctx = self.ctx(mem, id);
+        let mut out = BatchOut::new();
+        self.engine
+            .walk(&ctx, self.array(id).ptr(start), 1, n, &mut out)
+            .expect("host-side walk");
+        out.sysva
+    }
+
+    /// Bulk-write `vals` to consecutive elements starting at `start`.
+    pub fn write_u64_seq(
+        &self,
+        mem: &mut MemSystem,
+        id: ArrayId,
+        start: u64,
+        vals: &[u64],
+    ) {
+        let w = self.elem_width(id);
+        let addrs = self.sysva_seq(mem, id, start, vals.len());
+        for (&a, &v) in addrs.iter().zip(vals) {
+            mem.write(w, a, v);
+        }
+    }
+
+    /// Bulk-read `n` consecutive elements starting at `start`.
+    pub fn read_u64_seq(
+        &self,
+        mem: &mut MemSystem,
+        id: ArrayId,
+        start: u64,
+        n: usize,
+    ) -> Vec<u64> {
+        let w = self.elem_width(id);
+        let addrs = self.sysva_seq(mem, id, start, n);
+        addrs.iter().map(|&a| mem.read(w, a)).collect()
+    }
+
+    /// Bulk-write `vals` to consecutive f64 elements starting at `start`.
+    pub fn write_f64_seq(
+        &self,
+        mem: &mut MemSystem,
+        id: ArrayId,
+        start: u64,
+        vals: &[f64],
+    ) {
+        let addrs = self.sysva_seq(mem, id, start, vals.len());
+        for (&a, &v) in addrs.iter().zip(vals) {
+            mem.write_f64(a, v);
+        }
+    }
+
+    /// Bulk-read `n` consecutive f64 elements starting at `start`.
+    pub fn read_f64_seq(
+        &self,
+        mem: &mut MemSystem,
+        id: ArrayId,
+        start: u64,
+        n: usize,
+    ) -> Vec<f64> {
+        let addrs = self.sysva_seq(mem, id, start, n);
+        addrs.iter().map(|&a| mem.read_f64(a)).collect()
     }
 
     fn elem_width(&self, id: ArrayId) -> MemWidth {
@@ -200,6 +322,61 @@ mod tests {
         let mut mem = MemSystem::new(2);
         rt.write_f64(&mut mem, a, 63, 2.5);
         assert_eq!(rt.read_f64(&mut mem, a, 63), 2.5);
+    }
+
+    #[test]
+    fn seq_helpers_match_scalar_access() {
+        let mut rt = UpcRuntime::new(4);
+        let a = rt.alloc_shared("a", 4, 8, 64);
+        let mut mem = MemSystem::new(4);
+        let vals: Vec<u64> = (0..64u64).map(|i| i * 3 + 1).collect();
+        rt.write_u64_seq(&mut mem, a, 0, &vals);
+        for i in 0..64 {
+            assert_eq!(rt.read_u64(&mut mem, a, i), vals[i as usize]);
+        }
+        assert_eq!(rt.read_u64_seq(&mut mem, a, 0, 64), vals);
+        // the batched walk and the scalar translate agree address-for-address
+        let addrs = rt.sysva_seq(&mem, a, 5, 20);
+        for (k, &addr) in addrs.iter().enumerate() {
+            assert_eq!(addr, rt.sysva(&mem, a, 5 + k as u64));
+        }
+        assert!(rt.sysva_seq(&mem, a, 0, 0).is_empty());
+    }
+
+    #[test]
+    fn f64_seq_roundtrip_nonpow2_layout() {
+        // non-pow2 geometry: the selector must fall back to software
+        let mut rt = UpcRuntime::new(3);
+        let a = rt.alloc_shared("x", 5, 8, 41);
+        let mut mem = MemSystem::new(3);
+        let vals: Vec<f64> = (0..41).map(|i| i as f64 * 0.5 - 3.0).collect();
+        rt.write_f64_seq(&mut mem, a, 0, &vals);
+        assert_eq!(rt.read_f64_seq(&mut mem, a, 0, 41), vals);
+        assert_eq!(rt.read_f64(&mut mem, a, 40), vals[40]);
+    }
+
+    #[test]
+    fn end_ptr_is_one_past_the_last_element() {
+        let mut rt = UpcRuntime::new(4);
+        let a = rt.alloc_shared("a", 4, 4, 32);
+        let arr = rt.array(a);
+        let end = arr.end_ptr();
+        assert_eq!(end, SharedPtr::for_index(&arr.layout, arr.base_va, 32));
+        // incrementing off the last element lands exactly on end_ptr
+        assert_eq!(arr.ptr(31).incremented(1, &arr.layout), end);
+    }
+
+    #[test]
+    fn engine_choice_follows_layout_geometry() {
+        use crate::engine::EngineChoice;
+        let mut rt = UpcRuntime::new(4);
+        let w = rt.alloc_shared("w", 1, 56016, 8);
+        let g = rt.alloc_shared("g", 4, 8, 64);
+        assert_eq!(
+            rt.engine().choice(&rt.array(w).layout, 8),
+            EngineChoice::Software
+        );
+        assert_eq!(rt.engine().choice(&rt.array(g).layout, 8), EngineChoice::Pow2);
     }
 
     #[test]

@@ -1,0 +1,254 @@
+//! The shared `AddressEngine` conformance suite.
+//!
+//! Differential contract: every backend that claims to support a layout
+//! must produce identical `(thread, phase, va, sysva, loc)` outputs.
+//! [`SoftwareEngine`] (general Algorithm 1) is the reference;
+//! [`Pow2Engine`] is checked against it on randomized pow2 layouts, and
+//! — when built with `--features xla-unit` and artifacts are present —
+//! `XlaBatchEngine` too.
+//!
+//! Plus the satellite property tests: `pack`/`unpack` round-trips and
+//! `ArrayLayout::bytes_on_thread` against a naive per-element reference.
+
+use pgas_hw::engine::{
+    AddressEngine, BatchOut, EngineCtx, EngineChoice, EngineSelector, Pow2Engine,
+    PtrBatch, SoftwareEngine,
+};
+use pgas_hw::sptr::{
+    pack, unpack, ArrayLayout, BaseTable, SharedPtr, Topology, PHASE_BITS,
+    THREAD_BITS, VA_BITS,
+};
+use pgas_hw::util::rng::Xoshiro256;
+use pgas_hw::util::testkit::{check, check_default};
+
+/// A random pow2 layout + matching table/context inputs.
+fn random_pow2_case(
+    rng: &mut Xoshiro256,
+) -> (ArrayLayout, BaseTable, u32, PtrBatch) {
+    let l2bs = rng.below(10) as u32;
+    let l2es = rng.below(6) as u32;
+    let l2nt = rng.below(7) as u32;
+    let layout = ArrayLayout::new(1 << l2bs, 1 << l2es, 1 << l2nt);
+    let table = BaseTable::regular(layout.numthreads, 1 << 32, 1 << 32);
+    let mythread = rng.below(layout.numthreads as u64) as u32;
+    let n = 1 + rng.below(512) as usize;
+    let mut batch = PtrBatch::with_capacity(n);
+    for _ in 0..n {
+        batch.push(
+            SharedPtr::for_index(&layout, 0, rng.below(1 << 16)),
+            rng.below(1 << 13),
+        );
+    }
+    (layout, table, mythread, batch)
+}
+
+#[test]
+fn software_and_pow2_translate_identically_on_pow2_layouts() {
+    check("engine conformance: translate", 64, |rng| {
+        let (layout, table, mythread, batch) = random_pow2_case(rng);
+        let ctx = EngineCtx::new(layout, &table, mythread)
+            .with_topology(Topology { log2_threads_per_mc: 1, log2_threads_per_node: 3 });
+        let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
+        SoftwareEngine.translate(&ctx, &batch, &mut a).unwrap();
+        Pow2Engine.translate(&ctx, &batch, &mut b).unwrap();
+        assert_eq!(a, b, "layout={layout:?}");
+    });
+}
+
+#[test]
+fn software_and_pow2_increment_identically_on_pow2_layouts() {
+    check("engine conformance: increment", 64, |rng| {
+        let (layout, table, mythread, batch) = random_pow2_case(rng);
+        let ctx = EngineCtx::new(layout, &table, mythread);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        SoftwareEngine.increment(&ctx, &batch, &mut a).unwrap();
+        Pow2Engine.increment(&ctx, &batch, &mut b).unwrap();
+        assert_eq!(a, b, "layout={layout:?}");
+        // increments also agree with direct index arithmetic
+        for (i, q) in a.iter().enumerate() {
+            let idx = batch.ptrs[i].to_index(&layout, 0) + batch.incs[i];
+            assert_eq!(*q, SharedPtr::for_index(&layout, 0, idx));
+        }
+    });
+}
+
+#[test]
+fn software_and_pow2_walk_identically_on_pow2_layouts() {
+    check("engine conformance: walk", 48, |rng| {
+        let (layout, table, mythread, _) = random_pow2_case(rng);
+        let ctx = EngineCtx::new(layout, &table, mythread);
+        let start = SharedPtr::for_index(&layout, 0, rng.below(1 << 12));
+        let inc = 1 + rng.below(64);
+        let steps = 1 + rng.below(256) as usize;
+        let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
+        SoftwareEngine.walk(&ctx, start, inc, steps, &mut a).unwrap();
+        Pow2Engine.walk(&ctx, start, inc, steps, &mut b).unwrap();
+        assert_eq!(a, b, "layout={layout:?} inc={inc} steps={steps}");
+        assert_eq!(a.len(), steps);
+        assert_eq!(a.ptrs[0], start, "step 0 must be the start pointer");
+    });
+}
+
+#[test]
+fn selector_output_equals_direct_backend_output() {
+    let sel = EngineSelector::new();
+    let mut rng = Xoshiro256::new(0xE9E);
+    for _ in 0..16 {
+        let (layout, table, mythread, batch) = random_pow2_case(&mut rng);
+        assert_eq!(sel.choice(&layout, batch.len()), EngineChoice::Pow2);
+        let ctx = EngineCtx::new(layout, &table, mythread);
+        let (mut via_sel, mut direct) = (BatchOut::new(), BatchOut::new());
+        sel.translate(&ctx, &batch, &mut via_sel).unwrap();
+        SoftwareEngine.translate(&ctx, &batch, &mut direct).unwrap();
+        assert_eq!(via_sel, direct);
+    }
+}
+
+#[test]
+fn nonpow2_layouts_fall_back_to_software_only() {
+    let sel = EngineSelector::new();
+    let layout = ArrayLayout::new(3, 56016, 5); // CG's w/w_tmp shape
+    assert_eq!(sel.choice(&layout, 1 << 20), EngineChoice::Software);
+    let table = BaseTable::regular(5, 1 << 32, 1 << 32);
+    let ctx = EngineCtx::new(layout, &table, 0);
+    let mut batch = PtrBatch::new();
+    batch.push(SharedPtr::for_index(&layout, 0, 7), 11);
+    let mut out = BatchOut::new();
+    // the selector serves it...
+    sel.translate(&ctx, &batch, &mut out).unwrap();
+    assert_eq!(out.ptrs[0], SharedPtr::for_index(&layout, 0, 18));
+    // ...while the pow2 backend refuses rather than answering wrongly
+    assert!(Pow2Engine.translate(&ctx, &batch, &mut out).is_err());
+}
+
+// ---- satellite: pack/unpack round-trip properties ----
+
+#[test]
+fn pack_unpack_roundtrips_both_ways() {
+    check_default("pack(unpack(bits)) == bits and back", |rng| {
+        // ptr -> bits -> ptr
+        let p = SharedPtr {
+            thread: rng.below(1 << THREAD_BITS) as u32,
+            phase: rng.below(1 << PHASE_BITS),
+            va: rng.below(1 << VA_BITS),
+        };
+        assert_eq!(unpack(pack(&p)), p);
+        // bits -> ptr -> bits (any 64-bit pattern is a valid packing)
+        let bits = rng.below(u64::MAX);
+        assert_eq!(pack(&unpack(bits)), bits);
+    });
+}
+
+// ---- satellite: bytes_on_thread vs a naive per-element reference ----
+
+/// Count elements 0..n owned by thread `t` one at a time.
+fn naive_bytes_on_thread(layout: &ArrayLayout, n: u64, t: u32) -> u64 {
+    let mut elems = 0;
+    for i in 0..n {
+        if SharedPtr::for_index(layout, 0, i).thread == t {
+            elems += 1;
+        }
+    }
+    elems * layout.elemsize
+}
+
+#[test]
+fn bytes_on_thread_matches_naive_reference() {
+    check("bytes_on_thread == naive", 64, |rng| {
+        let layout = ArrayLayout::new(
+            rng.below(9) + 1,
+            rng.below(16) + 1,
+            rng.below(7) as u32 + 1,
+        );
+        let round = layout.blocksize * layout.numthreads as u64;
+        // exercise the boundaries: around whole rounds, block edges, 0
+        let candidates = [
+            0,
+            1,
+            round.saturating_sub(1),
+            round,
+            round + 1,
+            round * 3 + layout.blocksize,
+            round * 3 + layout.blocksize + 1,
+            rng.below(4 * round + 1),
+        ];
+        for &n in &candidates {
+            for t in 0..layout.numthreads {
+                assert_eq!(
+                    layout.bytes_on_thread(n, t),
+                    naive_bytes_on_thread(&layout, n, t),
+                    "layout={layout:?} n={n} t={t}"
+                );
+            }
+        }
+    });
+}
+
+// ---- the XLA batch backend joins the same suite when compiled in ----
+
+#[cfg(feature = "xla-unit")]
+mod xla {
+    use super::*;
+    use pgas_hw::engine::XlaBatchEngine;
+
+    fn load() -> Option<XlaBatchEngine> {
+        match XlaBatchEngine::load("artifacts") {
+            Ok(x) => Some(x),
+            Err(e) => {
+                eprintln!("skipping XLA conformance: {e}");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn xla_batch_translate_matches_software() {
+        let Some(x) = load() else { return };
+        let mut rng = Xoshiro256::new(0xC0FFEE);
+        for round in 0..8 {
+            let (layout, table, mythread, batch) = random_pow2_case(&mut rng);
+            let ctx = EngineCtx::new(layout, &table, mythread);
+            let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
+            SoftwareEngine.translate(&ctx, &batch, &mut a).unwrap();
+            x.translate(&ctx, &batch, &mut b).unwrap();
+            assert_eq!(a, b, "round {round} layout={layout:?}");
+        }
+    }
+
+    #[test]
+    fn xla_batch_chunks_oversized_batches() {
+        use pgas_hw::runtime::UNIT_BATCH;
+        let Some(x) = load() else { return };
+        let layout = ArrayLayout::new(64, 8, 16);
+        let table = BaseTable::regular(16, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0);
+        let n = UNIT_BATCH * 2 + 37; // forces 3 chunks incl. a partial
+        let mut rng = Xoshiro256::new(9);
+        let mut batch = PtrBatch::with_capacity(n);
+        for _ in 0..n {
+            batch.push(
+                SharedPtr::for_index(&layout, 0, rng.below(1 << 20)),
+                rng.below(1 << 12),
+            );
+        }
+        let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
+        SoftwareEngine.translate(&ctx, &batch, &mut a).unwrap();
+        x.translate(&ctx, &batch, &mut b).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(b.len(), n);
+    }
+
+    #[test]
+    fn xla_batch_walk_matches_software() {
+        use pgas_hw::runtime::WALK_LEN;
+        let Some(x) = load() else { return };
+        let layout = ArrayLayout::new(4, 4, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0);
+        let steps = WALK_LEN + 100; // forces a chunked walk
+        let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
+        SoftwareEngine.walk(&ctx, SharedPtr::NULL, 3, steps, &mut a).unwrap();
+        x.walk(&ctx, SharedPtr::NULL, 3, steps, &mut b).unwrap();
+        assert_eq!(a, b);
+    }
+}
