@@ -27,7 +27,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let threads = 16u32;
     let layout = ArrayLayout::new(64, 8, threads); // shared [64] double
     let table = BaseTable::regular(threads, 1 << 32, 1 << 32);
-    let ctx = EngineCtx::new(layout, &table, 0);
+    let ctx = EngineCtx::new(layout, &table, 0).unwrap();
 
     // one request batch of a million pointers: the engine chunks it
     // through the artifacts' fixed 8192-wide shape internally

@@ -36,9 +36,10 @@ fn engine_demo() {
     // the selector picks the hardware fast path
     let fig2 = ArrayLayout::new(4, 4, THREADS);
     let engine = sel.select(&fig2, 16);
+    let ctx = EngineCtx::new(fig2, &table, 0).unwrap();
     let mut out = BatchOut::new();
     engine
-        .walk(&EngineCtx::new(fig2, &table, 0), SharedPtr::NULL, 1, 16, &mut out)
+        .walk(&ctx, SharedPtr::NULL, 1, 16, &mut out)
         .unwrap();
     let threads: Vec<u32> = out.ptrs.iter().map(|p| p.thread).collect();
     println!("`{}` engine walks A[0..16]: threads {threads:?}", engine.name());
@@ -46,8 +47,9 @@ fn engine_demo() {
     // CG's w_tmp-style non-pow2 element: same call, software backend
     let odd = ArrayLayout::new(1, 56016, THREADS);
     let engine = sel.select(&odd, 16);
+    let ctx = EngineCtx::new(odd, &table, 0).unwrap();
     engine
-        .walk(&EngineCtx::new(odd, &table, 0), SharedPtr::NULL, 1, 4, &mut out)
+        .walk(&ctx, SharedPtr::NULL, 1, 4, &mut out)
         .unwrap();
     println!(
         "`{}` engine serves the non-pow2 layout the hardware refuses\n",

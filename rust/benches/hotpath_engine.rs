@@ -1,30 +1,74 @@
 //! Hot-path micro-bench: the `AddressEngine` backends head-to-head on
 //! the increment/translate contract — the operation count that bounds
 //! every host-side array init/validation and any future engine service.
-//! Emits a `BENCH_engine.json` trajectory point.
+//! Emits a `BENCH_engine.json` trajectory point with three sections:
 //!
-//! The xla-batch backend joins automatically when built with
+//! * `backends` — scalar translate/increment throughput per backend;
+//! * `walk` — the O(1) `WalkCursor` stepper vs the old per-step
+//!   divide/modulo walk;
+//! * `sharded` — `ShardedEngine` (software inner) vs single-threaded
+//!   `SoftwareEngine` on a large batch.
+//!
+//! `--quick` (the CI smoke leg) shrinks batch sizes and iteration
+//! counts.  The xla-batch backend joins automatically when built with
 //! `--features xla-unit` and artifacts are present.
 
-use pgas_hw::engine::{AddressEngine, BatchOut, EngineCtx, Pow2Engine, PtrBatch, SoftwareEngine};
-use pgas_hw::sptr::{ArrayLayout, BaseTable, SharedPtr};
+use pgas_hw::engine::{
+    AddressEngine, BatchOut, EngineCtx, Pow2Engine, PtrBatch, ShardedEngine,
+    SoftwareEngine,
+};
+use pgas_hw::sptr::{
+    increment_general, locality, ArrayLayout, BaseTable, SharedPtr,
+};
 use pgas_hw::util::bench::{bench, black_box};
 use pgas_hw::util::rng::Xoshiro256;
 
-fn main() {
-    let layout = ArrayLayout::new(64, 8, 16); // shared [64] double over 16 threads
-    let table = BaseTable::regular(16, 1 << 32, 1 << 32);
-    let ctx = EngineCtx::new(layout, &table, 0);
+/// The pre-stepper baseline: the complete divide/modulo Algorithm 1
+/// paid on every step (what `SoftwareEngine::walk` did before
+/// `WalkCursor`).  Kept here so the bench records the win per PR.
+fn divmod_walk(
+    ctx: &EngineCtx,
+    start: SharedPtr,
+    inc: u64,
+    steps: usize,
+    out: &mut BatchOut,
+) {
+    out.clear();
+    out.reserve(steps);
+    let mut p = start;
+    for _ in 0..steps {
+        out.push(
+            p,
+            p.translate(ctx.table()),
+            locality(p.thread, ctx.mythread(), ctx.topo()),
+        );
+        p = increment_general(&p, inc, ctx.layout());
+    }
+}
 
-    let n: usize = 1 << 16;
-    let mut rng = Xoshiro256::new(0xBE7C);
+fn random_batch(layout: &ArrayLayout, n: usize, seed: u64) -> PtrBatch {
+    let mut rng = Xoshiro256::new(seed);
     let mut batch = PtrBatch::with_capacity(n);
     for _ in 0..n {
         batch.push(
-            SharedPtr::for_index(&layout, 0, rng.below(1 << 20)),
+            SharedPtr::for_index(layout, 0, rng.below(1 << 20)),
             rng.below(1 << 12),
         );
     }
+    batch
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (warmup, iters) = if quick { (1, 3) } else { (2, 10) };
+
+    let layout = ArrayLayout::new(64, 8, 16); // shared [64] double over 16 threads
+    let table = BaseTable::regular(16, 1 << 32, 1 << 32);
+    let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+
+    // ---- scalar backends: translate / increment ----
+    let n: usize = if quick { 1 << 13 } else { 1 << 16 };
+    let batch = random_batch(&layout, n, 0xBE7C);
 
     let mut engines: Vec<&dyn AddressEngine> = vec![&SoftwareEngine, &Pow2Engine];
     #[cfg(feature = "xla-unit")]
@@ -45,8 +89,8 @@ fn main() {
         let mut out = BatchOut::new();
         let r = bench(
             &format!("engine::{} translate x{n}", engine.name()),
-            2,
-            10,
+            warmup,
+            iters,
             || {
                 engine.translate(&ctx, &batch, &mut out).unwrap();
                 black_box(&out);
@@ -58,8 +102,8 @@ fn main() {
         let mut incs = Vec::new();
         let r = bench(
             &format!("engine::{} increment x{n}", engine.name()),
-            2,
-            10,
+            warmup,
+            iters,
             || {
                 engine.increment(&ctx, &batch, &mut incs).unwrap();
                 black_box(&incs);
@@ -75,10 +119,81 @@ fn main() {
         ));
     }
 
+    // ---- walk: O(1) stepper vs per-step divide/modulo ----
+    let steps: usize = if quick { 1 << 13 } else { 1 << 16 };
+    let start = SharedPtr::for_index(&layout, 0, 17);
+    let inc = 3u64;
+    let mut out = BatchOut::new();
+    let r = bench(
+        &format!("walk(div/mod baseline) x{steps}"),
+        warmup,
+        iters,
+        || {
+            divmod_walk(&ctx, start, inc, steps, &mut out);
+            black_box(&out);
+        },
+    );
+    let divmod_msteps_s = steps as f64 / r.mean_secs() / 1e6;
+    let r = bench(
+        &format!("walk(WalkCursor stepper) x{steps}"),
+        warmup,
+        iters,
+        || {
+            SoftwareEngine.walk(&ctx, start, inc, steps, &mut out).unwrap();
+            black_box(&out);
+        },
+    );
+    let stepper_msteps_s = steps as f64 / r.mean_secs() / 1e6;
+    let walk_speedup = stepper_msteps_s / divmod_msteps_s;
+    println!(
+        "  -> walk: {divmod_msteps_s:.1} -> {stepper_msteps_s:.1} M step/s \
+         ({walk_speedup:.2}x stepper speedup)"
+    );
+
+    // ---- sharded pool vs single-threaded software on a large batch ----
+    let workers = std::thread::available_parallelism()
+        .map(|v| v.get())
+        .unwrap_or(1);
+    let big_n: usize = if quick { 1 << 15 } else { 1 << 18 };
+    let big = random_batch(&layout, big_n, 0x5AAD);
+    let sharded = ShardedEngine::new(SoftwareEngine, workers);
+    let r = bench(
+        &format!("engine::software translate x{big_n}"),
+        warmup,
+        iters,
+        || {
+            SoftwareEngine.translate(&ctx, &big, &mut out).unwrap();
+            black_box(&out);
+        },
+    );
+    let single_mptr_s = big_n as f64 / r.mean_secs() / 1e6;
+    let r = bench(
+        &format!("engine::sharded(software x{workers}) translate x{big_n}"),
+        warmup,
+        iters,
+        || {
+            sharded.translate(&ctx, &big, &mut out).unwrap();
+            black_box(&out);
+        },
+    );
+    let sharded_mptr_s = big_n as f64 / r.mean_secs() / 1e6;
+    let sharded_speedup = sharded_mptr_s / single_mptr_s;
+    println!(
+        "  -> sharded: {single_mptr_s:.1} -> {sharded_mptr_s:.1} M ptr/s \
+         ({sharded_speedup:.2}x over single-threaded software, {workers} workers)"
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"hotpath_engine\",\n  \"batch\": {n},\n  \
          \"layout\": {{\"blocksize\": 64, \"elemsize\": 8, \"numthreads\": 16}},\n  \
-         \"backends\": [\n{}\n  ]\n}}\n",
+         \"backends\": [\n{}\n  ],\n  \
+         \"walk\": {{\"steps\": {steps}, \"divmod_msteps_s\": {divmod_msteps_s:.2}, \
+         \"stepper_msteps_s\": {stepper_msteps_s:.2}, \
+         \"stepper_speedup\": {walk_speedup:.2}}},\n  \
+         \"sharded\": {{\"inner\": \"software\", \"workers\": {workers}, \
+         \"batch\": {big_n}, \"software_mptr_s\": {single_mptr_s:.2}, \
+         \"sharded_mptr_s\": {sharded_mptr_s:.2}, \
+         \"sharded_speedup\": {sharded_speedup:.2}}}\n}}\n",
         rows.join(",\n")
     );
     std::fs::write("BENCH_engine.json", &json).expect("write BENCH_engine.json");

@@ -199,9 +199,11 @@ pub fn figure_table(
 
 /// The runtime mirror of the compiler's Soft/Hw variant choice: which
 /// [`AddressEngine`](crate::engine::AddressEngine) backend the runtime's
-/// selector serves each shared array of a campaign's kernels with.
-/// Printed alongside sweeps so a figure's engine mix is archived with
-/// its numbers.
+/// selector serves each shared array of a campaign's kernels with,
+/// plus the selector's per-choice hit counters after driving the
+/// kernel's host-side setup traffic — so every sweep archives the
+/// backend mix that *actually* served it, not just the per-array
+/// policy.
 ///
 /// Builds each kernel once at the given scale — array layouts (and
 /// thus pow2-ness) are scale-dependent, so there is no cheaper source
@@ -209,7 +211,7 @@ pub fn figure_table(
 pub fn engine_report(kernels: &[Kernel], cores: u32, scale: &Scale) -> Table {
     let mut t = Table::new(
         "AddressEngine selection (runtime mirror of the compiler's Soft/Hw lowering)",
-        &["kernel", "array", "blocksize", "elemsize", "nelems", "pow2", "engine"],
+        &["kernel", "array", "blocksize", "elemsize", "nelems", "pow2", "engine", "hits"],
     );
     for &k in kernels {
         let threads = cores.min(k.max_cores());
@@ -225,7 +227,27 @@ pub fn engine_report(kernels: &[Kernel], cores: u32, scale: &Scale) -> Table {
                 a.nelems.to_string(),
                 pow2.into(),
                 choice.name().into(),
+                "-".into(),
             ]);
+        }
+        // Drive the kernel's host-side init through the selector and
+        // archive which backends served it (per-choice hit counters).
+        let mut mem = crate::mem::MemSystem::new(threads);
+        built.rt.engine().reset_hits();
+        (built.setup)(&built.rt, &mut mem);
+        for (choice, hits) in built.rt.engine().hit_counts() {
+            if hits > 0 {
+                t.row(&[
+                    k.name().into(),
+                    "(setup served by)".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    choice.name().into(),
+                    hits.to_string(),
+                ]);
+            }
         }
     }
     t
@@ -390,6 +412,11 @@ mod tests {
             rendered
                 .lines()
                 .any(|l| l.contains("cg_gsum") && l.contains("pow2")),
+            "{rendered}"
+        );
+        // the hit-counter rows archive the mix that served CG's setup
+        assert!(
+            rendered.lines().any(|l| l.contains("(setup served by)")),
             "{rendered}"
         );
     }

@@ -14,31 +14,70 @@
 //!   legal for every layout; the Berkeley-runtime software path.
 //! * [`Pow2Engine`] — the shift/mask fast path the hardware pipelines;
 //!   refuses layouts whose geometry is not all powers of two.
+//! * [`ShardedEngine`] — the throughput tier: wraps any inner backend
+//!   and partitions a [`PtrBatch`] (or a walk's step range) across a
+//!   persistent worker-thread pool, splicing shard results back in
+//!   order so outputs are bit-identical to the inner engine at any
+//!   shard count.
 //! * `XlaBatchEngine` (behind the `xla-unit` cargo feature) — the
 //!   PJRT/XLA batched unit, chunking arbitrary batch sizes through the
 //!   artifacts' fixed `UNIT_BATCH` shape.
-//! * [`EngineSelector`] — picks the fastest legal backend per
-//!   [`ArrayLayout`], the runtime mirror of the compiler's `Soft`/`Hw`
+//! * [`EngineSelector`] — picks the cheapest legal backend per
+//!   request, the runtime mirror of the compiler's `Soft`/`Hw`
 //!   lowering choice.
+//!
+//! ## Selection cost model
+//!
+//! The selector prices every legal backend for a `(layout, batch_len)`
+//! request and takes the argmin (see [`CostModel`]):
+//!
+//! * scalar paths cost `n · ns_per_ptr` — the pow2 shift/mask path is a
+//!   few ns per pointer, the software divide/modulo path several times
+//!   that (≈ [`SOFT_INC_OP_COUNT`](crate::sptr::SOFT_INC_OP_COUNT) ops);
+//! * the sharded pool costs a fixed dispatch fee (channel round-trips)
+//!   plus the scalar per-pointer cost divided by the worker count plus
+//!   a per-pointer copy overhead that does not parallelize — it only
+//!   wins once the batch amortizes the fee, gated by `shard_threshold`;
+//! * the XLA unit (when built and loaded) costs a PJRT dispatch fee
+//!   plus a tiny per-pointer cost, gated by `xla_threshold`;
+//! * walks are priced off the O(1) stepper (layout-independent), so a
+//!   walk only leaves the scalar path at much larger step counts than
+//!   a translate batch of the same size.
+//!
+//! Per-choice hit counters record which backend actually served each
+//! request; `coordinator::engine_report` archives that mix with every
+//! sweep.
+//!
+//! ## Walks are O(1) per step
+//!
+//! Both host backends serve [`AddressEngine::walk`] through
+//! [`WalkCursor`](crate::sptr::WalkCursor), which factors the stride
+//! through the layout once and advances with add-and-carry only — no
+//! per-step divide/modulo even on the software path.
 //!
 //! All backends must agree bit-for-bit on `(thread, phase, va, sysva,
 //! loc)` for every layout they support; `rust/tests/engine_conformance.rs`
-//! enforces this differentially.  Future backends (the Leon3 coprocessor
-//! model, sharded/remote engines) plug into the same trait.
+//! enforces this differentially (including shard-count invariance).
+//! Future backends (the Leon3 coprocessor model, process/remote shards)
+//! plug into the same trait.
 
 mod pow2;
 mod select;
+mod sharded;
 mod software;
 #[cfg(feature = "xla-unit")]
 mod xla_batch;
 
 pub use pow2::Pow2Engine;
-pub use select::{EngineChoice, EngineSelector};
+pub use select::{AutoEngine, CostModel, EngineChoice, EngineSelector};
+pub use sharded::ShardedEngine;
 pub use software::SoftwareEngine;
 #[cfg(feature = "xla-unit")]
 pub use xla_batch::XlaBatchEngine;
 
-use crate::sptr::{ArrayLayout, BaseTable, Locality, SharedPtr, Topology};
+use crate::sptr::{
+    locality, ArrayLayout, BaseTable, Locality, SharedPtr, Topology, WalkCursor,
+};
 
 /// Why an engine refused a request.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -51,6 +90,12 @@ pub enum EngineError {
     },
     /// `ptrs` and `incs` of a [`PtrBatch`] differ in length.
     LengthMismatch { ptrs: usize, incs: usize },
+    /// The base table covers fewer threads than the layout distributes
+    /// over — translation would index past the LUT.
+    TableTooSmall {
+        table_threads: u32,
+        layout_threads: u32,
+    },
     /// Backend-specific failure (artifact loading, PJRT execution, a
     /// value outside the artifact's lane width, ...).
     Backend(String),
@@ -68,6 +113,14 @@ impl std::fmt::Display for EngineError {
             EngineError::LengthMismatch { ptrs, incs } => {
                 write!(f, "batch has {ptrs} pointers but {incs} increments")
             }
+            EngineError::TableTooSmall {
+                table_threads,
+                layout_threads,
+            } => write!(
+                f,
+                "base table covers {table_threads} threads, layout needs \
+                 {layout_threads}"
+            ),
             EngineError::Backend(msg) => write!(f, "backend error: {msg}"),
         }
     }
@@ -79,30 +132,81 @@ impl std::error::Error for EngineError {}
 /// array's distribution geometry, the per-thread base LUT, and the
 /// executing thread + topology for locality classification.
 ///
-/// `table` must cover at least `layout.numthreads` threads.
+/// Construction is checked: `table` must cover at least
+/// `layout.numthreads` threads or [`EngineError::TableTooSmall`] is
+/// returned — an undersized LUT would otherwise translate wrongly (or
+/// panic) only at access time.  The Figure-3 log2 immediates are
+/// factored once here so the pow2 per-call paths never redo the
+/// power-of-two decomposition.  Fields are read-only outside the
+/// engine module (accessors below): mutating `layout` or `table` after
+/// construction would desync the cached immediates and bypass the
+/// coverage check.
 #[derive(Clone, Copy, Debug)]
 pub struct EngineCtx<'a> {
-    pub layout: ArrayLayout,
-    pub table: &'a BaseTable,
+    layout: ArrayLayout,
+    table: &'a BaseTable,
     /// The executing thread (`MYTHREAD`) locality is classified against.
-    pub mythread: u32,
-    pub topo: Topology,
+    mythread: u32,
+    topo: Topology,
+    /// Cached `layout.log2s()` (None for non-pow2 geometry).
+    log2s: Option<(u32, u32, u32)>,
 }
 
 impl<'a> EngineCtx<'a> {
-    pub fn new(layout: ArrayLayout, table: &'a BaseTable, mythread: u32) -> Self {
-        debug_assert!(
-            table.numthreads() >= layout.numthreads,
-            "base table covers {} threads, layout needs {}",
-            table.numthreads(),
-            layout.numthreads
-        );
-        Self { layout, table, mythread, topo: Topology::default() }
+    pub fn new(
+        layout: ArrayLayout,
+        table: &'a BaseTable,
+        mythread: u32,
+    ) -> Result<Self, EngineError> {
+        if table.numthreads() < layout.numthreads {
+            return Err(EngineError::TableTooSmall {
+                table_threads: table.numthreads(),
+                layout_threads: layout.numthreads,
+            });
+        }
+        Ok(Self {
+            layout,
+            table,
+            mythread,
+            topo: Topology::default(),
+            log2s: layout.log2s(),
+        })
     }
 
     pub fn with_topology(mut self, topo: Topology) -> Self {
         self.topo = topo;
         self
+    }
+
+    /// The Figure-3 log2 immediates, precomputed at construction
+    /// (None when the layout is not all powers of two).
+    #[inline]
+    pub fn log2s(&self) -> Option<(u32, u32, u32)> {
+        self.log2s
+    }
+
+    /// The array's distribution geometry.
+    #[inline]
+    pub fn layout(&self) -> &ArrayLayout {
+        &self.layout
+    }
+
+    /// The per-thread base LUT.
+    #[inline]
+    pub fn table(&self) -> &'a BaseTable {
+        self.table
+    }
+
+    /// The executing thread (`MYTHREAD`).
+    #[inline]
+    pub fn mythread(&self) -> u32 {
+        self.mythread
+    }
+
+    /// Machine topology for locality classification.
+    #[inline]
+    pub fn topo(&self) -> &Topology {
+        &self.topo
     }
 }
 
@@ -189,12 +293,46 @@ impl BatchOut {
         self.loc.push(loc);
     }
 
+    /// Move all of `other`'s results onto the end of `self` (shard
+    /// splicing: results re-assemble in shard order, keeping outputs
+    /// bit-identical to an unsharded run).
+    pub fn append(&mut self, other: &mut BatchOut) {
+        self.ptrs.append(&mut other.ptrs);
+        self.sysva.append(&mut other.sysva);
+        self.loc.append(&mut other.loc);
+    }
+
     pub fn len(&self) -> usize {
         self.ptrs.len()
     }
 
     pub fn is_empty(&self) -> bool {
         self.ptrs.is_empty()
+    }
+}
+
+/// Shared walk loop: factor the stride once into a
+/// [`WalkCursor`], then emit `steps` (pointer, sysva, locality)
+/// triples with O(1) add-and-carry stepping.  Both host backends'
+/// `walk` paths route here; they differ only in their support gate.
+pub(crate) fn cursor_walk(
+    ctx: &EngineCtx,
+    start: SharedPtr,
+    inc: u64,
+    steps: usize,
+    out: &mut BatchOut,
+) {
+    out.clear();
+    out.reserve(steps);
+    let mut cur = WalkCursor::new(start, inc, &ctx.layout);
+    for _ in 0..steps {
+        let p = cur.current();
+        out.push(
+            p,
+            p.translate(ctx.table),
+            locality(p.thread, ctx.mythread, &ctx.topo),
+        );
+        cur.advance();
     }
 }
 
@@ -283,6 +421,22 @@ mod tests {
             b.check(),
             Err(EngineError::LengthMismatch { ptrs: 0, incs: 1 })
         );
+    }
+
+    #[test]
+    fn ctx_rejects_undersized_tables_and_caches_log2s() {
+        let small = BaseTable::regular(2, 1 << 32, 1 << 32);
+        let err =
+            EngineCtx::new(ArrayLayout::new(4, 4, 4), &small, 0).unwrap_err();
+        assert!(matches!(
+            err,
+            EngineError::TableTooSmall { table_threads: 2, layout_threads: 4 }
+        ));
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(ArrayLayout::new(4, 8, 4), &table, 0).unwrap();
+        assert_eq!(ctx.log2s(), Some((2, 3, 2)));
+        let odd = EngineCtx::new(ArrayLayout::new(3, 8, 4), &table, 0).unwrap();
+        assert_eq!(odd.log2s(), None);
     }
 
     #[test]

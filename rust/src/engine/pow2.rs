@@ -12,11 +12,13 @@ use crate::sptr::{increment_pow2, locality, ArrayLayout, Locality, SharedPtr};
 pub struct Pow2Engine;
 
 impl Pow2Engine {
-    /// The Figure-3 log2 immediates, or `UnsupportedLayout`.
-    fn log2s(layout: &ArrayLayout) -> Result<(u32, u32, u32), EngineError> {
-        layout.log2s().ok_or(EngineError::UnsupportedLayout {
+    /// The Figure-3 log2 immediates — precomputed once per
+    /// [`EngineCtx`] at construction, so the per-call paths only read
+    /// the cache (or refuse with `UnsupportedLayout`).
+    fn log2s(ctx: &EngineCtx) -> Result<(u32, u32, u32), EngineError> {
+        ctx.log2s().ok_or(EngineError::UnsupportedLayout {
             engine: "pow2",
-            layout: *layout,
+            layout: ctx.layout,
         })
     }
 }
@@ -36,7 +38,7 @@ impl AddressEngine for Pow2Engine {
         batch: &PtrBatch,
         out: &mut BatchOut,
     ) -> Result<(), EngineError> {
-        let (l2bs, l2es, l2nt) = Self::log2s(&ctx.layout)?;
+        let (l2bs, l2es, l2nt) = Self::log2s(ctx)?;
         batch.check()?;
         out.clear();
         out.reserve(batch.len());
@@ -54,7 +56,7 @@ impl AddressEngine for Pow2Engine {
         batch: &PtrBatch,
         out: &mut Vec<SharedPtr>,
     ) -> Result<(), EngineError> {
-        let (l2bs, l2es, l2nt) = Self::log2s(&ctx.layout)?;
+        let (l2bs, l2es, l2nt) = Self::log2s(ctx)?;
         batch.check()?;
         out.clear();
         out.reserve(batch.len());
@@ -64,6 +66,9 @@ impl AddressEngine for Pow2Engine {
         Ok(())
     }
 
+    /// Walks are O(1) per step via [`crate::sptr::WalkCursor`]; the
+    /// log2 gate only decides whether this backend may serve the
+    /// layout at all.
     fn walk(
         &self,
         ctx: &EngineCtx,
@@ -72,15 +77,8 @@ impl AddressEngine for Pow2Engine {
         steps: usize,
         out: &mut BatchOut,
     ) -> Result<(), EngineError> {
-        let (l2bs, l2es, l2nt) = Self::log2s(&ctx.layout)?;
-        out.clear();
-        out.reserve(steps);
-        let mut p = start;
-        for _ in 0..steps {
-            let sysva = p.translate(ctx.table);
-            out.push(p, sysva, locality(p.thread, ctx.mythread, &ctx.topo));
-            p = increment_pow2(&p, inc, l2bs, l2es, l2nt);
-        }
+        Self::log2s(ctx)?;
+        super::cursor_walk(ctx, start, inc, steps, out);
         Ok(())
     }
 
@@ -90,7 +88,7 @@ impl AddressEngine for Pow2Engine {
         ptr: SharedPtr,
         inc: u64,
     ) -> Result<(SharedPtr, u64, Locality), EngineError> {
-        let (l2bs, l2es, l2nt) = Self::log2s(&ctx.layout)?;
+        let (l2bs, l2es, l2nt) = Self::log2s(ctx)?;
         let q = increment_pow2(&ptr, inc, l2bs, l2es, l2nt);
         let sysva = q.translate(ctx.table);
         Ok((q, sysva, locality(q.thread, ctx.mythread, &ctx.topo)))
@@ -106,7 +104,7 @@ mod tests {
     fn refuses_nonpow2_layouts() {
         let layout = ArrayLayout::new(3, 8, 4);
         let table = BaseTable::regular(4, 1 << 32, 1 << 32);
-        let ctx = EngineCtx::new(layout, &table, 0);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
         let e = Pow2Engine;
         assert!(!e.supports(&layout));
         let mut out = BatchOut::new();
@@ -119,7 +117,7 @@ mod tests {
         use super::super::SoftwareEngine;
         let layout = ArrayLayout::new(8, 4, 4);
         let table = BaseTable::regular(4, 1 << 32, 1 << 32);
-        let ctx = EngineCtx::new(layout, &table, 1);
+        let ctx = EngineCtx::new(layout, &table, 1).unwrap();
         let mut batch = PtrBatch::new();
         for i in 0..64 {
             batch.push(SharedPtr::for_index(&layout, 0, i * 3), i);

@@ -1,43 +1,261 @@
-//! Layout-driven backend selection — the runtime mirror of the
-//! compiler's `Soft`/`Hw` lowering choice.
+//! Cost-based backend selection — the runtime mirror of the
+//! compiler's `Soft`/`Hw` lowering choice, extended from a fixed
+//! priority list to a priced argmin over the available backends.
 //!
-//! The policy is the paper's: the shift/mask hardware path whenever the
-//! geometry allows it, software Algorithm 1 otherwise.  When the XLA
-//! batch unit is compiled in (`--features xla-unit`) and loaded, batches
-//! big enough to amortize the PJRT dispatch go to it instead.
+//! For every `(layout, batch_len)` request the selector prices each
+//! legal backend with a [`CostModel`] and serves the cheapest:
+//!
+//! * scalar paths cost `n · ns_per_ptr` (shift/mask `pow2` when the
+//!   geometry allows it, software Algorithm 1 otherwise);
+//! * the sharded worker pool costs a fixed scatter/gather fee plus the
+//!   scalar per-pointer cost divided by the worker count, and is only
+//!   eligible once `batch_len` reaches `shard_threshold`;
+//! * the XLA batch unit (built with `--features xla-unit` and loaded)
+//!   costs a PJRT dispatch fee plus a small per-pointer cost, eligible
+//!   from `xla_threshold`;
+//! * walks are priced separately off the O(1)
+//!   [`WalkCursor`](crate::sptr::WalkCursor) stepper cost — a walk's
+//!   scalar path is cheap regardless of layout, so walks shard only at
+//!   much larger step counts than translates.
+//!
+//! The pool's parallelism is capped by what a batch can actually keep
+//! busy (`n / min_shard_len` shards), and per-choice hit counters
+//! record which backend actually served each passthrough request;
+//! `coordinator::engine_report` archives that mix alongside every
+//! sweep.
 
-use super::{AddressEngine, BatchOut, EngineCtx, EngineError, Pow2Engine, PtrBatch, SoftwareEngine};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use super::{
+    AddressEngine, BatchOut, EngineCtx, EngineError, Pow2Engine, PtrBatch,
+    ShardedEngine, SoftwareEngine,
+};
 use crate::sptr::{ArrayLayout, Locality, SharedPtr};
 
-/// Which backend the selector picked (stable, reportable).
+/// Which backend the selector picked (stable, reportable).  The
+/// declaration order is the hit-counter index (`ALL` and the
+/// discriminant derive from it).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum EngineChoice {
     Software,
     Pow2,
+    Sharded,
     XlaBatch,
 }
 
 impl EngineChoice {
+    pub const ALL: [EngineChoice; 4] = [
+        EngineChoice::Software,
+        EngineChoice::Pow2,
+        EngineChoice::Sharded,
+        EngineChoice::XlaBatch,
+    ];
+
     pub fn name(&self) -> &'static str {
         match self {
             EngineChoice::Software => "software",
             EngineChoice::Pow2 => "pow2",
+            EngineChoice::Sharded => "sharded",
             EngineChoice::XlaBatch => "xla-batch",
+        }
+    }
+
+    fn index(&self) -> usize {
+        *self as usize
+    }
+}
+
+/// The selector's scalar policy packaged as an engine: the pow2
+/// shift/mask path whenever the layout allows it (read off the
+/// [`EngineCtx`]'s cached log2 immediates), software Algorithm 1
+/// otherwise.  Serves as the inner engine of the selector's sharded
+/// pool so every worker applies the same per-layout choice.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AutoEngine;
+
+impl AutoEngine {
+    /// The one pow2-else-software dispatch, shared by every method.
+    fn pick(ctx: &EngineCtx) -> &'static dyn AddressEngine {
+        if ctx.log2s().is_some() {
+            &Pow2Engine
+        } else {
+            &SoftwareEngine
         }
     }
 }
 
-/// Owns one instance of every available backend and picks the fastest
-/// legal one per request.  This is the seam future backends (the Leon3
-/// coprocessor model, sharded/remote engines) plug into.
+impl AddressEngine for AutoEngine {
+    fn name(&self) -> &'static str {
+        "auto"
+    }
+
+    fn supports(&self, _layout: &ArrayLayout) -> bool {
+        true
+    }
+
+    fn translate(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        Self::pick(ctx).translate(ctx, batch, out)
+    }
+
+    fn increment(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut Vec<SharedPtr>,
+    ) -> Result<(), EngineError> {
+        Self::pick(ctx).increment(ctx, batch, out)
+    }
+
+    fn walk(
+        &self,
+        ctx: &EngineCtx,
+        start: SharedPtr,
+        inc: u64,
+        steps: usize,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        Self::pick(ctx).walk(ctx, start, inc, steps, out)
+    }
+
+    fn translate_one(
+        &self,
+        ctx: &EngineCtx,
+        ptr: SharedPtr,
+        inc: u64,
+    ) -> Result<(SharedPtr, u64, Locality), EngineError> {
+        Self::pick(ctx).translate_one(ctx, ptr, inc)
+    }
+}
+
+/// Tunable per-pointer / per-dispatch cost constants, in nanoseconds.
+///
+/// The absolute values only need to be right relative to each other —
+/// the selector takes an argmin, so what matters is where the curves
+/// cross: a fixed dispatch fee (channel scatter/gather, PJRT
+/// round-trip) amortized against a per-pointer saving.  Defaults come
+/// from the `hotpath_engine` micro-bench on a commodity host.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// ns per pointer on the software divide/modulo path
+    /// (≈ [`SOFT_INC_OP_COUNT`](crate::sptr::SOFT_INC_OP_COUNT) ops).
+    pub software_ns_per_ptr: f64,
+    /// ns per pointer on the pow2 shift/mask path.
+    pub pow2_ns_per_ptr: f64,
+    /// ns per step of a constant-stride walk — the
+    /// [`WalkCursor`](crate::sptr::WalkCursor) stepper, whose cost is
+    /// layout-independent (add-and-carry, no div/mod).
+    pub walk_ns_per_step: f64,
+    /// Fixed fee to scatter a batch over the shard pool and splice the
+    /// results (channel round-trips).
+    pub shard_dispatch_ns: f64,
+    /// Per-pointer sharding overhead that does **not** parallelize:
+    /// copying shard inputs out and splicing outputs back.
+    pub shard_copy_ns_per_ptr: f64,
+    /// ns per pointer inside the XLA batch unit.
+    pub xla_ns_per_ptr: f64,
+    /// Fixed PJRT dispatch fee.
+    pub xla_dispatch_ns: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            software_ns_per_ptr: 12.0,
+            pow2_ns_per_ptr: 3.0,
+            walk_ns_per_step: 3.0,
+            shard_dispatch_ns: 40_000.0,
+            shard_copy_ns_per_ptr: 1.5,
+            xla_ns_per_ptr: 0.8,
+            xla_dispatch_ns: 60_000.0,
+        }
+    }
+}
+
+impl CostModel {
+    fn scalar_ns_per_ptr(&self, layout: &ArrayLayout) -> f64 {
+        if layout.hw_supported() {
+            self.pow2_ns_per_ptr
+        } else {
+            self.software_ns_per_ptr
+        }
+    }
+
+    /// Core shape shared by batch and walk estimates: scalar work per
+    /// item vs a fixed fee plus divided-down work plus splice copies.
+    fn estimate_with(
+        &self,
+        choice: EngineChoice,
+        scalar_ns: f64,
+        n: usize,
+        shard_workers: usize,
+    ) -> f64 {
+        let n = n as f64;
+        match choice {
+            EngineChoice::Software | EngineChoice::Pow2 => n * scalar_ns,
+            EngineChoice::Sharded => {
+                self.shard_dispatch_ns
+                    + n * (scalar_ns / shard_workers.max(1) as f64
+                        + self.shard_copy_ns_per_ptr)
+            }
+            EngineChoice::XlaBatch => {
+                self.xla_dispatch_ns + n * self.xla_ns_per_ptr
+            }
+        }
+    }
+
+    /// Estimated cost (ns) of serving `n` batched requests of `layout`
+    /// with `choice`, given `shard_workers` effective pool workers.
+    pub fn estimate(
+        &self,
+        choice: EngineChoice,
+        layout: &ArrayLayout,
+        n: usize,
+        shard_workers: usize,
+    ) -> f64 {
+        self.estimate_with(choice, self.scalar_ns_per_ptr(layout), n, shard_workers)
+    }
+
+    /// Estimated cost (ns) of an `n`-step constant-stride walk — priced
+    /// off the O(1) stepper, not the batch translate path, so mid-size
+    /// walks are not misrouted to the pool.
+    pub fn estimate_walk(
+        &self,
+        choice: EngineChoice,
+        n: usize,
+        shard_workers: usize,
+    ) -> f64 {
+        self.estimate_with(choice, self.walk_ns_per_step, n, shard_workers)
+    }
+}
+
+/// Owns one instance of every available backend and serves each request
+/// with the cheapest legal one under its [`CostModel`].  This is the
+/// seam future backends (the Leon3 coprocessor model, process/remote
+/// shards) plug into.
 pub struct EngineSelector {
     software: SoftwareEngine,
     pow2: Pow2Engine,
+    /// Shard pool, spawned lazily on the first request the cost model
+    /// routes to it (a selector that never sees a big batch never
+    /// spawns a thread).
+    sharded: OnceLock<ShardedEngine<AutoEngine>>,
+    shard_workers: usize,
+    shard_threshold: usize,
     #[cfg(feature = "xla-unit")]
     xla: Option<super::XlaBatchEngine>,
     /// Minimum batch size worth a PJRT round-trip.
     #[cfg_attr(not(feature = "xla-unit"), allow(dead_code))]
     xla_threshold: usize,
+    cost: CostModel,
+    /// Requests served per [`EngineChoice`] (indexed by
+    /// `EngineChoice::index`).
+    hits: [AtomicU64; 4],
 }
 
 impl EngineSelector {
@@ -45,18 +263,60 @@ impl EngineSelector {
     /// PJRT costs tens of microseconds; small batches stay scalar).
     pub const DEFAULT_XLA_THRESHOLD: usize = 1024;
 
+    /// Minimum batch size eligible for the shard pool.  The cost model
+    /// still has to pick it; this floor keeps small-batch selection
+    /// deterministic and free of pool bookkeeping.
+    pub const DEFAULT_SHARD_THRESHOLD: usize = 8192;
+
+    /// Cap on the default worker-pool size (campaigns run many
+    /// selector-owning runtimes concurrently).
+    const MAX_DEFAULT_WORKERS: usize = 8;
+
     pub fn new() -> Self {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(Self::MAX_DEFAULT_WORKERS);
         Self {
             software: SoftwareEngine,
             pow2: Pow2Engine,
+            sharded: OnceLock::new(),
+            shard_workers: workers,
+            shard_threshold: Self::DEFAULT_SHARD_THRESHOLD,
             #[cfg(feature = "xla-unit")]
             xla: None,
             xla_threshold: Self::DEFAULT_XLA_THRESHOLD,
+            cost: CostModel::default(),
+            hits: [
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+                AtomicU64::new(0),
+            ],
         }
     }
 
-    /// Install the XLA batch backend (takes priority for large pow2
-    /// batches).
+    /// Size of the shard pool (call before the pool's first use; a
+    /// single worker disables sharding entirely).
+    pub fn with_shard_workers(mut self, n: usize) -> Self {
+        self.shard_workers = n.max(1);
+        self
+    }
+
+    /// Route batches of at least `n` pointers through the shard-pool
+    /// leg of the cost model.
+    pub fn with_shard_threshold(mut self, n: usize) -> Self {
+        self.shard_threshold = n.max(1);
+        self
+    }
+
+    /// Replace the cost constants (e.g. from a calibration run).
+    pub fn with_cost_model(mut self, cost: CostModel) -> Self {
+        self.cost = cost;
+        self
+    }
+
+    /// Install the XLA batch backend.
     #[cfg(feature = "xla-unit")]
     pub fn with_xla(mut self, engine: super::XlaBatchEngine) -> Self {
         self.xla = Some(engine);
@@ -75,26 +335,77 @@ impl EngineSelector {
         self.xla.is_some()
     }
 
-    /// The backend the selector would use for `layout` at `batch_len`.
-    pub fn choice(&self, layout: &ArrayLayout, batch_len: usize) -> EngineChoice {
-        let _ = batch_len; // consulted only when the xla-unit backend is built in
-        if !layout.hw_supported() {
-            return EngineChoice::Software;
+    /// The cost constants currently in force.
+    pub fn cost_model(&self) -> &CostModel {
+        &self.cost
+    }
+
+    /// How many pool workers a request of `n` items can actually keep
+    /// busy (the pool only fans out to `n / min_shard_len` shards).
+    fn effective_workers(&self, n: usize) -> usize {
+        (n / ShardedEngine::<AutoEngine>::DEFAULT_MIN_SHARD_LEN)
+            .clamp(1, self.shard_workers)
+    }
+
+    /// Allocation-free argmin over the legal backends for one request.
+    /// `walk` prices steps off the O(1) stepper instead of the batch
+    /// translate path.
+    fn argmin(&self, layout: &ArrayLayout, n: usize, walk: bool) -> EngineChoice {
+        let workers = self.effective_workers(n);
+        let price = |choice: EngineChoice| {
+            if walk {
+                self.cost.estimate_walk(choice, n, workers)
+            } else {
+                self.cost.estimate(choice, layout, n, workers)
+            }
+        };
+        let scalar = if layout.hw_supported() {
+            EngineChoice::Pow2
+        } else {
+            EngineChoice::Software
+        };
+        let mut best = (scalar, price(scalar));
+        if self.shard_workers > 1 && n >= self.shard_threshold {
+            let ns = price(EngineChoice::Sharded);
+            if ns < best.1 {
+                best = (EngineChoice::Sharded, ns);
+            }
         }
         #[cfg(feature = "xla-unit")]
         if let Some(x) = &self.xla {
-            if batch_len >= self.xla_threshold && x.supports(layout) {
-                return EngineChoice::XlaBatch;
+            if n >= self.xla_threshold && x.supports(layout) {
+                let ns = price(EngineChoice::XlaBatch);
+                if ns < best.1 {
+                    best = (EngineChoice::XlaBatch, ns);
+                }
             }
         }
-        EngineChoice::Pow2
+        best.0
     }
 
-    /// Pick the fastest legal backend for `layout` at `batch_len`.
-    pub fn select(&self, layout: &ArrayLayout, batch_len: usize) -> &dyn AddressEngine {
-        match self.choice(layout, batch_len) {
+    /// The backend the cost model picks for `layout` at `batch_len`.
+    pub fn choice(&self, layout: &ArrayLayout, batch_len: usize) -> EngineChoice {
+        self.argmin(layout, batch_len, false)
+    }
+
+    /// The backend the cost model picks for a `steps`-long walk of
+    /// `layout` (walks step O(1) via the cursor, so they shard — or go
+    /// to the XLA unit — only at much larger sizes than translates).
+    pub fn choice_walk(&self, layout: &ArrayLayout, steps: usize) -> EngineChoice {
+        self.argmin(layout, steps, true)
+    }
+
+    /// The shard pool, spawned on first use.
+    fn sharded_pool(&self) -> &ShardedEngine<AutoEngine> {
+        self.sharded
+            .get_or_init(|| ShardedEngine::new(AutoEngine, self.shard_workers))
+    }
+
+    fn engine_for(&self, choice: EngineChoice) -> &dyn AddressEngine {
+        match choice {
             EngineChoice::Software => &self.software,
             EngineChoice::Pow2 => &self.pow2,
+            EngineChoice::Sharded => self.sharded_pool(),
             #[cfg(feature = "xla-unit")]
             EngineChoice::XlaBatch => {
                 self.xla.as_ref().expect("choice() returned XlaBatch without a unit")
@@ -104,7 +415,31 @@ impl EngineSelector {
         }
     }
 
-    // ---- convenience passthroughs (select per call) ----
+    /// Pick the cheapest legal backend for `layout` at `batch_len`.
+    pub fn select(&self, layout: &ArrayLayout, batch_len: usize) -> &dyn AddressEngine {
+        self.engine_for(self.choice(layout, batch_len))
+    }
+
+    fn record(&self, choice: EngineChoice) {
+        self.hits[choice.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Requests served per backend through the selector's passthroughs
+    /// since construction (or the last [`reset_hits`](Self::reset_hits))
+    /// — the actual backend mix, archived by
+    /// `coordinator::engine_report`.
+    pub fn hit_counts(&self) -> [(EngineChoice, u64); 4] {
+        EngineChoice::ALL
+            .map(|c| (c, self.hits[c.index()].load(Ordering::Relaxed)))
+    }
+
+    pub fn reset_hits(&self) {
+        for h in &self.hits {
+            h.store(0, Ordering::Relaxed);
+        }
+    }
+
+    // ---- convenience passthroughs (select + count per call) ----
 
     pub fn translate(
         &self,
@@ -112,7 +447,9 @@ impl EngineSelector {
         batch: &PtrBatch,
         out: &mut BatchOut,
     ) -> Result<(), EngineError> {
-        self.select(&ctx.layout, batch.len()).translate(ctx, batch, out)
+        let choice = self.choice(&ctx.layout, batch.len());
+        self.record(choice);
+        self.engine_for(choice).translate(ctx, batch, out)
     }
 
     pub fn increment(
@@ -121,7 +458,9 @@ impl EngineSelector {
         batch: &PtrBatch,
         out: &mut Vec<SharedPtr>,
     ) -> Result<(), EngineError> {
-        self.select(&ctx.layout, batch.len()).increment(ctx, batch, out)
+        let choice = self.choice(&ctx.layout, batch.len());
+        self.record(choice);
+        self.engine_for(choice).increment(ctx, batch, out)
     }
 
     pub fn walk(
@@ -132,7 +471,9 @@ impl EngineSelector {
         steps: usize,
         out: &mut BatchOut,
     ) -> Result<(), EngineError> {
-        self.select(&ctx.layout, steps).walk(ctx, start, inc, steps, out)
+        let choice = self.choice_walk(&ctx.layout, steps);
+        self.record(choice);
+        self.engine_for(choice).walk(ctx, start, inc, steps, out)
     }
 
     pub fn translate_one(
@@ -141,7 +482,9 @@ impl EngineSelector {
         ptr: SharedPtr,
         inc: u64,
     ) -> Result<(SharedPtr, u64, Locality), EngineError> {
-        self.select(&ctx.layout, 1).translate_one(ctx, ptr, inc)
+        let choice = self.choice(&ctx.layout, 1);
+        self.record(choice);
+        self.engine_for(choice).translate_one(ctx, ptr, inc)
     }
 }
 
@@ -158,8 +501,9 @@ mod tests {
 
     #[test]
     fn selection_mirrors_the_compiler_variant_choice() {
-        let sel = EngineSelector::new();
-        // pow2 geometry -> hardware fast path (any batch size)
+        // A single-worker selector degenerates to the paper's fixed
+        // policy: hardware fast path when pow2, software otherwise.
+        let sel = EngineSelector::new().with_shard_workers(1);
         assert_eq!(sel.choice(&ArrayLayout::new(4, 4, 4), 1), EngineChoice::Pow2);
         assert_eq!(
             sel.choice(&ArrayLayout::new(64, 8, 16), 1 << 20),
@@ -175,11 +519,68 @@ mod tests {
     }
 
     #[test]
+    fn cost_model_routes_big_batches_to_the_shard_pool() {
+        let sel = EngineSelector::new().with_shard_workers(4);
+        let pow2 = ArrayLayout::new(64, 8, 16);
+        let soft = ArrayLayout::new(1, 56016, 8);
+        // tiny batches stay scalar regardless of layout
+        assert_eq!(sel.choice(&pow2, 16), EngineChoice::Pow2);
+        assert_eq!(sel.choice(&soft, 16), EngineChoice::Software);
+        // huge batches amortize the scatter/gather fee
+        assert_eq!(sel.choice(&pow2, 1 << 20), EngineChoice::Sharded);
+        assert_eq!(sel.choice(&soft, 1 << 20), EngineChoice::Sharded);
+        // just past the threshold the fee still dominates the cheap
+        // pow2 path but not the expensive software path
+        let n = EngineSelector::DEFAULT_SHARD_THRESHOLD;
+        assert_eq!(sel.choice(&pow2, n), EngineChoice::Pow2);
+        assert_eq!(sel.choice(&soft, n), EngineChoice::Sharded);
+    }
+
+    #[test]
+    fn walks_are_priced_off_the_stepper() {
+        let sel = EngineSelector::new().with_shard_workers(8);
+        let soft = ArrayLayout::new(1, 56016, 8);
+        // a translate batch of this size shards (12 ns/ptr scalar)...
+        assert_eq!(sel.choice(&soft, 16384), EngineChoice::Sharded);
+        // ...but a walk of the same length is O(1)/step inline and
+        // stays on the scalar stepper
+        assert_eq!(sel.choice_walk(&soft, 16384), EngineChoice::Software);
+        // truly huge walks still amortize the pool fee
+        assert_eq!(sel.choice_walk(&soft, 1 << 20), EngineChoice::Sharded);
+    }
+
+    #[test]
+    fn sharded_passthrough_is_bit_identical_and_counted() {
+        let sel = EngineSelector::new()
+            .with_shard_workers(3)
+            .with_shard_threshold(64);
+        let layout = ArrayLayout::new(1, 56016, 8); // software inner
+        let table = BaseTable::regular(8, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 2).unwrap();
+        // 16384 × 12ns software vs 40µs + 16384 × 12ns / 3 workers:
+        // the pool wins the argmin.
+        let mut batch = PtrBatch::new();
+        for i in 0..16384u64 {
+            batch.push(SharedPtr::for_index(&layout, 0, i * 7), i % 97);
+        }
+        assert_eq!(sel.choice(&layout, batch.len()), EngineChoice::Sharded);
+        let (mut via_sel, mut direct) = (BatchOut::new(), BatchOut::new());
+        sel.translate(&ctx, &batch, &mut via_sel).unwrap();
+        SoftwareEngine.translate(&ctx, &batch, &mut direct).unwrap();
+        assert_eq!(via_sel, direct);
+        let hits = sel.hit_counts();
+        assert_eq!(hits[EngineChoice::Sharded.index()].1, 1);
+        assert_eq!(hits[EngineChoice::Software.index()].1, 0);
+        sel.reset_hits();
+        assert!(sel.hit_counts().iter().all(|&(_, n)| n == 0));
+    }
+
+    #[test]
     fn passthroughs_dispatch_to_the_selected_backend() {
         let sel = EngineSelector::new();
         let layout = ArrayLayout::new(4, 8, 4);
         let table = BaseTable::regular(4, 1 << 32, 1 << 32);
-        let ctx = EngineCtx::new(layout, &table, 0);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
         let mut out = BatchOut::new();
         sel.walk(&ctx, SharedPtr::NULL, 1, 12, &mut out).unwrap();
         assert_eq!(out.len(), 12);
@@ -189,5 +590,24 @@ mod tests {
         let (q, sysva, _) = sel.translate_one(&ctx, SharedPtr::NULL, 5).unwrap();
         assert_eq!(q, SharedPtr::for_index(&layout, 0, 5));
         assert_eq!(sysva, table.base(q.thread) + q.va);
+        // both requests were recorded against the pow2 scalar path
+        let hits = sel.hit_counts();
+        assert_eq!(hits[EngineChoice::Pow2.index()].1, 2);
+    }
+
+    #[test]
+    fn auto_engine_matches_both_scalar_backends() {
+        let table = BaseTable::regular(8, 1 << 32, 1 << 32);
+        for layout in [ArrayLayout::new(4, 8, 8), ArrayLayout::new(3, 112, 5)] {
+            let ctx = EngineCtx::new(layout, &table, 1).unwrap();
+            let mut batch = PtrBatch::new();
+            for i in 0..64 {
+                batch.push(SharedPtr::for_index(&layout, 0, i * 3), i);
+            }
+            let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
+            AutoEngine.translate(&ctx, &batch, &mut a).unwrap();
+            SoftwareEngine.translate(&ctx, &batch, &mut b).unwrap();
+            assert_eq!(a, b, "layout={layout:?}");
+        }
     }
 }

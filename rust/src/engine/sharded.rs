@@ -1,0 +1,451 @@
+//! The throughput tier: a backend that partitions work across a
+//! persistent pool of worker threads, each running a clone of the same
+//! inner [`AddressEngine`].
+//!
+//! A request batch is split into contiguous shards, scattered over the
+//! pool, and the shard results are spliced back **in shard order**, so
+//! the output is bit-identical to what the inner engine would produce
+//! single-threaded — at any shard count.  That shard-count invariance
+//! is a conformance property (`rust/tests/engine_conformance.rs` checks
+//! 1/2/4/7 shards differentially against the inner engine, including
+//! CG's non-pow2 112-byte-element layout).
+//!
+//! Walks shard over the *step range*: shard `i` starts `lo_i` strides
+//! past the walk origin, computed with one `increment_general` — exact
+//! by the increment composition law (`inc(a)∘inc(b) = inc(a+b)`) — and
+//! then walks its chunk with the inner engine's O(1) stepper.
+//!
+//! The pool is created once and reused for the engine's lifetime
+//! (`std::thread` + mpsc channels); dropping the engine closes the
+//! channels and joins the workers.  Batches below
+//! `min_shard_len` per shard are served inline by the inner engine —
+//! the channel round-trip only pays for itself on large requests,
+//! which is also what the selector's cost model encodes.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use super::{AddressEngine, BatchOut, EngineCtx, EngineError, PtrBatch};
+use crate::sptr::{
+    increment_general, ArrayLayout, BaseTable, Locality, SharedPtr, Topology,
+};
+
+/// Owned snapshot of an [`EngineCtx`] that can cross a channel (the
+/// borrowed base table becomes a shared `Arc` clone).
+#[derive(Clone)]
+struct OwnedCtx {
+    layout: ArrayLayout,
+    table: Arc<BaseTable>,
+    mythread: u32,
+    topo: Topology,
+}
+
+impl OwnedCtx {
+    fn snapshot(ctx: &EngineCtx) -> Self {
+        Self {
+            layout: ctx.layout,
+            table: Arc::new(ctx.table.clone()),
+            mythread: ctx.mythread,
+            topo: ctx.topo,
+        }
+    }
+}
+
+/// One shard's worth of work.
+enum Task {
+    /// `translate` (fused) when true, `increment` (pointers only)
+    /// otherwise.
+    Map {
+        ptrs: Vec<SharedPtr>,
+        incs: Vec<u64>,
+        translate: bool,
+    },
+    Walk {
+        start: SharedPtr,
+        inc: u64,
+        steps: usize,
+    },
+}
+
+enum ShardOut {
+    Batch(BatchOut),
+    Ptrs(Vec<SharedPtr>),
+}
+
+struct Job {
+    shard: usize,
+    ctx: OwnedCtx,
+    task: Task,
+    reply: Sender<(usize, Result<ShardOut, EngineError>)>,
+}
+
+fn run_task<E: AddressEngine>(
+    inner: &E,
+    ctx: &OwnedCtx,
+    task: Task,
+) -> Result<ShardOut, EngineError> {
+    let ectx = EngineCtx::new(ctx.layout, ctx.table.as_ref(), ctx.mythread)?
+        .with_topology(ctx.topo);
+    match task {
+        Task::Map { ptrs, incs, translate } => {
+            let batch = PtrBatch { ptrs, incs };
+            if translate {
+                let mut out = BatchOut::new();
+                inner.translate(&ectx, &batch, &mut out)?;
+                Ok(ShardOut::Batch(out))
+            } else {
+                let mut out = Vec::new();
+                inner.increment(&ectx, &batch, &mut out)?;
+                Ok(ShardOut::Ptrs(out))
+            }
+        }
+        Task::Walk { start, inc, steps } => {
+            let mut out = BatchOut::new();
+            inner.walk(&ectx, start, inc, steps, &mut out)?;
+            Ok(ShardOut::Batch(out))
+        }
+    }
+}
+
+/// Shard-parallel wrapper around any inner [`AddressEngine`].
+pub struct ShardedEngine<E: AddressEngine + Send + Sync + 'static> {
+    inner: Arc<E>,
+    senders: Vec<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    min_shard_len: usize,
+}
+
+impl<E: AddressEngine + Send + Sync + 'static> ShardedEngine<E> {
+    /// Below this many requests per shard the channel round-trip costs
+    /// more than it saves; such batches run inline on the inner engine.
+    pub const DEFAULT_MIN_SHARD_LEN: usize = 2048;
+
+    /// Spawn a persistent pool of `shards` workers (clamped to ≥ 1),
+    /// each serving requests with a shared handle to `inner`.
+    pub fn new(inner: E, shards: usize) -> Self {
+        let shards = shards.max(1);
+        let inner = Arc::new(inner);
+        let mut senders = Vec::with_capacity(shards);
+        let mut handles = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            let (tx, rx) = channel::<Job>();
+            let worker_inner = Arc::clone(&inner);
+            handles.push(std::thread::spawn(move || {
+                for job in rx.iter() {
+                    let Job { shard, ctx, task, reply } = job;
+                    let res = run_task(worker_inner.as_ref(), &ctx, task);
+                    // A dropped receiver means the caller already gave
+                    // up on this request (another shard errored).
+                    let _ = reply.send((shard, res));
+                }
+            }));
+            senders.push(tx);
+        }
+        Self {
+            inner,
+            senders,
+            handles,
+            min_shard_len: Self::DEFAULT_MIN_SHARD_LEN,
+        }
+    }
+
+    /// Override the inline-serve threshold (conformance tests set 1 to
+    /// force real fan-out on small batches).
+    pub fn with_min_shard_len(mut self, n: usize) -> Self {
+        self.min_shard_len = n.max(1);
+        self
+    }
+
+    /// Worker-pool size.
+    pub fn shards(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// The wrapped engine.
+    pub fn inner(&self) -> &E {
+        self.inner.as_ref()
+    }
+
+    /// How many shards a request of `n` items fans out to.
+    fn fanout(&self, n: usize) -> usize {
+        (n / self.min_shard_len).clamp(1, self.senders.len())
+    }
+
+    /// Gather `k` shard replies back into shard order.
+    fn collect(
+        rx: Receiver<(usize, Result<ShardOut, EngineError>)>,
+        k: usize,
+    ) -> Result<Vec<ShardOut>, EngineError> {
+        let mut parts: Vec<Option<ShardOut>> = (0..k).map(|_| None).collect();
+        for _ in 0..k {
+            let (i, res) = rx.recv().map_err(|_| {
+                EngineError::Backend("sharded: worker pool shut down".into())
+            })?;
+            parts[i] = Some(res?);
+        }
+        Ok(parts
+            .into_iter()
+            .map(|p| p.expect("every shard replied exactly once"))
+            .collect())
+    }
+
+    /// Scatter a map-style batch over `k` shards and gather in order.
+    fn map_sharded(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        k: usize,
+        translate: bool,
+    ) -> Result<Vec<ShardOut>, EngineError> {
+        let owned = OwnedCtx::snapshot(ctx);
+        let (reply_tx, reply_rx) = channel();
+        let chunk = batch.len().div_ceil(k);
+        for i in 0..k {
+            // Both bounds clamp: ceil-sized chunks can exhaust the
+            // batch before the last shard (e.g. 5 items over 4 shards),
+            // leaving trailing shards a legal empty range.
+            let lo = (i * chunk).min(batch.len());
+            let hi = ((i + 1) * chunk).min(batch.len());
+            let job = Job {
+                shard: i,
+                ctx: owned.clone(),
+                task: Task::Map {
+                    ptrs: batch.ptrs[lo..hi].to_vec(),
+                    incs: batch.incs[lo..hi].to_vec(),
+                    translate,
+                },
+                reply: reply_tx.clone(),
+            };
+            self.senders[i].send(job).map_err(|_| {
+                EngineError::Backend("sharded: worker pool shut down".into())
+            })?;
+        }
+        drop(reply_tx);
+        Self::collect(reply_rx, k)
+    }
+}
+
+impl<E: AddressEngine + Send + Sync + 'static> AddressEngine
+    for ShardedEngine<E>
+{
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn supports(&self, layout: &ArrayLayout) -> bool {
+        self.inner.supports(layout)
+    }
+
+    fn translate(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        batch.check()?;
+        let k = self.fanout(batch.len());
+        if k == 1 {
+            return self.inner.translate(ctx, batch, out);
+        }
+        let parts = self.map_sharded(ctx, batch, k, true)?;
+        out.clear();
+        out.reserve(batch.len());
+        for part in parts {
+            if let ShardOut::Batch(mut b) = part {
+                out.append(&mut b);
+            }
+        }
+        Ok(())
+    }
+
+    fn increment(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut Vec<SharedPtr>,
+    ) -> Result<(), EngineError> {
+        batch.check()?;
+        let k = self.fanout(batch.len());
+        if k == 1 {
+            return self.inner.increment(ctx, batch, out);
+        }
+        let parts = self.map_sharded(ctx, batch, k, false)?;
+        out.clear();
+        out.reserve(batch.len());
+        for part in parts {
+            if let ShardOut::Ptrs(mut v) = part {
+                out.append(&mut v);
+            }
+        }
+        Ok(())
+    }
+
+    fn walk(
+        &self,
+        ctx: &EngineCtx,
+        start: SharedPtr,
+        inc: u64,
+        steps: usize,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        let k = self.fanout(steps);
+        // One overflow test decides the inline fallback before any job
+        // is dispatched (shard offsets never exceed inc*steps).
+        if k == 1 || inc.checked_mul(steps as u64).is_none() {
+            return self.inner.walk(ctx, start, inc, steps, out);
+        }
+        let chunk = steps.div_ceil(k);
+        let owned = OwnedCtx::snapshot(ctx);
+        let (reply_tx, reply_rx) = channel();
+        for i in 0..k {
+            // Clamp both bounds (see map_sharded): a trailing shard may
+            // get an empty step range, which walks to an empty output.
+            let lo = (i * chunk).min(steps);
+            let hi = ((i + 1) * chunk).min(steps);
+            // Shard i's origin is `lo` strides past `start`; one
+            // general increment by lo*inc lands on the identical
+            // pointer by the composition law.
+            let shard_start =
+                increment_general(&start, inc * lo as u64, &ctx.layout);
+            let job = Job {
+                shard: i,
+                ctx: owned.clone(),
+                task: Task::Walk { start: shard_start, inc, steps: hi - lo },
+                reply: reply_tx.clone(),
+            };
+            self.senders[i].send(job).map_err(|_| {
+                EngineError::Backend("sharded: worker pool shut down".into())
+            })?;
+        }
+        drop(reply_tx);
+        let parts = Self::collect(reply_rx, k)?;
+        out.clear();
+        out.reserve(steps);
+        for part in parts {
+            if let ShardOut::Batch(mut b) = part {
+                out.append(&mut b);
+            }
+        }
+        Ok(())
+    }
+
+    fn translate_one(
+        &self,
+        ctx: &EngineCtx,
+        ptr: SharedPtr,
+        inc: u64,
+    ) -> Result<(SharedPtr, u64, Locality), EngineError> {
+        // Scalar requests are never worth a channel round-trip.
+        self.inner.translate_one(ctx, ptr, inc)
+    }
+}
+
+impl<E: AddressEngine + Send + Sync + 'static> Drop for ShardedEngine<E> {
+    fn drop(&mut self) {
+        // Closing the job channels ends every worker's `rx.iter()`.
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Pow2Engine, SoftwareEngine};
+    use super::*;
+
+    #[test]
+    fn pool_is_reused_across_requests_and_matches_inner() {
+        let sharded = ShardedEngine::new(SoftwareEngine, 3).with_min_shard_len(1);
+        let layout = ArrayLayout::new(3, 24, 5);
+        let table = BaseTable::regular(5, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 2).unwrap();
+        for round in 0..4u64 {
+            let mut batch = PtrBatch::new();
+            for i in 0..97 {
+                batch.push(
+                    SharedPtr::for_index(&layout, 0, i * 5 + round),
+                    i + round,
+                );
+            }
+            let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
+            sharded.translate(&ctx, &batch, &mut a).unwrap();
+            SoftwareEngine.translate(&ctx, &batch, &mut b).unwrap();
+            assert_eq!(a, b, "round {round}");
+        }
+    }
+
+    #[test]
+    fn small_batches_run_inline() {
+        let sharded = ShardedEngine::new(SoftwareEngine, 4);
+        assert_eq!(sharded.fanout(1), 1);
+        assert_eq!(sharded.fanout(ShardedEngine::<SoftwareEngine>::DEFAULT_MIN_SHARD_LEN - 1), 1);
+        assert_eq!(sharded.fanout(usize::MAX), 4);
+        let layout = ArrayLayout::new(4, 4, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let (q, sysva, _) =
+            sharded.translate_one(&ctx, SharedPtr::NULL, 9).unwrap();
+        assert_eq!(q, SharedPtr::for_index(&layout, 0, 9));
+        assert_eq!(sysva, table.base(q.thread) + q.va);
+    }
+
+    #[test]
+    fn inner_errors_propagate_through_the_pool() {
+        let sharded = ShardedEngine::new(Pow2Engine, 2).with_min_shard_len(1);
+        let layout = ArrayLayout::new(3, 8, 4); // non-pow2: inner refuses
+        assert!(!sharded.supports(&layout));
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        for i in 0..8 {
+            batch.push(SharedPtr::for_index(&layout, 0, i), 1);
+        }
+        let mut out = BatchOut::new();
+        let err = sharded.translate(&ctx, &batch, &mut out).unwrap_err();
+        assert!(matches!(
+            err,
+            EngineError::UnsupportedLayout { engine: "pow2", .. }
+        ));
+    }
+
+    #[test]
+    fn ragged_tails_clamp_to_empty_shards() {
+        // 5 items over 4 ceil-sized chunks exhaust the batch at shard
+        // 2; shard 3's range must clamp to empty, not slice [6..5].
+        let sharded = ShardedEngine::new(SoftwareEngine, 4).with_min_shard_len(1);
+        let layout = ArrayLayout::new(3, 8, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        for n in [1usize, 5, 8, 9, 11] {
+            let mut batch = PtrBatch::new();
+            for i in 0..n as u64 {
+                batch.push(SharedPtr::for_index(&layout, 0, i), 2);
+            }
+            let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
+            sharded.translate(&ctx, &batch, &mut a).unwrap();
+            SoftwareEngine.translate(&ctx, &batch, &mut b).unwrap();
+            assert_eq!(a, b, "translate n={n}");
+            sharded.walk(&ctx, SharedPtr::NULL, 3, n, &mut a).unwrap();
+            SoftwareEngine.walk(&ctx, SharedPtr::NULL, 3, n, &mut b).unwrap();
+            assert_eq!(a, b, "walk n={n}");
+        }
+    }
+
+    #[test]
+    fn sharded_walk_matches_inner_walk() {
+        let sharded = ShardedEngine::new(Pow2Engine, 4).with_min_shard_len(1);
+        let layout = ArrayLayout::new(8, 4, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 1).unwrap();
+        let start = SharedPtr::for_index(&layout, 0, 11);
+        let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
+        sharded.walk(&ctx, start, 5, 333, &mut a).unwrap();
+        Pow2Engine.walk(&ctx, start, 5, 333, &mut b).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 333);
+        assert_eq!(a.ptrs[0], start);
+    }
+}

@@ -63,6 +63,9 @@ impl AddressEngine for SoftwareEngine {
         Ok(())
     }
 
+    /// Walks are O(1) per step: the stride is factored through the
+    /// layout once ([`crate::sptr::WalkCursor`]) instead of paying the
+    /// full divide/modulo Algorithm 1 on every step.
     fn walk(
         &self,
         ctx: &EngineCtx,
@@ -71,14 +74,7 @@ impl AddressEngine for SoftwareEngine {
         steps: usize,
         out: &mut BatchOut,
     ) -> Result<(), EngineError> {
-        out.clear();
-        out.reserve(steps);
-        let mut p = start;
-        for _ in 0..steps {
-            let sysva = p.translate(ctx.table);
-            out.push(p, sysva, locality(p.thread, ctx.mythread, &ctx.topo));
-            p = increment_general(&p, inc, &ctx.layout);
-        }
+        super::cursor_walk(ctx, start, inc, steps, out);
         Ok(())
     }
 
@@ -102,7 +98,7 @@ mod tests {
         // CG-style non-pow2 geometry: only this backend is legal.
         let layout = ArrayLayout::new(3, 24, 5);
         let table = BaseTable::regular(5, 1 << 32, 1 << 32);
-        let ctx = EngineCtx::new(layout, &table, 2);
+        let ctx = EngineCtx::new(layout, &table, 2).unwrap();
         let e = SoftwareEngine;
         assert!(e.supports(&layout));
         let mut out = BatchOut::new();
@@ -118,7 +114,7 @@ mod tests {
     fn translate_one_agrees_with_batched_translate() {
         let layout = ArrayLayout::new(4, 4, 4);
         let table = BaseTable::regular(4, 1 << 32, 1 << 32);
-        let ctx = EngineCtx::new(layout, &table, 0);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
         let e = SoftwareEngine;
         let p = SharedPtr::for_index(&layout, 0, 7);
         let mut batch = PtrBatch::new();

@@ -44,7 +44,7 @@ impl XlaBatchEngine {
             engine: self.name(),
             layout: ctx.layout,
         };
-        let Some((l2bs, l2es, l2nt)) = ctx.layout.log2s() else {
+        let Some((l2bs, l2es, l2nt)) = ctx.log2s() else {
             return Err(unsupported);
         };
         if ctx.layout.numthreads as usize > MAX_THREADS {

@@ -17,14 +17,18 @@
 //! the program changing.  This crate makes that literal: the [`engine`]
 //! module defines the [`AddressEngine`] trait with a batched
 //! request/response API (`translate`, `increment`, `walk` over a
-//! reusable [`PtrBatch`]), three first-class backends
+//! reusable [`PtrBatch`]), four first-class backends
 //! (`SoftwareEngine` for any layout, `Pow2Engine` for the shift/mask
-//! hardware datapath, `XlaBatchEngine` for the PJRT batch unit behind
-//! the `xla-unit` feature), and an [`EngineSelector`] that picks the
-//! fastest legal backend per [`ArrayLayout`] — the runtime mirror of
-//! the compiler's `Soft`/`Hw` lowering choice.  Every host-side
-//! consumer (the UPC runtime, NPB workload init/validation, the
-//! campaign coordinator, the CLI) goes through it.
+//! hardware datapath, `ShardedEngine` partitioning batches over a
+//! persistent worker-thread pool, `XlaBatchEngine` for the PJRT batch
+//! unit behind the `xla-unit` feature), and an [`EngineSelector`] that
+//! prices every legal backend per `(layout, batch size)` request and
+//! serves the cheapest — the runtime mirror of the compiler's
+//! `Soft`/`Hw` lowering choice, with per-choice hit counters so sweeps
+//! archive the mix that actually served them.  Walks advance O(1) per
+//! step via `sptr::WalkCursor` (add-and-carry, no per-step div/mod).
+//! Every host-side consumer (the UPC runtime, NPB workload
+//! init/validation, the campaign coordinator, the CLI) goes through it.
 //!
 //! ```no_run
 //! use pgas_hw::engine::{AddressEngine, BatchOut, EngineCtx, EngineSelector};
@@ -35,9 +39,10 @@
 //! let table = BaseTable::regular(4, 1 << 32, 1 << 32);
 //! let sel = EngineSelector::new();
 //! let engine = sel.select(&layout, 32); // pow2 geometry -> "pow2"
+//! let ctx = EngineCtx::new(layout, &table, 0).unwrap();
 //! let mut out = BatchOut::new();
 //! engine
-//!     .walk(&EngineCtx::new(layout, &table, 0), SharedPtr::NULL, 1, 32, &mut out)
+//!     .walk(&ctx, SharedPtr::NULL, 1, 32, &mut out)
 //!     .unwrap();
 //! assert_eq!(out.ptrs[5].thread, 1); // elements 4..7 live on thread 1
 //! ```

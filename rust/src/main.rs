@@ -22,7 +22,7 @@ use pgas_hw::coordinator::{self, Campaign};
 use pgas_hw::cpu::CpuModel;
 use pgas_hw::engine::{
     AddressEngine, BatchOut, EngineCtx, EngineSelector, Pow2Engine, PtrBatch,
-    SoftwareEngine,
+    ShardedEngine, SoftwareEngine,
 };
 use pgas_hw::npb::{self, Kernel, PaperVariant, Scale};
 use pgas_hw::sptr::{ArrayLayout, BaseTable, SharedPtr};
@@ -320,9 +320,10 @@ fn artifacts_dir(flags: &HashMap<String, String>) -> String {
 }
 
 /// Differential conformance of the AddressEngine backends on randomized
-/// pow2 layouts: software (general Algorithm 1) vs pow2 (shift/mask),
-/// and — when compiled with `xla-unit` and artifacts are present — the
-/// XLA batch unit as well.  All must agree bit-for-bit.
+/// pow2 layouts: software (general Algorithm 1) vs pow2 (shift/mask) vs
+/// the sharded worker pool, and — when compiled with `xla-unit` and
+/// artifacts are present — the XLA batch unit as well.  All must agree
+/// bit-for-bit.
 fn cmd_verify(flags: &HashMap<String, String>) -> Result<(), String> {
     let batches: u32 = flags
         .get("batches")
@@ -330,6 +331,7 @@ fn cmd_verify(flags: &HashMap<String, String>) -> Result<(), String> {
         .unwrap_or(Ok(8))?;
     let software = SoftwareEngine;
     let pow2 = Pow2Engine;
+    let sharded = ShardedEngine::new(SoftwareEngine, 4).with_min_shard_len(1);
     #[cfg(feature = "xla-unit")]
     let xla = match pgas_hw::engine::XlaBatchEngine::load(artifacts_dir(flags)) {
         Ok(x) => {
@@ -349,7 +351,8 @@ fn cmd_verify(flags: &HashMap<String, String>) -> Result<(), String> {
         let t = 1u32 << l2nt;
         let table = BaseTable::regular(t, 1 << 32, 1 << 32);
         let layout = ArrayLayout::new(1 << l2bs, 1 << l2es, t);
-        let ctx = EngineCtx::new(layout, &table, rng.below(t as u64) as u32);
+        let ctx = EngineCtx::new(layout, &table, rng.below(t as u64) as u32)
+            .map_err(|e| e.to_string())?;
         let n = 1 + rng.below(8192) as usize;
         let mut req = PtrBatch::with_capacity(n);
         for _ in 0..n {
@@ -367,15 +370,21 @@ fn cmd_verify(flags: &HashMap<String, String>) -> Result<(), String> {
         if got != want {
             return Err(format!("batch {batch}: pow2 engine != software engine"));
         }
+        sharded.translate(&ctx, &req, &mut got).map_err(|e| e.to_string())?;
+        if got != want {
+            return Err(format!(
+                "batch {batch}: sharded engine != software engine"
+            ));
+        }
         #[cfg_attr(not(feature = "xla-unit"), allow(unused_mut))]
-        let mut engines = "software == pow2";
+        let mut engines = "software == pow2 == sharded";
         #[cfg(feature = "xla-unit")]
         if let Some(x) = &xla {
             x.translate(&ctx, &req, &mut got).map_err(|e| e.to_string())?;
             if got != want {
                 return Err(format!("batch {batch}: xla-batch engine != software engine"));
             }
-            engines = "software == pow2 == xla-batch";
+            engines = "software == pow2 == sharded == xla-batch";
         }
         println!(
             "batch {batch}: {n} pointers OK, {engines} (T={t}, bs=2^{l2bs}, es=2^{l2es})"
@@ -396,16 +405,16 @@ fn cmd_walk(flags: &HashMap<String, String>) -> Result<(), String> {
     let layout = ArrayLayout::new(bs, es, t);
     let table = BaseTable::regular(t, 1 << 32, 1 << 32);
     let sel = EngineSelector::new();
-    let engine = sel.select(&layout, STEPS);
-    let ctx = EngineCtx::new(layout, &table, 0);
+    // walks get walk pricing (the O(1) stepper), not translate pricing
+    let choice = sel.choice_walk(&layout, STEPS);
+    let ctx = EngineCtx::new(layout, &table, 0).map_err(|e| e.to_string())?;
     let mut out = BatchOut::new();
-    engine
-        .walk(&ctx, SharedPtr::NULL, inc, STEPS, &mut out)
+    sel.walk(&ctx, SharedPtr::NULL, inc, STEPS, &mut out)
         .map_err(|e| e.to_string())?;
     println!(
         "walking shared [{bs}] (elem {es}B) over {t} threads, inc {inc} \
          — first {STEPS} steps (`{}` engine):",
-        engine.name()
+        choice.name()
     );
     for i in 0..out.len() {
         println!(

@@ -1,0 +1,190 @@
+//! O(1) stepper for constant-stride shared-pointer walks.
+//!
+//! [`increment_general`](super::increment_general) pays two divisions
+//! and two modulos per step.  For a *walk* — the same `inc` applied
+//! repeatedly — all of that division structure depends only on the
+//! stride and the layout, never on the current pointer: per step the
+//! phase either carries into the next block or it does not, and the
+//! thread either wraps past `THREADS` or it does not.  [`WalkCursor`]
+//! does the div/mod factorization once at construction and advances
+//! with adds, compares and subtracts only — the host-side mirror of the
+//! paper's claim that hardware support makes shared-address
+//! incrementation effectively free on the hot path.
+//!
+//! Derivation.  Write `inc = inc_blocks·blocksize + dphase`.  Algorithm
+//! 1 then reduces, per step, to two carry bits:
+//!
+//! * `p` — phase carry: `phase + dphase >= blocksize`;
+//! * `w` — thread wrap: `thread + (inc_blocks + p) % THREADS >= THREADS`.
+//!
+//! The new thread is `thread + dthread[p] (mod THREADS)` and the va
+//! moves by a constant `dva[p][w]` precomputed for the four `(p, w)`
+//! combinations (it can be negative: stepping onto the next thread's
+//! block start rewinds the local offset).  Both engines' `walk` paths
+//! use this cursor; `rust/tests/engine_conformance.rs` checks it
+//! differentially against `increment_general` over random strides.
+
+use super::{ArrayLayout, SharedPtr};
+
+/// Constant-stride walk state: the current pointer plus the
+/// precomputed per-step deltas for the four (phase-carry, thread-wrap)
+/// cases.
+#[derive(Clone, Debug)]
+pub struct WalkCursor {
+    cur: SharedPtr,
+    blocksize: u64,
+    numthreads: u32,
+    /// `inc % blocksize` — the per-step phase advance.
+    dphase: u64,
+    /// `(inc / blocksize + p) % numthreads` for phase carry `p`.
+    dthread: [u32; 2],
+    /// va delta for (phase carry `p`, thread wrap `w`).
+    dva: [[i64; 2]; 2],
+}
+
+impl WalkCursor {
+    /// Factor the stride through `layout` once; `start` is step 0.
+    ///
+    /// `start` must be well-formed for `layout` (`phase < blocksize`,
+    /// `thread < numthreads`, as every pointer built by
+    /// [`SharedPtr::for_index`] or Algorithm 1 is) — the single
+    /// add-and-carry per step relies on it.
+    pub fn new(start: SharedPtr, inc: u64, layout: &ArrayLayout) -> Self {
+        debug_assert!(
+            start.phase < layout.blocksize
+                && start.thread < layout.numthreads,
+            "malformed start pointer {start:?} for {layout:?}"
+        );
+        let bs = layout.blocksize;
+        let nt = layout.numthreads as u64;
+        let dphase = inc % bs;
+        let inc_blocks = inc / bs;
+        let mut dthread = [0u32; 2];
+        let mut dva = [[0i64; 2]; 2];
+        for p in 0..2u64 {
+            let thinc = inc_blocks + p;
+            let q = thinc / nt;
+            dthread[p as usize] = (thinc % nt) as u32;
+            for w in 0..2u64 {
+                let blockinc = q + w;
+                let eaddrinc = dphase as i64 - (p * bs) as i64
+                    + (blockinc * bs) as i64;
+                dva[p as usize][w as usize] =
+                    eaddrinc * layout.elemsize as i64;
+            }
+        }
+        Self {
+            cur: start,
+            blocksize: bs,
+            numthreads: layout.numthreads,
+            dphase,
+            dthread,
+            dva,
+        }
+    }
+
+    /// The pointer at the current step.
+    #[inline]
+    pub fn current(&self) -> SharedPtr {
+        self.cur
+    }
+
+    /// Advance one stride: adds, compares and subtracts — no div/mod.
+    #[inline]
+    pub fn advance(&mut self) {
+        let mut phase = self.cur.phase + self.dphase;
+        let p = usize::from(phase >= self.blocksize);
+        if p == 1 {
+            phase -= self.blocksize;
+        }
+        let mut thread = self.cur.thread + self.dthread[p];
+        let w = usize::from(thread >= self.numthreads);
+        if w == 1 {
+            thread -= self.numthreads;
+        }
+        self.cur = SharedPtr {
+            thread,
+            phase,
+            va: (self.cur.va as i64 + self.dva[p][w]) as u64,
+        };
+    }
+
+    /// Advance and return the new pointer (convenience for loops that
+    /// want post-increment semantics).
+    #[inline]
+    pub fn step(&mut self) -> SharedPtr {
+        self.advance();
+        self.cur
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sptr::increment_general;
+    use crate::util::testkit::check_default;
+
+    #[test]
+    fn cursor_matches_general_increment_step_by_step() {
+        check_default("WalkCursor == increment_general", |rng| {
+            let layout = ArrayLayout::new(
+                rng.below(64) + 1,
+                rng.below(200) + 1,
+                rng.below(64) as u32 + 1,
+            );
+            let start =
+                SharedPtr::for_index(&layout, 0, rng.below(1 << 16));
+            let inc = rng.below(1 << 13);
+            let mut cur = WalkCursor::new(start, inc, &layout);
+            let mut want = start;
+            for step in 0..48 {
+                assert_eq!(
+                    cur.current(),
+                    want,
+                    "layout={layout:?} inc={inc} step={step}"
+                );
+                cur.advance();
+                want = increment_general(&want, inc, &layout);
+            }
+        });
+    }
+
+    #[test]
+    fn zero_stride_is_a_fixed_point() {
+        let layout = ArrayLayout::new(4, 8, 4);
+        let start = SharedPtr::for_index(&layout, 64, 9);
+        let mut cur = WalkCursor::new(start, 0, &layout);
+        for _ in 0..8 {
+            cur.advance();
+            assert_eq!(cur.current(), start);
+        }
+    }
+
+    #[test]
+    fn unit_stride_walks_the_figure2_array() {
+        // shared [4] int A[..] over 4 threads (paper Fig. 2).
+        let layout = ArrayLayout::new(4, 4, 4);
+        let mut cur =
+            WalkCursor::new(SharedPtr::for_index(&layout, 0, 0), 1, &layout);
+        for i in 0..64u64 {
+            assert_eq!(cur.current(), SharedPtr::for_index(&layout, 0, i));
+            cur.advance();
+        }
+    }
+
+    #[test]
+    fn stride_larger_than_a_full_round() {
+        // inc spans several blocks *and* wraps the thread ring per step.
+        let layout = ArrayLayout::new(3, 24, 5);
+        let inc: u64 = 3 * 5 * 2 + 7; // two full rounds + 7
+        let mut cur =
+            WalkCursor::new(SharedPtr::for_index(&layout, 0, 2), inc, &layout);
+        for i in 0..32u64 {
+            assert_eq!(
+                cur.current(),
+                SharedPtr::for_index(&layout, 0, 2 + i * inc)
+            );
+            cur.advance();
+        }
+    }
+}

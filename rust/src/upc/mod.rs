@@ -152,9 +152,13 @@ impl UpcRuntime {
     // picks for the array's layout — the same contract the simulated
     // hardware implements — never by ad-hoc pointer arithmetic.
 
-    /// Engine context for one array's accesses.
+    /// Engine context for one array's accesses.  The checked
+    /// constructor cannot fail here: the memory system's base table is
+    /// sized to the runtime's thread count, which every array layout
+    /// inherits.
     fn ctx<'a>(&self, mem: &'a MemSystem, id: ArrayId) -> EngineCtx<'a> {
         EngineCtx::new(self.array(id).layout, &mem.base_table, 0)
+            .expect("runtime base table covers all threads")
     }
 
     /// sysva of element `idx` of `id`.

@@ -12,11 +12,11 @@
 
 use pgas_hw::engine::{
     AddressEngine, BatchOut, EngineCtx, EngineChoice, EngineSelector, Pow2Engine,
-    PtrBatch, SoftwareEngine,
+    PtrBatch, ShardedEngine, SoftwareEngine,
 };
 use pgas_hw::sptr::{
-    pack, unpack, ArrayLayout, BaseTable, SharedPtr, Topology, PHASE_BITS,
-    THREAD_BITS, VA_BITS,
+    increment_general, pack, unpack, ArrayLayout, BaseTable, SharedPtr,
+    Topology, WalkCursor, PHASE_BITS, THREAD_BITS, VA_BITS,
 };
 use pgas_hw::util::rng::Xoshiro256;
 use pgas_hw::util::testkit::{check, check_default};
@@ -47,6 +47,7 @@ fn software_and_pow2_translate_identically_on_pow2_layouts() {
     check("engine conformance: translate", 64, |rng| {
         let (layout, table, mythread, batch) = random_pow2_case(rng);
         let ctx = EngineCtx::new(layout, &table, mythread)
+            .unwrap()
             .with_topology(Topology { log2_threads_per_mc: 1, log2_threads_per_node: 3 });
         let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
         SoftwareEngine.translate(&ctx, &batch, &mut a).unwrap();
@@ -59,7 +60,7 @@ fn software_and_pow2_translate_identically_on_pow2_layouts() {
 fn software_and_pow2_increment_identically_on_pow2_layouts() {
     check("engine conformance: increment", 64, |rng| {
         let (layout, table, mythread, batch) = random_pow2_case(rng);
-        let ctx = EngineCtx::new(layout, &table, mythread);
+        let ctx = EngineCtx::new(layout, &table, mythread).unwrap();
         let (mut a, mut b) = (Vec::new(), Vec::new());
         SoftwareEngine.increment(&ctx, &batch, &mut a).unwrap();
         Pow2Engine.increment(&ctx, &batch, &mut b).unwrap();
@@ -76,7 +77,7 @@ fn software_and_pow2_increment_identically_on_pow2_layouts() {
 fn software_and_pow2_walk_identically_on_pow2_layouts() {
     check("engine conformance: walk", 48, |rng| {
         let (layout, table, mythread, _) = random_pow2_case(rng);
-        let ctx = EngineCtx::new(layout, &table, mythread);
+        let ctx = EngineCtx::new(layout, &table, mythread).unwrap();
         let start = SharedPtr::for_index(&layout, 0, rng.below(1 << 12));
         let inc = 1 + rng.below(64);
         let steps = 1 + rng.below(256) as usize;
@@ -96,7 +97,7 @@ fn selector_output_equals_direct_backend_output() {
     for _ in 0..16 {
         let (layout, table, mythread, batch) = random_pow2_case(&mut rng);
         assert_eq!(sel.choice(&layout, batch.len()), EngineChoice::Pow2);
-        let ctx = EngineCtx::new(layout, &table, mythread);
+        let ctx = EngineCtx::new(layout, &table, mythread).unwrap();
         let (mut via_sel, mut direct) = (BatchOut::new(), BatchOut::new());
         sel.translate(&ctx, &batch, &mut via_sel).unwrap();
         SoftwareEngine.translate(&ctx, &batch, &mut direct).unwrap();
@@ -106,11 +107,16 @@ fn selector_output_equals_direct_backend_output() {
 
 #[test]
 fn nonpow2_layouts_fall_back_to_software_only() {
-    let sel = EngineSelector::new();
+    // A single-worker selector has no shard pool: the cost model
+    // degenerates to the paper's fixed pow2-else-software policy.
+    let sel = EngineSelector::new().with_shard_workers(1);
     let layout = ArrayLayout::new(3, 56016, 5); // CG's w/w_tmp shape
     assert_eq!(sel.choice(&layout, 1 << 20), EngineChoice::Software);
+    // with workers available, the same huge batch goes to the pool
+    let pooled = EngineSelector::new().with_shard_workers(4);
+    assert_eq!(pooled.choice(&layout, 1 << 20), EngineChoice::Sharded);
     let table = BaseTable::regular(5, 1 << 32, 1 << 32);
-    let ctx = EngineCtx::new(layout, &table, 0);
+    let ctx = EngineCtx::new(layout, &table, 0).unwrap();
     let mut batch = PtrBatch::new();
     batch.push(SharedPtr::for_index(&layout, 0, 7), 11);
     let mut out = BatchOut::new();
@@ -119,6 +125,123 @@ fn nonpow2_layouts_fall_back_to_software_only() {
     assert_eq!(out.ptrs[0], SharedPtr::for_index(&layout, 0, 18));
     // ...while the pow2 backend refuses rather than answering wrongly
     assert!(Pow2Engine.translate(&ctx, &batch, &mut out).is_err());
+}
+
+// ---- the sharded engine joins the same differential suite ----
+
+/// A random layout from a pool that mixes pow2 geometry with the
+/// NPB kernels' awkward element sizes (CG's 112-byte rows, the
+/// 56016-byte w_tmp struct).
+fn random_any_layout(rng: &mut Xoshiro256) -> ArrayLayout {
+    let elemsize: u64 = [1, 2, 4, 8, 24, 112, 56016][rng.below(7) as usize];
+    ArrayLayout::new(
+        rng.below(64) + 1,
+        elemsize,
+        rng.below(63) as u32 + 1,
+    )
+}
+
+#[test]
+fn sharded_matches_inner_over_all_layouts() {
+    // min_shard_len 1 forces real fan-out + splice even on small
+    // batches; the pool persists across all property cases.
+    let sharded = ShardedEngine::new(SoftwareEngine, 4).with_min_shard_len(1);
+    check("sharded == software (translate/increment/walk)", 48, |rng| {
+        let layout = random_any_layout(rng);
+        let table = BaseTable::regular(layout.numthreads, 1 << 32, 1 << 32);
+        let mythread = rng.below(layout.numthreads as u64) as u32;
+        let ctx = EngineCtx::new(layout, &table, mythread).unwrap();
+        let n = 1 + rng.below(700) as usize;
+        let mut batch = PtrBatch::with_capacity(n);
+        for _ in 0..n {
+            batch.push(
+                SharedPtr::for_index(&layout, 0, rng.below(1 << 16)),
+                rng.below(1 << 13),
+            );
+        }
+        let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
+        sharded.translate(&ctx, &batch, &mut a).unwrap();
+        SoftwareEngine.translate(&ctx, &batch, &mut b).unwrap();
+        assert_eq!(a, b, "translate layout={layout:?} n={n}");
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        sharded.increment(&ctx, &batch, &mut pa).unwrap();
+        SoftwareEngine.increment(&ctx, &batch, &mut pb).unwrap();
+        assert_eq!(pa, pb, "increment layout={layout:?} n={n}");
+        let start = SharedPtr::for_index(&layout, 0, rng.below(1 << 12));
+        let inc = rng.below(256);
+        let steps = 1 + rng.below(500) as usize;
+        sharded.walk(&ctx, start, inc, steps, &mut a).unwrap();
+        SoftwareEngine.walk(&ctx, start, inc, steps, &mut b).unwrap();
+        assert_eq!(a, b, "walk layout={layout:?} inc={inc} steps={steps}");
+    });
+}
+
+#[test]
+fn sharded_output_is_invariant_across_shard_counts() {
+    // CG's non-pow2 112-byte element layout and a pow2 layout, each
+    // checked at 1/2/4/7 shards against the unsharded inner engine.
+    let cases = [
+        (ArrayLayout::new(3, 112, 5), 2u32),
+        (ArrayLayout::new(16, 8, 8), 3u32),
+    ];
+    for (layout, mythread) in cases {
+        let table = BaseTable::regular(layout.numthreads, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, mythread).unwrap();
+        let mut batch = PtrBatch::new();
+        for i in 0..501u64 {
+            batch.push(SharedPtr::for_index(&layout, 0, i * 3), i % 113);
+        }
+        let mut want = BatchOut::new();
+        SoftwareEngine.translate(&ctx, &batch, &mut want).unwrap();
+        let mut want_walk = BatchOut::new();
+        SoftwareEngine
+            .walk(&ctx, batch.ptrs[0], 7, 501, &mut want_walk)
+            .unwrap();
+        for shards in [1, 2, 4, 7] {
+            let sharded = ShardedEngine::new(SoftwareEngine, shards)
+                .with_min_shard_len(1);
+            let mut got = BatchOut::new();
+            sharded.translate(&ctx, &batch, &mut got).unwrap();
+            assert_eq!(got, want, "translate shards={shards} {layout:?}");
+            sharded.walk(&ctx, batch.ptrs[0], 7, 501, &mut got).unwrap();
+            assert_eq!(got, want_walk, "walk shards={shards} {layout:?}");
+        }
+    }
+}
+
+#[test]
+fn sharded_pow2_inner_matches_pow2_on_pow2_layouts() {
+    let sharded = ShardedEngine::new(Pow2Engine, 7).with_min_shard_len(1);
+    check("sharded(pow2) == pow2", 24, |rng| {
+        let (layout, table, mythread, batch) = random_pow2_case(rng);
+        let ctx = EngineCtx::new(layout, &table, mythread).unwrap();
+        let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
+        sharded.translate(&ctx, &batch, &mut a).unwrap();
+        Pow2Engine.translate(&ctx, &batch, &mut b).unwrap();
+        assert_eq!(a, b, "layout={layout:?}");
+    });
+}
+
+// ---- satellite: WalkCursor vs increment_general over random strides ----
+
+#[test]
+fn walk_cursor_matches_increment_general_over_random_strides() {
+    check("WalkCursor == repeated increment_general", 96, |rng| {
+        let layout = random_any_layout(rng);
+        let start = SharedPtr::for_index(&layout, 0, rng.below(1 << 16));
+        let inc = rng.below(1 << 14);
+        let mut cursor = WalkCursor::new(start, inc, &layout);
+        let mut want = start;
+        for step in 0..64 {
+            assert_eq!(
+                cursor.current(),
+                want,
+                "layout={layout:?} inc={inc} step={step}"
+            );
+            cursor.advance();
+            want = increment_general(&want, inc, &layout);
+        }
+    });
 }
 
 // ---- satellite: pack/unpack round-trip properties ----
@@ -207,7 +330,7 @@ mod xla {
         let mut rng = Xoshiro256::new(0xC0FFEE);
         for round in 0..8 {
             let (layout, table, mythread, batch) = random_pow2_case(&mut rng);
-            let ctx = EngineCtx::new(layout, &table, mythread);
+            let ctx = EngineCtx::new(layout, &table, mythread).unwrap();
             let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
             SoftwareEngine.translate(&ctx, &batch, &mut a).unwrap();
             x.translate(&ctx, &batch, &mut b).unwrap();
@@ -221,7 +344,7 @@ mod xla {
         let Some(x) = load() else { return };
         let layout = ArrayLayout::new(64, 8, 16);
         let table = BaseTable::regular(16, 1 << 32, 1 << 32);
-        let ctx = EngineCtx::new(layout, &table, 0);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
         let n = UNIT_BATCH * 2 + 37; // forces 3 chunks incl. a partial
         let mut rng = Xoshiro256::new(9);
         let mut batch = PtrBatch::with_capacity(n);
@@ -244,7 +367,7 @@ mod xla {
         let Some(x) = load() else { return };
         let layout = ArrayLayout::new(4, 4, 4);
         let table = BaseTable::regular(4, 1 << 32, 1 << 32);
-        let ctx = EngineCtx::new(layout, &table, 0);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
         let steps = WALK_LEN + 100; // forces a chunked walk
         let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
         SoftwareEngine.walk(&ctx, SharedPtr::NULL, 3, steps, &mut a).unwrap();
