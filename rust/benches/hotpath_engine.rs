@@ -7,15 +7,18 @@
 //! * `walk` — the O(1) `WalkCursor` stepper vs the old per-step
 //!   divide/modulo walk;
 //! * `sharded` — `ShardedEngine` (software inner) vs single-threaded
-//!   `SoftwareEngine` on a large batch.
+//!   `SoftwareEngine` on a large batch;
+//! * `leon3` — the coprocessor-model replay: host throughput (the
+//!   measured `CostModel::leon3_ns_per_ptr` coefficient) and the
+//!   deterministic simulated cycles/pointer at 75 MHz.
 //!
 //! `--quick` (the CI smoke leg) shrinks batch sizes and iteration
 //! counts.  The xla-batch backend joins automatically when built with
 //! `--features xla-unit` and artifacts are present.
 
 use pgas_hw::engine::{
-    AddressEngine, BatchOut, EngineCtx, Pow2Engine, PtrBatch, ShardedEngine,
-    SoftwareEngine,
+    AddressEngine, BatchOut, EngineCtx, Leon3Engine, Pow2Engine, PtrBatch,
+    ShardedEngine, SoftwareEngine,
 };
 use pgas_hw::sptr::{
     increment_general, locality, ArrayLayout, BaseTable, SharedPtr,
@@ -183,6 +186,30 @@ fn main() {
          ({sharded_speedup:.2}x over single-threaded software, {workers} workers)"
     );
 
+    // ---- leon3 coprocessor model: instruction replay on the
+    // functional core (much slower on the host — that is the point:
+    // this measures the CostModel coefficient that keeps it honest) ----
+    let l3_n: usize = if quick { 1 << 11 } else { 1 << 13 };
+    let l3_batch = random_batch(&layout, l3_n, 0x1E03);
+    let leon3 = Leon3Engine::new();
+    let r = bench(
+        &format!("engine::leon3 translate x{l3_n}"),
+        warmup,
+        iters,
+        || {
+            leon3.translate(&ctx, &l3_batch, &mut out).unwrap();
+            black_box(&out);
+        },
+    );
+    let leon3_mptr_s = l3_n as f64 / r.mean_secs() / 1e6;
+    let leon3_ns_per_ptr = r.mean_secs() * 1e9 / l3_n as f64;
+    let leon3_cyc_per_ptr = leon3.last_cycles() as f64 / l3_n as f64;
+    println!(
+        "  -> leon3: {leon3_mptr_s:.2} M ptr/s host ({leon3_ns_per_ptr:.0} \
+         ns/ptr — the measured cost-model coefficient), \
+         {leon3_cyc_per_ptr:.1} simulated cycles/ptr @75MHz"
+    );
+
     let json = format!(
         "{{\n  \"bench\": \"hotpath_engine\",\n  \"batch\": {n},\n  \
          \"layout\": {{\"blocksize\": 64, \"elemsize\": 8, \"numthreads\": 16}},\n  \
@@ -193,7 +220,11 @@ fn main() {
          \"sharded\": {{\"inner\": \"software\", \"workers\": {workers}, \
          \"batch\": {big_n}, \"software_mptr_s\": {single_mptr_s:.2}, \
          \"sharded_mptr_s\": {sharded_mptr_s:.2}, \
-         \"sharded_speedup\": {sharded_speedup:.2}}}\n}}\n",
+         \"sharded_speedup\": {sharded_speedup:.2}}},\n  \
+         \"leon3\": {{\"batch\": {l3_n}, \
+         \"translate_mptr_s\": {leon3_mptr_s:.2}, \
+         \"host_ns_per_ptr\": {leon3_ns_per_ptr:.1}, \
+         \"sim_cycles_per_ptr\": {leon3_cyc_per_ptr:.2}}}\n}}\n",
         rows.join(",\n")
     );
     std::fs::write("BENCH_engine.json", &json).expect("write BENCH_engine.json");

@@ -16,6 +16,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::compiler::SourceVariant;
 use crate::cpu::CpuModel;
+use crate::engine::{AddressEngine, Leon3Engine};
 use crate::npb::{self, Kernel, PaperVariant, RunOutcome, Scale};
 use crate::util::table::{fnum, Table};
 
@@ -197,21 +198,40 @@ pub fn figure_table(
     t
 }
 
-/// The runtime mirror of the compiler's Soft/Hw variant choice: which
-/// [`AddressEngine`](crate::engine::AddressEngine) backend the runtime's
-/// selector serves each shared array of a campaign's kernels with,
-/// plus the selector's per-choice hit counters after driving the
-/// kernel's host-side setup traffic — so every sweep archives the
-/// backend mix that *actually* served it, not just the per-array
-/// policy.
+/// The per-array backend report: for every shared array of a
+/// campaign's kernels, which [`AddressEngine`](crate::engine::AddressEngine)
+/// backend the runtime selector's **cost model** prices cheapest at
+/// the array's init-sized batch (an argmin over batch size × layout ×
+/// available backends — *not* the pre-cost-model layout-only
+/// heuristic), plus the selector's per-choice hit counters after
+/// driving the kernel's host-side setup traffic — so every sweep
+/// archives the backend mix that *actually* served it, not just the
+/// per-array policy.
+///
+/// Column legend (also emitted in the table title):
+///
+/// * `pow2`   — is the layout all powers of two (the hardware gate)?
+/// * `leon3`  — can the Leon3 coprocessor model serve the layout
+///   (hardware gate + Figure-2 packed-pointer field widths)?
+/// * `engine` — the backend the cost model picks for one batch of
+///   `nelems` requests;
+/// * `hits`   — requests served per backend during the kernel's setup
+///   traffic (`-` on per-array rows; the `(setup served by)` rows
+///   carry the counters).
 ///
 /// Builds each kernel once at the given scale — array layouts (and
 /// thus pow2-ness) are scale-dependent, so there is no cheaper source
 /// of truth; call this once per campaign, not per point.
 pub fn engine_report(kernels: &[Kernel], cores: u32, scale: &Scale) -> Table {
+    let leon3 = Leon3Engine::new();
     let mut t = Table::new(
-        "AddressEngine selection (runtime mirror of the compiler's Soft/Hw lowering)",
-        &["kernel", "array", "blocksize", "elemsize", "nelems", "pow2", "engine", "hits"],
+        "AddressEngine selection (cost-model argmin over batch size x \
+         layout x backends; hits = requests served per backend during \
+         setup)",
+        &[
+            "kernel", "array", "blocksize", "elemsize", "nelems", "pow2",
+            "leon3", "engine", "hits",
+        ],
     );
     for &k in kernels {
         let threads = cores.min(k.max_cores());
@@ -219,6 +239,7 @@ pub fn engine_report(kernels: &[Kernel], cores: u32, scale: &Scale) -> Table {
         for a in built.rt.arrays() {
             let choice = built.rt.engine().choice(&a.layout, a.nelems as usize);
             let pow2 = if a.layout.hw_supported() { "yes" } else { "no" };
+            let l3 = if leon3.supports(&a.layout) { "yes" } else { "no" };
             t.row(&[
                 k.name().into(),
                 a.name.clone(),
@@ -226,6 +247,7 @@ pub fn engine_report(kernels: &[Kernel], cores: u32, scale: &Scale) -> Table {
                 a.layout.elemsize.to_string(),
                 a.nelems.to_string(),
                 pow2.into(),
+                l3.into(),
                 choice.name().into(),
                 "-".into(),
             ]);
@@ -240,6 +262,7 @@ pub fn engine_report(kernels: &[Kernel], cores: u32, scale: &Scale) -> Table {
                 t.row(&[
                     k.name().into(),
                     "(setup served by)".into(),
+                    "-".into(),
                     "-".into(),
                     "-".into(),
                     "-".into(),
@@ -402,6 +425,10 @@ mod tests {
         let t = engine_report(&[Kernel::Cg], 4, &Scale::quick());
         assert!(!t.is_empty());
         let rendered = t.render();
+        // the legend describes the cost-model semantics, not the old
+        // layout-only heuristic
+        assert!(rendered.contains("cost-model argmin"), "{rendered}");
+        assert!(rendered.contains("leon3"), "{rendered}");
         assert!(
             rendered
                 .lines()

@@ -5,16 +5,37 @@
 //! instruction-count ratio: a software Algorithm-1 expansion of ~25–45
 //! ops against one `pgas_inc`, and a 3–4 op software translation against
 //! one `pgas_ld`/`pgas_st`.
+//!
+//! Straight-line runs of independent PGAS increments (the pointer-bump
+//! bursts every compiled `upc_forall` loop body emits) are served
+//! through the batched [`replay_pgas_incs`] entry point — one
+//! `AddressEngine` call per run instead of one scalar `increment_pow2`
+//! per instruction — with identical architectural results and identical
+//! 1-cycle-per-instruction accounting.
 
 use super::{ArchState, CoreStats, Cpu, SharedLevel, StopReason};
-use crate::cpu::exec::{step, StepEffect};
+use crate::cpu::exec::{pgas_inc_run_len, replay_pgas_incs, step, StepEffect};
+use crate::engine::{Pow2Engine, PtrBatch};
 use crate::isa::Program;
 use crate::mem::MemSystem;
+use crate::sptr::SharedPtr;
 
 /// 1-IPC core.
 pub struct AtomicCpu {
     state: ArchState,
     stats: CoreStats,
+    /// Backend + reusable buffers for the batched increment replay (the
+    /// instruction geometry is pow2 by construction, so the shift/mask
+    /// engine is always legal).
+    inc_engine: Pow2Engine,
+    inc_batch: PtrBatch,
+    inc_out: Vec<SharedPtr>,
+    /// Latched false on the first replay refusal (base LUT covering
+    /// fewer threads than the `threads` register).  Treated as
+    /// permanent for simplicity: a program that later shrinks
+    /// `threads_reg` via `PgasSetThreads` could make replay legal
+    /// again, but it just stays on the (always-correct) serial path.
+    inc_replay: bool,
 }
 
 impl AtomicCpu {
@@ -22,6 +43,10 @@ impl AtomicCpu {
         Self {
             state: ArchState::new(mythread, numthreads),
             stats: CoreStats::default(),
+            inc_engine: Pow2Engine,
+            inc_batch: PtrBatch::new(),
+            inc_out: Vec::new(),
+            inc_replay: true,
         }
     }
 }
@@ -38,6 +63,40 @@ impl Cpu for AtomicCpu {
         while budget > 0 {
             if self.state.halted {
                 return StopReason::Halted;
+            }
+            // ---- batched replay path: a run of independent PGAS
+            // increments is served by one AddressEngine call instead
+            // of N scalar increments (the ROADMAP "simulator-side
+            // batching" seam; architecturally identical, same 1-IPC
+            // accounting)
+            if self.inc_replay {
+                let run =
+                    (pgas_inc_run_len(&prog.insts, self.state.pc as usize)
+                        as u64)
+                        .min(budget) as usize;
+                if run >= 2 {
+                    match replay_pgas_incs(
+                        &mut self.state,
+                        mem,
+                        &prog.insts,
+                        run,
+                        &self.inc_engine,
+                        &mut self.inc_batch,
+                        &mut self.inc_out,
+                    ) {
+                        Ok(()) => {
+                            let k = run as u64;
+                            self.stats.instructions += k;
+                            self.stats.cycles += k;
+                            self.stats.pgas_incs += k;
+                            budget -= k;
+                            continue;
+                        }
+                        // persistent refusal: fall back to serial
+                        // stepping for the rest of this machine's life
+                        Err(_) => self.inc_replay = false,
+                    }
+                }
             }
             let inst = prog.insts[self.state.pc as usize];
             let effect = step(&mut self.state, mem, &inst);
@@ -146,6 +205,57 @@ mod tests {
             cpu.run(&prog, &mut mem, &mut shared1(), u64::MAX),
             StopReason::Halted
         );
+    }
+
+    #[test]
+    fn increment_bursts_replay_batched_with_identical_results() {
+        use crate::cpu::exec::step;
+        use crate::sptr::{pack, ArrayLayout, SharedPtr};
+        // a vecadd-style body: 3 independent pointer bumps per trip
+        let layout = ArrayLayout::new(4, 8, 4);
+        let prog = Program::new(
+            "bump",
+            vec![
+                Inst::Ldi { rd: 4, imm: 10 }, // trip counter
+                // loop: three self-increments (one batchable run)
+                Inst::PgasIncI { rd: 1, ra: 1, l2es: 3, l2bs: 2, l2inc: 0 }, // 1
+                Inst::PgasIncI { rd: 2, ra: 2, l2es: 3, l2bs: 2, l2inc: 0 },
+                Inst::PgasIncI { rd: 3, ra: 3, l2es: 3, l2bs: 2, l2inc: 0 },
+                Inst::Opi { op: IntOp::Add, rd: 4, ra: 4, imm: -1 },
+                Inst::Br { cond: Cond::Gt, ra: 4, target: 1 },
+                Inst::Halt,
+            ],
+        );
+        let seed = |st: &mut crate::cpu::ArchState| {
+            st.set_r(1, pack(&SharedPtr::for_index(&layout, 0, 0)));
+            st.set_r(2, pack(&SharedPtr::for_index(&layout, 0, 7)));
+            st.set_r(3, pack(&SharedPtr::for_index(&layout, 64, 2)));
+        };
+        // atomic model (batched replay inside)
+        let mut cpu = AtomicCpu::new(1, 4);
+        seed(&mut cpu.state);
+        let mut mem = MemSystem::new(4);
+        assert_eq!(
+            cpu.run(&prog, &mut mem, &mut shared1(), u64::MAX),
+            StopReason::Halted
+        );
+        // pure serial reference via step()
+        let mut serial = crate::cpu::ArchState::new(1, 4);
+        seed(&mut serial);
+        let mut insts = 0u64;
+        while !serial.halted {
+            let inst = prog.insts[serial.pc as usize];
+            step(&mut serial, &mut mem, &inst);
+            insts += 1;
+        }
+        for r in 0..8 {
+            assert_eq!(cpu.state().r(r), serial.r(r), "register r{r}");
+        }
+        assert_eq!(cpu.state().cc_loc, serial.cc_loc);
+        // identical 1-IPC accounting: same dynamic instruction count
+        assert_eq!(cpu.stats().instructions, insts);
+        assert_eq!(cpu.stats().cycles, insts);
+        assert_eq!(cpu.stats().pgas_incs, 30);
     }
 
     #[test]

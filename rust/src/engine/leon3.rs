@@ -1,0 +1,502 @@
+//! The FPGA-coprocessor backend: address mapping served by the
+//! `leon3::` functional core, one lowered instruction sequence per
+//! request.
+//!
+//! Where [`Pow2Engine`](super::Pow2Engine) calls the shift/mask
+//! arithmetic directly, [`Leon3Engine`] goes the long way round on
+//! purpose: each [`PtrBatch`] request is lowered to the same
+//! `ldi`/`pgas_incr` sequence the prototype compiler emits for the
+//! Table-3 SPARC coprocessor (`cpinc_r`), executed instruction by
+//! instruction on the shared functional executor
+//! ([`cpu::exec::step`](crate::cpu::exec::step)), and billed against
+//! the [`Leon3Lat`] cost model at the board's 75 MHz.  The translation
+//! of each mapped pointer runs the address-generation stage of a
+//! `pgas_ldq` (base-LUT lookup + add against the machine's
+//! `base_table`) without the data access, and the locality code comes
+//! back through the coprocessor condition register (`cc_loc`), exactly
+//! as `cb` (branch-on-locality) would read it.
+//!
+//! That makes this backend the differential bridge between the two
+//! halves of the repo: the host-side engines and the simulated
+//! datapath must agree bit-for-bit on every layout the hardware
+//! supports (`rust/tests/engine_conformance.rs` and
+//! `rust/tests/leon3_engine.rs` enforce it), and every request returns
+//! a deterministic **cycle estimate** (readable via
+//! [`last_cycles`](Leon3Engine::last_cycles)) so the
+//! [`EngineSelector`](super::EngineSelector)'s cost model can price
+//! the hardware path from measured numbers instead of guesses.
+//!
+//! Like the hardware it models, the backend refuses any layout whose
+//! blocksize / elemsize / thread count is not a power of two — the
+//! same gate as `Pow2Engine`, mirroring the compiler's software
+//! fallback — plus the packed-pointer field widths (a pointer must fit
+//! the Figure-2 64-bit packing to exist in a coprocessor register).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::{AddressEngine, BatchOut, EngineCtx, EngineError, PtrBatch};
+use crate::cpu::exec::{step, ArchState};
+use crate::isa::{Inst, Reg};
+use crate::leon3::{Leon3Lat, FREQ_MHZ};
+use crate::mem::MemSystem;
+use crate::sptr::{
+    pack, unpack, ArrayLayout, BaseTable, Locality, SharedPtr, PHASE_BITS,
+    THREAD_BITS, VA_BITS,
+};
+
+/// Coprocessor register holding the input pointer.
+const R_PTR: Reg = 1;
+/// Register holding the element increment.
+const R_INC: Reg = 2;
+/// Register receiving the incremented pointer.
+const R_OUT: Reg = 3;
+
+/// Address mapping on the simulated Leon3 PGAS coprocessor.
+///
+/// Every request is replayed as real `ldi` + `pgas_incr` instructions
+/// on the functional core and billed in Leon3 cycles; outputs are
+/// bit-identical to [`SoftwareEngine`](super::SoftwareEngine) on every
+/// supported (all-power-of-two) layout.
+///
+/// # Examples
+///
+/// ```
+/// use pgas_hw::engine::{
+///     AddressEngine, BatchOut, EngineCtx, Leon3Engine, PtrBatch,
+///     SoftwareEngine,
+/// };
+/// use pgas_hw::sptr::{ArrayLayout, BaseTable, SharedPtr};
+///
+/// // shared [4] int A[...] over 4 threads (the paper's Figure 2)
+/// let layout = ArrayLayout::new(4, 4, 4);
+/// let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+/// let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+/// let engine = Leon3Engine::new();
+/// let mut batch = PtrBatch::new();
+/// batch.push(SharedPtr::NULL, 9); // &A[0] + 9 -> A[9]
+/// let (mut hw, mut sw) = (BatchOut::new(), BatchOut::new());
+/// engine.translate(&ctx, &batch, &mut hw).unwrap();
+/// SoftwareEngine.translate(&ctx, &batch, &mut sw).unwrap();
+/// assert_eq!(hw, sw); // bit-identical to the software reference
+/// assert!(engine.last_cycles() > 0); // and billed in 75 MHz cycles
+/// ```
+#[derive(Debug, Default)]
+pub struct Leon3Engine {
+    lat: Leon3Lat,
+    /// Cycles billed by the most recent request.
+    last_cycles: AtomicU64,
+    /// Cycles billed since construction.
+    total_cycles: AtomicU64,
+}
+
+impl Leon3Engine {
+    /// A coprocessor model with the paper's Table-2 latencies.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Replace the latency model (e.g. to sweep coprocessor depths).
+    pub fn with_lat(mut self, lat: Leon3Lat) -> Self {
+        self.lat = lat;
+        self
+    }
+
+    /// Cycles the most recent `translate`/`increment`/`walk` request
+    /// cost on the simulated core (deterministic per request shape).
+    pub fn last_cycles(&self) -> u64 {
+        self.last_cycles.load(Ordering::Relaxed)
+    }
+
+    /// Total cycles billed since construction.
+    pub fn total_cycles(&self) -> u64 {
+        self.total_cycles.load(Ordering::Relaxed)
+    }
+
+    /// The most recent request's simulated runtime in nanoseconds at
+    /// the board's 75 MHz.
+    pub fn last_runtime_ns(&self) -> f64 {
+        self.last_cycles() as f64 * 1e3 / FREQ_MHZ
+    }
+
+    /// Measure the *host-side* cost of this backend — wall-clock
+    /// `(ns_per_ptr, dispatch_ns)` for translate batches on the
+    /// Figure-2 layout — so [`EngineSelector::with_leon3`] can install
+    /// measured [`CostModel`] coefficients instead of guessed ones.
+    /// The per-pointer slope comes from one large batch; the fixed
+    /// per-batch fee (core + LUT setup) from a burst of single-request
+    /// batches with the slope subtracted.  (Replaying instructions
+    /// through the functional core is orders of magnitude slower than
+    /// calling the shift/mask arithmetic directly, and the selector
+    /// must know that.)
+    ///
+    /// [`EngineSelector::with_leon3`]: super::EngineSelector::with_leon3
+    /// [`CostModel`]: super::CostModel
+    pub fn calibrate(&self) -> (f64, f64) {
+        const N: usize = 2048;
+        const SMALL_BATCHES: u32 = 64;
+        let layout = ArrayLayout::new(4, 4, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0)
+            .expect("calibration context is statically valid");
+        let mut batch = PtrBatch::with_capacity(N);
+        for i in 0..N as u64 {
+            batch.push(SharedPtr::for_index(&layout, 0, i % 64), i % 16);
+        }
+        let mut out = BatchOut::new();
+        // calibration is measurement, not service: restore the billing
+        // counters afterwards so they keep meaning "cycles of served
+        // requests"
+        let (last, total) = (self.last_cycles(), self.total_cycles());
+        // two warmup passes, then one measured pass for the slope
+        for _ in 0..2 {
+            self.translate(&ctx, &batch, &mut out)
+                .expect("calibration batch is supported");
+        }
+        let t0 = std::time::Instant::now();
+        self.translate(&ctx, &batch, &mut out)
+            .expect("calibration batch is supported");
+        let ns_per_ptr =
+            (t0.elapsed().as_nanos() as f64 / N as f64).max(1.0);
+        // the fixed fee: single-request batches minus one pointer's work
+        let mut one = PtrBatch::with_capacity(1);
+        one.push(SharedPtr::NULL, 1);
+        self.translate(&ctx, &one, &mut out)
+            .expect("calibration batch is supported");
+        let t0 = std::time::Instant::now();
+        for _ in 0..SMALL_BATCHES {
+            self.translate(&ctx, &one, &mut out)
+                .expect("calibration batch is supported");
+        }
+        let per_batch =
+            t0.elapsed().as_nanos() as f64 / SMALL_BATCHES as f64;
+        let dispatch_ns = (per_batch - ns_per_ptr).max(0.0);
+        self.last_cycles.store(last, Ordering::Relaxed);
+        self.total_cycles.store(total, Ordering::Relaxed);
+        (ns_per_ptr, dispatch_ns)
+    }
+
+    /// The hardware gate: all-pow2 geometry (the shift/mask pipeline)
+    /// *and* the Figure-2 packing bounds, or `UnsupportedLayout`.
+    fn gate(&self, ctx: &EngineCtx) -> Result<(u8, u8), EngineError> {
+        if !self.supports(&ctx.layout) {
+            return Err(EngineError::UnsupportedLayout {
+                engine: "leon3",
+                layout: ctx.layout,
+            });
+        }
+        let (l2bs, l2es, _l2nt) =
+            ctx.log2s().expect("supports() guarantees pow2 geometry");
+        Ok((l2bs as u8, l2es as u8))
+    }
+
+    /// A pointer exists in a coprocessor register only if it fits the
+    /// Figure-2 packed fields; refuse (rather than silently truncate
+    /// in release builds, where `pack`'s debug_asserts are compiled
+    /// out) any input that does not.  Post-increment overflow of the
+    /// 38-bit va field remains debug-asserted, like every other packed
+    /// pointer path in the simulator.
+    fn check_packable(p: &SharedPtr) -> Result<(), EngineError> {
+        if p.va < (1u64 << VA_BITS)
+            && p.phase < (1u64 << PHASE_BITS)
+            && (p.thread as u64) < (1u64 << THREAD_BITS)
+        {
+            Ok(())
+        } else {
+            Err(EngineError::Backend(format!(
+                "pointer {p:?} does not fit the Figure-2 packed register \
+                 fields ({VA_BITS}-bit va, {PHASE_BITS}-bit phase, \
+                 {THREAD_BITS}-bit thread)"
+            )))
+        }
+    }
+
+    /// Record the cycle bill of one served request.
+    fn bill(&self, cycles: u64) {
+        self.last_cycles.store(cycles, Ordering::Relaxed);
+        self.total_cycles.fetch_add(cycles, Ordering::Relaxed);
+    }
+
+    /// A fresh single-core Leon3 functional state wired to the
+    /// request's base LUT, executing thread, and topology.
+    fn core(&self, ctx: &EngineCtx) -> (ArchState, MemSystem) {
+        let nt = ctx.layout.numthreads;
+        let mut st = ArchState::new(ctx.mythread, nt);
+        st.topo = *ctx.topo();
+        let mut mem = MemSystem::new(nt);
+        mem.base_table = ctx.table.clone();
+        (st, mem)
+    }
+
+    /// Cost of `inst` on the Leon3 core (result latency, as the
+    /// in-order `Leon3Machine` accounts it).
+    fn cyc(&self, inst: &Inst) -> u64 {
+        self.lat.isa.cost(inst).latency as u64
+    }
+
+    /// Lower one `(ptr, inc)` request onto the core —
+    /// `ldi rp, <packed>; ldi ri, <inc>; pgas_incr rq, rp, ri` — and
+    /// return the incremented pointer plus the cycles the sequence
+    /// cost.  Shared by `translate` and `increment` so the lowering
+    /// and its accounting cannot drift apart.
+    fn replay_one(
+        &self,
+        st: &mut ArchState,
+        mem: &mut MemSystem,
+        inc_inst: &Inst,
+        p: &SharedPtr,
+        inc: u64,
+    ) -> Result<(SharedPtr, u64), EngineError> {
+        Self::check_packable(p)?;
+        st.pc = 0;
+        let ld_ptr = Inst::Ldi { rd: R_PTR, imm: pack(p) as i64 };
+        let ld_inc = Inst::Ldi { rd: R_INC, imm: inc as i64 };
+        step(st, mem, &ld_ptr);
+        step(st, mem, &ld_inc);
+        step(st, mem, inc_inst);
+        let cycles =
+            self.cyc(&ld_ptr) + self.cyc(&ld_inc) + self.cyc(inc_inst);
+        Ok((unpack(st.r(R_OUT)), cycles))
+    }
+}
+
+impl AddressEngine for Leon3Engine {
+    fn name(&self) -> &'static str {
+        "leon3"
+    }
+
+    /// The coprocessor serves a layout when the shift/mask pipeline
+    /// can (all powers of two) *and* its pointers fit the Figure-2
+    /// packed register fields (phase and thread widths).
+    fn supports(&self, layout: &ArrayLayout) -> bool {
+        layout.hw_supported()
+            && (layout.numthreads as u64) <= (1 << THREAD_BITS)
+            && layout.blocksize <= (1 << PHASE_BITS)
+    }
+
+    fn translate(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        let (l2bs, l2es) = self.gate(ctx)?;
+        batch.check()?;
+        out.clear();
+        out.reserve(batch.len());
+        let (mut st, mut mem) = self.core(ctx);
+        let inc_inst =
+            Inst::PgasIncR { rd: R_OUT, ra: R_PTR, rb: R_INC, l2es, l2bs };
+        let mut cycles = 0u64;
+        for (p, &inc) in batch.ptrs.iter().zip(&batch.incs) {
+            let (q, c) =
+                self.replay_one(&mut st, &mut mem, &inc_inst, p, inc)?;
+            // + pgas_ldq address generation: LUT lookup + add
+            cycles += c + self.lat.l1_hit;
+            let sysva = q.translate(&mem.base_table);
+            let loc = Locality::from_code(st.cc_loc)
+                .expect("coprocessor emitted an invalid locality code");
+            out.push(q, sysva, loc);
+        }
+        self.bill(cycles);
+        Ok(())
+    }
+
+    fn increment(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut Vec<SharedPtr>,
+    ) -> Result<(), EngineError> {
+        let (l2bs, l2es) = self.gate(ctx)?;
+        batch.check()?;
+        out.clear();
+        out.reserve(batch.len());
+        let (mut st, mut mem) = self.core(ctx);
+        let inc_inst =
+            Inst::PgasIncR { rd: R_OUT, ra: R_PTR, rb: R_INC, l2es, l2bs };
+        let mut cycles = 0u64;
+        for (p, &inc) in batch.ptrs.iter().zip(&batch.incs) {
+            let (q, c) =
+                self.replay_one(&mut st, &mut mem, &inc_inst, p, inc)?;
+            cycles += c;
+            out.push(q);
+        }
+        self.bill(cycles);
+        Ok(())
+    }
+
+    /// Walks chain in the coprocessor register file: the start pointer
+    /// is materialized once, classified with a zero increment (the
+    /// identity, so step 0 reports the start's own locality), then each
+    /// step is one in-place `pgas_incr` — the exact register-reuse
+    /// shape the compiled `upc_forall` loop has on the board.
+    fn walk(
+        &self,
+        ctx: &EngineCtx,
+        start: SharedPtr,
+        inc: u64,
+        steps: usize,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        let (l2bs, l2es) = self.gate(ctx)?;
+        Self::check_packable(&start)?;
+        out.clear();
+        out.reserve(steps);
+        if steps == 0 {
+            self.bill(0);
+            return Ok(());
+        }
+        let (mut st, mut mem) = self.core(ctx);
+        let self_inc =
+            Inst::PgasIncR { rd: R_PTR, ra: R_PTR, rb: R_INC, l2es, l2bs };
+        let mut cycles = 0u64;
+        // materialize the start pointer, classify it via a zero inc
+        let ld_start = Inst::Ldi { rd: R_PTR, imm: pack(&start) as i64 };
+        let ld_zero = Inst::Ldi { rd: R_INC, imm: 0 };
+        step(&mut st, &mut mem, &ld_start);
+        step(&mut st, &mut mem, &ld_zero);
+        step(&mut st, &mut mem, &self_inc);
+        cycles += self.cyc(&ld_start)
+            + self.cyc(&ld_zero)
+            + self.cyc(&self_inc)
+            + self.lat.l1_hit;
+        let emit = |st: &ArchState, mem: &MemSystem, out: &mut BatchOut| {
+            let q = unpack(st.r(R_PTR));
+            let sysva = q.translate(&mem.base_table);
+            let loc = Locality::from_code(st.cc_loc)
+                .expect("coprocessor emitted an invalid locality code");
+            out.push(q, sysva, loc);
+        };
+        emit(&st, &mem, out);
+        // load the stride once; every further step reuses it
+        let ld_inc = Inst::Ldi { rd: R_INC, imm: inc as i64 };
+        step(&mut st, &mut mem, &ld_inc);
+        cycles += self.cyc(&ld_inc);
+        for _ in 1..steps {
+            st.pc = 0;
+            step(&mut st, &mut mem, &self_inc);
+            cycles += self.cyc(&self_inc) + self.lat.l1_hit;
+            emit(&st, &mem, out);
+        }
+        self.bill(cycles);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SoftwareEngine;
+
+    fn fig2_ctx(table: &BaseTable) -> EngineCtx<'_> {
+        EngineCtx::new(ArrayLayout::new(4, 4, 4), table, 0).unwrap()
+    }
+
+    #[test]
+    fn refuses_nonpow2_layouts_like_pow2_engine() {
+        let e = Leon3Engine::new();
+        // CG's 112-byte element rows: not a power of two
+        let layout = ArrayLayout::new(3, 112, 5);
+        assert!(!e.supports(&layout));
+        let table = BaseTable::regular(5, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut out = BatchOut::new();
+        let err = e.walk(&ctx, SharedPtr::NULL, 1, 4, &mut out).unwrap_err();
+        assert!(matches!(
+            err,
+            EngineError::UnsupportedLayout { engine: "leon3", .. }
+        ));
+        // pow2 geometry but too many threads for the packed field
+        assert!(!e.supports(&ArrayLayout::new(4, 4, 2048)));
+        // pow2 geometry but blocksize overflowing the phase field
+        assert!(!e.supports(&ArrayLayout::new(1 << 17, 4, 4)));
+    }
+
+    #[test]
+    fn matches_software_on_the_figure2_layout() {
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = fig2_ctx(&table);
+        let layout = *ctx.layout();
+        let e = Leon3Engine::new();
+        let mut batch = PtrBatch::new();
+        for i in 0..96u64 {
+            batch.push(SharedPtr::for_index(&layout, 0, i * 5), i % 17);
+        }
+        let (mut hw, mut sw) = (BatchOut::new(), BatchOut::new());
+        e.translate(&ctx, &batch, &mut hw).unwrap();
+        SoftwareEngine.translate(&ctx, &batch, &mut sw).unwrap();
+        assert_eq!(hw, sw);
+        let (mut ph, mut ps) = (Vec::new(), Vec::new());
+        e.increment(&ctx, &batch, &mut ph).unwrap();
+        SoftwareEngine.increment(&ctx, &batch, &mut ps).unwrap();
+        assert_eq!(ph, ps);
+        e.walk(&ctx, SharedPtr::NULL, 3, 50, &mut hw).unwrap();
+        SoftwareEngine.walk(&ctx, SharedPtr::NULL, 3, 50, &mut sw).unwrap();
+        assert_eq!(hw, sw);
+    }
+
+    #[test]
+    fn cycle_accounting_is_deterministic_and_pinned() {
+        // One small request: ldi(1) + ldi(1) + pgas_incr(2) + agen(1).
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = fig2_ctx(&table);
+        let e = Leon3Engine::new();
+        let mut batch = PtrBatch::new();
+        batch.push(SharedPtr::NULL, 3);
+        let mut out = BatchOut::new();
+        e.translate(&ctx, &batch, &mut out).unwrap();
+        assert_eq!(e.last_cycles(), 5);
+        // increment only: no address-generation charge
+        let mut ptrs = Vec::new();
+        e.increment(&ctx, &batch, &mut ptrs).unwrap();
+        assert_eq!(e.last_cycles(), 4);
+        // walk: 5-cycle prologue + 1-cycle stride load + 3/step after
+        e.walk(&ctx, SharedPtr::NULL, 1, 100, &mut out).unwrap();
+        assert_eq!(e.last_cycles(), 5 + 1 + 99 * 3);
+        assert_eq!(e.total_cycles(), 5 + 4 + 303);
+        assert!(e.last_runtime_ns() > 0.0);
+    }
+
+    #[test]
+    fn calibration_returns_positive_coefficients() {
+        let e = Leon3Engine::new();
+        let (ns_per_ptr, dispatch_ns) = e.calibrate();
+        assert!(ns_per_ptr >= 1.0, "measured {ns_per_ptr} ns/ptr");
+        assert!(dispatch_ns >= 0.0, "measured {dispatch_ns} ns/batch");
+        // measurement is not service: the billing counters are restored
+        assert_eq!(e.total_cycles(), 0);
+        assert_eq!(e.last_cycles(), 0);
+    }
+
+    #[test]
+    fn unpackable_pointers_are_refused_not_truncated() {
+        // a va past the 38-bit packed field must refuse, not wrap
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = fig2_ctx(&table);
+        let e = Leon3Engine::new();
+        let huge = SharedPtr { thread: 0, phase: 0, va: 1 << 38 };
+        let mut batch = PtrBatch::new();
+        batch.push(huge, 1);
+        let mut out = BatchOut::new();
+        assert!(matches!(
+            e.translate(&ctx, &batch, &mut out),
+            Err(EngineError::Backend(_))
+        ));
+        let mut ptrs = Vec::new();
+        assert!(e.increment(&ctx, &batch, &mut ptrs).is_err());
+        assert!(e.walk(&ctx, huge, 1, 4, &mut out).is_err());
+    }
+
+    #[test]
+    fn empty_walk_and_empty_batch_are_served() {
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = fig2_ctx(&table);
+        let e = Leon3Engine::new();
+        let mut out = BatchOut::new();
+        e.walk(&ctx, SharedPtr::NULL, 1, 0, &mut out).unwrap();
+        assert!(out.is_empty());
+        assert_eq!(e.last_cycles(), 0);
+        e.translate(&ctx, &PtrBatch::new(), &mut out).unwrap();
+        assert!(out.is_empty());
+    }
+}

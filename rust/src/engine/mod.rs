@@ -19,12 +19,21 @@
 //!   persistent worker-thread pool, splicing shard results back in
 //!   order so outputs are bit-identical to the inner engine at any
 //!   shard count.
+//! * [`Leon3Engine`] — the FPGA-prototype datapath: each request is
+//!   lowered to the `ldi`/`pgas_incr` sequences of the Table-3 SPARC
+//!   coprocessor, executed on the `leon3::` functional core, billed in
+//!   75 MHz cycles, and refused on non-pow2 geometry exactly like
+//!   `Pow2Engine`.
 //! * `XlaBatchEngine` (behind the `xla-unit` cargo feature) — the
 //!   PJRT/XLA batched unit, chunking arbitrary batch sizes through the
 //!   artifacts' fixed `UNIT_BATCH` shape.
 //! * [`EngineSelector`] — picks the cheapest legal backend per
 //!   request, the runtime mirror of the compiler's `Soft`/`Hw`
 //!   lowering choice.
+//!
+//! The full backend matrix (capabilities, layout constraints, cost
+//! legs, selection rules) is documented in `ARCHITECTURE.md` at the
+//! repo root.
 //!
 //! ## Selection cost model
 //!
@@ -57,10 +66,12 @@
 //!
 //! All backends must agree bit-for-bit on `(thread, phase, va, sysva,
 //! loc)` for every layout they support; `rust/tests/engine_conformance.rs`
-//! enforces this differentially (including shard-count invariance).
-//! Future backends (the Leon3 coprocessor model, process/remote shards)
-//! plug into the same trait.
+//! enforces this differentially (including shard-count invariance and
+//! the Leon3 coprocessor replay).  Future backends (process/remote
+//! shards — the "address mapping as a service" seam) plug into the
+//! same trait.
 
+mod leon3;
 mod pow2;
 mod select;
 mod sharded;
@@ -68,6 +79,7 @@ mod software;
 #[cfg(feature = "xla-unit")]
 mod xla_batch;
 
+pub use leon3::Leon3Engine;
 pub use pow2::Pow2Engine;
 pub use select::{AutoEngine, CostModel, EngineChoice, EngineSelector};
 pub use sharded::ShardedEngine;
@@ -153,6 +165,9 @@ pub struct EngineCtx<'a> {
 }
 
 impl<'a> EngineCtx<'a> {
+    /// Checked constructor: fails with [`EngineError::TableTooSmall`]
+    /// when `table` covers fewer threads than `layout` distributes
+    /// over.  Precomputes the Figure-3 log2 immediates.
     pub fn new(
         layout: ArrayLayout,
         table: &'a BaseTable,
@@ -173,6 +188,8 @@ impl<'a> EngineCtx<'a> {
         })
     }
 
+    /// Replace the machine topology used for locality classification
+    /// (defaults to the Leon3-prototype single-node SMP shape).
     pub fn with_topology(mut self, topo: Topology) -> Self {
         self.topo = topo;
         self
@@ -219,10 +236,12 @@ pub struct PtrBatch {
 }
 
 impl PtrBatch {
+    /// An empty batch.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// An empty batch with room for `n` requests.
     pub fn with_capacity(n: usize) -> Self {
         Self { ptrs: Vec::with_capacity(n), incs: Vec::with_capacity(n) }
     }
@@ -233,15 +252,19 @@ impl PtrBatch {
         self.incs.clear();
     }
 
+    /// Append one request: increment `ptr` by `inc` elements (0 = pure
+    /// translation).
     pub fn push(&mut self, ptr: SharedPtr, inc: u64) {
         self.ptrs.push(ptr);
         self.incs.push(inc);
     }
 
+    /// Number of requests in the batch.
     pub fn len(&self) -> usize {
         self.ptrs.len()
     }
 
+    /// Is the batch empty?
     pub fn is_empty(&self) -> bool {
         self.ptrs.is_empty()
     }
@@ -269,6 +292,7 @@ pub struct BatchOut {
 }
 
 impl BatchOut {
+    /// An empty response buffer.
     pub fn new() -> Self {
         Self::default()
     }
@@ -281,12 +305,14 @@ impl BatchOut {
         self.loc.clear();
     }
 
+    /// Reserve room for `n` more results in all three columns.
     pub fn reserve(&mut self, n: usize) {
         self.ptrs.reserve(n);
         self.sysva.reserve(n);
         self.loc.reserve(n);
     }
 
+    /// Append one result triple.
     pub fn push(&mut self, ptr: SharedPtr, sysva: u64, loc: Locality) {
         self.ptrs.push(ptr);
         self.sysva.push(sysva);
@@ -302,10 +328,12 @@ impl BatchOut {
         self.loc.append(&mut other.loc);
     }
 
+    /// Number of result triples.
     pub fn len(&self) -> usize {
         self.ptrs.len()
     }
 
+    /// Is the response empty?
     pub fn is_empty(&self) -> bool {
         self.ptrs.is_empty()
     }
@@ -359,6 +387,27 @@ pub trait AddressEngine {
     fn supports(&self, layout: &ArrayLayout) -> bool;
 
     /// Fused increment + LUT translation + locality over a batch.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use pgas_hw::engine::{
+    ///     AddressEngine, BatchOut, EngineCtx, PtrBatch, SoftwareEngine,
+    /// };
+    /// use pgas_hw::sptr::{ArrayLayout, BaseTable, Locality, SharedPtr};
+    ///
+    /// // shared [4] int A[...] over 4 threads (the paper's Figure 2)
+    /// let layout = ArrayLayout::new(4, 4, 4);
+    /// let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+    /// let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+    /// let mut batch = PtrBatch::new();
+    /// batch.push(SharedPtr::NULL, 5); // &A[0] + 5 -> A[5], on thread 1
+    /// let mut out = BatchOut::new();
+    /// SoftwareEngine.translate(&ctx, &batch, &mut out).unwrap();
+    /// assert_eq!(out.ptrs[0], SharedPtr::for_index(&layout, 0, 5));
+    /// assert_eq!(out.sysva[0], table.base(1) + out.ptrs[0].va);
+    /// assert_eq!(out.loc[0], Locality::SameMc);
+    /// ```
     fn translate(
         &self,
         ctx: &EngineCtx,
@@ -376,6 +425,25 @@ pub trait AddressEngine {
 
     /// Walk `start` for `steps` steps of `inc` elements; `out` is
     /// cleared and refilled with one entry per step (step 0 = `start`).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use pgas_hw::engine::{AddressEngine, BatchOut, EngineCtx, SoftwareEngine};
+    /// use pgas_hw::sptr::{ArrayLayout, BaseTable, SharedPtr};
+    ///
+    /// let layout = ArrayLayout::new(4, 4, 4);
+    /// let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+    /// let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+    /// let mut out = BatchOut::new();
+    /// // 8 steps of 1 element from &A[0]: step 0 is A[0] itself
+    /// SoftwareEngine.walk(&ctx, SharedPtr::NULL, 1, 8, &mut out).unwrap();
+    /// assert_eq!(out.len(), 8);
+    /// assert_eq!(out.ptrs[0], SharedPtr::NULL);
+    /// // elements 4..7 live on thread 1
+    /// assert_eq!(out.ptrs[4], SharedPtr::for_index(&layout, 0, 4));
+    /// assert_eq!(out.ptrs[4].thread, 1);
+    /// ```
     fn walk(
         &self,
         ctx: &EngineCtx,

@@ -13,6 +13,12 @@
 //! * the XLA batch unit (built with `--features xla-unit` and loaded)
 //!   costs a PJRT dispatch fee plus a small per-pointer cost, eligible
 //!   from `xla_threshold`;
+//! * the Leon3 coprocessor model (installed with
+//!   [`EngineSelector::with_leon3`]) costs a per-batch core-setup fee
+//!   plus a per-pointer instruction-replay cost **measured at install
+//!   time** ([`Leon3Engine::calibrate`]) — honest pricing keeps the
+//!   functional-core replay out of the hot path while still letting a
+//!   recalibrated model (e.g. one mirroring real silicon) win;
 //! * walks are priced separately off the O(1)
 //!   [`WalkCursor`](crate::sptr::WalkCursor) stepper cost — a walk's
 //!   scalar path is cheap regardless of layout, so walks shard only at
@@ -28,8 +34,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::OnceLock;
 
 use super::{
-    AddressEngine, BatchOut, EngineCtx, EngineError, Pow2Engine, PtrBatch,
-    ShardedEngine, SoftwareEngine,
+    AddressEngine, BatchOut, EngineCtx, EngineError, Leon3Engine, Pow2Engine,
+    PtrBatch, ShardedEngine, SoftwareEngine,
 };
 use crate::sptr::{ArrayLayout, Locality, SharedPtr};
 
@@ -38,26 +44,36 @@ use crate::sptr::{ArrayLayout, Locality, SharedPtr};
 /// discriminant derive from it).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum EngineChoice {
+    /// General Algorithm 1 (divide/modulo), legal for every layout.
     Software,
+    /// Shift/mask fast path, pow2 layouts only.
     Pow2,
+    /// The worker-pool tier wrapping the scalar policy.
     Sharded,
+    /// The PJRT/XLA batch unit (`xla-unit` feature, artifacts loaded).
     XlaBatch,
+    /// The Leon3 FPGA-coprocessor model (instruction replay).
+    Leon3,
 }
 
 impl EngineChoice {
-    pub const ALL: [EngineChoice; 4] = [
+    /// Every backend the selector can report, in hit-counter order.
+    pub const ALL: [EngineChoice; 5] = [
         EngineChoice::Software,
         EngineChoice::Pow2,
         EngineChoice::Sharded,
         EngineChoice::XlaBatch,
+        EngineChoice::Leon3,
     ];
 
+    /// Stable name used in reports and selection tables.
     pub fn name(&self) -> &'static str {
         match self {
             EngineChoice::Software => "software",
             EngineChoice::Pow2 => "pow2",
             EngineChoice::Sharded => "sharded",
             EngineChoice::XlaBatch => "xla-batch",
+            EngineChoice::Leon3 => "leon3",
         }
     }
 
@@ -161,6 +177,16 @@ pub struct CostModel {
     pub xla_ns_per_ptr: f64,
     /// Fixed PJRT dispatch fee.
     pub xla_dispatch_ns: f64,
+    /// ns per pointer replayed through the Leon3 functional core.
+    /// [`EngineSelector::with_leon3`] overwrites the default with the
+    /// value [`Leon3Engine::calibrate`] measures on this host; the
+    /// default is the order of magnitude the `hotpath_engine` bench
+    /// records (instruction-by-instruction replay, not arithmetic).
+    pub leon3_ns_per_ptr: f64,
+    /// Fixed per-batch fee for the Leon3 backend: constructing the
+    /// functional core state (registers + base LUT) for the request.
+    /// Also measured (not guessed) by [`EngineSelector::with_leon3`].
+    pub leon3_dispatch_ns: f64,
 }
 
 impl Default for CostModel {
@@ -173,6 +199,8 @@ impl Default for CostModel {
             shard_copy_ns_per_ptr: 1.5,
             xla_ns_per_ptr: 0.8,
             xla_dispatch_ns: 60_000.0,
+            leon3_ns_per_ptr: 150.0,
+            leon3_dispatch_ns: 5_000.0,
         }
     }
 }
@@ -206,6 +234,9 @@ impl CostModel {
             EngineChoice::XlaBatch => {
                 self.xla_dispatch_ns + n * self.xla_ns_per_ptr
             }
+            EngineChoice::Leon3 => {
+                self.leon3_dispatch_ns + n * self.leon3_ns_per_ptr
+            }
         }
     }
 
@@ -236,8 +267,9 @@ impl CostModel {
 
 /// Owns one instance of every available backend and serves each request
 /// with the cheapest legal one under its [`CostModel`].  This is the
-/// seam future backends (the Leon3 coprocessor model, process/remote
-/// shards) plug into.
+/// seam future backends (process/remote shards — "address mapping as a
+/// service") plug into; the Leon3 coprocessor model joined it via
+/// [`with_leon3`](Self::with_leon3).
 pub struct EngineSelector {
     software: SoftwareEngine,
     pow2: Pow2Engine,
@@ -252,10 +284,14 @@ pub struct EngineSelector {
     /// Minimum batch size worth a PJRT round-trip.
     #[cfg_attr(not(feature = "xla-unit"), allow(dead_code))]
     xla_threshold: usize,
+    /// The Leon3 coprocessor model, installed via
+    /// [`with_leon3`](Self::with_leon3); priced per request like every
+    /// other backend once present.
+    leon3: Option<Leon3Engine>,
     cost: CostModel,
     /// Requests served per [`EngineChoice`] (indexed by
     /// `EngineChoice::index`).
-    hits: [AtomicU64; 4],
+    hits: [AtomicU64; 5],
 }
 
 impl EngineSelector {
@@ -272,6 +308,8 @@ impl EngineSelector {
     /// selector-owning runtimes concurrently).
     const MAX_DEFAULT_WORKERS: usize = 8;
 
+    /// A selector with the host backends (software, pow2, lazily
+    /// sharded) and default cost constants.
     pub fn new() -> Self {
         let workers = std::thread::available_parallelism()
             .map(|n| n.get())
@@ -286,8 +324,10 @@ impl EngineSelector {
             #[cfg(feature = "xla-unit")]
             xla: None,
             xla_threshold: Self::DEFAULT_XLA_THRESHOLD,
+            leon3: None,
             cost: CostModel::default(),
             hits: [
+                AtomicU64::new(0),
                 AtomicU64::new(0),
                 AtomicU64::new(0),
                 AtomicU64::new(0),
@@ -310,7 +350,12 @@ impl EngineSelector {
         self
     }
 
-    /// Replace the cost constants (e.g. from a calibration run).
+    /// Replace **all** cost constants (e.g. from a calibration run).
+    /// Note the ordering interaction with [`with_leon3`](Self::with_leon3):
+    /// that builder writes a measured `leon3_ns_per_ptr` into the
+    /// current model, so call `with_cost_model` *before* `with_leon3`
+    /// (or use [`with_leon3_uncalibrated`](Self::with_leon3_uncalibrated))
+    /// to avoid discarding the measurement.
     pub fn with_cost_model(mut self, cost: CostModel) -> Self {
         self.cost = cost;
         self
@@ -330,9 +375,40 @@ impl EngineSelector {
         self
     }
 
+    /// Is the XLA batch backend installed?
     #[cfg(feature = "xla-unit")]
     pub fn has_xla(&self) -> bool {
         self.xla.is_some()
+    }
+
+    /// Install the Leon3 coprocessor model and **calibrate** its
+    /// cost-model legs: [`Leon3Engine::calibrate`] measures this
+    /// host's actual per-pointer replay cost *and* per-batch dispatch
+    /// fee, so the argmin prices the hardware path with measured
+    /// rather than guessed coefficients.  (With honest numbers the
+    /// replay never beats the shift/mask arithmetic — installing it
+    /// serves reporting and differential validation; override the cost
+    /// model to emulate real-silicon pricing.)  Call this *after* any
+    /// [`with_cost_model`](Self::with_cost_model), which replaces every
+    /// constant including the measurements made here.
+    pub fn with_leon3(mut self, engine: Leon3Engine) -> Self {
+        let (ns_per_ptr, dispatch_ns) = engine.calibrate();
+        self.cost.leon3_ns_per_ptr = ns_per_ptr;
+        self.cost.leon3_dispatch_ns = dispatch_ns;
+        self.leon3 = Some(engine);
+        self
+    }
+
+    /// Install the Leon3 backend without the calibration run, keeping
+    /// whatever `leon3_*` constants the current [`CostModel`] holds.
+    pub fn with_leon3_uncalibrated(mut self, engine: Leon3Engine) -> Self {
+        self.leon3 = Some(engine);
+        self
+    }
+
+    /// Is the Leon3 coprocessor model installed?
+    pub fn has_leon3(&self) -> bool {
+        self.leon3.is_some()
     }
 
     /// The cost constants currently in force.
@@ -380,10 +456,38 @@ impl EngineSelector {
                 }
             }
         }
+        if let Some(l3) = &self.leon3 {
+            if l3.supports(layout) {
+                let ns = price(EngineChoice::Leon3);
+                if ns < best.1 {
+                    best = (EngineChoice::Leon3, ns);
+                }
+            }
+        }
         best.0
     }
 
     /// The backend the cost model picks for `layout` at `batch_len`.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use pgas_hw::engine::{EngineChoice, EngineSelector};
+    /// use pgas_hw::sptr::ArrayLayout;
+    ///
+    /// // A single-worker selector degenerates to the paper's fixed
+    /// // policy: the shift/mask fast path on pow2 geometry...
+    /// let sel = EngineSelector::new().with_shard_workers(1);
+    /// assert_eq!(
+    ///     sel.choice(&ArrayLayout::new(4, 8, 4), 64),
+    ///     EngineChoice::Pow2
+    /// );
+    /// // ...and software Algorithm 1 for CG's non-pow2 w_tmp struct.
+    /// assert_eq!(
+    ///     sel.choice(&ArrayLayout::new(1, 56016, 8), 64),
+    ///     EngineChoice::Software
+    /// );
+    /// ```
     pub fn choice(&self, layout: &ArrayLayout, batch_len: usize) -> EngineChoice {
         self.argmin(layout, batch_len, false)
     }
@@ -412,6 +516,10 @@ impl EngineSelector {
             }
             #[cfg(not(feature = "xla-unit"))]
             EngineChoice::XlaBatch => &self.software,
+            EngineChoice::Leon3 => self
+                .leon3
+                .as_ref()
+                .expect("choice() returned Leon3 without the model installed"),
         }
     }
 
@@ -428,11 +536,12 @@ impl EngineSelector {
     /// since construction (or the last [`reset_hits`](Self::reset_hits))
     /// — the actual backend mix, archived by
     /// `coordinator::engine_report`.
-    pub fn hit_counts(&self) -> [(EngineChoice, u64); 4] {
+    pub fn hit_counts(&self) -> [(EngineChoice, u64); 5] {
         EngineChoice::ALL
             .map(|c| (c, self.hits[c.index()].load(Ordering::Relaxed)))
     }
 
+    /// Zero every hit counter (e.g. between campaign phases).
     pub fn reset_hits(&self) {
         for h in &self.hits {
             h.store(0, Ordering::Relaxed);
@@ -593,6 +702,52 @@ mod tests {
         // both requests were recorded against the pow2 scalar path
         let hits = sel.hit_counts();
         assert_eq!(hits[EngineChoice::Pow2.index()].1, 2);
+    }
+
+    #[test]
+    fn leon3_joins_the_priced_matrix_only_when_installed() {
+        let plain = EngineSelector::new().with_shard_workers(1);
+        assert!(!plain.has_leon3());
+        // install the coprocessor model and force its cost legs to zero
+        // so the argmin must pick it wherever the hardware gate allows
+        let sel = EngineSelector::new()
+            .with_shard_workers(1)
+            .with_leon3_uncalibrated(Leon3Engine::new())
+            .with_cost_model(CostModel {
+                leon3_ns_per_ptr: 0.0,
+                leon3_dispatch_ns: 0.0,
+                ..CostModel::default()
+            });
+        let pow2 = ArrayLayout::new(4, 8, 4);
+        let soft = ArrayLayout::new(1, 56016, 8);
+        assert_eq!(sel.choice(&pow2, 64), EngineChoice::Leon3);
+        assert_eq!(sel.choice_walk(&pow2, 64), EngineChoice::Leon3);
+        // the hardware gate still overrides price: non-pow2 -> software
+        assert_eq!(sel.choice(&soft, 64), EngineChoice::Software);
+        // served through the selector: bit-identical and counted
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(pow2, &table, 1).unwrap();
+        let mut batch = PtrBatch::new();
+        for i in 0..64 {
+            batch.push(SharedPtr::for_index(&pow2, 0, i * 3), i);
+        }
+        let (mut via, mut direct) = (BatchOut::new(), BatchOut::new());
+        sel.translate(&ctx, &batch, &mut via).unwrap();
+        SoftwareEngine.translate(&ctx, &batch, &mut direct).unwrap();
+        assert_eq!(via, direct);
+        assert_eq!(sel.hit_counts()[EngineChoice::Leon3.index()].1, 1);
+    }
+
+    #[test]
+    fn with_leon3_installs_measured_coefficients() {
+        let sel = EngineSelector::new().with_leon3(Leon3Engine::new());
+        assert!(sel.has_leon3());
+        assert!(sel.cost_model().leon3_ns_per_ptr >= 1.0);
+        // honestly-priced instruction replay stays out of the hot path
+        assert_eq!(
+            sel.choice(&ArrayLayout::new(4, 8, 4), 64),
+            EngineChoice::Pow2
+        );
     }
 
     #[test]

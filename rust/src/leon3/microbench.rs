@@ -37,6 +37,7 @@ pub enum VecAddVariant {
 }
 
 impl VecAddVariant {
+    /// All four Figure-15 variants, in the figure's order.
     pub const ALL: [VecAddVariant; 4] = [
         VecAddVariant::Dynamic,
         VecAddVariant::Static,
@@ -44,6 +45,7 @@ impl VecAddVariant {
         VecAddVariant::Hw,
     ];
 
+    /// The figure's legend label for this variant.
     pub fn label(&self) -> &'static str {
         match self {
             VecAddVariant::Dynamic => "dynamic",
@@ -69,6 +71,7 @@ pub enum MatmulVariant {
 }
 
 impl MatmulVariant {
+    /// All four Figure-16 variants, in the figure's order.
     pub const ALL: [MatmulVariant; 4] = [
         MatmulVariant::Static,
         MatmulVariant::Priv1,
@@ -76,6 +79,7 @@ impl MatmulVariant {
         MatmulVariant::Hw,
     ];
 
+    /// The figure's legend label for this variant.
     pub fn label(&self) -> &'static str {
         match self {
             MatmulVariant::Static => "static",

@@ -20,6 +20,17 @@
 //! pointers live in the dedicated register file (Figure 5) — on our
 //! 64-bit SimAlpha encoding they fit the integer file, which the paper
 //! itself notes is the right design on 64-bit architectures.
+//!
+//! Two consumers sit on top of this module:
+//!
+//! * [`microbench`] — the Figure-15/16 vector-addition and matmul
+//!   runs, compiled in the paper's exact variants and executed on the
+//!   full [`Leon3Machine`] (bus contention and all);
+//! * [`Leon3Engine`](crate::engine::Leon3Engine) — the address-mapping
+//!   backend that replays `AddressEngine` batches as `pgas_incr`
+//!   sequences on the functional core under the [`Leon3Lat`] cost
+//!   model, so the FPGA datapath sits in the same differential harness
+//!   (and selector cost matrix) as the host backends.
 
 pub mod microbench;
 
@@ -105,9 +116,13 @@ fn l1d_cfg() -> CacheCfg {
 /// Result of a Leon3 run.
 #[derive(Clone, Debug)]
 pub struct Leon3Result {
+    /// Wall cycles: the maximum over all cores.
     pub cycles: u64,
+    /// Per-core execution statistics.
     pub per_core: Vec<CoreStats>,
+    /// Total AMBA AHB bus transactions (write-throughs + read misses).
     pub bus_txns: u64,
+    /// Cycles lost to bus contention across all cores.
     pub bus_stall_cycles: u64,
 }
 
@@ -130,8 +145,10 @@ struct Core {
 
 /// The 1–4 core Leon3 SMP.
 pub struct Leon3Machine {
+    /// The latency model in force (Table-2 defaults).
     pub lat: Leon3Lat,
     cores: Vec<Core>,
+    /// The simulated memory (shared segments + base LUT).
     pub mem: MemSystem,
     quantum: u64,
     bus_txns: u64,
@@ -139,6 +156,7 @@ pub struct Leon3Machine {
 }
 
 impl Leon3Machine {
+    /// A machine with `threads` cores (the board carries 1–4).
     pub fn new(threads: u32) -> Self {
         assert!((1..=4).contains(&threads), "the board carries 4 cores");
         // PGAS hardware requires pow2 THREADS; the ArchState enforces
@@ -173,6 +191,7 @@ impl Leon3Machine {
         m
     }
 
+    /// Mutable access to the simulated memory (workload setup).
     pub fn mem_mut(&mut self) -> &mut MemSystem {
         &mut self.mem
     }

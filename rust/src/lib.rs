@@ -17,11 +17,13 @@
 //! the program changing.  This crate makes that literal: the [`engine`]
 //! module defines the [`AddressEngine`] trait with a batched
 //! request/response API (`translate`, `increment`, `walk` over a
-//! reusable [`PtrBatch`]), four first-class backends
+//! reusable [`PtrBatch`]), five first-class backends
 //! (`SoftwareEngine` for any layout, `Pow2Engine` for the shift/mask
 //! hardware datapath, `ShardedEngine` partitioning batches over a
-//! persistent worker-thread pool, `XlaBatchEngine` for the PJRT batch
-//! unit behind the `xla-unit` feature), and an [`EngineSelector`] that
+//! persistent worker-thread pool, `Leon3Engine` replaying batches as
+//! coprocessor instruction sequences on the FPGA-prototype model,
+//! `XlaBatchEngine` for the PJRT batch unit behind the `xla-unit`
+//! feature), and an [`EngineSelector`] that
 //! prices every legal backend per `(layout, batch size)` request and
 //! serves the cheapest — the runtime mirror of the compiler's
 //! `Soft`/`Hw` lowering choice, with per-choice hit counters so sweeps
@@ -71,6 +73,8 @@
 //! * [`leon3`] — the FPGA prototype: SPARC-V8-class 7-stage in-order
 //!   pipeline with the Table-3 coprocessor, AMBA AHB bus contention and
 //!   DDR3 timing; vector-add and matmul microbenchmarks (Figs 15/16).
+//!   Its functional core also backs `engine::Leon3Engine`, putting the
+//!   FPGA datapath behind the same `AddressEngine` trait.
 //! * [`area`] — the FPGA resource model regenerating Table 4.
 //! * [`runtime`] — artifact geometry + scalar oracle for the batched
 //!   unit; the PJRT/XLA executor itself is behind the `xla-unit`

@@ -7,8 +7,9 @@
 //!   area     Table 4 + the component breakdown
 //!   disasm   compile a kernel and print program + PGAS census + Table 1
 //!   verify   differential check of the AddressEngine backends
-//!            (software vs pow2; + the XLA batch unit with
-//!            `--features xla-unit` and artifacts present)
+//!            (software vs pow2 vs sharded vs the Leon3 coprocessor
+//!            model; + the XLA batch unit with `--features xla-unit`
+//!            and artifacts present)
 //!   walk     demo: trace a pointer walk through a layout via the
 //!            selected AddressEngine backend
 //!
@@ -21,8 +22,8 @@ use std::process::ExitCode;
 use pgas_hw::coordinator::{self, Campaign};
 use pgas_hw::cpu::CpuModel;
 use pgas_hw::engine::{
-    AddressEngine, BatchOut, EngineCtx, EngineSelector, Pow2Engine, PtrBatch,
-    ShardedEngine, SoftwareEngine,
+    AddressEngine, BatchOut, EngineCtx, EngineSelector, Leon3Engine,
+    Pow2Engine, PtrBatch, ShardedEngine, SoftwareEngine,
 };
 use pgas_hw::npb::{self, Kernel, PaperVariant, Scale};
 use pgas_hw::sptr::{ArrayLayout, BaseTable, SharedPtr};
@@ -321,9 +322,10 @@ fn artifacts_dir(flags: &HashMap<String, String>) -> String {
 
 /// Differential conformance of the AddressEngine backends on randomized
 /// pow2 layouts: software (general Algorithm 1) vs pow2 (shift/mask) vs
-/// the sharded worker pool, and — when compiled with `xla-unit` and
-/// artifacts are present — the XLA batch unit as well.  All must agree
-/// bit-for-bit.
+/// the sharded worker pool vs the Leon3 coprocessor model (instruction
+/// replay on the FPGA-prototype functional core), and — when compiled
+/// with `xla-unit` and artifacts are present — the XLA batch unit as
+/// well.  All must agree bit-for-bit.
 fn cmd_verify(flags: &HashMap<String, String>) -> Result<(), String> {
     let batches: u32 = flags
         .get("batches")
@@ -332,6 +334,7 @@ fn cmd_verify(flags: &HashMap<String, String>) -> Result<(), String> {
     let software = SoftwareEngine;
     let pow2 = Pow2Engine;
     let sharded = ShardedEngine::new(SoftwareEngine, 4).with_min_shard_len(1);
+    let leon3 = Leon3Engine::new();
     #[cfg(feature = "xla-unit")]
     let xla = match pgas_hw::engine::XlaBatchEngine::load(artifacts_dir(flags)) {
         Ok(x) => {
@@ -376,15 +379,21 @@ fn cmd_verify(flags: &HashMap<String, String>) -> Result<(), String> {
                 "batch {batch}: sharded engine != software engine"
             ));
         }
+        leon3.translate(&ctx, &req, &mut got).map_err(|e| e.to_string())?;
+        if got != want {
+            return Err(format!(
+                "batch {batch}: leon3 engine != software engine"
+            ));
+        }
         #[cfg_attr(not(feature = "xla-unit"), allow(unused_mut))]
-        let mut engines = "software == pow2 == sharded";
+        let mut engines = "software == pow2 == sharded == leon3";
         #[cfg(feature = "xla-unit")]
         if let Some(x) = &xla {
             x.translate(&ctx, &req, &mut got).map_err(|e| e.to_string())?;
             if got != want {
                 return Err(format!("batch {batch}: xla-batch engine != software engine"));
             }
-            engines = "software == pow2 == sharded == xla-batch";
+            engines = "software == pow2 == sharded == leon3 == xla-batch";
         }
         println!(
             "batch {batch}: {n} pointers OK, {engines} (T={t}, bs=2^{l2bs}, es=2^{l2es})"

@@ -5,7 +5,7 @@
 //! The artifact geometry (batch shape, LUT capacity), the hardware
 //! config-register layout ([`UnitCfg`]) and the scalar verification
 //! oracle ([`unit_batch_scalar`]) are always compiled; the PJRT
-//! executables themselves ([`XlaUnit`]) need the `xla` crate and the
+//! executables themselves (`XlaUnit`) need the `xla` crate and the
 //! artifacts, so they sit behind the off-by-default `xla-unit` cargo
 //! feature — tier-1 builds and tests never touch PJRT.
 //!
@@ -14,7 +14,7 @@
 //! 64-bit instruction ids) is parsed, compiled by the PJRT CPU client,
 //! and invoked with concrete pointer batches.
 //!
-//! Callers should not use [`XlaUnit`] directly: the
+//! Callers should not use `XlaUnit` directly: the
 //! [`XlaBatchEngine`](crate::engine) adapter serves it through the
 //! [`AddressEngine`](crate::engine::AddressEngine) contract, chunking
 //! arbitrary batch sizes through the fixed `UNIT_BATCH` artifact shape.

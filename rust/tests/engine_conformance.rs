@@ -3,16 +3,19 @@
 //! Differential contract: every backend that claims to support a layout
 //! must produce identical `(thread, phase, va, sysva, loc)` outputs.
 //! [`SoftwareEngine`] (general Algorithm 1) is the reference;
-//! [`Pow2Engine`] is checked against it on randomized pow2 layouts, and
-//! — when built with `--features xla-unit` and artifacts are present —
-//! `XlaBatchEngine` too.
+//! [`Pow2Engine`] is checked against it on randomized pow2 layouts,
+//! [`Leon3Engine`] (instruction replay on the FPGA-prototype
+//! functional core) on the same layouts, and — when built with
+//! `--features xla-unit` and artifacts are present — `XlaBatchEngine`
+//! too.  (`rust/tests/leon3_engine.rs` extends the Leon3 differentials
+//! to the real NPB array layouts and the Fig. 15/16 cycle pins.)
 //!
 //! Plus the satellite property tests: `pack`/`unpack` round-trips and
 //! `ArrayLayout::bytes_on_thread` against a naive per-element reference.
 
 use pgas_hw::engine::{
-    AddressEngine, BatchOut, EngineCtx, EngineChoice, EngineSelector, Pow2Engine,
-    PtrBatch, ShardedEngine, SoftwareEngine,
+    AddressEngine, BatchOut, EngineCtx, EngineChoice, EngineSelector,
+    Leon3Engine, Pow2Engine, PtrBatch, ShardedEngine, SoftwareEngine,
 };
 use pgas_hw::sptr::{
     increment_general, pack, unpack, ArrayLayout, BaseTable, SharedPtr,
@@ -220,6 +223,60 @@ fn sharded_pow2_inner_matches_pow2_on_pow2_layouts() {
         Pow2Engine.translate(&ctx, &batch, &mut b).unwrap();
         assert_eq!(a, b, "layout={layout:?}");
     });
+}
+
+// ---- the Leon3 coprocessor model joins the same differential suite ----
+
+#[test]
+fn leon3_matches_software_on_pow2_layouts() {
+    let leon3 = Leon3Engine::new();
+    check("leon3 == software (translate/increment/walk)", 24, |rng| {
+        let (layout, table, mythread, batch) = random_pow2_case(rng);
+        let ctx = EngineCtx::new(layout, &table, mythread)
+            .unwrap()
+            .with_topology(Topology {
+                log2_threads_per_mc: 1,
+                log2_threads_per_node: 3,
+            });
+        let (mut hw, mut sw) = (BatchOut::new(), BatchOut::new());
+        leon3.translate(&ctx, &batch, &mut hw).unwrap();
+        SoftwareEngine.translate(&ctx, &batch, &mut sw).unwrap();
+        assert_eq!(hw, sw, "translate layout={layout:?}");
+        let (mut ph, mut ps) = (Vec::new(), Vec::new());
+        leon3.increment(&ctx, &batch, &mut ph).unwrap();
+        SoftwareEngine.increment(&ctx, &batch, &mut ps).unwrap();
+        assert_eq!(ph, ps, "increment layout={layout:?}");
+        let start = SharedPtr::for_index(&layout, 0, rng.below(1 << 12));
+        let inc = rng.below(64);
+        let steps = 1 + rng.below(200) as usize;
+        leon3.walk(&ctx, start, inc, steps, &mut hw).unwrap();
+        SoftwareEngine.walk(&ctx, start, inc, steps, &mut sw).unwrap();
+        assert_eq!(hw, sw, "walk layout={layout:?} inc={inc} steps={steps}");
+        assert!(leon3.last_cycles() > 0, "walks must bill cycles");
+    });
+}
+
+#[test]
+fn leon3_refuses_what_pow2_refuses() {
+    // the hardware gate is shared: any layout Pow2Engine turns down,
+    // Leon3Engine must turn down too (never answer wrongly)
+    let leon3 = Leon3Engine::new();
+    for layout in [
+        ArrayLayout::new(3, 8, 4),      // non-pow2 blocksize
+        ArrayLayout::new(4, 112, 4),    // CG's 112-byte element rows
+        ArrayLayout::new(1, 56016, 8),  // CG's w/w_tmp struct
+        ArrayLayout::new(5, 4, 6),      // nothing pow2 at all
+    ] {
+        assert!(!Pow2Engine.supports(&layout));
+        assert!(!leon3.supports(&layout), "layout={layout:?}");
+        let table = BaseTable::regular(layout.numthreads, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        batch.push(SharedPtr::for_index(&layout, 0, 1), 2);
+        let mut out = BatchOut::new();
+        assert!(leon3.translate(&ctx, &batch, &mut out).is_err());
+        assert!(leon3.walk(&ctx, SharedPtr::NULL, 1, 4, &mut out).is_err());
+    }
 }
 
 // ---- satellite: WalkCursor vs increment_general over random strides ----

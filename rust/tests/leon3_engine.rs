@@ -1,0 +1,181 @@
+//! `Leon3Engine` integration suite: the FPGA-coprocessor backend
+//! against the software reference over the *real* NPB array layouts
+//! (not just randomized geometry), plus the Figure-15/16 cycle-count
+//! regression pins for the Leon3 microbenchmarks the backend's cost
+//! model is anchored to.
+//!
+//! Contract under test:
+//!
+//! * on every layout the coprocessor supports, `translate` /
+//!   `increment` / `walk` are bit-identical to [`SoftwareEngine`];
+//! * every layout [`Pow2Engine`] refuses (CG's 112-byte element rows,
+//!   the 56016-byte `w_tmp` struct) is refused by `Leon3Engine` with
+//!   the same error shape — and the selector falls back to software
+//!   for it, exactly as the compiler's `Hw` lowering does;
+//! * the engine's cycle accounting and the Figure-15/16 microbench
+//!   cycle counts are deterministic and stay inside pinned envelopes.
+
+use pgas_hw::engine::{
+    AddressEngine, BatchOut, CostModel, EngineChoice, EngineCtx,
+    EngineSelector, Leon3Engine, Pow2Engine, PtrBatch, SoftwareEngine,
+};
+use pgas_hw::leon3::microbench::{
+    run_matmul, run_vecadd, MatmulVariant, VecAddVariant,
+};
+use pgas_hw::npb::{self, Kernel, Scale};
+use pgas_hw::sptr::{ArrayLayout, BaseTable, SharedPtr};
+
+/// A deterministic sample batch over the first elements of an array.
+fn sample_batch(layout: &ArrayLayout, base_va: u64, nelems: u64) -> PtrBatch {
+    let mut batch = PtrBatch::new();
+    let n = nelems.min(257);
+    for i in 0..n {
+        // stay inside the array: increments never push past the end
+        let inc = (nelems - 1 - i).min(i * 7 % 13);
+        batch.push(SharedPtr::for_index(layout, base_va, i), inc);
+    }
+    batch
+}
+
+#[test]
+fn leon3_matches_software_over_all_npb_layouts() {
+    let leon3 = Leon3Engine::new();
+    let threads = 4;
+    for kernel in Kernel::ALL {
+        let built = npb::build(
+            kernel,
+            threads,
+            pgas_hw::compiler::SourceVariant::Unoptimized,
+            &Scale::quick(),
+        );
+        let table = BaseTable::regular(threads, 1 << 32, 1 << 32);
+        for a in built.rt.arrays() {
+            let ctx = EngineCtx::new(a.layout, &table, 1).unwrap();
+            let batch = sample_batch(&a.layout, a.base_va, a.nelems);
+            let mut got = BatchOut::new();
+            if leon3.supports(&a.layout) {
+                let mut want = BatchOut::new();
+                leon3.translate(&ctx, &batch, &mut got).unwrap();
+                SoftwareEngine.translate(&ctx, &batch, &mut want).unwrap();
+                assert_eq!(got, want, "{kernel} {}: translate", a.name);
+                let steps = a.nelems.min(200) as usize;
+                leon3
+                    .walk(&ctx, batch.ptrs[0], 1, steps, &mut got)
+                    .unwrap();
+                SoftwareEngine
+                    .walk(&ctx, batch.ptrs[0], 1, steps, &mut want)
+                    .unwrap();
+                assert_eq!(got, want, "{kernel} {}: walk", a.name);
+            } else {
+                // the hardware gate refuses; it must never answer wrongly
+                assert!(
+                    leon3.translate(&ctx, &batch, &mut got).is_err(),
+                    "{kernel} {}: unsupported layout must refuse",
+                    a.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn leon3_refuses_cg_nonpow2_and_selector_falls_back_to_software() {
+    let leon3 = Leon3Engine::new();
+    // CG's 112-byte element rows and the 56016-byte w_tmp struct: the
+    // layouts the paper's compiler sends down the software fallback
+    for layout in [ArrayLayout::new(3, 112, 5), ArrayLayout::new(1, 56016, 8)]
+    {
+        assert!(!Pow2Engine.supports(&layout));
+        assert!(!leon3.supports(&layout));
+        let table = BaseTable::regular(layout.numthreads, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        batch.push(SharedPtr::for_index(&layout, 0, 2), 3);
+        let mut out = BatchOut::new();
+        let e_hw = Pow2Engine.translate(&ctx, &batch, &mut out).unwrap_err();
+        let e_l3 = leon3.translate(&ctx, &batch, &mut out).unwrap_err();
+        // identical refusal shape (only the engine name differs)
+        assert!(format!("{e_hw}").contains("pow2"));
+        assert!(format!("{e_l3}").contains("leon3"));
+        assert!(format!("{e_l3}").contains("does not support layout"));
+        // a selector with the coprocessor installed — even priced at
+        // zero — still software-falls-back on the unsupported layout
+        let sel = EngineSelector::new()
+            .with_shard_workers(1)
+            .with_leon3_uncalibrated(Leon3Engine::new())
+            .with_cost_model(CostModel {
+                leon3_ns_per_ptr: 0.0,
+                leon3_dispatch_ns: 0.0,
+                ..CostModel::default()
+            });
+        assert_eq!(sel.choice(&layout, 1 << 12), EngineChoice::Software);
+        let mut via = BatchOut::new();
+        sel.translate(&ctx, &batch, &mut via).unwrap();
+        let mut direct = BatchOut::new();
+        SoftwareEngine.translate(&ctx, &batch, &mut direct).unwrap();
+        assert_eq!(via, direct);
+    }
+}
+
+#[test]
+fn leon3_engine_cycle_accounting_is_pinned() {
+    // 2048 minimal requests (zero pointer, small inc): each costs
+    // ldi(1) + ldi(1) + pgas_incr(2) + address-generation(1) = 5.
+    let layout = ArrayLayout::new(4, 4, 4);
+    let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+    let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+    let leon3 = Leon3Engine::new();
+    let mut batch = PtrBatch::new();
+    for _ in 0..2048 {
+        batch.push(SharedPtr::NULL, 1);
+    }
+    let mut out = BatchOut::new();
+    leon3.translate(&ctx, &batch, &mut out).unwrap();
+    assert_eq!(leon3.last_cycles(), 2048 * 5);
+    // at 75 MHz that is 2048 * 5 / 75 µs
+    let ns = leon3.last_runtime_ns();
+    assert!((ns - 2048.0 * 5.0 * 1e3 / 75.0).abs() < 1.0, "{ns}");
+}
+
+/// Figure 15 (vector addition) cycle regression: deterministic counts,
+/// linear scaling in n, per-element cost envelope on the hw variant,
+/// and the paper's headline speedup band (~16x hw over dynamic).
+#[test]
+fn fig15_vecadd_cycle_pins() {
+    let hw_a = run_vecadd(2, VecAddVariant::Hw, 2048).cycles;
+    let hw_b = run_vecadd(2, VecAddVariant::Hw, 2048).cycles;
+    assert_eq!(hw_a, hw_b, "the simulator must be deterministic");
+    let hw_2x = run_vecadd(2, VecAddVariant::Hw, 4096).cycles;
+    let ratio = hw_2x as f64 / hw_a as f64;
+    assert!((1.7..2.3).contains(&ratio), "linear in n: {ratio:.2}");
+    // per-element envelope at 1 thread: the hw inner loop is ~9
+    // instructions + cache/bus time, far from the software expansion
+    let n = 2048u64;
+    let hw1 = run_vecadd(1, VecAddVariant::Hw, n).cycles as f64 / n as f64;
+    assert!((6.0..80.0).contains(&hw1), "hw cycles/elem = {hw1:.1}");
+    let dyn1 =
+        run_vecadd(1, VecAddVariant::Dynamic, n).cycles as f64 / n as f64;
+    let speedup = dyn1 / hw1;
+    assert!(
+        (6.0..40.0).contains(&speedup),
+        "Fig 15 hw-over-dynamic band: {speedup:.1}x"
+    );
+}
+
+/// Figure 16 (matmul) cycle regression: deterministic counts, the
+/// paper's variant ordering, and a per-MAC envelope on the hw variant.
+#[test]
+fn fig16_matmul_cycle_pins() {
+    let n = 16u64;
+    let hw_a = run_matmul(2, MatmulVariant::Hw, n).cycles;
+    let hw_b = run_matmul(2, MatmulVariant::Hw, n).cycles;
+    assert_eq!(hw_a, hw_b, "the simulator must be deterministic");
+    // n^3 multiply-accumulates over 2 cores
+    let per_mac = hw_a as f64 / (n * n * n) as f64 * 2.0;
+    assert!((4.0..120.0).contains(&per_mac), "hw cycles/MAC = {per_mac:.1}");
+    let st = run_matmul(2, MatmulVariant::Static, n).cycles;
+    assert!(
+        st > hw_a,
+        "static ({st}) must pay more than the coprocessor ({hw_a})"
+    );
+}
