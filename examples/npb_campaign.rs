@@ -71,6 +71,9 @@ fn main() {
         }
     }
     println!("{}", coordinator::headline_summary(&outs).render());
+    // how each run's dynamic PGAS increments were served (batched
+    // lookahead windows per backend vs scalar) against its speedup
+    println!("{}", coordinator::engine_mix_table(&outs).render());
 
     std::fs::create_dir_all("results").expect("mkdir results");
     std::fs::write("results/npb_campaign.csv", coordinator::outcomes_csv(&outs))

@@ -1,12 +1,17 @@
 //! `cargo bench` target regenerating the paper's Figure 11.
 //! Shape expectation: timing/detailed models: smaller relative gains; shared L2 bottleneck from 16 cores
-use pgas_hw::coordinator::bench_figure;
+//!
+//! Also emits the lookahead differential (`sim_batched_cycles` vs
+//! `sim_scalar_cycles` per model) into `BENCH_engine.json` and fails
+//! if the two cycle totals ever diverge.  `--quick` = CI smoke.
+use pgas_hw::coordinator::bench_models_figure;
 use pgas_hw::cpu::CpuModel;
 use pgas_hw::npb::{Kernel, Scale};
 
 fn main() {
-    bench_figure(
+    bench_models_figure(
         "Figure 11",
+        "fig11_cg_models",
         Kernel::Cg,
         &[CpuModel::Timing, CpuModel::Detailed],
         &[1, 2, 4, 8, 16],

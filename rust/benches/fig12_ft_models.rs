@@ -1,12 +1,17 @@
 //! `cargo bench` target regenerating the paper's Figure 12.
 //! Shape expectation: timing/detailed FT
-use pgas_hw::coordinator::bench_figure;
+//!
+//! Also emits the lookahead differential (`sim_batched_cycles` vs
+//! `sim_scalar_cycles` per model) into `BENCH_engine.json` and fails
+//! if the two cycle totals ever diverge.  `--quick` = CI smoke.
+use pgas_hw::coordinator::bench_models_figure;
 use pgas_hw::cpu::CpuModel;
 use pgas_hw::npb::{Kernel, Scale};
 
 fn main() {
-    bench_figure(
+    bench_models_figure(
         "Figure 12",
+        "fig12_ft_models",
         Kernel::Ft,
         &[CpuModel::Timing, CpuModel::Detailed],
         &[1, 2, 4, 8, 16],

@@ -210,23 +210,47 @@ fn main() {
          {leon3_cyc_per_ptr:.1} simulated cycles/ptr @75MHz"
     );
 
-    let json = format!(
-        "{{\n  \"bench\": \"hotpath_engine\",\n  \"batch\": {n},\n  \
-         \"layout\": {{\"blocksize\": 64, \"elemsize\": 8, \"numthreads\": 16}},\n  \
-         \"backends\": [\n{}\n  ],\n  \
-         \"walk\": {{\"steps\": {steps}, \"divmod_msteps_s\": {divmod_msteps_s:.2}, \
-         \"stepper_msteps_s\": {stepper_msteps_s:.2}, \
-         \"stepper_speedup\": {walk_speedup:.2}}},\n  \
-         \"sharded\": {{\"inner\": \"software\", \"workers\": {workers}, \
-         \"batch\": {big_n}, \"software_mptr_s\": {single_mptr_s:.2}, \
-         \"sharded_mptr_s\": {sharded_mptr_s:.2}, \
-         \"sharded_speedup\": {sharded_speedup:.2}}},\n  \
-         \"leon3\": {{\"batch\": {l3_n}, \
-         \"translate_mptr_s\": {leon3_mptr_s:.2}, \
-         \"host_ns_per_ptr\": {leon3_ns_per_ptr:.1}, \
-         \"sim_cycles_per_ptr\": {leon3_cyc_per_ptr:.2}}}\n}}\n",
-        rows.join(",\n")
+    // Merge (not overwrite): BENCH_engine.json is shared with the
+    // fig11-14 model benches, so each target may run in any order and
+    // re-running one replaces only its own sections.
+    use pgas_hw::util::bench::merge_bench_json;
+    const OUT: &str = "BENCH_engine.json";
+    merge_bench_json(OUT, "bench", "\"hotpath_engine\"");
+    merge_bench_json(OUT, "batch", &n.to_string());
+    merge_bench_json(
+        OUT,
+        "layout",
+        "{\"blocksize\": 64, \"elemsize\": 8, \"numthreads\": 16}",
     );
-    std::fs::write("BENCH_engine.json", &json).expect("write BENCH_engine.json");
-    println!("wrote BENCH_engine.json");
+    merge_bench_json(OUT, "backends", &format!("[\n{}\n  ]", rows.join(",\n")));
+    merge_bench_json(
+        OUT,
+        "walk",
+        &format!(
+            "{{\"steps\": {steps}, \"divmod_msteps_s\": {divmod_msteps_s:.2}, \
+             \"stepper_msteps_s\": {stepper_msteps_s:.2}, \
+             \"stepper_speedup\": {walk_speedup:.2}}}"
+        ),
+    );
+    merge_bench_json(
+        OUT,
+        "sharded",
+        &format!(
+            "{{\"inner\": \"software\", \"workers\": {workers}, \
+             \"batch\": {big_n}, \"software_mptr_s\": {single_mptr_s:.2}, \
+             \"sharded_mptr_s\": {sharded_mptr_s:.2}, \
+             \"sharded_speedup\": {sharded_speedup:.2}}}"
+        ),
+    );
+    merge_bench_json(
+        OUT,
+        "leon3",
+        &format!(
+            "{{\"batch\": {l3_n}, \
+             \"translate_mptr_s\": {leon3_mptr_s:.2}, \
+             \"host_ns_per_ptr\": {leon3_ns_per_ptr:.1}, \
+             \"sim_cycles_per_ptr\": {leon3_cyc_per_ptr:.2}}}"
+        ),
+    );
+    println!("merged host sections into BENCH_engine.json");
 }

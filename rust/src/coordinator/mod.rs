@@ -276,6 +276,57 @@ pub fn engine_report(kernels: &[Kernel], cores: u32, scale: &Scale) -> Table {
     t
 }
 
+/// The per-run engine-mix-vs-speedup section: one row per validated
+/// run, showing how that run's *dynamic* PGAS increments were served —
+/// batched through which [`AddressEngine`](crate::engine::AddressEngine)
+/// backend (the CPU pipelines' `Lookahead` windows) vs stepped scalar —
+/// next to the HW-vs-unopt speedup at the same (kernel, model, cores)
+/// point.  This closes the ROADMAP "engine-aware campaign scheduling"
+/// item: `RunOutcome` records the mix per run, and this table plots
+/// mix against speedup across the figures.
+///
+/// Only variants that execute hardware increments tally non-zero
+/// counts (the software lowerings never emit `pgas_inc`, so their rows
+/// show zero increments and a `-` backend mix by construction).
+pub fn engine_mix_table(outs: &[RunOutcome]) -> Table {
+    let mut t = Table::new(
+        "Engine mix vs speedup (batched = dynamic PGAS increments served \
+         by one AddressEngine call per lookahead window; speedup = \
+         unopt/HW cycles at the same kernel/model/cores)",
+        &[
+            "kernel", "variant", "model", "cores", "batched incs",
+            "scalar incs", "batched%", "runs by backend", "HW speedup",
+        ],
+    );
+    for o in outs {
+        let mix = o.engine_mix();
+        let speedup = if o.variant == PaperVariant::Hw {
+            find(outs, o.kernel, PaperVariant::Unopt, o.model, o.cores)
+                .map(|u| {
+                    format!(
+                        "{:.2}x",
+                        u.result.cycles as f64 / o.result.cycles.max(1) as f64
+                    )
+                })
+                .unwrap_or_else(|| "-".into())
+        } else {
+            "-".into()
+        };
+        t.row(&[
+            o.kernel.name().into(),
+            o.variant.label().into(),
+            o.model.name().into(),
+            o.cores.to_string(),
+            mix.batched_incs.to_string(),
+            mix.scalar_incs.to_string(),
+            format!("{:.1}%", mix.batched_share() * 100.0),
+            mix.runs_label(),
+            speedup,
+        ]);
+    }
+    t
+}
+
 /// CSV archival of raw outcomes.
 pub fn outcomes_csv(outs: &[RunOutcome]) -> String {
     let mut t = Table::new(
@@ -364,24 +415,7 @@ pub fn bench_figure(
     cores: &[u32],
     scale: Scale,
 ) {
-    let campaign = Campaign {
-        kernels: vec![kernel],
-        models: models.to_vec(),
-        cores: cores.to_vec(),
-        variants: PaperVariant::ALL.to_vec(),
-        scale,
-        jobs: Campaign::default().jobs,
-    };
-    let t0 = std::time::Instant::now();
-    let outs = campaign.run(false);
-    for &m in models {
-        println!("{}", figure_table(&outs, kernel, m, fig).render());
-    }
-    println!(
-        "figure regenerated from {} validated runs in {:.2}s\n",
-        outs.len(),
-        t0.elapsed().as_secs_f64()
-    );
+    run_figure_campaign(fig, kernel, models, cores, scale);
     // harness timing of the representative mid-size point
     let mid = cores[cores.len() / 2].min(kernel.max_cores());
     for v in PaperVariant::ALL {
@@ -396,6 +430,119 @@ pub fn bench_figure(
             },
         );
     }
+}
+
+/// Shared prefix of the figure bench drivers: run the campaign for one
+/// kernel across `models` × `cores` × all variants, print each model's
+/// figure table, the engine-mix-vs-speedup section and the elapsed
+/// line, and hand the validated outcomes back.
+fn run_figure_campaign(
+    fig: &str,
+    kernel: Kernel,
+    models: &[CpuModel],
+    cores: &[u32],
+    scale: Scale,
+) -> Vec<RunOutcome> {
+    let campaign = Campaign {
+        kernels: vec![kernel],
+        models: models.to_vec(),
+        cores: cores.to_vec(),
+        variants: PaperVariant::ALL.to_vec(),
+        scale,
+        jobs: Campaign::default().jobs,
+    };
+    let t0 = std::time::Instant::now();
+    let outs = campaign.run(false);
+    for &m in models {
+        println!("{}", figure_table(&outs, kernel, m, fig).render());
+    }
+    println!("{}", engine_mix_table(&outs).render());
+    println!(
+        "figure regenerated from {} validated runs in {:.2}s\n",
+        outs.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    outs
+}
+
+/// Driver for the timing/detailed figure benches (figs 11–14):
+/// regenerate the figure tables and the engine-mix section, then
+/// compare the representative HW point per model with lookahead
+/// batching on (reused from the campaign) vs off (a fresh scalar
+/// reference run), merging `sim_batched_cycles` / `sim_scalar_cycles`
+/// into `BENCH_engine.json` under `json_key` and **panicking if the
+/// batched and scalar cycle totals diverge in either direction** — the
+/// CI bench-smoke gate: the whole point of the lookahead design is
+/// that batching changes host throughput, never simulated time.
+///
+/// `--quick` (the CI smoke shape) shrinks the campaign to two core
+/// counts and a 4x coarser scale.
+pub fn bench_models_figure(
+    fig: &str,
+    json_key: &str,
+    kernel: Kernel,
+    models: &[CpuModel],
+    cores: &[u32],
+    scale: Scale,
+) {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let (cores, scale) = if quick {
+        let hi = cores.iter().copied().max().unwrap_or(4).min(4);
+        (vec![1, hi], Scale { factor: scale.factor.saturating_mul(4) })
+    } else {
+        (cores.to_vec(), scale)
+    };
+    let outs = run_figure_campaign(fig, kernel, models, &cores, scale);
+
+    // Batched-vs-scalar differential at the representative point.  The
+    // campaign above already simulated it with lookahead on (the
+    // default), so the batched leg is a lookup; only the scalar
+    // reference re-simulates.
+    let mid = cores[cores.len() / 2].min(kernel.max_cores());
+    let mut model_rows = Vec::new();
+    let mut regressed = Vec::new();
+    for &m in models {
+        let batched = find(&outs, kernel, PaperVariant::Hw, m, mid)
+            .expect("campaign covered the representative point");
+        let scalar =
+            npb::run_lookahead(kernel, PaperVariant::Hw, m, mid, &scale, false);
+        let (b, s) = (batched.result.cycles, scalar.result.cycles);
+        let mix = batched.engine_mix();
+        println!(
+            "  {m} x{mid}: sim_batched_cycles={b} sim_scalar_cycles={s} \
+             (batched {}/{} incs, {:.1}%)",
+            mix.batched_incs,
+            mix.batched_incs + mix.scalar_incs,
+            mix.batched_share() * 100.0
+        );
+        // Event replay promises *equality*, so any inequality is a bug:
+        // batched > scalar means batching costs simulated time, and
+        // batched < scalar means replay dropped a timing event.
+        if b != s {
+            regressed.push(format!("{m}: batched {b} != scalar {s}"));
+        }
+        model_rows.push(format!(
+            "{{\"model\": \"{}\", \"sim_batched_cycles\": {b}, \
+             \"sim_scalar_cycles\": {s}, \"batched_incs\": {}, \
+             \"scalar_incs\": {}}}",
+            m.name(),
+            mix.batched_incs,
+            mix.scalar_incs
+        ));
+    }
+    let section = format!(
+        "{{\"kernel\": \"{}\", \"variant\": \"hw\", \"cores\": {mid}, \
+         \"scale\": {}, \"models\": [{}]}}",
+        kernel.name(),
+        scale.factor,
+        model_rows.join(", ")
+    );
+    crate::util::bench::merge_bench_json("BENCH_engine.json", json_key, &section);
+    println!("merged `{json_key}` into BENCH_engine.json");
+    assert!(
+        regressed.is_empty(),
+        "batched cycle counts diverged from scalar stepping: {regressed:?}"
+    );
 }
 
 #[cfg(test)]
@@ -465,5 +612,16 @@ mod tests {
         let csv = outcomes_csv(&outs);
         assert!(csv.lines().count() == 4);
         assert!(!headline_summary(&outs).is_empty());
+        // the engine-mix section has one row per run, with the HW
+        // speedup resolved against the unopt row
+        let mix = engine_mix_table(&outs);
+        assert!(!mix.is_empty());
+        let rendered = mix.render();
+        assert!(
+            rendered
+                .lines()
+                .any(|l| l.contains("no-manual-opt+HW") && l.contains('x')),
+            "HW rows must resolve a speedup: {rendered}"
+        );
     }
 }

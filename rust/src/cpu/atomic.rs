@@ -6,36 +6,40 @@
 //! ops against one `pgas_inc`, and a 3–4 op software translation against
 //! one `pgas_ld`/`pgas_st`.
 //!
-//! Straight-line runs of independent PGAS increments (the pointer-bump
-//! bursts every compiled `upc_forall` loop body emits) are served
-//! through the batched [`replay_pgas_incs`] entry point — one
-//! `AddressEngine` call per run instead of one scalar `increment_pow2`
-//! per instruction — with identical architectural results and identical
-//! 1-cycle-per-instruction accounting.
+//! Execution runs on the shared pipeline core
+//! ([`cpu::pipeline`](crate::cpu::pipeline)): straight-line windows of
+//! independent PGAS increments are served by one batched
+//! `AddressEngine` call and replayed event-by-event; this model's
+//! entire issue policy is "every dynamic instruction costs one cycle".
 
+use super::pipeline::{run_pipeline, IssuePolicy, Lookahead};
 use super::{ArchState, CoreStats, Cpu, SharedLevel, StopReason};
-use crate::cpu::exec::{pgas_inc_run_len, replay_pgas_incs, step, StepEffect};
-use crate::engine::{Pow2Engine, PtrBatch};
-use crate::isa::Program;
+use crate::cpu::exec::StepEffect;
+use crate::isa::{Inst, Program};
 use crate::mem::MemSystem;
-use crate::sptr::SharedPtr;
+
+/// The 1-IPC issue policy.
+struct AtomicPolicy;
+
+impl IssuePolicy for AtomicPolicy {
+    fn issue(
+        &mut self,
+        _pc: u32,
+        _inst: &Inst,
+        _effect: StepEffect,
+        _shared: &mut SharedLevel,
+        stats: &mut CoreStats,
+    ) {
+        stats.cycles += 1;
+    }
+}
 
 /// 1-IPC core.
 pub struct AtomicCpu {
     state: ArchState,
     stats: CoreStats,
-    /// Backend + reusable buffers for the batched increment replay (the
-    /// instruction geometry is pow2 by construction, so the shift/mask
-    /// engine is always legal).
-    inc_engine: Pow2Engine,
-    inc_batch: PtrBatch,
-    inc_out: Vec<SharedPtr>,
-    /// Latched false on the first replay refusal (base LUT covering
-    /// fewer threads than the `threads` register).  Treated as
-    /// permanent for simplicity: a program that later shrinks
-    /// `threads_reg` via `PgasSetThreads` could make replay legal
-    /// again, but it just stays on the (always-correct) serial path.
-    inc_replay: bool,
+    pipeline: Lookahead,
+    policy: AtomicPolicy,
 }
 
 impl AtomicCpu {
@@ -43,10 +47,8 @@ impl AtomicCpu {
         Self {
             state: ArchState::new(mythread, numthreads),
             stats: CoreStats::default(),
-            inc_engine: Pow2Engine,
-            inc_batch: PtrBatch::new(),
-            inc_out: Vec::new(),
-            inc_replay: true,
+            pipeline: Lookahead::new(),
+            policy: AtomicPolicy,
         }
     }
 }
@@ -56,88 +58,19 @@ impl Cpu for AtomicCpu {
         &mut self,
         prog: &Program,
         mem: &mut MemSystem,
-        _shared: &mut SharedLevel,
+        shared: &mut SharedLevel,
         max_insts: u64,
     ) -> StopReason {
-        let mut budget = max_insts;
-        while budget > 0 {
-            if self.state.halted {
-                return StopReason::Halted;
-            }
-            // ---- batched replay path: a run of independent PGAS
-            // increments is served by one AddressEngine call instead
-            // of N scalar increments (the ROADMAP "simulator-side
-            // batching" seam; architecturally identical, same 1-IPC
-            // accounting)
-            if self.inc_replay {
-                let run =
-                    (pgas_inc_run_len(&prog.insts, self.state.pc as usize)
-                        as u64)
-                        .min(budget) as usize;
-                if run >= 2 {
-                    match replay_pgas_incs(
-                        &mut self.state,
-                        mem,
-                        &prog.insts,
-                        run,
-                        &self.inc_engine,
-                        &mut self.inc_batch,
-                        &mut self.inc_out,
-                    ) {
-                        Ok(()) => {
-                            let k = run as u64;
-                            self.stats.instructions += k;
-                            self.stats.cycles += k;
-                            self.stats.pgas_incs += k;
-                            budget -= k;
-                            continue;
-                        }
-                        // persistent refusal: fall back to serial
-                        // stepping for the rest of this machine's life
-                        Err(_) => self.inc_replay = false,
-                    }
-                }
-            }
-            let inst = prog.insts[self.state.pc as usize];
-            let effect = step(&mut self.state, mem, &inst);
-            self.stats.instructions += 1;
-            self.stats.cycles += 1;
-            budget -= 1;
-            match effect {
-                StepEffect::Mem { write, shared, local, .. } => {
-                    if write {
-                        self.stats.mem_writes += 1;
-                    } else {
-                        self.stats.mem_reads += 1;
-                    }
-                    if shared {
-                        if inst.is_pgas() {
-                            self.stats.pgas_mems += 1;
-                        }
-                        if local {
-                            self.stats.local_shared_accesses += 1;
-                        } else {
-                            self.stats.remote_shared_accesses += 1;
-                        }
-                    }
-                }
-                StepEffect::Branch { .. } => self.stats.branches += 1,
-                StepEffect::Barrier => {
-                    self.stats.barriers += 1;
-                    return StopReason::Barrier;
-                }
-                StepEffect::Halt => return StopReason::Halted,
-                StepEffect::Normal => {
-                    if matches!(
-                        inst,
-                        crate::isa::Inst::PgasIncI { .. } | crate::isa::Inst::PgasIncR { .. }
-                    ) {
-                        self.stats.pgas_incs += 1;
-                    }
-                }
-            }
-        }
-        StopReason::QuantumExpired
+        run_pipeline(
+            &mut self.state,
+            &mut self.stats,
+            &mut self.pipeline,
+            &mut self.policy,
+            prog,
+            mem,
+            shared,
+            max_insts,
+        )
     }
 
     fn state(&self) -> &ArchState {
@@ -154,6 +87,14 @@ impl Cpu for AtomicCpu {
 
     fn stats_mut(&mut self) -> &mut CoreStats {
         &mut self.stats
+    }
+
+    fn lookahead(&self) -> &Lookahead {
+        &self.pipeline
+    }
+
+    fn lookahead_mut(&mut self) -> &mut Lookahead {
+        &mut self.pipeline
     }
 }
 
@@ -256,6 +197,12 @@ mod tests {
         assert_eq!(cpu.stats().instructions, insts);
         assert_eq!(cpu.stats().cycles, insts);
         assert_eq!(cpu.stats().pgas_incs, 30);
+        // telemetry: the lookahead window spans the whole loop body
+        // (incs + bookkeeping), so every increment was served batched
+        let mix = cpu.engine_mix();
+        assert_eq!(mix.batched_incs, 30);
+        assert_eq!(mix.scalar_incs, 0);
+        assert_eq!(mix.total_runs(), 10);
     }
 
     #[test]

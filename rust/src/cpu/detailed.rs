@@ -18,11 +18,19 @@
 //! (`CompileOpts::volatile_stores`) — which is what keeps the
 //! manually-privatized code ~10% ahead of HW-supported code on the
 //! store-heavy IS and MG kernels.
+//!
+//! Execution runs on the shared pipeline core
+//! ([`cpu::pipeline`](crate::cpu::pipeline)); this file is only the
+//! OoO scheduler policy.  Batched PGAS-increment windows replay the
+//! exact `(pc, inst, effect)` sequence scalar stepping would issue, so
+//! the scheduler state — and therefore the cycle total — is
+//! bit-identical either way.
 
 use std::collections::VecDeque;
 
+use super::pipeline::{run_pipeline, IssuePolicy, Lookahead};
 use super::{ArchState, CoreStats, Cpu, SharedLevel, StopReason};
-use crate::cpu::exec::{step, StepEffect};
+use crate::cpu::exec::StepEffect;
 use crate::isa::latency::{FuKind, LatencyModel};
 use crate::isa::{Inst, Program};
 use crate::mem::MemSystem;
@@ -114,35 +122,27 @@ fn fu_index(kind: FuKind) -> usize {
     }
 }
 
-/// Out-of-order core.
-pub struct DetailedCpu {
-    state: ArchState,
-    stats: CoreStats,
+/// The OoO scheduler policy.  Scheduler state is per-quantum: the
+/// pipeline drains at barriers and quantum boundaries (a small
+/// conservative approximation); only the branch predictor persists.
+struct DetailedPolicy {
     cfg: DetailedCfg,
     lat: LatencyModel,
     core: usize,
     /// 1-bit predictor indexed by pc (sized lazily to the program).
     predictor: Vec<bool>,
+    // ---- per-quantum scheduler state (reset in `begin`) ----
+    reg_ready: [u64; VREGS],
+    /// per-FU-kind next-free times, flat arrays (§Perf: HashMap
+    /// lookup per instruction was a top-3 profile entry)
+    fu_free: [Vec<u64>; 7],
+    rob: VecDeque<u64>,
+    fetch_cycle: u64,
+    fetched_in_cycle: u32,
+    last_retire: u64,
 }
 
-impl DetailedCpu {
-    pub fn new(mythread: u32, numthreads: u32) -> Self {
-        Self {
-            state: ArchState::new(mythread, numthreads),
-            stats: CoreStats::default(),
-            cfg: DetailedCfg::default(),
-            lat: LatencyModel::default(),
-            core: mythread as usize,
-            predictor: Vec::new(),
-        }
-    }
-
-    pub fn with_cfg(mythread: u32, numthreads: u32, cfg: DetailedCfg) -> Self {
-        let mut c = Self::new(mythread, numthreads);
-        c.cfg = cfg;
-        c
-    }
-
+impl DetailedPolicy {
     fn fu_slots(&self, kind: FuKind) -> usize {
         match kind {
             FuKind::IntAlu => self.cfg.int_alus,
@@ -156,20 +156,10 @@ impl DetailedCpu {
     }
 }
 
-impl Cpu for DetailedCpu {
-    fn run(
-        &mut self,
-        prog: &Program,
-        mem: &mut MemSystem,
-        shared: &mut SharedLevel,
-        max_insts: u64,
-    ) -> StopReason {
-        // Scheduler state is per-quantum: the pipeline drains at barriers
-        // and quantum boundaries (a small conservative approximation).
-        let mut reg_ready = [0u64; VREGS];
-        // per-FU-kind next-free times, flat arrays (§Perf: HashMap
-        // lookup per instruction was a top-3 profile entry)
-        let mut fu_free: [Vec<u64>; 7] = [
+impl IssuePolicy for DetailedPolicy {
+    fn begin(&mut self, prog: &Program) {
+        self.reg_ready = [0; VREGS];
+        self.fu_free = [
             vec![0; self.fu_slots(FuKind::IntAlu)],
             vec![0; self.fu_slots(FuKind::IntMulDiv)],
             vec![0; self.fu_slots(FuKind::FpAlu)],
@@ -178,142 +168,163 @@ impl Cpu for DetailedCpu {
             vec![0; self.fu_slots(FuKind::PgasUnit)],
             Vec::new(),
         ];
+        self.rob.clear();
+        self.fetch_cycle = 0;
+        self.fetched_in_cycle = 0;
+        self.last_retire = 0;
         if self.predictor.len() < prog.insts.len() {
             self.predictor.resize(prog.insts.len(), false);
         }
-        let mut rob: VecDeque<u64> = VecDeque::with_capacity(self.cfg.rob);
-        let mut fetch_cycle = 0u64;
-        let mut fetched_in_cycle = 0u32;
-        let mut last_retire = 0u64;
-        let mut budget = max_insts;
-        let mut stop = StopReason::QuantumExpired;
+    }
 
-        while budget > 0 {
-            if self.state.halted {
-                stop = StopReason::Halted;
-                break;
-            }
-            let pc = self.state.pc;
-            let inst = prog.insts[pc as usize];
-            // ---- functional execution first (architectural truth) ----
-            let effect = step(&mut self.state, mem, &inst);
-            self.stats.instructions += 1;
-            budget -= 1;
+    fn issue(
+        &mut self,
+        pc: u32,
+        inst: &Inst,
+        effect: StepEffect,
+        shared: &mut SharedLevel,
+        _stats: &mut CoreStats,
+    ) {
+        // ---- fetch (width-limited) ----
+        if self.fetched_in_cycle >= self.cfg.fetch_width {
+            self.fetch_cycle += 1;
+            self.fetched_in_cycle = 0;
+        }
+        self.fetched_in_cycle += 1;
 
-            // ---- timing: fetch ----
-            if fetched_in_cycle >= self.cfg.fetch_width {
-                fetch_cycle += 1;
-                fetched_in_cycle = 0;
-            }
-            fetched_in_cycle += 1;
+        // ---- ROB back-pressure ----
+        if self.rob.len() >= self.cfg.rob {
+            let oldest = self.rob.pop_front().unwrap();
+            self.fetch_cycle = self.fetch_cycle.max(oldest);
+        }
 
-            // ---- ROB back-pressure ----
-            if rob.len() >= self.cfg.rob {
-                let oldest = rob.pop_front().unwrap();
-                fetch_cycle = fetch_cycle.max(oldest);
-            }
+        let (srcs, nsrc, dst) = operands(inst);
+        let mut ready = self.fetch_cycle;
+        for &s in &srcs[..nsrc] {
+            ready = ready.max(self.reg_ready[s]);
+        }
 
-            let (srcs, nsrc, dst) = operands(&inst);
-            let mut ready = fetch_cycle;
-            for &s in &srcs[..nsrc] {
-                ready = ready.max(reg_ready[s]);
-            }
+        let cost = self.lat.cost(inst);
 
-            let cost = self.lat.cost(&inst);
-            let _is_mem = inst.is_mem();
-
-            // ---- FU allocation ----
-            let issue = if cost.fu == FuKind::None {
-                ready
-            } else {
-                let slots = &mut fu_free[fu_index(cost.fu)];
-                let mut best = 0;
-                for (idx, &t) in slots.iter().enumerate() {
-                    if t < slots[best] {
-                        best = idx;
-                    }
-                }
-                let issue = ready.max(slots[best]);
-                slots[best] = issue + cost.init_interval as u64;
-                issue
-            };
-
-            // ---- completion ----
-            let mut complete = issue + cost.latency as u64;
-            match effect {
-                StepEffect::Mem { sysva, write, shared: is_shared, local, .. } => {
-                    let hier = shared.access(self.core, sysva, write);
-                    if write {
-                        // stores retire via the store buffer
-                        complete = issue + 1;
-                        self.stats.mem_writes += 1;
-                        // NB: the prototype's volatile-asm stores
-                        // constrain GCC's scheduling (modeled as the
-                        // extra reload instruction emitted by the
-                        // compiler), not the OoO hardware — no runtime
-                        // fence here. The store buffer absorbs `hier`.
-                        let _ = hier;
-                    } else {
-                        complete = issue + cost.latency as u64 + hier;
-                        self.stats.mem_reads += 1;
-                    }
-                    if is_shared {
-                        if inst.is_pgas() {
-                            self.stats.pgas_mems += 1;
-                        }
-                        if local {
-                            self.stats.local_shared_accesses += 1;
-                        } else {
-                            self.stats.remote_shared_accesses += 1;
-                        }
-                    }
-                }
-                StepEffect::Branch { taken } => {
-                    self.stats.branches += 1;
-                    let predicted = self.predictor[pc as usize];
-                    self.predictor[pc as usize] = taken;
-                    if predicted != taken {
-                        fetch_cycle = complete + self.cfg.mispredict_penalty;
-                        fetched_in_cycle = 0;
-                    }
-                }
-                StepEffect::Barrier => {
-                    self.stats.barriers += 1;
-                    stop = StopReason::Barrier;
-                }
-                StepEffect::Halt => {
-                    stop = StopReason::Halted;
-                }
-                StepEffect::Normal => {
-                    if matches!(inst, Inst::PgasIncI { .. } | Inst::PgasIncR { .. }) {
-                        self.stats.pgas_incs += 1;
-                        reg_ready[VREG_CC] = complete;
-                    }
+        // ---- FU allocation ----
+        let issue = if cost.fu == FuKind::None {
+            ready
+        } else {
+            let slots = &mut self.fu_free[fu_index(cost.fu)];
+            let mut best = 0;
+            for (idx, &t) in slots.iter().enumerate() {
+                if t < slots[best] {
+                    best = idx;
                 }
             }
+            let issue = ready.max(slots[best]);
+            slots[best] = issue + cost.init_interval as u64;
+            issue
+        };
 
-            if let Some(d) = dst {
-                // zero registers are always ready
-                if d != 31 && d != 63 {
-                    reg_ready[d] = complete;
+        // ---- completion ----
+        let mut complete = issue + cost.latency as u64;
+        match effect {
+            StepEffect::Mem { sysva, write, .. } => {
+                let hier = shared.access(self.core, sysva, write);
+                if write {
+                    // stores retire via the store buffer
+                    complete = issue + 1;
+                    // NB: the prototype's volatile-asm stores
+                    // constrain GCC's scheduling (modeled as the
+                    // extra reload instruction emitted by the
+                    // compiler), not the OoO hardware — no runtime
+                    // fence here. The store buffer absorbs `hier`.
+                    let _ = hier;
+                } else {
+                    complete = issue + cost.latency as u64 + hier;
                 }
             }
-            // in-order retire
-            last_retire = last_retire.max(complete);
-            rob.push_back(last_retire);
-
-            if matches!(stop, StopReason::Barrier | StopReason::Halted)
-                || self.state.halted
-            {
-                if matches!(stop, StopReason::QuantumExpired) {
-                    stop = StopReason::Halted;
+            StepEffect::Branch { taken } => {
+                let predicted = self.predictor[pc as usize];
+                self.predictor[pc as usize] = taken;
+                if predicted != taken {
+                    self.fetch_cycle = complete + self.cfg.mispredict_penalty;
+                    self.fetched_in_cycle = 0;
                 }
-                break;
+            }
+            StepEffect::Normal => {
+                if matches!(inst, Inst::PgasIncI { .. } | Inst::PgasIncR { .. }) {
+                    self.reg_ready[VREG_CC] = complete;
+                }
+            }
+            StepEffect::Barrier | StepEffect::Halt => {}
+        }
+
+        if let Some(d) = dst {
+            // zero registers are always ready
+            if d != 31 && d != 63 {
+                self.reg_ready[d] = complete;
             }
         }
+        // in-order retire
+        self.last_retire = self.last_retire.max(complete);
+        self.rob.push_back(self.last_retire);
+    }
+
+    fn finish(&mut self, stats: &mut CoreStats) {
         // drain
-        self.stats.cycles += last_retire.max(fetch_cycle);
-        stop
+        stats.cycles += self.last_retire.max(self.fetch_cycle);
+    }
+}
+
+/// Out-of-order core.
+pub struct DetailedCpu {
+    state: ArchState,
+    stats: CoreStats,
+    pipeline: Lookahead,
+    policy: DetailedPolicy,
+}
+
+impl DetailedCpu {
+    pub fn new(mythread: u32, numthreads: u32) -> Self {
+        Self::with_cfg(mythread, numthreads, DetailedCfg::default())
+    }
+
+    pub fn with_cfg(mythread: u32, numthreads: u32, cfg: DetailedCfg) -> Self {
+        Self {
+            state: ArchState::new(mythread, numthreads),
+            stats: CoreStats::default(),
+            pipeline: Lookahead::new(),
+            policy: DetailedPolicy {
+                cfg,
+                lat: LatencyModel::default(),
+                core: mythread as usize,
+                predictor: Vec::new(),
+                reg_ready: [0; VREGS],
+                fu_free: Default::default(),
+                rob: VecDeque::with_capacity(cfg.rob),
+                fetch_cycle: 0,
+                fetched_in_cycle: 0,
+                last_retire: 0,
+            },
+        }
+    }
+}
+
+impl Cpu for DetailedCpu {
+    fn run(
+        &mut self,
+        prog: &Program,
+        mem: &mut MemSystem,
+        shared: &mut SharedLevel,
+        max_insts: u64,
+    ) -> StopReason {
+        run_pipeline(
+            &mut self.state,
+            &mut self.stats,
+            &mut self.pipeline,
+            &mut self.policy,
+            prog,
+            mem,
+            shared,
+            max_insts,
+        )
     }
 
     fn state(&self) -> &ArchState {
@@ -330,6 +341,14 @@ impl Cpu for DetailedCpu {
 
     fn stats_mut(&mut self) -> &mut CoreStats {
         &mut self.stats
+    }
+
+    fn lookahead(&self) -> &Lookahead {
+        &self.pipeline
+    }
+
+    fn lookahead_mut(&mut self) -> &mut Lookahead {
+        &mut self.pipeline
     }
 }
 
@@ -429,5 +448,40 @@ mod tests {
         let (ci, _) = run_cycles(&p);
         let (ca, _) = run_cycles(&Program::new("adds", adds));
         assert!(ci > ca, "single pgas unit {ci} vs 4 ALUs {ca}");
+    }
+
+    #[test]
+    fn batched_increment_window_is_cycle_exact_vs_scalar() {
+        use crate::sptr::{pack, ArrayLayout, SharedPtr};
+        let layout = ArrayLayout::new(4, 8, 4);
+        // independent bumps + loop bookkeeping: the OoO scheduler sees
+        // the same event sequence batched or scalar
+        let prog = Program::new(
+            "bump",
+            vec![
+                Inst::Ldi { rd: 4, imm: 20 },
+                Inst::PgasIncI { rd: 1, ra: 1, l2es: 3, l2bs: 2, l2inc: 0 }, // 1
+                Inst::PgasIncI { rd: 2, ra: 2, l2es: 3, l2bs: 2, l2inc: 0 },
+                Inst::PgasIncI { rd: 3, ra: 3, l2es: 3, l2bs: 2, l2inc: 0 },
+                Inst::Opi { op: IntOp::Add, rd: 4, ra: 4, imm: -1 },
+                Inst::Br { cond: Cond::Gt, ra: 4, target: 1 },
+                Inst::Halt,
+            ],
+        );
+        let run = |lookahead: bool| {
+            let mut cpu = DetailedCpu::new(0, 4);
+            cpu.lookahead_mut().set_enabled(lookahead);
+            cpu.state_mut().set_r(1, pack(&SharedPtr::for_index(&layout, 0, 0)));
+            cpu.state_mut().set_r(2, pack(&SharedPtr::for_index(&layout, 0, 7)));
+            cpu.state_mut().set_r(3, pack(&SharedPtr::for_index(&layout, 64, 2)));
+            let mut mem = MemSystem::new(4);
+            cpu.run(&prog, &mut mem, &mut shared1(), u64::MAX);
+            (cpu.stats().cycles, cpu.engine_mix().batched_incs)
+        };
+        let (batched_cycles, batched) = run(true);
+        let (scalar_cycles, none) = run(false);
+        assert_eq!(batched_cycles, scalar_cycles, "event replay is exact");
+        assert!(batched >= 60, "every trip's window batched: {batched}");
+        assert_eq!(none, 0);
     }
 }

@@ -1,23 +1,19 @@
-//! The shared functional executor: architectural semantics of every
-//! SimAlpha instruction, including the PGAS extension.
+//! The shared functional executor: **pure architectural execution** of
+//! every SimAlpha instruction, including the PGAS extension.
 //!
-//! All three CPU models call [`step`]; they differ only in the cycle
-//! accounting layered on the returned [`StepEffect`].
-//!
-//! Straight-line runs of PGAS increments additionally have a *batched*
-//! replay entry point ([`replay_pgas_incs`] + [`pgas_inc_run_len`]):
-//! instead of one scalar `increment_pow2` call per instruction, a whole
-//! run is lowered into a [`PtrBatch`](crate::engine::PtrBatch) and
-//! served by one [`AddressEngine`](crate::engine::AddressEngine) call —
-//! the same batched API the host side uses — with bit-identical
-//! architectural results.  The atomic (trace-replay) model routes
-//! eligible runs through it; the timing/detailed models keep stepping
-//! scalar because their cycle accounting is inherently per-instruction.
+//! All three CPU models call [`step`] through the shared pipeline core
+//! ([`cpu::pipeline`](crate::cpu::pipeline)); they differ only in the
+//! cycle accounting their `IssuePolicy` layers on the returned
+//! [`StepEffect`].  Batching of straight-line PGAS-increment runs —
+//! one [`AddressEngine`](crate::engine::AddressEngine) call per run
+//! instead of one scalar `increment_pow2` per instruction — lives in
+//! the pipeline's `Lookahead`, which *all three* models (atomic,
+//! timing, detailed) now route through with per-instruction event
+//! replay keeping cycle totals identical to scalar stepping.
 
-use crate::engine::{AddressEngine, EngineCtx, EngineError, PtrBatch};
 use crate::isa::{Cond, FpOp, Inst, IntOp, MemWidth, ZERO};
 use crate::mem::MemSystem;
-use crate::sptr::{self, increment_pow2, pack, unpack, ArrayLayout, SharedPtr, Topology};
+use crate::sptr::{self, increment_pow2, pack, unpack, Topology};
 use crate::util::log2_floor;
 
 /// Architectural state of one core.
@@ -309,123 +305,12 @@ pub fn step(st: &mut ArchState, mem: &mut MemSystem, inst: &Inst) -> StepEffect 
     effect
 }
 
-/// The `(l2es, l2bs)` geometry of a PGAS increment, `None` for any
-/// other instruction.
-#[inline]
-fn inc_geometry(inst: &Inst) -> Option<(u8, u8)> {
-    match *inst {
-        Inst::PgasIncI { l2es, l2bs, .. } | Inst::PgasIncR { l2es, l2bs, .. } => {
-            Some((l2es, l2bs))
-        }
-        _ => None,
-    }
-}
-
-/// Length of the maximal *batchable* run of PGAS increment instructions
-/// starting at `pc`: consecutive `PgasIncI`/`PgasIncR` sharing one
-/// `(l2es, l2bs)` geometry, where no member reads a register an earlier
-/// member of the run wrote.  Self-increments (`rd == ra`, the
-/// pointer-bump idiom every compiled `upc_forall` loop emits) are fine;
-/// a cross-dependency or a dependent chain ends the run, because
-/// batching it would change which value the later increment reads.
-///
-/// Returns 0 when the instruction at `pc` is not a PGAS increment.
-pub fn pgas_inc_run_len(insts: &[Inst], pc: usize) -> usize {
-    let Some(first) = insts.get(pc).and_then(inc_geometry) else {
-        return 0;
-    };
-    let mut written = [false; 32];
-    let mut len = 0;
-    for inst in &insts[pc..] {
-        if inc_geometry(inst) != Some(first) {
-            break;
-        }
-        let (rd, ra, rb) = match *inst {
-            Inst::PgasIncI { rd, ra, .. } => (rd, ra, ZERO),
-            Inst::PgasIncR { rd, ra, rb, .. } => (rd, ra, rb),
-            _ => unreachable!("inc_geometry() only accepts PGAS increments"),
-        };
-        if written[ra as usize] || written[rb as usize] {
-            break;
-        }
-        if rd != ZERO {
-            written[rd as usize] = true;
-        }
-        len += 1;
-    }
-    len
-}
-
-/// Execute `len` consecutive PGAS increment instructions at `st.pc`
-/// through **one** batched [`AddressEngine`] call instead of `len`
-/// per-instruction scalar `increment_pow2` calls — the trace-replay /
-/// lookahead entry point (ROADMAP "simulator-side batching").
-///
-/// `len` must not exceed [`pgas_inc_run_len`] for the same position;
-/// within that contract the result is architecturally identical to
-/// `len` serial [`step`] calls: every `rd` receives the packed
-/// incremented pointer, `st.cc_loc` holds the locality of the *last*
-/// increment (intermediate condition codes are dead — the run contains
-/// no branch to observe them), and `st.pc` advances past the run.
-///
-/// Fails (leaving `st` untouched, so the caller can fall back to
-/// serial stepping) when the engine refuses the request — e.g. the
-/// machine's base LUT covers fewer threads than the `threads` register
-/// claims, or the chosen backend does not support the geometry.
-pub fn replay_pgas_incs(
-    st: &mut ArchState,
-    mem: &MemSystem,
-    insts: &[Inst],
-    len: usize,
-    engine: &dyn AddressEngine,
-    batch: &mut PtrBatch,
-    out: &mut Vec<SharedPtr>,
-) -> Result<(), EngineError> {
-    let pc = st.pc as usize;
-    debug_assert!(len <= pgas_inc_run_len(insts, pc), "run is not batchable");
-    let run = &insts[pc..pc + len];
-    let (l2es, l2bs) = match run.first().and_then(inc_geometry) {
-        Some(g) => g,
-        None => return Ok(()), // empty replay: nothing to do
-    };
-    let layout =
-        ArrayLayout::new(1u64 << l2bs, 1u64 << l2es, st.threads_reg);
-    let ctx = EngineCtx::new(layout, &mem.base_table, st.mythread)?
-        .with_topology(st.topo);
-    batch.clear();
-    for inst in run {
-        match *inst {
-            Inst::PgasIncI { ra, l2inc, .. } => {
-                batch.push(unpack(st.r(ra)), 1u64 << l2inc)
-            }
-            Inst::PgasIncR { ra, rb, .. } => {
-                batch.push(unpack(st.r(ra)), st.r(rb))
-            }
-            _ => unreachable!("replay run must be PGAS increments"),
-        }
-    }
-    engine.increment(&ctx, batch, out)?;
-    // writeback: registers in program order, condition code from the
-    // last increment (matching what serial execution leaves behind)
-    for (inst, q) in run.iter().zip(out.iter()) {
-        let rd = match *inst {
-            Inst::PgasIncI { rd, .. } | Inst::PgasIncR { rd, .. } => rd,
-            _ => unreachable!(),
-        };
-        st.set_r(rd, pack(q));
-    }
-    if let Some(q) = out.last() {
-        st.cc_loc = sptr::locality(q.thread, st.mythread, &st.topo) as u8;
-    }
-    st.pc += len as u32;
-    Ok(())
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::isa::Program;
     use crate::mem::seg_base;
+    use crate::sptr::{ArrayLayout, SharedPtr};
 
     fn run_to_halt(prog: &Program, st: &mut ArchState, mem: &mut MemSystem) {
         let mut fuel = 100_000;
@@ -565,101 +450,5 @@ mod tests {
     fn div_by_zero_defined() {
         assert_eq!(int_op(IntOp::Div, 5, 0), 0);
         assert_eq!(int_op(IntOp::Rem, 5, 0), 0);
-    }
-
-    // ---- the batched replay entry point ----
-
-    /// The vecadd-HW idiom: three independent self-increments
-    /// (pa += T; pb += T; pc += T), one batchable run of 3.
-    fn independent_inc_run() -> Vec<Inst> {
-        vec![
-            Inst::PgasIncI { rd: 1, ra: 1, l2es: 3, l2bs: 2, l2inc: 1 },
-            Inst::PgasIncI { rd: 2, ra: 2, l2es: 3, l2bs: 2, l2inc: 1 },
-            Inst::PgasIncR { rd: 3, ra: 3, rb: 4, l2es: 3, l2bs: 2 },
-            Inst::Halt,
-        ]
-    }
-
-    #[test]
-    fn run_detection_accepts_self_increments_and_stops_on_chains() {
-        let insts = independent_inc_run();
-        assert_eq!(pgas_inc_run_len(&insts, 0), 3);
-        assert_eq!(pgas_inc_run_len(&insts, 1), 2);
-        assert_eq!(pgas_inc_run_len(&insts, 3), 0, "halt is not an inc");
-        // a dependent chain (r1 -> r2 reads r1) must not batch past
-        // the producer
-        let chain = vec![
-            Inst::PgasIncI { rd: 2, ra: 1, l2es: 3, l2bs: 2, l2inc: 0 },
-            Inst::PgasIncI { rd: 3, ra: 2, l2es: 3, l2bs: 2, l2inc: 0 },
-            Inst::Halt,
-        ];
-        assert_eq!(pgas_inc_run_len(&chain, 0), 1);
-        // a geometry change ends the run too
-        let mixed = vec![
-            Inst::PgasIncI { rd: 1, ra: 1, l2es: 3, l2bs: 2, l2inc: 0 },
-            Inst::PgasIncI { rd: 2, ra: 2, l2es: 2, l2bs: 2, l2inc: 0 },
-            Inst::Halt,
-        ];
-        assert_eq!(pgas_inc_run_len(&mixed, 0), 1);
-        // a register-form inc whose rb was written earlier cannot batch
-        let rb_dep = vec![
-            Inst::PgasIncI { rd: 4, ra: 1, l2es: 3, l2bs: 2, l2inc: 0 },
-            Inst::PgasIncR { rd: 5, ra: 2, rb: 4, l2es: 3, l2bs: 2 },
-            Inst::Halt,
-        ];
-        assert_eq!(pgas_inc_run_len(&rb_dep, 0), 1);
-    }
-
-    #[test]
-    fn batched_replay_is_bit_identical_to_serial_stepping() {
-        use crate::engine::Pow2Engine;
-        let layout = ArrayLayout::new(4, 8, 4);
-        let insts = independent_inc_run();
-        let seed = |st: &mut ArchState| {
-            st.set_r(1, pack(&SharedPtr::for_index(&layout, 0, 3)));
-            st.set_r(2, pack(&SharedPtr::for_index(&layout, 0, 17)));
-            st.set_r(3, pack(&SharedPtr::for_index(&layout, 64, 9)));
-            st.set_r(4, 29); // register increment operand
-        };
-        // serial reference
-        let mut serial = ArchState::new(2, 4);
-        let mut mem = MemSystem::new(4);
-        seed(&mut serial);
-        for _ in 0..3 {
-            let inst = insts[serial.pc as usize];
-            step(&mut serial, &mut mem, &inst);
-        }
-        // batched replay
-        let mut replayed = ArchState::new(2, 4);
-        seed(&mut replayed);
-        let run = pgas_inc_run_len(&insts, 0);
-        let (mut batch, mut out) = (PtrBatch::new(), Vec::new());
-        replay_pgas_incs(
-            &mut replayed, &mem, &insts, run, &Pow2Engine, &mut batch,
-            &mut out,
-        )
-        .unwrap();
-        assert_eq!(replayed.pc, serial.pc);
-        assert_eq!(replayed.cc_loc, serial.cc_loc);
-        for r in 0..8 {
-            assert_eq!(replayed.r(r), serial.r(r), "register r{r}");
-        }
-    }
-
-    #[test]
-    fn replay_refuses_an_undersized_lut_without_touching_state() {
-        use crate::engine::Pow2Engine;
-        let insts = independent_inc_run();
-        let mut st = ArchState::new(0, 8); // claims 8 threads...
-        st.set_r(4, 1);
-        let before_pc = st.pc;
-        let mem = MemSystem::new(4); // ...but the LUT covers 4
-        let (mut batch, mut out) = (PtrBatch::new(), Vec::new());
-        let err = replay_pgas_incs(
-            &mut st, &mem, &insts, 3, &Pow2Engine, &mut batch, &mut out,
-        )
-        .unwrap_err();
-        assert!(matches!(err, EngineError::TableTooSmall { .. }));
-        assert_eq!(st.pc, before_pc, "failed replay must not move pc");
     }
 }

@@ -9,18 +9,25 @@
 //!   dependency/functional-unit scheduler over a ROB window (Figures
 //!   11–14 "detailed"/O3 series).
 //!
-//! All three share one *functional* executor ([`exec`]) so architectural
-//! results are identical across models; the models differ only in how
-//! many cycles each dynamic instruction costs.
+//! All three share one *functional* executor ([`exec`]) and one
+//! fetch/decode/dispatch loop ([`pipeline`]) so architectural results
+//! are identical across models; each model is only an
+//! [`IssuePolicy`](pipeline::IssuePolicy) — how many cycles one
+//! dynamic instruction costs.  The pipeline's `Lookahead` batches
+//! straight-line runs of PGAS increments through one `AddressEngine`
+//! call in *every* model, replaying per-instruction timing events so
+//! cycle totals match scalar stepping exactly.
 
 pub mod atomic;
 pub mod detailed;
 pub mod exec;
+pub mod pipeline;
 pub mod timing;
 
 pub use atomic::AtomicCpu;
 pub use detailed::{DetailedCfg, DetailedCpu};
 pub use exec::{ArchState, StepEffect};
+pub use pipeline::{EngineMix, Lookahead};
 pub use timing::{HierLatency, TimingCpu};
 
 use crate::cache::{CacheCfg, Directory, SetAssocCache};
@@ -209,6 +216,16 @@ pub trait Cpu {
     fn state_mut(&mut self) -> &mut ArchState;
     fn stats(&self) -> &CoreStats;
     fn stats_mut(&mut self) -> &mut CoreStats;
+
+    /// The core's lookahead front end (batching knob + engine-mix
+    /// telemetry) — every model runs on the shared pipeline.
+    fn lookahead(&self) -> &Lookahead;
+    fn lookahead_mut(&mut self) -> &mut Lookahead;
+
+    /// How this core's dynamic PGAS increments were served so far.
+    fn engine_mix(&self) -> EngineMix {
+        self.lookahead().mix()
+    }
 
     /// Account `extra` stall cycles imposed from outside (bus contention
     /// computed by the machine-level contention model).

@@ -1,0 +1,683 @@
+//! The shared CPU pipeline core: one fetch/decode/dispatch loop for all
+//! three models, with a [`Lookahead`] window that batches straight-line
+//! runs of PGAS increments through one
+//! [`AddressEngine`](crate::engine::AddressEngine) call and then
+//! *replays the per-instruction timing events* against the batch
+//! results.
+//!
+//! The split of responsibilities after this refactor:
+//!
+//! * [`exec::step`](crate::cpu::exec::step) — pure architectural
+//!   execution: one instruction, no cycle accounting;
+//! * [`IssuePolicy`] — each model's issue/latency policy: how many
+//!   cycles one dynamic instruction costs, given its pc, decoded form
+//!   and architectural [`StepEffect`] (the atomic model charges 1, the
+//!   timing model fetch + latency-class + hierarchy time, the detailed
+//!   model runs its OoO scheduler);
+//! * [`run_pipeline`] — the loop all three models share: lookahead →
+//!   batched increment serve → per-instruction event replay, or scalar
+//!   step; plus the per-effect statistics bookkeeping that used to be
+//!   triplicated across the models.
+//!
+//! ## Why batching does not change cycle totals
+//!
+//! The batched path issues exactly the same `(pc, inst, effect)` event
+//! sequence to the policy that scalar stepping would, in the same
+//! order, against the same shared-hierarchy state.  Every model's cycle
+//! accounting is a deterministic function of that sequence, so cycle
+//! totals are **bit-identical** whether a run was served batched or
+//! scalar — in all three models, not just atomic.  The differential
+//! suite (`tests/cpu_pipeline.rs`) pins this across the five NPB
+//! kernels; what batching buys is host-side throughput (one engine
+//! call per run instead of one scalar `increment_pow2` per
+//! instruction), exactly the leverage the ROADMAP's "lookahead design
+//! that preserves per-instruction accounting" asked for.
+//!
+//! ## The window planner
+//!
+//! [`plan_window`] is the single definition of run eligibility (it
+//! replaces the `pgas_inc_run_len` heuristic that the atomic model
+//! used to wrap ad hoc).  A window starts at a PGAS increment and
+//! extends over:
+//!
+//! * further `PgasIncI`/`PgasIncR` sharing the first increment's
+//!   `(l2es, l2bs)` geometry whose source registers were not written
+//!   earlier in the window — the batch reads *pre-window* register
+//!   state, so a dependent increment must end the window;
+//! * interleaved *neutral* ops (register-only ALU/FP work: `Opi`,
+//!   `Opr`, `Ldi`, `Fop`, `FCmpLt`, `CvtIF`, `CvtFI`, `Nop`) — these
+//!   are executed scalar, in program order, during event replay, so
+//!   they may freely **read** earlier results (including an earlier
+//!   increment's destination); their integer destinations are tracked
+//!   so no later increment reads a value the batch would miss.
+//!
+//! Anything else — memory ops, branches, barriers, `PgasSetThreads`
+//! and friends — ends the window.  Trailing neutral ops after the last
+//! increment are trimmed (there is nothing to batch past it), and a
+//! window must contain at least [`MIN_RUN_INCS`] increments to be
+//! worth an engine dispatch.
+
+use crate::cpu::exec::{step, StepEffect};
+use crate::cpu::{ArchState, CoreStats, SharedLevel, StopReason};
+use crate::engine::{EngineChoice, EngineCtx, EngineError, EngineSelector, PtrBatch};
+use crate::isa::{Inst, Program, ZERO};
+use crate::mem::MemSystem;
+use crate::sptr::{self, pack, unpack, ArrayLayout, SharedPtr};
+
+/// Minimum increments in a window worth one batched engine dispatch.
+pub const MIN_RUN_INCS: usize = 2;
+
+/// The `(l2es, l2bs)` geometry of a PGAS increment, `None` for any
+/// other instruction.
+#[inline]
+fn inc_geometry(inst: &Inst) -> Option<(u8, u8)> {
+    match *inst {
+        Inst::PgasIncI { l2es, l2bs, .. } | Inst::PgasIncR { l2es, l2bs, .. } => {
+            Some((l2es, l2bs))
+        }
+        _ => None,
+    }
+}
+
+/// If `inst` is a register-only op the window can carry along, the
+/// integer register it writes (`Some(None)` for ops that write no
+/// integer register, e.g. FP arithmetic); `None` if the op cannot ride
+/// in a window at all.
+#[inline]
+fn neutral_dst(inst: &Inst) -> Option<Option<u8>> {
+    match *inst {
+        Inst::Opi { rd, .. }
+        | Inst::Opr { rd, .. }
+        | Inst::Ldi { rd, .. }
+        | Inst::FCmpLt { rd, .. }
+        | Inst::CvtFI { rd, .. } => Some(Some(rd)),
+        Inst::Fop { .. } | Inst::CvtIF { .. } | Inst::Nop => Some(None),
+        _ => None,
+    }
+}
+
+/// A batchable window found by [`plan_window`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WindowPlan {
+    /// Total instructions in the window (it always ends at its last
+    /// increment — trailing neutral ops are trimmed).
+    pub len: usize,
+    /// How many of them are PGAS increments (≥ [`MIN_RUN_INCS`]).
+    pub incs: usize,
+}
+
+/// Find the maximal batchable window starting at `pc`, scanning at
+/// most `max_len` instructions ahead (the caller bounds this by the
+/// lookahead depth *and* the remaining quantum budget).  Returns
+/// `None` when the instruction at `pc` is not a PGAS increment or the
+/// window would contain fewer than [`MIN_RUN_INCS`] increments.
+///
+/// This is the one definition of run eligibility; the invariant the
+/// property suite checks is that **no increment in a returned window
+/// reads a register written by an earlier window member** — that is
+/// what makes serving all increments from pre-window state legal.
+pub fn plan_window(insts: &[Inst], pc: usize, max_len: usize) -> Option<WindowPlan> {
+    let first = insts.get(pc).and_then(inc_geometry)?;
+    let end = insts.len().min(pc.saturating_add(max_len));
+    let mut written = [false; 32];
+    let mut len = 0usize; // instructions scanned into the window so far
+    let mut incs = 0usize;
+    let mut last = 0usize; // window length as of the last increment
+    for inst in &insts[pc..end] {
+        match inc_geometry(inst) {
+            Some(g) if g == first => {
+                let (rd, ra, rb) = match *inst {
+                    Inst::PgasIncI { rd, ra, .. } => (rd, ra, ZERO),
+                    Inst::PgasIncR { rd, ra, rb, .. } => (rd, ra, rb),
+                    _ => unreachable!("inc_geometry() only accepts PGAS increments"),
+                };
+                if written[ra as usize] || written[rb as usize] {
+                    break; // dependent increment: batch would read stale state
+                }
+                if rd != ZERO {
+                    written[rd as usize] = true;
+                }
+                len += 1;
+                incs += 1;
+                last = len;
+            }
+            Some(_) => break, // geometry change ends the run
+            None => match neutral_dst(inst) {
+                Some(dst) => {
+                    if let Some(rd) = dst {
+                        if rd != ZERO {
+                            written[rd as usize] = true;
+                        }
+                    }
+                    len += 1;
+                }
+                None => break, // memory / control / PGAS-state op
+            },
+        }
+    }
+    if incs < MIN_RUN_INCS {
+        return None;
+    }
+    Some(WindowPlan { len: last, incs })
+}
+
+/// Per-core tallies of how dynamic PGAS increments were served —
+/// threaded from each core's pipeline through
+/// [`MachineResult`](crate::sim::MachineResult) into
+/// [`npb::RunOutcome`](crate::npb::RunOutcome) and the coordinator's
+/// engine-mix-vs-speedup report.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineMix {
+    /// Batched runs served, indexed by [`EngineChoice`] declaration
+    /// order (`EngineChoice::ALL`).
+    pub runs: [u64; EngineChoice::COUNT],
+    /// Increments served through batched `AddressEngine` calls.
+    pub batched_incs: u64,
+    /// Increments executed scalar (no eligible window, or the pipeline
+    /// latched off after an engine refusal).
+    pub scalar_incs: u64,
+}
+
+impl EngineMix {
+    pub fn merge(&mut self, o: &EngineMix) {
+        for (a, b) in self.runs.iter_mut().zip(o.runs.iter()) {
+            *a += b;
+        }
+        self.batched_incs += o.batched_incs;
+        self.scalar_incs += o.scalar_incs;
+    }
+
+    /// Batched windows served, over all backends.
+    pub fn total_runs(&self) -> u64 {
+        self.runs.iter().sum()
+    }
+
+    /// Fraction of dynamic PGAS increments served batched (0 when the
+    /// run executed none at all).
+    pub fn batched_share(&self) -> f64 {
+        let total = self.batched_incs + self.scalar_incs;
+        if total == 0 {
+            0.0
+        } else {
+            self.batched_incs as f64 / total as f64
+        }
+    }
+
+    /// `(choice, batched runs)` per backend, in declaration order.
+    pub fn by_choice(&self) -> [(EngineChoice, u64); EngineChoice::COUNT] {
+        EngineChoice::ALL.map(|c| (c, self.runs[c.index()]))
+    }
+
+    /// Compact `pow2:12 software:3` rendering of the non-zero per-
+    /// backend run counts (`-` when nothing was batched).
+    pub fn runs_label(&self) -> String {
+        let parts: Vec<String> = self
+            .by_choice()
+            .iter()
+            .filter(|&&(_, n)| n > 0)
+            .map(|&(c, n)| format!("{}:{n}", c.name()))
+            .collect();
+        if parts.is_empty() {
+            "-".into()
+        } else {
+            parts.join(" ")
+        }
+    }
+}
+
+/// The lookahead front end every CPU model owns: window depth, the
+/// batching engine (a per-core cost-based [`EngineSelector`]),
+/// reusable request buffers, the enable knob
+/// ([`MachineCfg::lookahead`](crate::sim::MachineCfg)) and the
+/// [`EngineMix`] telemetry.
+pub struct Lookahead {
+    /// Configuration: batch at all?  (`MachineCfg::lookahead`; the
+    /// scalar-reference legs of the differential suite turn this off.)
+    enabled: bool,
+    /// Latched false on the first engine refusal (e.g. a base LUT
+    /// covering fewer threads than the `threads` register claims).
+    /// Treated as permanent for simplicity: a program that later
+    /// shrinks `threads_reg` via `PgasSetThreads` could make batching
+    /// legal again, but it just stays on the always-correct scalar
+    /// path.
+    operable: bool,
+    /// Maximum instructions scanned ahead per window.
+    window: usize,
+    /// Per-core selector, single-worker so the argmin is deterministic
+    /// (no pool bookkeeping in the simulator hot loop).  The decoded
+    /// geometry is pow2 by construction, so in practice this prices
+    /// the shift/mask path cheapest; the per-[`EngineChoice`] tallies
+    /// record whatever it actually picks.
+    selector: EngineSelector,
+    batch: PtrBatch,
+    out: Vec<SharedPtr>,
+    mix: EngineMix,
+}
+
+impl Lookahead {
+    /// Default lookahead depth, in instructions.  Covers the pointer-
+    /// bump bursts compiled `upc_forall` bodies emit with room for the
+    /// loop-bookkeeping ALU ops interleaved between them.
+    pub const DEFAULT_WINDOW: usize = 32;
+
+    pub fn new() -> Self {
+        Self {
+            enabled: true,
+            operable: true,
+            window: Self::DEFAULT_WINDOW,
+            selector: EngineSelector::new().with_shard_workers(1),
+            batch: PtrBatch::new(),
+            out: Vec::new(),
+            mix: EngineMix::default(),
+        }
+    }
+
+    /// Turn batching on/off (off = every instruction steps scalar; the
+    /// differential suite's reference leg).
+    pub fn set_enabled(&mut self, on: bool) {
+        self.enabled = on;
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The engine-mix telemetry accumulated so far.
+    pub fn mix(&self) -> EngineMix {
+        self.mix
+    }
+
+    #[inline]
+    fn active(&self) -> bool {
+        self.enabled && self.operable
+    }
+
+    /// Serve the window's increments as one batched engine call, from
+    /// pre-window register state.  On success `self.out[k]` holds the
+    /// k-th increment's result (in program order) and the chosen
+    /// backend is tallied; on failure state is untouched so the caller
+    /// can fall back to scalar stepping.
+    fn serve(
+        &mut self,
+        st: &ArchState,
+        mem: &MemSystem,
+        window: &[Inst],
+    ) -> Result<(), EngineError> {
+        let (l2es, l2bs) = window
+            .iter()
+            .find_map(inc_geometry)
+            .expect("window holds at least MIN_RUN_INCS increments");
+        let layout = ArrayLayout::new(1u64 << l2bs, 1u64 << l2es, st.threads_reg);
+        let ctx =
+            EngineCtx::new(layout, &mem.base_table, st.mythread)?.with_topology(st.topo);
+        self.batch.clear();
+        for inst in window {
+            match *inst {
+                Inst::PgasIncI { ra, l2inc, .. } => {
+                    self.batch.push(unpack(st.r(ra)), 1u64 << l2inc)
+                }
+                Inst::PgasIncR { ra, rb, .. } => {
+                    self.batch.push(unpack(st.r(ra)), st.r(rb))
+                }
+                _ => {} // neutral carry-along: executed scalar at replay
+            }
+        }
+        let choice =
+            self.selector.increment_choosing(&ctx, &self.batch, &mut self.out)?;
+        self.mix.runs[choice.index()] += 1;
+        self.mix.batched_incs += self.batch.len() as u64;
+        Ok(())
+    }
+}
+
+impl Default for Lookahead {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// A CPU model's issue/latency policy — everything that differs
+/// between the atomic, timing and detailed models.  [`run_pipeline`]
+/// drives it with one call per dynamic instruction, in program order,
+/// whether that instruction executed scalar or was served from a
+/// batched window.
+pub trait IssuePolicy {
+    /// Called once at the top of each quantum (reset per-quantum
+    /// scheduler state; the OoO pipe drains at barriers and quantum
+    /// boundaries).
+    fn begin(&mut self, _prog: &Program) {}
+
+    /// Account one dynamic instruction: `pc` is its address *before*
+    /// execution, `effect` its architectural outcome.  Timing policies
+    /// drive `shared` (instruction fetch, data-hierarchy access) from
+    /// here — the pipeline core itself never touches the caches.
+    fn issue(
+        &mut self,
+        pc: u32,
+        inst: &Inst,
+        effect: StepEffect,
+        shared: &mut SharedLevel,
+        stats: &mut CoreStats,
+    );
+
+    /// Called once when the quantum ends (pipeline drain).
+    fn finish(&mut self, _stats: &mut CoreStats) {}
+}
+
+/// Per-effect statistics bookkeeping shared by all models (this used
+/// to be triplicated across the three `Cpu::run` loops).
+#[inline]
+fn tally(stats: &mut CoreStats, inst: &Inst, effect: StepEffect) {
+    match effect {
+        StepEffect::Mem { write, shared, local, .. } => {
+            if write {
+                stats.mem_writes += 1;
+            } else {
+                stats.mem_reads += 1;
+            }
+            if shared {
+                if inst.is_pgas() {
+                    stats.pgas_mems += 1;
+                }
+                if local {
+                    stats.local_shared_accesses += 1;
+                } else {
+                    stats.remote_shared_accesses += 1;
+                }
+            }
+        }
+        StepEffect::Branch { .. } => stats.branches += 1,
+        StepEffect::Barrier => stats.barriers += 1,
+        StepEffect::Halt => {}
+        StepEffect::Normal => {
+            if matches!(inst, Inst::PgasIncI { .. } | Inst::PgasIncR { .. }) {
+                stats.pgas_incs += 1;
+            }
+        }
+    }
+}
+
+/// The fetch/decode/dispatch loop all three CPU models share: run up
+/// to `max_insts` dynamic instructions, batching eligible PGAS-
+/// increment windows through the [`Lookahead`] and charging cycles via
+/// the model's [`IssuePolicy`].
+pub fn run_pipeline<P: IssuePolicy>(
+    state: &mut ArchState,
+    stats: &mut CoreStats,
+    la: &mut Lookahead,
+    policy: &mut P,
+    prog: &Program,
+    mem: &mut MemSystem,
+    shared: &mut SharedLevel,
+    max_insts: u64,
+) -> StopReason {
+    policy.begin(prog);
+    let mut budget = max_insts;
+    while budget > 0 {
+        if state.halted {
+            policy.finish(stats);
+            return StopReason::Halted;
+        }
+        // ---- lookahead: batch a window of independent PGAS increments
+        // through one AddressEngine call, then replay its events ----
+        if la.active() {
+            let max_len = la.window.min(budget.min(usize::MAX as u64) as usize);
+            let pc0 = state.pc as usize;
+            if let Some(plan) = plan_window(&prog.insts, pc0, max_len) {
+                match la.serve(state, mem, &prog.insts[pc0..pc0 + plan.len]) {
+                    Ok(()) => {
+                        // Event replay: walk the window in program
+                        // order, writing increment results back from
+                        // the batch and stepping carried-along neutral
+                        // ops scalar, issuing to the policy the exact
+                        // per-instruction events scalar stepping would.
+                        let mut out_idx = 0;
+                        for k in 0..plan.len {
+                            let pc = (pc0 + k) as u32;
+                            let inst = prog.insts[pc0 + k];
+                            let effect = match inst {
+                                Inst::PgasIncI { rd, .. } | Inst::PgasIncR { rd, .. } => {
+                                    let q = la.out[out_idx];
+                                    out_idx += 1;
+                                    state.set_r(rd, pack(&q));
+                                    state.cc_loc = sptr::locality(
+                                        q.thread,
+                                        state.mythread,
+                                        &state.topo,
+                                    )
+                                        as u8;
+                                    state.pc = pc + 1;
+                                    StepEffect::Normal
+                                }
+                                _ => step(state, mem, &inst),
+                            };
+                            stats.instructions += 1;
+                            budget -= 1;
+                            policy.issue(pc, &inst, effect, shared, stats);
+                            tally(stats, &inst, effect);
+                        }
+                        continue;
+                    }
+                    // Engine refusal: latch off, always-correct scalar
+                    // stepping from here on.
+                    Err(_) => la.operable = false,
+                }
+            }
+        }
+        // ---- scalar path ----
+        let pc = state.pc;
+        let inst = prog.insts[pc as usize];
+        let effect = step(state, mem, &inst);
+        stats.instructions += 1;
+        budget -= 1;
+        policy.issue(pc, &inst, effect, shared, stats);
+        tally(stats, &inst, effect);
+        if matches!(inst, Inst::PgasIncI { .. } | Inst::PgasIncR { .. }) {
+            la.mix.scalar_incs += 1;
+        }
+        match effect {
+            StepEffect::Barrier => {
+                policy.finish(stats);
+                return StopReason::Barrier;
+            }
+            StepEffect::Halt => {
+                policy.finish(stats);
+                return StopReason::Halted;
+            }
+            _ => {}
+        }
+    }
+    policy.finish(stats);
+    StopReason::QuantumExpired
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::IntOp;
+    use crate::sptr::{ArrayLayout, SharedPtr};
+
+    /// The vecadd-HW idiom: three independent self-increments
+    /// (pa += T; pb += T; pc += T), one batchable window of 3.
+    fn independent_inc_run() -> Vec<Inst> {
+        vec![
+            Inst::PgasIncI { rd: 1, ra: 1, l2es: 3, l2bs: 2, l2inc: 1 },
+            Inst::PgasIncI { rd: 2, ra: 2, l2es: 3, l2bs: 2, l2inc: 1 },
+            Inst::PgasIncR { rd: 3, ra: 3, rb: 4, l2es: 3, l2bs: 2 },
+            Inst::Halt,
+        ]
+    }
+
+    #[test]
+    fn planner_accepts_self_increments_and_stops_on_chains() {
+        let insts = independent_inc_run();
+        assert_eq!(
+            plan_window(&insts, 0, 32),
+            Some(WindowPlan { len: 3, incs: 3 })
+        );
+        assert_eq!(
+            plan_window(&insts, 1, 32),
+            Some(WindowPlan { len: 2, incs: 2 })
+        );
+        assert_eq!(plan_window(&insts, 3, 32), None, "halt is not an inc");
+        // a dependent chain (r1 -> r2 reads r1) must not batch past
+        // the producer — and a single inc is not worth a dispatch
+        let chain = vec![
+            Inst::PgasIncI { rd: 2, ra: 1, l2es: 3, l2bs: 2, l2inc: 0 },
+            Inst::PgasIncI { rd: 3, ra: 2, l2es: 3, l2bs: 2, l2inc: 0 },
+            Inst::Halt,
+        ];
+        assert_eq!(plan_window(&chain, 0, 32), None);
+        // a geometry change ends the run too
+        let mixed = vec![
+            Inst::PgasIncI { rd: 1, ra: 1, l2es: 3, l2bs: 2, l2inc: 0 },
+            Inst::PgasIncI { rd: 2, ra: 2, l2es: 2, l2bs: 2, l2inc: 0 },
+            Inst::Halt,
+        ];
+        assert_eq!(plan_window(&mixed, 0, 32), None);
+        // a register-form inc whose rb was written earlier cannot batch
+        let rb_dep = vec![
+            Inst::PgasIncI { rd: 4, ra: 1, l2es: 3, l2bs: 2, l2inc: 0 },
+            Inst::PgasIncR { rd: 5, ra: 2, rb: 4, l2es: 3, l2bs: 2 },
+            Inst::Halt,
+        ];
+        assert_eq!(plan_window(&rb_dep, 0, 32), None);
+    }
+
+    #[test]
+    fn planner_tolerates_interleaved_independent_alu_ops() {
+        // pointer bumps with loop bookkeeping between them — the shape
+        // a compiled upc_forall body actually has
+        let insts = vec![
+            Inst::PgasIncI { rd: 1, ra: 1, l2es: 3, l2bs: 2, l2inc: 0 },
+            Inst::Opi { op: IntOp::Add, rd: 9, ra: 9, imm: -1 }, // counter
+            Inst::PgasIncI { rd: 2, ra: 2, l2es: 3, l2bs: 2, l2inc: 0 },
+            Inst::Opr { op: IntOp::Add, rd: 10, ra: 1, rb: 2 }, // reads incs: fine
+            Inst::PgasIncI { rd: 3, ra: 3, l2es: 3, l2bs: 2, l2inc: 0 },
+            Inst::Opi { op: IntOp::Add, rd: 11, ra: 9, imm: 1 }, // trailing: trimmed
+            Inst::Halt,
+        ];
+        assert_eq!(
+            plan_window(&insts, 0, 32),
+            Some(WindowPlan { len: 5, incs: 3 })
+        );
+        // an ALU op writing a later increment's source ends the window
+        // before that increment
+        let alu_feeds_inc = vec![
+            Inst::PgasIncI { rd: 1, ra: 1, l2es: 3, l2bs: 2, l2inc: 0 },
+            Inst::PgasIncI { rd: 2, ra: 2, l2es: 3, l2bs: 2, l2inc: 0 },
+            Inst::Opi { op: IntOp::Add, rd: 3, ra: 9, imm: 8 },
+            Inst::PgasIncI { rd: 4, ra: 3, l2es: 3, l2bs: 2, l2inc: 0 },
+            Inst::Halt,
+        ];
+        assert_eq!(
+            plan_window(&alu_feeds_inc, 0, 32),
+            Some(WindowPlan { len: 2, incs: 2 })
+        );
+        // budget truncation below MIN_RUN_INCS disables batching
+        assert_eq!(plan_window(&insts, 0, 1), None);
+    }
+
+    #[test]
+    fn batched_replay_is_bit_identical_to_serial_stepping() {
+        let layout = ArrayLayout::new(4, 8, 4);
+        let insts = vec![
+            Inst::PgasIncI { rd: 1, ra: 1, l2es: 3, l2bs: 2, l2inc: 1 },
+            Inst::Opi { op: IntOp::Add, rd: 5, ra: 1, imm: 3 }, // reads inc result
+            Inst::PgasIncI { rd: 2, ra: 2, l2es: 3, l2bs: 2, l2inc: 1 },
+            Inst::PgasIncR { rd: 3, ra: 3, rb: 4, l2es: 3, l2bs: 2 },
+            Inst::Halt,
+        ];
+        let prog = Program::new("win", insts.clone());
+        let seed = |st: &mut ArchState| {
+            st.set_r(1, pack(&SharedPtr::for_index(&layout, 0, 3)));
+            st.set_r(2, pack(&SharedPtr::for_index(&layout, 0, 17)));
+            st.set_r(3, pack(&SharedPtr::for_index(&layout, 64, 9)));
+            st.set_r(4, 29); // register increment operand
+        };
+        // serial reference
+        let mut serial = ArchState::new(2, 4);
+        let mut mem = MemSystem::new(4);
+        seed(&mut serial);
+        while !serial.halted {
+            let inst = insts[serial.pc as usize];
+            step(&mut serial, &mut mem, &inst);
+        }
+        // the shared pipeline with batching on (atomic-style policy)
+        struct OneCycle;
+        impl IssuePolicy for OneCycle {
+            fn issue(
+                &mut self,
+                _pc: u32,
+                _inst: &Inst,
+                _effect: StepEffect,
+                _shared: &mut SharedLevel,
+                stats: &mut CoreStats,
+            ) {
+                stats.cycles += 1;
+            }
+        }
+        let mut st = ArchState::new(2, 4);
+        seed(&mut st);
+        let mut stats = CoreStats::default();
+        let mut la = Lookahead::new();
+        let mut shared = SharedLevel::new(1, crate::cpu::HierLatency::default());
+        let stop = run_pipeline(
+            &mut st, &mut stats, &mut la, &mut OneCycle, &prog, &mut mem,
+            &mut shared, u64::MAX,
+        );
+        assert_eq!(stop, StopReason::Halted);
+        assert_eq!(st.pc, serial.pc);
+        assert_eq!(st.cc_loc, serial.cc_loc);
+        for r in 0..8 {
+            assert_eq!(st.r(r), serial.r(r), "register r{r}");
+        }
+        // identical accounting: every window instruction still counted
+        assert_eq!(stats.instructions, 5);
+        assert_eq!(stats.cycles, 5);
+        assert_eq!(stats.pgas_incs, 3);
+        // telemetry: one batched run of 3 increments, none scalar
+        let mix = la.mix();
+        assert_eq!(mix.total_runs(), 1);
+        assert_eq!(mix.batched_incs, 3);
+        assert_eq!(mix.scalar_incs, 0);
+        assert_eq!(mix.runs[EngineChoice::Pow2.index()], 1);
+        assert!(mix.runs_label().starts_with("pow2:"));
+    }
+
+    #[test]
+    fn refusal_latches_off_without_corrupting_state() {
+        struct OneCycle;
+        impl IssuePolicy for OneCycle {
+            fn issue(
+                &mut self,
+                _pc: u32,
+                _inst: &Inst,
+                _effect: StepEffect,
+                _shared: &mut SharedLevel,
+                stats: &mut CoreStats,
+            ) {
+                stats.cycles += 1;
+            }
+        }
+        let insts = independent_inc_run();
+        let prog = Program::new("lut", insts);
+        let mut st = ArchState::new(0, 8); // claims 8 threads...
+        st.set_r(4, 1);
+        let mut mem = MemSystem::new(4); // ...but the LUT covers 4
+        let mut stats = CoreStats::default();
+        let mut la = Lookahead::new();
+        let mut shared = SharedLevel::new(1, crate::cpu::HierLatency::default());
+        let stop = run_pipeline(
+            &mut st, &mut stats, &mut la, &mut OneCycle, &prog, &mut mem,
+            &mut shared, u64::MAX,
+        );
+        // the machine fell back to (always-correct) scalar stepping
+        assert_eq!(stop, StopReason::Halted);
+        assert!(!la.operable, "refusal must latch the pipeline off");
+        let mix = la.mix();
+        assert_eq!(mix.batched_incs, 0);
+        assert_eq!(mix.scalar_incs, 3);
+        assert_eq!(stats.pgas_incs, 3);
+    }
+}

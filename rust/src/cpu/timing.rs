@@ -6,9 +6,18 @@
 //! non-pipelined divide are charged in full — the ops that dominate the
 //! software Algorithm 1); loads and stores additionally pay L1/L2/DRAM
 //! time, and instruction fetch pays L1I misses at line granularity.
+//!
+//! Execution runs on the shared pipeline core
+//! ([`cpu::pipeline`](crate::cpu::pipeline)); this file is only the
+//! in-order issue/latency policy.  Batched PGAS-increment windows are
+//! replayed event-by-event through the same policy, so cycle totals
+//! are bit-identical to scalar stepping (the accounting depends only
+//! on the `(pc, inst, effect)` sequence and the shared hierarchy,
+//! which see identical traffic either way).
 
+use super::pipeline::{run_pipeline, IssuePolicy, Lookahead};
 use super::{ArchState, CoreStats, Cpu, SharedLevel, StopReason};
-use crate::cpu::exec::{step, StepEffect};
+use crate::cpu::exec::StepEffect;
 use crate::isa::latency::LatencyModel;
 use crate::isa::{Inst, Program};
 use crate::mem::MemSystem;
@@ -35,14 +44,74 @@ impl Default for HierLatency {
     }
 }
 
+/// The in-order issue/latency policy.
+struct TimingPolicy {
+    lat: LatencyModel,
+    core: usize,
+    mythread: u32,
+    /// Last instruction-fetch line (fetch charged on line crossings).
+    last_fetch_line: u64,
+}
+
+impl TimingPolicy {
+    /// Simulated code addresses: place the program at sysva 0 of the
+    /// core's own segment-page for i-cache purposes (4 bytes/inst).
+    #[inline]
+    fn fetch_addr(&self, pc: u32) -> u64 {
+        crate::mem::seg_base(self.mythread) + 0x4000_0000 + (pc as u64) * 4
+    }
+}
+
+impl IssuePolicy for TimingPolicy {
+    fn issue(
+        &mut self,
+        pc: u32,
+        inst: &Inst,
+        effect: StepEffect,
+        shared: &mut SharedLevel,
+        stats: &mut CoreStats,
+    ) {
+        // instruction fetch at line granularity
+        let faddr = self.fetch_addr(pc);
+        let fline = faddr & !(shared.lat.line - 1);
+        if fline != self.last_fetch_line {
+            stats.cycles += shared.fetch(self.core, faddr);
+            self.last_fetch_line = fline;
+        }
+
+        let cost = self.lat.cost(inst);
+        // The PGAS increment unit is fully pipelined (1/cycle issue,
+        // Fig. 5) and the 7-stage in-order pipe forwards its result;
+        // charge issue occupancy, not the 2-cycle result latency
+        // (which only a back-to-back dependent use would expose).
+        let cycles = if matches!(inst, Inst::PgasIncI { .. } | Inst::PgasIncR { .. }) {
+            cost.init_interval
+        } else {
+            cost.latency
+        };
+        stats.cycles += cycles as u64;
+
+        match effect {
+            StepEffect::Mem { sysva, write, .. } => {
+                stats.cycles += shared.access(self.core, sysva, write);
+            }
+            StepEffect::Branch { taken } => {
+                if taken {
+                    // redirect bubble on the 7-stage in-order pipe
+                    stats.cycles += 2;
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
 /// In-order timing core.
 pub struct TimingCpu {
     state: ArchState,
     stats: CoreStats,
-    lat: LatencyModel,
-    core: usize,
-    /// Last instruction-fetch line (fetch charged on line crossings).
-    last_fetch_line: u64,
+    pipeline: Lookahead,
+    policy: TimingPolicy,
 }
 
 impl TimingCpu {
@@ -50,17 +119,14 @@ impl TimingCpu {
         Self {
             state: ArchState::new(mythread, numthreads),
             stats: CoreStats::default(),
-            lat: LatencyModel::default(),
-            core: mythread as usize,
-            last_fetch_line: u64::MAX,
+            pipeline: Lookahead::new(),
+            policy: TimingPolicy {
+                lat: LatencyModel::default(),
+                core: mythread as usize,
+                mythread,
+                last_fetch_line: u64::MAX,
+            },
         }
-    }
-
-    /// Simulated code addresses: place the program at sysva 0 of the
-    /// core's own segment-page for i-cache purposes (4 bytes/inst).
-    #[inline]
-    fn fetch_addr(&self, pc: u32) -> u64 {
-        crate::mem::seg_base(self.state.mythread) + 0x4000_0000 + (pc as u64) * 4
     }
 }
 
@@ -72,77 +138,16 @@ impl Cpu for TimingCpu {
         shared: &mut SharedLevel,
         max_insts: u64,
     ) -> StopReason {
-        let mut budget = max_insts;
-        while budget > 0 {
-            if self.state.halted {
-                return StopReason::Halted;
-            }
-            let pc = self.state.pc;
-            let inst = prog.insts[pc as usize];
-
-            // instruction fetch at line granularity
-            let faddr = self.fetch_addr(pc);
-            let fline = faddr & !(shared.lat.line - 1);
-            if fline != self.last_fetch_line {
-                self.stats.cycles += shared.fetch(self.core, faddr);
-                self.last_fetch_line = fline;
-            }
-
-            let effect = step(&mut self.state, mem, &inst);
-            self.stats.instructions += 1;
-            budget -= 1;
-            let cost = self.lat.cost(&inst);
-            // The PGAS increment unit is fully pipelined (1/cycle issue,
-            // Fig. 5) and the 7-stage in-order pipe forwards its result;
-            // charge issue occupancy, not the 2-cycle result latency
-            // (which only a back-to-back dependent use would expose).
-            let cycles = if matches!(inst, Inst::PgasIncI { .. } | Inst::PgasIncR { .. })
-            {
-                cost.init_interval
-            } else {
-                cost.latency
-            };
-            self.stats.cycles += cycles as u64;
-
-            match effect {
-                StepEffect::Mem { sysva, write, shared: is_shared, local, .. } => {
-                    self.stats.cycles += shared.access(self.core, sysva, write);
-                    if write {
-                        self.stats.mem_writes += 1;
-                    } else {
-                        self.stats.mem_reads += 1;
-                    }
-                    if is_shared {
-                        if inst.is_pgas() {
-                            self.stats.pgas_mems += 1;
-                        }
-                        if local {
-                            self.stats.local_shared_accesses += 1;
-                        } else {
-                            self.stats.remote_shared_accesses += 1;
-                        }
-                    }
-                }
-                StepEffect::Branch { taken } => {
-                    self.stats.branches += 1;
-                    if taken {
-                        // redirect bubble on the 7-stage in-order pipe
-                        self.stats.cycles += 2;
-                    }
-                }
-                StepEffect::Barrier => {
-                    self.stats.barriers += 1;
-                    return StopReason::Barrier;
-                }
-                StepEffect::Halt => return StopReason::Halted,
-                StepEffect::Normal => {
-                    if matches!(inst, Inst::PgasIncI { .. } | Inst::PgasIncR { .. }) {
-                        self.stats.pgas_incs += 1;
-                    }
-                }
-            }
-        }
-        StopReason::QuantumExpired
+        run_pipeline(
+            &mut self.state,
+            &mut self.stats,
+            &mut self.pipeline,
+            &mut self.policy,
+            prog,
+            mem,
+            shared,
+            max_insts,
+        )
     }
 
     fn state(&self) -> &ArchState {
@@ -159,6 +164,14 @@ impl Cpu for TimingCpu {
 
     fn stats_mut(&mut self) -> &mut CoreStats {
         &mut self.stats
+    }
+
+    fn lookahead(&self) -> &Lookahead {
+        &self.pipeline
+    }
+
+    fn lookahead_mut(&mut self) -> &mut Lookahead {
+        &mut self.pipeline
     }
 }
 
@@ -247,5 +260,36 @@ mod tests {
             cpu.stats().cycles
         };
         assert_eq!(run(&prog_pgas), run(&prog_norm));
+    }
+
+    #[test]
+    fn batched_increment_window_is_cycle_exact_vs_scalar() {
+        use crate::sptr::{pack, ArrayLayout, SharedPtr};
+        let layout = ArrayLayout::new(4, 8, 4);
+        let prog = Program::new(
+            "bump",
+            vec![
+                Inst::PgasIncI { rd: 1, ra: 1, l2es: 3, l2bs: 2, l2inc: 0 },
+                Inst::Opi { op: IntOp::Add, rd: 5, ra: 5, imm: 1 },
+                Inst::PgasIncI { rd: 2, ra: 2, l2es: 3, l2bs: 2, l2inc: 0 },
+                Inst::PgasIncI { rd: 3, ra: 3, l2es: 3, l2bs: 2, l2inc: 0 },
+                Inst::Halt,
+            ],
+        );
+        let run = |lookahead: bool| {
+            let mut cpu = TimingCpu::new(0, 4);
+            cpu.lookahead_mut().set_enabled(lookahead);
+            cpu.state_mut().set_r(1, pack(&SharedPtr::for_index(&layout, 0, 0)));
+            cpu.state_mut().set_r(2, pack(&SharedPtr::for_index(&layout, 0, 7)));
+            cpu.state_mut().set_r(3, pack(&SharedPtr::for_index(&layout, 64, 2)));
+            let mut mem = MemSystem::new(4);
+            cpu.run(&prog, &mut mem, &mut shared1(), u64::MAX);
+            (cpu.stats().cycles, cpu.engine_mix().batched_incs)
+        };
+        let (batched_cycles, batched) = run(true);
+        let (scalar_cycles, none) = run(false);
+        assert_eq!(batched_cycles, scalar_cycles, "event replay is exact");
+        assert_eq!(batched, 3, "the window actually batched");
+        assert_eq!(none, 0);
     }
 }

@@ -57,8 +57,13 @@ pub enum EngineChoice {
 }
 
 impl EngineChoice {
+    /// Number of reportable backends — the length of [`ALL`](Self::ALL)
+    /// and of every hit-counter / [`EngineMix`](crate::cpu::EngineMix)
+    /// array indexed by [`index`](Self::index).
+    pub const COUNT: usize = 5;
+
     /// Every backend the selector can report, in hit-counter order.
-    pub const ALL: [EngineChoice; 5] = [
+    pub const ALL: [EngineChoice; Self::COUNT] = [
         EngineChoice::Software,
         EngineChoice::Pow2,
         EngineChoice::Sharded,
@@ -77,7 +82,9 @@ impl EngineChoice {
         }
     }
 
-    fn index(&self) -> usize {
+    /// Hit-counter / [`EngineMix`](crate::cpu::EngineMix) slot of this
+    /// choice (its position in [`ALL`](Self::ALL)).
+    pub fn index(&self) -> usize {
         *self as usize
     }
 }
@@ -291,7 +298,7 @@ pub struct EngineSelector {
     cost: CostModel,
     /// Requests served per [`EngineChoice`] (indexed by
     /// `EngineChoice::index`).
-    hits: [AtomicU64; 5],
+    hits: [AtomicU64; EngineChoice::COUNT],
 }
 
 impl EngineSelector {
@@ -326,13 +333,7 @@ impl EngineSelector {
             xla_threshold: Self::DEFAULT_XLA_THRESHOLD,
             leon3: None,
             cost: CostModel::default(),
-            hits: [
-                AtomicU64::new(0),
-                AtomicU64::new(0),
-                AtomicU64::new(0),
-                AtomicU64::new(0),
-                AtomicU64::new(0),
-            ],
+            hits: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
 
@@ -536,7 +537,7 @@ impl EngineSelector {
     /// since construction (or the last [`reset_hits`](Self::reset_hits))
     /// — the actual backend mix, archived by
     /// `coordinator::engine_report`.
-    pub fn hit_counts(&self) -> [(EngineChoice, u64); 5] {
+    pub fn hit_counts(&self) -> [(EngineChoice, u64); EngineChoice::COUNT] {
         EngineChoice::ALL
             .map(|c| (c, self.hits[c.index()].load(Ordering::Relaxed)))
     }
@@ -567,9 +568,23 @@ impl EngineSelector {
         batch: &PtrBatch,
         out: &mut Vec<SharedPtr>,
     ) -> Result<(), EngineError> {
+        self.increment_choosing(ctx, batch, out).map(|_| ())
+    }
+
+    /// [`increment`](Self::increment) that also reports which backend
+    /// served the request.  The argmin runs **once**; callers tallying
+    /// their own telemetry (the CPU pipelines' per-window `EngineMix`)
+    /// use this instead of a separate `choice()` + `increment()` pair.
+    pub fn increment_choosing(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut Vec<SharedPtr>,
+    ) -> Result<EngineChoice, EngineError> {
         let choice = self.choice(&ctx.layout, batch.len());
         self.record(choice);
-        self.engine_for(choice).increment(ctx, batch, out)
+        self.engine_for(choice).increment(ctx, batch, out)?;
+        Ok(choice)
     }
 
     pub fn walk(

@@ -34,6 +34,8 @@ fn usage() -> &'static str {
     "usage: pgas-hw <run|sweep|leon3|area|disasm|verify|walk> [--key value ...]
   run    --kernel EP|IS|CG|MG|FT --variant unopt|manual|hw
          --model atomic|timing|detailed --cores N [--scale F]
+         [--no-lookahead]  (disable batched PGAS-increment windows;
+                            cycle totals are identical either way)
   sweep  [--kernels ..] [--models ..] [--cores 1,2,4,..] [--scale F]
          [--config campaign.cfg] [--out results/]
   leon3  [--bench vecadd|matmul|all] [--threads 1|2|4] [--tables]
@@ -122,7 +124,8 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
         .map(|s| s.parse().map_err(|_| "bad cores"))
         .unwrap_or(Ok(4))?;
     let scale = get_scale(flags)?;
-    let out = npb::run(kernel, variant, model, cores, &scale);
+    let lookahead = !flags.contains_key("no-lookahead");
+    let out = npb::run_lookahead(kernel, variant, model, cores, &scale, lookahead);
     println!(
         "{} [{}] {} x{}: {} cycles = {:.3} ms simulated @2GHz (validated OK)",
         kernel,
@@ -140,6 +143,14 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
         out.compile_stats.soft_incs,
         out.compile_stats.hw_mems,
         out.compile_stats.soft_mems,
+    );
+    let mix = out.engine_mix();
+    println!(
+        "  engine mix: {} incs batched / {} scalar ({:.1}% batched), runs: {}",
+        mix.batched_incs,
+        mix.scalar_incs,
+        mix.batched_share() * 100.0,
+        mix.runs_label(),
     );
     if flags.contains_key("stats") {
         println!("\n{}", out.result.stats_txt());
@@ -208,6 +219,7 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<(), String> {
         }
     }
     println!("{}", coordinator::headline_summary(&outs).render());
+    println!("{}", coordinator::engine_mix_table(&outs).render());
     if let Some(dir) = flags.get("out") {
         std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
         let path = format!("{dir}/outcomes.csv");

@@ -187,6 +187,14 @@ impl RunOutcome {
     pub fn mops(&self, ops: u64) -> f64 {
         ops as f64 / self.result.runtime_secs() / 1e6
     }
+
+    /// How this run's dynamic PGAS increments were served: batched
+    /// through which `AddressEngine` backend vs stepped scalar
+    /// (recorded per run for the coordinator's engine-mix-vs-speedup
+    /// report).
+    pub fn engine_mix(&self) -> &crate::cpu::EngineMix {
+        &self.result.engine_mix
+    }
 }
 
 /// Build, compile, setup, run and validate one configuration.
@@ -198,6 +206,21 @@ pub fn run(
     cores: u32,
     scale: &Scale,
 ) -> RunOutcome {
+    run_lookahead(kernel, variant, model, cores, scale, true)
+}
+
+/// Like [`run`], with explicit control over the CPU pipelines'
+/// lookahead batching — the batched-vs-scalar differential legs of
+/// the test suite and the fig11–14 benches run each point both ways
+/// (cycle totals must match exactly).
+pub fn run_lookahead(
+    kernel: Kernel,
+    variant: PaperVariant,
+    model: CpuModel,
+    cores: u32,
+    scale: &Scale,
+    lookahead: bool,
+) -> RunOutcome {
     let built = build(kernel, cores, variant.source(), scale);
     let opts = CompileOpts {
         lowering: variant.lowering(),
@@ -206,7 +229,9 @@ pub fn run(
         volatile_stores: true,
     };
     let ck = compile(&built.module, &built.rt, &opts);
-    let mut machine = Machine::new(MachineCfg::new(cores, model));
+    let mut cfg = MachineCfg::new(cores, model);
+    cfg.lookahead = lookahead;
+    let mut machine = Machine::new(cfg);
     (built.setup)(&built.rt, machine.mem_mut());
     let result = machine.run(&ck.program);
     if let Err(e) = (built.validate)(&built.rt, machine.mem_mut()) {

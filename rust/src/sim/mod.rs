@@ -10,8 +10,8 @@
 //! preceding barrier.
 
 use crate::cpu::{
-    AtomicCpu, CoreStats, Cpu, CpuModel, DetailedCpu, HierLatency, SharedLevel,
-    StopReason, TimingCpu,
+    AtomicCpu, CoreStats, Cpu, CpuModel, DetailedCpu, EngineMix, HierLatency,
+    SharedLevel, StopReason, TimingCpu,
 };
 use crate::isa::Program;
 use crate::mem::{seg_base, MemSystem, PRIV_OFF};
@@ -40,6 +40,10 @@ pub struct MachineCfg {
     pub lat: HierLatency,
     /// Core clock, for converting cycles to seconds (paper: 2 GHz).
     pub freq_ghz: f64,
+    /// Lookahead batching of PGAS-increment runs in the CPU pipelines
+    /// (on by default; cycle totals are identical either way — the
+    /// differential suite and the fig11–14 benches run both legs).
+    pub lookahead: bool,
 }
 
 impl MachineCfg {
@@ -51,6 +55,7 @@ impl MachineCfg {
             quantum: 20_000,
             lat: HierLatency::default(),
             freq_ghz: 2.0,
+            lookahead: true,
         }
     }
 }
@@ -66,6 +71,10 @@ pub struct MachineResult {
     pub l2_misses: u64,
     pub invalidations: u64,
     pub freq_ghz: f64,
+    /// How the machine's dynamic PGAS increments were served (batched
+    /// through which `AddressEngine` backend vs scalar), summed over
+    /// cores — recorded per run by `npb::RunOutcome`.
+    pub engine_mix: EngineMix,
 }
 
 impl MachineResult {
@@ -118,6 +127,21 @@ impl MachineResult {
             "pgas.remote_shared",
             self.total.remote_shared_accesses.to_string(),
             "shared accesses to other threads",
+        );
+        put(
+            "pgas.batched_incs",
+            self.engine_mix.batched_incs.to_string(),
+            "increments served via batched AddressEngine calls",
+        );
+        put(
+            "pgas.scalar_incs",
+            self.engine_mix.scalar_incs.to_string(),
+            "increments stepped scalar",
+        );
+        put(
+            "pgas.batched_runs",
+            self.engine_mix.total_runs().to_string(),
+            "lookahead windows served batched",
         );
         put("cache.l1d_misses", self.l1d_misses.to_string(), "sum over cores");
         put("cache.l2_misses", self.l2_misses.to_string(), "shared L2");
@@ -175,6 +199,9 @@ impl Machine {
             mem: MemSystem::new(cfg.cores),
             shared: SharedLevel::new(cfg.cores as usize, cfg.lat),
         };
+        for cpu in &mut m.cpus {
+            cpu.lookahead_mut().set_enabled(cfg.lookahead);
+        }
         m.install_abi();
         m
     }
@@ -283,6 +310,10 @@ impl Machine {
             total.merge(s);
         }
         let cycles = per_core.iter().map(|s| s.cycles).max().unwrap_or(0);
+        let mut engine_mix = EngineMix::default();
+        for c in &self.cpus {
+            engine_mix.merge(&c.engine_mix());
+        }
         MachineResult {
             cycles,
             total,
@@ -291,6 +322,7 @@ impl Machine {
             invalidations: self.shared.dir.invalidations_sent,
             per_core,
             freq_ghz: self.cfg.freq_ghz,
+            engine_mix,
         }
     }
 }
@@ -426,6 +458,30 @@ mod tests {
             let mut parts = line.split_whitespace();
             assert!(parts.next().is_some(), "empty key: {line}");
             assert!(parts.next().is_some(), "missing value: {line}");
+        }
+    }
+
+    #[test]
+    fn lookahead_batching_is_cycle_exact_in_every_model() {
+        let prog = fixed_exchange_prog(4);
+        for model in CpuModel::ALL {
+            let run = |lookahead: bool| {
+                let mut cfg = MachineCfg::new(4, model);
+                cfg.lookahead = lookahead;
+                let mut m = Machine::new(cfg);
+                let r = m.run(&prog);
+                (r.cycles, r.total.instructions, r.engine_mix)
+            };
+            let (bc, bi, bmix) = run(true);
+            let (sc, si, smix) = run(false);
+            assert_eq!(bc, sc, "{model}: batched vs scalar cycles");
+            assert_eq!(bi, si, "{model}: instruction counts");
+            assert_eq!(smix.batched_incs, 0, "{model}: scalar leg batched");
+            assert_eq!(
+                bmix.batched_incs + bmix.scalar_incs,
+                smix.scalar_incs,
+                "{model}: every increment accounted"
+            );
         }
     }
 

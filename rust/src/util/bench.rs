@@ -72,6 +72,141 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Byte range of the JSON value owned by the **top-level** key `key`
+/// in the object `text` — a single balanced scan that respects nested
+/// objects/arrays and quoted strings, so keys of the same name inside
+/// nested sections (or inside string values) are never matched, and
+/// replacing the returned range swaps the whole value.  `None` when
+/// the top level has no such key (or `text` is not an object).
+fn json_value_range(text: &str, key: &str) -> Option<(usize, usize)> {
+    let bytes = text.as_bytes();
+    let obj_open = text.find('{')?;
+    // depth relative to the top-level object's braces: 1 = top level
+    let (mut depth, mut in_str, mut esc) = (1usize, false, false);
+    // byte range of the most recent depth-1 string (a candidate key)
+    let mut str_start = 0usize;
+    let mut pending_key: Option<(usize, usize)> = None;
+    let mut i = obj_open + 1;
+    while i < bytes.len() {
+        let b = bytes[i];
+        if in_str {
+            if esc {
+                esc = false;
+            } else if b == b'\\' {
+                esc = true;
+            } else if b == b'"' {
+                in_str = false;
+                if depth == 1 {
+                    pending_key = Some((str_start, i));
+                }
+            }
+            i += 1;
+            continue;
+        }
+        match b {
+            b'"' => {
+                in_str = true;
+                str_start = i + 1;
+            }
+            b':' if depth == 1 => {
+                if let Some((ks, ke)) = pending_key.take() {
+                    if &text[ks..ke] == key {
+                        // value starts after the colon + whitespace
+                        let mut start = i + 1;
+                        while start < bytes.len()
+                            && bytes[start].is_ascii_whitespace()
+                        {
+                            start += 1;
+                        }
+                        return json_scan_value(text, start);
+                    }
+                }
+            }
+            b'{' | b'[' => depth += 1,
+            b'}' | b']' => {
+                if depth == 1 {
+                    return None; // top-level object closed: key absent
+                }
+                depth -= 1;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+/// End of the balanced JSON value starting at `start` (string, number,
+/// object or array); returns the `(start, end)` byte range.
+fn json_scan_value(text: &str, start: usize) -> Option<(usize, usize)> {
+    let bytes = text.as_bytes();
+    let (mut depth, mut in_str, mut esc) = (0usize, false, false);
+    for (i, &b) in bytes[start..].iter().enumerate() {
+        let pos = start + i;
+        if in_str {
+            if esc {
+                esc = false;
+            } else if b == b'\\' {
+                esc = true;
+            } else if b == b'"' {
+                in_str = false;
+                if depth == 0 {
+                    return Some((start, pos + 1)); // bare string value
+                }
+            }
+            continue;
+        }
+        match b {
+            b'"' => in_str = true,
+            b'{' | b'[' => depth += 1,
+            b'}' | b']' => {
+                if depth == 0 {
+                    return Some((start, pos)); // enclosing close: bare scalar
+                }
+                depth -= 1;
+                if depth == 0 {
+                    return Some((start, pos + 1)); // container value closed
+                }
+            }
+            b',' if depth == 0 => return Some((start, pos)), // bare scalar
+            _ => {}
+        }
+    }
+    None
+}
+
+/// Merge `"key": value` into the JSON-object trajectory file the bench
+/// targets share (`BENCH_engine.json`): replace the key's value in
+/// place when it is already present, insert before the final `}`
+/// otherwise, or create `{ "key": value }` from scratch.  Hand-rolled
+/// (no serde in the offline build) so any bench target can run in any
+/// order — `hotpath_engine` and the fig11–14 model benches all merge
+/// their sections instead of clobbering each other's.
+pub fn merge_bench_json(path: &str, key: &str, value: &str) {
+    let fresh = || format!("{{\n  \"{key}\": {value}\n}}\n");
+    let merged = match std::fs::read_to_string(path) {
+        Ok(text) => {
+            if let Some((start, end)) = json_value_range(&text, key) {
+                format!("{}{}{}", &text[..start], value, &text[end..])
+            } else {
+                let head = text.trim_end();
+                match head.strip_suffix('}') {
+                    Some(body) => {
+                        let body = body.trim_end();
+                        let sep = if body.ends_with('{') { "" } else { "," };
+                        format!("{body}{sep}\n  \"{key}\": {value}\n}}\n")
+                    }
+                    // not an object: start over rather than corrupt it
+                    None => fresh(),
+                }
+            }
+        }
+        Err(_) => fresh(),
+    };
+    std::fs::write(path, merged)
+        .unwrap_or_else(|e| panic!("write {path}: {e}"));
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,5 +226,52 @@ mod tests {
         assert!(fmt_ns(5e4).contains("µs"));
         assert!(fmt_ns(5e7).contains("ms"));
         assert!(fmt_ns(5e9).contains('s'));
+    }
+
+    #[test]
+    fn merge_bench_json_creates_extends_and_replaces() {
+        let path = std::env::temp_dir().join(format!(
+            "merge_bench_json_test_{}.json",
+            std::process::id()
+        ));
+        let path = path.to_str().unwrap().to_string();
+        let _ = std::fs::remove_file(&path);
+        merge_bench_json(&path, "first", "{\"a\": 1}");
+        let one = std::fs::read_to_string(&path).unwrap();
+        assert!(one.contains("\"first\""), "{one}");
+        merge_bench_json(&path, "second", "{\"b\": [1, 2], \"s\": \"x}y\"}");
+        let two = std::fs::read_to_string(&path).unwrap();
+        assert!(two.contains("\"first\"") && two.contains("\"second\""), "{two}");
+        // still one object: balanced braces (the brace inside the
+        // string literal is the deliberate odd one out), comma inserted
+        assert!(two.contains("},\n  \"second\""), "{two}");
+        // re-merging an existing key replaces its value in place —
+        // no duplicate keys, nested containers and strings skipped
+        merge_bench_json(&path, "second", "{\"b\": 9}");
+        merge_bench_json(&path, "first", "{\"a\": 7}");
+        let three = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(three.matches("\"first\"").count(), 1, "{three}");
+        assert_eq!(three.matches("\"second\"").count(), 1, "{three}");
+        assert!(three.contains("{\"a\": 7}"), "{three}");
+        assert!(three.contains("{\"b\": 9}"), "{three}");
+        assert!(!three.contains("x}y"), "old value fully replaced: {three}");
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn json_value_range_handles_scalars_and_containers() {
+        let text = r#"{"a": 1, "b": "str,}", "c": {"d": [1, 2]}, "e": 5}"#;
+        let slice = |k| {
+            let (s, e) = json_value_range(text, k).unwrap();
+            &text[s..e]
+        };
+        assert_eq!(slice("a"), "1");
+        assert_eq!(slice("b"), "\"str,}\"");
+        assert_eq!(slice("c"), "{\"d\": [1, 2]}");
+        assert_eq!(slice("e"), "5");
+        assert!(json_value_range(text, "zz").is_none());
+        // nested keys and string contents are NOT top-level matches
+        assert!(json_value_range(text, "d").is_none());
+        assert!(json_value_range(text, "str,}").is_none());
     }
 }

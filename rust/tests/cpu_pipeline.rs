@@ -1,0 +1,248 @@
+//! Differential suite for the shared lookahead pipeline: batched
+//! PGAS-increment windows must be *cycle-exact* against scalar
+//! stepping in every CPU model (the atomic model bit-identical by
+//! construction, timing/detailed because event replay issues the same
+//! per-instruction sequence), and the window planner must never batch
+//! across a dependent register write.
+
+use pgas_hw::cpu::pipeline::{plan_window, MIN_RUN_INCS};
+use pgas_hw::cpu::{AtomicCpu, Cpu, CpuModel, HierLatency, SharedLevel, TimingCpu};
+use pgas_hw::isa::{Inst, IntOp, Program, ZERO};
+use pgas_hw::mem::MemSystem;
+use pgas_hw::npb::{self, Kernel, PaperVariant, Scale};
+use pgas_hw::sptr::{pack, ArrayLayout, SharedPtr};
+use pgas_hw::util::rng::Xoshiro256;
+
+/// Run one kernel point with the lookahead on and off; everything the
+/// figures read must be identical.  Returns how many increments the
+/// batched leg served through the engine, so callers can assert the
+/// acceptance criterion is not vacuous.
+///
+/// The 1-IPC atomic model runs at quick scale; the timing/detailed
+/// differentials shrink a further 4x because `cargo test` builds are
+/// unoptimized and each point simulates twice (the batched-increment
+/// windows per iteration are scale-independent, so coverage is
+/// unchanged).
+fn kernel_differential(model: CpuModel, kernel: Kernel) -> u64 {
+    let scale = match model {
+        CpuModel::Atomic => Scale::quick(),
+        _ => Scale { factor: Scale::quick().factor * 4 },
+    };
+    let cores = 4u32.min(kernel.max_cores());
+    let batched =
+        npb::run_lookahead(kernel, PaperVariant::Hw, model, cores, &scale, true);
+    let scalar =
+        npb::run_lookahead(kernel, PaperVariant::Hw, model, cores, &scale, false);
+    assert_eq!(
+        batched.result.cycles, scalar.result.cycles,
+        "{kernel} {model}: batched vs scalar cycle totals"
+    );
+    assert_eq!(
+        batched.result.total.instructions, scalar.result.total.instructions,
+        "{kernel} {model}: dynamic instruction counts"
+    );
+    assert_eq!(
+        batched.result.total.pgas_incs, scalar.result.total.pgas_incs,
+        "{kernel} {model}: pgas_inc counts"
+    );
+    assert_eq!(
+        batched.result.total.local_shared_accesses,
+        scalar.result.total.local_shared_accesses,
+        "{kernel} {model}: locality classification"
+    );
+    // the scalar leg must not have batched anything; the batched leg
+    // accounts every dynamic increment one way or the other
+    assert_eq!(scalar.engine_mix().batched_incs, 0);
+    let mix = batched.engine_mix();
+    assert_eq!(
+        mix.batched_incs + mix.scalar_incs,
+        batched.result.total.pgas_incs,
+        "{kernel} {model}: every increment tallied"
+    );
+    mix.batched_incs
+}
+
+/// All five kernels, one model; asserts the acceptance criterion is
+/// not vacuous — at least one kernel must actually route an increment
+/// run through a batched AddressEngine call.
+fn all_kernels_differential(model: CpuModel) {
+    let mut total_batched = 0u64;
+    for k in Kernel::ALL {
+        total_batched += kernel_differential(model, k);
+    }
+    assert!(
+        total_batched > 0,
+        "{model}: no kernel batched a single increment"
+    );
+}
+
+#[test]
+fn timing_model_is_cycle_exact_on_all_kernels() {
+    all_kernels_differential(CpuModel::Timing);
+}
+
+#[test]
+fn detailed_model_is_cycle_exact_on_all_kernels() {
+    all_kernels_differential(CpuModel::Detailed);
+}
+
+#[test]
+fn atomic_model_is_cycle_exact_on_all_kernels() {
+    all_kernels_differential(CpuModel::Atomic);
+}
+
+// ---- randomized property tests ----
+
+/// Generate a random straight-line block of PGAS increments mixed with
+/// ALU ops over registers 1..12, ending in Halt.  Geometries vary so
+/// runs break; dependencies arise naturally from the small register
+/// set.
+fn random_block(rng: &mut Xoshiro256, layout: &ArrayLayout) -> (Vec<Inst>, Vec<u64>) {
+    let len = 4 + rng.below(24) as usize;
+    let mut insts = Vec::with_capacity(len + 1);
+    for _ in 0..len {
+        let rd = 1 + rng.below(11) as u8;
+        let ra = 1 + rng.below(11) as u8;
+        match rng.below(5) {
+            0 | 1 => insts.push(Inst::PgasIncI {
+                rd,
+                ra,
+                l2es: 3,
+                l2bs: 2,
+                l2inc: rng.below(3) as u8,
+            }),
+            2 => insts.push(Inst::PgasIncR {
+                rd,
+                ra,
+                rb: 1 + rng.below(11) as u8,
+                l2es: 3,
+                l2bs: 2,
+            }),
+            // an occasional geometry switch ends any window
+            3 => insts.push(Inst::PgasIncI { rd, ra, l2es: 2, l2bs: 2, l2inc: 0 }),
+            _ => insts.push(Inst::Opi {
+                op: IntOp::Add,
+                rd,
+                ra,
+                imm: rng.below(64) as i32,
+            }),
+        }
+    }
+    insts.push(Inst::Halt);
+    // seed register file: packed pointers in 1..8, small ints above
+    let seeds: Vec<u64> = (0..32)
+        .map(|r| {
+            if (1..8).contains(&r) {
+                pack(&SharedPtr::for_index(layout, 0, rng.below(64)))
+            } else {
+                rng.below(16)
+            }
+        })
+        .collect();
+    (insts, seeds)
+}
+
+#[test]
+fn planner_never_batches_across_a_dependent_register_write() {
+    let layout = ArrayLayout::new(4, 8, 4);
+    let mut rng = Xoshiro256::new(0xDEADBEA7);
+    let mut windows = 0u64;
+    for _ in 0..400 {
+        let (insts, _) = random_block(&mut rng, &layout);
+        for pc in 0..insts.len() {
+            let Some(plan) = plan_window(&insts, pc, 32) else {
+                continue;
+            };
+            windows += 1;
+            assert!(plan.incs >= MIN_RUN_INCS);
+            assert!(plan.len >= plan.incs);
+            // invariant: no increment in the window reads a register
+            // written by ANY earlier window member (inc or ALU) — that
+            // is what makes serving the batch from pre-window register
+            // state legal.
+            let mut written = [false; 32];
+            let mut incs = 0;
+            for inst in &insts[pc..pc + plan.len] {
+                match *inst {
+                    Inst::PgasIncI { rd, ra, .. } => {
+                        assert!(!written[ra as usize], "inc reads written reg");
+                        if rd != ZERO {
+                            written[rd as usize] = true;
+                        }
+                        incs += 1;
+                    }
+                    Inst::PgasIncR { rd, ra, rb, .. } => {
+                        assert!(!written[ra as usize], "inc reads written ra");
+                        assert!(!written[rb as usize], "inc reads written rb");
+                        if rd != ZERO {
+                            written[rd as usize] = true;
+                        }
+                        incs += 1;
+                    }
+                    Inst::Opi { rd, .. } | Inst::Opr { rd, .. } => {
+                        if rd != ZERO {
+                            written[rd as usize] = true;
+                        }
+                    }
+                    ref other => panic!("non-batchable inst in window: {other:?}"),
+                }
+            }
+            assert_eq!(incs, plan.incs);
+            // the window ends at an increment (trailing ALU trimmed)
+            assert!(matches!(
+                insts[pc + plan.len - 1],
+                Inst::PgasIncI { .. } | Inst::PgasIncR { .. }
+            ));
+        }
+    }
+    assert!(windows > 100, "property test exercised only {windows} windows");
+}
+
+#[test]
+fn random_blocks_execute_bit_identically_batched_and_scalar() {
+    let layout = ArrayLayout::new(4, 8, 4);
+    let mut rng = Xoshiro256::new(0x0B5E55ED);
+    for round in 0..200 {
+        let (insts, seeds) = random_block(&mut rng, &layout);
+        let prog = Program::new("rand", insts);
+        let run = |lookahead: bool| {
+            let mut cpu = AtomicCpu::new(1, 4);
+            cpu.lookahead_mut().set_enabled(lookahead);
+            for (r, &v) in seeds.iter().enumerate() {
+                cpu.state_mut().set_r(r as u8, v);
+            }
+            let mut mem = MemSystem::new(4);
+            let mut shared = SharedLevel::new(2, HierLatency::default());
+            cpu.run(&prog, &mut mem, &mut shared, u64::MAX);
+            let regs: Vec<u64> = (0..32).map(|r| cpu.state().r(r)).collect();
+            (regs, cpu.state().cc_loc, cpu.stats().cycles)
+        };
+        let (br, bcc, bcy) = run(true);
+        let (sr, scc, scy) = run(false);
+        assert_eq!(br, sr, "round {round}: registers diverged");
+        assert_eq!(bcc, scc, "round {round}: condition code diverged");
+        assert_eq!(bcy, scy, "round {round}: cycles diverged");
+    }
+}
+
+#[test]
+fn timing_model_random_blocks_are_cycle_exact() {
+    let layout = ArrayLayout::new(4, 8, 4);
+    let mut rng = Xoshiro256::new(0x71A1A6);
+    for round in 0..100 {
+        let (insts, seeds) = random_block(&mut rng, &layout);
+        let prog = Program::new("rand", insts);
+        let run = |lookahead: bool| {
+            let mut cpu = TimingCpu::new(0, 4);
+            cpu.lookahead_mut().set_enabled(lookahead);
+            for (r, &v) in seeds.iter().enumerate() {
+                cpu.state_mut().set_r(r as u8, v);
+            }
+            let mut mem = MemSystem::new(4);
+            let mut shared = SharedLevel::new(1, HierLatency::default());
+            cpu.run(&prog, &mut mem, &mut shared, u64::MAX);
+            cpu.stats().cycles
+        };
+        assert_eq!(run(true), run(false), "round {round}: cycles diverged");
+    }
+}
