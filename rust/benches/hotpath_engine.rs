@@ -10,7 +10,11 @@
 //!   `SoftwareEngine` on a large batch;
 //! * `leon3` — the coprocessor-model replay: host throughput (the
 //!   measured `CostModel::leon3_ns_per_ptr` coefficient) and the
-//!   deterministic simulated cycles/pointer at 75 MHz.
+//!   deterministic simulated cycles/pointer at 75 MHz;
+//! * `remote` — the worker-process pool over Unix-domain sockets: the
+//!   measured `remote_dispatch_ns`/`remote_ns_per_ptr` cost-model legs
+//!   plus throughput head-to-head with the thread tier on the same
+//!   batch (the honest record of what the socket hop costs).
 //!
 //! `--quick` (the CI smoke leg) shrinks batch sizes and iteration
 //! counts.  The xla-batch backend joins automatically when built with
@@ -18,7 +22,7 @@
 
 use pgas_hw::engine::{
     AddressEngine, BatchOut, EngineCtx, Leon3Engine, Pow2Engine, PtrBatch,
-    ShardedEngine, SoftwareEngine,
+    RemoteEngine, ShardedEngine, SoftwareEngine,
 };
 use pgas_hw::sptr::{
     increment_general, locality, ArrayLayout, BaseTable, SharedPtr,
@@ -210,6 +214,35 @@ fn main() {
          {leon3_cyc_per_ptr:.1} simulated cycles/ptr @75MHz"
     );
 
+    // ---- remote process pool: measured dispatch + per-ptr legs and
+    // throughput vs the thread tier on the same batch (cargo builds
+    // the CLI for benches, so the worker binary is always at hand) ----
+    let rworkers = workers.min(4);
+    let remote = RemoteEngine::spawn_with_bin(
+        env!("CARGO_BIN_EXE_pgas-hw"),
+        rworkers,
+    )
+    .expect("spawn remote worker pool");
+    let (remote_ns_per_ptr, remote_dispatch_ns) =
+        remote.calibrate().expect("calibrate remote pool");
+    let r = bench(
+        &format!("engine::remote(auto x{rworkers}) translate x{big_n}"),
+        warmup,
+        iters,
+        || {
+            remote.translate(&ctx, &big, &mut out).unwrap();
+            black_box(&out);
+        },
+    );
+    let remote_mptr_s = big_n as f64 / r.mean_secs() / 1e6;
+    let remote_vs_sharded = remote_mptr_s / sharded_mptr_s;
+    println!(
+        "  -> remote: {remote_dispatch_ns:.0} ns dispatch, \
+         {remote_ns_per_ptr:.1} ns/ptr (the measured cost-model legs); \
+         {remote_mptr_s:.1} M ptr/s vs sharded {sharded_mptr_s:.1} \
+         ({remote_vs_sharded:.2}x, {rworkers} workers)"
+    );
+
     // Merge (not overwrite): BENCH_engine.json is shared with the
     // fig11-14 model benches, so each target may run in any order and
     // re-running one replaces only its own sections.
@@ -250,6 +283,18 @@ fn main() {
              \"translate_mptr_s\": {leon3_mptr_s:.2}, \
              \"host_ns_per_ptr\": {leon3_ns_per_ptr:.1}, \
              \"sim_cycles_per_ptr\": {leon3_cyc_per_ptr:.2}}}"
+        ),
+    );
+    merge_bench_json(
+        OUT,
+        "remote",
+        &format!(
+            "{{\"workers\": {rworkers}, \"batch\": {big_n}, \
+             \"dispatch_ns\": {remote_dispatch_ns:.0}, \
+             \"ns_per_ptr\": {remote_ns_per_ptr:.2}, \
+             \"remote_mptr_s\": {remote_mptr_s:.2}, \
+             \"sharded_mptr_s\": {sharded_mptr_s:.2}, \
+             \"remote_vs_sharded\": {remote_vs_sharded:.2}}}"
         ),
     );
     println!("merged host sections into BENCH_engine.json");

@@ -16,7 +16,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::compiler::SourceVariant;
 use crate::cpu::CpuModel;
-use crate::engine::{AddressEngine, Leon3Engine};
+use crate::engine::{AddressEngine, EngineSelector, Leon3Engine, RemoteTier};
 use crate::npb::{self, Kernel, PaperVariant, RunOutcome, Scale};
 use crate::util::table::{fnum, Table};
 
@@ -81,6 +81,20 @@ impl Campaign {
     /// Run the whole campaign on a host-thread pool; every run validates
     /// its numerics (panics otherwise).
     pub fn run(&self, verbose: bool) -> Vec<RunOutcome> {
+        self.run_with_remote(verbose, None)
+    }
+
+    /// [`run`](Self::run) with an optional remote address-mapping tier:
+    /// every point's machine gets the shared worker-process pool
+    /// installed (`npb::run_opts`), so the sweep's engine-mix section
+    /// can show `remote`-served windows.  The tier's `Arc`-shared pool
+    /// serializes its socket traffic across the job threads; cycle
+    /// totals are unaffected by which backend serves a window.
+    pub fn run_with_remote(
+        &self,
+        verbose: bool,
+        remote: Option<&RemoteTier>,
+    ) -> Vec<RunOutcome> {
         let points = self.points();
         let total = points.len();
         let queue = Arc::new(Mutex::new(points));
@@ -91,11 +105,20 @@ impl Campaign {
         for _ in 0..jobs {
             let queue = Arc::clone(&queue);
             let tx = tx.clone();
+            let remote = remote.cloned();
             handles.push(std::thread::spawn(move || loop {
                 let pt = { queue.lock().unwrap().pop() };
                 match pt {
                     Some((k, v, m, c)) => {
-                        let out = npb::run(k, v, m, c, &scale);
+                        let out = npb::run_opts(
+                            k,
+                            v,
+                            m,
+                            c,
+                            &scale,
+                            true,
+                            remote.as_ref(),
+                        );
                         if tx.send(out).is_err() {
                             return;
                         }
@@ -213,6 +236,8 @@ pub fn figure_table(
 /// * `pow2`   — is the layout all powers of two (the hardware gate)?
 /// * `leon3`  — can the Leon3 coprocessor model serve the layout
 ///   (hardware gate + Figure-2 packed-pointer field widths)?
+/// * `remote` — is the remote worker-process tier installed for this
+///   report (it serves every layout — the workers run `AutoEngine`)?
 /// * `engine` — the backend the cost model picks for one batch of
 ///   `nelems` requests;
 /// * `hits`   — requests served per backend during the kernel's setup
@@ -223,6 +248,22 @@ pub fn figure_table(
 /// thus pow2-ness) are scale-dependent, so there is no cheaper source
 /// of truth; call this once per campaign, not per point.
 pub fn engine_report(kernels: &[Kernel], cores: u32, scale: &Scale) -> Table {
+    engine_report_with(kernels, cores, scale, None)
+}
+
+/// [`engine_report`] with an optional remote tier: when `Some`, every
+/// built kernel's runtime gets a selector with the shared worker-
+/// process pool installed (at the tier's pricing), so the `engine`
+/// column and the `(setup served by)` hit rows reflect a matrix that
+/// includes the `remote` backend — with forced service pricing the
+/// setup traffic demonstrably lands there (the acceptance differential
+/// in `rust/tests/remote_engine.rs` pins a nonzero `remote` hit row).
+pub fn engine_report_with(
+    kernels: &[Kernel],
+    cores: u32,
+    scale: &Scale,
+    remote: Option<&RemoteTier>,
+) -> Table {
     let leon3 = Leon3Engine::new();
     let mut t = Table::new(
         "AddressEngine selection (cost-model argmin over batch size x \
@@ -230,12 +271,18 @@ pub fn engine_report(kernels: &[Kernel], cores: u32, scale: &Scale) -> Table {
          setup)",
         &[
             "kernel", "array", "blocksize", "elemsize", "nelems", "pow2",
-            "leon3", "engine", "hits",
+            "leon3", "remote", "engine", "hits",
         ],
     );
     for &k in kernels {
         let threads = cores.min(k.max_cores());
-        let built = npb::build(k, threads, SourceVariant::Unoptimized, scale);
+        let mut built = npb::build(k, threads, SourceVariant::Unoptimized, scale);
+        if let Some(tier) = remote {
+            let mut sel = EngineSelector::new();
+            tier.apply(&mut sel);
+            built.rt.install_engine(sel);
+        }
+        let has_remote = if remote.is_some() { "yes" } else { "-" };
         for a in built.rt.arrays() {
             let choice = built.rt.engine().choice(&a.layout, a.nelems as usize);
             let pow2 = if a.layout.hw_supported() { "yes" } else { "no" };
@@ -248,6 +295,7 @@ pub fn engine_report(kernels: &[Kernel], cores: u32, scale: &Scale) -> Table {
                 a.nelems.to_string(),
                 pow2.into(),
                 l3.into(),
+                has_remote.into(),
                 choice.name().into(),
                 "-".into(),
             ]);
@@ -262,6 +310,7 @@ pub fn engine_report(kernels: &[Kernel], cores: u32, scale: &Scale) -> Table {
                 t.row(&[
                     k.name().into(),
                     "(setup served by)".into(),
+                    "-".into(),
                     "-".into(),
                     "-".into(),
                     "-".into(),
@@ -576,6 +625,9 @@ mod tests {
         // layout-only heuristic
         assert!(rendered.contains("cost-model argmin"), "{rendered}");
         assert!(rendered.contains("leon3"), "{rendered}");
+        // the remote capability column renders even with no pool
+        // installed (the tier-enabled legs live in remote_engine.rs)
+        assert!(rendered.contains("remote"), "{rendered}");
         assert!(
             rendered
                 .lines()

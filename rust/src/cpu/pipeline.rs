@@ -287,6 +287,18 @@ impl Lookahead {
         self.mix
     }
 
+    /// Install the remote worker-process tier
+    /// ([`RemoteTier`](crate::engine::RemoteTier)) into this core's
+    /// selector: the pool is shared (`Arc`) across every core of a
+    /// machine, and the tier's pricing decides when a window's batch
+    /// actually takes the socket hop — with measured legs essentially
+    /// never (a lookahead window is tiny), with forced service pricing
+    /// every eligible window, which is how the engine-mix reports
+    /// demonstrate the tier end to end.
+    pub fn install_remote(&mut self, tier: &crate::engine::RemoteTier) {
+        tier.apply(&mut self.selector);
+    }
+
     #[inline]
     fn active(&self) -> bool {
         self.enabled && self.operable
@@ -679,5 +691,21 @@ mod tests {
         assert_eq!(mix.batched_incs, 0);
         assert_eq!(mix.scalar_incs, 3);
         assert_eq!(stats.pgas_incs, 3);
+    }
+
+    #[test]
+    fn engine_mix_carries_a_slot_for_every_backend() {
+        // COUNT grew to 6 with the remote tier; the runs array, the
+        // by_choice iteration and the label rendering must all agree.
+        let mut mix = EngineMix::default();
+        assert_eq!(mix.runs.len(), EngineChoice::COUNT);
+        mix.runs[EngineChoice::Remote.index()] = 4;
+        mix.runs[EngineChoice::Pow2.index()] = 2;
+        assert_eq!(mix.total_runs(), 6);
+        let label = mix.runs_label();
+        assert!(label.contains("remote:4"), "{label}");
+        assert!(label.contains("pow2:2"), "{label}");
+        let by = mix.by_choice();
+        assert_eq!(by[EngineChoice::Remote.index()], (EngineChoice::Remote, 4));
     }
 }

@@ -24,6 +24,11 @@
 //!   coprocessor, executed on the `leon3::` functional core, billed in
 //!   75 MHz cycles, and refused on non-pow2 geometry exactly like
 //!   `Pow2Engine`.
+//! * [`RemoteEngine`] — address mapping as a *service*: the same
+//!   scatter/gather + order-preserving splice as the thread tier, over
+//!   worker **processes** speaking a length-prefixed binary protocol on
+//!   Unix-domain sockets (the [`remote`] module; the worker side is the
+//!   `pgas-hw serve-engine` subcommand).
 //! * `XlaBatchEngine` (behind the `xla-unit` cargo feature) — the
 //!   PJRT/XLA batched unit, chunking arbitrary batch sizes through the
 //!   artifacts' fixed `UNIT_BATCH` shape.
@@ -67,12 +72,13 @@
 //! All backends must agree bit-for-bit on `(thread, phase, va, sysva,
 //! loc)` for every layout they support; `rust/tests/engine_conformance.rs`
 //! enforces this differentially (including shard-count invariance and
-//! the Leon3 coprocessor replay).  Future backends (process/remote
-//! shards — the "address mapping as a service" seam) plug into the
-//! same trait.
+//! the Leon3 coprocessor replay), and `rust/tests/remote_engine.rs`
+//! extends the differentials across the process boundary (NPB layouts
+//! at 1/2/4 worker processes, worker-death recovery).
 
 mod leon3;
 mod pow2;
+pub mod remote;
 mod select;
 mod sharded;
 mod software;
@@ -81,6 +87,7 @@ mod xla_batch;
 
 pub use leon3::Leon3Engine;
 pub use pow2::Pow2Engine;
+pub use remote::{RemoteEngine, RemoteTier};
 pub use select::{AutoEngine, CostModel, EngineChoice, EngineSelector};
 pub use sharded::ShardedEngine;
 pub use software::SoftwareEngine;
@@ -343,16 +350,29 @@ impl BatchOut {
 /// [`WalkCursor`], then emit `steps` (pointer, sysva, locality)
 /// triples with O(1) add-and-carry stepping.  Both host backends'
 /// `walk` paths route here; they differ only in their support gate.
+///
+/// Strides whose per-step byte displacement exceeds `i64` (only
+/// reachable near `u64::MAX`) are refused with a loud
+/// [`EngineError::Backend`] — a wrapped pointer walk would be silently
+/// wrong everywhere downstream.
 pub(crate) fn cursor_walk(
     ctx: &EngineCtx,
     start: SharedPtr,
     inc: u64,
     steps: usize,
     out: &mut BatchOut,
-) {
+) -> Result<(), EngineError> {
+    let mut cur =
+        WalkCursor::try_new(start, inc, &ctx.layout).ok_or_else(|| {
+            EngineError::Backend(format!(
+                "walk stride {inc} out of range for layout [blocksize {}, \
+                 elemsize {}, threads {}]: per-step byte displacement \
+                 exceeds i64",
+                ctx.layout.blocksize, ctx.layout.elemsize, ctx.layout.numthreads
+            ))
+        })?;
     out.clear();
     out.reserve(steps);
-    let mut cur = WalkCursor::new(start, inc, &ctx.layout);
     for _ in 0..steps {
         let p = cur.current();
         out.push(
@@ -362,6 +382,7 @@ pub(crate) fn cursor_walk(
         );
         cur.advance();
     }
+    Ok(())
 }
 
 /// The one address-mapping contract every backend implements.

@@ -78,8 +78,7 @@ impl AddressEngine for Pow2Engine {
         out: &mut BatchOut,
     ) -> Result<(), EngineError> {
         Self::log2s(ctx)?;
-        super::cursor_walk(ctx, start, inc, steps, out);
-        Ok(())
+        super::cursor_walk(ctx, start, inc, steps, out)
     }
 
     fn translate_one(

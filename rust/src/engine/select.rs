@@ -19,10 +19,20 @@
 //!   time** ([`Leon3Engine::calibrate`]) — honest pricing keeps the
 //!   functional-core replay out of the hot path while still letting a
 //!   recalibrated model (e.g. one mirroring real silicon) win;
+//! * the remote worker-process pool (installed with
+//!   [`EngineSelector::with_remote`]) costs a scatter/gather fee plus a
+//!   marginal per-pointer cost, both **measured at install time** by a
+//!   `RemoteEngine::calibrate` round-trip and gated by
+//!   `remote_threshold` — the socket hop only wins where the measured
+//!   model says it does;
 //! * walks are priced separately off the O(1)
 //!   [`WalkCursor`](crate::sptr::WalkCursor) stepper cost — a walk's
 //!   scalar path is cheap regardless of layout, so walks shard only at
 //!   much larger step counts than translates.
+//!
+//! Install-time calibrations are stored beside the model and re-applied
+//! whenever [`EngineSelector::with_cost_model`] replaces the constants,
+//! so builder order cannot silently discard a measurement.
 //!
 //! The pool's parallelism is capped by what a batch can actually keep
 //! busy (`n / min_shard_len` shards), and per-choice hit counters
@@ -31,8 +41,9 @@
 //! sweep.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::OnceLock;
+use std::sync::{Arc, OnceLock};
 
+use super::remote::RemoteEngine;
 use super::{
     AddressEngine, BatchOut, EngineCtx, EngineError, Leon3Engine, Pow2Engine,
     PtrBatch, ShardedEngine, SoftwareEngine,
@@ -54,13 +65,16 @@ pub enum EngineChoice {
     XlaBatch,
     /// The Leon3 FPGA-coprocessor model (instruction replay).
     Leon3,
+    /// The worker-process pool behind Unix-domain sockets
+    /// ([`RemoteEngine`] — address mapping as a service).
+    Remote,
 }
 
 impl EngineChoice {
     /// Number of reportable backends — the length of [`ALL`](Self::ALL)
     /// and of every hit-counter / [`EngineMix`](crate::cpu::EngineMix)
     /// array indexed by [`index`](Self::index).
-    pub const COUNT: usize = 5;
+    pub const COUNT: usize = 6;
 
     /// Every backend the selector can report, in hit-counter order.
     pub const ALL: [EngineChoice; Self::COUNT] = [
@@ -69,6 +83,7 @@ impl EngineChoice {
         EngineChoice::Sharded,
         EngineChoice::XlaBatch,
         EngineChoice::Leon3,
+        EngineChoice::Remote,
     ];
 
     /// Stable name used in reports and selection tables.
@@ -79,6 +94,7 @@ impl EngineChoice {
             EngineChoice::Sharded => "sharded",
             EngineChoice::XlaBatch => "xla-batch",
             EngineChoice::Leon3 => "leon3",
+            EngineChoice::Remote => "remote",
         }
     }
 
@@ -194,6 +210,15 @@ pub struct CostModel {
     /// functional core state (registers + base LUT) for the request.
     /// Also measured (not guessed) by [`EngineSelector::with_leon3`].
     pub leon3_dispatch_ns: f64,
+    /// Marginal ns per pointer through the remote worker-process pool
+    /// (serialization + socket + divided-down compute).  Measured by
+    /// `RemoteEngine::calibrate` when the tier is installed via
+    /// [`EngineSelector::with_remote`]; the default is the order of
+    /// magnitude Unix-domain sockets cost on a commodity host.
+    pub remote_ns_per_ptr: f64,
+    /// Fixed scatter/gather fee for one remote request (frame
+    /// round-trips across every shard).  Also measured, not guessed.
+    pub remote_dispatch_ns: f64,
 }
 
 impl Default for CostModel {
@@ -208,6 +233,8 @@ impl Default for CostModel {
             xla_dispatch_ns: 60_000.0,
             leon3_ns_per_ptr: 150.0,
             leon3_dispatch_ns: 5_000.0,
+            remote_ns_per_ptr: 25.0,
+            remote_dispatch_ns: 150_000.0,
         }
     }
 }
@@ -244,6 +271,9 @@ impl CostModel {
             EngineChoice::Leon3 => {
                 self.leon3_dispatch_ns + n * self.leon3_ns_per_ptr
             }
+            EngineChoice::Remote => {
+                self.remote_dispatch_ns + n * self.remote_ns_per_ptr
+            }
         }
     }
 
@@ -272,11 +302,24 @@ impl CostModel {
     }
 }
 
+/// Calibration measurements taken when a backend was installed, kept
+/// separately from the live [`CostModel`] so a later
+/// [`with_cost_model`](EngineSelector::with_cost_model) can re-apply
+/// them — builder order no longer matters.
+#[derive(Clone, Copy, Debug, Default)]
+struct MeasuredLegs {
+    /// `(ns_per_ptr, dispatch_ns)` from `Leon3Engine::calibrate`.
+    leon3: Option<(f64, f64)>,
+    /// `(ns_per_ptr, dispatch_ns)` from `RemoteEngine::calibrate` (or
+    /// the forced-tier pricing explicitly installed with it).
+    remote: Option<(f64, f64)>,
+}
+
 /// Owns one instance of every available backend and serves each request
-/// with the cheapest legal one under its [`CostModel`].  This is the
-/// seam future backends (process/remote shards — "address mapping as a
-/// service") plug into; the Leon3 coprocessor model joined it via
-/// [`with_leon3`](Self::with_leon3).
+/// with the cheapest legal one under its [`CostModel`].  The Leon3
+/// coprocessor model joined via [`with_leon3`](Self::with_leon3); the
+/// remote worker-process pool — the "address mapping as a service" seam
+/// — via [`with_remote`](Self::with_remote).
 pub struct EngineSelector {
     software: SoftwareEngine,
     pow2: Pow2Engine,
@@ -295,7 +338,14 @@ pub struct EngineSelector {
     /// [`with_leon3`](Self::with_leon3); priced per request like every
     /// other backend once present.
     leon3: Option<Leon3Engine>,
+    /// The remote worker-process pool (shared: one pool can serve many
+    /// selectors, e.g. every core of a simulated machine).
+    remote: Option<Arc<RemoteEngine>>,
+    /// Minimum batch size eligible for the remote leg.
+    remote_threshold: usize,
     cost: CostModel,
+    /// Install-time calibrations, re-applied on every cost-model write.
+    measured: MeasuredLegs,
     /// Requests served per [`EngineChoice`] (indexed by
     /// `EngineChoice::index`).
     hits: [AtomicU64; EngineChoice::COUNT],
@@ -310,6 +360,11 @@ impl EngineSelector {
     /// still has to pick it; this floor keeps small-batch selection
     /// deterministic and free of pool bookkeeping.
     pub const DEFAULT_SHARD_THRESHOLD: usize = 8192;
+
+    /// Minimum batch size eligible for the remote worker-process pool:
+    /// the socket hop costs ~100 µs, so only batches big enough that
+    /// the measured cost model *could* prefer it are even priced.
+    pub const DEFAULT_REMOTE_THRESHOLD: usize = 1 << 16;
 
     /// Cap on the default worker-pool size (campaigns run many
     /// selector-owning runtimes concurrently).
@@ -332,7 +387,10 @@ impl EngineSelector {
             xla: None,
             xla_threshold: Self::DEFAULT_XLA_THRESHOLD,
             leon3: None,
+            remote: None,
+            remote_threshold: Self::DEFAULT_REMOTE_THRESHOLD,
             cost: CostModel::default(),
+            measured: MeasuredLegs::default(),
             hits: std::array::from_fn(|_| AtomicU64::new(0)),
         }
     }
@@ -351,15 +409,30 @@ impl EngineSelector {
         self
     }
 
-    /// Replace **all** cost constants (e.g. from a calibration run).
-    /// Note the ordering interaction with [`with_leon3`](Self::with_leon3):
-    /// that builder writes a measured `leon3_ns_per_ptr` into the
-    /// current model, so call `with_cost_model` *before* `with_leon3`
-    /// (or use [`with_leon3_uncalibrated`](Self::with_leon3_uncalibrated))
-    /// to avoid discarding the measurement.
+    /// Replace the tunable cost constants (e.g. from a calibration
+    /// run).  Backend legs that were **measured at install time**
+    /// ([`with_leon3`](Self::with_leon3),
+    /// [`with_remote`](Self::with_remote)) are re-applied on top, so
+    /// builder order does not matter — a measurement can only be
+    /// discarded by installing the backend with its `*_uncalibrated`
+    /// variant, which records none.
     pub fn with_cost_model(mut self, cost: CostModel) -> Self {
         self.cost = cost;
+        self.reapply_measured();
         self
+    }
+
+    /// Write the install-time calibrations back over the current cost
+    /// model (called after every cost-model replacement).
+    fn reapply_measured(&mut self) {
+        if let Some((ns_per_ptr, dispatch_ns)) = self.measured.leon3 {
+            self.cost.leon3_ns_per_ptr = ns_per_ptr;
+            self.cost.leon3_dispatch_ns = dispatch_ns;
+        }
+        if let Some((ns_per_ptr, dispatch_ns)) = self.measured.remote {
+            self.cost.remote_ns_per_ptr = ns_per_ptr;
+            self.cost.remote_dispatch_ns = dispatch_ns;
+        }
     }
 
     /// Install the XLA batch backend.
@@ -389,19 +462,22 @@ impl EngineSelector {
     /// rather than guessed coefficients.  (With honest numbers the
     /// replay never beats the shift/mask arithmetic — installing it
     /// serves reporting and differential validation; override the cost
-    /// model to emulate real-silicon pricing.)  Call this *after* any
-    /// [`with_cost_model`](Self::with_cost_model), which replaces every
-    /// constant including the measurements made here.
+    /// model to emulate real-silicon pricing.)  The measurement is
+    /// recorded and survives any later
+    /// [`with_cost_model`](Self::with_cost_model) in either order.
     pub fn with_leon3(mut self, engine: Leon3Engine) -> Self {
         let (ns_per_ptr, dispatch_ns) = engine.calibrate();
-        self.cost.leon3_ns_per_ptr = ns_per_ptr;
-        self.cost.leon3_dispatch_ns = dispatch_ns;
+        self.measured.leon3 = Some((ns_per_ptr, dispatch_ns));
         self.leon3 = Some(engine);
+        self.reapply_measured();
         self
     }
 
     /// Install the Leon3 backend without the calibration run, keeping
-    /// whatever `leon3_*` constants the current [`CostModel`] holds.
+    /// whatever `leon3_*` constants the current [`CostModel`] holds
+    /// (no measurement is recorded, so a later cost-model write fully
+    /// controls the legs — this is how tests force silicon-like
+    /// pricing).
     pub fn with_leon3_uncalibrated(mut self, engine: Leon3Engine) -> Self {
         self.leon3 = Some(engine);
         self
@@ -410,6 +486,58 @@ impl EngineSelector {
     /// Is the Leon3 coprocessor model installed?
     pub fn has_leon3(&self) -> bool {
         self.leon3.is_some()
+    }
+
+    /// Spawn an `n`-process remote pool ([`RemoteEngine::spawn`]) and
+    /// install it with **measured** cost-model legs from a
+    /// [`RemoteEngine::calibrate`] round-trip — like
+    /// [`with_leon3`](Self::with_leon3), the argmin prices the socket
+    /// hop with this host's real numbers (on one machine it rarely
+    /// wins; the tier exists for the scale-out seam).  The measurement
+    /// survives any later [`with_cost_model`](Self::with_cost_model).
+    pub fn with_remote(self, workers: usize) -> Result<Self, EngineError> {
+        let engine = Arc::new(RemoteEngine::spawn(workers)?);
+        let (ns_per_ptr, dispatch_ns) = engine.calibrate()?;
+        let mut sel = self;
+        // keep any threshold configured before this call — builder
+        // order must not silently reset it
+        let threshold = sel.remote_threshold;
+        sel.set_remote(engine, ns_per_ptr, dispatch_ns, threshold);
+        Ok(sel)
+    }
+
+    /// Install an already-spawned remote pool with explicit pricing
+    /// legs + threshold (what `RemoteTier::apply` calls; the legs are
+    /// recorded like a measurement so later cost-model writes keep
+    /// them).
+    pub fn set_remote(
+        &mut self,
+        engine: Arc<RemoteEngine>,
+        ns_per_ptr: f64,
+        dispatch_ns: f64,
+        threshold: usize,
+    ) {
+        self.measured.remote = Some((ns_per_ptr, dispatch_ns));
+        self.remote = Some(engine);
+        self.remote_threshold = threshold.max(1);
+        self.reapply_measured();
+    }
+
+    /// Route batches of at least `n` pointers through the remote leg
+    /// of the cost model.
+    pub fn with_remote_threshold(mut self, n: usize) -> Self {
+        self.remote_threshold = n.max(1);
+        self
+    }
+
+    /// Is the remote worker-process pool installed?
+    pub fn has_remote(&self) -> bool {
+        self.remote.is_some()
+    }
+
+    /// The minimum batch size the remote leg is priced at.
+    pub fn remote_threshold(&self) -> usize {
+        self.remote_threshold
     }
 
     /// The cost constants currently in force.
@@ -463,6 +591,13 @@ impl EngineSelector {
                 if ns < best.1 {
                     best = (EngineChoice::Leon3, ns);
                 }
+            }
+        }
+        if self.remote.is_some() && n >= self.remote_threshold {
+            // the workers run AutoEngine: every layout is legal
+            let ns = price(EngineChoice::Remote);
+            if ns < best.1 {
+                best = (EngineChoice::Remote, ns);
             }
         }
         best.0
@@ -521,6 +656,10 @@ impl EngineSelector {
                 .leon3
                 .as_ref()
                 .expect("choice() returned Leon3 without the model installed"),
+            EngineChoice::Remote => self
+                .remote
+                .as_deref()
+                .expect("choice() returned Remote without the pool installed"),
         }
     }
 
@@ -763,6 +902,59 @@ mod tests {
             sel.choice(&ArrayLayout::new(4, 8, 4), 64),
             EngineChoice::Pow2
         );
+    }
+
+    #[test]
+    fn cost_model_order_cannot_discard_leon3_calibration() {
+        // Regression: with_cost_model used to overwrite the measured
+        // leon3 legs when called after with_leon3.  A sentinel model
+        // must lose to the measurement in *both* orders, while its
+        // unmeasured legs stick.
+        let sentinel = CostModel {
+            leon3_ns_per_ptr: 7777.0,
+            leon3_dispatch_ns: 8888.0,
+            software_ns_per_ptr: 99.0,
+            ..CostModel::default()
+        };
+        let before = EngineSelector::new()
+            .with_cost_model(sentinel)
+            .with_leon3(Leon3Engine::new());
+        let after = EngineSelector::new()
+            .with_leon3(Leon3Engine::new())
+            .with_cost_model(sentinel);
+        for (label, sel) in [("cost-first", &before), ("leon3-first", &after)] {
+            let cm = sel.cost_model();
+            assert_ne!(cm.leon3_ns_per_ptr, 7777.0, "{label}: measurement lost");
+            assert_ne!(cm.leon3_dispatch_ns, 8888.0, "{label}: measurement lost");
+            assert_eq!(cm.software_ns_per_ptr, 99.0, "{label}: override lost");
+        }
+        // the uncalibrated install records nothing: the sentinel rules
+        let forced = EngineSelector::new()
+            .with_leon3_uncalibrated(Leon3Engine::new())
+            .with_cost_model(sentinel);
+        assert_eq!(forced.cost_model().leon3_ns_per_ptr, 7777.0);
+    }
+
+    #[test]
+    fn remote_leg_is_priced_but_gated_by_install_and_threshold() {
+        // Without a pool installed the argmin must never return Remote
+        // no matter how cheap the legs claim to be.
+        let sel = EngineSelector::new()
+            .with_shard_workers(1)
+            .with_cost_model(CostModel {
+                remote_ns_per_ptr: 0.0,
+                remote_dispatch_ns: 0.0,
+                ..CostModel::default()
+            });
+        assert!(!sel.has_remote());
+        assert_eq!(sel.choice(&ArrayLayout::new(4, 8, 4), 1 << 20), EngineChoice::Pow2);
+        // the cost shape itself: fee + n * marginal
+        let cm = CostModel::default();
+        let n = 1 << 20;
+        let est = cm.estimate(EngineChoice::Remote, &ArrayLayout::new(4, 8, 4), n, 1);
+        assert_eq!(est, cm.remote_dispatch_ns + n as f64 * cm.remote_ns_per_ptr);
+        // (selector-level remote routing needs live worker processes;
+        // rust/tests/remote_engine.rs covers it end to end.)
     }
 
     #[test]

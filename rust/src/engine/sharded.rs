@@ -190,6 +190,68 @@ impl<E: AddressEngine + Send + Sync + 'static> ShardedEngine<E> {
             .collect())
     }
 
+    /// Splice batch-shaped shard results in shard order, erroring hard
+    /// on a mismatched variant or a short/overlong splice — a worker
+    /// bug must surface as [`EngineError::Backend`], never as silently
+    /// truncated output.
+    fn splice_batches(
+        parts: Vec<ShardOut>,
+        out: &mut BatchOut,
+        want_len: usize,
+    ) -> Result<(), EngineError> {
+        out.clear();
+        out.reserve(want_len);
+        for part in parts {
+            match part {
+                ShardOut::Batch(mut b) => out.append(&mut b),
+                ShardOut::Ptrs(_) => {
+                    return Err(EngineError::Backend(
+                        "sharded: worker answered a translate/walk shard \
+                         with increment-shaped output"
+                            .into(),
+                    ))
+                }
+            }
+        }
+        if out.len() != want_len {
+            return Err(EngineError::Backend(format!(
+                "sharded: spliced {} results for a {want_len}-item request",
+                out.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// [`splice_batches`](Self::splice_batches) for increment-shaped
+    /// shards.
+    fn splice_ptrs(
+        parts: Vec<ShardOut>,
+        out: &mut Vec<SharedPtr>,
+        want_len: usize,
+    ) -> Result<(), EngineError> {
+        out.clear();
+        out.reserve(want_len);
+        for part in parts {
+            match part {
+                ShardOut::Ptrs(mut v) => out.append(&mut v),
+                ShardOut::Batch(_) => {
+                    return Err(EngineError::Backend(
+                        "sharded: worker answered an increment shard with \
+                         translate-shaped output"
+                            .into(),
+                    ))
+                }
+            }
+        }
+        if out.len() != want_len {
+            return Err(EngineError::Backend(format!(
+                "sharded: spliced {} results for a {want_len}-item request",
+                out.len()
+            )));
+        }
+        Ok(())
+    }
+
     /// Scatter a map-style batch over `k` shards and gather in order.
     fn map_sharded(
         &self,
@@ -249,14 +311,7 @@ impl<E: AddressEngine + Send + Sync + 'static> AddressEngine
             return self.inner.translate(ctx, batch, out);
         }
         let parts = self.map_sharded(ctx, batch, k, true)?;
-        out.clear();
-        out.reserve(batch.len());
-        for part in parts {
-            if let ShardOut::Batch(mut b) = part {
-                out.append(&mut b);
-            }
-        }
-        Ok(())
+        Self::splice_batches(parts, out, batch.len())
     }
 
     fn increment(
@@ -271,14 +326,7 @@ impl<E: AddressEngine + Send + Sync + 'static> AddressEngine
             return self.inner.increment(ctx, batch, out);
         }
         let parts = self.map_sharded(ctx, batch, k, false)?;
-        out.clear();
-        out.reserve(batch.len());
-        for part in parts {
-            if let ShardOut::Ptrs(mut v) = part {
-                out.append(&mut v);
-            }
-        }
-        Ok(())
+        Self::splice_ptrs(parts, out, batch.len())
     }
 
     fn walk(
@@ -320,14 +368,7 @@ impl<E: AddressEngine + Send + Sync + 'static> AddressEngine
         }
         drop(reply_tx);
         let parts = Self::collect(reply_rx, k)?;
-        out.clear();
-        out.reserve(steps);
-        for part in parts {
-            if let ShardOut::Batch(mut b) = part {
-                out.append(&mut b);
-            }
-        }
-        Ok(())
+        Self::splice_batches(parts, out, steps)
     }
 
     fn translate_one(
@@ -432,6 +473,105 @@ mod tests {
             SoftwareEngine.walk(&ctx, SharedPtr::NULL, 3, n, &mut b).unwrap();
             assert_eq!(a, b, "walk n={n}");
         }
+    }
+
+    /// An inner engine that silently drops the last result of every
+    /// translate — the worker-bug shape the splice length check exists
+    /// to catch.
+    #[derive(Clone, Copy)]
+    struct TruncatingEngine;
+
+    impl AddressEngine for TruncatingEngine {
+        fn name(&self) -> &'static str {
+            "truncating"
+        }
+        fn supports(&self, _layout: &ArrayLayout) -> bool {
+            true
+        }
+        fn translate(
+            &self,
+            ctx: &EngineCtx,
+            batch: &PtrBatch,
+            out: &mut BatchOut,
+        ) -> Result<(), EngineError> {
+            super::super::SoftwareEngine.translate(ctx, batch, out)?;
+            out.ptrs.pop();
+            out.sysva.pop();
+            out.loc.pop();
+            Ok(())
+        }
+        fn increment(
+            &self,
+            ctx: &EngineCtx,
+            batch: &PtrBatch,
+            out: &mut Vec<SharedPtr>,
+        ) -> Result<(), EngineError> {
+            super::super::SoftwareEngine.increment(ctx, batch, out)?;
+            out.pop();
+            Ok(())
+        }
+        fn walk(
+            &self,
+            ctx: &EngineCtx,
+            start: SharedPtr,
+            inc: u64,
+            steps: usize,
+            out: &mut BatchOut,
+        ) -> Result<(), EngineError> {
+            super::super::SoftwareEngine.walk(ctx, start, inc, steps, out)
+        }
+    }
+
+    #[test]
+    fn short_shard_output_is_a_hard_error_not_truncation() {
+        let sharded = ShardedEngine::new(TruncatingEngine, 2).with_min_shard_len(1);
+        let layout = ArrayLayout::new(4, 8, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        for i in 0..16 {
+            batch.push(SharedPtr::for_index(&layout, 0, i), 1);
+        }
+        let mut out = BatchOut::new();
+        let err = sharded.translate(&ctx, &batch, &mut out).unwrap_err();
+        assert!(
+            matches!(&err, EngineError::Backend(m) if m.contains("spliced")),
+            "want a loud splice-length error, got {err:?}"
+        );
+        let mut ptrs = Vec::new();
+        let err = sharded.increment(&ctx, &batch, &mut ptrs).unwrap_err();
+        assert!(matches!(&err, EngineError::Backend(m) if m.contains("spliced")));
+    }
+
+    #[test]
+    fn pool_survives_a_dropped_receiver_and_serves_the_next_request() {
+        // When one shard errors, `collect` returns early and drops the
+        // reply receiver while other workers may still be sending; the
+        // workers swallow that send failure (the caller already gave up
+        // on the request) and the pool must stay serviceable.
+        let sharded = ShardedEngine::new(Pow2Engine, 2).with_min_shard_len(1);
+        let table = BaseTable::regular(8, 1 << 32, 1 << 32);
+        let bad = ArrayLayout::new(3, 8, 4); // non-pow2: every shard errors
+        let ctx = EngineCtx::new(bad, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        for i in 0..32 {
+            batch.push(SharedPtr::for_index(&bad, 0, i), 1);
+        }
+        let mut out = BatchOut::new();
+        for _ in 0..3 {
+            assert!(sharded.translate(&ctx, &batch, &mut out).is_err());
+        }
+        // the pool recovers: a legal request on the same engine works
+        let good = ArrayLayout::new(8, 8, 8);
+        let ctx = EngineCtx::new(good, &table, 1).unwrap();
+        let mut batch = PtrBatch::new();
+        for i in 0..64 {
+            batch.push(SharedPtr::for_index(&good, 0, i * 3), i % 9);
+        }
+        let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
+        sharded.translate(&ctx, &batch, &mut a).unwrap();
+        Pow2Engine.translate(&ctx, &batch, &mut b).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

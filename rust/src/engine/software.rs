@@ -74,8 +74,7 @@ impl AddressEngine for SoftwareEngine {
         steps: usize,
         out: &mut BatchOut,
     ) -> Result<(), EngineError> {
-        super::cursor_walk(ctx, start, inc, steps, out);
-        Ok(())
+        super::cursor_walk(ctx, start, inc, steps, out)
     }
 
     fn translate_one(

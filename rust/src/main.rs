@@ -1,17 +1,21 @@
 //! `pgas-hw` — CLI for the PGAS address-mapping-hardware reproduction.
 //!
 //! Subcommands:
-//!   run      one kernel/variant/model/core-count simulation
-//!   sweep    a full campaign (defaults reproduce Figs. 6–14), CSV out
-//!   leon3    the FPGA prototype microbenchmarks (Figs. 15/16)
-//!   area     Table 4 + the component breakdown
-//!   disasm   compile a kernel and print program + PGAS census + Table 1
-//!   verify   differential check of the AddressEngine backends
-//!            (software vs pow2 vs sharded vs the Leon3 coprocessor
-//!            model; + the XLA batch unit with `--features xla-unit`
-//!            and artifacts present)
-//!   walk     demo: trace a pointer walk through a layout via the
-//!            selected AddressEngine backend
+//!   run          one kernel/variant/model/core-count simulation
+//!   sweep        a full campaign (defaults reproduce Figs. 6–14), CSV out
+//!   leon3        the FPGA prototype microbenchmarks (Figs. 15/16)
+//!   area         Table 4 + the component breakdown
+//!   disasm       compile a kernel and print program + PGAS census + Table 1
+//!   verify       differential check of the AddressEngine backends
+//!                (software vs pow2 vs sharded vs the Leon3 coprocessor
+//!                model vs the remote worker-process pool; + the XLA
+//!                batch unit with `--features xla-unit` and artifacts)
+//!   walk         demo: trace a pointer walk through a layout via the
+//!                selected AddressEngine backend
+//!   serve-engine the worker side of the remote tier: serve one
+//!                AddressEngine session on a Unix-domain socket
+//!                (spawned and supervised by `RemoteEngine`; runnable
+//!                by hand for debugging)
 //!
 //! (Hand-rolled argument parsing: the offline environment vendors no
 //! clap.)
@@ -23,7 +27,8 @@ use pgas_hw::coordinator::{self, Campaign};
 use pgas_hw::cpu::CpuModel;
 use pgas_hw::engine::{
     AddressEngine, BatchOut, EngineCtx, EngineSelector, Leon3Engine,
-    Pow2Engine, PtrBatch, ShardedEngine, SoftwareEngine,
+    Pow2Engine, PtrBatch, RemoteEngine, RemoteTier, ShardedEngine,
+    SoftwareEngine,
 };
 use pgas_hw::npb::{self, Kernel, PaperVariant, Scale};
 use pgas_hw::sptr::{ArrayLayout, BaseTable, SharedPtr};
@@ -31,18 +36,26 @@ use pgas_hw::util::rng::Xoshiro256;
 use pgas_hw::{area, isa, leon3};
 
 fn usage() -> &'static str {
-    "usage: pgas-hw <run|sweep|leon3|area|disasm|verify|walk> [--key value ...]
+    "usage: pgas-hw <run|sweep|leon3|area|disasm|verify|walk|serve-engine> [--key value ...]
   run    --kernel EP|IS|CG|MG|FT --variant unopt|manual|hw
          --model atomic|timing|detailed --cores N [--scale F]
          [--no-lookahead]  (disable batched PGAS-increment windows;
                             cycle totals are identical either way)
+         [--remote N]      (spawn an N-process remote mapping pool,
+                            measured pricing)
+         [--remote-fast]   (price the pool as a dedicated service so
+                            eligible windows actually take the hop)
   sweep  [--kernels ..] [--models ..] [--cores 1,2,4,..] [--scale F]
          [--config campaign.cfg] [--out results/]
+         [--remote N] [--remote-fast]  (add the remote tier to the
+                                        engine report AND every sweep
+                                        point's core selectors)
   leon3  [--bench vecadd|matmul|all] [--threads 1|2|4] [--tables]
   area
   disasm --kernel K [--variant V] [--full]
   verify [--batches N] [--artifacts DIR]
-  walk   [--blocksize B] [--elemsize E] [--threads T] [--inc I]"
+  walk   [--blocksize B] [--elemsize E] [--threads T] [--inc I]
+  serve-engine --socket PATH   (worker: serve one engine session, exit)"
 }
 
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>, String> {
@@ -84,6 +97,7 @@ fn main() -> ExitCode {
         "disasm" => cmd_disasm(&flags),
         "verify" => cmd_verify(&flags),
         "walk" => cmd_walk(&flags),
+        "serve-engine" => cmd_serve_engine(&flags),
         _ => Err(format!("unknown command `{cmd}`\n{}", usage())),
     };
     match result {
@@ -102,6 +116,29 @@ fn get_scale(flags: &HashMap<String, String>) -> Result<Scale, String> {
         },
         None => Scale::default(),
     })
+}
+
+/// Parse `--remote N [--remote-fast]` into a spawned tier (None when
+/// the flag is absent).  `--remote-fast` prices the pool as a dedicated
+/// service (zero legs, threshold 1) so the hop is actually taken on one
+/// host; without it the legs are measured and the argmin decides.
+fn parse_remote_tier(
+    flags: &HashMap<String, String>,
+) -> Result<Option<RemoteTier>, String> {
+    let Some(n) = flags.get("remote") else {
+        if flags.contains_key("remote-fast") {
+            return Err("--remote-fast requires --remote N".into());
+        }
+        return Ok(None);
+    };
+    let workers: usize = n.parse().map_err(|_| format!("bad remote `{n}`"))?;
+    let tier = if flags.contains_key("remote-fast") {
+        RemoteTier::spawn_forced(workers)
+    } else {
+        RemoteTier::spawn(workers)
+    }
+    .map_err(|e| e.to_string())?;
+    Ok(Some(tier))
 }
 
 fn parse_variant(flags: &HashMap<String, String>) -> Result<PaperVariant, String> {
@@ -125,7 +162,16 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
         .unwrap_or(Ok(4))?;
     let scale = get_scale(flags)?;
     let lookahead = !flags.contains_key("no-lookahead");
-    let out = npb::run_lookahead(kernel, variant, model, cores, &scale, lookahead);
+    let remote = parse_remote_tier(flags)?;
+    let out = npb::run_opts(
+        kernel,
+        variant,
+        model,
+        cores,
+        &scale,
+        lookahead,
+        remote.as_ref(),
+    );
     println!(
         "{} [{}] {} x{}: {} cycles = {:.3} ms simulated @2GHz (validated OK)",
         kernel,
@@ -195,12 +241,18 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<(), String> {
         campaign.jobs
     );
     let report_cores = campaign.cores.first().copied().unwrap_or(4);
+    let remote = parse_remote_tier(flags)?;
     println!(
         "{}",
-        coordinator::engine_report(&campaign.kernels, report_cores, &campaign.scale)
-            .render()
+        coordinator::engine_report_with(
+            &campaign.kernels,
+            report_cores,
+            &campaign.scale,
+            remote.as_ref(),
+        )
+        .render()
     );
-    let outs = campaign.run(true);
+    let outs = campaign.run_with_remote(true, remote.as_ref());
     let figs = [
         (Kernel::Ep, "Fig 6"),
         (Kernel::Cg, "Fig 7/11"),
@@ -335,9 +387,10 @@ fn artifacts_dir(flags: &HashMap<String, String>) -> String {
 /// Differential conformance of the AddressEngine backends on randomized
 /// pow2 layouts: software (general Algorithm 1) vs pow2 (shift/mask) vs
 /// the sharded worker pool vs the Leon3 coprocessor model (instruction
-/// replay on the FPGA-prototype functional core), and — when compiled
-/// with `xla-unit` and artifacts are present — the XLA batch unit as
-/// well.  All must agree bit-for-bit.
+/// replay on the FPGA-prototype functional core) vs the remote
+/// worker-process pool, and — when compiled with `xla-unit` and
+/// artifacts are present — the XLA batch unit as well.  All must agree
+/// bit-for-bit.
 fn cmd_verify(flags: &HashMap<String, String>) -> Result<(), String> {
     let batches: u32 = flags
         .get("batches")
@@ -347,6 +400,18 @@ fn cmd_verify(flags: &HashMap<String, String>) -> Result<(), String> {
     let pow2 = Pow2Engine;
     let sharded = ShardedEngine::new(SoftwareEngine, 4).with_min_shard_len(1);
     let leon3 = Leon3Engine::new();
+    // min_shard_len 1 forces real multi-process fan-out + splice even
+    // on the small randomized batches.
+    let remote = match RemoteEngine::spawn(2) {
+        Ok(r) => Some(r.with_min_shard_len(1)),
+        Err(e) => {
+            eprintln!(
+                "note: remote engine unavailable ({e}); skipping the \
+                 process-tier differential"
+            );
+            None
+        }
+    };
     #[cfg(feature = "xla-unit")]
     let xla = match pgas_hw::engine::XlaBatchEngine::load(artifacts_dir(flags)) {
         Ok(x) => {
@@ -397,15 +462,23 @@ fn cmd_verify(flags: &HashMap<String, String>) -> Result<(), String> {
                 "batch {batch}: leon3 engine != software engine"
             ));
         }
-        #[cfg_attr(not(feature = "xla-unit"), allow(unused_mut))]
-        let mut engines = "software == pow2 == sharded == leon3";
+        let mut engines = String::from("software == pow2 == sharded == leon3");
+        if let Some(r) = &remote {
+            r.translate(&ctx, &req, &mut got).map_err(|e| e.to_string())?;
+            if got != want {
+                return Err(format!(
+                    "batch {batch}: remote engine != software engine"
+                ));
+            }
+            engines.push_str(" == remote");
+        }
         #[cfg(feature = "xla-unit")]
         if let Some(x) = &xla {
             x.translate(&ctx, &req, &mut got).map_err(|e| e.to_string())?;
             if got != want {
                 return Err(format!("batch {batch}: xla-batch engine != software engine"));
             }
-            engines = "software == pow2 == sharded == leon3 == xla-batch";
+            engines.push_str(" == xla-batch");
         }
         println!(
             "batch {batch}: {n} pointers OK, {engines} (T={t}, bs=2^{l2bs}, es=2^{l2es})"
@@ -413,6 +486,15 @@ fn cmd_verify(flags: &HashMap<String, String>) -> Result<(), String> {
     }
     println!("verify: all {batches} batches agree across engines");
     Ok(())
+}
+
+/// The worker side of the remote AddressEngine tier: bind the socket,
+/// serve exactly one client session, exit.  Normally spawned and
+/// supervised by `RemoteEngine`; running it by hand is useful for
+/// protocol debugging (`pgas-hw serve-engine --socket /tmp/e.sock`).
+fn cmd_serve_engine(flags: &HashMap<String, String>) -> Result<(), String> {
+    let socket = flags.get("socket").ok_or("missing --socket")?;
+    pgas_hw::engine::remote::serve(std::path::Path::new(socket))
 }
 
 /// Trace a pointer walk through a layout with whichever backend the

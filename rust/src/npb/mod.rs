@@ -221,6 +221,26 @@ pub fn run_lookahead(
     scale: &Scale,
     lookahead: bool,
 ) -> RunOutcome {
+    run_opts(kernel, variant, model, cores, scale, lookahead, None)
+}
+
+/// The fully-optioned run: lookahead control plus an optional remote
+/// address-mapping tier ([`RemoteTier`](crate::engine::RemoteTier))
+/// installed into every core's selector before the run — cycle totals
+/// are unaffected by *which* backend serves a window (event replay is
+/// per instruction either way), so the tier only changes host-side
+/// serving and the recorded engine mix (`RunOutcome::engine_mix`,
+/// `coordinator::engine_mix_table`).
+#[allow(clippy::too_many_arguments)]
+pub fn run_opts(
+    kernel: Kernel,
+    variant: PaperVariant,
+    model: CpuModel,
+    cores: u32,
+    scale: &Scale,
+    lookahead: bool,
+    remote: Option<&crate::engine::RemoteTier>,
+) -> RunOutcome {
     let built = build(kernel, cores, variant.source(), scale);
     let opts = CompileOpts {
         lowering: variant.lowering(),
@@ -232,6 +252,9 @@ pub fn run_lookahead(
     let mut cfg = MachineCfg::new(cores, model);
     cfg.lookahead = lookahead;
     let mut machine = Machine::new(cfg);
+    if let Some(tier) = remote {
+        machine.install_remote(tier);
+    }
     (built.setup)(&built.rt, machine.mem_mut());
     let result = machine.run(&ck.program);
     if let Err(e) = (built.validate)(&built.rt, machine.mem_mut()) {

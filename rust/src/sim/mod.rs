@@ -143,6 +143,17 @@ impl MachineResult {
             self.engine_mix.total_runs().to_string(),
             "lookahead windows served batched",
         );
+        // one line per backend that actually served windows (the
+        // remote tier shows up here when a pool was installed)
+        for (choice, runs) in self.engine_mix.by_choice() {
+            if runs > 0 {
+                put(
+                    &format!("pgas.runs.{}", choice.name()),
+                    runs.to_string(),
+                    "windows served by this backend",
+                );
+            }
+        }
         put("cache.l1d_misses", self.l1d_misses.to_string(), "sum over cores");
         put("cache.l2_misses", self.l2_misses.to_string(), "shared L2");
         put(
@@ -218,6 +229,18 @@ impl Machine {
     /// Access the memory for pre-run initialization / post-run checks.
     pub fn mem_mut(&mut self) -> &mut MemSystem {
         &mut self.mem
+    }
+
+    /// Install the remote address-mapping tier into every core's
+    /// lookahead selector.  The pool itself is shared (`Arc`) — one set
+    /// of worker processes serves all cores — and each selector prices
+    /// it with the tier's calibrated (or forced) legs, so whether any
+    /// simulated window actually takes the socket hop stays a
+    /// cost-model decision.  Call before [`run`](Self::run).
+    pub fn install_remote(&mut self, tier: &crate::engine::RemoteTier) {
+        for cpu in &mut self.cpus {
+            cpu.lookahead_mut().install_remote(tier);
+        }
     }
 
     /// Run `prog` SPMD on all cores to completion.

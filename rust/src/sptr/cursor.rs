@@ -23,6 +23,19 @@
 //! block start rewinds the local offset).  Both engines' `walk` paths
 //! use this cursor; `rust/tests/engine_conformance.rs` checks it
 //! differentially against `increment_general` over random strides.
+//!
+//! ## Stride range
+//!
+//! The four `dva` constants are computed exactly in 128-bit arithmetic
+//! at construction.  A stride is *representable* when each per-step
+//! byte displacement fits an `i64`; [`WalkCursor::try_new`] returns
+//! `None` for anything wider (strides around `u64::MAX` on multi-byte
+//! elements), and the engines' `walk` paths surface that as a loud
+//! `EngineError` instead of a silently wrapped pointer.  Within range,
+//! `advance` updates `va` with wrapping two's-complement adds — exactly
+//! the modulo-2⁶⁴ semantics of [`increment_general`] — so the old
+//! unchecked `u64 → i64` casts (which could overflow-panic in debug and
+//! wrap undetected in release) are gone.
 
 use super::{ArrayLayout, SharedPtr};
 
@@ -45,42 +58,64 @@ pub struct WalkCursor {
 impl WalkCursor {
     /// Factor the stride through `layout` once; `start` is step 0.
     ///
+    /// Returns `None` when the stride is out of range: some per-step
+    /// byte displacement does not fit an `i64` (only reachable with
+    /// strides on the order of `u64::MAX`; see the module docs).  The
+    /// engines' `walk` paths map that to an `EngineError` rather than
+    /// walking wrapped pointers.
+    ///
     /// `start` must be well-formed for `layout` (`phase < blocksize`,
     /// `thread < numthreads`, as every pointer built by
     /// [`SharedPtr::for_index`] or Algorithm 1 is) — the single
     /// add-and-carry per step relies on it.
-    pub fn new(start: SharedPtr, inc: u64, layout: &ArrayLayout) -> Self {
+    pub fn try_new(start: SharedPtr, inc: u64, layout: &ArrayLayout) -> Option<Self> {
         debug_assert!(
             start.phase < layout.blocksize
                 && start.thread < layout.numthreads,
             "malformed start pointer {start:?} for {layout:?}"
         );
-        let bs = layout.blocksize;
-        let nt = layout.numthreads as u64;
-        let dphase = inc % bs;
-        let inc_blocks = inc / bs;
+        let bs = layout.blocksize as u128;
+        let nt = layout.numthreads as u128;
+        let dphase = (inc as u128 % bs) as u64;
+        let inc_blocks = inc as u128 / bs;
         let mut dthread = [0u32; 2];
         let mut dva = [[0i64; 2]; 2];
-        for p in 0..2u64 {
+        for p in 0..2u128 {
+            // inc_blocks + p ≤ u64::MAX + 1: widened, cannot wrap.
             let thinc = inc_blocks + p;
             let q = thinc / nt;
             dthread[p as usize] = (thinc % nt) as u32;
-            for w in 0..2u64 {
+            for w in 0..2u128 {
+                // blockinc·bs ≤ inc/numthreads + 2·blocksize < 2^67:
+                // exact in u128, then signed-widened for the phase
+                // rewind term.
                 let blockinc = q + w;
-                let eaddrinc = dphase as i64 - (p * bs) as i64
-                    + (blockinc * bs) as i64;
-                dva[p as usize][w as usize] =
-                    eaddrinc * layout.elemsize as i64;
+                let eaddrinc = dphase as i128 - (p * bs) as i128
+                    + (blockinc * bs) as i128;
+                let bytes = eaddrinc.checked_mul(layout.elemsize as i128)?;
+                dva[p as usize][w as usize] = i64::try_from(bytes).ok()?;
             }
         }
-        Self {
+        Some(Self {
             cur: start,
-            blocksize: bs,
+            blocksize: layout.blocksize,
             numthreads: layout.numthreads,
             dphase,
             dthread,
             dva,
-        }
+        })
+    }
+
+    /// [`try_new`](Self::try_new) for in-range strides; panics (with
+    /// the stride and layout) when the stride is out of range.  Walk
+    /// paths that must not panic use `try_new` and report the error.
+    pub fn new(start: SharedPtr, inc: u64, layout: &ArrayLayout) -> Self {
+        Self::try_new(start, inc, layout).unwrap_or_else(|| {
+            panic!(
+                "walk stride {inc} out of range for {layout:?}: per-step \
+                 byte displacement exceeds i64"
+            )
+        })
     }
 
     /// The pointer at the current step.
@@ -90,22 +125,29 @@ impl WalkCursor {
     }
 
     /// Advance one stride: adds, compares and subtracts — no div/mod.
+    /// `va` moves modulo 2⁶⁴ (two's complement), exactly like
+    /// [`increment_general`](super::increment_general).
     #[inline]
     pub fn advance(&mut self) {
-        let mut phase = self.cur.phase + self.dphase;
-        let p = usize::from(phase >= self.blocksize);
+        // phase + dphase < 2·blocksize; the overflow flag covers
+        // blocksize > 2^63, where the sum can exceed u64 — the wrapped
+        // sum minus blocksize is still exact (true sum - bs < bs).
+        let (mut phase, of) = self.cur.phase.overflowing_add(self.dphase);
+        let p = usize::from(of || phase >= self.blocksize);
         if p == 1 {
-            phase -= self.blocksize;
+            phase = phase.wrapping_sub(self.blocksize);
         }
-        let mut thread = self.cur.thread + self.dthread[p];
-        let w = usize::from(thread >= self.numthreads);
+        // widen: thread + dthread can exceed u32::MAX when numthreads
+        // is in the billions.
+        let mut thread = self.cur.thread as u64 + self.dthread[p] as u64;
+        let w = usize::from(thread >= self.numthreads as u64);
         if w == 1 {
-            thread -= self.numthreads;
+            thread -= self.numthreads as u64;
         }
         self.cur = SharedPtr {
-            thread,
+            thread: thread as u32,
             phase,
-            va: (self.cur.va as i64 + self.dva[p][w]) as u64,
+            va: self.cur.va.wrapping_add(self.dva[p][w] as u64),
         };
     }
 
@@ -186,5 +228,47 @@ mod tests {
             );
             cur.advance();
         }
+    }
+
+    #[test]
+    fn extreme_in_range_strides_match_the_reference() {
+        // Near the top of the representable range the old u64→i64
+        // casts could wrap during construction; the widened math must
+        // agree with increment_general wherever the reference's own
+        // arithmetic is exact.
+        // Strides chosen so 8 steps stay below 2^63 total displacement
+        // (the reference's own i64 arithmetic is exact there).
+        for (layout, inc) in [
+            (ArrayLayout::new(1, 1, 2), 1u64 << 59),
+            (ArrayLayout::new(1, 2, 3), (1u64 << 58) + 12345),
+            (ArrayLayout::new(7, 1, 5), (1u64 << 59) + 7),
+        ] {
+            let start = SharedPtr::for_index(&layout, 0, 3);
+            let mut cur = WalkCursor::try_new(start, inc, &layout)
+                .expect("stride is representable");
+            let mut want = start;
+            for step in 0..8 {
+                assert_eq!(
+                    cur.current(),
+                    want,
+                    "layout={layout:?} inc={inc} step={step}"
+                );
+                cur.advance();
+                want = increment_general(&want, inc, &layout);
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_strides_are_refused_not_wrapped() {
+        // blocksize 1, elemsize 8: the per-step byte displacement is
+        // ≈ inc·8 ≈ 2^67 — unrepresentable in i64.
+        let layout = ArrayLayout::new(1, 8, 4);
+        let start = SharedPtr::for_index(&layout, 0, 0);
+        assert!(WalkCursor::try_new(start, u64::MAX - 5, &layout).is_none());
+        // elemsize 1 keeps the same stride in range (≈ 2^64/4 bytes
+        // per step after the thread ring divides it down).
+        let thin = ArrayLayout::new(1, 1, 4);
+        assert!(WalkCursor::try_new(start, u64::MAX - 5, &thin).is_some());
     }
 }

@@ -17,11 +17,13 @@ mod algorithm;
 mod base_table;
 mod cursor;
 mod pack;
+mod wire;
 
 pub use algorithm::{increment_general, increment_pow2, SOFT_INC_OP_COUNT};
 pub use base_table::BaseTable;
 pub use cursor::WalkCursor;
 pub use pack::{pack, unpack, PackedPtr, PHASE_BITS, THREAD_BITS, VA_BITS};
+pub use wire::{WireError, WireReader, WireWriter};
 
 use crate::util::{is_pow2, log2_exact};
 

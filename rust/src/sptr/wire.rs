@@ -1,0 +1,345 @@
+//! Little-endian binary serialization of the shared-pointer types —
+//! the wire vocabulary of the remote AddressEngine protocol
+//! (`engine::remote`): everything an [`EngineCtx`](crate::engine::EngineCtx)
+//! snapshot carries (layout, base table, executing thread, topology)
+//! plus pointers and locality codes.
+//!
+//! The encoding is deliberately boring: fixed-width little-endian
+//! scalars, `u32` element counts, no padding, no self-description.
+//! Versioning lives one layer up in the frame header
+//! (`engine::remote::PROTOCOL_VERSION`); these helpers only promise
+//! that `get_*` is the exact inverse of `put_*` within one version.
+//!
+//! Reads are *checked*: a truncated or oversized buffer yields a
+//! [`WireError`], never a panic or a silently short value — the remote
+//! client maps these to loud `EngineError::Backend` failures.
+
+use super::{ArrayLayout, BaseTable, Locality, SharedPtr, Topology};
+
+/// Why a wire buffer failed to decode.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum WireError {
+    /// The buffer ended before the value did.
+    Truncated { need: usize, have: usize },
+    /// [`WireReader::finish`] found bytes past the last value.
+    Trailing(usize),
+    /// A decoded value is outside its type's domain (a locality code
+    /// above 3, an element count larger than the frame, ...).
+    Invalid(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { need, have } => {
+                write!(f, "wire buffer truncated: need {need} bytes, have {have}")
+            }
+            WireError::Trailing(n) => {
+                write!(f, "wire buffer has {n} trailing bytes")
+            }
+            WireError::Invalid(what) => write!(f, "invalid wire value: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+/// Append-only little-endian encoder.
+#[derive(Default)]
+pub struct WireWriter {
+    buf: Vec<u8>,
+}
+
+impl WireWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The encoded bytes so far.
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Consume the writer, yielding the encoded buffer.
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// Raw bytes, appended verbatim (length framing is the caller's
+    /// job — pair with a `put_u32` count and [`WireReader::get_bytes`]).
+    pub fn put_bytes(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// `thread u32, phase u64, va u64` — 20 bytes.
+    pub fn put_ptr(&mut self, p: &SharedPtr) {
+        self.put_u32(p.thread);
+        self.put_u64(p.phase);
+        self.put_u64(p.va);
+    }
+
+    /// `blocksize u64, elemsize u64, numthreads u32` — 20 bytes.
+    pub fn put_layout(&mut self, l: &ArrayLayout) {
+        self.put_u64(l.blocksize);
+        self.put_u64(l.elemsize);
+        self.put_u32(l.numthreads);
+    }
+
+    /// `log2_threads_per_mc u32, log2_threads_per_node u32`.
+    pub fn put_topology(&mut self, t: &Topology) {
+        self.put_u32(t.log2_threads_per_mc);
+        self.put_u32(t.log2_threads_per_node);
+    }
+
+    /// `numthreads u32` then that many `u64` bases.
+    pub fn put_table(&mut self, t: &BaseTable) {
+        let bases = t.bases();
+        self.put_u32(bases.len() as u32);
+        for &b in bases {
+            self.put_u64(b);
+        }
+    }
+
+    /// The condition code as one byte.
+    pub fn put_locality(&mut self, l: Locality) {
+        self.put_u8(l as u8);
+    }
+}
+
+/// Checked little-endian decoder over a borrowed buffer.
+pub struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated { need: n, have: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// `n` raw bytes (checked slice, no copy).
+    pub fn get_bytes(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        self.take(n)
+    }
+
+    /// A `u32` element count, validated against the bytes actually
+    /// left in the buffer (`elem_min_bytes` per element) **before**
+    /// any allocation sized by it — a corrupt or hostile count must
+    /// yield [`WireError::Truncated`], never a huge `reserve` that
+    /// aborts the process.
+    pub fn get_count(&mut self, elem_min_bytes: usize) -> Result<usize, WireError> {
+        let n = self.get_u32()? as usize;
+        let need = n.saturating_mul(elem_min_bytes.max(1));
+        if self.remaining() < need {
+            return Err(WireError::Truncated { need, have: self.remaining() });
+        }
+        Ok(n)
+    }
+
+    pub fn get_ptr(&mut self) -> Result<SharedPtr, WireError> {
+        Ok(SharedPtr {
+            thread: self.get_u32()?,
+            phase: self.get_u64()?,
+            va: self.get_u64()?,
+        })
+    }
+
+    pub fn get_layout(&mut self) -> Result<ArrayLayout, WireError> {
+        let blocksize = self.get_u64()?;
+        let elemsize = self.get_u64()?;
+        let numthreads = self.get_u32()?;
+        if blocksize == 0 || elemsize == 0 || numthreads == 0 {
+            return Err(WireError::Invalid("zero layout dimension"));
+        }
+        Ok(ArrayLayout { blocksize, elemsize, numthreads })
+    }
+
+    pub fn get_topology(&mut self) -> Result<Topology, WireError> {
+        Ok(Topology {
+            log2_threads_per_mc: self.get_u32()?,
+            log2_threads_per_node: self.get_u32()?,
+        })
+    }
+
+    pub fn get_table(&mut self) -> Result<BaseTable, WireError> {
+        // count checked against the buffer before the allocation
+        let n = self.get_count(8)?;
+        if n == 0 {
+            return Err(WireError::Invalid("empty base table"));
+        }
+        let mut bases = Vec::with_capacity(n);
+        for _ in 0..n {
+            bases.push(self.get_u64()?);
+        }
+        Ok(BaseTable::new(bases))
+    }
+
+    pub fn get_locality(&mut self) -> Result<Locality, WireError> {
+        Locality::from_code(self.get_u8()?)
+            .ok_or(WireError::Invalid("locality code above 3"))
+    }
+
+    /// Assert the whole buffer was consumed (frame hygiene: trailing
+    /// bytes mean the two sides disagree about the message shape).
+    pub fn finish(self) -> Result<(), WireError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(WireError::Trailing(self.remaining()))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_and_types_round_trip() {
+        let layout = ArrayLayout::new(3, 56016, 5);
+        let table = BaseTable::regular(5, 1 << 32, 1 << 32);
+        let topo = Topology { log2_threads_per_mc: 2, log2_threads_per_node: 4 };
+        let ptr = SharedPtr { thread: 4, phase: 2, va: 0xDEAD_BEEF };
+        let mut w = WireWriter::new();
+        w.put_u8(0xAB);
+        w.put_u16(0xCDEF);
+        w.put_u32(0x0102_0304);
+        w.put_u64(u64::MAX - 7);
+        w.put_layout(&layout);
+        w.put_table(&table);
+        w.put_topology(&topo);
+        w.put_ptr(&ptr);
+        w.put_locality(Locality::SameNode);
+        let buf = w.into_bytes();
+        let mut r = WireReader::new(&buf);
+        assert_eq!(r.get_u8().unwrap(), 0xAB);
+        assert_eq!(r.get_u16().unwrap(), 0xCDEF);
+        assert_eq!(r.get_u32().unwrap(), 0x0102_0304);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX - 7);
+        assert_eq!(r.get_layout().unwrap(), layout);
+        assert_eq!(r.get_table().unwrap(), table);
+        let t2 = r.get_topology().unwrap();
+        assert_eq!(t2.log2_threads_per_mc, 2);
+        assert_eq!(t2.log2_threads_per_node, 4);
+        assert_eq!(r.get_ptr().unwrap(), ptr);
+        assert_eq!(r.get_locality().unwrap(), Locality::SameNode);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn short_reads_error_instead_of_panicking() {
+        let mut w = WireWriter::new();
+        w.put_u32(7);
+        let buf = w.into_bytes();
+        let mut r = WireReader::new(&buf);
+        assert_eq!(
+            r.get_u64(),
+            Err(WireError::Truncated { need: 8, have: 4 })
+        );
+        // a corrupt table count larger than the buffer is refused
+        let mut w = WireWriter::new();
+        w.put_u32(1 << 30); // claims 2^30 bases
+        w.put_u64(1);
+        let buf = w.into_bytes();
+        let mut r = WireReader::new(&buf);
+        assert!(matches!(
+            r.get_table(),
+            Err(WireError::Truncated { .. })
+        ));
+    }
+
+    #[test]
+    fn counts_are_validated_before_allocation() {
+        let mut w = WireWriter::new();
+        w.put_u32(u32::MAX); // hostile count, no payload behind it
+        let buf = w.into_bytes();
+        assert!(matches!(
+            WireReader::new(&buf).get_count(20),
+            Err(WireError::Truncated { .. })
+        ));
+        // a legitimate count passes and the payload reads back
+        let mut w = WireWriter::new();
+        w.put_u32(3);
+        w.put_bytes(b"abc");
+        let buf = w.into_bytes();
+        let mut r = WireReader::new(&buf);
+        assert_eq!(r.get_count(1).unwrap(), 3);
+        assert_eq!(r.get_bytes(3).unwrap(), b"abc");
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn trailing_bytes_are_flagged() {
+        let mut w = WireWriter::new();
+        w.put_u8(1);
+        w.put_u8(2);
+        let buf = w.into_bytes();
+        let mut r = WireReader::new(&buf);
+        r.get_u8().unwrap();
+        assert_eq!(r.finish(), Err(WireError::Trailing(1)));
+    }
+
+    #[test]
+    fn bad_locality_and_zero_layouts_are_invalid() {
+        let buf = [9u8];
+        assert!(matches!(
+            WireReader::new(&buf).get_locality(),
+            Err(WireError::Invalid(_))
+        ));
+        let mut w = WireWriter::new();
+        w.put_u64(0); // blocksize 0
+        w.put_u64(8);
+        w.put_u32(4);
+        let buf = w.into_bytes();
+        assert!(matches!(
+            WireReader::new(&buf).get_layout(),
+            Err(WireError::Invalid(_))
+        ));
+    }
+}
