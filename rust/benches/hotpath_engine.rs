@@ -14,7 +14,11 @@
 //! * `remote` — the worker-process pool over Unix-domain sockets: the
 //!   measured `remote_dispatch_ns`/`remote_ns_per_ptr` cost-model legs
 //!   plus throughput head-to-head with the thread tier on the same
-//!   batch (the honest record of what the socket hop costs).
+//!   batch (the honest record of what the socket hop costs);
+//! * `daemon` — epoch sessions vs snapshot-per-request against one
+//!   in-process daemon on a wide (4096-thread) base table: the
+//!   per-request dispatch overhead `InstallCtx{epoch}` amortizes away,
+//!   gated so steady state never costs more than re-shipping the ctx.
 //!
 //! `--quick` (the CI smoke leg) shrinks batch sizes and iteration
 //! counts.  The xla-batch backend joins automatically when built with
@@ -243,6 +247,75 @@ fn main() {
          ({remote_vs_sharded:.2}x, {rworkers} workers)"
     );
 
+    // ---- daemon tier: epoch sessions vs snapshot-per-request against
+    // one in-process daemon.  A wide table (many threads) makes the
+    // per-request ctx snapshot expensive, so this measures exactly what
+    // `InstallCtx{epoch}` amortizes: steady-state frames carry only
+    // `epoch + batch`, the v1-style client re-ships the table every
+    // time.  Small batches × many requests = per-request dispatch cost,
+    // not per-pointer throughput (the `remote` section above owns that).
+    use pgas_hw::daemon::{scratch_socket, Daemon, DaemonCfg};
+    let dthreads: u32 = if quick { 512 } else { 4096 };
+    let dlayout = ArrayLayout::new(8, 8, dthreads);
+    let dtable = BaseTable::regular(dthreads, 1 << 32, 1 << 32);
+    let dctx = EngineCtx::new(dlayout, &dtable, 0).unwrap();
+    let reqs: usize = if quick { 64 } else { 256 };
+    let req_n: usize = 64;
+    let req_batch = random_batch(&dlayout, req_n, 0xDAE1);
+    let cfg = DaemonCfg::new(scratch_socket("bench"));
+    let dsock = cfg.socket.clone();
+    let daemon = Daemon::spawn(cfg).expect("daemon spawns");
+    let (steady_ns_per_req, snapshot_ns_per_req, steady_hits, steady_installs);
+    {
+        let steady = RemoteEngine::connect(&dsock, 1).expect("connect steady");
+        let r = bench(
+            &format!("daemon steady (epoch sessions) {reqs} reqs x{req_n}"),
+            warmup,
+            iters,
+            || {
+                for _ in 0..reqs {
+                    steady.translate(&dctx, &req_batch, &mut out).unwrap();
+                    black_box(&out);
+                }
+            },
+        );
+        steady_ns_per_req = r.mean_secs() * 1e9 / reqs as f64;
+        steady_hits = steady.epoch_hits();
+        steady_installs = steady.installs();
+        let snap = RemoteEngine::connect(&dsock, 1)
+            .expect("connect snapshot")
+            .with_reinstall_every_request(true);
+        let r = bench(
+            &format!("daemon snapshot-per-request {reqs} reqs x{req_n}"),
+            warmup,
+            iters,
+            || {
+                for _ in 0..reqs {
+                    snap.translate(&dctx, &req_batch, &mut out).unwrap();
+                    black_box(&out);
+                }
+            },
+        );
+        snapshot_ns_per_req = r.mean_secs() * 1e9 / reqs as f64;
+    }
+    let dstats = daemon.shutdown().expect("daemon shutdown");
+    let epoch_speedup = snapshot_ns_per_req / steady_ns_per_req;
+    println!(
+        "  -> daemon: {steady_ns_per_req:.0} ns/req steady (installs \
+         {steady_installs}, epoch hits {steady_hits}) vs \
+         {snapshot_ns_per_req:.0} ns/req snapshot-per-request \
+         ({epoch_speedup:.2}x; {dthreads}-thread table, {} sessions)",
+        dstats.sessions
+    );
+    // The acceptance gate: epoch sessions must not cost more per
+    // request than re-shipping the snapshot (10% noise headroom —
+    // steady state does strictly less work per frame).
+    assert!(
+        steady_ns_per_req <= snapshot_ns_per_req * 1.10,
+        "epoch sessions slower than snapshot-per-request: \
+         {steady_ns_per_req:.0} vs {snapshot_ns_per_req:.0} ns/req"
+    );
+
     // Merge (not overwrite): BENCH_engine.json is shared with the
     // fig11-14 model benches, so each target may run in any order and
     // re-running one replaces only its own sections.
@@ -295,6 +368,21 @@ fn main() {
              \"remote_mptr_s\": {remote_mptr_s:.2}, \
              \"sharded_mptr_s\": {sharded_mptr_s:.2}, \
              \"remote_vs_sharded\": {remote_vs_sharded:.2}}}"
+        ),
+    );
+    merge_bench_json(
+        OUT,
+        "daemon",
+        &format!(
+            "{{\"threads\": {dthreads}, \"reqs\": {reqs}, \
+             \"batch\": {req_n}, \
+             \"steady_ns_per_req\": {steady_ns_per_req:.0}, \
+             \"snapshot_ns_per_req\": {snapshot_ns_per_req:.0}, \
+             \"epoch_speedup\": {epoch_speedup:.2}, \
+             \"installs\": {steady_installs}, \
+             \"epoch_hits\": {steady_hits}, \
+             \"sessions\": {}}}",
+            dstats.sessions
         ),
     );
     println!("merged host sections into BENCH_engine.json");

@@ -454,6 +454,63 @@ pub fn headline_summary(outs: &[RunOutcome]) -> Table {
     t
 }
 
+/// Per-tenant summary of a daemon run (`pgas-hw daemon` prints this on
+/// exit).  The title carries the shared-infrastructure aggregates —
+/// queue admission/shedding and Leon3 lease traffic — that no single
+/// tenant owns; rows are one per session plus an `all` total.
+pub fn daemon_table(stats: &crate::daemon::DaemonStats) -> Table {
+    let q = &stats.queue;
+    let l = &stats.lease;
+    let title = format!(
+        "Daemon sessions (queue: {} admitted, {} shed on quota, {} shed on \
+         capacity, max depth {}; leon3 lease: {} acquisitions, {} priority, \
+         {} contended)",
+        q.admitted,
+        q.shed_quota,
+        q.shed_capacity,
+        q.max_depth,
+        l.acquisitions,
+        l.priority_acquisitions,
+        l.contended,
+    );
+    let mut t = Table::new(
+        &title,
+        &[
+            "tenant", "prio", "served", "installs", "epoch hits", "stale",
+            "shed", "ptrs", "runs by backend",
+        ],
+    );
+    let mut all_mix = crate::cpu::EngineMix::default();
+    let mut all_ptrs = 0u64;
+    for tn in &stats.tenants {
+        all_mix.merge(&tn.mix);
+        all_ptrs += tn.ptrs;
+        t.row(&[
+            tn.id.to_string(),
+            if tn.priority { "yes" } else { "-" }.into(),
+            tn.served.to_string(),
+            tn.installs.to_string(),
+            tn.epoch_hits.to_string(),
+            tn.stale_epochs.to_string(),
+            tn.shed.to_string(),
+            tn.ptrs.to_string(),
+            tn.mix.runs_label(),
+        ]);
+    }
+    t.row(&[
+        "all".into(),
+        "-".into(),
+        stats.served.to_string(),
+        stats.installs.to_string(),
+        stats.epoch_hits.to_string(),
+        stats.stale_epochs.to_string(),
+        stats.shed.to_string(),
+        all_ptrs.to_string(),
+        all_mix.runs_label(),
+    ]);
+    t
+}
+
 /// Shared driver for the per-figure `cargo bench` targets: regenerate
 /// the figure's table at bench scale, then wall-time the representative
 /// point with the micro-bench harness.

@@ -1,0 +1,199 @@
+//! Exclusive lease over a scarce accelerator (the one Leon3 coprocessor
+//! unit, or the XLA batch device) shared by every daemon session.
+//!
+//! The shape follows the GPU-lock pattern the ROADMAP names as the
+//! exemplar (bellman's `GPULock`/`PriorityLock`): one exclusive lock,
+//! plus a *priority path* that registers itself before waiting so the
+//! normal path's [`can_lock`](AccelLease::can_lock) poll goes false the
+//! moment a high-priority tenant is queued — normal tenants never
+//! acquire past a waiting priority tenant, and they never *block* on
+//! the device at all ([`try_acquire`](AccelLease::try_acquire) is their
+//! only entry point; on contention they fall back to the host engines).
+//!
+//! Ordering guarantee (pinned by the lease-contention test): when the
+//! holder releases with both a priority waiter and normal pollers
+//! queued, the priority waiter acquires next, always.
+
+use std::sync::{Condvar, Mutex};
+
+/// Telemetry snapshot of one lease.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct LeaseStats {
+    /// Total successful acquisitions (both paths).
+    pub acquisitions: u64,
+    /// Acquisitions through the priority path.
+    pub priority_acquisitions: u64,
+    /// Normal-path `try_acquire` calls refused because the device was
+    /// held or a priority tenant was waiting.
+    pub contended: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    held: bool,
+    priority_waiters: u64,
+    stats: LeaseStats,
+}
+
+/// The lease itself.  `acquire`/`try_acquire` return a guard that
+/// releases on drop; the device object lives outside (the daemon keeps
+/// its `Leon3Engine` next to the lease and only touches it while
+/// holding a guard).
+#[derive(Default)]
+pub struct AccelLease {
+    inner: Mutex<Inner>,
+    cv: Condvar,
+}
+
+/// Holding this is holding the accelerator; dropping it releases and
+/// wakes every waiter (priority waiters win the race by construction —
+/// normal tenants poll, they do not wait).
+pub struct LeaseGuard<'a> {
+    lease: &'a AccelLease,
+}
+
+impl Drop for LeaseGuard<'_> {
+    fn drop(&mut self) {
+        let mut g = self.lease.inner.lock().expect("lease mutex");
+        g.held = false;
+        drop(g);
+        self.lease.cv.notify_all();
+    }
+}
+
+impl AccelLease {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The normal path's poll: free *and* no priority tenant queued.
+    pub fn can_lock(&self) -> bool {
+        let g = self.inner.lock().expect("lease mutex");
+        !g.held && g.priority_waiters == 0
+    }
+
+    /// Normal-tenant acquisition: succeeds only when
+    /// [`can_lock`](Self::can_lock) (checked and taken under one lock —
+    /// no TOCTOU window).  `None`
+    /// means "use the host engines this time"; the caller must not
+    /// spin on it while holding scheduler resources.
+    pub fn try_acquire(&self) -> Option<LeaseGuard<'_>> {
+        let mut g = self.inner.lock().expect("lease mutex");
+        if g.held || g.priority_waiters > 0 {
+            g.stats.contended += 1;
+            return None;
+        }
+        g.held = true;
+        g.stats.acquisitions += 1;
+        Some(LeaseGuard { lease: self })
+    }
+
+    /// Priority-tenant acquisition: registers as a waiter first (which
+    /// flips `can_lock` false for everyone else), then blocks until the
+    /// holder releases.  Jumping the queue is the point — a priority
+    /// tenant waits only for the *current* holder, never behind normal
+    /// tenants.
+    pub fn acquire_priority(&self) -> LeaseGuard<'_> {
+        let mut g = self.inner.lock().expect("lease mutex");
+        g.priority_waiters += 1;
+        while g.held {
+            g = self.cv.wait(g).expect("lease mutex");
+        }
+        g.priority_waiters -= 1;
+        g.held = true;
+        g.stats.acquisitions += 1;
+        g.stats.priority_acquisitions += 1;
+        drop(g);
+        // other priority waiters may still be runnable (they re-check
+        // `held` and go back to sleep; the wake keeps them live)
+        self.cv.notify_all();
+        LeaseGuard { lease: self }
+    }
+
+    pub fn stats(&self) -> LeaseStats {
+        self.inner.lock().expect("lease mutex").stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::{Arc, Mutex};
+    use std::time::Duration;
+
+    #[test]
+    fn exclusive_and_reentrant_after_release() {
+        let lease = AccelLease::new();
+        let g = lease.try_acquire().expect("free lease");
+        assert!(!lease.can_lock());
+        assert!(lease.try_acquire().is_none(), "must be exclusive");
+        drop(g);
+        assert!(lease.can_lock());
+        assert!(lease.try_acquire().is_some());
+        let s = lease.stats();
+        assert_eq!(s.acquisitions, 2);
+        assert_eq!(s.contended, 1);
+        assert_eq!(s.priority_acquisitions, 0);
+    }
+
+    /// The ordering the daemon relies on: with the device held, a
+    /// priority tenant queues and a normal tenant polls.  On release
+    /// the priority tenant acquires next — the normal poller is refused
+    /// the whole time a priority waiter exists, even while the device
+    /// is technically free between release and the waiter waking.
+    #[test]
+    fn priority_waiter_preempts_normal_pollers() {
+        let lease = Arc::new(AccelLease::new());
+        let order = Arc::new(Mutex::new(Vec::<&'static str>::new()));
+        let holder = lease.try_acquire().expect("free lease");
+
+        let waiting = Arc::new(AtomicBool::new(false));
+        let prio = {
+            let (lease, order, waiting) =
+                (Arc::clone(&lease), Arc::clone(&order), Arc::clone(&waiting));
+            std::thread::spawn(move || {
+                waiting.store(true, Ordering::SeqCst);
+                let _g = lease.acquire_priority();
+                order.lock().unwrap().push("priority");
+                // hold long enough that a racing normal poller would be
+                // caught red-handed if it could slip in first
+                std::thread::sleep(Duration::from_millis(20));
+            })
+        };
+        while !waiting.load(Ordering::SeqCst) {
+            std::thread::yield_now();
+        }
+        // give the priority thread time to park inside acquire_priority
+        std::thread::sleep(Duration::from_millis(20));
+
+        // the normal path is refused while a priority tenant waits
+        assert!(!lease.can_lock());
+        assert!(lease.try_acquire().is_none());
+
+        drop(holder); // release: the priority waiter must win
+        let normal = {
+            let (lease, order) = (Arc::clone(&lease), Arc::clone(&order));
+            std::thread::spawn(move || {
+                // poll like a normal tenant until the device frees up
+                loop {
+                    if let Some(_g) = lease.try_acquire() {
+                        order.lock().unwrap().push("normal");
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            })
+        };
+        prio.join().unwrap();
+        normal.join().unwrap();
+        assert_eq!(
+            *order.lock().unwrap(),
+            vec!["priority", "normal"],
+            "priority tenant must acquire before any normal poller"
+        );
+        let s = lease.stats();
+        assert_eq!(s.priority_acquisitions, 1);
+        assert!(s.contended >= 1, "the refused polls must be counted");
+    }
+}

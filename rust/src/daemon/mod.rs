@@ -1,0 +1,340 @@
+//! The daemon tier: address mapping as **shared, multi-tenant
+//! infrastructure** — `pgas-hw daemon --socket PATH`.
+//!
+//! PR 5's `serve-engine` worker made the [`AddressEngine`] a
+//! process-level service, but one worker serves exactly one session and
+//! every request re-ships the full `EngineCtx`.  This module is the
+//! paper's thesis taken to its conclusion (and the DASH stance from
+//! PAPERS.md: the *runtime* adapts and arbitrates, not the user): one
+//! daemon process serves **many concurrent client sessions** over one
+//! Unix-domain socket, with
+//!
+//! * **epoch sessions** ([`session`]) — each session installs its ctx
+//!   once per epoch (`InstallCtx{epoch}`) and steady-state requests
+//!   carry only `epoch + PtrBatch`; the decoded ctx and the engine
+//!   choice are cached per epoch, never rebuilt per request;
+//! * **admission control** ([`sched`]) — a bounded, fair round-robin
+//!   queue with per-tenant quotas that sheds overload *loudly*
+//!   (shed-status replies naming the reason, counted per tenant);
+//! * **accelerator leasing** ([`lease`]) — the one Leon3 coprocessor
+//!   unit behind an exclusive lease with a priority path, so a
+//!   high-priority tenant jumps the device queue while normal tenants
+//!   fall back to the host engines instead of blocking.
+//!
+//! The client side is [`RemoteEngine::connect`](crate::engine::RemoteEngine::connect)
+//! — the same scatter/gather engine that supervises spawned workers,
+//! pointed at a daemon socket instead.
+//!
+//! [`AddressEngine`]: crate::engine::AddressEngine
+
+pub mod lease;
+pub mod sched;
+pub mod session;
+
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::engine::remote::{
+    read_frame, reply_status_body, write_frame, Op, STATUS_SHED,
+};
+use lease::{AccelLease, LeaseStats};
+use sched::{FairQueue, QueueStats, ShedReason};
+use session::{ExecBackend, SessionHandle, SessionRegistry, TenantStats};
+
+/// Daemon configuration.
+#[derive(Clone, Debug)]
+pub struct DaemonCfg {
+    pub socket: PathBuf,
+    /// Executor threads draining the request queue.  `0` is a test
+    /// knob: nothing executes, so the shed paths are deterministic.
+    pub executors: usize,
+    /// Global queue capacity (requests).
+    pub queue_cap: usize,
+    /// Per-tenant quota of queued requests.
+    pub quota: usize,
+    /// Minimum batch size that contends for the Leon3 unit.
+    pub accel_threshold: usize,
+    /// Exit after this many sessions have been accepted and served to
+    /// completion (`None` = serve forever).
+    pub max_sessions: Option<u64>,
+}
+
+impl DaemonCfg {
+    pub fn new(socket: impl Into<PathBuf>) -> Self {
+        Self {
+            socket: socket.into(),
+            executors: 2,
+            queue_cap: 256,
+            quota: 64,
+            accel_threshold: 8192,
+            max_sessions: None,
+        }
+    }
+}
+
+/// End-of-run (or live) telemetry snapshot.
+#[derive(Clone, Debug, Default)]
+pub struct DaemonStats {
+    pub sessions: u64,
+    /// Aggregates over all tenants.
+    pub served: u64,
+    pub installs: u64,
+    pub epoch_hits: u64,
+    pub stale_epochs: u64,
+    pub shed: u64,
+    pub queue: QueueStats,
+    pub lease: LeaseStats,
+    pub tenants: Vec<TenantStats>,
+}
+
+impl DaemonStats {
+    fn collect(shared: &Shared) -> Self {
+        let tenants = shared.registry.snapshot();
+        let mut s = DaemonStats {
+            sessions: tenants.len() as u64,
+            queue: shared.queue.stats(),
+            lease: shared.exec.lease_stats().unwrap_or_default(),
+            tenants,
+            ..DaemonStats::default()
+        };
+        for t in &s.tenants {
+            s.served += t.served;
+            s.installs += t.installs;
+            s.epoch_hits += t.epoch_hits;
+            s.stale_epochs += t.stale_epochs;
+            s.shed += t.shed;
+        }
+        s
+    }
+}
+
+struct Job {
+    sess: Arc<SessionHandle>,
+    frame: Vec<u8>,
+}
+
+struct Shared {
+    registry: SessionRegistry,
+    queue: FairQueue<Job>,
+    exec: ExecBackend,
+    accepting: AtomicBool,
+    quota: usize,
+    queue_cap: usize,
+}
+
+/// A running daemon: accept thread + reader thread per session +
+/// executor pool, all sharing one registry/queue/lease.
+pub struct Daemon {
+    shared: Arc<Shared>,
+    socket: PathBuf,
+    accept: Option<JoinHandle<Result<(), String>>>,
+    executors: Vec<JoinHandle<()>>,
+    readers: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Daemon {
+    /// Bind the socket and start serving in background threads.
+    pub fn spawn(cfg: DaemonCfg) -> Result<Self, String> {
+        let _ = std::fs::remove_file(&cfg.socket);
+        let listener = UnixListener::bind(&cfg.socket).map_err(|e| {
+            format!("daemon: bind {}: {e}", cfg.socket.display())
+        })?;
+        let lease = Arc::new(AccelLease::new());
+        let shared = Arc::new(Shared {
+            registry: SessionRegistry::new(),
+            queue: FairQueue::new(cfg.queue_cap, cfg.quota),
+            exec: ExecBackend::with_leon3(lease, cfg.accel_threshold),
+            accepting: AtomicBool::new(true),
+            quota: cfg.quota,
+            queue_cap: cfg.queue_cap,
+        });
+        let executors = (0..cfg.executors)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || executor_loop(&shared))
+            })
+            .collect();
+        let readers = Arc::new(Mutex::new(Vec::new()));
+        let accept = {
+            let (shared, readers) = (Arc::clone(&shared), Arc::clone(&readers));
+            let max = cfg.max_sessions;
+            std::thread::spawn(move || accept_loop(&shared, listener, max, &readers))
+        };
+        Ok(Self {
+            shared,
+            socket: cfg.socket,
+            accept: Some(accept),
+            executors,
+            readers,
+        })
+    }
+
+    /// Live telemetry (sessions may still be running).
+    pub fn stats(&self) -> DaemonStats {
+        DaemonStats::collect(&self.shared)
+    }
+
+    /// Block until the accept loop ends (`max_sessions` reached) and
+    /// every accepted session has disconnected, then drain the queue
+    /// and return final stats.  With `max_sessions: None` this blocks
+    /// until the process is killed.
+    pub fn wait(mut self) -> Result<DaemonStats, String> {
+        let accept = self.accept.take().expect("wait/shutdown called once");
+        accept.join().map_err(|_| "daemon: accept thread panicked")??;
+        self.teardown()
+    }
+
+    /// Stop accepting, then as [`wait`](Self::wait).  Callers must
+    /// close their client sessions first — reader threads are joined,
+    /// and a reader lives as long as its client's connection.
+    pub fn shutdown(mut self) -> Result<DaemonStats, String> {
+        self.shared.accepting.store(false, Ordering::SeqCst);
+        // wake the blocking accept() with a throwaway connection
+        let _ = UnixStream::connect(&self.socket);
+        let accept = self.accept.take().expect("wait/shutdown called once");
+        accept.join().map_err(|_| "daemon: accept thread panicked")??;
+        self.teardown()
+    }
+
+    fn teardown(self) -> Result<DaemonStats, String> {
+        // readers end when their clients disconnect
+        loop {
+            let handles: Vec<_> =
+                std::mem::take(&mut *self.readers.lock().expect("readers"));
+            if handles.is_empty() {
+                break;
+            }
+            for h in handles {
+                h.join().map_err(|_| "daemon: reader thread panicked")?;
+            }
+        }
+        // no new work can arrive: drain the backlog and stop executors
+        self.shared.queue.close();
+        for h in self.executors {
+            h.join().map_err(|_| "daemon: executor thread panicked")?;
+        }
+        let stats = DaemonStats::collect(&self.shared);
+        let _ = std::fs::remove_file(&self.socket);
+        Ok(stats)
+    }
+}
+
+/// The blocking CLI entry point: spawn, serve, return final stats.
+pub fn serve(cfg: DaemonCfg) -> Result<DaemonStats, String> {
+    Daemon::spawn(cfg)?.wait()
+}
+
+fn accept_loop(
+    shared: &Arc<Shared>,
+    listener: UnixListener,
+    max_sessions: Option<u64>,
+    readers: &Mutex<Vec<JoinHandle<()>>>,
+) -> Result<(), String> {
+    let mut accepted = 0u64;
+    while max_sessions.is_none_or(|m| accepted < m) {
+        let (stream, _) = match listener.accept() {
+            Ok(s) => s,
+            Err(e) => {
+                if !shared.accepting.load(Ordering::SeqCst) {
+                    break;
+                }
+                return Err(format!("daemon: accept: {e}"));
+            }
+        };
+        if !shared.accepting.load(Ordering::SeqCst) {
+            break; // the shutdown wake-up connection
+        }
+        let writer = stream
+            .try_clone()
+            .map_err(|e| format!("daemon: clone stream: {e}"))?;
+        let sess = shared.registry.register(writer);
+        let shared = Arc::clone(shared);
+        let h = std::thread::spawn(move || reader_loop(&shared, &sess, stream));
+        readers.lock().expect("readers").push(h);
+        accepted += 1;
+    }
+    Ok(())
+}
+
+/// Per-session reader: decode frames off the socket and admit them to
+/// the queue.  Shed replies are written here, immediately — admission
+/// control must answer even (especially) when the executors are buried.
+fn reader_loop(shared: &Shared, sess: &Arc<SessionHandle>, mut stream: UnixStream) {
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(Some(f)) => f,
+            // clean EOF or a read error: either way the session is over
+            _ => return,
+        };
+        // byte 6 (magic u32 + version u16) is the op: a Shutdown frame
+        // is the last thing this session will send
+        let ends_session = frame.get(6) == Some(&(Op::Shutdown as u8));
+        let priority = sess
+            .state
+            .lock()
+            .map(|st| st.priority)
+            .unwrap_or(false);
+        let job = Job { sess: Arc::clone(sess), frame };
+        match shared.queue.push(sess.id, priority, job) {
+            Ok(()) => {
+                if ends_session {
+                    return;
+                }
+            }
+            Err(reason) => {
+                if let Ok(mut st) = sess.state.lock() {
+                    st.stats.shed += 1;
+                }
+                let limit = match reason {
+                    ShedReason::Quota => shared.quota,
+                    ShedReason::Capacity => shared.queue_cap,
+                };
+                let body = reply_status_body(
+                    STATUS_SHED,
+                    &reason.describe(sess.id, limit),
+                );
+                let mut w = sess.writer.lock().expect("session writer");
+                if write_frame(&mut w, &body).is_err() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Executor: drain the fair queue.  The scheduler guarantees one
+/// in-service request per session, so taking the session's state lock
+/// here never contends with another executor on the same tenant and
+/// replies leave in request order.
+fn executor_loop(shared: &Shared) {
+    while let Some((tenant, priority, job)) = shared.queue.pop() {
+        let (reply, _end) = {
+            let mut st = job.sess.state.lock().expect("session state");
+            session::handle_frame(&job.frame, &mut st, &shared.exec)
+        };
+        {
+            let mut w = job.sess.writer.lock().expect("session writer");
+            // a vanished client is the reader thread's problem, not ours
+            let _ = write_frame(&mut w, &reply);
+        }
+        shared.queue.done(tenant, priority);
+    }
+}
+
+/// A throwaway socket path under the system temp dir (tests/benches).
+pub fn scratch_socket(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!(
+        "pgas-hw-daemon-{tag}-{}-{:x}.sock",
+        std::process::id(),
+        std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0)
+    ))
+}
+
+#[cfg(test)]
+mod tests;

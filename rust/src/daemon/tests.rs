@@ -1,0 +1,181 @@
+//! In-lib daemon tests: an in-process [`Daemon`] serving real
+//! `RemoteEngine::connect` clients (no spawned processes), plus raw
+//! socket clients for the admission-control paths — `executors: 0`
+//! makes the shed behavior deterministic (nothing drains the queue).
+
+use super::*;
+use crate::engine::remote::{
+    encode_install_request, encode_map_request, read_frame, write_frame, Op,
+    RemoteEngine, STATUS_SHED,
+};
+use crate::engine::{AddressEngine, BatchOut, EngineCtx, PtrBatch, SoftwareEngine};
+use crate::sptr::{ArrayLayout, BaseTable, SharedPtr, WireReader};
+
+fn test_ctx(
+    blocksize: u64,
+    threads: u32,
+) -> (ArrayLayout, BaseTable) {
+    let layout = ArrayLayout::new(blocksize, 8, threads);
+    let table = BaseTable::regular(threads, 1 << 32, 1 << 32);
+    (layout, table)
+}
+
+/// Poll the daemon's live stats until `f` holds (readers and executors
+/// are asynchronous; tests synchronize on telemetry, never on sleeps).
+fn wait_until(daemon: &Daemon, f: impl Fn(&DaemonStats) -> bool) {
+    for _ in 0..5000 {
+        if f(&daemon.stats()) {
+            return;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    panic!("daemon did not reach the expected state within 5s");
+}
+
+#[test]
+fn daemon_serves_epoch_sessions_bit_identical_to_host() {
+    let cfg = DaemonCfg::new(scratch_socket("lib-roundtrip"));
+    let socket = cfg.socket.clone();
+    let daemon = Daemon::spawn(cfg).expect("daemon spawns");
+    {
+        let remote = RemoteEngine::connect(&socket, 2)
+            .expect("client connects")
+            .with_min_shard_len(1); // force fan-out over both sessions
+        let (layout, table) = test_ctx(3, 5); // non-pow2: software path
+        let ctx = EngineCtx::new(layout, &table, 2).unwrap();
+        let mut batch = PtrBatch::new();
+        for i in 0..777u64 {
+            batch.push(SharedPtr::for_index(&layout, 0, i * 3), i % 11);
+        }
+        let (mut got, mut want) = (BatchOut::new(), BatchOut::new());
+        remote.translate(&ctx, &batch, &mut got).unwrap();
+        SoftwareEngine.translate(&ctx, &batch, &mut want).unwrap();
+        assert_eq!(got, want);
+        // steady state: the second request rides the installed epochs
+        remote.walk(&ctx, SharedPtr::NULL, 7, 501, &mut got).unwrap();
+        SoftwareEngine.walk(&ctx, SharedPtr::NULL, 7, 501, &mut want).unwrap();
+        assert_eq!(got, want);
+        assert!(remote.installs() >= 2, "one install per connection");
+        assert!(remote.epoch_hits() >= 1, "walk reused the epochs");
+        assert_eq!(remote.reinstalls(), 0);
+        let live = daemon.stats();
+        assert_eq!(live.sessions, 2);
+        assert_eq!(live.stale_epochs, 0);
+    }
+    // client dropped: sessions are closed, shutdown can join readers
+    let stats = daemon.shutdown().expect("clean shutdown");
+    assert_eq!(stats.sessions, 2);
+    assert!(stats.served >= 2);
+    assert!(stats.epoch_hits >= 1);
+    assert_eq!(stats.shed, 0);
+    assert_eq!(stats.queue.shed_quota + stats.queue.shed_capacity, 0);
+    // admitted = installs + served ops + the clients' Shutdown frames
+    assert!(stats.queue.admitted >= stats.served + stats.installs);
+}
+
+#[test]
+fn forced_epoch_mismatch_reinstalls_transparently() {
+    let cfg = DaemonCfg::new(scratch_socket("lib-stale"));
+    let socket = cfg.socket.clone();
+    let daemon = Daemon::spawn(cfg).expect("daemon spawns");
+    {
+        let remote = RemoteEngine::connect(&socket, 1).expect("connect");
+        let (layout, table) = test_ctx(4, 4);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        for i in 0..64u64 {
+            batch.push(SharedPtr::for_index(&layout, 0, i), i);
+        }
+        let mut out = Vec::new();
+        remote.increment(&ctx, &batch, &mut out).unwrap();
+        // desync the client's idea of its epoch: the next request draws
+        // a stale-epoch reply and must re-install + retry, invisibly
+        remote.force_epoch_mismatch();
+        let mut again = Vec::new();
+        remote.increment(&ctx, &batch, &mut again).unwrap();
+        assert_eq!(out, again);
+        assert_eq!(remote.reinstalls(), 1);
+        assert_eq!(remote.installs(), 2);
+    }
+    let stats = daemon.shutdown().expect("clean shutdown");
+    assert_eq!(stats.stale_epochs, 1, "the daemon counted the stale hit");
+}
+
+/// Raw-socket client for the shed paths: `RemoteEngine` is synchronous
+/// per request, so only a hand-rolled pipelining client can overfill
+/// the queue.
+fn raw_client(socket: &std::path::Path) -> std::os::unix::net::UnixStream {
+    std::os::unix::net::UnixStream::connect(socket).expect("connect")
+}
+
+fn shed_message(reply: &[u8]) -> String {
+    let mut r = WireReader::new(reply);
+    r.get_u32().unwrap(); // magic
+    r.get_u16().unwrap(); // version
+    assert_eq!(r.get_u8().unwrap(), STATUS_SHED, "expected a shed reply");
+    let n = r.get_count(1).unwrap();
+    String::from_utf8_lossy(r.get_bytes(n).unwrap()).into_owned()
+}
+
+#[test]
+fn over_quota_tenant_is_shed_loudly() {
+    let mut cfg = DaemonCfg::new(scratch_socket("lib-quota"));
+    cfg.executors = 0; // nothing drains: queued frames stay queued
+    cfg.quota = 2;
+    let socket = cfg.socket.clone();
+    let daemon = Daemon::spawn(cfg).expect("daemon spawns");
+    {
+        let mut stream = raw_client(&socket);
+        let (layout, table) = test_ctx(4, 4);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let ptrs = [SharedPtr::NULL];
+        let incs = [1u64];
+        write_frame(&mut stream, &encode_install_request(1, false, &ctx)).unwrap();
+        for _ in 0..2 {
+            write_frame(
+                &mut stream,
+                &encode_map_request(Op::Increment, 1, &ptrs, &incs),
+            )
+            .unwrap();
+        }
+        // install + op fill the quota of 2; the second op is shed, and
+        // with no executors the shed reply is the only reply coming
+        let reply = read_frame(&mut stream).unwrap().expect("shed reply");
+        let msg = shed_message(&reply);
+        assert!(msg.contains("quota"), "{msg}");
+        assert!(msg.contains("tenant 0"), "{msg}");
+    }
+    let stats = daemon.shutdown().expect("clean shutdown");
+    assert_eq!(stats.queue.shed_quota, 1);
+    assert_eq!(stats.shed, 1, "the tenant's shed counter advanced");
+    assert_eq!(stats.queue.admitted, 2);
+}
+
+#[test]
+fn queue_at_capacity_sheds_the_newcomer() {
+    let mut cfg = DaemonCfg::new(scratch_socket("lib-capacity"));
+    cfg.executors = 0;
+    cfg.queue_cap = 1;
+    cfg.quota = 8;
+    let socket = cfg.socket.clone();
+    let daemon = Daemon::spawn(cfg).expect("daemon spawns");
+    {
+        let mut first = raw_client(&socket);
+        let (layout, table) = test_ctx(4, 4);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        write_frame(&mut first, &encode_install_request(1, false, &ctx)).unwrap();
+        // readers are asynchronous: wait until the first frame is
+        // actually queued before racing the second tenant against it
+        wait_until(&daemon, |s| s.queue.admitted == 1);
+        // the single queue slot is now taken; a second tenant is shed
+        let mut second = raw_client(&socket);
+        write_frame(&mut second, &encode_install_request(1, false, &ctx)).unwrap();
+        let reply = read_frame(&mut second).unwrap().expect("shed reply");
+        let msg = shed_message(&reply);
+        assert!(msg.contains("capacity"), "{msg}");
+    }
+    let stats = daemon.shutdown().expect("clean shutdown");
+    assert_eq!(stats.queue.shed_capacity, 1);
+    assert_eq!(stats.queue.admitted, 1);
+    assert_eq!(stats.sessions, 2);
+}

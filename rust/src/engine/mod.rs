@@ -87,7 +87,7 @@ mod xla_batch;
 
 pub use leon3::Leon3Engine;
 pub use pow2::Pow2Engine;
-pub use remote::{RemoteEngine, RemoteTier};
+pub use remote::{RemoteClientStats, RemoteEngine, RemoteTier};
 pub use select::{AutoEngine, CostModel, EngineChoice, EngineSelector};
 pub use sharded::ShardedEngine;
 pub use software::SoftwareEngine;

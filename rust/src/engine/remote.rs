@@ -1,35 +1,45 @@
 //! The process tier: address mapping as a *service*.  A
 //! [`RemoteEngine`] scatter/gathers [`PtrBatch`]es and walk step-ranges
-//! across N worker **processes** speaking a length-prefixed binary
-//! protocol over Unix-domain sockets — the scale-out seam the ROADMAP
-//! kept open after the thread tier ([`ShardedEngine`](super::ShardedEngine))
-//! landed: the same [`AddressEngine`] contract, served from outside the
-//! client's address space.
+//! across N worker connections speaking a length-prefixed binary
+//! protocol over Unix-domain sockets — either to worker **processes**
+//! it spawns and supervises ([`RemoteEngine::spawn`]), or to a shared
+//! multi-tenant [`daemon`](crate::daemon)
+//! ([`RemoteEngine::connect`]).  Same [`AddressEngine`] contract,
+//! served from outside the client's address space.
 //!
-//! ## Protocol
+//! ## Protocol (v2: epoch sessions)
 //!
 //! Every message is one *frame*: a little-endian `u32` byte length
 //! followed by that many body bytes.  A body starts with a versioned
 //! header (`MAGIC u32`, [`PROTOCOL_VERSION`] `u16`, op `u8`) so a
-//! mismatched peer fails loudly instead of mis-decoding.  Requests
-//! carry a full [`EngineCtx`] snapshot — layout, base table, executing
-//! thread, topology — serialized with the checked
-//! [`sptr::wire`](crate::sptr::WireWriter) helpers, then the op
-//! payload:
+//! mismatched peer fails loudly instead of mis-decoding.
+//!
+//! Protocol v1 shipped a full [`EngineCtx`] snapshot — layout, base
+//! table, executing thread, topology — in **every** request.  v2
+//! amortizes it: a session *installs* the snapshot once under a client-
+//! chosen **epoch** number, and steady-state requests carry only the
+//! epoch plus the op payload.  A request naming an epoch the session
+//! doesn't have is answered with a *stale-epoch* status and served
+//! nothing; the client re-installs and retries once.
 //!
 //! | op | request payload | ok-response payload |
 //! |----|-----------------|---------------------|
-//! | `Translate` | `n u32`, n×ptr, n×`u64` inc | `n u32`, n×ptr, n×`u64` sysva, n×`u8` loc |
-//! | `Increment` | `n u32`, n×ptr, n×`u64` inc | `n u32`, n×ptr |
-//! | `Walk`      | start ptr, `inc u64`, `steps u64` | as `Translate` |
+//! | `InstallCtx` | `epoch u64`, `priority u8`, ctx snapshot | — |
+//! | `Translate` | `epoch u64`, `n u32`, n×ptr, n×`u64` inc | `n u32`, n×ptr, n×`u64` sysva, n×`u8` loc |
+//! | `Increment` | `epoch u64`, `n u32`, n×ptr, n×`u64` inc | `n u32`, n×ptr |
+//! | `Walk`      | `epoch u64`, start ptr, `inc u64`, `steps u64` | as `Translate` |
 //! | `Ping`      | —               | — (calibration round-trip) |
-//! | `Shutdown`  | —               | — (worker exits after ack) |
+//! | `Shutdown`  | —               | — (session ends after ack) |
 //!
-//! Responses echo the header with a status byte (0 = ok, 1 = error +
-//! UTF-8 message).  Requests are **framed per shard**: a batch of `n`
-//! requests fans out to `k = clamp(n / min_shard_len, 1, workers)`
-//! contiguous shards, one frame to worker `i` per shard `i`, and the
-//! replies are spliced back **in shard order** — the same
+//! Responses echo the header with a status byte: `0` ok, `1` error +
+//! `u32` len + UTF-8 message, `2` **stale epoch** (re-install and retry),
+//! `3` **shed** (the daemon's admission control refused the request —
+//! loud failure, never retried).  Requests are **framed per shard**: a
+//! batch of `n` requests fans out to `k = clamp(n / min_shard_len, 1,
+//! workers)` contiguous shards, one frame to worker `i` per shard `i`
+//! (prefixed by an `InstallCtx` frame when that connection's installed
+//! fingerprint is stale — install + op are pipelined in one write), and
+//! the replies are spliced back **in shard order** — the same
 //! order-preserving splice as [`ShardedEngine`](super::ShardedEngine),
 //! so output is bit-identical to the inner engine at any worker count
 //! (`rust/tests/remote_engine.rs` pins this over the NPB layouts at
@@ -43,18 +53,25 @@
 //! once per worker (binary resolution: `PGAS_HW_WORKER_BIN`, the
 //! current executable when it *is* `pgas-hw`, else a `pgas-hw` sibling
 //! of the current executable) and connects with a bounded retry loop.
-//! Each worker serves exactly one client session with a per-request
-//! [`AutoEngine`] and exits when the connection closes.
+//! Each spawned worker serves exactly one client session
+//! (`daemon::session::handle_frame` with the host-only backend) and
+//! exits when the connection closes.  [`RemoteEngine::connect`] opens
+//! N connections to one already-running daemon instead — each
+//! connection is its own session with its own epochs.
 //!
 //! Failure is never silent: connect timeouts, short reads, stalled
-//! workers (socket read timeout) and worker death all surface as
-//! [`EngineError::Backend`] naming the worker, the **in-flight request
-//! fails loudly** (outputs are committed only after every shard reply
-//! decodes and the total length equals the request length — a short
-//! response can never be returned as a truncated success), and the
-//! whole pool is restarted before the error returns so the next
-//! request sees clean streams ([`RemoteEngine::restarts`] counts these
-//! recoveries; `kill_worker` is the chaos hook the tests use).
+//! peers (socket read timeout) and worker death all surface as
+//! [`EngineError::Backend`] naming the worker, and the **in-flight
+//! request fails loudly** (outputs are committed only after every shard
+//! reply decodes and the total length equals the request length — a
+//! short response can never be returned as a truncated success).
+//! Recovery is **per-connection**: surviving connections are drained
+//! back to a frame boundary, and only the failed ones are reconnected
+//! (respawned in spawn mode) with exponential backoff + jitter under a
+//! retry cap ([`RemoteEngine::reconnects`] counts these).  Only when a
+//! heal fails outright is the whole pool torn down and rebuilt lazily
+//! ([`RemoteEngine::restarts`]); `kill_worker` is the chaos hook the
+//! tests use, `force_epoch_mismatch` the one for the stale-epoch path.
 
 use std::io::{ErrorKind, Read, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
@@ -65,18 +82,19 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::{
-    AddressEngine, AutoEngine, BatchOut, EngineCtx, EngineError,
-    EngineSelector, PtrBatch,
+    AddressEngine, BatchOut, EngineCtx, EngineError, EngineSelector, PtrBatch,
 };
+use crate::daemon::session::{handle_frame, ExecBackend, SessionState};
 use crate::sptr::{
-    increment_general, ArrayLayout, BaseTable, Locality, SharedPtr,
-    WireReader, WireWriter,
+    ctx_fingerprint, increment_general, ArrayLayout, BaseTable, Locality,
+    SharedPtr, WireReader, WireWriter,
 };
 
 /// Version of the frame format.  Bumped on any wire-shape change; the
-/// worker refuses mismatched requests with a loud error naming both
-/// versions.
-pub const PROTOCOL_VERSION: u16 = 1;
+/// server refuses mismatched requests with a loud error naming both
+/// versions.  v2: epoch sessions (`InstallCtx` + epoch-tagged ops,
+/// stale-epoch and shed statuses).
+pub const PROTOCOL_VERSION: u16 = 2;
 
 /// "PGAS" — frame bodies open with this so a desynced or foreign peer
 /// is detected immediately.
@@ -84,21 +102,31 @@ pub const MAGIC: u32 = 0x5047_4153;
 
 /// Upper bound on one frame body; a corrupt length prefix must not OOM
 /// the peer.
-const MAX_FRAME: usize = 1 << 30;
+pub(crate) const MAX_FRAME: usize = 1 << 30;
+
+/// Response status bytes.
+pub(crate) const STATUS_OK: u8 = 0;
+pub(crate) const STATUS_ERR: u8 = 1;
+/// The request named an epoch the session doesn't have installed; the
+/// client should `InstallCtx` and retry.
+pub(crate) const STATUS_STALE_EPOCH: u8 = 2;
+/// Admission control refused the request (quota / capacity).  Loud,
+/// terminal for the request: clients must NOT retry.
+pub(crate) const STATUS_SHED: u8 = 3;
 
 /// Wire bytes of one batch-shaped result (ptr 20 + sysva 8 + loc 1).
 const RESULT_WIRE_BYTES: usize = 29;
 
 /// Conservative size of a reply frame carrying `n` batch-shaped
 /// results (header + count + columns).
-fn reply_frame_bytes(n: usize) -> usize {
+pub(crate) fn reply_frame_bytes(n: usize) -> usize {
     64 + n.saturating_mul(RESULT_WIRE_BYTES)
 }
 
 /// Refuse a shard whose request frame — or whose *reply* — would blow
 /// the frame cap, before anything is sent: a too-large frame would
 /// otherwise kill the worker on receipt (or on reply) and loop through
-/// pool restarts without ever succeeding.
+/// heals without ever succeeding.
 fn check_frame_budget(request_len: usize, results: usize) -> Result<(), EngineError> {
     if request_len > MAX_FRAME || reply_frame_bytes(results) > MAX_FRAME {
         return Err(EngineError::Backend(format!(
@@ -111,22 +139,24 @@ fn check_frame_budget(request_len: usize, results: usize) -> Result<(), EngineEr
 }
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-enum Op {
+pub(crate) enum Op {
     Translate = 0,
     Increment = 1,
     Walk = 2,
     Ping = 3,
     Shutdown = 4,
+    InstallCtx = 5,
 }
 
 impl Op {
-    fn from_u8(v: u8) -> Option<Op> {
+    pub(crate) fn from_u8(v: u8) -> Option<Op> {
         match v {
             0 => Some(Op::Translate),
             1 => Some(Op::Increment),
             2 => Some(Op::Walk),
             3 => Some(Op::Ping),
             4 => Some(Op::Shutdown),
+            5 => Some(Op::InstallCtx),
             _ => None,
         }
     }
@@ -134,7 +164,10 @@ impl Op {
 
 // ---------------------------------------------------------------- frames
 
-fn write_frame(stream: &mut UnixStream, body: &[u8]) -> std::io::Result<()> {
+pub(crate) fn write_frame(
+    stream: &mut UnixStream,
+    body: &[u8],
+) -> std::io::Result<()> {
     let len = u32::try_from(body.len()).map_err(|_| {
         std::io::Error::new(ErrorKind::InvalidInput, "frame exceeds u32 length")
     })?;
@@ -146,7 +179,9 @@ fn write_frame(stream: &mut UnixStream, body: &[u8]) -> std::io::Result<()> {
 /// Read one frame.  `Ok(None)` is a clean end-of-stream *at a frame
 /// boundary* (the peer closed between requests); EOF mid-frame is a
 /// short read and errors.
-fn read_frame(stream: &mut UnixStream) -> std::io::Result<Option<Vec<u8>>> {
+pub(crate) fn read_frame(
+    stream: &mut UnixStream,
+) -> std::io::Result<Option<Vec<u8>>> {
     let mut len = [0u8; 4];
     match stream.read_exact(&mut len) {
         Ok(()) => {}
@@ -175,21 +210,32 @@ fn begin_body(op: Op) -> WireWriter {
     w
 }
 
-fn put_ctx(w: &mut WireWriter, ctx: &EngineCtx) {
+/// `InstallCtx`: epoch, priority flag, then the full ctx snapshot —
+/// the only v2 frame that carries layout/table/topology bytes.
+pub(crate) fn encode_install_request(
+    epoch: u64,
+    priority: bool,
+    ctx: &EngineCtx,
+) -> Vec<u8> {
+    let mut w = begin_body(Op::InstallCtx);
+    w.put_u64(epoch);
+    w.put_u8(priority as u8);
     w.put_layout(ctx.layout());
     w.put_u32(ctx.mythread());
     w.put_topology(ctx.topo());
     w.put_table(ctx.table());
+    w.into_bytes()
 }
 
-fn encode_map_request(
+/// A steady-state map request: epoch + pointers, **no ctx snapshot**.
+pub(crate) fn encode_map_request(
     op: Op,
-    ctx: &EngineCtx,
+    epoch: u64,
     ptrs: &[SharedPtr],
     incs: &[u64],
 ) -> Vec<u8> {
     let mut w = begin_body(op);
-    put_ctx(&mut w, ctx);
+    w.put_u64(epoch);
     w.put_u32(ptrs.len() as u32);
     for p in ptrs {
         w.put_ptr(p);
@@ -200,44 +246,49 @@ fn encode_map_request(
     w.into_bytes()
 }
 
-fn encode_walk_request(
-    ctx: &EngineCtx,
+pub(crate) fn encode_walk_request(
+    epoch: u64,
     start: SharedPtr,
     inc: u64,
     steps: u64,
 ) -> Vec<u8> {
     let mut w = begin_body(Op::Walk);
-    put_ctx(&mut w, ctx);
+    w.put_u64(epoch);
     w.put_ptr(&start);
     w.put_u64(inc);
     w.put_u64(steps);
     w.into_bytes()
 }
 
-fn encode_simple_request(op: Op) -> Vec<u8> {
+pub(crate) fn encode_simple_request(op: Op) -> Vec<u8> {
     begin_body(op).into_bytes()
 }
 
-fn ok_header() -> WireWriter {
+pub(crate) fn ok_header() -> WireWriter {
     let mut w = WireWriter::new();
     w.put_u32(MAGIC);
     w.put_u16(PROTOCOL_VERSION);
-    w.put_u8(0); // status ok
+    w.put_u8(STATUS_OK);
     w
 }
 
-fn error_body(msg: &str) -> Vec<u8> {
+/// A non-ok reply: header + status + `u32` len + UTF-8 message.
+pub(crate) fn reply_status_body(status: u8, msg: &str) -> Vec<u8> {
     let mut w = WireWriter::new();
     w.put_u32(MAGIC);
     w.put_u16(PROTOCOL_VERSION);
-    w.put_u8(1); // status error
+    w.put_u8(status);
     let bytes = msg.as_bytes();
     w.put_u32(bytes.len() as u32);
     w.put_bytes(bytes);
     w.into_bytes()
 }
 
-fn encode_batch_out(w: &mut WireWriter, out: &BatchOut) {
+pub(crate) fn error_body(msg: &str) -> Vec<u8> {
+    reply_status_body(STATUS_ERR, msg)
+}
+
+pub(crate) fn encode_batch_out(w: &mut WireWriter, out: &BatchOut) {
     w.put_u32(out.len() as u32);
     for p in &out.ptrs {
         w.put_ptr(p);
@@ -252,8 +303,20 @@ fn encode_batch_out(w: &mut WireWriter, out: &BatchOut) {
 
 // ------------------------------------------------------------- decoding
 
-/// Check a response header; on error status, surface the worker's
-/// message.  Returns a reader positioned at the payload.
+/// Peek a reply body's status byte without consuming it (`None` for a
+/// body too short or desynced to carry one — full decoding surfaces
+/// the real error).
+fn body_status(body: &[u8]) -> Option<u8> {
+    let mut r = WireReader::new(body);
+    (r.get_u32() == Ok(MAGIC) && r.get_u16() == Ok(PROTOCOL_VERSION))
+        .then(|| r.get_u8().ok())
+        .flatten()
+}
+
+/// Check a response header; on a non-ok status, surface the server's
+/// message (labelled by kind: shed and stale-epoch replies carry their
+/// own vocabulary so callers and logs can tell them apart).  Returns a
+/// reader positioned at the payload.
 fn open_response(body: &[u8]) -> Result<WireReader<'_>, EngineError> {
     let mut r = WireReader::new(body);
     let backend = EngineError::Backend;
@@ -266,15 +329,20 @@ fn open_response(body: &[u8]) -> Result<WireReader<'_>, EngineError> {
     let version = r.get_u16().map_err(|e| backend(format!("remote: {e}")))?;
     if version != PROTOCOL_VERSION {
         return Err(backend(format!(
-            "remote: worker speaks protocol v{version}, client v{PROTOCOL_VERSION}"
+            "remote: server speaks protocol v{version}, client v{PROTOCOL_VERSION}"
         )));
     }
     let status = r.get_u8().map_err(|e| backend(format!("remote: {e}")))?;
-    if status != 0 {
+    if status != STATUS_OK {
         let n = r.get_count(1).map_err(|e| backend(format!("remote: {e}")))?;
         let msg = r.get_bytes(n).map_err(|e| backend(format!("remote: {e}")))?;
         let msg = String::from_utf8_lossy(msg);
-        return Err(backend(format!("remote: worker error: {msg}")));
+        let kind = match status {
+            STATUS_STALE_EPOCH => "stale epoch",
+            STATUS_SHED => "request shed",
+            _ => "server error",
+        };
+        return Err(backend(format!("remote: {kind}: {msg}")));
     }
     Ok(r)
 }
@@ -320,121 +388,16 @@ fn decode_ptrs_response(
 
 // ------------------------------------------------------- worker (server)
 
-/// Decode and serve one request frame with a per-request [`AutoEngine`].
-/// Returns the response body and whether the session should end.
-fn handle_frame(frame: &[u8]) -> (Vec<u8>, bool) {
-    match try_handle(frame) {
-        Ok(reply) => reply,
-        Err(msg) => (error_body(&msg), false),
-    }
-}
-
-fn try_handle(frame: &[u8]) -> Result<(Vec<u8>, bool), String> {
-    let mut r = WireReader::new(frame);
-    let magic = r.get_u32().map_err(|e| e.to_string())?;
-    if magic != MAGIC {
-        return Err(format!("request magic {magic:#x} != {MAGIC:#x}"));
-    }
-    let version = r.get_u16().map_err(|e| e.to_string())?;
-    if version != PROTOCOL_VERSION {
-        return Err(format!(
-            "client speaks protocol v{version}, worker v{PROTOCOL_VERSION}"
-        ));
-    }
-    let op = Op::from_u8(r.get_u8().map_err(|e| e.to_string())?)
-        .ok_or_else(|| "unknown op".to_string())?;
-    match op {
-        Op::Ping => Ok((ok_header().into_bytes(), false)),
-        Op::Shutdown => Ok((ok_header().into_bytes(), true)),
-        Op::Translate | Op::Increment => {
-            let (layout, mythread, topo, table) = get_ctx(&mut r)?;
-            // 28 = ptr 20 + inc 8: bound the allocation by the frame
-            let n = r.get_count(28).map_err(|e| e.to_string())?;
-            // replies are wider than requests (29 B/result vs 28), so
-            // a near-cap request could produce an over-cap reply —
-            // refuse here like the walk path does, a loud worker-side
-            // error instead of a desynced oversized reply frame
-            if reply_frame_bytes(n) > MAX_FRAME {
-                return Err(format!(
-                    "batch of {n} requests would exceed the reply frame cap"
-                ));
-            }
-            let mut batch = PtrBatch::with_capacity(n);
-            for _ in 0..n {
-                batch.ptrs.push(r.get_ptr().map_err(|e| e.to_string())?);
-            }
-            for _ in 0..n {
-                batch.incs.push(r.get_u64().map_err(|e| e.to_string())?);
-            }
-            r.finish().map_err(|e| e.to_string())?;
-            let ctx = EngineCtx::new(layout, &table, mythread)
-                .map_err(|e| e.to_string())?
-                .with_topology(topo);
-            if op == Op::Translate {
-                let mut out = BatchOut::new();
-                AutoEngine
-                    .translate(&ctx, &batch, &mut out)
-                    .map_err(|e| e.to_string())?;
-                let mut w = ok_header();
-                encode_batch_out(&mut w, &out);
-                Ok((w.into_bytes(), false))
-            } else {
-                let mut out = Vec::new();
-                AutoEngine
-                    .increment(&ctx, &batch, &mut out)
-                    .map_err(|e| e.to_string())?;
-                let mut w = ok_header();
-                w.put_u32(out.len() as u32);
-                for p in &out {
-                    w.put_ptr(p);
-                }
-                Ok((w.into_bytes(), false))
-            }
-        }
-        Op::Walk => {
-            let (layout, mythread, topo, table) = get_ctx(&mut r)?;
-            let start = r.get_ptr().map_err(|e| e.to_string())?;
-            let inc = r.get_u64().map_err(|e| e.to_string())?;
-            let steps = r.get_u64().map_err(|e| e.to_string())?;
-            r.finish().map_err(|e| e.to_string())?;
-            let steps = usize::try_from(steps)
-                .map_err(|_| "walk steps exceed usize".to_string())?;
-            // the reply must fit one frame; refuse before allocating
-            // `steps` results (also guards hand-written clients)
-            if reply_frame_bytes(steps) > MAX_FRAME {
-                return Err(format!(
-                    "walk of {steps} steps would exceed the frame cap"
-                ));
-            }
-            let ctx = EngineCtx::new(layout, &table, mythread)
-                .map_err(|e| e.to_string())?
-                .with_topology(topo);
-            let mut out = BatchOut::new();
-            AutoEngine
-                .walk(&ctx, start, inc, steps, &mut out)
-                .map_err(|e| e.to_string())?;
-            let mut w = ok_header();
-            encode_batch_out(&mut w, &out);
-            Ok((w.into_bytes(), false))
-        }
-    }
-}
-
-type CtxParts = (ArrayLayout, u32, crate::sptr::Topology, BaseTable);
-
-fn get_ctx(r: &mut WireReader<'_>) -> Result<CtxParts, String> {
-    let layout = r.get_layout().map_err(|e| e.to_string())?;
-    let mythread = r.get_u32().map_err(|e| e.to_string())?;
-    let topo = r.get_topology().map_err(|e| e.to_string())?;
-    let table = r.get_table().map_err(|e| e.to_string())?;
-    Ok((layout, mythread, topo, table))
-}
-
 /// One client session on an established stream: loop
 /// read-frame/serve/write-frame until the client disconnects or sends
-/// `Shutdown`.  Split out so the protocol is unit-testable over a
-/// socketpair without spawning processes.
+/// `Shutdown`.  The frame handler is the daemon's
+/// ([`daemon::session::handle_frame`](crate::daemon::session::handle_frame))
+/// with the host-only backend — a spawned worker IS a single-tenant
+/// daemon session, epochs and all.  Split out so the protocol is
+/// unit-testable over a socketpair without spawning processes.
 fn serve_session(stream: &mut UnixStream) -> Result<(), String> {
+    let mut sess = SessionState::new(0);
+    let exec = ExecBackend::host_only();
     loop {
         let frame = match read_frame(stream) {
             Ok(Some(f)) => f,
@@ -443,7 +406,7 @@ fn serve_session(stream: &mut UnixStream) -> Result<(), String> {
             Ok(None) => return Ok(()),
             Err(e) => return Err(format!("serve-engine: read: {e}")),
         };
-        let (reply, shutdown) = handle_frame(&frame);
+        let (reply, shutdown) = handle_frame(&frame, &mut sess, &exec);
         write_frame(stream, &reply)
             .map_err(|e| format!("serve-engine: write: {e}"))?;
         if shutdown {
@@ -457,6 +420,7 @@ fn serve_session(stream: &mut UnixStream) -> Result<(), String> {
 /// session, serve it to completion, clean up, exit.  The supervising
 /// [`RemoteEngine`] owns the process lifetime; a fresh worker gets a
 /// fresh socket, so a lingering process can never serve a stale path.
+/// (For many sessions over one socket, that's `pgas-hw daemon`.)
 pub fn serve(socket: &Path) -> Result<(), String> {
     let _ = std::fs::remove_file(socket);
     let listener = UnixListener::bind(socket)
@@ -472,17 +436,34 @@ pub fn serve(socket: &Path) -> Result<(), String> {
 // ------------------------------------------------------- client (engine)
 
 struct Worker {
-    child: Child,
+    /// The supervised process in spawn mode; `None` when this is a
+    /// connection to a shared daemon.
+    child: Option<Child>,
     stream: UnixStream,
     socket: PathBuf,
+    /// What this connection's session has installed: `(ctx fingerprint,
+    /// epoch)`.  `None` right after (re)connect.
+    installed: Option<(u64, u64)>,
 }
 
 impl Worker {
     fn reap(&mut self) {
-        let _ = self.child.kill();
-        let _ = self.child.wait();
-        let _ = std::fs::remove_file(&self.socket);
+        if let Some(child) = &mut self.child {
+            let _ = child.kill();
+            let _ = child.wait();
+            // per-worker socket file in spawn mode only; a daemon's
+            // socket belongs to the daemon
+            let _ = std::fs::remove_file(&self.socket);
+        }
     }
+}
+
+/// How the pool gets its connections.
+enum WorkerMode {
+    /// Spawn + supervise one `serve-engine` process per worker.
+    Spawn { bin: PathBuf, dir: PathBuf },
+    /// Connect N sessions to one already-running `pgas-hw daemon`.
+    Connect { socket: PathBuf },
 }
 
 /// Resolve the worker executable: explicit env override, the current
@@ -519,29 +500,56 @@ fn resolve_worker_bin() -> Result<PathBuf, EngineError> {
     ))
 }
 
-/// Process-pool backend: the same scatter/gather + order-preserving
-/// splice as [`ShardedEngine`](super::ShardedEngine), over worker
-/// *processes* instead of threads.  See the module docs for the
-/// protocol and failure semantics.
+/// Client-side session/recovery counters, snapshotted into
+/// `MachineResult::stats_txt` when a remote tier is installed.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RemoteClientStats {
+    /// Whole-pool rebuilds (only after a per-connection heal failed).
+    pub restarts: u64,
+    /// Individual connections healed (reconnect/respawn with backoff).
+    pub reconnects: u64,
+    /// `InstallCtx` messages sent (ctx changed, or fresh connection).
+    pub installs: u64,
+    /// Installs forced by a stale-epoch reply (server lost the session
+    /// state, or the chaos hook desynced it).
+    pub reinstalls: u64,
+    /// Steady-state requests that rode an already-installed epoch.
+    pub epoch_hits: u64,
+}
+
+/// Process-pool / daemon-client backend: the same scatter/gather +
+/// order-preserving splice as [`ShardedEngine`](super::ShardedEngine),
+/// over worker connections instead of threads.  See the module docs for
+/// the protocol and failure semantics.
 pub struct RemoteEngine {
     /// One mutex over the whole pool: a request owns every stream it
     /// scatters to until the gather completes, so streams can never
     /// interleave frames from two requests.
     pool: Mutex<Vec<Worker>>,
     /// Configured pool size; the live pool can be smaller (empty)
-    /// after a failed restart, and is re-grown to this target by
+    /// after a failed heal, and is re-grown to this target by
     /// `ensure_pool` on the next request.
     target_workers: usize,
-    bin: PathBuf,
-    dir: PathBuf,
+    mode: WorkerMode,
     min_shard_len: usize,
     timeout: Duration,
     /// Monotonic worker generation — keeps respawned socket names
     /// unique.
     generation: AtomicU64,
-    /// Pool restarts after a mid-request failure (telemetry; the
-    /// worker-death tests assert recovery happened).
+    /// Client-assigned epoch numbers, never reused.
+    next_epoch: AtomicU64,
+    /// Emulate the protocol-v1 behavior: ship the ctx snapshot with
+    /// every request (the bench baseline the epoch path is judged
+    /// against).
+    reinstall_every_request: bool,
+    /// Installed into every session: routes this client through the
+    /// daemon's priority scheduling ring and accelerator-lease path.
+    priority: bool,
     restarts: AtomicU64,
+    reconnects: AtomicU64,
+    installs: AtomicU64,
+    reinstalls: AtomicU64,
+    epoch_hits: AtomicU64,
 }
 
 impl RemoteEngine {
@@ -549,10 +557,14 @@ impl RemoteEngine {
     /// hop cannot pay for itself; smaller batches go to worker 0 whole.
     pub const DEFAULT_MIN_SHARD_LEN: usize = 4096;
 
-    /// Per-I/O timeout: a worker that neither answers nor dies within
+    /// Per-I/O timeout: a peer that neither answers nor dies within
     /// this window is treated as dead (stalls must not hang the
     /// client).
     pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(10);
+
+    /// Reconnect attempts per failed connection before the pool gives
+    /// up and falls back to a full restart.
+    const RECONNECT_ATTEMPTS: u32 = 4;
 
     /// Spawn `workers` worker processes (clamped to ≥ 1) running the
     /// auto-resolved `pgas-hw` binary's `serve-engine` subcommand.
@@ -566,7 +578,6 @@ impl RemoteEngine {
         bin: impl Into<PathBuf>,
         workers: usize,
     ) -> Result<Self, EngineError> {
-        let workers = workers.max(1);
         let dir = std::env::temp_dir().join(format!(
             "pgas-hw-remote-{}-{:x}",
             std::process::id(),
@@ -581,15 +592,39 @@ impl RemoteEngine {
                 dir.display()
             ))
         })?;
+        Self::with_mode(WorkerMode::Spawn { bin: bin.into(), dir }, workers)
+    }
+
+    /// Open `connections` client sessions to an already-running
+    /// `pgas-hw daemon` on `socket`.  Each connection is an
+    /// independent session (own epochs, own tenant id daemon-side);
+    /// batches fan out over them exactly like spawned workers.
+    pub fn connect(
+        socket: impl Into<PathBuf>,
+        connections: usize,
+    ) -> Result<Self, EngineError> {
+        Self::with_mode(
+            WorkerMode::Connect { socket: socket.into() },
+            connections,
+        )
+    }
+
+    fn with_mode(mode: WorkerMode, workers: usize) -> Result<Self, EngineError> {
         let engine = Self {
-            pool: Mutex::new(Vec::with_capacity(workers)),
-            target_workers: workers,
-            bin: bin.into(),
-            dir,
+            pool: Mutex::new(Vec::new()),
+            target_workers: workers.max(1),
+            mode,
             min_shard_len: Self::DEFAULT_MIN_SHARD_LEN,
             timeout: Self::DEFAULT_TIMEOUT,
             generation: AtomicU64::new(0),
+            next_epoch: AtomicU64::new(0),
+            reinstall_every_request: false,
+            priority: false,
             restarts: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            installs: AtomicU64::new(0),
+            reinstalls: AtomicU64::new(0),
+            epoch_hits: AtomicU64::new(0),
         };
         {
             let mut pool = engine.pool.lock().expect("fresh mutex");
@@ -611,27 +646,95 @@ impl RemoteEngine {
         self
     }
 
+    /// Ship the ctx snapshot with **every** request (fresh epoch each
+    /// time) — the protocol-v1 cost model, kept as the measured
+    /// baseline the epoch-session path must beat.
+    pub fn with_reinstall_every_request(mut self, on: bool) -> Self {
+        self.reinstall_every_request = on;
+        self
+    }
+
+    /// Mark this client's sessions high-priority: the daemon schedules
+    /// them on the priority ring and lets them jump the accelerator
+    /// lease queue.
+    pub fn with_priority(mut self, on: bool) -> Self {
+        self.priority = on;
+        self
+    }
+
     /// Worker-pool size.
     pub fn workers(&self) -> usize {
         self.pool.lock().map(|p| p.len()).unwrap_or(0)
     }
 
-    /// Pool restarts performed after mid-request worker failures.
+    /// Whole-pool rebuilds (the last-resort recovery).
     pub fn restarts(&self) -> u64 {
         self.restarts.load(Ordering::Relaxed)
     }
 
-    /// Chaos hook (tests/ops): force-kill worker `slot`'s process
-    /// without telling the client side.  The next request touching the
-    /// dead stream must fail loudly and restart the pool.
+    /// Individual connections healed after a mid-request failure.
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects.load(Ordering::Relaxed)
+    }
+
+    /// `InstallCtx` messages sent.
+    pub fn installs(&self) -> u64 {
+        self.installs.load(Ordering::Relaxed)
+    }
+
+    /// Installs forced by stale-epoch replies.
+    pub fn reinstalls(&self) -> u64 {
+        self.reinstalls.load(Ordering::Relaxed)
+    }
+
+    /// Steady-state requests served against an installed epoch.
+    pub fn epoch_hits(&self) -> u64 {
+        self.epoch_hits.load(Ordering::Relaxed)
+    }
+
+    /// All client counters in one snapshot.
+    pub fn client_stats(&self) -> RemoteClientStats {
+        RemoteClientStats {
+            restarts: self.restarts(),
+            reconnects: self.reconnects(),
+            installs: self.installs(),
+            reinstalls: self.reinstalls(),
+            epoch_hits: self.epoch_hits(),
+        }
+    }
+
+    /// Chaos hook (tests/ops): force-kill worker `slot`'s process (or
+    /// sever its daemon connection) without telling the client side.
+    /// The next request touching the dead stream must fail loudly and
+    /// heal the connection.
     pub fn kill_worker(&self, slot: usize) -> Result<(), EngineError> {
         let mut pool = self.lock_pool()?;
         let w = pool.get_mut(slot).ok_or_else(|| {
             EngineError::Backend(format!("remote: no worker slot {slot}"))
         })?;
-        let _ = w.child.kill();
-        let _ = w.child.wait();
+        match &mut w.child {
+            Some(child) => {
+                let _ = child.kill();
+                let _ = child.wait();
+            }
+            None => {
+                let _ = w.stream.shutdown(std::net::Shutdown::Both);
+            }
+        }
         Ok(())
+    }
+
+    /// Chaos hook: desync every connection's client-side epoch so the
+    /// next request draws a stale-epoch reply and exercises the
+    /// re-install + retry path.
+    pub fn force_epoch_mismatch(&self) {
+        if let Ok(mut pool) = self.pool.lock() {
+            for w in pool.iter_mut() {
+                if let Some((fp, epoch)) = w.installed {
+                    w.installed = Some((fp, epoch ^ 0x5A5A_5A5A));
+                }
+            }
+        }
     }
 
     fn lock_pool(&self) -> Result<std::sync::MutexGuard<'_, Vec<Worker>>, EngineError> {
@@ -640,11 +743,66 @@ impl RemoteEngine {
         })
     }
 
-    fn spawn_worker(&self, slot: usize) -> Result<Worker, EngineError> {
+    fn connect_worker(&self, slot: usize) -> Result<Worker, EngineError> {
+        match &self.mode {
+            WorkerMode::Spawn { bin, dir } => self.spawn_worker(bin, dir, slot),
+            WorkerMode::Connect { socket } => {
+                let deadline = Instant::now() + self.timeout;
+                let stream = loop {
+                    match UnixStream::connect(socket) {
+                        Ok(s) => break s,
+                        Err(e) => {
+                            if Instant::now() >= deadline {
+                                return Err(EngineError::Backend(format!(
+                                    "remote: cannot connect session {slot} to \
+                                     daemon {} within {:?}: {e}",
+                                    socket.display(),
+                                    self.timeout
+                                )));
+                            }
+                            std::thread::sleep(Duration::from_millis(1));
+                        }
+                    }
+                };
+                self.set_io_timeouts(&stream, slot)?;
+                Ok(Worker {
+                    child: None,
+                    stream,
+                    socket: socket.clone(),
+                    installed: None,
+                })
+            }
+        }
+    }
+
+    fn set_io_timeouts(
+        &self,
+        stream: &UnixStream,
+        slot: usize,
+    ) -> Result<(), EngineError> {
+        for (what, res) in [
+            ("read", stream.set_read_timeout(Some(self.timeout))),
+            ("write", stream.set_write_timeout(Some(self.timeout))),
+        ] {
+            res.map_err(|e| {
+                EngineError::Backend(format!(
+                    "remote: worker {slot}: set {what} timeout: {e}"
+                ))
+            })?;
+        }
+        Ok(())
+    }
+
+    fn spawn_worker(
+        &self,
+        bin: &Path,
+        dir: &Path,
+        slot: usize,
+    ) -> Result<Worker, EngineError> {
         let generation = self.generation.fetch_add(1, Ordering::Relaxed);
-        let socket = self.dir.join(format!("w{slot}-g{generation}.sock"));
+        let socket = dir.join(format!("w{slot}-g{generation}.sock"));
         // stderr stays inherited: a crashing worker must be loud.
-        let mut child = Command::new(&self.bin)
+        let mut child = Command::new(bin)
             .arg("serve-engine")
             .arg("--socket")
             .arg(&socket)
@@ -654,7 +812,7 @@ impl RemoteEngine {
             .map_err(|e| {
                 EngineError::Backend(format!(
                     "remote: cannot spawn worker {slot} ({}): {e}",
-                    self.bin.display()
+                    bin.display()
                 ))
             })?;
         // Connect with a bounded retry loop: the worker needs a moment
@@ -685,17 +843,8 @@ impl RemoteEngine {
                 }
             }
         };
-        for (what, res) in [
-            ("read", stream.set_read_timeout(Some(self.timeout))),
-            ("write", stream.set_write_timeout(Some(self.timeout))),
-        ] {
-            res.map_err(|e| {
-                EngineError::Backend(format!(
-                    "remote: worker {slot}: set {what} timeout: {e}"
-                ))
-            })?;
-        }
-        Ok(Worker { child, stream, socket })
+        self.set_io_timeouts(&stream, slot)?;
+        Ok(Worker { child: Some(child), stream, socket, installed: None })
     }
 
     /// How many shards a request of `n` items fans out to.
@@ -704,12 +853,12 @@ impl RemoteEngine {
     }
 
     /// Grow the pool back to its configured size (no-op when full).
-    /// On a spawn failure everything spawned so far is reaped and the
+    /// On a connect failure everything opened so far is reaped and the
     /// pool left **empty** — never short — so a later request heals or
     /// errors loudly here instead of indexing past the pool.
     fn ensure_pool(&self, pool: &mut Vec<Worker>) -> Result<(), EngineError> {
         while pool.len() < self.target_workers {
-            match self.spawn_worker(pool.len()) {
+            match self.connect_worker(pool.len()) {
                 Ok(w) => pool.push(w),
                 Err(e) => {
                     for w in pool.iter_mut() {
@@ -725,74 +874,256 @@ impl RemoteEngine {
         Ok(())
     }
 
-    /// Send `frames[i]` to worker `i` and collect the replies in shard
-    /// order.  On any failure the in-flight request is abandoned, the
-    /// **whole pool is restarted** (surviving workers may hold
-    /// half-consumed streams — a respawn is the only state we can
-    /// trust), and a loud error names the failed worker.
+    /// Replace one dead connection in place: reconnect (spawn mode:
+    /// respawn) with exponential backoff + jitter under a retry cap.
+    /// The healed connection starts with no installed ctx.
+    fn heal_worker(
+        &self,
+        pool: &mut [Worker],
+        slot: usize,
+    ) -> Result<(), EngineError> {
+        pool[slot].reap();
+        let mut last = String::new();
+        for attempt in 0..Self::RECONNECT_ATTEMPTS {
+            if attempt > 0 {
+                // 2/4/8 ms, plus up to ~50% jitter so a herd of clients
+                // healing off one daemon restart doesn't stampede it
+                let base_ms = 1u64 << attempt;
+                let jitter_us = std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .map(|d| d.subsec_nanos() as u64 / 1000)
+                    .unwrap_or(0)
+                    % (base_ms * 500);
+                std::thread::sleep(
+                    Duration::from_millis(base_ms)
+                        + Duration::from_micros(jitter_us),
+                );
+            }
+            match self.connect_worker(slot) {
+                Ok(w) => {
+                    pool[slot] = w;
+                    self.reconnects.fetch_add(1, Ordering::Relaxed);
+                    return Ok(());
+                }
+                Err(e) => last = e.to_string(),
+            }
+        }
+        Err(EngineError::Backend(format!(
+            "remote: worker {slot} not healed after \
+             {} attempts: {last}",
+            Self::RECONNECT_ATTEMPTS
+        )))
+    }
+
+    /// Send each plan's frames to its worker slot and collect the
+    /// replies per slot, in order.  On any failure the in-flight
+    /// request is abandoned: surviving connections are **drained** back
+    /// to a frame boundary (their pending replies read and discarded),
+    /// dead ones are healed individually, and a loud error names the
+    /// failed worker.  Only if a heal fails is the whole pool torn down
+    /// ([`restarts`](Self::restarts)) for a lazy rebuild.
     fn scatter_gather(
         &self,
         pool: &mut Vec<Worker>,
-        frames: &[Vec<u8>],
-    ) -> Result<Vec<Vec<u8>>, EngineError> {
-        debug_assert!(frames.len() <= pool.len());
+        plan: &[(usize, Vec<Vec<u8>>)],
+    ) -> Result<Vec<Vec<Vec<u8>>>, EngineError> {
+        debug_assert!(plan.iter().all(|(slot, _)| *slot < pool.len()));
+        let mut written = vec![0usize; plan.len()];
         let mut failure: Option<(usize, String)> = None;
-        for (i, frame) in frames.iter().enumerate() {
-            if let Err(e) = write_frame(&mut pool[i].stream, frame) {
-                failure = Some((i, format!("send: {e}")));
-                break;
+        'scatter: for (i, (slot, frames)) in plan.iter().enumerate() {
+            for frame in frames {
+                if let Err(e) = write_frame(&mut pool[*slot].stream, frame) {
+                    failure = Some((*slot, format!("send: {e}")));
+                    break 'scatter;
+                }
+                written[i] += 1;
             }
         }
-        let mut replies = Vec::with_capacity(frames.len());
+        let mut replies: Vec<Vec<Vec<u8>>> =
+            plan.iter().map(|_| Vec::new()).collect();
         if failure.is_none() {
-            for (i, _) in frames.iter().enumerate() {
-                match read_frame(&mut pool[i].stream) {
-                    Ok(Some(r)) => replies.push(r),
-                    Ok(None) => {
-                        failure = Some((i, "worker closed mid-request".into()));
-                        break;
+            'gather: for (i, (slot, frames)) in plan.iter().enumerate() {
+                for _ in 0..frames.len() {
+                    match read_frame(&mut pool[*slot].stream) {
+                        Ok(Some(r)) => replies[i].push(r),
+                        Ok(None) => {
+                            failure =
+                                Some((*slot, "worker closed mid-request".into()));
+                            break 'gather;
+                        }
+                        Err(e) if e.kind() == ErrorKind::WouldBlock
+                            || e.kind() == ErrorKind::TimedOut =>
+                        {
+                            failure = Some((
+                                *slot,
+                                format!("timed out after {:?}", self.timeout),
+                            ));
+                            break 'gather;
+                        }
+                        Err(e) => {
+                            failure = Some((*slot, format!("recv: {e}")));
+                            break 'gather;
+                        }
                     }
-                    Err(e) if e.kind() == ErrorKind::WouldBlock
-                        || e.kind() == ErrorKind::TimedOut =>
-                    {
-                        failure =
-                            Some((i, format!("timed out after {:?}", self.timeout)));
-                        break;
-                    }
-                    Err(e) => {
-                        failure = Some((i, format!("recv: {e}")));
+                }
+            }
+        }
+        let Some((failed_slot, what)) = failure else {
+            return Ok(replies);
+        };
+        // Drain survivors to a frame boundary: every frame written but
+        // not yet answered gets its reply read and discarded, so the
+        // stream (and the server session behind it) stays usable.  A
+        // drain failure marks that connection dead too.
+        let mut dead = vec![failed_slot];
+        for (i, (slot, _)) in plan.iter().enumerate() {
+            if *slot == failed_slot {
+                continue;
+            }
+            let pending = written[i].saturating_sub(replies[i].len());
+            for _ in 0..pending {
+                match read_frame(&mut pool[*slot].stream) {
+                    Ok(Some(_)) => {}
+                    _ => {
+                        dead.push(*slot);
                         break;
                     }
                 }
             }
         }
-        if let Some((slot, what)) = failure {
-            let n = pool.len();
+        // Heal the dead connections in place; fall back to a full pool
+        // restart only when a heal fails outright.
+        let mut healed = true;
+        for &slot in &dead {
+            if self.heal_worker(pool, slot).is_err() {
+                healed = false;
+                break;
+            }
+        }
+        let recovery = if healed {
+            format!("{} connection(s) reconnected", dead.len())
+        } else {
             for w in pool.iter_mut() {
                 w.reap();
             }
             pool.clear();
             self.restarts.fetch_add(1, Ordering::Relaxed);
-            // Best-effort rebuild; if it fails too the pool stays
-            // empty and the *next* request's `ensure_pool` retries (or
-            // errors loudly) — it is never left short.
-            let rebuilt = match self.ensure_pool(pool) {
-                Ok(()) => format!("pool of {n} restarted"),
-                Err(e) => format!("pool restart also failed ({e})"),
-            };
-            return Err(EngineError::Backend(format!(
-                "remote: worker {slot} failed mid-request ({what}); request \
-                 NOT served, {rebuilt}"
-            )));
+            // the *next* request's ensure_pool rebuilds (or errors
+            // loudly); the pool is never left short
+            "heal failed; pool torn down for rebuild".into()
+        };
+        Err(EngineError::Backend(format!(
+            "remote: worker {failed_slot} failed mid-request ({what}); \
+             request NOT served, {recovery}"
+        )))
+    }
+
+    /// Ensure `pool[slot]`'s session has `ctx` installed, appending an
+    /// `InstallCtx` frame when needed, and return the epoch to tag the
+    /// op frame with.
+    fn prep_worker(
+        &self,
+        worker: &mut Worker,
+        fingerprint: u64,
+        ctx: &EngineCtx,
+        frames: &mut Vec<Vec<u8>>,
+    ) -> u64 {
+        if !self.reinstall_every_request {
+            if let Some((fp, epoch)) = worker.installed {
+                if fp == fingerprint {
+                    self.epoch_hits.fetch_add(1, Ordering::Relaxed);
+                    return epoch;
+                }
+            }
         }
-        Ok(replies)
+        let epoch = self.next_epoch.fetch_add(1, Ordering::Relaxed) + 1;
+        frames.push(encode_install_request(epoch, self.priority, ctx));
+        worker.installed = Some((fingerprint, epoch));
+        self.installs.fetch_add(1, Ordering::Relaxed);
+        epoch
+    }
+
+    /// The epoch-session exchange shared by every sharded op: install
+    /// where needed (pipelined with the op frame), scatter/gather,
+    /// validate install acks, and serve stale-epoch replies with one
+    /// re-install + retry.  `shards[i]` is `(result count, op-frame
+    /// encoder)` for pool slot `i`; returns the op reply bodies in
+    /// shard order.
+    fn session_exchange(
+        &self,
+        pool: &mut Vec<Worker>,
+        ctx: &EngineCtx,
+        shards: &[(usize, &dyn Fn(u64) -> Vec<u8>)],
+    ) -> Result<Vec<Vec<u8>>, EngineError> {
+        let fingerprint =
+            ctx_fingerprint(ctx.layout(), ctx.mythread(), ctx.topo(), ctx.table());
+        let mut plan = Vec::with_capacity(shards.len());
+        for (slot, (results, encode)) in shards.iter().enumerate() {
+            let mut frames = Vec::with_capacity(2);
+            let epoch = self.prep_worker(&mut pool[slot], fingerprint, ctx, &mut frames);
+            let op_frame = encode(epoch);
+            check_frame_budget(op_frame.len(), *results)?;
+            frames.push(op_frame);
+            plan.push((slot, frames));
+        }
+        let replies = self.scatter_gather(pool, &plan)?;
+        let mut out = Vec::with_capacity(shards.len());
+        for (slot, mut bodies) in replies.into_iter().enumerate() {
+            let op_body = bodies.pop().expect("one reply per frame");
+            // install acks precede the op reply; a rejected install
+            // (bad table, version skew) fails the request loudly
+            for ack in &bodies {
+                if let Err(e) = open_response(ack) {
+                    pool[slot].installed = None;
+                    return Err(EngineError::Backend(format!(
+                        "remote: worker {slot} rejected InstallCtx: {e}"
+                    )));
+                }
+            }
+            if body_status(&op_body) == Some(STATUS_STALE_EPOCH) {
+                // the session lost (or never had) our epoch: install a
+                // fresh one and retry exactly once
+                self.reinstalls.fetch_add(1, Ordering::Relaxed);
+                let epoch = self.next_epoch.fetch_add(1, Ordering::Relaxed) + 1;
+                let frames = vec![
+                    encode_install_request(epoch, self.priority, ctx),
+                    shards[slot].1(epoch),
+                ];
+                self.installs.fetch_add(1, Ordering::Relaxed);
+                pool[slot].installed = Some((fingerprint, epoch));
+                let mut retry =
+                    self.scatter_gather(pool, &[(slot, frames)])?;
+                let mut bodies = retry.pop().expect("one plan entry");
+                let retried = bodies.pop().expect("op reply");
+                if let Err(e) = open_response(&bodies[0]) {
+                    pool[slot].installed = None;
+                    return Err(EngineError::Backend(format!(
+                        "remote: worker {slot} rejected InstallCtx on \
+                         stale-epoch retry: {e}"
+                    )));
+                }
+                if body_status(&retried) == Some(STATUS_STALE_EPOCH) {
+                    pool[slot].installed = None;
+                    return Err(EngineError::Backend(format!(
+                        "remote: worker {slot} still reports a stale epoch \
+                         after re-install — protocol desync"
+                    )));
+                }
+                out.push(retried);
+            } else {
+                out.push(op_body);
+            }
+        }
+        Ok(out)
     }
 
     /// Measure this pool's cost-model legs with real round-trips:
     /// `dispatch_ns` is the best of 8 pings (pure frame + socket + op
     /// overhead), `ns_per_ptr` the marginal per-pointer cost of a
     /// pool-wide increment batch.  Returns `(ns_per_ptr, dispatch_ns)`
-    /// — the same shape as `Leon3Engine::calibrate`.
+    /// — the same shape as `Leon3Engine::calibrate`.  With epoch
+    /// sessions the first increment installs the ctx and the best-of-3
+    /// then measures the steady state.
     pub fn calibrate(&self) -> Result<(f64, f64), EngineError> {
         let mut dispatch_ns = f64::MAX;
         for _ in 0..8 {
@@ -824,9 +1155,9 @@ impl RemoteEngine {
     pub fn ping(&self) -> Result<(), EngineError> {
         let mut pool = self.lock_pool()?;
         self.ensure_pool(&mut pool)?;
-        let frames = [encode_simple_request(Op::Ping)];
-        let replies = self.scatter_gather(&mut pool, &frames)?;
-        open_response(&replies[0]).map(|_| ())
+        let plan = [(0usize, vec![encode_simple_request(Op::Ping)])];
+        let replies = self.scatter_gather(&mut pool, &plan)?;
+        open_response(&replies[0][0]).map(|_| ())
     }
 
     /// Shared map-request path for translate/increment.
@@ -840,22 +1171,22 @@ impl RemoteEngine {
         self.ensure_pool(&mut pool)?;
         let k = self.fanout(batch.len(), pool.len());
         let chunk = batch.len().div_ceil(k);
-        let mut frames = Vec::with_capacity(k);
+        let mut encoders: Vec<(usize, Box<dyn Fn(u64) -> Vec<u8> + '_>)> =
+            Vec::with_capacity(k);
         for i in 0..k {
             // Clamp both bounds: ceil-sized chunks can exhaust the
             // batch before the last shard, leaving a legal empty range.
             let lo = (i * chunk).min(batch.len());
             let hi = ((i + 1) * chunk).min(batch.len());
-            let frame = encode_map_request(
-                op,
-                ctx,
-                &batch.ptrs[lo..hi],
-                &batch.incs[lo..hi],
-            );
-            check_frame_budget(frame.len(), hi - lo)?;
-            frames.push(frame);
+            let (ptrs, incs) = (&batch.ptrs[lo..hi], &batch.incs[lo..hi]);
+            encoders.push((
+                hi - lo,
+                Box::new(move |epoch| encode_map_request(op, epoch, ptrs, incs)),
+            ));
         }
-        self.scatter_gather(&mut pool, &frames)
+        let shards: Vec<(usize, &dyn Fn(u64) -> Vec<u8>)> =
+            encoders.iter().map(|(n, f)| (*n, f.as_ref() as _)).collect();
+        self.session_exchange(&mut pool, ctx, &shards)
     }
 }
 
@@ -864,7 +1195,7 @@ impl AddressEngine for RemoteEngine {
         "remote"
     }
 
-    /// The workers run [`AutoEngine`], which serves every layout.
+    /// The workers run the host engines, which serve every layout.
     fn supports(&self, _layout: &ArrayLayout) -> bool {
         true
     }
@@ -951,7 +1282,8 @@ impl AddressEngine for RemoteEngine {
             self.fanout(steps, pool.len())
         };
         let chunk = steps.div_ceil(k);
-        let mut frames = Vec::with_capacity(k);
+        let mut encoders: Vec<(usize, Box<dyn Fn(u64) -> Vec<u8> + '_>)> =
+            Vec::with_capacity(k);
         for i in 0..k {
             let lo = (i * chunk).min(steps);
             let hi = ((i + 1) * chunk).min(steps);
@@ -960,12 +1292,16 @@ impl AddressEngine for RemoteEngine {
             // pointer by the composition law.
             let shard_start =
                 increment_general(&start, inc * lo as u64, ctx.layout());
-            let frame =
-                encode_walk_request(ctx, shard_start, inc, (hi - lo) as u64);
-            check_frame_budget(frame.len(), hi - lo)?;
-            frames.push(frame);
+            encoders.push((
+                hi - lo,
+                Box::new(move |epoch| {
+                    encode_walk_request(epoch, shard_start, inc, (hi - lo) as u64)
+                }),
+            ));
         }
-        let replies = self.scatter_gather(&mut pool, &frames)?;
+        let shards: Vec<(usize, &dyn Fn(u64) -> Vec<u8>)> =
+            encoders.iter().map(|(n, f)| (*n, f.as_ref() as _)).collect();
+        let replies = self.session_exchange(&mut pool, ctx, &shards)?;
         drop(pool);
         let mut spliced = BatchOut::new();
         for body in &replies {
@@ -1003,23 +1339,26 @@ impl Drop for RemoteEngine {
     fn drop(&mut self) {
         if let Ok(mut pool) = self.pool.lock() {
             for w in pool.iter_mut() {
-                // Best-effort graceful shutdown, then the hammer — a
-                // wedged worker must not outlive its supervisor.
+                // Best-effort graceful session end, then (spawn mode)
+                // the hammer — a wedged worker must not outlive its
+                // supervisor.
                 let _ =
                     write_frame(&mut w.stream, &encode_simple_request(Op::Shutdown));
                 w.reap();
             }
             pool.clear();
         }
-        let _ = std::fs::remove_dir(&self.dir);
+        if let WorkerMode::Spawn { dir, .. } = &self.mode {
+            let _ = std::fs::remove_dir(dir);
+        }
     }
 }
 
-/// A spawned remote pool bundled with the pricing the selector should
-/// use for it — what `Machine::install_remote`,
-/// `coordinator::engine_report_with` and the CLI's `--remote` flags
-/// share, so every core/runtime prices the *same* pool with the *same*
-/// measured legs (calibrating per core would spam round-trips).
+/// A remote pool bundled with the pricing the selector should use for
+/// it — what `Machine::install_remote`,
+/// `coordinator::engine_report_with` and the CLI's `--remote`/`--daemon`
+/// flags share, so every core/runtime prices the *same* pool with the
+/// *same* measured legs (calibrating per core would spam round-trips).
 #[derive(Clone)]
 pub struct RemoteTier {
     pub engine: Arc<RemoteEngine>,
@@ -1053,7 +1392,38 @@ impl RemoteTier {
         )
     }
 
-    /// Wrap an already-spawned pool; `forced` picks the zero-cost
+    /// Connect `connections` sessions to a running `pgas-hw daemon`
+    /// and measure the legs.  Daemon-served pricing uses the lower
+    /// [`EngineSelector::DEFAULT_DAEMON_THRESHOLD`]: with epoch
+    /// sessions the steady-state dispatch fee excludes the ctx
+    /// snapshot, so smaller batches clear the bar.
+    pub fn connect(
+        socket: impl Into<PathBuf>,
+        connections: usize,
+    ) -> Result<Self, EngineError> {
+        let engine = Arc::new(RemoteEngine::connect(socket, connections)?);
+        let (ns_per_ptr, dispatch_ns) = engine.calibrate()?;
+        Ok(Self {
+            engine,
+            ns_per_ptr,
+            dispatch_ns,
+            threshold: EngineSelector::DEFAULT_DAEMON_THRESHOLD,
+        })
+    }
+
+    /// [`connect`](Self::connect) with forced zero-cost pricing (every
+    /// eligible window takes the hop — demos and differentials).
+    pub fn connect_forced(
+        socket: impl Into<PathBuf>,
+        connections: usize,
+    ) -> Result<Self, EngineError> {
+        Self::from_engine(
+            Arc::new(RemoteEngine::connect(socket, connections)?.with_min_shard_len(1)),
+            true,
+        )
+    }
+
+    /// Wrap an already-built pool; `forced` picks the zero-cost
     /// pricing, otherwise the legs are measured now.
     pub fn from_engine(
         engine: Arc<RemoteEngine>,
@@ -1110,6 +1480,12 @@ mod tests {
         read_frame(stream).expect("recv").expect("reply frame")
     }
 
+    fn install(stream: &mut UnixStream, epoch: u64, ctx: &EngineCtx) {
+        let reply =
+            roundtrip(stream, &encode_install_request(epoch, false, ctx));
+        open_response(&reply).expect("install ack");
+    }
+
     #[test]
     fn translate_over_the_wire_matches_software() {
         let layout = ArrayLayout::new(3, 112, 5); // CG-style non-pow2
@@ -1125,12 +1501,9 @@ mod tests {
             batch.push(SharedPtr::for_index(&layout, 0, i * 7), i % 13);
         }
         let got = with_loopback(|s| {
-            let req = encode_map_request(
-                Op::Translate,
-                &ctx,
-                &batch.ptrs,
-                &batch.incs,
-            );
+            install(s, 7, &ctx);
+            let req =
+                encode_map_request(Op::Translate, 7, &batch.ptrs, &batch.incs);
             let reply = roundtrip(s, &req);
             let mut out = BatchOut::new();
             decode_batch_response(&reply, &mut out).unwrap();
@@ -1142,22 +1515,24 @@ mod tests {
     }
 
     #[test]
-    fn walk_and_increment_round_trip() {
+    fn walk_and_increment_reuse_one_installed_epoch() {
         let layout = ArrayLayout::new(8, 4, 4);
         let table = BaseTable::regular(4, 1 << 32, 1 << 32);
         let ctx = EngineCtx::new(layout, &table, 1).unwrap();
         let start = SharedPtr::for_index(&layout, 0, 5);
         let (walk_got, inc_got) = with_loopback(|s| {
-            let reply = roundtrip(s, &encode_walk_request(&ctx, start, 3, 41));
+            install(s, 42, &ctx);
+            let reply = roundtrip(s, &encode_walk_request(42, start, 3, 41));
             let mut w = BatchOut::new();
             decode_batch_response(&reply, &mut w).unwrap();
             let mut batch = PtrBatch::new();
             for i in 0..33u64 {
                 batch.push(SharedPtr::for_index(&layout, 0, i), i % 7);
             }
+            // second op on the same epoch: no re-install needed
             let reply = roundtrip(
                 s,
-                &encode_map_request(Op::Increment, &ctx, &batch.ptrs, &batch.incs),
+                &encode_map_request(Op::Increment, 42, &batch.ptrs, &batch.incs),
             );
             let mut p = Vec::new();
             decode_ptrs_response(&reply, &mut p).unwrap();
@@ -1173,6 +1548,70 @@ mod tests {
         let mut want_inc = Vec::new();
         SoftwareEngine.increment(&ctx, &batch, &mut want_inc).unwrap();
         assert_eq!(inc_got, want_inc);
+    }
+
+    /// The acceptance-criteria frame-size assertion: once a ctx is
+    /// installed, steady-state request frames carry **no** ctx snapshot
+    /// — their size is exactly header + epoch + payload, independent of
+    /// the base-table size, while the install frame grows with it.
+    #[test]
+    fn steady_state_frames_carry_no_ctx_snapshot() {
+        const HEADER: usize = 4 + 2 + 1; // magic + version + op
+        for threads in [4u32, 4096] {
+            let layout = ArrayLayout::new(8, 8, threads);
+            let table = BaseTable::regular(threads, 1 << 32, 1 << 32);
+            let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+            let n = 257;
+            let mut batch = PtrBatch::new();
+            for i in 0..n as u64 {
+                batch.push(SharedPtr::for_index(&layout, 0, i), i);
+            }
+            let map =
+                encode_map_request(Op::Translate, 9, &batch.ptrs, &batch.incs);
+            // epoch u64 + count u32 + n × (ptr 20 + inc 8): no layout,
+            // no table, no topology — for ANY table size
+            assert_eq!(map.len(), HEADER + 8 + 4 + n * 28);
+            let walk = encode_walk_request(9, SharedPtr::NULL, 3, 100);
+            assert_eq!(walk.len(), HEADER + 8 + 20 + 8 + 8);
+            // whereas the install frame carries the full snapshot
+            let install = encode_install_request(9, false, &ctx);
+            assert_eq!(
+                install.len(),
+                HEADER + 8 + 1 + (20 + 4 + 8) + (4 + 8 * threads as usize)
+            );
+        }
+    }
+
+    #[test]
+    fn unknown_epoch_draws_a_stale_reply_until_installed() {
+        let layout = ArrayLayout::new(8, 4, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        batch.push(SharedPtr::NULL, 3);
+        with_loopback(|s| {
+            // no ctx installed yet: stale, with the distinct status
+            let reply = roundtrip(
+                s,
+                &encode_map_request(Op::Increment, 5, &batch.ptrs, &batch.incs),
+            );
+            assert_eq!(body_status(&reply), Some(STATUS_STALE_EPOCH));
+            let err = open_response(&reply).unwrap_err();
+            assert!(err.to_string().contains("stale epoch"), "{err}");
+            // install epoch 5, the same request now serves
+            install(s, 5, &ctx);
+            let reply = roundtrip(
+                s,
+                &encode_map_request(Op::Increment, 5, &batch.ptrs, &batch.incs),
+            );
+            assert_eq!(body_status(&reply), Some(STATUS_OK));
+            // a different epoch is stale again (one epoch per session)
+            let reply = roundtrip(
+                s,
+                &encode_map_request(Op::Increment, 6, &batch.ptrs, &batch.incs),
+            );
+            assert_eq!(body_status(&reply), Some(STATUS_STALE_EPOCH));
+        });
     }
 
     #[test]

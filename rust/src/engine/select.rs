@@ -366,6 +366,14 @@ impl EngineSelector {
     /// the measured cost model *could* prefer it are even priced.
     pub const DEFAULT_REMOTE_THRESHOLD: usize = 1 << 16;
 
+    /// Minimum batch size eligible for a **daemon-served** remote tier
+    /// (`RemoteTier::connect`): with epoch sessions the steady-state
+    /// request carries only `epoch + batch` — no ctx snapshot per frame
+    /// — so the dispatch fee is smaller and batches a quarter the size
+    /// of [`DEFAULT_REMOTE_THRESHOLD`](Self::DEFAULT_REMOTE_THRESHOLD)
+    /// are worth pricing.
+    pub const DEFAULT_DAEMON_THRESHOLD: usize = 1 << 14;
+
     /// Cap on the default worker-pool size (campaigns run many
     /// selector-owning runtimes concurrently).
     const MAX_DEFAULT_WORKERS: usize = 8;

@@ -81,6 +81,11 @@
 //!   cargo feature.
 //! * [`coordinator`] — campaign configuration, sweep scheduling, result
 //!   collection and the figure/table reporters.
+//! * [`daemon`] — the multi-tenant address-mapping service (`pgas-hw
+//!   daemon`): many concurrent epoch sessions over one socket, fair
+//!   round-robin admission control with loud load shedding, and the
+//!   Leon3 unit behind an exclusive priority-aware lease;
+//!   `RemoteEngine::connect` is the client.
 //!
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
 //! simulator and benchmarks never touch it at run time.
@@ -90,6 +95,7 @@ pub mod cache;
 pub mod compiler;
 pub mod coordinator;
 pub mod cpu;
+pub mod daemon;
 pub mod engine;
 pub mod isa;
 pub mod leon3;

@@ -16,6 +16,11 @@
 //!                AddressEngine session on a Unix-domain socket
 //!                (spawned and supervised by `RemoteEngine`; runnable
 //!                by hand for debugging)
+//!   daemon       the multi-tenant service tier: serve many concurrent
+//!                epoch sessions over one socket with fair queueing,
+//!                per-tenant quotas and the Leon3 unit behind a
+//!                priority-aware lease; prints the per-tenant stats
+//!                table on exit
 //!
 //! (Hand-rolled argument parsing: the offline environment vendors no
 //! clap.)
@@ -36,26 +41,35 @@ use pgas_hw::util::rng::Xoshiro256;
 use pgas_hw::{area, isa, leon3};
 
 fn usage() -> &'static str {
-    "usage: pgas-hw <run|sweep|leon3|area|disasm|verify|walk|serve-engine> [--key value ...]
+    "usage: pgas-hw <run|sweep|leon3|area|disasm|verify|walk|serve-engine|daemon> [--key value ...]
   run    --kernel EP|IS|CG|MG|FT --variant unopt|manual|hw
          --model atomic|timing|detailed --cores N [--scale F]
          [--no-lookahead]  (disable batched PGAS-increment windows;
                             cycle totals are identical either way)
          [--remote N]      (spawn an N-process remote mapping pool,
                             measured pricing)
-         [--remote-fast]   (price the pool as a dedicated service so
-                            eligible windows actually take the hop)
+         [--daemon PATH]   (connect to a running `pgas-hw daemon`
+                            instead of spawning workers; exclusive
+                            with --remote; [--daemon-conns N] sessions)
+         [--remote-fast]   (price the pool/daemon as a dedicated
+                            service so eligible windows take the hop)
   sweep  [--kernels ..] [--models ..] [--cores 1,2,4,..] [--scale F]
          [--config campaign.cfg] [--out results/]
-         [--remote N] [--remote-fast]  (add the remote tier to the
-                                        engine report AND every sweep
-                                        point's core selectors)
+         [--remote N | --daemon PATH] [--remote-fast]
+                           (add the remote tier to the engine report
+                            AND every sweep point's core selectors)
   leon3  [--bench vecadd|matmul|all] [--threads 1|2|4] [--tables]
   area
   disasm --kernel K [--variant V] [--full]
   verify [--batches N] [--artifacts DIR]
   walk   [--blocksize B] [--elemsize E] [--threads T] [--inc I]
-  serve-engine --socket PATH   (worker: serve one engine session, exit)"
+  serve-engine --socket PATH   (worker: serve one engine session, exit)
+  daemon --socket PATH [--executors N] [--queue-cap N] [--quota N]
+         [--accel-threshold N] [--sessions N]
+                           (multi-tenant service: epoch sessions, fair
+                            queueing, accelerator leasing; with
+                            --sessions N it exits after N sessions and
+                            prints the per-tenant stats table)"
 }
 
 fn parse_flags(args: &[String]) -> Result<HashMap<String, String>, String> {
@@ -98,6 +112,7 @@ fn main() -> ExitCode {
         "verify" => cmd_verify(&flags),
         "walk" => cmd_walk(&flags),
         "serve-engine" => cmd_serve_engine(&flags),
+        "daemon" => cmd_daemon(&flags),
         _ => Err(format!("unknown command `{cmd}`\n{}", usage())),
     };
     match result {
@@ -118,21 +133,41 @@ fn get_scale(flags: &HashMap<String, String>) -> Result<Scale, String> {
     })
 }
 
-/// Parse `--remote N [--remote-fast]` into a spawned tier (None when
-/// the flag is absent).  `--remote-fast` prices the pool as a dedicated
+/// Parse `--remote N | --daemon PATH` (exclusive) plus `--remote-fast`
+/// into a remote tier (None when both flags are absent).  `--remote N`
+/// spawns and supervises N worker processes; `--daemon PATH` opens
+/// `--daemon-conns` (default 2) epoch sessions to an already-running
+/// `pgas-hw daemon`.  `--remote-fast` prices either as a dedicated
 /// service (zero legs, threshold 1) so the hop is actually taken on one
 /// host; without it the legs are measured and the argmin decides.
 fn parse_remote_tier(
     flags: &HashMap<String, String>,
 ) -> Result<Option<RemoteTier>, String> {
+    let forced = flags.contains_key("remote-fast");
+    if let Some(path) = flags.get("daemon") {
+        if flags.contains_key("remote") {
+            return Err("--daemon and --remote are exclusive".into());
+        }
+        let conns: usize = match flags.get("daemon-conns") {
+            Some(c) => c.parse().map_err(|_| format!("bad daemon-conns `{c}`"))?,
+            None => 2,
+        };
+        let tier = if forced {
+            RemoteTier::connect_forced(path, conns)
+        } else {
+            RemoteTier::connect(path, conns)
+        }
+        .map_err(|e| e.to_string())?;
+        return Ok(Some(tier));
+    }
     let Some(n) = flags.get("remote") else {
-        if flags.contains_key("remote-fast") {
-            return Err("--remote-fast requires --remote N".into());
+        if forced {
+            return Err("--remote-fast requires --remote N or --daemon PATH".into());
         }
         return Ok(None);
     };
     let workers: usize = n.parse().map_err(|_| format!("bad remote `{n}`"))?;
-    let tier = if flags.contains_key("remote-fast") {
+    let tier = if forced {
         RemoteTier::spawn_forced(workers)
     } else {
         RemoteTier::spawn(workers)
@@ -495,6 +530,40 @@ fn cmd_verify(flags: &HashMap<String, String>) -> Result<(), String> {
 fn cmd_serve_engine(flags: &HashMap<String, String>) -> Result<(), String> {
     let socket = flags.get("socket").ok_or("missing --socket")?;
     pgas_hw::engine::remote::serve(std::path::Path::new(socket))
+}
+
+/// The multi-tenant service tier: serve many concurrent epoch sessions
+/// over one socket.  Blocks until `--sessions N` sessions have been
+/// served (forever without it), then prints the daemon + per-tenant
+/// stats tables.
+fn cmd_daemon(flags: &HashMap<String, String>) -> Result<(), String> {
+    let mut cfg = pgas_hw::daemon::DaemonCfg::new(
+        flags.get("socket").ok_or("missing --socket")?,
+    );
+    let num = |key: &str, into: &mut usize| -> Result<(), String> {
+        if let Some(v) = flags.get(key) {
+            *into = v.parse().map_err(|_| format!("bad {key} `{v}`"))?;
+        }
+        Ok(())
+    };
+    num("executors", &mut cfg.executors)?;
+    num("queue-cap", &mut cfg.queue_cap)?;
+    num("quota", &mut cfg.quota)?;
+    num("accel-threshold", &mut cfg.accel_threshold)?;
+    if let Some(v) = flags.get("sessions") {
+        cfg.max_sessions =
+            Some(v.parse().map_err(|_| format!("bad sessions `{v}`"))?);
+    }
+    eprintln!(
+        "daemon: serving on {} ({} executors, queue {}, quota {}/tenant)",
+        cfg.socket.display(),
+        cfg.executors,
+        cfg.queue_cap,
+        cfg.quota
+    );
+    let stats = pgas_hw::daemon::serve(cfg)?;
+    println!("{}", coordinator::daemon_table(&stats).render());
+    Ok(())
 }
 
 /// Trace a pointer walk through a layout with whichever backend the

@@ -75,6 +75,11 @@ pub struct MachineResult {
     /// through which `AddressEngine` backend vs scalar), summed over
     /// cores — recorded per run by `npb::RunOutcome`.
     pub engine_mix: EngineMix,
+    /// Client-side session/recovery counters of the installed remote
+    /// tier (`None` when the run had no remote pool): installs,
+    /// epoch hits, stale-epoch re-installs, per-connection reconnects
+    /// and whole-pool restarts.
+    pub remote_client: Option<crate::engine::RemoteClientStats>,
 }
 
 impl MachineResult {
@@ -154,6 +159,35 @@ impl MachineResult {
                 );
             }
         }
+        // client-side service counters, present only when a remote
+        // tier (worker pool or daemon) was installed for the run
+        if let Some(rc) = &self.remote_client {
+            put(
+                "remote.ctx_installs",
+                rc.installs.to_string(),
+                "InstallCtx messages sent (ctx changes)",
+            );
+            put(
+                "remote.epoch_hits",
+                rc.epoch_hits.to_string(),
+                "requests served against an installed epoch",
+            );
+            put(
+                "remote.epoch_reinstalls",
+                rc.reinstalls.to_string(),
+                "stale-epoch replies answered by re-install",
+            );
+            put(
+                "remote.reconnects",
+                rc.reconnects.to_string(),
+                "individual worker connections healed",
+            );
+            put(
+                "remote.restarts",
+                rc.restarts.to_string(),
+                "whole-pool rebuilds after failed heals",
+            );
+        }
         put("cache.l1d_misses", self.l1d_misses.to_string(), "sum over cores");
         put("cache.l2_misses", self.l2_misses.to_string(), "shared L2");
         put(
@@ -191,6 +225,9 @@ pub struct Machine {
     cpus: Vec<Box<dyn Cpu>>,
     pub mem: MemSystem,
     shared: SharedLevel,
+    /// The installed remote tier, kept so `run` can snapshot its
+    /// client-side counters into `MachineResult::remote_client`.
+    remote: Option<crate::engine::RemoteTier>,
 }
 
 impl Machine {
@@ -209,6 +246,7 @@ impl Machine {
             cpus,
             mem: MemSystem::new(cfg.cores),
             shared: SharedLevel::new(cfg.cores as usize, cfg.lat),
+            remote: None,
         };
         for cpu in &mut m.cpus {
             cpu.lookahead_mut().set_enabled(cfg.lookahead);
@@ -241,6 +279,7 @@ impl Machine {
         for cpu in &mut self.cpus {
             cpu.lookahead_mut().install_remote(tier);
         }
+        self.remote = Some(tier.clone());
     }
 
     /// Run `prog` SPMD on all cores to completion.
@@ -346,6 +385,10 @@ impl Machine {
             per_core,
             freq_ghz: self.cfg.freq_ghz,
             engine_mix,
+            remote_client: self
+                .remote
+                .as_ref()
+                .map(|tier| tier.engine.client_stats()),
         }
     }
 }

@@ -23,7 +23,7 @@ pub use algorithm::{increment_general, increment_pow2, SOFT_INC_OP_COUNT};
 pub use base_table::BaseTable;
 pub use cursor::WalkCursor;
 pub use pack::{pack, unpack, PackedPtr, PHASE_BITS, THREAD_BITS, VA_BITS};
-pub use wire::{WireError, WireReader, WireWriter};
+pub use wire::{ctx_fingerprint, CtxSnapshot, WireError, WireReader, WireWriter};
 
 use crate::util::{is_pow2, log2_exact};
 
@@ -177,7 +177,7 @@ impl Locality {
 }
 
 /// Machine topology used for locality classification.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Topology {
     pub log2_threads_per_mc: u32,
     pub log2_threads_per_node: u32,

@@ -16,6 +16,62 @@
 
 use super::{ArrayLayout, BaseTable, Locality, SharedPtr, Topology};
 
+/// Everything an [`EngineCtx`](crate::engine::EngineCtx) carries, as an
+/// owned value — the payload of the remote protocol's `InstallCtx`
+/// message (`engine::remote`).  A client ships one snapshot per
+/// *session epoch*; steady-state requests then reference it by epoch
+/// number instead of re-serializing layout + base table + topology on
+/// every frame.
+///
+/// Wire shape (via [`WireWriter::put_ctx_snapshot`]): `layout` (20 B),
+/// `mythread u32`, `topology` (8 B), `table` (4 + 8·numthreads B) — the
+/// exact field order protocol v1 used inline in every request, so the
+/// encoding is the same bytes, just sent once.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CtxSnapshot {
+    pub layout: ArrayLayout,
+    pub mythread: u32,
+    pub topo: Topology,
+    pub table: BaseTable,
+}
+
+impl CtxSnapshot {
+    /// [`ctx_fingerprint`] over this snapshot's fields.
+    pub fn fingerprint(&self) -> u64 {
+        ctx_fingerprint(&self.layout, self.mythread, &self.topo, &self.table)
+    }
+}
+
+/// FNV-1a over every field a [`CtxSnapshot`] serializes — the remote
+/// client's cheap "did the ctx change since the installed epoch?" test
+/// (callable on a borrowed `EngineCtx`'s parts without building a
+/// snapshot).  Collisions would silently serve a stale ctx, so the full
+/// 64-bit digest is compared (never truncated).
+pub fn ctx_fingerprint(
+    layout: &ArrayLayout,
+    mythread: u32,
+    topo: &Topology,
+    table: &BaseTable,
+) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |v: u64| {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    mix(layout.blocksize);
+    mix(layout.elemsize);
+    mix(layout.numthreads as u64);
+    mix(mythread as u64);
+    mix(topo.log2_threads_per_mc as u64);
+    mix(topo.log2_threads_per_node as u64);
+    for &b in table.bases() {
+        mix(b);
+    }
+    h
+}
+
 /// Why a wire buffer failed to decode.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum WireError {
@@ -119,6 +175,15 @@ impl WireWriter {
     /// The condition code as one byte.
     pub fn put_locality(&mut self, l: Locality) {
         self.put_u8(l as u8);
+    }
+
+    /// A full [`CtxSnapshot`]: layout, executing thread, topology, base
+    /// table — the `InstallCtx` payload.
+    pub fn put_ctx_snapshot(&mut self, c: &CtxSnapshot) {
+        self.put_layout(&c.layout);
+        self.put_u32(c.mythread);
+        self.put_topology(&c.topo);
+        self.put_table(&c.table);
     }
 }
 
@@ -225,6 +290,15 @@ impl<'a> WireReader<'a> {
             .ok_or(WireError::Invalid("locality code above 3"))
     }
 
+    /// Exact inverse of [`WireWriter::put_ctx_snapshot`].
+    pub fn get_ctx_snapshot(&mut self) -> Result<CtxSnapshot, WireError> {
+        let layout = self.get_layout()?;
+        let mythread = self.get_u32()?;
+        let topo = self.get_topology()?;
+        let table = self.get_table()?;
+        Ok(CtxSnapshot { layout, mythread, topo, table })
+    }
+
     /// Assert the whole buffer was consumed (frame hygiene: trailing
     /// bytes mean the two sides disagree about the message shape).
     pub fn finish(self) -> Result<(), WireError> {
@@ -323,6 +397,42 @@ mod tests {
         let mut r = WireReader::new(&buf);
         r.get_u8().unwrap();
         assert_eq!(r.finish(), Err(WireError::Trailing(1)));
+    }
+
+    #[test]
+    fn ctx_snapshot_round_trips_and_fingerprints_every_field() {
+        let snap = CtxSnapshot {
+            layout: ArrayLayout::new(3, 112, 5),
+            mythread: 2,
+            topo: Topology { log2_threads_per_mc: 1, log2_threads_per_node: 3 },
+            table: BaseTable::regular(5, 1 << 32, 1 << 32),
+        };
+        let mut w = WireWriter::new();
+        w.put_ctx_snapshot(&snap);
+        let buf = w.into_bytes();
+        // same bytes as the protocol-v1 inline order: layout 20 +
+        // mythread 4 + topo 8 + table 4+8n
+        assert_eq!(buf.len(), 20 + 4 + 8 + 4 + 8 * 5);
+        let mut r = WireReader::new(&buf);
+        assert_eq!(r.get_ctx_snapshot().unwrap(), snap);
+        r.finish().unwrap();
+
+        // the fingerprint must react to every field a request's result
+        // can depend on — a collision here would serve a stale ctx
+        let fp = snap.fingerprint();
+        let mut other = snap.clone();
+        other.mythread = 3;
+        assert_ne!(fp, other.fingerprint(), "mythread not fingerprinted");
+        let mut other = snap.clone();
+        other.layout.blocksize = 4;
+        assert_ne!(fp, other.fingerprint(), "layout not fingerprinted");
+        let mut other = snap.clone();
+        other.topo.log2_threads_per_node = 4;
+        assert_ne!(fp, other.fingerprint(), "topology not fingerprinted");
+        let mut other = snap.clone();
+        other.table = BaseTable::regular(5, 1 << 33, 1 << 32);
+        assert_ne!(fp, other.fingerprint(), "table bases not fingerprinted");
+        assert_eq!(fp, snap.clone().fingerprint(), "must be deterministic");
     }
 
     #[test]

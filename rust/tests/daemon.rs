@@ -1,0 +1,149 @@
+//! The daemon tier end to end: one multi-tenant `pgas-hw` daemon
+//! serving several concurrent `RemoteEngine::connect` sessions.
+//!
+//! * Soak: three client sessions run concurrently against one
+//!   in-process daemon, each mapping a *different* NPB kernel's shared
+//!   arrays (different layouts → different epochs per session), and
+//!   every reply is bit-identical to the in-process `AutoEngine`.
+//!   Steady-state traffic rides installed epochs (`epoch_hits` > 0,
+//!   zero reinstalls) and nothing is shed at default quotas.
+//! * CLI: the real `pgas-hw daemon --socket S --sessions N` binary
+//!   (via `CARGO_BIN_EXE_pgas-hw`) serves N sessions, exits on its
+//!   own, and prints the per-tenant stats table on stdout.
+//!
+//! Unix-domain sockets only — no network — so the suite stays
+//! tier-1-safe.
+
+use std::process::{Command, Stdio};
+
+use pgas_hw::compiler::SourceVariant;
+use pgas_hw::daemon::{scratch_socket, Daemon, DaemonCfg};
+use pgas_hw::engine::{
+    AddressEngine, AutoEngine, BatchOut, EngineCtx, PtrBatch, RemoteEngine,
+};
+use pgas_hw::npb::{self, Kernel, Scale};
+use pgas_hw::sptr::{ArrayLayout, BaseTable, SharedPtr};
+use pgas_hw::util::rng::Xoshiro256;
+
+fn sample_batch(layout: &ArrayLayout, nelems: u64, seed: u64) -> PtrBatch {
+    let mut rng = Xoshiro256::new(seed);
+    let n = 211;
+    let mut batch = PtrBatch::with_capacity(n);
+    for _ in 0..n {
+        batch.push(
+            SharedPtr::for_index(layout, 0, rng.below(nelems.max(1))),
+            rng.below(1 << 9),
+        );
+    }
+    batch
+}
+
+/// One tenant's workload: map every shared array of `kernel` through
+/// the daemon session for `rounds` rounds, checking each reply against
+/// the in-process engine.  Round 2+ reuses the epochs installed in
+/// round 1 — that is the steady state the telemetry must show.
+fn soak_session(socket: &std::path::Path, kernel: Kernel, rounds: usize) {
+    let threads = 4;
+    let remote = RemoteEngine::connect(socket, 1)
+        .expect("client connects")
+        .with_min_shard_len(1);
+    let built = npb::build(kernel, threads, SourceVariant::Unoptimized, &Scale::quick());
+    let table = BaseTable::regular(threads, 1 << 32, 1 << 32);
+    for round in 0..rounds {
+        for a in built.rt.arrays() {
+            let ctx = EngineCtx::new(a.layout, &table, 1).unwrap();
+            let batch = sample_batch(&a.layout, a.nelems, 0xD0C5 ^ round as u64);
+            let (mut got, mut want) = (BatchOut::new(), BatchOut::new());
+            remote.translate(&ctx, &batch, &mut got).unwrap();
+            AutoEngine.translate(&ctx, &batch, &mut want).unwrap();
+            assert_eq!(got, want, "{kernel} {} translate round {round}", a.name);
+            let (mut gp, mut wp) = (Vec::new(), Vec::new());
+            remote.increment(&ctx, &batch, &mut gp).unwrap();
+            AutoEngine.increment(&ctx, &batch, &mut wp).unwrap();
+            assert_eq!(gp, wp, "{kernel} {} increment round {round}", a.name);
+            let start = SharedPtr::for_index(&a.layout, a.base_va, 0);
+            remote.walk(&ctx, start, 5, 223, &mut got).unwrap();
+            AutoEngine.walk(&ctx, start, 5, 223, &mut want).unwrap();
+            assert_eq!(got, want, "{kernel} {} walk round {round}", a.name);
+        }
+    }
+    // every layout re-visited after round 1 rode its installed epoch
+    assert!(remote.epoch_hits() >= 1, "{kernel}: no steady-state traffic");
+    assert_eq!(remote.reinstalls(), 0, "{kernel}: nothing should go stale");
+}
+
+#[test]
+fn three_concurrent_sessions_soak_bit_identical_to_auto() {
+    let cfg = DaemonCfg::new(scratch_socket("soak"));
+    let socket = cfg.socket.clone();
+    let daemon = Daemon::spawn(cfg).expect("daemon spawns");
+    let handles: Vec<_> = [Kernel::Is, Kernel::Cg, Kernel::Mg]
+        .into_iter()
+        .map(|kernel| {
+            let socket = socket.clone();
+            std::thread::spawn(move || soak_session(&socket, kernel, 3))
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("soak session panicked");
+    }
+    let stats = daemon.shutdown().expect("clean shutdown");
+    assert_eq!(stats.sessions, 3, "one tenant per client connection");
+    assert_eq!(stats.shed, 0, "default quotas must not shed this load");
+    assert_eq!(stats.stale_epochs, 0);
+    assert!(stats.epoch_hits >= 3, "each tenant reused installed epochs");
+    for t in &stats.tenants {
+        assert!(t.served > 0, "tenant {} served nothing", t.id);
+        assert!(t.installs > 0, "tenant {} installed no epoch", t.id);
+        assert!(t.ptrs > 0, "tenant {} mapped no pointers", t.id);
+    }
+}
+
+#[test]
+fn daemon_cli_exits_after_sessions_and_prints_the_table() {
+    let socket = scratch_socket("cli");
+    let mut child = Command::new(env!("CARGO_BIN_EXE_pgas-hw"))
+        .arg("daemon")
+        .arg("--socket")
+        .arg(&socket)
+        .args(["--sessions", "2"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn daemon CLI");
+    // scope the client so both sessions close before we wait on the
+    // child; `connect` retries until the daemon has bound the socket
+    let outcome = std::panic::catch_unwind(|| {
+        let remote = RemoteEngine::connect(&socket, 2)
+            .expect("connect to CLI daemon")
+            .with_min_shard_len(1); // fan out over both sessions
+        let layout = ArrayLayout::new(4, 8, 6);
+        let table = BaseTable::regular(6, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 1).unwrap();
+        let mut batch = PtrBatch::new();
+        for i in 0..321u64 {
+            batch.push(SharedPtr::for_index(&layout, 0, i), i % 7);
+        }
+        let (mut got, mut want) = (BatchOut::new(), BatchOut::new());
+        remote.translate(&ctx, &batch, &mut got).unwrap();
+        AutoEngine.translate(&ctx, &batch, &mut want).unwrap();
+        assert_eq!(got, want);
+    });
+    if outcome.is_err() {
+        let _ = child.kill(); // don't leak a serve-forever process
+        std::panic::resume_unwind(outcome.unwrap_err());
+    }
+    // both sessions closed: `--sessions 2` means the daemon exits now
+    let out = child.wait_with_output().expect("daemon exits");
+    assert!(
+        out.status.success(),
+        "daemon CLI failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("Daemon sessions"), "no stats table:\n{stdout}");
+    assert!(stdout.contains("epoch hits"), "missing column:\n{stdout}");
+    assert!(stdout.contains("leon3 lease"), "missing lease line:\n{stdout}");
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("daemon: serving on"), "no banner:\n{stderr}");
+}
