@@ -19,6 +19,9 @@
 //!   in-process daemon on a wide (4096-thread) base table: the
 //!   per-request dispatch overhead `InstallCtx{epoch}` amortizes away,
 //!   gated so steady state never costs more than re-shipping the ctx.
+//! * `resilience` — the degradation ladder's price: a healthy selector
+//!   vs one whose every dispatch draws an injected fault and is
+//!   transparently re-served by the chaos-exempt fallback floor.
 //!
 //! `--quick` (the CI smoke leg) shrinks batch sizes and iteration
 //! counts.  The xla-batch backend joins automatically when built with
@@ -316,6 +319,54 @@ fn main() {
          {steady_ns_per_req:.0} vs {snapshot_ns_per_req:.0} ns/req"
     );
 
+    // ---- resilience: what the degradation ladder costs.  A healthy
+    // selector serves the batch on its cost-model argmin; a chaos-armed
+    // one (`error=1.0`) sees every primary dispatch fail injected and
+    // transparently re-serves it on the chaos-exempt fallback floor.
+    // `reset_health()` each iteration keeps the breaker closed so every
+    // iteration measures the same inject -> fail -> re-serve path, not
+    // a quarantined steady state.  Batch below the shard threshold so
+    // both sides stay on the scalar tiers. ----
+    use pgas_hw::engine::{EngineSelector, FaultPlan, FaultSpec};
+    use std::sync::Arc;
+    let res_n: usize = if quick { 1 << 11 } else { 1 << 12 };
+    let res_batch = random_batch(&layout, res_n, 0xFA11);
+    let mut rincs = Vec::new();
+    let healthy = EngineSelector::new();
+    let r = bench(
+        &format!("selector healthy increment x{res_n}"),
+        warmup,
+        iters,
+        || {
+            healthy.increment(&ctx, &res_batch, &mut rincs).unwrap();
+            black_box(&rincs);
+        },
+    );
+    let healthy_ns_per_ptr = r.mean_secs() * 1e9 / res_n as f64;
+    let storm = Arc::new(FaultPlan::new(
+        FaultSpec::parse("0xFA11:error=1.0").unwrap(),
+    ));
+    let degraded = EngineSelector::new().with_chaos(Arc::clone(&storm));
+    let r = bench(
+        &format!("selector degraded (error=1.0) increment x{res_n}"),
+        warmup,
+        iters,
+        || {
+            degraded.reset_health();
+            degraded.increment(&ctx, &res_batch, &mut rincs).unwrap();
+            black_box(&rincs);
+        },
+    );
+    let fallback_ns_per_ptr = r.mean_secs() * 1e9 / res_n as f64;
+    let fallback_overhead = fallback_ns_per_ptr / healthy_ns_per_ptr;
+    println!(
+        "  -> resilience: {healthy_ns_per_ptr:.1} ns/ptr healthy vs \
+         {fallback_ns_per_ptr:.1} ns/ptr re-served through the fallback \
+         floor ({fallback_overhead:.2}x; {} faults absorbed)",
+        storm.injected()
+    );
+    assert!(storm.injected() > 0, "chaos selector never drew a fault");
+
     // Merge (not overwrite): BENCH_engine.json is shared with the
     // fig11-14 model benches, so each target may run in any order and
     // re-running one replaces only its own sections.
@@ -383,6 +434,18 @@ fn main() {
              \"epoch_hits\": {steady_hits}, \
              \"sessions\": {}}}",
             dstats.sessions
+        ),
+    );
+    merge_bench_json(
+        OUT,
+        "resilience",
+        &format!(
+            "{{\"batch\": {res_n}, \
+             \"healthy_ns_per_ptr\": {healthy_ns_per_ptr:.1}, \
+             \"fallback_ns_per_ptr\": {fallback_ns_per_ptr:.1}, \
+             \"fallback_overhead\": {fallback_overhead:.2}, \
+             \"injected\": {}}}",
+            storm.injected()
         ),
     );
     println!("merged host sections into BENCH_engine.json");

@@ -16,7 +16,10 @@ use std::sync::{Arc, Mutex};
 
 use crate::compiler::SourceVariant;
 use crate::cpu::CpuModel;
-use crate::engine::{AddressEngine, EngineSelector, Leon3Engine, RemoteTier};
+use crate::engine::{
+    AddressEngine, EngineChoice, EngineSelector, FaultSpec, HealthStats,
+    Leon3Engine, RemoteTier,
+};
 use crate::npb::{self, Kernel, PaperVariant, RunOutcome, Scale};
 use crate::util::table::{fnum, Table};
 
@@ -30,6 +33,11 @@ pub struct Campaign {
     pub scale: Scale,
     /// Host worker threads.
     pub jobs: usize,
+    /// Seeded fault injection: when set, every run's selectors are
+    /// armed with this [`FaultSpec`] (`--chaos` on the CLI).  Transient
+    /// injected faults are absorbed by the fallback ladder, so the
+    /// figures are unchanged — only `health`/`degrade` telemetry moves.
+    pub chaos: Option<FaultSpec>,
 }
 
 impl Default for Campaign {
@@ -43,6 +51,7 @@ impl Default for Campaign {
             jobs: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(4),
+            chaos: None,
         }
     }
 }
@@ -57,6 +66,7 @@ impl Campaign {
             variants: PaperVariant::ALL.to_vec(),
             scale: Scale::quick(),
             jobs: Self::default().jobs,
+            chaos: None,
         }
     }
 
@@ -100,6 +110,7 @@ impl Campaign {
         let queue = Arc::new(Mutex::new(points));
         let (tx, rx) = mpsc::channel::<RunOutcome>();
         let scale = self.scale;
+        let chaos = self.chaos;
         let jobs = self.jobs.max(1);
         let mut handles = Vec::new();
         for _ in 0..jobs {
@@ -110,7 +121,7 @@ impl Campaign {
                 let pt = { queue.lock().unwrap().pop() };
                 match pt {
                     Some((k, v, m, c)) => {
-                        let out = npb::run_opts(
+                        let out = npb::run_opts_with(
                             k,
                             v,
                             m,
@@ -118,6 +129,7 @@ impl Campaign {
                             &scale,
                             true,
                             remote.as_ref(),
+                            chaos.as_ref(),
                         );
                         if tx.send(out).is_err() {
                             return;
@@ -511,6 +523,47 @@ pub fn daemon_table(stats: &crate::daemon::DaemonStats) -> Table {
     t
 }
 
+/// Per-tier health report of a chaos (or plain) run: one row per
+/// backend tier that saw traffic or breaker activity, with the ladder
+/// aggregates in the title.  `pgas-hw run/sweep --chaos` print this
+/// next to the figure tables so the degradation a seeded storm caused
+/// is visible beside the (unchanged) simulated results.
+pub fn health_table(h: &HealthStats) -> Table {
+    let title = format!(
+        "Engine health ({} dispatches, {} fallback re-serves, {} deadline \
+         misses, {} injected faults, {} tier(s) quarantined)",
+        h.dispatches,
+        h.fallback_runs,
+        h.deadline_misses,
+        h.injected_faults,
+        h.quarantined(),
+    );
+    let mut t = Table::new(
+        &title,
+        &[
+            "tier", "successes", "failures", "fail%", "trips", "probes",
+            "breaker",
+        ],
+    );
+    for choice in EngineChoice::ALL {
+        let tier = &h.tiers[choice.index()];
+        let total = tier.successes + tier.failures;
+        if total == 0 && tier.trips == 0 {
+            continue; // never dispatched to, nothing to report
+        }
+        t.row(&[
+            choice.name().into(),
+            tier.successes.to_string(),
+            tier.failures.to_string(),
+            fnum(tier.failures as f64 / total.max(1) as f64 * 100.0, 1),
+            tier.trips.to_string(),
+            tier.probes.to_string(),
+            tier.state.name().into(),
+        ]);
+    }
+    t
+}
+
 /// Shared driver for the per-figure `cargo bench` targets: regenerate
 /// the figure's table at bench scale, then wall-time the representative
 /// point with the micro-bench harness.
@@ -556,6 +609,7 @@ fn run_figure_campaign(
         variants: PaperVariant::ALL.to_vec(),
         scale,
         jobs: Campaign::default().jobs,
+        chaos: None,
     };
     let t0 = std::time::Instant::now();
     let outs = campaign.run(false);
@@ -664,6 +718,7 @@ mod tests {
             variants: vec![PaperVariant::Unopt],
             scale: Scale::quick(),
             jobs: 1,
+            chaos: None,
         };
         let pts = c.points();
         assert!(pts.iter().any(|p| p.0 == Kernel::Ft && p.3 == 16));
@@ -713,6 +768,7 @@ mod tests {
             variants: PaperVariant::ALL.to_vec(),
             scale: Scale { factor: 4096 },
             jobs: 2,
+            chaos: None,
         };
         let outs = c.run(false);
         assert_eq!(outs.len(), 3);

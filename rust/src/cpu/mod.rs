@@ -227,6 +227,12 @@ pub trait Cpu {
         self.lookahead().mix()
     }
 
+    /// This core's health/degradation telemetry (selector dispatches,
+    /// fallback runs, deadline misses, injected faults, breaker state).
+    fn health(&self) -> crate::engine::HealthStats {
+        self.lookahead().health()
+    }
+
     /// Account `extra` stall cycles imposed from outside (bus contention
     /// computed by the machine-level contention model).
     fn add_stall_cycles(&mut self, extra: u64) {

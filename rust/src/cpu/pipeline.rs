@@ -299,6 +299,24 @@ impl Lookahead {
         tier.apply(&mut self.selector);
     }
 
+    /// Install a seeded engine-fault schedule (the `--chaos` flag)
+    /// into this core's selector.  Injected backend errors and latency
+    /// spikes are absorbed by the selector's health ladder — fallback
+    /// re-serve, circuit breaker, cost-model deadline — so they never
+    /// reach the pipeline; the `health()` counters prove they fired.
+    pub fn install_chaos(&mut self, spec: crate::engine::FaultSpec) {
+        self.selector.set_chaos(std::sync::Arc::new(
+            crate::engine::FaultPlan::new(spec),
+        ));
+    }
+
+    /// Health/degradation telemetry accumulated by this core's
+    /// selector (dispatches, fallback runs, deadline misses, injected
+    /// faults, per-tier breaker states).
+    pub fn health(&self) -> crate::engine::HealthStats {
+        self.selector.health_stats()
+    }
+
     #[inline]
     fn active(&self) -> bool {
         self.enabled && self.operable

@@ -33,13 +33,15 @@ pub mod session;
 
 use std::os::unix::net::{UnixListener, UnixStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::engine::remote::{
-    read_frame, reply_status_body, write_frame, Op, STATUS_SHED,
+    read_frame, reply_status_body, write_frame, Op, STATUS_DRAINING,
+    STATUS_SHED,
 };
+use crate::engine::{FaultPlan, FaultSpec};
 use lease::{AccelLease, LeaseStats};
 use sched::{FairQueue, QueueStats, ShedReason};
 use session::{ExecBackend, SessionHandle, SessionRegistry, TenantStats};
@@ -60,6 +62,10 @@ pub struct DaemonCfg {
     /// Exit after this many sessions have been accepted and served to
     /// completion (`None` = serve forever).
     pub max_sessions: Option<u64>,
+    /// Seeded server-side fault schedule (shed storms, forced stale
+    /// epochs, injected execution errors) applied to every served
+    /// map/walk frame.  `None` = no injection.
+    pub chaos: Option<FaultSpec>,
 }
 
 impl DaemonCfg {
@@ -71,6 +77,7 @@ impl DaemonCfg {
             quota: 64,
             accel_threshold: 8192,
             max_sessions: None,
+            chaos: None,
         }
     }
 }
@@ -85,6 +92,8 @@ pub struct DaemonStats {
     pub epoch_hits: u64,
     pub stale_epochs: u64,
     pub shed: u64,
+    /// Frames refused with `STATUS_DRAINING` during graceful drain.
+    pub drain_refusals: u64,
     pub queue: QueueStats,
     pub lease: LeaseStats,
     pub tenants: Vec<TenantStats>,
@@ -95,6 +104,7 @@ impl DaemonStats {
         let tenants = shared.registry.snapshot();
         let mut s = DaemonStats {
             sessions: tenants.len() as u64,
+            drain_refusals: shared.drain_refusals.load(Ordering::Relaxed),
             queue: shared.queue.stats(),
             lease: shared.exec.lease_stats().unwrap_or_default(),
             tenants,
@@ -121,6 +131,10 @@ struct Shared {
     queue: FairQueue<Job>,
     exec: ExecBackend,
     accepting: AtomicBool,
+    /// Graceful drain: in-flight (queued) requests still finish, but
+    /// every *new* frame is answered `STATUS_DRAINING` by its reader.
+    draining: AtomicBool,
+    drain_refusals: AtomicU64,
     quota: usize,
     queue_cap: usize,
 }
@@ -143,11 +157,17 @@ impl Daemon {
             format!("daemon: bind {}: {e}", cfg.socket.display())
         })?;
         let lease = Arc::new(AccelLease::new());
+        let mut exec = ExecBackend::with_leon3(lease, cfg.accel_threshold);
+        if let Some(spec) = cfg.chaos {
+            exec = exec.with_chaos(Arc::new(FaultPlan::new(spec)));
+        }
         let shared = Arc::new(Shared {
             registry: SessionRegistry::new(),
             queue: FairQueue::new(cfg.queue_cap, cfg.quota),
-            exec: ExecBackend::with_leon3(lease, cfg.accel_threshold),
+            exec,
             accepting: AtomicBool::new(true),
+            draining: AtomicBool::new(false),
+            drain_refusals: AtomicU64::new(0),
             quota: cfg.quota,
             queue_cap: cfg.queue_cap,
         });
@@ -177,6 +197,19 @@ impl Daemon {
         DaemonStats::collect(&self.shared)
     }
 
+    /// Start a graceful drain: everything already admitted to the
+    /// queue finishes and its replies go out, but every frame read
+    /// *after* this call is refused with a `STATUS_DRAINING` reply —
+    /// no session is ever abandoned mid-request.  Idempotent.
+    pub fn begin_drain(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether a graceful drain is in progress.
+    pub fn draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
+    }
+
     /// Block until the accept loop ends (`max_sessions` reached) and
     /// every accepted session has disconnected, then drain the queue
     /// and return final stats.  With `max_sessions: None` this blocks
@@ -187,10 +220,13 @@ impl Daemon {
         self.teardown()
     }
 
-    /// Stop accepting, then as [`wait`](Self::wait).  Callers must
-    /// close their client sessions first — reader threads are joined,
-    /// and a reader lives as long as its client's connection.
+    /// Graceful exit: drain (in-flight requests finish, new frames
+    /// draw `STATUS_DRAINING`), stop accepting, then as
+    /// [`wait`](Self::wait).  Callers must close their client sessions
+    /// — reader threads are joined, and a reader lives as long as its
+    /// client's connection.
     pub fn shutdown(mut self) -> Result<DaemonStats, String> {
+        self.begin_drain();
         self.shared.accepting.store(false, Ordering::SeqCst);
         // wake the blocking accept() with a throwaway connection
         let _ = UnixStream::connect(&self.socket);
@@ -272,6 +308,22 @@ fn reader_loop(shared: &Shared, sess: &Arc<SessionHandle>, mut stream: UnixStrea
         // byte 6 (magic u32 + version u16) is the op: a Shutdown frame
         // is the last thing this session will send
         let ends_session = frame.get(6) == Some(&(Op::Shutdown as u8));
+        // draining: whatever is already queued still finishes, but new
+        // frames are refused with the distinct draining status so the
+        // client can fail over instead of waiting on a dying server
+        if shared.draining.load(Ordering::SeqCst) {
+            shared.drain_refusals.fetch_add(1, Ordering::Relaxed);
+            let body = reply_status_body(
+                STATUS_DRAINING,
+                "daemon draining: request refused; in-flight work is \
+                 finishing, re-dispatch elsewhere",
+            );
+            let mut w = sess.writer.lock().expect("session writer");
+            if write_frame(&mut w, &body).is_err() || ends_session {
+                return;
+            }
+            continue;
+        }
         let priority = sess
             .state
             .lock()

@@ -27,11 +27,11 @@ use super::lease::AccelLease;
 use crate::cpu::EngineMix;
 use crate::engine::remote::{
     error_body, ok_header, reply_frame_bytes, reply_status_body, Op, MAGIC,
-    MAX_FRAME, PROTOCOL_VERSION, STATUS_STALE_EPOCH,
+    MAX_FRAME, PROTOCOL_VERSION, STATUS_SHED, STATUS_STALE_EPOCH,
 };
 use crate::engine::{
-    AddressEngine, BatchOut, EngineChoice, EngineCtx, Leon3Engine, Pow2Engine,
-    PtrBatch, SoftwareEngine,
+    AddressEngine, BatchOut, EngineChoice, EngineCtx, FaultPlan, Leon3Engine,
+    Pow2Engine, PtrBatch, SoftwareEngine, WireFault,
 };
 use crate::sptr::{CtxSnapshot, WireReader};
 
@@ -114,6 +114,11 @@ impl SessionState {
 /// plus (optionally) the one Leon3 coprocessor unit behind its lease.
 pub struct ExecBackend {
     accel: Option<AccelBackend>,
+    /// Seeded server-side fault schedule, consulted once per *map/walk*
+    /// frame (never for `InstallCtx`/`Ping`, so the client's re-install
+    /// machinery is exercised against real installs): shed storms,
+    /// forced stale epochs, and injected execution errors.
+    chaos: Option<Arc<FaultPlan>>,
 }
 
 struct AccelBackend {
@@ -127,7 +132,7 @@ impl ExecBackend {
     /// Host engines only — what the single-session `serve-engine`
     /// worker uses (no device to arbitrate).
     pub fn host_only() -> Self {
-        Self { accel: None }
+        Self { accel: None, chaos: None }
     }
 
     /// Host engines plus the Leon3 unit, leased exclusively.  Batches
@@ -141,7 +146,21 @@ impl ExecBackend {
                 lease,
                 threshold: threshold.max(1),
             }),
+            chaos: None,
         }
+    }
+
+    /// Install a seeded server-side fault schedule (see the `chaos`
+    /// field).  Every injected fault is answered with a well-formed
+    /// non-ok reply; the session itself always survives.
+    pub fn with_chaos(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.chaos = Some(plan);
+        self
+    }
+
+    /// Draw the injected fault (if any) for one served op frame.
+    fn draw_fault(&self) -> Option<WireFault> {
+        self.chaos.as_deref().and_then(|p| p.wire_fault())
     }
 
     pub fn lease_stats(&self) -> Option<super::lease::LeaseStats> {
@@ -182,6 +201,31 @@ enum HandleErr {
     Error(String),
     /// Stale-epoch reply (status 2): the client should re-install.
     Stale(String),
+    /// Shed reply (status 3): loud, never retried (chaos shed storms).
+    Shed(String),
+}
+
+/// Map an injected server-side fault onto the protocol's refusal
+/// vocabulary — always a well-formed reply, never a dead session.
+fn injected_refusal(fault: WireFault, sess: &mut SessionState) -> HandleErr {
+    match fault {
+        WireFault::Shed => {
+            HandleErr::Shed("chaos: injected shed storm".into())
+        }
+        WireFault::Stale => {
+            sess.stats.stale_epochs += 1;
+            // drop the installed ctx so the client's re-install is real
+            sess.epoch = None;
+            sess.ctx = None;
+            HandleErr::Stale("chaos: session state injected away".into())
+        }
+        WireFault::Drop
+        | WireFault::Kill
+        | WireFault::Corrupt
+        | WireFault::Truncate => {
+            HandleErr::Error("chaos: injected server fault".into())
+        }
+    }
 }
 
 impl From<crate::sptr::WireError> for HandleErr {
@@ -202,6 +246,10 @@ pub fn handle_frame(
         Err(HandleErr::Error(m)) => (error_body(&m), false),
         Err(HandleErr::Stale(m)) => {
             (reply_status_body(STATUS_STALE_EPOCH, &m), false)
+        }
+        Err(HandleErr::Shed(m)) => {
+            sess.stats.shed += 1;
+            (reply_status_body(STATUS_SHED, &m), false)
         }
     }
 }
@@ -248,6 +296,9 @@ fn try_handle(
         Op::Translate | Op::Increment => {
             let epoch = r.get_u64()?;
             check_epoch(sess, epoch)?;
+            if let Some(fault) = exec.draw_fault() {
+                return Err(injected_refusal(fault, sess));
+            }
             // 28 = ptr 20 + inc 8: bound the allocation by the frame
             let n = r.get_count(28)?;
             // replies are wider than requests (29 B/result vs 28), so a
@@ -296,6 +347,9 @@ fn try_handle(
         Op::Walk => {
             let epoch = r.get_u64()?;
             check_epoch(sess, epoch)?;
+            if let Some(fault) = exec.draw_fault() {
+                return Err(injected_refusal(fault, sess));
+            }
             let start = r.get_ptr()?;
             let inc = r.get_u64()?;
             let steps = r.get_u64()?;

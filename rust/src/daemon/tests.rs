@@ -118,6 +118,85 @@ fn shed_message(reply: &[u8]) -> String {
 }
 
 #[test]
+fn graceful_drain_refuses_new_frames_and_finishes_queued_work() {
+    let cfg = DaemonCfg::new(scratch_socket("lib-drain"));
+    let socket = cfg.socket.clone();
+    let daemon = Daemon::spawn(cfg).expect("daemon spawns");
+    {
+        let remote = RemoteEngine::connect(&socket, 1).expect("connect");
+        let (layout, table) = test_ctx(4, 4);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        for i in 0..32u64 {
+            batch.push(SharedPtr::for_index(&layout, 0, i), i);
+        }
+        let mut out = Vec::new();
+        remote.increment(&ctx, &batch, &mut out).unwrap();
+        daemon.begin_drain();
+        assert!(daemon.draining());
+        // a new frame is refused with the distinct draining status —
+        // a loud per-request failure, not a hung or severed connection
+        let err = remote.increment(&ctx, &batch, &mut out).unwrap_err();
+        assert!(err.to_string().contains("draining"), "{err}");
+    }
+    let stats = daemon.shutdown().expect("clean shutdown");
+    assert!(stats.drain_refusals >= 1, "the refusal was counted");
+    assert!(stats.served >= 1, "pre-drain work was served normally");
+}
+
+#[test]
+fn injected_shed_storm_sheds_every_op_but_sessions_survive() {
+    let mut cfg = DaemonCfg::new(scratch_socket("lib-chaos-shed"));
+    cfg.chaos = Some(crate::engine::FaultSpec::parse("0xFA57:shed=1.0").unwrap());
+    let socket = cfg.socket.clone();
+    let daemon = Daemon::spawn(cfg).expect("daemon spawns");
+    {
+        let remote = RemoteEngine::connect(&socket, 1).expect("connect");
+        let (layout, table) = test_ctx(4, 4);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        batch.push(SharedPtr::NULL, 1);
+        let mut out = Vec::new();
+        for _ in 0..2 {
+            let err = remote.increment(&ctx, &batch, &mut out).unwrap_err();
+            assert!(err.to_string().contains("shed"), "{err}");
+        }
+        assert_eq!(remote.reconnects(), 0, "shed replies must not cost heals");
+    }
+    let stats = daemon.shutdown().expect("clean shutdown");
+    assert!(stats.shed >= 2, "injected sheds were counted per tenant");
+}
+
+#[test]
+fn injected_stale_storm_exhausts_the_reinstall_budget_loudly() {
+    let mut cfg = DaemonCfg::new(scratch_socket("lib-chaos-stale"));
+    cfg.chaos =
+        Some(crate::engine::FaultSpec::parse("0xFA57:stale=1.0").unwrap());
+    let socket = cfg.socket.clone();
+    let daemon = Daemon::spawn(cfg).expect("daemon spawns");
+    {
+        let remote = RemoteEngine::connect(&socket, 1).expect("connect");
+        let (layout, table) = test_ctx(4, 4);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        batch.push(SharedPtr::NULL, 1);
+        let mut out = Vec::new();
+        // every op draws an injected stale: the client re-installs up
+        // to its budget (real installs — InstallCtx is never faulted),
+        // then gives up loudly instead of looping forever
+        let err = remote.increment(&ctx, &batch, &mut out).unwrap_err();
+        assert!(err.to_string().contains("stale"), "{err}");
+        assert_eq!(remote.stale_failures(), 1);
+        assert_eq!(
+            remote.reinstalls(),
+            u64::from(RemoteEngine::MAX_STALE_REINSTALLS)
+        );
+    }
+    let stats = daemon.shutdown().expect("clean shutdown");
+    assert!(stats.stale_epochs >= 1);
+}
+
+#[test]
 fn over_quota_tenant_is_shed_loudly() {
     let mut cfg = DaemonCfg::new(scratch_socket("lib-quota"));
     cfg.executors = 0; // nothing drains: queued frames stay queued

@@ -1,0 +1,456 @@
+//! Deterministic fault injection — the chaos half of the robustness
+//! story.  A [`FaultPlan`] is a *seeded* schedule of injectable faults:
+//! every draw comes from one [`Xoshiro256`] stream, so any observed
+//! fault sequence (and therefore any recovery path through the stack)
+//! is reproducible from the `(seed, rates)` pair alone.  Three layers
+//! consume the same plan type:
+//!
+//! * [`ChaosEngine`] wraps any [`AddressEngine`] and injects
+//!   backend-level faults (errors, latency spikes) in front of it —
+//!   the unit-testable fault surface;
+//! * [`EngineSelector`](super::EngineSelector) consults a plan at its
+//!   dispatch funnel (`with_chaos`), faulting the *chosen* backend so
+//!   the health ladder (circuit breaker + cost-model deadline +
+//!   transparent fallback) is exercised without real process churn;
+//! * [`RemoteEngine`](super::RemoteEngine) and the daemon's
+//!   `ExecBackend` consult a plan at the *wire* (`with_chaos`):
+//!   dropped connections, killed workers, corrupt/truncated request
+//!   frames, forced stale epochs, and shed storms.
+//!
+//! The zero-fault invariant is load-bearing: a plan whose rates are all
+//! zero ([`FaultSpec::quiet`]) must make every consumer a bit-identical
+//! passthrough (`tests/chaos.rs` pins this on all five NPB layouts).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::{AddressEngine, BatchOut, EngineCtx, EngineError, PtrBatch};
+use crate::sptr::{ArrayLayout, Locality, SharedPtr};
+use crate::util::rng::Xoshiro256;
+
+/// A fault injected in front of an engine dispatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineFault {
+    /// The backend "fails": the dispatch returns
+    /// [`EngineError::Backend`] without running.
+    Error,
+    /// The backend "stalls": the dispatch is billed `ns` extra
+    /// nanoseconds, enough to blow the selector's cost-model deadline.
+    Spike(u64),
+}
+
+/// A fault injected at the wire (remote client or daemon server).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFault {
+    /// Sever one worker connection mid-pool (client side).
+    Drop,
+    /// Kill one worker process outright (client side).
+    Kill,
+    /// Desync the installed epoch so the next frame is answered
+    /// `STATUS_STALE_EPOCH` (either side).
+    Stale,
+    /// Answer the frame `STATUS_SHED` as if overloaded (server side).
+    Shed,
+    /// Flip bytes in the request body so the server rejects it
+    /// (client side).
+    Corrupt,
+    /// Cut the request body short — valid framing, short payload
+    /// (client side).
+    Truncate,
+}
+
+/// Per-fault-kind injection rates plus the seed — everything needed to
+/// reproduce a fault schedule.  Parsed from the CLI as
+/// `SEED[:key=value,...]` (see [`parse`](Self::parse)).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultSpec {
+    /// RNG seed; the whole schedule is a pure function of this + rates.
+    pub seed: u64,
+    /// P(injected backend error) per engine dispatch.
+    pub error: f64,
+    /// P(injected latency spike) per engine dispatch.
+    pub spike: f64,
+    /// Billed duration of one spike (defaults far past any deadline).
+    pub spike_ns: u64,
+    /// P(severed connection) per wire request.
+    pub drop: f64,
+    /// P(killed worker process) per wire request.
+    pub kill: f64,
+    /// P(forced stale epoch) per wire request/frame.
+    pub stale: f64,
+    /// P(shed reply) per served frame.
+    pub shed: f64,
+    /// P(corrupted request body) per wire request.
+    pub corrupt: f64,
+    /// P(truncated request body) per wire request.
+    pub truncate: f64,
+}
+
+impl FaultSpec {
+    /// Default billed spike length: 50 ms, far past any priced deadline.
+    pub const DEFAULT_SPIKE_NS: u64 = 50_000_000;
+
+    /// All rates zero — the passthrough plan.
+    pub fn quiet(seed: u64) -> Self {
+        Self {
+            seed,
+            error: 0.0,
+            spike: 0.0,
+            spike_ns: Self::DEFAULT_SPIKE_NS,
+            drop: 0.0,
+            kill: 0.0,
+            stale: 0.0,
+            shed: 0.0,
+            corrupt: 0.0,
+            truncate: 0.0,
+        }
+    }
+
+    /// The default transient-fault storm `--chaos SEED` runs: backend
+    /// errors and latency spikes at rates high enough that every run
+    /// exercises the fallback ladder, all absorbed by the selector.
+    pub fn transient(seed: u64) -> Self {
+        Self { error: 0.25, spike: 0.10, ..Self::quiet(seed) }
+    }
+
+    /// Same schedule shape, different stream (per-core decorrelation).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Parse `SEED[:key=value,...]`.  `SEED` is decimal or `0x` hex;
+    /// keys are the rate fields (`error`, `spike`, `drop`, `kill`,
+    /// `stale`, `shed`, `corrupt`, `truncate` — probabilities in
+    /// `[0,1]`) plus `spike_ms`.  A bare seed means
+    /// [`transient`](Self::transient).
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use pgas_hw::engine::FaultSpec;
+    /// let spec = FaultSpec::parse("0xC0FFEE:error=0.5,spike_ms=10").unwrap();
+    /// assert_eq!(spec.seed, 0xC0FFEE);
+    /// assert_eq!(spec.error, 0.5);
+    /// assert_eq!(spec.spike_ns, 10_000_000);
+    /// assert!(FaultSpec::parse("7:bogus=1").is_err());
+    /// ```
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let (seed_s, rest) = match s.split_once(':') {
+            Some((a, b)) => (a, Some(b)),
+            None => (s, None),
+        };
+        let seed = parse_u64(seed_s)
+            .ok_or_else(|| format!("bad chaos seed `{seed_s}`"))?;
+        let mut spec = if rest.is_some() {
+            Self::quiet(seed)
+        } else {
+            Self::transient(seed)
+        };
+        for kv in rest.unwrap_or("").split(',').filter(|p| !p.is_empty()) {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| format!("bad chaos option `{kv}` (want key=value)"))?;
+            if k == "spike_ms" {
+                let ms: u64 = v
+                    .parse()
+                    .map_err(|_| format!("bad chaos spike_ms `{v}`"))?;
+                spec.spike_ns = ms.saturating_mul(1_000_000);
+                continue;
+            }
+            let p: f64 =
+                v.parse().map_err(|_| format!("bad chaos rate `{kv}`"))?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("chaos rate `{kv}` outside [0,1]"));
+            }
+            match k {
+                "error" => spec.error = p,
+                "spike" => spec.spike = p,
+                "drop" => spec.drop = p,
+                "kill" => spec.kill = p,
+                "stale" => spec.stale = p,
+                "shed" => spec.shed = p,
+                "corrupt" => spec.corrupt = p,
+                "truncate" => spec.truncate = p,
+                _ => return Err(format!("unknown chaos fault kind `{k}`")),
+            }
+        }
+        Ok(spec)
+    }
+}
+
+fn parse_u64(s: &str) -> Option<u64> {
+    if let Some(hex) = s.strip_prefix("0x").or_else(|| s.strip_prefix("0X")) {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+/// A live, seeded fault schedule.  Shared (`Arc`) between an injector
+/// site and whoever asserts on its counters; each draw advances the one
+/// deterministic RNG stream under a mutex, so concurrent consumers
+/// still see *a* reproducible interleaving per run and a bit-exact one
+/// single-threaded.
+#[derive(Debug)]
+pub struct FaultPlan {
+    spec: FaultSpec,
+    rng: Mutex<Xoshiro256>,
+    injected: AtomicU64,
+    engine_errors: AtomicU64,
+    engine_spikes: AtomicU64,
+    wire_faults: AtomicU64,
+}
+
+impl FaultPlan {
+    pub fn new(spec: FaultSpec) -> Self {
+        Self {
+            spec,
+            rng: Mutex::new(Xoshiro256::new(spec.seed)),
+            injected: AtomicU64::new(0),
+            engine_errors: AtomicU64::new(0),
+            engine_spikes: AtomicU64::new(0),
+            wire_faults: AtomicU64::new(0),
+        }
+    }
+
+    /// The all-rates-zero passthrough plan.
+    pub fn quiet(seed: u64) -> Self {
+        Self::new(FaultSpec::quiet(seed))
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Draw the fault (if any) for one engine dispatch.
+    pub fn engine_fault(&self) -> Option<EngineFault> {
+        let s = &self.spec;
+        if s.error == 0.0 && s.spike == 0.0 {
+            return None; // quiet fast path: no RNG advance, no lock
+        }
+        let mut rng = self.rng.lock().unwrap();
+        if rng.chance(s.error) {
+            drop(rng);
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            self.engine_errors.fetch_add(1, Ordering::Relaxed);
+            Some(EngineFault::Error)
+        } else if rng.chance(s.spike) {
+            drop(rng);
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            self.engine_spikes.fetch_add(1, Ordering::Relaxed);
+            Some(EngineFault::Spike(s.spike_ns))
+        } else {
+            None
+        }
+    }
+
+    /// Draw the fault (if any) for one wire request/frame.
+    pub fn wire_fault(&self) -> Option<WireFault> {
+        let s = &self.spec;
+        let rates = [
+            (s.drop, WireFault::Drop),
+            (s.kill, WireFault::Kill),
+            (s.stale, WireFault::Stale),
+            (s.shed, WireFault::Shed),
+            (s.corrupt, WireFault::Corrupt),
+            (s.truncate, WireFault::Truncate),
+        ];
+        if rates.iter().all(|&(p, _)| p == 0.0) {
+            return None;
+        }
+        let mut rng = self.rng.lock().unwrap();
+        for (p, fault) in rates {
+            if p > 0.0 && rng.chance(p) {
+                drop(rng);
+                self.injected.fetch_add(1, Ordering::Relaxed);
+                self.wire_faults.fetch_add(1, Ordering::Relaxed);
+                return Some(fault);
+            }
+        }
+        None
+    }
+
+    /// Total faults injected so far (all kinds).
+    pub fn injected(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Injected backend errors so far.
+    pub fn engine_errors(&self) -> u64 {
+        self.engine_errors.load(Ordering::Relaxed)
+    }
+
+    /// Injected latency spikes so far.
+    pub fn engine_spikes(&self) -> u64 {
+        self.engine_spikes.load(Ordering::Relaxed)
+    }
+
+    /// Injected wire faults so far.
+    pub fn wire_faults(&self) -> u64 {
+        self.wire_faults.load(Ordering::Relaxed)
+    }
+}
+
+/// An [`AddressEngine`] wrapper that injects faults from a shared
+/// [`FaultPlan`] in front of its inner backend.  With a
+/// [`FaultSpec::quiet`] plan it is a bit-identical passthrough — the
+/// invariant `tests/chaos.rs` pins differentially.
+///
+/// Injected spikes really sleep, but capped at 1 ms per dispatch so a
+/// chaos-wrapped engine cannot stall a test run; the *billed* spike
+/// length (what trips the selector's deadline) is the spec's full
+/// `spike_ns` and is applied at the selector, not here.
+pub struct ChaosEngine<E> {
+    inner: E,
+    plan: Arc<FaultPlan>,
+}
+
+impl<E: AddressEngine> ChaosEngine<E> {
+    pub fn new(inner: E, plan: Arc<FaultPlan>) -> Self {
+        Self { inner, plan }
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    pub fn plan(&self) -> &Arc<FaultPlan> {
+        &self.plan
+    }
+
+    /// Draw one engine fault; on `Error`, the injected refusal.
+    fn inject(&self) -> Result<(), EngineError> {
+        match self.plan.engine_fault() {
+            Some(EngineFault::Error) => Err(EngineError::Backend(format!(
+                "chaos: injected backend fault (seed {:#x})",
+                self.plan.spec().seed
+            ))),
+            Some(EngineFault::Spike(ns)) => {
+                std::thread::sleep(std::time::Duration::from_nanos(
+                    ns.min(1_000_000),
+                ));
+                Ok(())
+            }
+            None => Ok(()),
+        }
+    }
+}
+
+impl<E: AddressEngine> AddressEngine for ChaosEngine<E> {
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn supports(&self, layout: &ArrayLayout) -> bool {
+        self.inner.supports(layout)
+    }
+
+    fn translate(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        self.inject()?;
+        self.inner.translate(ctx, batch, out)
+    }
+
+    fn increment(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut Vec<SharedPtr>,
+    ) -> Result<(), EngineError> {
+        self.inject()?;
+        self.inner.increment(ctx, batch, out)
+    }
+
+    fn walk(
+        &self,
+        ctx: &EngineCtx,
+        start: SharedPtr,
+        inc: u64,
+        steps: usize,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        self.inject()?;
+        self.inner.walk(ctx, start, inc, steps, out)
+    }
+
+    fn translate_one(
+        &self,
+        ctx: &EngineCtx,
+        ptr: SharedPtr,
+        inc: u64,
+    ) -> Result<(SharedPtr, u64, Locality), EngineError> {
+        self.inject()?;
+        self.inner.translate_one(ctx, ptr, inc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SoftwareEngine;
+    use crate::sptr::BaseTable;
+
+    #[test]
+    fn spec_parse_accepts_seed_and_rates() {
+        let t = FaultSpec::parse("42").unwrap();
+        assert_eq!(t.seed, 42);
+        assert_eq!(t.error, FaultSpec::transient(42).error);
+        let q = FaultSpec::parse("0xBEEF:stale=0.5,shed=0.25").unwrap();
+        assert_eq!(q.seed, 0xBEEF);
+        assert_eq!(q.error, 0.0, "explicit spec starts quiet");
+        assert_eq!(q.stale, 0.5);
+        assert_eq!(q.shed, 0.25);
+        assert!(FaultSpec::parse("notanumber").is_err());
+        assert!(FaultSpec::parse("1:error=2.0").is_err());
+        assert!(FaultSpec::parse("1:frob=0.1").is_err());
+    }
+
+    #[test]
+    fn plans_are_reproducible_from_the_seed() {
+        let spec = FaultSpec { error: 0.3, spike: 0.2, ..FaultSpec::quiet(99) };
+        let a = FaultPlan::new(spec);
+        let b = FaultPlan::new(spec);
+        let seq_a: Vec<_> = (0..256).map(|_| a.engine_fault()).collect();
+        let seq_b: Vec<_> = (0..256).map(|_| b.engine_fault()).collect();
+        assert_eq!(seq_a, seq_b);
+        assert!(a.engine_errors() > 0 && a.engine_spikes() > 0);
+        assert_eq!(a.injected(), a.engine_errors() + a.engine_spikes());
+        // a different seed gives a different schedule
+        let c = FaultPlan::new(spec.with_seed(100));
+        let seq_c: Vec<_> = (0..256).map(|_| c.engine_fault()).collect();
+        assert_ne!(seq_a, seq_c);
+    }
+
+    #[test]
+    fn quiet_plan_never_fires_and_never_locks() {
+        let plan = FaultPlan::quiet(7);
+        for _ in 0..64 {
+            assert_eq!(plan.engine_fault(), None);
+            assert_eq!(plan.wire_fault(), None);
+        }
+        assert_eq!(plan.injected(), 0);
+    }
+
+    #[test]
+    fn chaos_engine_surfaces_injected_errors_and_counts_them() {
+        let plan = Arc::new(FaultPlan::new(FaultSpec {
+            error: 1.0,
+            ..FaultSpec::quiet(5)
+        }));
+        let chaos = ChaosEngine::new(SoftwareEngine, Arc::clone(&plan));
+        let layout = ArrayLayout::new(4, 8, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        batch.push(SharedPtr::NULL, 1);
+        let mut out = BatchOut::new();
+        let err = chaos.translate(&ctx, &batch, &mut out).unwrap_err();
+        assert!(matches!(err, EngineError::Backend(ref m) if m.contains("chaos")));
+        assert_eq!(plan.engine_errors(), 1);
+    }
+}

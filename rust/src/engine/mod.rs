@@ -76,6 +76,7 @@
 //! extends the differentials across the process boundary (NPB layouts
 //! at 1/2/4 worker processes, worker-death recovery).
 
+mod fault;
 mod leon3;
 mod pow2;
 pub mod remote;
@@ -85,10 +86,14 @@ mod software;
 #[cfg(feature = "xla-unit")]
 mod xla_batch;
 
+pub use fault::{ChaosEngine, EngineFault, FaultPlan, FaultSpec, WireFault};
 pub use leon3::Leon3Engine;
 pub use pow2::Pow2Engine;
 pub use remote::{RemoteClientStats, RemoteEngine, RemoteTier};
-pub use select::{AutoEngine, CostModel, EngineChoice, EngineSelector};
+pub use select::{
+    AutoEngine, BreakerState, CostModel, EngineChoice, EngineSelector,
+    HealthStats, TierHealthStats,
+};
 pub use sharded::ShardedEngine;
 pub use software::SoftwareEngine;
 #[cfg(feature = "xla-unit")]

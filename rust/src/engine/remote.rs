@@ -20,7 +20,9 @@
 //! chosen **epoch** number, and steady-state requests carry only the
 //! epoch plus the op payload.  A request naming an epoch the session
 //! doesn't have is answered with a *stale-epoch* status and served
-//! nothing; the client re-installs and retries once.
+//! nothing; the client re-installs and retries, giving up loudly after
+//! [`RemoteEngine::MAX_STALE_REINSTALLS`] rounds (`stale_failures` in
+//! [`RemoteClientStats`]).
 //!
 //! | op | request payload | ok-response payload |
 //! |----|-----------------|---------------------|
@@ -72,6 +74,10 @@
 //! heal fails outright is the whole pool torn down and rebuilt lazily
 //! ([`RemoteEngine::restarts`]); `kill_worker` is the chaos hook the
 //! tests use, `force_epoch_mismatch` the one for the stale-epoch path.
+//! For *scheduled* faults, [`RemoteEngine::with_chaos`] installs a
+//! seeded [`FaultPlan`] consulted once per session exchange: drops,
+//! kills, forced stale epochs, and corrupt/truncated frames, all
+//! reproducible from the seed.
 
 use std::io::{ErrorKind, Read, Write};
 use std::os::unix::net::{UnixListener, UnixStream};
@@ -81,6 +87,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use super::fault::{FaultPlan, WireFault};
 use super::{
     AddressEngine, BatchOut, EngineCtx, EngineError, EngineSelector, PtrBatch,
 };
@@ -113,6 +120,10 @@ pub(crate) const STATUS_STALE_EPOCH: u8 = 2;
 /// Admission control refused the request (quota / capacity).  Loud,
 /// terminal for the request: clients must NOT retry.
 pub(crate) const STATUS_SHED: u8 = 3;
+/// The daemon is draining for shutdown: in-flight requests finish,
+/// new frames are refused with this status.  Terminal for the
+/// request; clients should fail over to another tier.
+pub(crate) const STATUS_DRAINING: u8 = 4;
 
 /// Wire bytes of one batch-shaped result (ptr 20 + sysva 8 + loc 1).
 const RESULT_WIRE_BYTES: usize = 29;
@@ -340,6 +351,7 @@ fn open_response(body: &[u8]) -> Result<WireReader<'_>, EngineError> {
         let kind = match status {
             STATUS_STALE_EPOCH => "stale epoch",
             STATUS_SHED => "request shed",
+            STATUS_DRAINING => "server draining",
             _ => "server error",
         };
         return Err(backend(format!("remote: {kind}: {msg}")));
@@ -515,6 +527,9 @@ pub struct RemoteClientStats {
     pub reinstalls: u64,
     /// Steady-state requests that rode an already-installed epoch.
     pub epoch_hits: u64,
+    /// Requests that failed loudly because a connection stayed stale
+    /// after [`RemoteEngine::MAX_STALE_REINSTALLS`] re-installs.
+    pub stale_failures: u64,
 }
 
 /// Process-pool / daemon-client backend: the same scatter/gather +
@@ -545,11 +560,15 @@ pub struct RemoteEngine {
     /// Installed into every session: routes this client through the
     /// daemon's priority scheduling ring and accelerator-lease path.
     priority: bool,
+    /// Seeded wire-fault schedule (drops, kills, forced stale epochs,
+    /// corrupt/truncated frames) consulted once per session exchange.
+    chaos: Option<Arc<FaultPlan>>,
     restarts: AtomicU64,
     reconnects: AtomicU64,
     installs: AtomicU64,
     reinstalls: AtomicU64,
     epoch_hits: AtomicU64,
+    stale_failures: AtomicU64,
 }
 
 impl RemoteEngine {
@@ -565,6 +584,12 @@ impl RemoteEngine {
     /// Reconnect attempts per failed connection before the pool gives
     /// up and falls back to a full restart.
     const RECONNECT_ATTEMPTS: u32 = 4;
+
+    /// Re-install + retry rounds per request before repeated
+    /// stale-epoch replies on one connection fail loudly — a session
+    /// that cannot hold installed state is desynced, not transient,
+    /// and retrying forever would hide it.
+    pub const MAX_STALE_REINSTALLS: u32 = 3;
 
     /// Spawn `workers` worker processes (clamped to ≥ 1) running the
     /// auto-resolved `pgas-hw` binary's `serve-engine` subcommand.
@@ -620,11 +645,13 @@ impl RemoteEngine {
             next_epoch: AtomicU64::new(0),
             reinstall_every_request: false,
             priority: false,
+            chaos: None,
             restarts: AtomicU64::new(0),
             reconnects: AtomicU64::new(0),
             installs: AtomicU64::new(0),
             reinstalls: AtomicU64::new(0),
             epoch_hits: AtomicU64::new(0),
+            stale_failures: AtomicU64::new(0),
         };
         {
             let mut pool = engine.pool.lock().expect("fresh mutex");
@@ -662,6 +689,17 @@ impl RemoteEngine {
         self
     }
 
+    /// Install a seeded wire-fault schedule: one draw per session
+    /// exchange can sever a connection, kill a worker, desync the
+    /// installed epochs, or corrupt/truncate the outgoing op frame.
+    /// Every injected fault surfaces as a loud [`EngineError::Backend`]
+    /// and exercises the same heal/re-install paths a real failure
+    /// would — reproducibly, from the plan's seed.
+    pub fn with_chaos(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.chaos = Some(plan);
+        self
+    }
+
     /// Worker-pool size.
     pub fn workers(&self) -> usize {
         self.pool.lock().map(|p| p.len()).unwrap_or(0)
@@ -692,6 +730,12 @@ impl RemoteEngine {
         self.epoch_hits.load(Ordering::Relaxed)
     }
 
+    /// Requests failed loudly after exhausting the stale re-install
+    /// budget on one connection.
+    pub fn stale_failures(&self) -> u64 {
+        self.stale_failures.load(Ordering::Relaxed)
+    }
+
     /// All client counters in one snapshot.
     pub fn client_stats(&self) -> RemoteClientStats {
         RemoteClientStats {
@@ -700,6 +744,7 @@ impl RemoteEngine {
             installs: self.installs(),
             reinstalls: self.reinstalls(),
             epoch_hits: self.epoch_hits(),
+            stale_failures: self.stale_failures(),
         }
     }
 
@@ -1043,18 +1088,59 @@ impl RemoteEngine {
         epoch
     }
 
+    /// Apply one injected connection-level wire fault.  Frame-level
+    /// faults (corrupt/truncate) are applied to the encoded plan by
+    /// `session_exchange`; shed storms are a server-side injection.
+    fn inject_wire_fault(&self, pool: &mut [Worker], fault: WireFault) {
+        match fault {
+            WireFault::Drop => {
+                if let Some(w) = pool.first_mut() {
+                    let _ = w.stream.shutdown(std::net::Shutdown::Both);
+                }
+            }
+            WireFault::Kill => {
+                if let Some(w) = pool.first_mut() {
+                    match &mut w.child {
+                        Some(child) => {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                        }
+                        None => {
+                            let _ =
+                                w.stream.shutdown(std::net::Shutdown::Both);
+                        }
+                    }
+                }
+            }
+            WireFault::Stale => {
+                for w in pool.iter_mut() {
+                    if let Some((fp, epoch)) = w.installed {
+                        w.installed = Some((fp, epoch ^ 0x5A5A_5A5A));
+                    }
+                }
+            }
+            WireFault::Shed | WireFault::Corrupt | WireFault::Truncate => {}
+        }
+    }
+
     /// The epoch-session exchange shared by every sharded op: install
     /// where needed (pipelined with the op frame), scatter/gather,
-    /// validate install acks, and serve stale-epoch replies with one
-    /// re-install + retry.  `shards[i]` is `(result count, op-frame
-    /// encoder)` for pool slot `i`; returns the op reply bodies in
-    /// shard order.
+    /// validate install acks, and serve stale-epoch replies with a
+    /// bounded re-install + retry loop
+    /// ([`MAX_STALE_REINSTALLS`](Self::MAX_STALE_REINSTALLS) rounds,
+    /// then a loud failure counted in `stale_failures`).  `shards[i]`
+    /// is `(result count, op-frame encoder)` for pool slot `i`;
+    /// returns the op reply bodies in shard order.
     fn session_exchange(
         &self,
         pool: &mut Vec<Worker>,
         ctx: &EngineCtx,
         shards: &[(usize, &dyn Fn(u64) -> Vec<u8>)],
     ) -> Result<Vec<Vec<u8>>, EngineError> {
+        let injected = self.chaos.as_deref().and_then(|p| p.wire_fault());
+        if let Some(fault) = injected {
+            self.inject_wire_fault(pool, fault);
+        }
         let fingerprint =
             ctx_fingerprint(ctx.layout(), ctx.mythread(), ctx.topo(), ctx.table());
         let mut plan = Vec::with_capacity(shards.len());
@@ -1066,10 +1152,34 @@ impl RemoteEngine {
             frames.push(op_frame);
             plan.push((slot, frames));
         }
+        match injected {
+            // flip the first header byte of shard 0's op frame: the
+            // server rejects the magic with an error reply and the
+            // session survives
+            Some(WireFault::Corrupt) => {
+                if let Some(f) =
+                    plan.first_mut().and_then(|(_, fs)| fs.last_mut())
+                {
+                    if let Some(b) = f.first_mut() {
+                        *b ^= 0xFF;
+                    }
+                }
+            }
+            // cut the op body right after the header: framing stays
+            // valid, the payload decode fails server-side
+            Some(WireFault::Truncate) => {
+                if let Some(f) =
+                    plan.first_mut().and_then(|(_, fs)| fs.last_mut())
+                {
+                    f.truncate(8.min(f.len()));
+                }
+            }
+            _ => {}
+        }
         let replies = self.scatter_gather(pool, &plan)?;
         let mut out = Vec::with_capacity(shards.len());
         for (slot, mut bodies) in replies.into_iter().enumerate() {
-            let op_body = bodies.pop().expect("one reply per frame");
+            let mut op_body = bodies.pop().expect("one reply per frame");
             // install acks precede the op reply; a rejected install
             // (bad table, version skew) fails the request loudly
             for ack in &bodies {
@@ -1080,9 +1190,21 @@ impl RemoteEngine {
                     )));
                 }
             }
-            if body_status(&op_body) == Some(STATUS_STALE_EPOCH) {
-                // the session lost (or never had) our epoch: install a
-                // fresh one and retry exactly once
+            // the session lost (or never had) our epoch: install a
+            // fresh one and retry, under a budget — a connection that
+            // stays stale across re-installs is desynced, not slow
+            let mut attempts = 0;
+            while body_status(&op_body) == Some(STATUS_STALE_EPOCH) {
+                attempts += 1;
+                if attempts > Self::MAX_STALE_REINSTALLS {
+                    pool[slot].installed = None;
+                    self.stale_failures.fetch_add(1, Ordering::Relaxed);
+                    return Err(EngineError::Backend(format!(
+                        "remote: worker {slot} still reports a stale epoch \
+                         after {} re-installs — protocol desync",
+                        Self::MAX_STALE_REINSTALLS
+                    )));
+                }
                 self.reinstalls.fetch_add(1, Ordering::Relaxed);
                 let epoch = self.next_epoch.fetch_add(1, Ordering::Relaxed) + 1;
                 let frames = vec![
@@ -1093,26 +1215,18 @@ impl RemoteEngine {
                 pool[slot].installed = Some((fingerprint, epoch));
                 let mut retry =
                     self.scatter_gather(pool, &[(slot, frames)])?;
-                let mut bodies = retry.pop().expect("one plan entry");
-                let retried = bodies.pop().expect("op reply");
-                if let Err(e) = open_response(&bodies[0]) {
+                let mut rbodies = retry.pop().expect("one plan entry");
+                let retried = rbodies.pop().expect("op reply");
+                if let Err(e) = open_response(&rbodies[0]) {
                     pool[slot].installed = None;
                     return Err(EngineError::Backend(format!(
                         "remote: worker {slot} rejected InstallCtx on \
                          stale-epoch retry: {e}"
                     )));
                 }
-                if body_status(&retried) == Some(STATUS_STALE_EPOCH) {
-                    pool[slot].installed = None;
-                    return Err(EngineError::Backend(format!(
-                        "remote: worker {slot} still reports a stale epoch \
-                         after re-install — protocol desync"
-                    )));
-                }
-                out.push(retried);
-            } else {
-                out.push(op_body);
+                op_body = retried;
             }
+            out.push(op_body);
         }
         Ok(out)
     }
@@ -1660,5 +1774,89 @@ mod tests {
         tx.write_all(&u32::MAX.to_le_bytes()).expect("header write");
         let err = read_frame(&mut rx).unwrap_err();
         assert_eq!(err.kind(), ErrorKind::InvalidData);
+    }
+
+    /// A pathological server that acks installs but answers every op
+    /// with a stale-epoch status forever: the client must burn its
+    /// re-install budget and then fail loudly, not retry for eternity.
+    #[test]
+    fn repeated_stale_epochs_fail_loudly_after_the_reinstall_budget() {
+        let socket = crate::daemon::scratch_socket("always-stale");
+        let listener = UnixListener::bind(&socket).expect("bind scratch");
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().expect("accept");
+            while let Ok(Some(frame)) = read_frame(&mut s) {
+                let reply = if frame.get(6) == Some(&(Op::InstallCtx as u8)) {
+                    ok_header().into_bytes()
+                } else {
+                    reply_status_body(STATUS_STALE_EPOCH, "never installs")
+                };
+                if write_frame(&mut s, &reply).is_err() {
+                    break;
+                }
+            }
+        });
+        let engine = RemoteEngine::connect(&socket, 1).expect("connect");
+        let layout = ArrayLayout::new(8, 4, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        batch.push(SharedPtr::NULL, 1);
+        let mut out = Vec::new();
+        let err = engine.increment(&ctx, &batch, &mut out).unwrap_err();
+        let msg = err.to_string();
+        assert!(
+            msg.contains("stale epoch") && msg.contains("re-install"),
+            "{msg}"
+        );
+        assert_eq!(engine.stale_failures(), 1);
+        assert_eq!(
+            engine.reinstalls(),
+            u64::from(RemoteEngine::MAX_STALE_REINSTALLS)
+        );
+        assert_eq!(engine.client_stats().stale_failures, 1);
+        drop(engine);
+        server.join().expect("server thread");
+        let _ = std::fs::remove_file(&socket);
+    }
+
+    /// Injected frame corruption is a per-request fault: the server
+    /// rejects the frame with an error reply, the request fails loudly,
+    /// and the connection stays healthy — no heal, no reconnect.
+    #[test]
+    fn injected_frame_corruption_fails_loudly_but_the_session_survives() {
+        use crate::engine::FaultSpec;
+        let socket = crate::daemon::scratch_socket("chaos-wire");
+        let listener = UnixListener::bind(&socket).expect("bind scratch");
+        let server = std::thread::spawn(move || {
+            let (mut s, _) = listener.accept().expect("accept");
+            let _ = serve_session(&mut s);
+        });
+        let plan = Arc::new(FaultPlan::new(FaultSpec {
+            corrupt: 1.0,
+            ..FaultSpec::quiet(11)
+        }));
+        let engine = RemoteEngine::connect(&socket, 1)
+            .expect("connect")
+            .with_chaos(Arc::clone(&plan));
+        let layout = ArrayLayout::new(8, 4, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        batch.push(SharedPtr::NULL, 1);
+        let mut out = Vec::new();
+        for _ in 0..3 {
+            let err = engine.increment(&ctx, &batch, &mut out).unwrap_err();
+            assert!(matches!(err, EngineError::Backend(_)), "{err}");
+        }
+        assert_eq!(plan.wire_faults(), 3);
+        assert_eq!(
+            engine.reconnects(),
+            0,
+            "corrupt frames must not cost a heal"
+        );
+        drop(engine);
+        server.join().expect("server thread");
+        let _ = std::fs::remove_file(&socket);
     }
 }

@@ -39,10 +39,33 @@
 //! record which backend actually served each passthrough request;
 //! `coordinator::engine_report` archives that mix alongside every
 //! sweep.
+//!
+//! ## Health tracking & graceful degradation
+//!
+//! Every passthrough dispatch feeds a per-backend health record:
+//! consecutive-failure and EWMA error counters drive a circuit breaker
+//! (closed → open → half-open probe, [`BreakerState`]).  A tripped
+//! tier is *quarantined* — the argmin simply re-runs over the
+//! surviving backends — until a cooldown elapses and one half-open
+//! probe dispatch decides whether it closes again.  Each dispatch also
+//! carries a deadline priced off the [`CostModel`] estimate; an
+//! over-deadline or failed ([`EngineError::Backend`]) call is
+//! transparently re-served by the always-legal fallback ladder
+//! (sharded pool where the batch warrants it, else the pow2/software
+//! scalar floor), so transient faults never change results and never
+//! reach the caller.  Structural refusals (`UnsupportedLayout`,
+//! `TableTooSmall`, `LengthMismatch`) are deterministic caller errors
+//! and still propagate loudly.  [`HealthStats`] snapshots the whole
+//! ladder for `stats_txt` / `coordinator::health_table`; a seeded
+//! [`FaultPlan`] installed with
+//! [`with_chaos`](EngineSelector::with_chaos) injects reproducible
+//! faults at this funnel (the `--chaos` CLI flag).
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, OnceLock};
+use std::time::Instant;
 
+use super::fault::{EngineFault, FaultPlan};
 use super::remote::RemoteEngine;
 use super::{
     AddressEngine, BatchOut, EngineCtx, EngineError, Leon3Engine, Pow2Engine,
@@ -315,6 +338,273 @@ struct MeasuredLegs {
     remote: Option<(f64, f64)>,
 }
 
+/// Circuit-breaker state of one backend tier.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BreakerState {
+    /// Healthy: the tier competes in the argmin.
+    #[default]
+    Closed,
+    /// Quarantined: repeated failures; skipped by the argmin until the
+    /// cooldown elapses.
+    Open,
+    /// One probe dispatch is in flight; its outcome decides whether the
+    /// tier closes again or re-opens.
+    HalfOpen,
+}
+
+impl BreakerState {
+    fn from_u8(v: u8) -> Self {
+        match v {
+            1 => BreakerState::Open,
+            2 => BreakerState::HalfOpen,
+            _ => BreakerState::Closed,
+        }
+    }
+
+    /// Severity rank for merging per-core snapshots (worst wins).
+    fn rank(self) -> u8 {
+        match self {
+            BreakerState::Closed => 0,
+            BreakerState::HalfOpen => 1,
+            BreakerState::Open => 2,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half-open",
+        }
+    }
+}
+
+/// Health snapshot of one backend tier (one row of
+/// `coordinator::health_table`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierHealthStats {
+    /// Dispatches this tier served cleanly (within deadline).
+    pub successes: u64,
+    /// Dispatches this tier failed (backend error, injected fault, or
+    /// past deadline).
+    pub failures: u64,
+    /// Closed → open breaker transitions.
+    pub trips: u64,
+    /// Half-open probe dispatches granted after a cooldown.
+    pub probes: u64,
+    /// Breaker state at snapshot time.
+    pub state: BreakerState,
+}
+
+/// Snapshot of the selector's whole degradation ladder, merged across
+/// cores into [`MachineResult`](crate::sim::MachineResult) and printed
+/// as the `health.*` / `degrade.*` lines of `stats_txt`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HealthStats {
+    /// Total dispatches through the selector funnel.
+    pub dispatches: u64,
+    /// Dispatches transparently re-served by the fallback ladder.
+    pub fallback_runs: u64,
+    /// Dispatches that ran past their cost-model deadline.
+    pub deadline_misses: u64,
+    /// Faults injected by an installed chaos plan.
+    pub injected_faults: u64,
+    /// Per-tier counters, indexed by [`EngineChoice::index`].
+    pub tiers: [TierHealthStats; EngineChoice::COUNT],
+}
+
+impl HealthStats {
+    /// Accumulate another snapshot (per-core merge).
+    pub fn merge(&mut self, o: &HealthStats) {
+        self.dispatches += o.dispatches;
+        self.fallback_runs += o.fallback_runs;
+        self.deadline_misses += o.deadline_misses;
+        self.injected_faults += o.injected_faults;
+        for (t, ot) in self.tiers.iter_mut().zip(o.tiers.iter()) {
+            t.successes += ot.successes;
+            t.failures += ot.failures;
+            t.trips += ot.trips;
+            t.probes += ot.probes;
+            if ot.state.rank() > t.state.rank() {
+                t.state = ot.state;
+            }
+        }
+    }
+
+    /// Total failures across tiers.
+    pub fn failures(&self) -> u64 {
+        self.tiers.iter().map(|t| t.failures).sum()
+    }
+
+    /// Total breaker trips across tiers.
+    pub fn trips(&self) -> u64 {
+        self.tiers.iter().map(|t| t.trips).sum()
+    }
+
+    /// Total half-open probes across tiers.
+    pub fn probes(&self) -> u64 {
+        self.tiers.iter().map(|t| t.probes).sum()
+    }
+
+    /// Tiers currently not closed (open or probing).
+    pub fn quarantined(&self) -> usize {
+        self.tiers
+            .iter()
+            .filter(|t| t.state != BreakerState::Closed)
+            .count()
+    }
+}
+
+/// Per-tier health record: lock-free counters plus the breaker word
+/// (the selector is shared `&self` across passthroughs, so everything
+/// here is atomic like the hit counters).
+#[derive(Default)]
+struct TierHealth {
+    /// Breaker word (`BreakerState` encoding).
+    state: AtomicU8,
+    /// Consecutive failures since the last success.
+    consec: AtomicU32,
+    /// Failure-rate EWMA, scaled by 1000 (0 = never fails).
+    ewma_milli: AtomicU32,
+    /// Global dispatch-clock value when the breaker last opened.
+    opened_at: AtomicU64,
+    successes: AtomicU64,
+    failures: AtomicU64,
+    trips: AtomicU64,
+    probes: AtomicU64,
+}
+
+/// The selector-wide ladder state behind [`HealthStats`].
+#[derive(Default)]
+struct Health {
+    tiers: [TierHealth; EngineChoice::COUNT],
+    /// Monotonic dispatch counter — the breaker's cooldown clock.
+    dispatches: AtomicU64,
+    fallback_runs: AtomicU64,
+    deadline_misses: AtomicU64,
+    injected_faults: AtomicU64,
+}
+
+impl Health {
+    /// Consecutive failures that trip a closed breaker.
+    const TRIP_CONSEC: u32 = 3;
+    /// EWMA failure rate (milli-units) that trips a closed breaker.
+    const TRIP_EWMA_MILLI: u32 = 500;
+    /// Dispatches an open breaker waits before granting one probe.
+    const COOLDOWN_DISPATCHES: u64 = 64;
+
+    /// One success: reset the failure streak, decay the EWMA, and close
+    /// a half-open breaker (the probe succeeded).
+    fn on_success(&self, tier: EngineChoice) {
+        let t = &self.tiers[tier.index()];
+        t.successes.fetch_add(1, Ordering::Relaxed);
+        t.consec.store(0, Ordering::Relaxed);
+        let e = t.ewma_milli.load(Ordering::Relaxed);
+        t.ewma_milli.store(e - e / 8, Ordering::Relaxed);
+        let _ = t.state.compare_exchange(
+            BreakerState::HalfOpen as u8,
+            BreakerState::Closed as u8,
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+        );
+    }
+
+    /// One failure: bump the streak and EWMA; trip a closed breaker
+    /// past either threshold, re-open a half-open one (probe failed).
+    fn on_failure(&self, tier: EngineChoice, clock: u64) {
+        let t = &self.tiers[tier.index()];
+        t.failures.fetch_add(1, Ordering::Relaxed);
+        let consec = t.consec.fetch_add(1, Ordering::Relaxed) + 1;
+        let e = t.ewma_milli.load(Ordering::Relaxed);
+        let e = e - e / 8 + 125; // decay 1/8, add 1000/8
+        t.ewma_milli.store(e, Ordering::Relaxed);
+        let state = BreakerState::from_u8(t.state.load(Ordering::Relaxed));
+        let trip = match state {
+            BreakerState::Closed => {
+                consec >= Self::TRIP_CONSEC || e >= Self::TRIP_EWMA_MILLI
+            }
+            BreakerState::HalfOpen => true,
+            BreakerState::Open => false,
+        };
+        if trip {
+            t.opened_at.store(clock, Ordering::Relaxed);
+            t.state.store(BreakerState::Open as u8, Ordering::Relaxed);
+            if state == BreakerState::Closed {
+                t.trips.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// May the argmin price this tier right now?  Closed admits; open
+    /// admits exactly one probe dispatch per elapsed cooldown (the
+    /// winner of the open → half-open CAS); half-open excludes everyone
+    /// but the in-flight probe.
+    fn admit(&self, tier: EngineChoice) -> bool {
+        let t = &self.tiers[tier.index()];
+        match BreakerState::from_u8(t.state.load(Ordering::Relaxed)) {
+            BreakerState::Closed => true,
+            BreakerState::HalfOpen => false,
+            BreakerState::Open => {
+                let clock = self.dispatches.load(Ordering::Relaxed);
+                let opened = t.opened_at.load(Ordering::Relaxed);
+                if clock.saturating_sub(opened) < Self::COOLDOWN_DISPATCHES {
+                    return false;
+                }
+                let won = t
+                    .state
+                    .compare_exchange(
+                        BreakerState::Open as u8,
+                        BreakerState::HalfOpen as u8,
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    )
+                    .is_ok();
+                if won {
+                    t.probes.fetch_add(1, Ordering::Relaxed);
+                }
+                won
+            }
+        }
+    }
+
+    fn snapshot(&self) -> HealthStats {
+        let mut s = HealthStats {
+            dispatches: self.dispatches.load(Ordering::Relaxed),
+            fallback_runs: self.fallback_runs.load(Ordering::Relaxed),
+            deadline_misses: self.deadline_misses.load(Ordering::Relaxed),
+            injected_faults: self.injected_faults.load(Ordering::Relaxed),
+            tiers: Default::default(),
+        };
+        for (i, t) in self.tiers.iter().enumerate() {
+            s.tiers[i] = TierHealthStats {
+                successes: t.successes.load(Ordering::Relaxed),
+                failures: t.failures.load(Ordering::Relaxed),
+                trips: t.trips.load(Ordering::Relaxed),
+                probes: t.probes.load(Ordering::Relaxed),
+                state: BreakerState::from_u8(t.state.load(Ordering::Relaxed)),
+            };
+        }
+        s
+    }
+
+    fn reset(&self) {
+        self.dispatches.store(0, Ordering::Relaxed);
+        self.fallback_runs.store(0, Ordering::Relaxed);
+        self.deadline_misses.store(0, Ordering::Relaxed);
+        self.injected_faults.store(0, Ordering::Relaxed);
+        for t in &self.tiers {
+            t.state.store(BreakerState::Closed as u8, Ordering::Relaxed);
+            t.consec.store(0, Ordering::Relaxed);
+            t.ewma_milli.store(0, Ordering::Relaxed);
+            t.opened_at.store(0, Ordering::Relaxed);
+            t.successes.store(0, Ordering::Relaxed);
+            t.failures.store(0, Ordering::Relaxed);
+            t.trips.store(0, Ordering::Relaxed);
+            t.probes.store(0, Ordering::Relaxed);
+        }
+    }
+}
+
 /// Owns one instance of every available backend and serves each request
 /// with the cheapest legal one under its [`CostModel`].  The Leon3
 /// coprocessor model joined via [`with_leon3`](Self::with_leon3); the
@@ -349,6 +639,12 @@ pub struct EngineSelector {
     /// Requests served per [`EngineChoice`] (indexed by
     /// `EngineChoice::index`).
     hits: [AtomicU64; EngineChoice::COUNT],
+    /// Per-tier health + breaker state behind the dispatch funnel.
+    health: Health,
+    /// Seeded fault injector consulted at the dispatch funnel
+    /// ([`with_chaos`](Self::with_chaos)); never fires on the fallback
+    /// re-serve, so the ladder always terminates.
+    chaos: Option<Arc<FaultPlan>>,
 }
 
 impl EngineSelector {
@@ -400,8 +696,19 @@ impl EngineSelector {
             cost: CostModel::default(),
             measured: MeasuredLegs::default(),
             hits: std::array::from_fn(|_| AtomicU64::new(0)),
+            health: Health::default(),
+            chaos: None,
         }
     }
+
+    /// Multiple of the cost-model estimate a dispatch may take before
+    /// it counts as a deadline miss (generous: estimates are medians,
+    /// hosts are noisy — only pathological stalls should miss).
+    const DEADLINE_FACTOR: f64 = 32.0;
+
+    /// Deadline floor in ns (scheduler jitter alone can cost
+    /// milliseconds on a loaded host; never miss below this).
+    const DEADLINE_FLOOR_NS: f64 = 10_000_000.0;
 
     /// Size of the shard pool (call before the pool's first use; a
     /// single worker disables sharding entirely).
@@ -572,13 +879,17 @@ impl EngineSelector {
                 self.cost.estimate(choice, layout, n, workers)
             }
         };
-        let scalar = if layout.hw_supported() {
-            EngineChoice::Pow2
-        } else {
-            EngineChoice::Software
-        };
+        // Quarantine = re-running the argmin over the surviving tiers:
+        // every leg below simply drops out while its breaker is open.
+        // `SoftwareEngine` is the unconditional floor — it supports
+        // every layout and is never quarantined, so the argmin always
+        // has a survivor.
+        let scalar = self.scalar_choice(layout);
         let mut best = (scalar, price(scalar));
-        if self.shard_workers > 1 && n >= self.shard_threshold {
+        if self.shard_workers > 1
+            && n >= self.shard_threshold
+            && self.health.admit(EngineChoice::Sharded)
+        {
             let ns = price(EngineChoice::Sharded);
             if ns < best.1 {
                 best = (EngineChoice::Sharded, ns);
@@ -586,7 +897,10 @@ impl EngineSelector {
         }
         #[cfg(feature = "xla-unit")]
         if let Some(x) = &self.xla {
-            if n >= self.xla_threshold && x.supports(layout) {
+            if n >= self.xla_threshold
+                && x.supports(layout)
+                && self.health.admit(EngineChoice::XlaBatch)
+            {
                 let ns = price(EngineChoice::XlaBatch);
                 if ns < best.1 {
                     best = (EngineChoice::XlaBatch, ns);
@@ -594,14 +908,17 @@ impl EngineSelector {
             }
         }
         if let Some(l3) = &self.leon3 {
-            if l3.supports(layout) {
+            if l3.supports(layout) && self.health.admit(EngineChoice::Leon3) {
                 let ns = price(EngineChoice::Leon3);
                 if ns < best.1 {
                     best = (EngineChoice::Leon3, ns);
                 }
             }
         }
-        if self.remote.is_some() && n >= self.remote_threshold {
+        if self.remote.is_some()
+            && n >= self.remote_threshold
+            && self.health.admit(EngineChoice::Remote)
+        {
             // the workers run AutoEngine: every layout is legal
             let ns = price(EngineChoice::Remote);
             if ns < best.1 {
@@ -609,6 +926,17 @@ impl EngineSelector {
             }
         }
         best.0
+    }
+
+    /// The scalar floor for `layout`: the pow2 fast path while its
+    /// breaker admits it, software Algorithm 1 otherwise (software is
+    /// never quarantined — the ladder must terminate).
+    fn scalar_choice(&self, layout: &ArrayLayout) -> EngineChoice {
+        if layout.hw_supported() && self.health.admit(EngineChoice::Pow2) {
+            EngineChoice::Pow2
+        } else {
+            EngineChoice::Software
+        }
     }
 
     /// The backend the cost model picks for `layout` at `batch_len`.
@@ -680,6 +1008,123 @@ impl EngineSelector {
         self.hits[choice.index()].fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Install a seeded fault injector at the dispatch funnel: each
+    /// passthrough draws from `plan` before running its chosen backend
+    /// (errors are returned unrun, spikes are billed against the
+    /// deadline).  The fallback re-serve never draws, so injected
+    /// faults are always absorbed — `--chaos SEED` ends here.
+    pub fn with_chaos(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.chaos = Some(plan);
+        self
+    }
+
+    /// In-place form of [`with_chaos`](Self::with_chaos) (the CPU
+    /// pipelines own their selector by value).
+    pub fn set_chaos(&mut self, plan: Arc<FaultPlan>) {
+        self.chaos = Some(plan);
+    }
+
+    /// Is a chaos plan installed?
+    pub fn has_chaos(&self) -> bool {
+        self.chaos.is_some()
+    }
+
+    /// Snapshot the degradation ladder (per-tier health, breaker
+    /// states, fallback/deadline/injection totals).
+    pub fn health_stats(&self) -> HealthStats {
+        self.health.snapshot()
+    }
+
+    /// Zero the health record and close every breaker (e.g. between
+    /// campaign phases, or per-iteration in the resilience bench).
+    pub fn reset_health(&self) {
+        self.health.reset();
+    }
+
+    /// One guarded trip through the funnel: draw any planned chaos,
+    /// time the chosen backend against its cost-model deadline, feed
+    /// the outcome to the health record, and transparently re-serve a
+    /// transient failure ([`EngineError::Backend`]) or deadline miss
+    /// via the fallback ladder.  Returns the choice that actually
+    /// produced the output.  Structural refusals (`UnsupportedLayout`,
+    /// `TableTooSmall`, `LengthMismatch`) propagate unchanged — they
+    /// are deterministic caller errors a fallback would only mask.
+    fn dispatch(
+        &self,
+        primary: EngineChoice,
+        layout: &ArrayLayout,
+        n: usize,
+        walk: bool,
+        run: &mut dyn FnMut(&dyn AddressEngine) -> Result<(), EngineError>,
+    ) -> Result<EngineChoice, EngineError> {
+        let clock = self.health.dispatches.fetch_add(1, Ordering::Relaxed) + 1;
+        self.record(primary);
+        let workers = self.effective_workers(n);
+        let estimate = if walk {
+            self.cost.estimate_walk(primary, n, workers)
+        } else {
+            self.cost.estimate(primary, layout, n, workers)
+        };
+        let deadline_ns =
+            Self::DEADLINE_FACTOR * estimate + Self::DEADLINE_FLOOR_NS;
+        let fault = self.chaos.as_deref().and_then(|p| p.engine_fault());
+        if fault.is_some() {
+            self.health.injected_faults.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut billed_ns = 0.0;
+        let outcome = match fault {
+            Some(EngineFault::Error) => Err(EngineError::Backend(format!(
+                "chaos: injected fault on `{}`",
+                primary.name()
+            ))),
+            other => {
+                if let Some(EngineFault::Spike(ns)) = other {
+                    billed_ns += ns as f64;
+                }
+                let t0 = Instant::now();
+                let r = run(self.engine_for(primary));
+                billed_ns += t0.elapsed().as_nanos() as f64;
+                r
+            }
+        };
+        match outcome {
+            Ok(()) if billed_ns <= deadline_ns => {
+                self.health.on_success(primary);
+                return Ok(primary);
+            }
+            Ok(()) => {
+                // over deadline: the result is valid but the tier is
+                // sick — health-fail it and re-serve below so callers
+                // get the bounded-latency tier from here on
+                self.health.deadline_misses.fetch_add(1, Ordering::Relaxed);
+                self.health.on_failure(primary, clock);
+            }
+            Err(EngineError::Backend(_)) => {
+                self.health.on_failure(primary, clock);
+            }
+            Err(e) => return Err(e),
+        }
+        // The fallback ladder (chaos- and deadline-exempt, so it always
+        // terminates): the sharded pool where the batch warrants it and
+        // it is not the tier that just failed, else the scalar floor.
+        self.health.fallback_runs.fetch_add(1, Ordering::Relaxed);
+        if primary != EngineChoice::Sharded
+            && self.shard_workers > 1
+            && n >= self.shard_threshold
+        {
+            if run(self.engine_for(EngineChoice::Sharded)).is_ok() {
+                self.health.on_success(EngineChoice::Sharded);
+                return Ok(EngineChoice::Sharded);
+            }
+            self.health.on_failure(EngineChoice::Sharded, clock);
+            self.health.fallback_runs.fetch_add(1, Ordering::Relaxed);
+        }
+        let scalar = self.scalar_choice(layout);
+        run(self.engine_for(scalar))?;
+        self.health.on_success(scalar);
+        Ok(scalar)
+    }
+
     /// Requests served per backend through the selector's passthroughs
     /// since construction (or the last [`reset_hits`](Self::reset_hits))
     /// — the actual backend mix, archived by
@@ -696,7 +1141,9 @@ impl EngineSelector {
         }
     }
 
-    // ---- convenience passthroughs (select + count per call) ----
+    // ---- convenience passthroughs (select + guard + count per call):
+    // every one runs the argmin once, then serves through the guarded
+    // dispatch funnel (health, breaker, deadline, fallback) ----
 
     pub fn translate(
         &self,
@@ -705,8 +1152,10 @@ impl EngineSelector {
         out: &mut BatchOut,
     ) -> Result<(), EngineError> {
         let choice = self.choice(&ctx.layout, batch.len());
-        self.record(choice);
-        self.engine_for(choice).translate(ctx, batch, out)
+        self.dispatch(choice, &ctx.layout, batch.len(), false, &mut |e| {
+            e.translate(ctx, batch, out)
+        })
+        .map(|_| ())
     }
 
     pub fn increment(
@@ -719,9 +1168,11 @@ impl EngineSelector {
     }
 
     /// [`increment`](Self::increment) that also reports which backend
-    /// served the request.  The argmin runs **once**; callers tallying
-    /// their own telemetry (the CPU pipelines' per-window `EngineMix`)
-    /// use this instead of a separate `choice()` + `increment()` pair.
+    /// served the request — under degradation that is the *fallback*
+    /// tier, not the argmin pick, so telemetry stays honest.  The
+    /// argmin runs **once**; callers tallying their own telemetry (the
+    /// CPU pipelines' per-window `EngineMix`) use this instead of a
+    /// separate `choice()` + `increment()` pair.
     pub fn increment_choosing(
         &self,
         ctx: &EngineCtx,
@@ -729,9 +1180,9 @@ impl EngineSelector {
         out: &mut Vec<SharedPtr>,
     ) -> Result<EngineChoice, EngineError> {
         let choice = self.choice(&ctx.layout, batch.len());
-        self.record(choice);
-        self.engine_for(choice).increment(ctx, batch, out)?;
-        Ok(choice)
+        self.dispatch(choice, &ctx.layout, batch.len(), false, &mut |e| {
+            e.increment(ctx, batch, out)
+        })
     }
 
     pub fn walk(
@@ -743,8 +1194,10 @@ impl EngineSelector {
         out: &mut BatchOut,
     ) -> Result<(), EngineError> {
         let choice = self.choice_walk(&ctx.layout, steps);
-        self.record(choice);
-        self.engine_for(choice).walk(ctx, start, inc, steps, out)
+        self.dispatch(choice, &ctx.layout, steps, true, &mut |e| {
+            e.walk(ctx, start, inc, steps, out)
+        })
+        .map(|_| ())
     }
 
     pub fn translate_one(
@@ -754,8 +1207,12 @@ impl EngineSelector {
         inc: u64,
     ) -> Result<(SharedPtr, u64, Locality), EngineError> {
         let choice = self.choice(&ctx.layout, 1);
-        self.record(choice);
-        self.engine_for(choice).translate_one(ctx, ptr, inc)
+        let mut res = None;
+        self.dispatch(choice, &ctx.layout, 1, false, &mut |e| {
+            res = Some(e.translate_one(ctx, ptr, inc)?);
+            Ok(())
+        })?;
+        Ok(res.expect("dispatch succeeded without a result"))
     }
 }
 
@@ -963,6 +1420,94 @@ mod tests {
         assert_eq!(est, cm.remote_dispatch_ns + n as f64 * cm.remote_ns_per_ptr);
         // (selector-level remote routing needs live worker processes;
         // rust/tests/remote_engine.rs covers it end to end.)
+    }
+
+    #[test]
+    fn injected_faults_are_absorbed_by_the_fallback_ladder() {
+        use super::super::fault::FaultSpec;
+        // Every dispatch draws an injected error, yet no error may ever
+        // reach the caller and outputs stay bit-identical.
+        let plan = Arc::new(FaultPlan::new(FaultSpec {
+            error: 1.0,
+            ..FaultSpec::quiet(0xC0FFEE)
+        }));
+        let sel = EngineSelector::new()
+            .with_shard_workers(1)
+            .with_chaos(Arc::clone(&plan));
+        let layout = ArrayLayout::new(4, 8, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        for i in 0..64 {
+            batch.push(SharedPtr::for_index(&layout, 0, i * 3), i);
+        }
+        let (mut via, mut direct) = (BatchOut::new(), BatchOut::new());
+        for _ in 0..8 {
+            sel.translate(&ctx, &batch, &mut via).unwrap();
+        }
+        SoftwareEngine.translate(&ctx, &batch, &mut direct).unwrap();
+        assert_eq!(via, direct);
+        let h = sel.health_stats();
+        assert_eq!(h.dispatches, 8);
+        assert_eq!(h.fallback_runs, 8, "every dispatch was re-served");
+        assert_eq!(h.injected_faults, 8);
+        assert!(h.failures() >= 8);
+        // the pow2 primary tripped its breaker after TRIP_CONSEC
+        // failures, so the scalar floor degraded to software
+        assert_eq!(h.tiers[EngineChoice::Pow2.index()].state, BreakerState::Open);
+        assert!(h.tiers[EngineChoice::Pow2.index()].trips >= 1);
+        assert_eq!(sel.scalar_choice(&layout), EngineChoice::Software);
+    }
+
+    #[test]
+    fn breaker_reopens_after_cooldown_and_recovers_on_a_clean_probe() {
+        use super::super::fault::FaultSpec;
+        let layout = ArrayLayout::new(4, 8, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        batch.push(SharedPtr::NULL, 1);
+        let mut out = BatchOut::new();
+        // trip the pow2 breaker with an always-fault plan...
+        let mut sel = EngineSelector::new()
+            .with_shard_workers(1)
+            .with_chaos(Arc::new(FaultPlan::new(FaultSpec {
+                error: 1.0,
+                ..FaultSpec::quiet(1)
+            })));
+        for _ in 0..Health::TRIP_CONSEC {
+            sel.translate(&ctx, &batch, &mut out).unwrap();
+        }
+        assert_eq!(
+            sel.health_stats().tiers[EngineChoice::Pow2.index()].state,
+            BreakerState::Open
+        );
+        // ...then heal the backend and run out the cooldown clock
+        sel.set_chaos(Arc::new(FaultPlan::quiet(2)));
+        for _ in 0..Health::COOLDOWN_DISPATCHES + 2 {
+            sel.translate(&ctx, &batch, &mut out).unwrap();
+        }
+        let tier = sel.health_stats().tiers[EngineChoice::Pow2.index()];
+        assert_eq!(tier.state, BreakerState::Closed, "probe must re-close");
+        assert!(tier.probes >= 1, "recovery must go through a probe");
+        assert_eq!(sel.choice(&layout, 1), EngineChoice::Pow2);
+    }
+
+    #[test]
+    fn structural_refusals_still_propagate_loudly() {
+        // A fallback that masked a LengthMismatch would hide a caller
+        // bug: structural errors bypass the ladder.
+        let sel = EngineSelector::new();
+        let layout = ArrayLayout::new(4, 8, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        batch.push(SharedPtr::NULL, 1);
+        batch.incs.push(7); // corrupt the SoA invariant
+        let mut out = BatchOut::new();
+        let err = sel.translate(&ctx, &batch, &mut out).unwrap_err();
+        assert!(matches!(err, EngineError::LengthMismatch { .. }));
+        assert_eq!(sel.health_stats().fallback_runs, 0);
     }
 
     #[test]

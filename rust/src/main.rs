@@ -31,9 +31,9 @@ use std::process::ExitCode;
 use pgas_hw::coordinator::{self, Campaign};
 use pgas_hw::cpu::CpuModel;
 use pgas_hw::engine::{
-    AddressEngine, BatchOut, EngineCtx, EngineSelector, Leon3Engine,
-    Pow2Engine, PtrBatch, RemoteEngine, RemoteTier, ShardedEngine,
-    SoftwareEngine,
+    AddressEngine, BatchOut, EngineCtx, EngineSelector, FaultSpec,
+    Leon3Engine, Pow2Engine, PtrBatch, RemoteEngine, RemoteTier,
+    ShardedEngine, SoftwareEngine,
 };
 use pgas_hw::npb::{self, Kernel, PaperVariant, Scale};
 use pgas_hw::sptr::{ArrayLayout, BaseTable, SharedPtr};
@@ -53,11 +53,22 @@ fn usage() -> &'static str {
                             with --remote; [--daemon-conns N] sessions)
          [--remote-fast]   (price the pool/daemon as a dedicated
                             service so eligible windows take the hop)
+         [--chaos SEED[:SPEC]]
+                           (seeded fault injection into every core's
+                            selector; bare SEED uses the default
+                            transient mix, SPEC tunes rates, e.g.
+                            0xC0FFEE:error=0.5,spike=0.2,spike_ms=10;
+                            results are unchanged — prints the engine
+                            health table)
   sweep  [--kernels ..] [--models ..] [--cores 1,2,4,..] [--scale F]
          [--config campaign.cfg] [--out results/]
          [--remote N | --daemon PATH] [--remote-fast]
                            (add the remote tier to the engine report
                             AND every sweep point's core selectors)
+         [--chaos SEED[:SPEC]]
+                           (arm every sweep point with the seeded fault
+                            plan; figures must be identical, the merged
+                            health table shows the absorbed storm)
   leon3  [--bench vecadd|matmul|all] [--threads 1|2|4] [--tables]
   area
   disasm --kernel K [--variant V] [--full]
@@ -176,6 +187,16 @@ fn parse_remote_tier(
     Ok(Some(tier))
 }
 
+/// Parse `--chaos SEED[:SPEC]` into a [`FaultSpec`] (None when absent).
+fn parse_chaos(
+    flags: &HashMap<String, String>,
+) -> Result<Option<FaultSpec>, String> {
+    match flags.get("chaos") {
+        Some(s) => FaultSpec::parse(s).map(Some),
+        None => Ok(None),
+    }
+}
+
 fn parse_variant(flags: &HashMap<String, String>) -> Result<PaperVariant, String> {
     match flags.get("variant").map(|s| s.as_str()).unwrap_or("hw") {
         "unopt" => Ok(PaperVariant::Unopt),
@@ -198,7 +219,8 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
     let scale = get_scale(flags)?;
     let lookahead = !flags.contains_key("no-lookahead");
     let remote = parse_remote_tier(flags)?;
-    let out = npb::run_opts(
+    let chaos = parse_chaos(flags)?;
+    let out = npb::run_opts_with(
         kernel,
         variant,
         model,
@@ -206,6 +228,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
         &scale,
         lookahead,
         remote.as_ref(),
+        chaos.as_ref(),
     );
     println!(
         "{} [{}] {} x{}: {} cycles = {:.3} ms simulated @2GHz (validated OK)",
@@ -233,6 +256,12 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
         mix.batched_share() * 100.0,
         mix.runs_label(),
     );
+    if chaos.is_some() {
+        println!(
+            "{}",
+            coordinator::health_table(&out.result.health).render()
+        );
+    }
     if flags.contains_key("stats") {
         println!("\n{}", out.result.stats_txt());
     }
@@ -269,6 +298,7 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<(), String> {
             factor: s.parse().map_err(|_| "bad scale")?,
         };
     }
+    campaign.chaos = parse_chaos(flags)?;
     eprintln!(
         "campaign: {} points, scale 1/{}, {} jobs",
         campaign.points().len(),
@@ -307,6 +337,13 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<(), String> {
     }
     println!("{}", coordinator::headline_summary(&outs).render());
     println!("{}", coordinator::engine_mix_table(&outs).render());
+    if campaign.chaos.is_some() {
+        let mut health = pgas_hw::engine::HealthStats::default();
+        for o in &outs {
+            health.merge(&o.result.health);
+        }
+        println!("{}", coordinator::health_table(&health).render());
+    }
     if let Some(dir) = flags.get("out") {
         std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
         let path = format!("{dir}/outcomes.csv");

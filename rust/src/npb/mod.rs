@@ -241,6 +241,30 @@ pub fn run_opts(
     lookahead: bool,
     remote: Option<&crate::engine::RemoteTier>,
 ) -> RunOutcome {
+    run_opts_with(
+        kernel, variant, model, cores, scale, lookahead, remote, None,
+    )
+}
+
+/// [`run_opts`] plus seeded fault injection: when `chaos` is given,
+/// every core's selector is armed with a decorrelated
+/// [`FaultPlan`](crate::engine::FaultPlan) stream before the run.
+/// Transient injected faults are absorbed by the selector's fallback
+/// ladder, so the architectural results (cycles, validation) are
+/// bit-identical to the fault-free run — only the `health`/`degrade`
+/// telemetry in [`MachineResult`] records the storm (the chaos soak in
+/// `tests/chaos.rs` asserts exactly this).
+#[allow(clippy::too_many_arguments)]
+pub fn run_opts_with(
+    kernel: Kernel,
+    variant: PaperVariant,
+    model: CpuModel,
+    cores: u32,
+    scale: &Scale,
+    lookahead: bool,
+    remote: Option<&crate::engine::RemoteTier>,
+    chaos: Option<&crate::engine::FaultSpec>,
+) -> RunOutcome {
     let built = build(kernel, cores, variant.source(), scale);
     let opts = CompileOpts {
         lowering: variant.lowering(),
@@ -254,6 +278,9 @@ pub fn run_opts(
     let mut machine = Machine::new(cfg);
     if let Some(tier) = remote {
         machine.install_remote(tier);
+    }
+    if let Some(spec) = chaos {
+        machine.install_chaos(*spec);
     }
     (built.setup)(&built.rt, machine.mem_mut());
     let result = machine.run(&ck.program);

@@ -80,6 +80,10 @@ pub struct MachineResult {
     /// epoch hits, stale-epoch re-installs, per-connection reconnects
     /// and whole-pool restarts.
     pub remote_client: Option<crate::engine::RemoteClientStats>,
+    /// Selector health/degradation telemetry summed over cores:
+    /// dispatches, backend failures absorbed by the fallback ladder,
+    /// deadline misses, injected faults, and per-tier breaker activity.
+    pub health: crate::engine::HealthStats,
 }
 
 impl MachineResult {
@@ -187,7 +191,49 @@ impl MachineResult {
                 rc.restarts.to_string(),
                 "whole-pool rebuilds after failed heals",
             );
+            put(
+                "remote.stale_failures",
+                rc.stale_failures.to_string(),
+                "requests failed after the re-install budget",
+            );
         }
+        // health/degradation telemetry: always present, so fault-free
+        // runs prove their zeros and chaos runs show the ladder at work
+        put(
+            "health.dispatches",
+            self.health.dispatches.to_string(),
+            "batched windows routed by the selectors",
+        );
+        put(
+            "health.failures",
+            self.health.failures().to_string(),
+            "backend failures absorbed across tiers",
+        );
+        put(
+            "health.trips",
+            self.health.trips().to_string(),
+            "circuit-breaker trips (tier quarantined)",
+        );
+        put(
+            "health.probes",
+            self.health.probes().to_string(),
+            "half-open probes sent to tripped tiers",
+        );
+        put(
+            "degrade.fallback_runs",
+            self.health.fallback_runs.to_string(),
+            "windows re-served by a lower tier",
+        );
+        put(
+            "degrade.deadline_misses",
+            self.health.deadline_misses.to_string(),
+            "dispatches over the cost-model deadline",
+        );
+        put(
+            "degrade.injected_faults",
+            self.health.injected_faults.to_string(),
+            "chaos-injected engine faults absorbed",
+        );
         put("cache.l1d_misses", self.l1d_misses.to_string(), "sum over cores");
         put("cache.l2_misses", self.l2_misses.to_string(), "shared L2");
         put(
@@ -282,6 +328,20 @@ impl Machine {
         self.remote = Some(tier.clone());
     }
 
+    /// Arm every core's selector with a seeded fault plan.  Cores get
+    /// decorrelated streams (the seed is offset per core by a large odd
+    /// constant) so a machine-wide chaos run does not fault all cores
+    /// in lockstep, yet the whole schedule replays from one seed.
+    /// Call before [`run`](Self::run).
+    pub fn install_chaos(&mut self, spec: crate::engine::FaultSpec) {
+        for (core, cpu) in self.cpus.iter_mut().enumerate() {
+            let stream =
+                (core as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            cpu.lookahead_mut()
+                .install_chaos(spec.with_seed(spec.seed ^ stream));
+        }
+    }
+
     /// Run `prog` SPMD on all cores to completion.
     pub fn run(&mut self, prog: &Program) -> MachineResult {
         let n = self.cfg.cores as usize;
@@ -373,8 +433,10 @@ impl Machine {
         }
         let cycles = per_core.iter().map(|s| s.cycles).max().unwrap_or(0);
         let mut engine_mix = EngineMix::default();
+        let mut health = crate::engine::HealthStats::default();
         for c in &self.cpus {
             engine_mix.merge(&c.engine_mix());
+            health.merge(&c.health());
         }
         MachineResult {
             cycles,
@@ -389,6 +451,7 @@ impl Machine {
                 .remote
                 .as_ref()
                 .map(|tier| tier.engine.client_stats()),
+            health,
         }
     }
 }

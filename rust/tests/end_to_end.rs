@@ -14,6 +14,7 @@ fn small_campaign_all_kernels_atomic() {
         variants: PaperVariant::ALL.to_vec(),
         scale: Scale { factor: 1024 },
         jobs: 8,
+        chaos: None,
     };
     let outs = c.run(false);
     // 5 kernels x 2 core counts x 3 variants (every run validated)
@@ -85,6 +86,7 @@ fn figure7_qualitative_shape_cg() {
         variants: PaperVariant::ALL.to_vec(),
         scale,
         jobs: 3,
+        chaos: None,
     };
     let outs = c.run(false);
     let u = find(&outs, Kernel::Cg, PaperVariant::Unopt, CpuModel::Atomic, 4).unwrap();
