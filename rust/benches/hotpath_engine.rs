@@ -22,6 +22,10 @@
 //! * `resilience` — the degradation ladder's price: a healthy selector
 //!   vs one whose every dispatch draws an injected fault and is
 //!   transparently re-served by the chaos-exempt fallback floor.
+//! * `gather` — the inspector/executor tier: per-owner aggregated
+//!   dispatch (`GatherPlan`) vs naive per-element `translate_one`,
+//!   plus the measured bucketing cost the selector's gather threshold
+//!   is priced off.
 //!
 //! `--quick` (the CI smoke leg) shrinks batch sizes and iteration
 //! counts.  The xla-batch backend joins automatically when built with
@@ -367,6 +371,65 @@ fn main() {
     );
     assert!(storm.injected() > 0, "chaos selector never drew a fault");
 
+    // ---- gather: the inspector/executor tier vs per-element
+    // dispatch.  The per-element leg is what a naive executor pays for
+    // a data-dependent gather: one engine dispatch per pointer
+    // (`translate_one`, a 1-element batch each).  The planned leg runs
+    // the full inspector/executor path — bucket by owner, one
+    // aggregated dispatch per owner, splice back to request order —
+    // with the plan construction cost *included* every iteration.
+    // Bit-identical results are the conformance suite's job
+    // (`tests/gather_conformance.rs`); this records what aggregation
+    // buys at production batch sizes. ----
+    use pgas_hw::engine::GatherPlan;
+    let g_n: usize = if quick { 1 << 12 } else { 1 << 15 };
+    let g_batch = random_batch(&layout, g_n, 0x6A7E);
+    let r = bench(
+        &format!("gather per-element (translate_one) x{g_n}"),
+        warmup,
+        iters,
+        || {
+            out.clear();
+            out.reserve(g_n);
+            for i in 0..g_batch.len() {
+                let (p, va, loc) = Pow2Engine
+                    .translate_one(&ctx, g_batch.ptrs[i], g_batch.incs[i])
+                    .unwrap();
+                out.push(p, va, loc);
+            }
+            black_box(&out);
+        },
+    );
+    let per_element_ns_per_ptr = r.mean_secs() * 1e9 / g_n as f64;
+    let gplan = GatherPlan::from_batch(&ctx, &g_batch).unwrap();
+    let g_owners = gplan.bucket_count();
+    let r = bench(
+        &format!("gather planned (inspector/executor) x{g_n}"),
+        warmup,
+        iters,
+        || {
+            let plan = GatherPlan::from_batch(&ctx, &g_batch).unwrap();
+            plan.execute(&Pow2Engine, &ctx, &mut out).unwrap();
+            black_box(&out);
+        },
+    );
+    let planned_ns_per_ptr = r.mean_secs() * 1e9 / g_n as f64;
+    let gather_speedup = per_element_ns_per_ptr / planned_ns_per_ptr;
+    let (bucket_ns_per_ptr, plan_setup_ns) = GatherPlan::calibrate();
+    println!(
+        "  -> gather: {per_element_ns_per_ptr:.1} ns/ptr per-element vs \
+         {planned_ns_per_ptr:.1} ns/ptr planned ({gather_speedup:.2}x, \
+         {g_owners} owner buckets; bucketing {bucket_ns_per_ptr:.2} ns/ptr, \
+         plan setup {plan_setup_ns:.0} ns)"
+    );
+    // The acceptance gate: aggregated dispatch must beat per-element
+    // translate at production batch sizes (10% noise headroom).
+    assert!(
+        planned_ns_per_ptr <= per_element_ns_per_ptr * 1.10,
+        "planned gather slower than per-element dispatch: \
+         {planned_ns_per_ptr:.1} vs {per_element_ns_per_ptr:.1} ns/ptr"
+    );
+
     // Merge (not overwrite): BENCH_engine.json is shared with the
     // fig11-14 model benches, so each target may run in any order and
     // re-running one replaces only its own sections.
@@ -446,6 +509,18 @@ fn main() {
              \"fallback_overhead\": {fallback_overhead:.2}, \
              \"injected\": {}}}",
             storm.injected()
+        ),
+    );
+    merge_bench_json(
+        OUT,
+        "gather",
+        &format!(
+            "{{\"batch\": {g_n}, \"owners\": {g_owners}, \
+             \"per_element_ns_per_ptr\": {per_element_ns_per_ptr:.1}, \
+             \"planned_ns_per_ptr\": {planned_ns_per_ptr:.1}, \
+             \"planned_speedup\": {gather_speedup:.2}, \
+             \"bucket_ns_per_ptr\": {bucket_ns_per_ptr:.2}, \
+             \"plan_setup_ns\": {plan_setup_ns:.0}}}"
         ),
     );
     println!("merged host sections into BENCH_engine.json");

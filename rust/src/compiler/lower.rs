@@ -291,6 +291,53 @@ impl<'a> Ctx<'a> {
         }
     }
 
+    /// `d = base + idx` elements, leaving `base` untouched.  The Hw
+    /// path is a single `PgasIncR` with `rd != ra` — the shape the
+    /// pipeline's window planner batches, since `base` is never
+    /// written inside the window.
+    fn sptr_at(&mut self, d: u8, base: u8, layout: &ArrayLayout, idx: Val) {
+        let hw_ok = self.opts.lowering == Lowering::Hw && layout.hw_supported();
+        if hw_ok {
+            let (l2bs, l2es, _) = layout.log2s().unwrap();
+            let (l2bs, l2es) = (l2bs as u8, l2es as u8);
+            self.stats.hw_incs += 1;
+            match idx {
+                Val::R(r) => self
+                    .asm
+                    .emit(Inst::PgasIncR { rd: d, ra: base, rb: r, l2es, l2bs }),
+                Val::I(c) => {
+                    self.asm.emit(Inst::Ldi { rd: SCR, imm: c });
+                    self.asm.emit(Inst::PgasIncR {
+                        rd: d,
+                        ra: base,
+                        rb: SCR,
+                        l2es,
+                        l2bs,
+                    });
+                }
+            }
+        } else {
+            // software: copy the cursor, then Algorithm 1 on the copy.
+            // When `d` aliases the index register, stage the index
+            // through SCR first or the copy would clobber it (soft_inc
+            // reads the increment before its own SCR write).
+            let inc = match idx {
+                Val::R(r) if r == d => {
+                    self.asm.emit(Inst::Opr {
+                        op: IntOp::Add,
+                        rd: SCR,
+                        ra: r,
+                        rb: ZERO,
+                    });
+                    Val::R(SCR)
+                }
+                other => other,
+            };
+            self.asm.emit(Inst::Opr { op: IntOp::Add, rd: d, ra: base, rb: ZERO });
+            self.soft_inc(d, layout, inc);
+        }
+    }
+
     fn sptr_mem(&mut self, w: MemWidth, reg: u8, p: u8, disp: i16, store: bool, layout: &ArrayLayout) {
         let hw_ok = self.opts.lowering == Lowering::Hw && layout.hw_supported();
         if hw_ok {
@@ -394,6 +441,10 @@ impl<'a> Ctx<'a> {
             Op::SptrInc { p, arr, inc } => {
                 let layout = self.rt.array(*arr).layout;
                 self.sptr_inc(*p, &layout, *inc);
+            }
+            Op::SptrAt { d, base, arr, idx } => {
+                let layout = self.rt.array(*arr).layout;
+                self.sptr_at(*d, *base, &layout, *idx);
             }
             Op::SptrLd { w, d, p, disp } => {
                 // layout of the array the pointer came from is tracked by
@@ -554,6 +605,10 @@ pub fn compile(m: &IrModule, rt: &UpcRuntime, opts: &CompileOpts) -> CompiledKer
         for op in ops {
             match op {
                 Op::SptrInit { d, arr, .. } => {
+                    ptr_arrays.insert(*d, *arr);
+                    ctx.lower_op(op);
+                }
+                Op::SptrAt { d, arr, .. } => {
                     ptr_arrays.insert(*d, *arr);
                     ctx.lower_op(op);
                 }
@@ -725,6 +780,63 @@ mod tests {
             .filter(|i| matches!(i, Inst::PgasIncI { .. }))
             .count();
         assert_eq!(n_inci, 2);
+    }
+
+    /// `sptr_at` (the gather form, rd may alias the index register)
+    /// must index identically under both lowerings — including when
+    /// the destination aliases the index register, where the soft
+    /// path has to stage the index before clobbering the cursor copy.
+    #[test]
+    fn sptr_at_matches_host_indexing_in_both_lowerings() {
+        for lowering in [Lowering::Soft, Lowering::Hw] {
+            let threads = 4u32;
+            let mut rt = UpcRuntime::new(threads);
+            let n = 32u64;
+            let arr = rt.alloc_shared("a", 4, 8, n);
+            let mut b = IrBuilder::new(&mut rt);
+            let base = b.sptr_init(arr, Val::I(0));
+            let acc = b.iconst(0);
+            b.for_range(Val::I(0), Val::I(8), 1, |b, i| {
+                let j = b.it();
+                b.bin(IntOp::Mul, j, i, Val::I(3)); // idx = 3*i
+                b.sptr_at(j, base, arr, Val::R(j)); // d aliases idx
+                let t = b.it();
+                b.sptr_ld(MemWidth::U64, t, j, 0);
+                b.add(acc, acc, Val::R(t));
+                b.free_i(t);
+                b.free_i(j);
+            });
+            let m = b.mythread();
+            b.iff(Cond::Eq, m, |b| {
+                let pb = b.priv_base();
+                b.st(MemWidth::U64, acc, pb, 0);
+                b.free_i(pb);
+            });
+            let module = b.finish("gather_at");
+            let opts = CompileOpts {
+                lowering,
+                static_threads: false,
+                numthreads: threads,
+                volatile_stores: true,
+            };
+            let ck = compile(&module, &rt, &opts);
+            let mut machine =
+                Machine::new(MachineCfg::new(threads, CpuModel::Atomic));
+            for i in 0..n {
+                rt.write_u64(machine.mem_mut(), arr, i, i * 7 + 1);
+            }
+            machine.run(&ck.program);
+            let got = machine.mem.read(
+                MemWidth::U64,
+                crate::mem::seg_base(0) + crate::mem::PRIV_OFF,
+            );
+            let want: u64 = (0..8u64).map(|i| (3 * i) * 7 + 1).sum();
+            assert_eq!(got, want, "{lowering:?}");
+            match lowering {
+                Lowering::Hw => assert!(ck.stats.hw_incs >= 1),
+                Lowering::Soft => assert!(ck.stats.soft_incs >= 1),
+            }
+        }
     }
 
     #[test]

@@ -74,6 +74,12 @@ pub enum Op {
     SptrInit { d: u8, arr: ArrayId, idx: Val },
     /// p = p + inc elements (through arr's block-cyclic layout)
     SptrInc { p: u8, arr: ArrayId, inc: Val },
+    /// d = base + idx elements: the gather form.  `base` holds a
+    /// loop-invariant packed pointer (usually &arr[0]), so consecutive
+    /// `SptrAt` lanes read only pre-window registers and the pipeline's
+    /// window planner can batch them — a data-dependent `SptrInit`
+    /// chains through its own base load and never batches.
+    SptrAt { d: u8, base: u8, arr: ArrayId, idx: Val },
     SptrLd { w: MemWidth, d: u8, p: u8, disp: i16 },
     SptrSt { w: MemWidth, s: u8, p: u8, disp: i16 },
     /// d = raw sysva of MYTHREAD's chunk of `arr`, element offset `off`
@@ -214,6 +220,13 @@ impl<'rt> IrBuilder<'rt> {
 
     pub fn sptr_inc(&mut self, p: u8, arr: ArrayId, inc: Val) {
         self.push(Op::SptrInc { p, arr, inc });
+    }
+
+    /// `d = &base_ptr[idx]` through `arr`'s layout, leaving the base
+    /// cursor untouched.  `d` may alias the index register (the lanes
+    /// of a gather loop reuse their index registers as destinations).
+    pub fn sptr_at(&mut self, d: u8, base: u8, arr: ArrayId, idx: Val) {
+        self.push(Op::SptrAt { d, base, arr, idx });
     }
 
     pub fn sptr_ld(&mut self, w: MemWidth, d: u8, p: u8, disp: i16) {

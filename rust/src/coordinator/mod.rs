@@ -356,11 +356,19 @@ pub fn engine_mix_table(outs: &[RunOutcome]) -> Table {
          unopt/HW cycles at the same kernel/model/cores)",
         &[
             "kernel", "variant", "model", "cores", "batched incs",
-            "scalar incs", "batched%", "runs by backend", "HW speedup",
+            "scalar incs", "batched%", "runs by backend", "gather", "HW speedup",
         ],
     );
     for o in outs {
         let mix = o.engine_mix();
+        // inspector/executor tier: plans executed and pointers bucketed
+        // by owner ("-" when no window was gather-eligible)
+        let g = o.result.gather;
+        let gather = if g.plans > 0 {
+            format!("{}p/{}", g.plans, g.bucketed_ptrs)
+        } else {
+            "-".into()
+        };
         let speedup = if o.variant == PaperVariant::Hw {
             find(outs, o.kernel, PaperVariant::Unopt, o.model, o.cores)
                 .map(|u| {
@@ -382,6 +390,7 @@ pub fn engine_mix_table(outs: &[RunOutcome]) -> Table {
             mix.scalar_incs.to_string(),
             format!("{:.1}%", mix.batched_share() * 100.0),
             mix.runs_label(),
+            gather,
             speedup,
         ]);
     }
@@ -395,6 +404,7 @@ pub fn outcomes_csv(outs: &[RunOutcome]) -> String {
         &[
             "kernel", "variant", "model", "cores", "cycles", "instructions",
             "sim_ms", "hw_incs", "soft_incs", "hw_mems", "soft_mems",
+            "gather_plans", "gather_ptrs",
         ],
     );
     for o in outs {
@@ -410,6 +420,8 @@ pub fn outcomes_csv(outs: &[RunOutcome]) -> String {
             o.compile_stats.soft_incs.to_string(),
             o.compile_stats.hw_mems.to_string(),
             o.compile_stats.soft_mems.to_string(),
+            o.result.gather.plans.to_string(),
+            o.result.gather.bucketed_ptrs.to_string(),
         ]);
     }
     t.to_csv()

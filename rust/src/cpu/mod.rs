@@ -233,6 +233,12 @@ pub trait Cpu {
         self.lookahead().health()
     }
 
+    /// This core's inspector/executor gather telemetry (plans,
+    /// bucketed pointers, direct-serve fallbacks).
+    fn gather(&self) -> crate::engine::GatherStats {
+        self.lookahead().gather()
+    }
+
     /// Account `extra` stall cycles imposed from outside (bus contention
     /// computed by the machine-level contention model).
     fn add_stall_cycles(&mut self, extra: u64) {

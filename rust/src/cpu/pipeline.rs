@@ -317,6 +317,13 @@ impl Lookahead {
         self.selector.health_stats()
     }
 
+    /// Inspector/executor gather telemetry accumulated by this core's
+    /// selector (plans executed, pointers bucketed, eligible batches
+    /// served direct) — the `gather.*` lines of `stats_txt`.
+    pub fn gather(&self) -> crate::engine::GatherStats {
+        self.selector.gather_stats()
+    }
+
     #[inline]
     fn active(&self) -> bool {
         self.enabled && self.operable

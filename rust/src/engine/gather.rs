@@ -1,0 +1,524 @@
+//! The inspector/executor gather tier: plan-aware dispatch for
+//! data-dependent (irregular) shared access.
+//!
+//! All five classic NPB kernels walk affine strides — the shape
+//! `WalkCursor` and the pipeline's window planner already exploit.  The
+//! hard PGAS case the paper's hardware was built for is *indirection*:
+//! `x[col[k]]`-style gathers where every element needs its own address
+//! translation and no stride can be factored out.  The standard
+//! compiler/runtime answer (arXiv 2303.13954 for UPC++, and the
+//! inspector/executor literature behind it) is to split the access into
+//! two phases:
+//!
+//! 1. **inspect** — scan the index vector once, compute each target's
+//!    owning thread with cheap block-cyclic arithmetic (one div + one
+//!    mod per element, no LUT access), and bucket the requests into one
+//!    aggregated [`PtrBatch`] per owner;
+//! 2. **execute** — dispatch each owner's batch through any
+//!    [`AddressEngine`] (one message per *owner* instead of one per
+//!    *element* on the remote tiers), then splice the per-bucket
+//!    results back into the original request order.
+//!
+//! The splice makes the plan transparent: outputs are bit-identical to
+//! running the naive per-element path, for every backend
+//! (`tests/gather_conformance.rs` enforces this differentially, with
+//! randomized index vectors, across all backends and layouts).
+//!
+//! Plans refuse loudly ([`EngineError::Backend`]) when any single
+//! bucket could not cross the remote tier's wire: a bucket whose reply
+//! frame would exceed the 1 GiB frame cap is a planning error at
+//! *build* time, never a silent truncation at dispatch time.
+
+use std::time::Instant;
+
+use super::remote::{reply_frame_bytes, MAX_FRAME};
+use super::{AddressEngine, BatchOut, EngineCtx, EngineError, PtrBatch};
+use crate::sptr::SharedPtr;
+
+/// Counters the selector keeps for its gather leg (threaded through
+/// `Lookahead` → `MachineResult` → `stats_txt` as the `gather.*`
+/// lines).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct GatherStats {
+    /// Inspector/executor plans actually executed (multi-owner batches
+    /// that met the gather threshold).
+    pub plans: u64,
+    /// Pointers routed through those plans' per-owner buckets.
+    pub bucketed_ptrs: u64,
+    /// Gather-eligible batches served directly instead (single-owner
+    /// after inspection — bucketing would only add copies).
+    pub fallback: u64,
+}
+
+impl GatherStats {
+    /// Fold another core's counters into this one (the machine-level
+    /// roll-up mirrors `EngineMix::merge`).
+    pub fn merge(&mut self, other: &GatherStats) {
+        self.plans += other.plans;
+        self.bucketed_ptrs += other.bucketed_ptrs;
+        self.fallback += other.fallback;
+    }
+}
+
+/// Where element `i` of the original request landed: `(bucket,
+/// position-within-bucket)`, recorded during inspection so execution
+/// can splice per-bucket results back into request order.
+#[derive(Clone, Copy, Debug)]
+struct Slot {
+    bucket: u32,
+    pos: u32,
+}
+
+/// An inspected batch: one aggregated [`PtrBatch`] per owning thread,
+/// plus the splice map back to the original order.
+///
+/// # Examples
+///
+/// ```
+/// use pgas_hw::engine::{
+///     AddressEngine, BatchOut, EngineCtx, GatherPlan, PtrBatch,
+///     SoftwareEngine,
+/// };
+/// use pgas_hw::sptr::{ArrayLayout, BaseTable, SharedPtr};
+///
+/// // shared [4] int A[...] over 4 threads, gathered at indices that
+/// // hit three different owners, out of order.
+/// let layout = ArrayLayout::new(4, 4, 4);
+/// let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+/// let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+/// let plan =
+///     GatherPlan::from_indices(&ctx, SharedPtr::NULL, &[9, 1, 5, 1]).unwrap();
+/// assert_eq!(plan.len(), 4);
+/// assert_eq!(plan.bucket_count(), 3); // owners 2, 0, 1
+///
+/// // executing the plan is bit-identical to the per-element path
+/// let mut planned = BatchOut::new();
+/// plan.execute(&SoftwareEngine, &ctx, &mut planned).unwrap();
+/// for (i, &idx) in [9u64, 1, 5, 1].iter().enumerate() {
+///     let (p, sysva, loc) =
+///         SoftwareEngine.translate_one(&ctx, SharedPtr::NULL, idx).unwrap();
+///     assert_eq!((planned.ptrs[i], planned.sysva[i], planned.loc[i]),
+///                (p, sysva, loc));
+/// }
+/// ```
+#[derive(Clone, Debug)]
+pub struct GatherPlan {
+    /// Distinct owning threads, in order of first appearance.
+    owners: Vec<u32>,
+    /// One aggregated request batch per owner (parallel to `owners`).
+    buckets: Vec<PtrBatch>,
+    /// Per original element: which bucket it went to, and where.
+    slots: Vec<Slot>,
+}
+
+impl GatherPlan {
+    /// Owning thread of `ptr + inc` elements under `ctx`'s layout —
+    /// the inspector's whole per-element cost.  Block-cyclic layouts
+    /// advance one owner per block boundary crossed, so the owner falls
+    /// out of one div and one mod without computing the full Algorithm 1
+    /// (no local-block or va arithmetic, no LUT access).
+    #[inline]
+    fn owner_of(ctx: &EngineCtx, ptr: &SharedPtr, inc: u64) -> u32 {
+        let layout = ctx.layout();
+        // u128: `phase + inc` may not fit u64 near the top of the range
+        let blocks = (ptr.phase as u128 + inc as u128) / layout.blocksize as u128;
+        ((ptr.thread as u128 + blocks) % layout.numthreads as u128) as u32
+    }
+
+    /// Largest per-owner bucket the remote tier can carry: the reply
+    /// frame (64-byte header + 29 bytes per result) must fit the wire's
+    /// 1 GiB frame cap.  Exceeding it is refused at plan-build time.
+    pub fn max_bucket_len() -> usize {
+        // reply_frame_bytes is monotonic; solve 64 + 29n <= MAX_FRAME
+        let n = (MAX_FRAME - reply_frame_bytes(0)) / (reply_frame_bytes(1) - reply_frame_bytes(0));
+        debug_assert!(reply_frame_bytes(n) <= MAX_FRAME);
+        debug_assert!(reply_frame_bytes(n + 1) > MAX_FRAME);
+        n
+    }
+
+    /// Inspect `batch`: bucket every request by the owning thread of
+    /// its target and record the splice map.  Fails loudly when any
+    /// single bucket would exceed the remote tier's frame cap
+    /// ([`EngineError::Backend`]) — an executor must be able to route
+    /// *any* bucket to *any* backend, including across the wire.
+    pub fn from_batch(ctx: &EngineCtx, batch: &PtrBatch) -> Result<Self, EngineError> {
+        Self::from_batch_with_cap(ctx, batch, Self::max_bucket_len())
+    }
+
+    /// [`from_batch`](Self::from_batch) with an explicit bucket cap —
+    /// crate-internal so the wire-cap refusal path can be tested
+    /// without materializing a gigabyte-scale batch.
+    pub(crate) fn from_batch_with_cap(
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        cap: usize,
+    ) -> Result<Self, EngineError> {
+        batch.check()?;
+        let numthreads = ctx.layout().numthreads;
+        // dense owner→bucket map: layouts in this repo span at most 64
+        // threads, and even pathological ones are bounded by the u32
+        // thread field — fall back to linear probing past a sane size.
+        let mut dense = if numthreads <= 1 << 16 {
+            vec![u32::MAX; numthreads as usize]
+        } else {
+            Vec::new()
+        };
+        let mut plan = GatherPlan {
+            owners: Vec::new(),
+            buckets: Vec::new(),
+            slots: Vec::with_capacity(batch.len()),
+        };
+        for (ptr, &inc) in batch.ptrs.iter().zip(&batch.incs) {
+            let owner = Self::owner_of(ctx, ptr, inc);
+            let b = if dense.is_empty() {
+                match plan.owners.iter().position(|&o| o == owner) {
+                    Some(i) => i as u32,
+                    None => {
+                        plan.owners.push(owner);
+                        plan.buckets.push(PtrBatch::new());
+                        plan.owners.len() as u32 - 1
+                    }
+                }
+            } else if dense[owner as usize] != u32::MAX {
+                dense[owner as usize]
+            } else {
+                plan.owners.push(owner);
+                plan.buckets.push(PtrBatch::new());
+                let b = plan.owners.len() as u32 - 1;
+                dense[owner as usize] = b;
+                b
+            };
+            let bucket = &mut plan.buckets[b as usize];
+            if bucket.len() >= cap {
+                return Err(EngineError::Backend(format!(
+                    "gather plan refused: bucket for thread {owner} would \
+                     hold more than {cap} pointers and its reply frame \
+                     would exceed the {MAX_FRAME}-byte remote frame cap; \
+                     split the index vector",
+                )));
+            }
+            plan.slots.push(Slot { bucket: b, pos: bucket.len() as u32 });
+            bucket.push(*ptr, inc);
+        }
+        Ok(plan)
+    }
+
+    /// Inspect a gather of `indices` off one loop-invariant `base`
+    /// pointer (the `x[col[k]]` shape): element `i` of the plan is
+    /// `base + indices[i]` elements.
+    pub fn from_indices(
+        ctx: &EngineCtx,
+        base: SharedPtr,
+        indices: &[u64],
+    ) -> Result<Self, EngineError> {
+        let mut batch = PtrBatch::with_capacity(indices.len());
+        for &idx in indices {
+            batch.push(base, idx);
+        }
+        Self::from_batch(ctx, &batch)
+    }
+
+    /// Number of requests in the inspected batch.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Is the plan empty (zero buckets, executor is a no-op)?
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    /// How many distinct owners the batch touches.
+    pub fn bucket_count(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// The distinct owning threads, in order of first appearance.
+    pub fn owners(&self) -> &[u32] {
+        &self.owners
+    }
+
+    /// The aggregated per-owner request batches (parallel to
+    /// [`owners`](Self::owners)).
+    pub fn buckets(&self) -> &[PtrBatch] {
+        &self.buckets
+    }
+
+    /// Run the fused translate executor: each bucket through
+    /// `engine.translate`, results spliced back in request order.
+    pub fn execute(
+        &self,
+        engine: &dyn AddressEngine,
+        ctx: &EngineCtx,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        self.execute_with(out, &mut |bucket, scratch| {
+            engine.translate(ctx, bucket, scratch)
+        })
+    }
+
+    /// Run the increment-only executor: each bucket through
+    /// `engine.increment`, results spliced back in request order.
+    pub fn execute_increment(
+        &self,
+        engine: &dyn AddressEngine,
+        ctx: &EngineCtx,
+        out: &mut Vec<SharedPtr>,
+    ) -> Result<(), EngineError> {
+        self.execute_increment_with(out, &mut |bucket, scratch| {
+            engine.increment(ctx, bucket, scratch)
+        })
+    }
+
+    /// Closure form of [`execute`](Self::execute): `run` maps one
+    /// bucket to its [`BatchOut`] — this is how the selector routes
+    /// each bucket through its guarded dispatch funnel (possibly to a
+    /// *different* backend per bucket).
+    pub fn execute_with(
+        &self,
+        out: &mut BatchOut,
+        run: &mut dyn FnMut(&PtrBatch, &mut BatchOut) -> Result<(), EngineError>,
+    ) -> Result<(), EngineError> {
+        let mut parts: Vec<BatchOut> = Vec::with_capacity(self.buckets.len());
+        for bucket in &self.buckets {
+            let mut scratch = BatchOut::new();
+            run(bucket, &mut scratch)?;
+            if scratch.len() != bucket.len() {
+                return Err(EngineError::Backend(format!(
+                    "gather bucket produced {} results for {} requests",
+                    scratch.len(),
+                    bucket.len()
+                )));
+            }
+            parts.push(scratch);
+        }
+        out.clear();
+        out.reserve(self.slots.len());
+        for s in &self.slots {
+            let part = &parts[s.bucket as usize];
+            let i = s.pos as usize;
+            out.push(part.ptrs[i], part.sysva[i], part.loc[i]);
+        }
+        Ok(())
+    }
+
+    /// Closure form of [`execute_increment`](Self::execute_increment).
+    pub fn execute_increment_with(
+        &self,
+        out: &mut Vec<SharedPtr>,
+        run: &mut dyn FnMut(&PtrBatch, &mut Vec<SharedPtr>) -> Result<(), EngineError>,
+    ) -> Result<(), EngineError> {
+        let mut parts: Vec<Vec<SharedPtr>> = Vec::with_capacity(self.buckets.len());
+        for bucket in &self.buckets {
+            let mut scratch = Vec::new();
+            run(bucket, &mut scratch)?;
+            if scratch.len() != bucket.len() {
+                return Err(EngineError::Backend(format!(
+                    "gather bucket produced {} results for {} requests",
+                    scratch.len(),
+                    bucket.len()
+                )));
+            }
+            parts.push(scratch);
+        }
+        out.clear();
+        out.reserve(self.slots.len());
+        for s in &self.slots {
+            out.push(parts[s.bucket as usize][s.pos as usize]);
+        }
+        Ok(())
+    }
+
+    /// Measure this host's actual inspection cost: `(bucket_ns_per_ptr,
+    /// plan_setup_ns)` over a representative multi-owner batch.  The
+    /// selector prices its `gather_threshold` off these numbers
+    /// (`EngineSelector::with_gather_calibration`), the same
+    /// measured-not-guessed discipline as the Leon3/remote legs.
+    pub fn calibrate() -> (f64, f64) {
+        use crate::sptr::{ArrayLayout, BaseTable};
+        let layout = ArrayLayout::new(64, 8, 16);
+        let table = BaseTable::regular(16, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0)
+            .expect("calibration ctx is well-formed");
+        const N: usize = 4096;
+        const ROUNDS: u32 = 8;
+        let mut batch = PtrBatch::with_capacity(N);
+        let mut x = 0x9E37_79B9u64;
+        for _ in 0..N {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            batch.push(SharedPtr::NULL, x % (64 * 16 * 8));
+        }
+        // large-batch leg: per-pointer bucketing cost
+        let t0 = Instant::now();
+        for _ in 0..ROUNDS {
+            let plan = Self::from_batch(&ctx, &batch)
+                .expect("calibration batch fits the frame cap");
+            std::hint::black_box(plan.bucket_count());
+        }
+        let ns_per_ptr =
+            t0.elapsed().as_nanos() as f64 / (ROUNDS as u64 * N as u64) as f64;
+        // small-batch leg: fixed setup (allocation of owners/buckets)
+        let mut tiny = PtrBatch::with_capacity(2);
+        tiny.push(SharedPtr::NULL, 0);
+        tiny.push(SharedPtr::NULL, 64);
+        let t1 = Instant::now();
+        for _ in 0..ROUNDS * 64 {
+            let plan = Self::from_batch(&ctx, &tiny)
+                .expect("calibration batch fits the frame cap");
+            std::hint::black_box(plan.bucket_count());
+        }
+        let setup_ns = (t1.elapsed().as_nanos() as f64
+            / (ROUNDS as f64 * 64.0))
+            .max(1.0);
+        (ns_per_ptr.max(0.01), setup_ns)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Pow2Engine, SoftwareEngine};
+    use super::*;
+    use crate::sptr::{ArrayLayout, BaseTable};
+
+    fn fig2_ctx(table: &BaseTable) -> EngineCtx<'_> {
+        EngineCtx::new(ArrayLayout::new(4, 4, 4), table, 0).unwrap()
+    }
+
+    #[test]
+    fn buckets_group_by_owner_and_keep_request_order() {
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = fig2_ctx(&table);
+        // indices 0..3 → thread 0, 4..7 → thread 1, 8..11 → thread 2
+        let plan =
+            GatherPlan::from_indices(&ctx, SharedPtr::NULL, &[8, 0, 9, 4, 1])
+                .unwrap();
+        assert_eq!(plan.len(), 5);
+        assert_eq!(plan.owners(), &[2, 0, 1]); // first-appearance order
+        assert_eq!(plan.bucket_count(), 3);
+        let sizes: Vec<usize> =
+            plan.buckets().iter().map(|b| b.len()).collect();
+        assert_eq!(sizes, vec![2, 2, 1]);
+    }
+
+    #[test]
+    fn executor_is_bit_identical_to_per_element_path() {
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = fig2_ctx(&table);
+        let idx = [9u64, 1, 5, 1, 13, 0, 2, 7, 7];
+        let plan = GatherPlan::from_indices(&ctx, SharedPtr::NULL, &idx).unwrap();
+        for engine in [&SoftwareEngine as &dyn AddressEngine, &Pow2Engine] {
+            let mut planned = BatchOut::new();
+            plan.execute(engine, &ctx, &mut planned).unwrap();
+            assert_eq!(planned.len(), idx.len());
+            for (i, &inc) in idx.iter().enumerate() {
+                let (p, sysva, loc) =
+                    engine.translate_one(&ctx, SharedPtr::NULL, inc).unwrap();
+                assert_eq!(planned.ptrs[i], p, "{} elem {i}", engine.name());
+                assert_eq!(planned.sysva[i], sysva);
+                assert_eq!(planned.loc[i], loc);
+            }
+            let mut incs = Vec::new();
+            plan.execute_increment(engine, &ctx, &mut incs).unwrap();
+            assert_eq!(incs, planned.ptrs);
+        }
+    }
+
+    #[test]
+    fn empty_plan_executes_to_empty_output() {
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = fig2_ctx(&table);
+        let plan = GatherPlan::from_indices(&ctx, SharedPtr::NULL, &[]).unwrap();
+        assert!(plan.is_empty());
+        assert_eq!(plan.bucket_count(), 0);
+        let mut out = BatchOut::new();
+        out.push(SharedPtr::NULL, 1, crate::sptr::Locality::Local); // stale
+        plan.execute(&SoftwareEngine, &ctx, &mut out).unwrap();
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn owner_arithmetic_matches_full_increment() {
+        // non-pow2 geometry: the cheap owner arithmetic must agree with
+        // Algorithm 1's thread field everywhere
+        let layout = ArrayLayout::new(3, 24, 5);
+        let table = BaseTable::regular(5, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 2).unwrap();
+        for start in 0..30u64 {
+            let p = SharedPtr::for_index(&layout, 0, start);
+            for inc in [0u64, 1, 2, 3, 7, 14, 29, 1000] {
+                let want = p.incremented(inc, &layout).thread;
+                assert_eq!(
+                    GatherPlan::owner_of(&ctx, &p, inc),
+                    want,
+                    "start {start} inc {inc}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mismatched_bucket_output_is_refused() {
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = fig2_ctx(&table);
+        let plan =
+            GatherPlan::from_indices(&ctx, SharedPtr::NULL, &[0, 4]).unwrap();
+        let mut out = BatchOut::new();
+        let err = plan
+            .execute_with(&mut out, &mut |_b, _s| Ok(())) // produces nothing
+            .unwrap_err();
+        assert!(matches!(err, EngineError::Backend(_)));
+    }
+
+    #[test]
+    fn length_mismatch_propagates_from_inspection() {
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = fig2_ctx(&table);
+        let mut batch = PtrBatch::new();
+        batch.push(SharedPtr::NULL, 0);
+        batch.incs.push(7); // corrupt the SoA invariant
+        assert!(matches!(
+            GatherPlan::from_batch(&ctx, &batch),
+            Err(EngineError::LengthMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn over_cap_buckets_are_refused_loudly() {
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = fig2_ctx(&table);
+        // 3 indices landing on the same owner, cap of 2: the plan must
+        // refuse (loud Backend error naming the frame cap), never drop
+        // the overflow on the floor.
+        let mut batch = PtrBatch::new();
+        for _ in 0..3 {
+            batch.push(SharedPtr::NULL, 0); // all owner 0
+        }
+        let err =
+            GatherPlan::from_batch_with_cap(&ctx, &batch, 2).unwrap_err();
+        match err {
+            EngineError::Backend(msg) => {
+                assert!(msg.contains("frame cap"), "{msg}");
+                assert!(msg.contains("thread 0"), "{msg}");
+            }
+            other => panic!("expected Backend error, got {other:?}"),
+        }
+        // at exactly the cap the plan is legal
+        batch.ptrs.pop();
+        batch.incs.pop();
+        assert!(GatherPlan::from_batch_with_cap(&ctx, &batch, 2).is_ok());
+    }
+
+    #[test]
+    fn max_bucket_len_matches_wire_arithmetic() {
+        let n = GatherPlan::max_bucket_len();
+        assert!(reply_frame_bytes(n) <= MAX_FRAME);
+        assert!(reply_frame_bytes(n + 1) > MAX_FRAME);
+    }
+
+    #[test]
+    fn calibration_returns_positive_costs() {
+        let (ns_per_ptr, setup_ns) = GatherPlan::calibrate();
+        assert!(ns_per_ptr > 0.0);
+        assert!(setup_ns > 0.0);
+    }
+}

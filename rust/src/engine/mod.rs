@@ -35,6 +35,12 @@
 //! * [`EngineSelector`] — picks the cheapest legal backend per
 //!   request, the runtime mirror of the compiler's `Soft`/`Hw`
 //!   lowering choice.
+//! * [`GatherPlan`] (the [`gather`] module) — the inspector/executor
+//!   tier for data-dependent indirection: inspect an index vector once,
+//!   bucket requests by owning thread, dispatch one aggregated batch
+//!   per owner through any backend above, splice results back in
+//!   request order.  The selector routes multi-owner increment batches
+//!   through it past `gather_threshold`.
 //!
 //! The full backend matrix (capabilities, layout constraints, cost
 //! legs, selection rules) is documented in `ARCHITECTURE.md` at the
@@ -77,6 +83,7 @@
 //! at 1/2/4 worker processes, worker-death recovery).
 
 mod fault;
+pub mod gather;
 mod leon3;
 mod pow2;
 pub mod remote;
@@ -87,6 +94,7 @@ mod software;
 mod xla_batch;
 
 pub use fault::{ChaosEngine, EngineFault, FaultPlan, FaultSpec, WireFault};
+pub use gather::{GatherPlan, GatherStats};
 pub use leon3::Leon3Engine;
 pub use pow2::Pow2Engine;
 pub use remote::{RemoteClientStats, RemoteEngine, RemoteTier};

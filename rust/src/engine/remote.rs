@@ -1776,6 +1776,22 @@ mod tests {
         assert_eq!(err.kind(), ErrorKind::InvalidData);
     }
 
+    /// The gather planner's per-bucket ceiling is derived from this
+    /// module's wire arithmetic: a bucket at `max_bucket_len()` still
+    /// fits the reply frame cap, one more pointer would not — so a
+    /// plan the inspector accepts can never produce the oversized
+    /// frame `check_frame_budget` (and the worker, on receipt) would
+    /// kill the request for.
+    #[test]
+    fn gather_bucket_cap_matches_the_wire_frame_budget() {
+        use crate::engine::GatherPlan;
+        let cap = GatherPlan::max_bucket_len();
+        assert!(reply_frame_bytes(cap) <= MAX_FRAME);
+        assert!(reply_frame_bytes(cap + 1) > MAX_FRAME);
+        assert!(check_frame_budget(0, cap).is_ok());
+        assert!(check_frame_budget(0, cap + 1).is_err());
+    }
+
     /// A pathological server that acks installs but answers every op
     /// with a stale-epoch status forever: the client must burn its
     /// re-install budget and then fail loudly, not retry for eternity.

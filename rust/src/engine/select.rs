@@ -66,6 +66,7 @@ use std::sync::{Arc, OnceLock};
 use std::time::Instant;
 
 use super::fault::{EngineFault, FaultPlan};
+use super::gather::{GatherPlan, GatherStats};
 use super::remote::RemoteEngine;
 use super::{
     AddressEngine, BatchOut, EngineCtx, EngineError, Leon3Engine, Pow2Engine,
@@ -242,6 +243,12 @@ pub struct CostModel {
     /// Fixed scatter/gather fee for one remote request (frame
     /// round-trips across every shard).  Also measured, not guessed.
     pub remote_dispatch_ns: f64,
+    /// ns per pointer the inspector pays to bucket an irregular batch
+    /// by owning thread (one div + one mod + one map probe).  Measured
+    /// by [`EngineSelector::with_gather_calibration`] via
+    /// [`GatherPlan::calibrate`]; the default is the `hotpath_engine`
+    /// order of magnitude.
+    pub gather_bucket_ns_per_ptr: f64,
 }
 
 impl Default for CostModel {
@@ -258,6 +265,7 @@ impl Default for CostModel {
             leon3_dispatch_ns: 5_000.0,
             remote_ns_per_ptr: 25.0,
             remote_dispatch_ns: 150_000.0,
+            gather_bucket_ns_per_ptr: 2.0,
         }
     }
 }
@@ -336,6 +344,25 @@ struct MeasuredLegs {
     /// `(ns_per_ptr, dispatch_ns)` from `RemoteEngine::calibrate` (or
     /// the forced-tier pricing explicitly installed with it).
     remote: Option<(f64, f64)>,
+}
+
+/// Interior-mutable counters behind the selector's gather leg
+/// (snapshotted as [`GatherStats`]).
+#[derive(Debug, Default)]
+struct GatherCounters {
+    plans: AtomicU64,
+    bucketed_ptrs: AtomicU64,
+    fallback: AtomicU64,
+}
+
+impl GatherCounters {
+    fn snapshot(&self) -> GatherStats {
+        GatherStats {
+            plans: self.plans.load(Ordering::Relaxed),
+            bucketed_ptrs: self.bucketed_ptrs.load(Ordering::Relaxed),
+            fallback: self.fallback.load(Ordering::Relaxed),
+        }
+    }
 }
 
 /// Circuit-breaker state of one backend tier.
@@ -633,6 +660,11 @@ pub struct EngineSelector {
     remote: Option<Arc<RemoteEngine>>,
     /// Minimum batch size eligible for the remote leg.
     remote_threshold: usize,
+    /// Minimum increment-batch size worth inspecting for per-owner
+    /// bucketing ([`increment_choosing`](Self::increment_choosing)).
+    gather_threshold: usize,
+    /// Counters behind the gather leg (`gather.*` stats lines).
+    gather: GatherCounters,
     cost: CostModel,
     /// Install-time calibrations, re-applied on every cost-model write.
     measured: MeasuredLegs,
@@ -670,6 +702,14 @@ impl EngineSelector {
     /// are worth pricing.
     pub const DEFAULT_DAEMON_THRESHOLD: usize = 1 << 14;
 
+    /// Minimum increment-batch size the inspector/executor gather leg
+    /// even looks at.  Below this the bucketing tax (and the extra
+    /// per-bucket dispatches) cannot amortize; the default matches the
+    /// width of a typical compiled gather window.
+    /// [`with_gather_calibration`](Self::with_gather_calibration)
+    /// re-derives it from this host's measured plan-setup cost.
+    pub const DEFAULT_GATHER_THRESHOLD: usize = 8;
+
     /// Cap on the default worker-pool size (campaigns run many
     /// selector-owning runtimes concurrently).
     const MAX_DEFAULT_WORKERS: usize = 8;
@@ -693,6 +733,8 @@ impl EngineSelector {
             leon3: None,
             remote: None,
             remote_threshold: Self::DEFAULT_REMOTE_THRESHOLD,
+            gather_threshold: Self::DEFAULT_GATHER_THRESHOLD,
+            gather: GatherCounters::default(),
             cost: CostModel::default(),
             measured: MeasuredLegs::default(),
             hits: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -722,6 +764,40 @@ impl EngineSelector {
     pub fn with_shard_threshold(mut self, n: usize) -> Self {
         self.shard_threshold = n.max(1);
         self
+    }
+
+    /// Route increment batches of at least `n` pointers through the
+    /// inspector/executor gather leg (per-owner bucketing).  `n = 0`
+    /// is clamped to 1; use `usize::MAX` to disable gathering.
+    pub fn with_gather_threshold(mut self, n: usize) -> Self {
+        self.gather_threshold = n.max(1);
+        self
+    }
+
+    /// Measure this host's actual inspection cost
+    /// ([`GatherPlan::calibrate`]) and derive the gather threshold from
+    /// it: the per-pointer bucketing leg goes into the cost model, and
+    /// the threshold is set where the plan's *fixed* setup cost
+    /// amortizes below one software-translate per pointer — the same
+    /// measured-not-guessed discipline as the Leon3/remote legs.
+    pub fn with_gather_calibration(mut self) -> Self {
+        let (bucket_ns_per_ptr, plan_setup_ns) = GatherPlan::calibrate();
+        self.cost.gather_bucket_ns_per_ptr = bucket_ns_per_ptr;
+        let floor = self.cost.software_ns_per_ptr.max(1e-9);
+        self.gather_threshold = ((plan_setup_ns / floor).ceil() as usize)
+            .max(Self::DEFAULT_GATHER_THRESHOLD);
+        self
+    }
+
+    /// The minimum increment-batch size the gather leg inspects.
+    pub fn gather_threshold(&self) -> usize {
+        self.gather_threshold
+    }
+
+    /// Snapshot the gather-leg counters (plans executed, pointers
+    /// bucketed, eligible batches served direct).
+    pub fn gather_stats(&self) -> GatherStats {
+        self.gather.snapshot()
     }
 
     /// Replace the tunable cost constants (e.g. from a calibration
@@ -1179,10 +1255,59 @@ impl EngineSelector {
         batch: &PtrBatch,
         out: &mut Vec<SharedPtr>,
     ) -> Result<EngineChoice, EngineError> {
+        if batch.len() >= self.gather_threshold {
+            // inspector/executor leg: bucket by owner, one aggregated
+            // dispatch per owner, splice back in request order.
+            // Inspection refusals (frame-cap overflow, SoA corruption)
+            // propagate loudly — they are planning errors, not
+            // transient faults.
+            let plan = GatherPlan::from_batch(ctx, batch)?;
+            if plan.bucket_count() >= 2 {
+                return self.increment_planned(ctx, &plan, out);
+            }
+            // single-owner after inspection: bucketing would only add
+            // copies; record the decision and serve direct
+            self.gather.fallback.fetch_add(1, Ordering::Relaxed);
+        }
         let choice = self.choice(&ctx.layout, batch.len());
         self.dispatch(choice, &ctx.layout, batch.len(), false, &mut |e| {
             e.increment(ctx, batch, out)
         })
+    }
+
+    /// Serve one inspected multi-owner batch: every per-owner bucket
+    /// goes through the full guarded dispatch funnel independently
+    /// (argmin at the bucket's size, chaos draw, deadline, fallback
+    /// ladder), then the plan splices results back into request order —
+    /// bit-identical to the direct path.  Returns the backend that
+    /// served the most pointers, the honest headline for the caller's
+    /// `EngineMix` tally.
+    fn increment_planned(
+        &self,
+        ctx: &EngineCtx,
+        plan: &GatherPlan,
+        out: &mut Vec<SharedPtr>,
+    ) -> Result<EngineChoice, EngineError> {
+        self.gather.plans.fetch_add(1, Ordering::Relaxed);
+        self.gather
+            .bucketed_ptrs
+            .fetch_add(plan.len() as u64, Ordering::Relaxed);
+        let mut dominant = (self.scalar_choice(&ctx.layout), 0usize);
+        plan.execute_increment_with(out, &mut |bucket, scratch| {
+            let choice = self.choice(&ctx.layout, bucket.len());
+            let served = self.dispatch(
+                choice,
+                &ctx.layout,
+                bucket.len(),
+                false,
+                &mut |e| e.increment(ctx, bucket, scratch),
+            )?;
+            if bucket.len() > dominant.1 {
+                dominant = (served, bucket.len());
+            }
+            Ok(())
+        })?;
+        Ok(dominant.0)
     }
 
     pub fn walk(
@@ -1508,6 +1633,105 @@ mod tests {
         let err = sel.translate(&ctx, &batch, &mut out).unwrap_err();
         assert!(matches!(err, EngineError::LengthMismatch { .. }));
         assert_eq!(sel.health_stats().fallback_runs, 0);
+    }
+
+    #[test]
+    fn gather_leg_buckets_multi_owner_increment_batches() {
+        let sel = EngineSelector::new().with_shard_workers(1);
+        let layout = ArrayLayout::new(4, 8, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        // 16 independent gathers over 3 owners — well past the default
+        // gather threshold
+        let mut batch = PtrBatch::new();
+        for i in 0..16u64 {
+            batch.push(SharedPtr::NULL, (i * 5) % 12);
+        }
+        let (mut via, mut direct) = (Vec::new(), Vec::new());
+        sel.increment(&ctx, &batch, &mut via).unwrap();
+        SoftwareEngine.increment(&ctx, &batch, &mut direct).unwrap();
+        assert_eq!(via, direct, "planned path must stay bit-identical");
+        let g = sel.gather_stats();
+        assert_eq!(g.plans, 1);
+        assert_eq!(g.bucketed_ptrs, 16);
+        assert_eq!(g.fallback, 0);
+    }
+
+    #[test]
+    fn gather_leg_serves_single_owner_batches_direct() {
+        let sel = EngineSelector::new().with_shard_workers(1);
+        let layout = ArrayLayout::new(4, 8, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        // 12 increments all landing on thread 0 (phase stays in block
+        // 0): inspection finds one owner and the batch goes direct
+        let mut batch = PtrBatch::new();
+        for i in 0..12u64 {
+            batch.push(SharedPtr::NULL, i % 4);
+        }
+        let mut out = Vec::new();
+        sel.increment(&ctx, &batch, &mut out).unwrap();
+        let g = sel.gather_stats();
+        assert_eq!(g.plans, 0);
+        assert_eq!(g.fallback, 1);
+        // below the threshold nothing is even inspected
+        let mut tiny = PtrBatch::new();
+        tiny.push(SharedPtr::NULL, 5);
+        tiny.push(SharedPtr::NULL, 9);
+        sel.increment(&ctx, &tiny, &mut out).unwrap();
+        let g2 = sel.gather_stats();
+        assert_eq!((g2.plans, g2.fallback), (0, 1));
+    }
+
+    #[test]
+    fn gather_threshold_is_tunable_and_calibratable() {
+        let off = EngineSelector::new().with_gather_threshold(usize::MAX);
+        let layout = ArrayLayout::new(4, 8, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        for i in 0..64u64 {
+            batch.push(SharedPtr::NULL, i);
+        }
+        let mut out = Vec::new();
+        off.increment(&ctx, &batch, &mut out).unwrap();
+        assert_eq!(off.gather_stats(), GatherStats::default());
+        // calibration measures a positive bucketing leg and keeps the
+        // threshold at or above the compiled-window floor
+        let cal = EngineSelector::new().with_gather_calibration();
+        assert!(cal.cost_model().gather_bucket_ns_per_ptr > 0.0);
+        assert!(
+            cal.gather_threshold() >= EngineSelector::DEFAULT_GATHER_THRESHOLD
+        );
+    }
+
+    #[test]
+    fn gather_leg_is_chaos_transparent() {
+        use super::super::fault::FaultSpec;
+        // every bucket dispatch draws an injected error; the fallback
+        // ladder must absorb all of them and the splice must still be
+        // bit-identical
+        let sel = EngineSelector::new()
+            .with_shard_workers(1)
+            .with_chaos(Arc::new(FaultPlan::new(FaultSpec {
+                error: 1.0,
+                ..FaultSpec::quiet(0xDEAD_BEEF)
+            })));
+        let layout = ArrayLayout::new(4, 8, 4);
+        let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        for i in 0..32u64 {
+            batch.push(SharedPtr::NULL, (i * 7) % 48);
+        }
+        let (mut via, mut direct) = (Vec::new(), Vec::new());
+        sel.increment(&ctx, &batch, &mut via).unwrap();
+        SoftwareEngine.increment(&ctx, &batch, &mut direct).unwrap();
+        assert_eq!(via, direct);
+        let h = sel.health_stats();
+        assert!(h.injected_faults >= 1);
+        assert!(h.fallback_runs >= 1);
+        assert_eq!(sel.gather_stats().plans, 1);
     }
 
     #[test]

@@ -42,7 +42,7 @@ use pgas_hw::{area, isa, leon3};
 
 fn usage() -> &'static str {
     "usage: pgas-hw <run|sweep|leon3|area|disasm|verify|walk|serve-engine|daemon> [--key value ...]
-  run    --kernel EP|IS|CG|MG|FT --variant unopt|manual|hw
+  run    --kernel EP|IS|CG|MG|FT|MD|SPMV --variant unopt|manual|hw
          --model atomic|timing|detailed --cores N [--scale F]
          [--no-lookahead]  (disable batched PGAS-increment windows;
                             cycle totals are identical either way)
@@ -61,6 +61,8 @@ fn usage() -> &'static str {
                             results are unchanged — prints the engine
                             health table)
   sweep  [--kernels ..] [--models ..] [--cores 1,2,4,..] [--scale F]
+                           (kernels include the irregular-gather pair
+                            MD and SPMV, off the default figure set)
          [--config campaign.cfg] [--out results/]
          [--remote N | --daemon PATH] [--remote-fast]
                            (add the remote tier to the engine report
@@ -256,6 +258,13 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
         mix.batched_share() * 100.0,
         mix.runs_label(),
     );
+    let g = out.result.gather;
+    if g.plans + g.fallback > 0 {
+        println!(
+            "  gather: {} plans bucketing {} ptrs, {} eligible batches served direct",
+            g.plans, g.bucketed_ptrs, g.fallback,
+        );
+    }
     if chaos.is_some() {
         println!(
             "{}",

@@ -1,0 +1,211 @@
+//! MD — molecular-dynamics neighbor-list force pass (irregular gather).
+//!
+//! Structure follows the UPC MD mini-apps (arXiv 1603.03888): particles
+//! are blocked across threads, each particle carries a fixed-degree
+//! neighbor list, and the force pass reads `NBR` *data-dependent*
+//! remote positions per particle — the canonical inspector/executor
+//! workload.  Unlike the affine NPB kernels, the gather indices are
+//! only known at run time, so the hand-optimized variant can privatize
+//! the neighbor lists and the force output (both affinity-local) but
+//! **not** the position gathers: those stay on shared-pointer
+//! arithmetic in every variant.
+//!
+//! The compiled inner loop emits `NBR` consecutive `sptr_at` lanes
+//! (one `PgasIncR` each under HW lowering), which the pipeline's
+//! lookahead batches into a single multi-owner window — exactly the
+//! shape the engine's [`GatherPlan`](crate::engine::GatherPlan)
+//! inspector buckets by owner.  Expected paper shape: HW beats the
+//! manual optimization here (the reverse of IS), because the dominant
+//! cost is the non-privatizable gather.
+
+use super::{BuiltKernel, Scale};
+use crate::compiler::{IrBuilder, SourceVariant, Val};
+use crate::isa::{IntOp, MemWidth};
+use crate::upc::UpcRuntime;
+use crate::util::rng::Xoshiro256;
+
+/// Class-W-like particle count (scaled down via `Scale`).
+const CLASS_W_PARTICLES: u64 = 1 << 16;
+/// Fixed neighbor-list degree (pow2 so the list array is HW-mappable;
+/// also the gather-lane count per particle, sized to fill one
+/// lookahead window at the selector's default gather threshold).
+const NBR: u64 = 8;
+/// Position values stay below this so integer force sums never wrap.
+const POS_RANGE: u64 = 1 << 10;
+
+fn host_data(n: u64) -> (Vec<u64>, Vec<u64>) {
+    let mut rng = Xoshiro256::new(0x3D00_0001);
+    let pos: Vec<u64> = (0..n).map(|_| rng.below(POS_RANGE)).collect();
+    let nbr: Vec<u64> = (0..n * NBR).map(|_| rng.below(n)).collect();
+    (pos, nbr)
+}
+
+pub fn build(threads: u32, source: SourceVariant, scale: &Scale) -> BuiltKernel {
+    let n = scale.dim(CLASS_W_PARTICLES, 256).next_power_of_two();
+    let chunk = n / threads as u64;
+    assert!(chunk >= 1, "more threads than particles");
+
+    let mut rt = UpcRuntime::new(threads);
+    // positions: blocked so thread t owns x[t*chunk .. (t+1)*chunk)
+    let x = rt.alloc_shared("md_x", chunk, 8, n);
+    // neighbor lists: thread t owns its particles' lists contiguously
+    let nbr = rt.alloc_shared("md_nbr", chunk * NBR, 8, n * NBR);
+    // force accumulators, same distribution as positions
+    let f = rt.alloc_shared("md_f", chunk, 8, n);
+
+    let mut b = IrBuilder::new(&mut rt);
+
+    // Loop-invariant gather base: &x[0].  Every lane below computes
+    // &x[j] from it without disturbing the cursor, so consecutive
+    // lanes stay independent and window-batchable.
+    let bx = b.sptr_init(x, Val::I(0));
+
+    match source {
+        SourceVariant::Unoptimized => {
+            // everything through shared pointers, as plain UPC compiles
+            let myt = b.mythread();
+            let start = b.it();
+            b.bin(IntOp::Mul, start, myt, Val::I(chunk as i64));
+            let nstart = b.it();
+            b.bin(IntOp::Mul, nstart, myt, Val::I((chunk * NBR) as i64));
+            let pnb = b.sptr_init(nbr, Val::R(nstart));
+            let pf = b.sptr_init(f, Val::R(start));
+            b.for_range(Val::I(0), Val::I(chunk as i64), 1, |b, _| {
+                let j: Vec<u8> = (0..NBR).map(|_| b.it()).collect();
+                // read this particle's whole neighbor list (own block,
+                // consecutive elements: byte displacements off the
+                // list cursor)
+                for (g, &jg) in j.iter().enumerate() {
+                    b.sptr_ld(MemWidth::U64, jg, pnb, (g * 8) as i16);
+                }
+                // NBR consecutive gather lanes — one batchable
+                // PgasIncR run under HW lowering
+                for &jg in &j {
+                    b.sptr_at(jg, bx, x, Val::R(jg));
+                }
+                let acc = b.iconst(0);
+                for &jg in &j {
+                    let v = b.it();
+                    b.sptr_ld(MemWidth::U64, v, jg, 0);
+                    b.bin(IntOp::Add, acc, acc, Val::R(v));
+                    b.free_i(v);
+                }
+                b.sptr_st(MemWidth::U64, acc, pf, 0);
+                b.free_i(acc);
+                for &jg in j.iter().rev() {
+                    b.free_i(jg);
+                }
+                b.sptr_inc(pf, f, Val::I(1));
+                b.sptr_inc(pnb, nbr, Val::I(NBR as i64));
+            });
+            b.free_i(pf);
+            b.free_i(pnb);
+            b.free_i(nstart);
+            b.free_i(start);
+            b.free_i(myt);
+        }
+        SourceVariant::Privatized => {
+            // the hand-optimized MD: neighbor lists and force output
+            // are affinity-local → raw pointers; the position gather
+            // is data-dependent and cross-thread → cannot be
+            // privatized, stays on shared-pointer arithmetic
+            let cn = b.local_addr(nbr, Val::I(0));
+            let cf = b.local_addr(f, Val::I(0));
+            b.for_range(Val::I(0), Val::I(chunk as i64), 1, |b, _| {
+                let j: Vec<u8> = (0..NBR).map(|_| b.it()).collect();
+                for (g, &jg) in j.iter().enumerate() {
+                    b.ld(MemWidth::U64, jg, cn, (g * 8) as i32);
+                }
+                for &jg in &j {
+                    b.sptr_at(jg, bx, x, Val::R(jg));
+                }
+                let acc = b.iconst(0);
+                for &jg in &j {
+                    let v = b.it();
+                    b.sptr_ld(MemWidth::U64, v, jg, 0);
+                    b.bin(IntOp::Add, acc, acc, Val::R(v));
+                    b.free_i(v);
+                }
+                b.st(MemWidth::U64, acc, cf, 0);
+                b.free_i(acc);
+                for &jg in j.iter().rev() {
+                    b.free_i(jg);
+                }
+                b.add(cn, cn, Val::I((NBR * 8) as i64));
+                b.add(cf, cf, Val::I(8));
+            });
+            b.free_i(cf);
+            b.free_i(cn);
+        }
+    }
+    b.free_i(bx);
+
+    let module = b.finish("md");
+
+    let (pos, lists) = host_data(n);
+    let pos_for_setup = pos.clone();
+    let lists_for_setup = lists.clone();
+    let setup = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
+        rt.write_u64_seq(mem, x, 0, &pos_for_setup);
+        rt.write_u64_seq(mem, nbr, 0, &lists_for_setup);
+    });
+
+    let validate = Box::new(move |rt: &UpcRuntime, mem: &mut crate::mem::MemSystem| {
+        let got = rt.read_u64_seq(mem, f, 0, n as usize);
+        for i in 0..n as usize {
+            let want: u64 = (0..NBR as usize)
+                .map(|g| pos[lists[i * NBR as usize + g] as usize])
+                .sum();
+            if got[i] != want {
+                return Err(format!("force[{i}]: got {}, want {want}", got[i]));
+            }
+        }
+        Ok(())
+    });
+
+    BuiltKernel { rt, module, setup, validate }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cpu::CpuModel;
+    use crate::npb::{run, Kernel, PaperVariant};
+
+    #[test]
+    fn md_validates_in_all_variants() {
+        let scale = Scale { factor: 512 };
+        for v in PaperVariant::ALL {
+            let out = run(Kernel::Md, v, CpuModel::Atomic, 4, &scale);
+            assert!(out.result.cycles > 0, "{v:?}");
+        }
+    }
+
+    #[test]
+    fn md_hw_beats_manual_on_irregular_gather() {
+        // The gather dominates and cannot be privatized, so — unlike
+        // IS — HW support beats the manual optimization outright.
+        let scale = Scale { factor: 512 };
+        let t = 4;
+        let unopt = run(Kernel::Md, PaperVariant::Unopt, CpuModel::Atomic, t, &scale);
+        let manual = run(Kernel::Md, PaperVariant::Manual, CpuModel::Atomic, t, &scale);
+        let hw = run(Kernel::Md, PaperVariant::Hw, CpuModel::Atomic, t, &scale);
+        let (cu, cm, ch) = (
+            unopt.result.cycles as f64,
+            manual.result.cycles as f64,
+            hw.result.cycles as f64,
+        );
+        assert!(cu / ch > 2.0, "MD hw speedup {:.2} too small", cu / ch);
+        assert!(ch < cm, "hw ({ch}) should beat manual ({cm}) on MD");
+    }
+
+    #[test]
+    fn md_hw_run_exercises_the_gather_planner() {
+        let scale = Scale { factor: 512 };
+        let out = run(Kernel::Md, PaperVariant::Hw, CpuModel::Atomic, 4, &scale);
+        let g = out.result.gather;
+        assert!(g.plans > 0, "multi-owner gather windows should be planned: {g:?}");
+        assert!(g.bucketed_ptrs >= g.plans, "{g:?}");
+        assert!(out.result.engine_mix.batched_incs > 0);
+    }
+}

@@ -1,6 +1,9 @@
 //! The five NAS Parallel Benchmark kernels of the paper's evaluation
 //! (EP, IS, CG, MG, FT), expressed against the UPC runtime and compiled
-//! by the mini-UPC compiler in the paper's three configurations.
+//! by the mini-UPC compiler in the paper's three configurations — plus
+//! two irregular-gather workloads (MD neighbor-list traversal, SPMV
+//! CSR gather) that exercise the engine's inspector/executor tier
+//! ([`Kernel::IRREGULAR`]).
 //!
 //! Class-W problem shapes are preserved structurally but scaled down by
 //! a configurable factor (cycle-level simulation of full class W takes
@@ -17,7 +20,9 @@ pub mod cg;
 pub mod ep;
 pub mod ft;
 pub mod is;
+pub mod md;
 pub mod mg;
+pub mod spmv;
 
 use crate::compiler::{
     compile, CompileOpts, CompileStats, IrModule, Lowering, SourceVariant,
@@ -27,7 +32,7 @@ use crate::mem::MemSystem;
 use crate::sim::{Machine, MachineCfg, MachineResult};
 use crate::upc::UpcRuntime;
 
-/// The five kernels.
+/// The five paper kernels plus the two irregular-gather workloads.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Kernel {
     Ep,
@@ -35,11 +40,19 @@ pub enum Kernel {
     Cg,
     Mg,
     Ft,
+    Md,
+    Spmv,
 }
 
 impl Kernel {
+    /// The paper's five NPB kernels — the figure sweeps iterate these.
     pub const ALL: [Kernel; 5] =
         [Kernel::Ep, Kernel::Is, Kernel::Cg, Kernel::Mg, Kernel::Ft];
+
+    /// The irregular-gather workloads (data-dependent indices; they
+    /// exercise the engine's inspector/executor gather tier and ride
+    /// along in the chaos soak, not in the paper figures).
+    pub const IRREGULAR: [Kernel; 2] = [Kernel::Md, Kernel::Spmv];
 
     pub fn name(&self) -> &'static str {
         match self {
@@ -48,6 +61,8 @@ impl Kernel {
             Kernel::Cg => "CG",
             Kernel::Mg => "MG",
             Kernel::Ft => "FT",
+            Kernel::Md => "MD",
+            Kernel::Spmv => "SPMV",
         }
     }
 
@@ -58,6 +73,8 @@ impl Kernel {
             "CG" => Some(Kernel::Cg),
             "MG" => Some(Kernel::Mg),
             "FT" => Some(Kernel::Ft),
+            "MD" => Some(Kernel::Md),
+            "SPMV" => Some(Kernel::Spmv),
             _ => None,
         }
     }
@@ -169,6 +186,8 @@ pub fn build(
         Kernel::Cg => cg::build(threads, source, scale),
         Kernel::Mg => mg::build(threads, source, scale),
         Kernel::Ft => ft::build(threads, source, scale),
+        Kernel::Md => md::build(threads, source, scale),
+        Kernel::Spmv => spmv::build(threads, source, scale),
     }
 }
 

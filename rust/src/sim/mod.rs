@@ -84,6 +84,10 @@ pub struct MachineResult {
     /// dispatches, backend failures absorbed by the fallback ladder,
     /// deadline misses, injected faults, and per-tier breaker activity.
     pub health: crate::engine::HealthStats,
+    /// Inspector/executor gather telemetry summed over cores: plans
+    /// executed, pointers routed through per-owner buckets, and
+    /// gather-eligible batches served direct.
+    pub gather: crate::engine::GatherStats,
 }
 
 impl MachineResult {
@@ -233,6 +237,24 @@ impl MachineResult {
             "degrade.injected_faults",
             self.health.injected_faults.to_string(),
             "chaos-injected engine faults absorbed",
+        );
+        // inspector/executor gather telemetry: always present, so
+        // affine-only runs prove their zeros and irregular runs show
+        // the per-owner bucketing at work
+        put(
+            "gather.plans",
+            self.gather.plans.to_string(),
+            "inspector/executor plans executed",
+        );
+        put(
+            "gather.bucketed_ptrs",
+            self.gather.bucketed_ptrs.to_string(),
+            "pointers routed through per-owner buckets",
+        );
+        put(
+            "gather.fallback",
+            self.gather.fallback.to_string(),
+            "gather-eligible batches served direct",
         );
         put("cache.l1d_misses", self.l1d_misses.to_string(), "sum over cores");
         put("cache.l2_misses", self.l2_misses.to_string(), "shared L2");
@@ -434,9 +456,11 @@ impl Machine {
         let cycles = per_core.iter().map(|s| s.cycles).max().unwrap_or(0);
         let mut engine_mix = EngineMix::default();
         let mut health = crate::engine::HealthStats::default();
+        let mut gather = crate::engine::GatherStats::default();
         for c in &self.cpus {
             engine_mix.merge(&c.engine_mix());
             health.merge(&c.health());
+            gather.merge(&c.gather());
         }
         MachineResult {
             cycles,
@@ -452,6 +476,7 @@ impl Machine {
                 .as_ref()
                 .map(|tier| tier.engine.client_stats()),
             health,
+            gather,
         }
     }
 }

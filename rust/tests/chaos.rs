@@ -102,6 +102,58 @@ fn npb_soak_under_fault_storms_is_bit_identical() {
     assert!(total_fallbacks > 0, "no fallback re-serves across the soak");
 }
 
+/// The soak extended to the irregular-gather kernels (MD neighbor-list
+/// traversal, SPMV CSR gather): their data-dependent windows route
+/// through the inspector/executor tier (`gather.plans > 0`), and a
+/// fault storm must leave both the simulated results *and* the gather
+/// telemetry bit-identical — faults are absorbed inside each bucket's
+/// dispatch funnel, below the planner.
+#[test]
+fn irregular_gather_soak_under_fault_storms_is_bit_identical() {
+    let mut total_injected = 0u64;
+    let mut total_fallbacks = 0u64;
+    for kernel in Kernel::IRREGULAR {
+        let base = run_point(kernel, None);
+        assert!(
+            base.result.gather.plans > 0,
+            "{kernel}: irregular kernel never engaged the gather planner"
+        );
+        assert_eq!(
+            base.result.health.injected_faults, 0,
+            "{kernel}: fault-free run must not record injections"
+        );
+        for seed in SOAK_SEEDS {
+            let spec = FaultSpec::transient(seed);
+            let out = run_point(kernel, Some(&spec));
+            assert_results_identical(&base, &out, &format!("{kernel}/{seed:#x}"));
+            assert_eq!(
+                out.result.gather, base.result.gather,
+                "{kernel}/{seed:#x}: gather telemetry moved under chaos"
+            );
+            total_injected += out.result.health.injected_faults;
+            total_fallbacks += out.result.health.fallback_runs;
+            let txt = out.result.stats_txt();
+            for key in
+                ["gather.plans", "gather.bucketed_ptrs", "gather.fallback"]
+            {
+                assert!(txt.contains(key), "{kernel}: stats_txt missing {key}");
+            }
+            let plans: u64 = txt
+                .lines()
+                .find(|l| l.starts_with("gather.plans"))
+                .unwrap()
+                .split_whitespace()
+                .nth(1)
+                .unwrap()
+                .parse()
+                .unwrap();
+            assert_eq!(plans, out.result.gather.plans);
+        }
+    }
+    assert!(total_injected > 0, "no faults injected across the soak");
+    assert!(total_fallbacks > 0, "no fallback re-serves across the soak");
+}
+
 /// The nonzero-counter acceptance shape in one place: a chaos run's
 /// `stats_txt` reports the injected faults it absorbed.
 #[test]

@@ -1,0 +1,206 @@
+//! Randomized differential conformance of the inspector/executor
+//! gather tier (`GatherPlan`).
+//!
+//! The contract under test: bucketing an index vector by owning thread,
+//! dispatching one aggregated batch per owner through *any*
+//! `AddressEngine`, and splicing the per-owner results back into
+//! request order is **bit-identical** to the naive per-element
+//! `translate_one` path — for every index-vector shape (duplicates,
+//! out-of-order, hot-spots, empty, single-owner), every backend
+//! (software, pow2, sharded, remote worker processes, daemon epoch
+//! sessions) and every shared-array layout the NPB kernels allocate,
+//! and invariant under the sharded tier's worker count.
+//!
+//! Sockets only — no network — so the suite stays tier-1-safe.
+
+use pgas_hw::compiler::SourceVariant;
+use pgas_hw::daemon::{scratch_socket, Daemon, DaemonCfg};
+use pgas_hw::engine::{
+    AddressEngine, BatchOut, EngineCtx, GatherPlan, Pow2Engine, PtrBatch,
+    RemoteEngine, ShardedEngine, SoftwareEngine,
+};
+use pgas_hw::npb::{self, Kernel, Scale};
+use pgas_hw::sptr::{ArrayLayout, BaseTable, SharedPtr};
+use pgas_hw::util::rng::Xoshiro256;
+
+/// The naive executor: one engine dispatch per element, in request
+/// order — the golden reference every planned execution must match
+/// bit for bit.
+fn per_element(
+    engine: &dyn AddressEngine,
+    ctx: &EngineCtx,
+    batch: &PtrBatch,
+) -> BatchOut {
+    let mut out = BatchOut::new();
+    out.reserve(batch.len());
+    for i in 0..batch.len() {
+        let (p, va, loc) = engine
+            .translate_one(ctx, batch.ptrs[i], batch.incs[i])
+            .unwrap();
+        out.push(p, va, loc);
+    }
+    out
+}
+
+/// Seeded index-vector shapes: the distributions an irregular kernel
+/// actually produces.
+fn index_shapes(nelems: u64, seed: u64) -> Vec<(&'static str, Vec<u64>)> {
+    let mut rng = Xoshiro256::new(seed);
+    let n = 193usize;
+    let uniform: Vec<u64> = (0..n).map(|_| rng.below(nelems)).collect();
+    let mut descending = uniform.clone();
+    descending.sort_unstable_by(|a, b| b.cmp(a));
+    let dup = rng.below(nelems);
+    let duplicates: Vec<u64> =
+        (0..n).map(|i| if i % 3 == 0 { dup } else { rng.below(nelems) }).collect();
+    let hot = rng.below(nelems);
+    let hotspot: Vec<u64> = (0..n)
+        .map(|i| if i % 10 == 0 { rng.below(nelems) } else { hot })
+        .collect();
+    // every index inside the first block → a single owning thread
+    let single_owner: Vec<u64> = (0..n).map(|_| rng.below(nelems.min(4).max(1))).collect();
+    vec![
+        ("uniform", uniform),
+        ("out-of-order", descending),
+        ("duplicates", duplicates),
+        ("hot-spot", hotspot),
+        ("single-owner", single_owner),
+        ("empty", Vec::new()),
+    ]
+}
+
+fn batch_of(layout: &ArrayLayout, base_va: u64, indices: &[u64]) -> PtrBatch {
+    let base = SharedPtr::for_index(layout, base_va, 0);
+    let mut b = PtrBatch::with_capacity(indices.len());
+    for &i in indices {
+        b.push(base, i);
+    }
+    b
+}
+
+#[test]
+fn planned_execution_matches_per_element_on_all_index_shapes() {
+    // one hw-mappable layout (the paper's Fig. 2 shape, scaled) and one
+    // non-pow2 layout only the software path serves
+    let cases = [
+        (ArrayLayout::new(64, 8, 16), 1u64 << 20),
+        (ArrayLayout::new(3, 24, 5), 3 * 5 * 7),
+    ];
+    for (layout, nelems) in cases {
+        let table = BaseTable::regular(layout.numthreads, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 1).unwrap();
+        for (shape, indices) in index_shapes(nelems, 0x6A7E_0001 ^ nelems) {
+            let batch = batch_of(&layout, 0, &indices);
+            let plan = GatherPlan::from_batch(&ctx, &batch).unwrap();
+            assert_eq!(plan.len(), indices.len(), "{shape}");
+            if indices.is_empty() {
+                assert!(plan.is_empty(), "{shape}");
+            }
+            let want = per_element(&SoftwareEngine, &ctx, &batch);
+            let mut got = BatchOut::new();
+            plan.execute(&SoftwareEngine, &ctx, &mut got).unwrap();
+            assert_eq!(got, want, "software, {shape}, T={}", layout.numthreads);
+            if layout.hw_supported() {
+                plan.execute(&Pow2Engine, &ctx, &mut got).unwrap();
+                assert_eq!(got, want, "pow2, {shape}");
+            }
+            // the increment leg splices identically
+            let mut inc_got = Vec::new();
+            plan.execute_increment(&SoftwareEngine, &ctx, &mut inc_got)
+                .unwrap();
+            assert_eq!(inc_got, want.ptrs, "increment splice, {shape}");
+        }
+    }
+}
+
+#[test]
+fn planned_execution_matches_across_all_backends_and_npb_layouts() {
+    let threads = 4;
+    let table = BaseTable::regular(threads, 1 << 32, 1 << 32);
+    let sharded = ShardedEngine::new(SoftwareEngine, 3).with_min_shard_len(1);
+    let remote = RemoteEngine::spawn_with_bin(env!("CARGO_BIN_EXE_pgas-hw"), 2)
+        .expect("spawn remote worker pool")
+        .with_min_shard_len(1);
+    let cfg = DaemonCfg::new(scratch_socket("gather-conf"));
+    let sock = cfg.socket.clone();
+    let daemon = Daemon::spawn(cfg).expect("daemon spawns");
+    {
+        let sessions =
+            RemoteEngine::connect(&sock, 1).expect("connect daemon session");
+        for kernel in Kernel::ALL {
+            let built = npb::build(
+                kernel,
+                threads,
+                SourceVariant::Unoptimized,
+                &Scale::quick(),
+            );
+            for a in built.rt.arrays() {
+                let ctx = EngineCtx::new(a.layout, &table, 1).unwrap();
+                let mut rng = Xoshiro256::new(0x6A7E_0002 ^ a.nelems);
+                let indices: Vec<u64> =
+                    (0..157).map(|_| rng.below(a.nelems.max(1))).collect();
+                let batch = batch_of(&a.layout, a.base_va, &indices);
+                let plan = GatherPlan::from_batch(&ctx, &batch).unwrap();
+                let want = per_element(&SoftwareEngine, &ctx, &batch);
+                let mut backends: Vec<(&str, &dyn AddressEngine)> = vec![
+                    ("software", &SoftwareEngine),
+                    ("sharded", &sharded),
+                    ("remote", &remote),
+                    ("daemon", &sessions),
+                ];
+                if a.layout.hw_supported() {
+                    backends.push(("pow2", &Pow2Engine));
+                }
+                for (name, engine) in backends {
+                    let mut got = BatchOut::new();
+                    plan.execute(engine, &ctx, &mut got).unwrap();
+                    assert_eq!(got, want, "{kernel}/{name} planned gather");
+                }
+            }
+        }
+    }
+    daemon.shutdown().expect("daemon shutdown");
+}
+
+#[test]
+fn planned_execution_is_invariant_under_shard_count() {
+    let layout = ArrayLayout::new(64, 8, 16);
+    let table = BaseTable::regular(16, 1 << 32, 1 << 32);
+    let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+    let mut rng = Xoshiro256::new(0x6A7E_0003);
+    let indices: Vec<u64> = (0..2048).map(|_| rng.below(1 << 20)).collect();
+    let batch = batch_of(&layout, 0, &indices);
+    let plan = GatherPlan::from_batch(&ctx, &batch).unwrap();
+    let want = per_element(&SoftwareEngine, &ctx, &batch);
+    for workers in [1usize, 2, 4, 7] {
+        let sharded =
+            ShardedEngine::new(SoftwareEngine, workers).with_min_shard_len(1);
+        let mut got = BatchOut::new();
+        plan.execute(&sharded, &ctx, &mut got).unwrap();
+        assert_eq!(got, want, "sharded x{workers}");
+    }
+}
+
+#[test]
+fn buckets_cover_every_request_exactly_once() {
+    let layout = ArrayLayout::new(4, 4, 4); // the paper's Fig. 2 layout
+    let table = BaseTable::regular(4, 1 << 32, 1 << 32);
+    let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+    let mut rng = Xoshiro256::new(0x6A7E_0004);
+    let indices: Vec<u64> = (0..117).map(|_| rng.below(64)).collect();
+    let batch = batch_of(&layout, 0, &indices);
+    let plan = GatherPlan::from_batch(&ctx, &batch).unwrap();
+    let total: usize = plan.buckets().iter().map(|b| b.len()).sum();
+    assert_eq!(total, indices.len(), "buckets partition the request");
+    assert_eq!(plan.owners().len(), plan.bucket_count());
+    // every bucket is single-owner: all its pointers land on the
+    // bucket's owning thread
+    for (owner, bucket) in plan.owners().iter().zip(plan.buckets()) {
+        for i in 0..bucket.len() {
+            let (p, _, _) = SoftwareEngine
+                .translate_one(&ctx, bucket.ptrs[i], bucket.incs[i])
+                .unwrap();
+            assert_eq!(p.thread, *owner, "bucket owner mismatch");
+        }
+    }
+}
