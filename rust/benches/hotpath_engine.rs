@@ -26,6 +26,14 @@
 //!   dispatch (`GatherPlan`) vs naive per-element `translate_one`,
 //!   plus the measured bucketing cost the selector's gather threshold
 //!   is priced off.
+//! * `simd` — the vectorized software tier: lane-wise shift/mask
+//!   (pow2) and multiply-by-reciprocal (general) translation vs the
+//!   scalar `SoftwareEngine` on the same batches, plus the measured
+//!   `CostModel::simd_ns_per_ptr` coefficient.  The acceptance gate
+//!   asserts the lanes beat scalar on *both* geometries at >= 1k ptrs.
+//! * `plan` — the cache-blocked batch planner: `TilePlan`-tiled
+//!   execution (affinity-sorted L1/L2-sized tiles) vs direct
+//!   single-pass dispatch, single-threaded and over the shard pool.
 //!
 //! `--quick` (the CI smoke leg) shrinks batch sizes and iteration
 //! counts.  The xla-batch backend joins automatically when built with
@@ -430,6 +438,122 @@ fn main() {
          {planned_ns_per_ptr:.1} vs {per_element_ns_per_ptr:.1} ns/ptr"
     );
 
+    // ---- simd: the vectorized software tier vs scalar software on
+    // both geometries.  The pow2 side runs the shift/mask lanes, the
+    // non-pow2 side (CG's 112-byte struct rows) the reciprocal lanes;
+    // both must beat the scalar `map_one` loop at production batch
+    // sizes — that is this PR's headline claim, so the gate is a hard
+    // assert, not a recorded regression. ----
+    use pgas_hw::engine::SimdEngine;
+    let s_n: usize = if quick { 1 << 12 } else { 1 << 14 };
+    let mut simd_legs = Vec::new();
+    let np_layout = ArrayLayout::new(3, 112, 5);
+    let np_table = BaseTable::regular(5, 1 << 32, 1 << 32);
+    let np_ctx = EngineCtx::new(np_layout, &np_table, 0).unwrap();
+    for (tag, lctx, llayout) in
+        [("pow2", &ctx, &layout), ("nonpow2", &np_ctx, &np_layout)]
+    {
+        let s_batch = random_batch(llayout, s_n, 0x51D1);
+        let r = bench(
+            &format!("engine::software translate [{tag}] x{s_n}"),
+            warmup,
+            iters,
+            || {
+                SoftwareEngine.translate(lctx, &s_batch, &mut out).unwrap();
+                black_box(&out);
+            },
+        );
+        let scalar_ns_per_ptr = r.mean_secs() * 1e9 / s_n as f64;
+        let r = bench(
+            &format!("engine::simd translate [{tag}] x{s_n}"),
+            warmup,
+            iters,
+            || {
+                SimdEngine.translate(lctx, &s_batch, &mut out).unwrap();
+                black_box(&out);
+            },
+        );
+        let simd_ns_per_ptr = r.mean_secs() * 1e9 / s_n as f64;
+        let simd_speedup = scalar_ns_per_ptr / simd_ns_per_ptr;
+        println!(
+            "  -> simd [{tag}]: {scalar_ns_per_ptr:.1} ns/ptr scalar vs \
+             {simd_ns_per_ptr:.1} ns/ptr lanes ({simd_speedup:.2}x)"
+        );
+        // The acceptance gate: the lanes must be strictly faster than
+        // scalar software on every geometry at >= 1k pointers.
+        assert!(
+            simd_ns_per_ptr < scalar_ns_per_ptr,
+            "simd lanes slower than scalar software on {tag}: \
+             {simd_ns_per_ptr:.1} vs {scalar_ns_per_ptr:.1} ns/ptr"
+        );
+        simd_legs.push(format!(
+            "    {{\"layout\": \"{tag}\", \"batch\": {s_n}, \
+             \"scalar_ns_per_ptr\": {scalar_ns_per_ptr:.2}, \
+             \"simd_ns_per_ptr\": {simd_ns_per_ptr:.2}, \
+             \"simd_speedup\": {simd_speedup:.2}}}"
+        ));
+    }
+    let simd_calibrated_ns = SimdEngine::calibrate();
+    println!(
+        "  -> simd: calibrate() = {simd_calibrated_ns:.2} ns/ptr \
+         (the measured CostModel::simd_ns_per_ptr coefficient)"
+    );
+
+    // ---- plan: cache-blocked tiling vs direct dispatch.  The planner
+    // pays tile construction + affinity sort + splice; this records
+    // what that costs (or buys, once batches outgrow L2) both
+    // single-threaded and over the shard pool's tile groups. ----
+    use pgas_hw::engine::TilePlan;
+    let p_n: usize = if quick { 1 << 14 } else { 1 << 17 };
+    let p_batch = random_batch(&layout, p_n, 0x711E);
+    let r = bench(
+        &format!("plan direct (software) translate x{p_n}"),
+        warmup,
+        iters,
+        || {
+            SoftwareEngine.translate(&ctx, &p_batch, &mut out).unwrap();
+            black_box(&out);
+        },
+    );
+    let direct_mptr_s = p_n as f64 / r.mean_secs() / 1e6;
+    let tile_ptrs = pgas_hw::engine::L2_TILE_PTRS;
+    let r = bench(
+        &format!("plan tiled (software, tile {tile_ptrs}) translate x{p_n}"),
+        warmup,
+        iters,
+        || {
+            let tplan = TilePlan::from_batch(&ctx, &p_batch, tile_ptrs).unwrap();
+            SoftwareEngine
+                .translate_planned(&ctx, &p_batch, &tplan, &mut out)
+                .unwrap();
+            black_box(&out);
+        },
+    );
+    let tiled_mptr_s = p_n as f64 / r.mean_secs() / 1e6;
+    let sharded_plan = ShardedEngine::new(SoftwareEngine, workers);
+    let r = bench(
+        &format!("plan tiled (sharded x{workers}) translate x{p_n}"),
+        warmup,
+        iters,
+        || {
+            let tplan = TilePlan::from_batch(&ctx, &p_batch, tile_ptrs).unwrap();
+            sharded_plan
+                .translate_planned(&ctx, &p_batch, &tplan, &mut out)
+                .unwrap();
+            black_box(&out);
+        },
+    );
+    let tiled_sharded_mptr_s = p_n as f64 / r.mean_secs() / 1e6;
+    let plan_ratio = tiled_mptr_s / direct_mptr_s;
+    let tiles = TilePlan::from_batch(&ctx, &p_batch, tile_ptrs)
+        .unwrap()
+        .tile_count();
+    println!(
+        "  -> plan: {direct_mptr_s:.1} direct vs {tiled_mptr_s:.1} tiled \
+         vs {tiled_sharded_mptr_s:.1} tiled+sharded M ptr/s \
+         ({plan_ratio:.2}x tiled/direct, {tiles} tiles of {tile_ptrs})"
+    );
+
     // Merge (not overwrite): BENCH_engine.json is shared with the
     // fig11-14 model benches, so each target may run in any order and
     // re-running one replaces only its own sections.
@@ -521,6 +645,29 @@ fn main() {
              \"planned_speedup\": {gather_speedup:.2}, \
              \"bucket_ns_per_ptr\": {bucket_ns_per_ptr:.2}, \
              \"plan_setup_ns\": {plan_setup_ns:.0}}}"
+        ),
+    );
+    merge_bench_json(
+        OUT,
+        "simd",
+        &format!(
+            "{{\"lanes\": {}, \
+             \"calibrated_ns_per_ptr\": {simd_calibrated_ns:.2}, \
+             \"legs\": [\n{}\n  ]}}",
+            pgas_hw::engine::SIMD_LANES,
+            simd_legs.join(",\n")
+        ),
+    );
+    merge_bench_json(
+        OUT,
+        "plan",
+        &format!(
+            "{{\"batch\": {p_n}, \"tile_ptrs\": {tile_ptrs}, \
+             \"tiles\": {tiles}, \"workers\": {workers}, \
+             \"direct_mptr_s\": {direct_mptr_s:.2}, \
+             \"tiled_mptr_s\": {tiled_mptr_s:.2}, \
+             \"tiled_sharded_mptr_s\": {tiled_sharded_mptr_s:.2}, \
+             \"tiled_vs_direct\": {plan_ratio:.2}}}"
         ),
     );
     println!("merged host sections into BENCH_engine.json");

@@ -356,7 +356,8 @@ pub fn engine_mix_table(outs: &[RunOutcome]) -> Table {
          unopt/HW cycles at the same kernel/model/cores)",
         &[
             "kernel", "variant", "model", "cores", "batched incs",
-            "scalar incs", "batched%", "runs by backend", "gather", "HW speedup",
+            "scalar incs", "batched%", "runs by backend", "gather", "simd",
+            "plan", "HW speedup",
         ],
     );
     for o in outs {
@@ -366,6 +367,21 @@ pub fn engine_mix_table(outs: &[RunOutcome]) -> Table {
         let g = o.result.gather;
         let gather = if g.plans > 0 {
             format!("{}p/{}", g.plans, g.bucketed_ptrs)
+        } else {
+            "-".into()
+        };
+        // vectorized tier: batches served and full-lane pointers ("-"
+        // when no window crossed the serial/vector cutover)
+        let s = o.result.simd;
+        let simd = if s.batches > 0 {
+            format!("{}b/{}", s.batches, s.lane_ptrs)
+        } else {
+            "-".into()
+        };
+        // cache-blocked planner: plans built and pointers tiled
+        let p = o.result.plan;
+        let plan = if p.plans > 0 {
+            format!("{}p/{}", p.plans, p.planned_ptrs)
         } else {
             "-".into()
         };
@@ -391,6 +407,8 @@ pub fn engine_mix_table(outs: &[RunOutcome]) -> Table {
             format!("{:.1}%", mix.batched_share() * 100.0),
             mix.runs_label(),
             gather,
+            simd,
+            plan,
             speedup,
         ]);
     }
@@ -404,7 +422,8 @@ pub fn outcomes_csv(outs: &[RunOutcome]) -> String {
         &[
             "kernel", "variant", "model", "cores", "cycles", "instructions",
             "sim_ms", "hw_incs", "soft_incs", "hw_mems", "soft_mems",
-            "gather_plans", "gather_ptrs",
+            "gather_plans", "gather_ptrs", "simd_batches", "simd_lane_ptrs",
+            "plan_plans", "plan_tiles",
         ],
     );
     for o in outs {
@@ -422,6 +441,10 @@ pub fn outcomes_csv(outs: &[RunOutcome]) -> String {
             o.compile_stats.soft_mems.to_string(),
             o.result.gather.plans.to_string(),
             o.result.gather.bucketed_ptrs.to_string(),
+            o.result.simd.batches.to_string(),
+            o.result.simd.lane_ptrs.to_string(),
+            o.result.plan.plans.to_string(),
+            o.result.plan.tiles.to_string(),
         ]);
     }
     t.to_csv()

@@ -239,6 +239,18 @@ pub trait Cpu {
         self.lookahead().gather()
     }
 
+    /// This core's vectorized-tier telemetry (batches served by the
+    /// lane kernels, lane vs scalar-tail pointers).
+    fn simd(&self) -> crate::engine::SimdStats {
+        self.lookahead().simd()
+    }
+
+    /// This core's batch-planner telemetry (plans built, tiles
+    /// dispatched, planned pointers, single-tile fallbacks).
+    fn plan(&self) -> crate::engine::PlanStats {
+        self.lookahead().plan()
+    }
+
     /// Account `extra` stall cycles imposed from outside (bus contention
     /// computed by the machine-level contention model).
     fn add_stall_cycles(&mut self, extra: u64) {

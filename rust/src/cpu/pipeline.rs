@@ -324,6 +324,21 @@ impl Lookahead {
         self.selector.gather_stats()
     }
 
+    /// Vectorized-tier telemetry accumulated by this core's selector
+    /// (batches served by the lane kernels, lane vs scalar-tail
+    /// pointers) — the `simd.*` lines of `stats_txt`.
+    pub fn simd(&self) -> crate::engine::SimdStats {
+        self.selector.simd_stats()
+    }
+
+    /// Cache-blocked batch-planner telemetry accumulated by this
+    /// core's selector (plans built, tiles dispatched, planned
+    /// pointers, single-tile fallbacks) — the `plan.*` lines of
+    /// `stats_txt`.
+    pub fn plan(&self) -> crate::engine::PlanStats {
+        self.selector.plan_stats()
+    }
+
     #[inline]
     fn active(&self) -> bool {
         self.enabled && self.operable
@@ -720,17 +735,20 @@ mod tests {
 
     #[test]
     fn engine_mix_carries_a_slot_for_every_backend() {
-        // COUNT grew to 6 with the remote tier; the runs array, the
+        // COUNT grew to 7 with the simd tier; the runs array, the
         // by_choice iteration and the label rendering must all agree.
         let mut mix = EngineMix::default();
         assert_eq!(mix.runs.len(), EngineChoice::COUNT);
         mix.runs[EngineChoice::Remote.index()] = 4;
         mix.runs[EngineChoice::Pow2.index()] = 2;
-        assert_eq!(mix.total_runs(), 6);
+        mix.runs[EngineChoice::Simd.index()] = 3;
+        assert_eq!(mix.total_runs(), 9);
         let label = mix.runs_label();
         assert!(label.contains("remote:4"), "{label}");
         assert!(label.contains("pow2:2"), "{label}");
+        assert!(label.contains("simd:3"), "{label}");
         let by = mix.by_choice();
         assert_eq!(by[EngineChoice::Remote.index()], (EngineChoice::Remote, 4));
+        assert_eq!(by[EngineChoice::Simd.index()], (EngineChoice::Simd, 3));
     }
 }

@@ -117,8 +117,10 @@ impl GatherPlan {
     /// advance one owner per block boundary crossed, so the owner falls
     /// out of one div and one mod without computing the full Algorithm 1
     /// (no local-block or va arithmetic, no LUT access).
+    /// Shared with the batch planner ([`super::plan`]), which reuses
+    /// this owner arithmetic as its tile-affinity bucketing key.
     #[inline]
-    fn owner_of(ctx: &EngineCtx, ptr: &SharedPtr, inc: u64) -> u32 {
+    pub(crate) fn owner_of(ctx: &EngineCtx, ptr: &SharedPtr, inc: u64) -> u32 {
         let layout = ctx.layout();
         // u128: `phase + inc` may not fit u64 near the top of the range
         let blocks = (ptr.phase as u128 + inc as u128) / layout.blocksize as u128;

@@ -85,10 +85,12 @@
 mod fault;
 pub mod gather;
 mod leon3;
+pub mod plan;
 mod pow2;
 pub mod remote;
 mod select;
 mod sharded;
+mod simd;
 mod software;
 #[cfg(feature = "xla-unit")]
 mod xla_batch;
@@ -96,6 +98,7 @@ mod xla_batch;
 pub use fault::{ChaosEngine, EngineFault, FaultPlan, FaultSpec, WireFault};
 pub use gather::{GatherPlan, GatherStats};
 pub use leon3::Leon3Engine;
+pub use plan::{PlanStats, TilePlan, L1_TILE_PTRS, L2_TILE_PTRS};
 pub use pow2::Pow2Engine;
 pub use remote::{RemoteClientStats, RemoteEngine, RemoteTier};
 pub use select::{
@@ -103,12 +106,14 @@ pub use select::{
     HealthStats, TierHealthStats,
 };
 pub use sharded::ShardedEngine;
+pub use simd::{SimdEngine, SimdStats, SIMD_LANES};
 pub use software::SoftwareEngine;
 #[cfg(feature = "xla-unit")]
 pub use xla_batch::XlaBatchEngine;
 
 use crate::sptr::{
-    locality, ArrayLayout, BaseTable, Locality, SharedPtr, Topology, WalkCursor,
+    locality, ArrayLayout, BaseTable, Locality, Recip, SharedPtr, Topology,
+    WalkCursor,
 };
 
 /// Why an engine refused a request.
@@ -182,6 +187,10 @@ pub struct EngineCtx<'a> {
     topo: Topology,
     /// Cached `layout.log2s()` (None for non-pow2 geometry).
     log2s: Option<(u32, u32, u32)>,
+    /// Granlund–Montgomery reciprocals of the layout's two Algorithm-1
+    /// divisors `(blocksize, numthreads)`, precomputed once here so the
+    /// vectorized general path never divides in the lane loop.
+    recips: (Recip, Recip),
 }
 
 impl<'a> EngineCtx<'a> {
@@ -205,6 +214,10 @@ impl<'a> EngineCtx<'a> {
             mythread,
             topo: Topology::default(),
             log2s: layout.log2s(),
+            recips: (
+                Recip::new(layout.blocksize),
+                Recip::new(layout.numthreads as u64),
+            ),
         })
     }
 
@@ -244,6 +257,14 @@ impl<'a> EngineCtx<'a> {
     #[inline]
     pub fn topo(&self) -> &Topology {
         &self.topo
+    }
+
+    /// Precomputed reciprocals of `(blocksize, numthreads)` — the
+    /// strength-reduced form of Algorithm 1's two div/mod pairs used by
+    /// the vectorized general path.
+    #[inline]
+    pub fn recips(&self) -> (Recip, Recip) {
+        self.recips
     }
 }
 
@@ -486,6 +507,41 @@ pub trait AddressEngine {
         steps: usize,
         out: &mut BatchOut,
     ) -> Result<(), EngineError>;
+
+    /// Serve a cache-blocked [`TilePlan`]: dispatch each tile of the
+    /// plan (already reordered by affinity bucket) and splice results
+    /// back into request order.  The default runs tiles sequentially
+    /// through [`translate`](AddressEngine::translate) — cache-blocked
+    /// execution with L1/L2-resident working sets, and for the
+    /// remote/daemon tiers one affinity-coherent frame per tile.  The
+    /// sharded tier overrides this to shard over whole planned tiles
+    /// instead of raw index ranges.  Outputs are bit-identical to an
+    /// unplanned `translate` of the same batch at any tile size.
+    fn translate_planned(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        plan: &TilePlan,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        plan.execute_translate(batch, out, &mut |sub, sink| {
+            self.translate(ctx, sub, sink)
+        })
+    }
+
+    /// Increment-only form of
+    /// [`translate_planned`](AddressEngine::translate_planned).
+    fn increment_planned(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        plan: &TilePlan,
+        out: &mut Vec<SharedPtr>,
+    ) -> Result<(), EngineError> {
+        plan.execute_increment(batch, out, &mut |sub, sink| {
+            self.increment(ctx, sub, sink)
+        })
+    }
 
     /// Scalar convenience for host paths that map one pointer at a
     /// time.  Backends with a cheap scalar path override this to avoid

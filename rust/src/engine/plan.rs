@@ -1,0 +1,393 @@
+//! The cache-blocked, locality-aware batch planner.
+//!
+//! Very large [`PtrBatch`]es defeat the memory hierarchy twice: the
+//! SoA input streams plus the result triple (~40 bytes per request)
+//! overflow L1/L2 so the vectorized lanes stall on memory, and the
+//! requests arrive in arbitrary owner order so downstream tiers
+//! (sharded pool, remote/daemon frames) see incoherent affinity.
+//! [`TilePlan`] fixes both with the blocked transpose-then-work
+//! discipline:
+//!
+//! 1. **Tile** — split the batch into contiguous index ranges of
+//!    [`L1_TILE_PTRS`]/[`L2_TILE_PTRS`] requests, small enough that one
+//!    tile's inputs and outputs stay cache-resident while the lane
+//!    kernel runs over it.
+//! 2. **Reorder** — key each tile by the owning thread of its first
+//!    request (reusing [`GatherPlan`]'s owner arithmetic) and stable-
+//!    sort tiles by that affinity bucket, so consecutive dispatches hit
+//!    the same owner's data and the remote/daemon tiers ship
+//!    affinity-coherent frames.
+//! 3. **Splice** — every tile remembers its original index range;
+//!    results are scattered back to exactly that range, so the planned
+//!    output is bit-identical to an unplanned run at any tile size
+//!    (differentially enforced in `rust/tests/engine_conformance.rs`).
+//!
+//! Execution goes through
+//! [`AddressEngine::translate_planned`](super::AddressEngine::translate_planned):
+//! the default implementation runs tiles sequentially (cache blocking),
+//! while [`ShardedEngine`](super::ShardedEngine) overrides it to shard
+//! over whole planned tiles — [`TilePlan::groups`] hands each worker a
+//! contiguous run of affinity-sorted tiles instead of a raw index
+//! range.  The selector engages the planner past `plan_threshold` and
+//! tallies [`PlanStats`].
+
+use super::gather::GatherPlan;
+use super::{BatchOut, EngineCtx, EngineError, PtrBatch};
+use crate::sptr::{Locality, SharedPtr};
+
+/// Requests per L1-sized tile: a tile's SoA inputs (32 bytes/request)
+/// plus its result triple (~40 bytes) must stay resident in a 32 KiB
+/// L1d with room to spare.
+pub const L1_TILE_PTRS: usize = 512;
+
+/// Requests per L2-sized tile — the default planning grain: big enough
+/// to amortize dispatch, small enough for a per-core L2 slice.
+pub const L2_TILE_PTRS: usize = 4096;
+
+/// Counters for the planner: plans built, tiles dispatched, pointers
+/// routed through planned execution, and batches that fell back to
+/// unplanned dispatch (single tile).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanStats {
+    /// Plans built and executed.
+    pub plans: u64,
+    /// Tiles dispatched across all plans.
+    pub tiles: u64,
+    /// Pointers that went through planned execution.
+    pub planned_ptrs: u64,
+    /// Batches past the threshold that still ran unplanned (the plan
+    /// degenerated to a single tile).
+    pub fallback: u64,
+}
+
+impl PlanStats {
+    /// Fold another counter snapshot into this one (per-CPU merge).
+    pub fn merge(&mut self, other: &PlanStats) {
+        self.plans += other.plans;
+        self.tiles += other.tiles;
+        self.planned_ptrs += other.planned_ptrs;
+        self.fallback += other.fallback;
+    }
+}
+
+/// One cache-sized tile: a contiguous range of the original batch plus
+/// its affinity-bucket key.
+#[derive(Clone, Copy, Debug)]
+pub struct Tile {
+    /// First request index (inclusive) in the original batch.
+    pub lo: usize,
+    /// One past the last request index.
+    pub hi: usize,
+    /// Affinity bucket: owning thread of the tile's first request.
+    pub owner: u32,
+}
+
+impl Tile {
+    /// Number of requests in this tile.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.hi - self.lo
+    }
+
+    /// Is the tile empty?  (Never true for planner-built tiles.)
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.lo == self.hi
+    }
+}
+
+/// A cache-blocked execution plan over one batch: tiles in affinity-
+/// sorted dispatch order, each remembering its original index range.
+#[derive(Clone, Debug)]
+pub struct TilePlan {
+    /// Tiles in dispatch order (stable-sorted by affinity bucket).
+    tiles: Vec<Tile>,
+    /// Total requests across all tiles (= the planned batch's length).
+    len: usize,
+}
+
+impl TilePlan {
+    /// Build a plan over `batch` with `tile_ptrs` requests per tile
+    /// (clamped to at least 1).  Cost is O(n/tile_ptrs · log) — one
+    /// owner computation per *tile*, not per element, plus the tile
+    /// sort; the per-element inspector work stays with [`GatherPlan`].
+    pub fn from_batch(
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        tile_ptrs: usize,
+    ) -> Result<Self, EngineError> {
+        batch.check()?;
+        let tile_ptrs = tile_ptrs.max(1);
+        let n = batch.len();
+        let mut tiles = Vec::with_capacity(n.div_ceil(tile_ptrs).max(1));
+        let mut lo = 0usize;
+        while lo < n {
+            let hi = (lo + tile_ptrs).min(n);
+            let owner =
+                GatherPlan::owner_of(ctx, &batch.ptrs[lo], batch.incs[lo]);
+            tiles.push(Tile { lo, hi, owner });
+            lo = hi;
+        }
+        // Affinity reorder: stable sort keeps same-owner tiles in
+        // original order, so the splice below is order-preserving
+        // within every bucket.
+        tiles.sort_by_key(|t| t.owner);
+        Ok(Self { tiles, len: n })
+    }
+
+    /// Tiles in dispatch order.
+    #[inline]
+    pub fn tiles(&self) -> &[Tile] {
+        &self.tiles
+    }
+
+    /// Number of tiles.
+    #[inline]
+    pub fn tile_count(&self) -> usize {
+        self.tiles.len()
+    }
+
+    /// Total requests across all tiles.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Is the plan empty?
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of distinct affinity buckets among the tiles.
+    pub fn bucket_count(&self) -> usize {
+        let mut count = 0;
+        let mut last: Option<u32> = None;
+        for t in &self.tiles {
+            if last != Some(t.owner) {
+                count += 1;
+                last = Some(t.owner);
+            }
+        }
+        count
+    }
+
+    /// Split the dispatch-ordered tile list into at most `k` contiguous
+    /// groups balanced by request count — the sharded tier's planned
+    /// shard units.  Contiguity in dispatch order means each group is a
+    /// run of affinity-sorted tiles, so a worker's frame stays
+    /// owner-coherent.
+    pub fn groups(&self, k: usize) -> Vec<&[Tile]> {
+        let k = k.clamp(1, self.tiles.len().max(1));
+        let target = self.len.div_ceil(k).max(1);
+        let mut out = Vec::with_capacity(k);
+        let mut start = 0usize;
+        let mut acc = 0usize;
+        for (i, t) in self.tiles.iter().enumerate() {
+            acc += t.len();
+            if acc >= target && out.len() + 1 < k {
+                out.push(&self.tiles[start..=i]);
+                start = i + 1;
+                acc = 0;
+            }
+        }
+        if start < self.tiles.len() {
+            out.push(&self.tiles[start..]);
+        }
+        out
+    }
+
+    /// Run every tile through `run` (a translate-shaped closure) and
+    /// scatter each tile's results back to its original index range.
+    /// `run` must produce exactly one result per request or the splice
+    /// refuses loudly rather than mis-assembling.
+    pub fn execute_translate(
+        &self,
+        batch: &PtrBatch,
+        out: &mut BatchOut,
+        run: &mut dyn FnMut(
+            &PtrBatch,
+            &mut BatchOut,
+        ) -> Result<(), EngineError>,
+    ) -> Result<(), EngineError> {
+        batch.check()?;
+        if batch.len() != self.len {
+            return Err(EngineError::Backend(format!(
+                "plan covers {} requests but batch has {}",
+                self.len,
+                batch.len()
+            )));
+        }
+        out.clear();
+        out.ptrs.resize(self.len, SharedPtr::NULL);
+        out.sysva.resize(self.len, 0);
+        out.loc.resize(self.len, Locality::Local);
+        let mut sub = PtrBatch::new();
+        let mut scratch = BatchOut::new();
+        for t in &self.tiles {
+            sub.clear();
+            sub.ptrs.extend_from_slice(&batch.ptrs[t.lo..t.hi]);
+            sub.incs.extend_from_slice(&batch.incs[t.lo..t.hi]);
+            run(&sub, &mut scratch)?;
+            if scratch.len() != t.len() {
+                return Err(EngineError::Backend(format!(
+                    "planned tile [{}, {}) returned {} results for {} \
+                     requests",
+                    t.lo,
+                    t.hi,
+                    scratch.len(),
+                    t.len()
+                )));
+            }
+            out.ptrs[t.lo..t.hi].copy_from_slice(&scratch.ptrs);
+            out.sysva[t.lo..t.hi].copy_from_slice(&scratch.sysva);
+            out.loc[t.lo..t.hi].copy_from_slice(&scratch.loc);
+        }
+        Ok(())
+    }
+
+    /// Increment-only form of [`TilePlan::execute_translate`].
+    pub fn execute_increment(
+        &self,
+        batch: &PtrBatch,
+        out: &mut Vec<SharedPtr>,
+        run: &mut dyn FnMut(
+            &PtrBatch,
+            &mut Vec<SharedPtr>,
+        ) -> Result<(), EngineError>,
+    ) -> Result<(), EngineError> {
+        batch.check()?;
+        if batch.len() != self.len {
+            return Err(EngineError::Backend(format!(
+                "plan covers {} requests but batch has {}",
+                self.len,
+                batch.len()
+            )));
+        }
+        out.clear();
+        out.resize(self.len, SharedPtr::NULL);
+        let mut sub = PtrBatch::new();
+        let mut scratch = Vec::new();
+        for t in &self.tiles {
+            sub.clear();
+            sub.ptrs.extend_from_slice(&batch.ptrs[t.lo..t.hi]);
+            sub.incs.extend_from_slice(&batch.incs[t.lo..t.hi]);
+            run(&sub, &mut scratch)?;
+            if scratch.len() != t.len() {
+                return Err(EngineError::Backend(format!(
+                    "planned tile [{}, {}) returned {} results for {} \
+                     requests",
+                    t.lo,
+                    t.hi,
+                    scratch.len(),
+                    t.len()
+                )));
+            }
+            out[t.lo..t.hi].copy_from_slice(&scratch);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{AddressEngine, SoftwareEngine};
+    use crate::sptr::{ArrayLayout, BaseTable};
+
+    fn cg_case(n: usize) -> (ArrayLayout, BaseTable, PtrBatch) {
+        let layout = ArrayLayout::new(3, 112, 5);
+        let table = BaseTable::regular(5, 1 << 32, 1 << 32);
+        let mut batch = PtrBatch::with_capacity(n);
+        for i in 0..n as u64 {
+            batch.push(
+                SharedPtr::for_index(&layout, 0, i.wrapping_mul(37) % 4096),
+                i % 129,
+            );
+        }
+        (layout, table, batch)
+    }
+
+    #[test]
+    fn tiles_cover_the_batch_exactly_once() {
+        let (layout, table, batch) = cg_case(1000);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let plan = TilePlan::from_batch(&ctx, &batch, 64).unwrap();
+        assert_eq!(plan.len(), 1000);
+        assert_eq!(plan.tile_count(), 16); // ceil(1000/64)
+        let mut seen = vec![false; 1000];
+        for t in plan.tiles() {
+            assert!(!t.is_empty());
+            for i in t.lo..t.hi {
+                assert!(!seen[i], "index {i} covered twice");
+                seen[i] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        // dispatch order is sorted by affinity bucket
+        let owners: Vec<u32> = plan.tiles().iter().map(|t| t.owner).collect();
+        let mut sorted = owners.clone();
+        sorted.sort_unstable();
+        assert_eq!(owners, sorted);
+        assert!(plan.bucket_count() >= 2, "CG layout spreads owners");
+    }
+
+    #[test]
+    fn planned_execution_is_bit_identical_and_order_preserving() {
+        let (layout, table, batch) = cg_case(777);
+        let ctx = EngineCtx::new(layout, &table, 2).unwrap();
+        let mut want = BatchOut::new();
+        SoftwareEngine.translate(&ctx, &batch, &mut want).unwrap();
+        for tile_ptrs in [1, 4, 64, 4096] {
+            let plan = TilePlan::from_batch(&ctx, &batch, tile_ptrs).unwrap();
+            let mut got = BatchOut::new();
+            SoftwareEngine
+                .translate_planned(&ctx, &batch, &plan, &mut got)
+                .unwrap();
+            assert_eq!(got, want, "tile_ptrs={tile_ptrs}");
+        }
+    }
+
+    #[test]
+    fn groups_partition_dispatch_order_contiguously() {
+        let (layout, table, batch) = cg_case(2048);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let plan = TilePlan::from_batch(&ctx, &batch, 64).unwrap();
+        for k in [1, 2, 3, 7, 1000] {
+            let groups = plan.groups(k);
+            assert!(groups.len() <= k.max(1));
+            assert!(!groups.is_empty());
+            let total: usize =
+                groups.iter().map(|g| g.iter().map(Tile::len).sum::<usize>()).sum();
+            assert_eq!(total, plan.len(), "k={k}");
+            let flat: usize = groups.iter().map(|g| g.len()).sum();
+            assert_eq!(flat, plan.tile_count(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn length_mismatch_is_refused_loudly() {
+        let (layout, table, batch) = cg_case(100);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let plan = TilePlan::from_batch(&ctx, &batch, 16).unwrap();
+        let mut out = BatchOut::new();
+        // a runner that drops a result must be caught, not spliced
+        let err = plan
+            .execute_translate(&batch, &mut out, &mut |sub, sink| {
+                SoftwareEngine.translate(&ctx, sub, sink)?;
+                sink.ptrs.pop();
+                sink.sysva.pop();
+                sink.loc.pop();
+                Ok(())
+            })
+            .unwrap_err();
+        assert!(matches!(err, EngineError::Backend(_)));
+        // and a plan built for one batch refuses another length
+        let (_, _, short) = cg_case(50);
+        assert!(plan
+            .execute_translate(&short, &mut out, &mut |sub, sink| {
+                SoftwareEngine.translate(&ctx, sub, sink)
+            })
+            .is_err());
+    }
+}

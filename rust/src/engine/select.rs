@@ -25,6 +25,13 @@
 //!   `RemoteEngine::calibrate` round-trip and gated by
 //!   `remote_threshold` — the socket hop only wins where the measured
 //!   model says it does;
+//! * the vectorized software tier ([`SimdEngine`]) costs a per-pointer
+//!   lane price (`simd_ns_per_ptr`, measured by
+//!   [`EngineSelector::with_simd_calibration`]) past a
+//!   `PAR_THRESHOLD`-style serial/vector cutover (`simd_threshold`);
+//!   batches past `plan_threshold` are additionally tiled by the
+//!   cache-blocked, affinity-sorted [`TilePlan`] planner before
+//!   dispatch;
 //! * walks are priced separately off the O(1)
 //!   [`WalkCursor`](crate::sptr::WalkCursor) stepper cost — a walk's
 //!   scalar path is cheap regardless of layout, so walks shard only at
@@ -67,7 +74,9 @@ use std::time::Instant;
 
 use super::fault::{EngineFault, FaultPlan};
 use super::gather::{GatherPlan, GatherStats};
+use super::plan::{PlanStats, TilePlan, L2_TILE_PTRS};
 use super::remote::RemoteEngine;
+use super::simd::{SimdEngine, SimdStats, SIMD_LANES};
 use super::{
     AddressEngine, BatchOut, EngineCtx, EngineError, Leon3Engine, Pow2Engine,
     PtrBatch, ShardedEngine, SoftwareEngine,
@@ -92,13 +101,16 @@ pub enum EngineChoice {
     /// The worker-process pool behind Unix-domain sockets
     /// ([`RemoteEngine`] — address mapping as a service).
     Remote,
+    /// The vectorized software tier ([`SimdEngine`]): lane-wise
+    /// shift/mask on pow2 layouts, multiply-by-reciprocal otherwise.
+    Simd,
 }
 
 impl EngineChoice {
     /// Number of reportable backends — the length of [`ALL`](Self::ALL)
     /// and of every hit-counter / [`EngineMix`](crate::cpu::EngineMix)
     /// array indexed by [`index`](Self::index).
-    pub const COUNT: usize = 6;
+    pub const COUNT: usize = 7;
 
     /// Every backend the selector can report, in hit-counter order.
     pub const ALL: [EngineChoice; Self::COUNT] = [
@@ -108,6 +120,7 @@ impl EngineChoice {
         EngineChoice::XlaBatch,
         EngineChoice::Leon3,
         EngineChoice::Remote,
+        EngineChoice::Simd,
     ];
 
     /// Stable name used in reports and selection tables.
@@ -119,6 +132,7 @@ impl EngineChoice {
             EngineChoice::XlaBatch => "xla-batch",
             EngineChoice::Leon3 => "leon3",
             EngineChoice::Remote => "remote",
+            EngineChoice::Simd => "simd",
         }
     }
 
@@ -249,6 +263,13 @@ pub struct CostModel {
     /// [`GatherPlan::calibrate`]; the default is the `hotpath_engine`
     /// order of magnitude.
     pub gather_bucket_ns_per_ptr: f64,
+    /// ns per pointer on the vectorized software path (lane-wise
+    /// shift/mask or multiply-by-reciprocal).  Measured on the non-pow2
+    /// reciprocal path by [`EngineSelector::with_simd_calibration`] via
+    /// [`SimdEngine::calibrate`]; the default sits between the pow2 and
+    /// software scalar legs, so the argmin keeps the shift/mask scalar
+    /// path on pow2 geometry and routes big non-pow2 batches here.
+    pub simd_ns_per_ptr: f64,
 }
 
 impl Default for CostModel {
@@ -266,6 +287,7 @@ impl Default for CostModel {
             remote_ns_per_ptr: 25.0,
             remote_dispatch_ns: 150_000.0,
             gather_bucket_ns_per_ptr: 2.0,
+            simd_ns_per_ptr: 4.0,
         }
     }
 }
@@ -305,6 +327,7 @@ impl CostModel {
             EngineChoice::Remote => {
                 self.remote_dispatch_ns + n * self.remote_ns_per_ptr
             }
+            EngineChoice::Simd => n * self.simd_ns_per_ptr,
         }
     }
 
@@ -344,6 +367,9 @@ struct MeasuredLegs {
     /// `(ns_per_ptr, dispatch_ns)` from `RemoteEngine::calibrate` (or
     /// the forced-tier pricing explicitly installed with it).
     remote: Option<(f64, f64)>,
+    /// `ns_per_ptr` from [`SimdEngine::calibrate`] (or a forced value
+    /// installed with [`EngineSelector::with_simd_cost`]).
+    simd: Option<f64>,
 }
 
 /// Interior-mutable counters behind the selector's gather leg
@@ -360,6 +386,46 @@ impl GatherCounters {
         GatherStats {
             plans: self.plans.load(Ordering::Relaxed),
             bucketed_ptrs: self.bucketed_ptrs.load(Ordering::Relaxed),
+            fallback: self.fallback.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Interior-mutable counters behind the vectorized tier (snapshotted as
+/// [`SimdStats`]).
+#[derive(Debug, Default)]
+struct SimdCounters {
+    batches: AtomicU64,
+    lane_ptrs: AtomicU64,
+    tail_ptrs: AtomicU64,
+}
+
+impl SimdCounters {
+    fn snapshot(&self) -> SimdStats {
+        SimdStats {
+            batches: self.batches.load(Ordering::Relaxed),
+            lane_ptrs: self.lane_ptrs.load(Ordering::Relaxed),
+            tail_ptrs: self.tail_ptrs.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Interior-mutable counters behind the cache-blocked batch planner
+/// (snapshotted as [`PlanStats`]).
+#[derive(Debug, Default)]
+struct PlanCounters {
+    plans: AtomicU64,
+    tiles: AtomicU64,
+    planned_ptrs: AtomicU64,
+    fallback: AtomicU64,
+}
+
+impl PlanCounters {
+    fn snapshot(&self) -> PlanStats {
+        PlanStats {
+            plans: self.plans.load(Ordering::Relaxed),
+            tiles: self.tiles.load(Ordering::Relaxed),
+            planned_ptrs: self.planned_ptrs.load(Ordering::Relaxed),
             fallback: self.fallback.load(Ordering::Relaxed),
         }
     }
@@ -665,6 +731,20 @@ pub struct EngineSelector {
     gather_threshold: usize,
     /// Counters behind the gather leg (`gather.*` stats lines).
     gather: GatherCounters,
+    /// The vectorized software tier (always installed: it is pure host
+    /// arithmetic, legal for every layout).
+    simd: SimdEngine,
+    /// Serial/vector cutover: batches below this stay scalar even if
+    /// the per-pointer estimate says vectorize (loop setup dominates).
+    simd_threshold: usize,
+    /// Minimum batch size worth building a cache-blocked [`TilePlan`].
+    plan_threshold: usize,
+    /// Requests per planned tile.
+    plan_tile: usize,
+    /// Counters behind the vectorized tier (`simd.*` stats lines).
+    simd_ctr: SimdCounters,
+    /// Counters behind the batch planner (`plan.*` stats lines).
+    plan_ctr: PlanCounters,
     cost: CostModel,
     /// Install-time calibrations, re-applied on every cost-model write.
     measured: MeasuredLegs,
@@ -710,6 +790,17 @@ impl EngineSelector {
     /// re-derives it from this host's measured plan-setup cost.
     pub const DEFAULT_GATHER_THRESHOLD: usize = 8;
 
+    /// Minimum batch size the vectorized tier competes at — the
+    /// `PAR_THRESHOLD`-style serial/vector cutover.  Below a few lane
+    /// widths the chunk-loop setup and SoA loads cost more than the
+    /// divides they replace, so tiny batches stay on the scalar floor.
+    pub const DEFAULT_SIMD_THRESHOLD: usize = 4 * SIMD_LANES;
+
+    /// Minimum batch size worth building a cache-blocked [`TilePlan`]:
+    /// two default tiles — below that the plan degenerates to a single
+    /// tile and planning is pure overhead.
+    pub const DEFAULT_PLAN_THRESHOLD: usize = 2 * L2_TILE_PTRS;
+
     /// Cap on the default worker-pool size (campaigns run many
     /// selector-owning runtimes concurrently).
     const MAX_DEFAULT_WORKERS: usize = 8;
@@ -735,6 +826,12 @@ impl EngineSelector {
             remote_threshold: Self::DEFAULT_REMOTE_THRESHOLD,
             gather_threshold: Self::DEFAULT_GATHER_THRESHOLD,
             gather: GatherCounters::default(),
+            simd: SimdEngine,
+            simd_threshold: Self::DEFAULT_SIMD_THRESHOLD,
+            plan_threshold: Self::DEFAULT_PLAN_THRESHOLD,
+            plan_tile: L2_TILE_PTRS,
+            simd_ctr: SimdCounters::default(),
+            plan_ctr: PlanCounters::default(),
             cost: CostModel::default(),
             measured: MeasuredLegs::default(),
             hits: std::array::from_fn(|_| AtomicU64::new(0)),
@@ -800,6 +897,73 @@ impl EngineSelector {
         self.gather.snapshot()
     }
 
+    /// Measure this host's actual vectorized per-pointer cost
+    /// ([`SimdEngine::calibrate`]) and install it as the simd leg of
+    /// the cost model — the same measured-not-guessed discipline as the
+    /// Leon3/remote/gather legs.  The measurement is recorded and
+    /// survives any later [`with_cost_model`](Self::with_cost_model).
+    pub fn with_simd_calibration(mut self) -> Self {
+        let ns_per_ptr = SimdEngine::calibrate();
+        self.measured.simd = Some(ns_per_ptr);
+        self.reapply_measured();
+        self
+    }
+
+    /// Force the simd leg's per-pointer price (recorded like a
+    /// measurement, so later cost-model writes keep it) — how tests and
+    /// the resilience bench pin the vector tier's position in the
+    /// argmin.
+    pub fn with_simd_cost(mut self, ns_per_ptr: f64) -> Self {
+        self.measured.simd = Some(ns_per_ptr);
+        self.reapply_measured();
+        self
+    }
+
+    /// Route batches of at least `n` pointers through the vectorized
+    /// leg of the cost model (`n = 0` is clamped to 1; `usize::MAX`
+    /// disables the tier).
+    pub fn with_simd_threshold(mut self, n: usize) -> Self {
+        self.simd_threshold = n.max(1);
+        self
+    }
+
+    /// The serial/vector cutover currently in force.
+    pub fn simd_threshold(&self) -> usize {
+        self.simd_threshold
+    }
+
+    /// Snapshot the vectorized-tier counters (batches served, lane vs
+    /// scalar-tail pointers).
+    pub fn simd_stats(&self) -> SimdStats {
+        self.simd_ctr.snapshot()
+    }
+
+    /// Build cache-blocked [`TilePlan`]s for batches of at least `n`
+    /// pointers (`n = 0` is clamped to 1; `usize::MAX` disables the
+    /// planner).
+    pub fn with_plan_threshold(mut self, n: usize) -> Self {
+        self.plan_threshold = n.max(1);
+        self
+    }
+
+    /// The planner engagement threshold currently in force.
+    pub fn plan_threshold(&self) -> usize {
+        self.plan_threshold
+    }
+
+    /// Requests per planned tile (clamped to at least 1; default
+    /// [`L2_TILE_PTRS`]).
+    pub fn with_plan_tile(mut self, tile_ptrs: usize) -> Self {
+        self.plan_tile = tile_ptrs.max(1);
+        self
+    }
+
+    /// Snapshot the planner counters (plans built, tiles dispatched,
+    /// planned pointers, single-tile fallbacks).
+    pub fn plan_stats(&self) -> PlanStats {
+        self.plan_ctr.snapshot()
+    }
+
     /// Replace the tunable cost constants (e.g. from a calibration
     /// run).  Backend legs that were **measured at install time**
     /// ([`with_leon3`](Self::with_leon3),
@@ -823,6 +987,9 @@ impl EngineSelector {
         if let Some((ns_per_ptr, dispatch_ns)) = self.measured.remote {
             self.cost.remote_ns_per_ptr = ns_per_ptr;
             self.cost.remote_dispatch_ns = dispatch_ns;
+        }
+        if let Some(ns_per_ptr) = self.measured.simd {
+            self.cost.simd_ns_per_ptr = ns_per_ptr;
         }
     }
 
@@ -962,6 +1129,19 @@ impl EngineSelector {
         // has a survivor.
         let scalar = self.scalar_choice(layout);
         let mut best = (scalar, price(scalar));
+        // The vectorized software tier: pure host arithmetic, legal for
+        // every layout, but never the *fallback* floor (the ladder ends
+        // on the scalar engines) and never priced for walks (the O(1)
+        // stepper has no lanes to fill).
+        if !walk
+            && n >= self.simd_threshold
+            && self.health.admit(EngineChoice::Simd)
+        {
+            let ns = price(EngineChoice::Simd);
+            if ns < best.1 {
+                best = (EngineChoice::Simd, ns);
+            }
+        }
         if self.shard_workers > 1
             && n >= self.shard_threshold
             && self.health.admit(EngineChoice::Sharded)
@@ -1023,16 +1203,23 @@ impl EngineSelector {
     /// use pgas_hw::engine::{EngineChoice, EngineSelector};
     /// use pgas_hw::sptr::ArrayLayout;
     ///
-    /// // A single-worker selector degenerates to the paper's fixed
-    /// // policy: the shift/mask fast path on pow2 geometry...
+    /// // A single-worker selector keeps the paper's shift/mask fast
+    /// // path on pow2 geometry (no vector lane beats one shift)...
     /// let sel = EngineSelector::new().with_shard_workers(1);
     /// assert_eq!(
     ///     sel.choice(&ArrayLayout::new(4, 8, 4), 64),
     ///     EngineChoice::Pow2
     /// );
-    /// // ...and software Algorithm 1 for CG's non-pow2 w_tmp struct.
+    /// // ...routes batched work on CG's non-pow2 w_tmp struct to the
+    /// // vectorized reciprocal lanes...
     /// assert_eq!(
     ///     sel.choice(&ArrayLayout::new(1, 56016, 8), 64),
+    ///     EngineChoice::Simd
+    /// );
+    /// // ...and keeps scalar software Algorithm 1 below the
+    /// // serial/vector cutover.
+    /// assert_eq!(
+    ///     sel.choice(&ArrayLayout::new(1, 56016, 8), 4),
     ///     EngineChoice::Software
     /// );
     /// ```
@@ -1072,6 +1259,7 @@ impl EngineSelector {
                 .remote
                 .as_deref()
                 .expect("choice() returned Remote without the pool installed"),
+            EngineChoice::Simd => &self.simd,
         }
     }
 
@@ -1166,6 +1354,14 @@ impl EngineSelector {
         match outcome {
             Ok(()) if billed_ns <= deadline_ns => {
                 self.health.on_success(primary);
+                if primary == EngineChoice::Simd {
+                    let tail = (n % SIMD_LANES) as u64;
+                    self.simd_ctr.batches.fetch_add(1, Ordering::Relaxed);
+                    self.simd_ctr
+                        .lane_ptrs
+                        .fetch_add(n as u64 - tail, Ordering::Relaxed);
+                    self.simd_ctr.tail_ptrs.fetch_add(tail, Ordering::Relaxed);
+                }
                 return Ok(primary);
             }
             Ok(()) => {
@@ -1221,14 +1417,52 @@ impl EngineSelector {
     // every one runs the argmin once, then serves through the guarded
     // dispatch funnel (health, breaker, deadline, fallback) ----
 
+    /// Build a cache-blocked plan for one over-threshold batch: tally
+    /// and return it when it actually tiles (≥ 2 tiles), count the
+    /// degenerate single-tile case as a fallback and return `None`.
+    fn tile_plan(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+    ) -> Result<Option<TilePlan>, EngineError> {
+        let plan = TilePlan::from_batch(ctx, batch, self.plan_tile)?;
+        if plan.tile_count() < 2 {
+            self.plan_ctr.fallback.fetch_add(1, Ordering::Relaxed);
+            return Ok(None);
+        }
+        self.plan_ctr.plans.fetch_add(1, Ordering::Relaxed);
+        self.plan_ctr
+            .tiles
+            .fetch_add(plan.tile_count() as u64, Ordering::Relaxed);
+        self.plan_ctr
+            .planned_ptrs
+            .fetch_add(plan.len() as u64, Ordering::Relaxed);
+        Ok(Some(plan))
+    }
+
     pub fn translate(
         &self,
         ctx: &EngineCtx,
         batch: &PtrBatch,
         out: &mut BatchOut,
     ) -> Result<(), EngineError> {
-        let choice = self.choice(&ctx.layout, batch.len());
-        self.dispatch(choice, &ctx.layout, batch.len(), false, &mut |e| {
+        let n = batch.len();
+        if n >= self.plan_threshold {
+            // cache-blocked leg: tile, affinity-sort, dispatch the plan
+            // through the same guarded funnel — the chosen tier's
+            // `translate_planned` runs tiles cache-resident (or shards
+            // over whole tile groups), bit-identical to the direct path
+            if let Some(plan) = self.tile_plan(ctx, batch)? {
+                let choice = self.choice(&ctx.layout, n);
+                return self
+                    .dispatch(choice, &ctx.layout, n, false, &mut |e| {
+                        e.translate_planned(ctx, batch, &plan, out)
+                    })
+                    .map(|_| ());
+            }
+        }
+        let choice = self.choice(&ctx.layout, n);
+        self.dispatch(choice, &ctx.layout, n, false, &mut |e| {
             e.translate(ctx, batch, out)
         })
         .map(|_| ())
@@ -1268,6 +1502,20 @@ impl EngineSelector {
             // single-owner after inspection: bucketing would only add
             // copies; record the decision and serve direct
             self.gather.fallback.fetch_add(1, Ordering::Relaxed);
+        }
+        if batch.len() >= self.plan_threshold {
+            // cache-blocked leg for the big single-owner (or
+            // sub-gather-threshold) batches the inspector left behind
+            if let Some(plan) = self.tile_plan(ctx, batch)? {
+                let choice = self.choice(&ctx.layout, batch.len());
+                return self.dispatch(
+                    choice,
+                    &ctx.layout,
+                    batch.len(),
+                    false,
+                    &mut |e| e.increment_planned(ctx, batch, &plan, out),
+                );
+            }
         }
         let choice = self.choice(&ctx.layout, batch.len());
         self.dispatch(choice, &ctx.layout, batch.len(), false, &mut |e| {
@@ -1362,10 +1610,11 @@ mod tests {
             sel.choice(&ArrayLayout::new(64, 8, 16), 1 << 20),
             EngineChoice::Pow2
         );
-        // the CG w/w_tmp case (elemsize 56016) -> software fallback
+        // the CG w/w_tmp case (elemsize 56016): the general path — now
+        // vectorized reciprocal lanes once the batch fills them
         assert_eq!(
             sel.choice(&ArrayLayout::new(1, 56016, 8), 1 << 20),
-            EngineChoice::Software
+            EngineChoice::Simd
         );
         assert_eq!(sel.select(&ArrayLayout::new(1, 56016, 8), 4).name(), "software");
         assert_eq!(sel.select(&ArrayLayout::new(4, 4, 4), 4).name(), "pow2");
@@ -1373,28 +1622,30 @@ mod tests {
 
     #[test]
     fn cost_model_routes_big_batches_to_the_shard_pool() {
-        let sel = EngineSelector::new().with_shard_workers(4);
+        let sel = EngineSelector::new().with_shard_workers(8);
         let pow2 = ArrayLayout::new(64, 8, 16);
         let soft = ArrayLayout::new(1, 56016, 8);
         // tiny batches stay scalar regardless of layout
-        assert_eq!(sel.choice(&pow2, 16), EngineChoice::Pow2);
-        assert_eq!(sel.choice(&soft, 16), EngineChoice::Software);
+        assert_eq!(sel.choice(&pow2, 8), EngineChoice::Pow2);
+        assert_eq!(sel.choice(&soft, 8), EngineChoice::Software);
         // huge batches amortize the scatter/gather fee
         assert_eq!(sel.choice(&pow2, 1 << 20), EngineChoice::Sharded);
         assert_eq!(sel.choice(&soft, 1 << 20), EngineChoice::Sharded);
         // just past the threshold the fee still dominates the cheap
-        // pow2 path but not the expensive software path
+        // pow2 path; the expensive software path is undercut by the
+        // vectorized lanes before the pool fee can amortize
         let n = EngineSelector::DEFAULT_SHARD_THRESHOLD;
         assert_eq!(sel.choice(&pow2, n), EngineChoice::Pow2);
-        assert_eq!(sel.choice(&soft, n), EngineChoice::Sharded);
+        assert_eq!(sel.choice(&soft, n), EngineChoice::Simd);
     }
 
     #[test]
     fn walks_are_priced_off_the_stepper() {
         let sel = EngineSelector::new().with_shard_workers(8);
         let soft = ArrayLayout::new(1, 56016, 8);
-        // a translate batch of this size shards (12 ns/ptr scalar)...
-        assert_eq!(sel.choice(&soft, 16384), EngineChoice::Sharded);
+        // a translate batch of this size leaves the scalar floor (the
+        // vector lanes undercut 12 ns/ptr software)...
+        assert_eq!(sel.choice(&soft, 16384), EngineChoice::Simd);
         // ...but a walk of the same length is O(1)/step inline and
         // stays on the scalar stepper
         assert_eq!(sel.choice_walk(&soft, 16384), EngineChoice::Software);
@@ -1406,7 +1657,10 @@ mod tests {
     fn sharded_passthrough_is_bit_identical_and_counted() {
         let sel = EngineSelector::new()
             .with_shard_workers(3)
-            .with_shard_threshold(64);
+            .with_shard_threshold(64)
+            // pin the argmin on the pool: this test exercises the
+            // sharded leg, not the serial/vector cutover
+            .with_simd_threshold(usize::MAX);
         let layout = ArrayLayout::new(1, 56016, 8); // software inner
         let table = BaseTable::regular(8, 1 << 32, 1 << 32);
         let ctx = EngineCtx::new(layout, &table, 2).unwrap();
@@ -1466,8 +1720,10 @@ mod tests {
         let soft = ArrayLayout::new(1, 56016, 8);
         assert_eq!(sel.choice(&pow2, 64), EngineChoice::Leon3);
         assert_eq!(sel.choice_walk(&pow2, 64), EngineChoice::Leon3);
-        // the hardware gate still overrides price: non-pow2 -> software
-        assert_eq!(sel.choice(&soft, 64), EngineChoice::Software);
+        // the hardware gate still overrides price: non-pow2 falls to
+        // the general-path tiers (vectorized at this batch size)
+        assert_eq!(sel.choice(&soft, 64), EngineChoice::Simd);
+        assert_eq!(sel.choice(&soft, 4), EngineChoice::Software);
         // served through the selector: bit-identical and counted
         let table = BaseTable::regular(4, 1 << 32, 1 << 32);
         let ctx = EngineCtx::new(pow2, &table, 1).unwrap();
@@ -1732,6 +1988,152 @@ mod tests {
         assert!(h.injected_faults >= 1);
         assert!(h.fallback_runs >= 1);
         assert_eq!(sel.gather_stats().plans, 1);
+    }
+
+    #[test]
+    fn simd_leg_prices_vectorized_batches_and_counts_lanes() {
+        let sel = EngineSelector::new().with_shard_workers(1);
+        // non-pow2 CG geometry: the reciprocal lanes undercut scalar
+        // software once the batch clears the serial/vector cutover
+        let layout = ArrayLayout::new(3, 112, 5);
+        assert_eq!(sel.choice(&layout, 8), EngineChoice::Software);
+        assert_eq!(sel.choice(&layout, 64), EngineChoice::Simd);
+        let table = BaseTable::regular(5, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 2).unwrap();
+        let mut batch = PtrBatch::new();
+        for i in 0..67u64 {
+            batch.push(SharedPtr::for_index(&layout, 0, i * 11), i % 29);
+        }
+        let (mut via, mut direct) = (BatchOut::new(), BatchOut::new());
+        sel.translate(&ctx, &batch, &mut via).unwrap();
+        SoftwareEngine.translate(&ctx, &batch, &mut direct).unwrap();
+        assert_eq!(via, direct, "vector lanes must stay bit-identical");
+        assert_eq!(sel.hit_counts()[EngineChoice::Simd.index()].1, 1);
+        let s = sel.simd_stats();
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.lane_ptrs, 64);
+        assert_eq!(s.tail_ptrs, 3);
+    }
+
+    #[test]
+    fn forced_cheap_simd_wins_pow2_geometry_but_never_walks() {
+        let sel = EngineSelector::new()
+            .with_shard_workers(1)
+            .with_simd_cost(0.01);
+        let pow2 = ArrayLayout::new(4, 8, 4);
+        assert_eq!(sel.choice(&pow2, 64), EngineChoice::Simd);
+        // walks have no lanes to fill: the O(1) stepper stays scalar
+        assert_eq!(sel.choice_walk(&pow2, 64), EngineChoice::Pow2);
+        // and the cutover still floors tiny batches
+        assert_eq!(sel.choice(&pow2, 4), EngineChoice::Pow2);
+    }
+
+    #[test]
+    fn simd_calibration_survives_cost_model_order() {
+        let sentinel = CostModel {
+            simd_ns_per_ptr: 7777.0,
+            ..CostModel::default()
+        };
+        let before = EngineSelector::new()
+            .with_cost_model(sentinel)
+            .with_simd_cost(0.5);
+        let after = EngineSelector::new()
+            .with_simd_cost(0.5)
+            .with_cost_model(sentinel);
+        for (label, sel) in [("cost-first", &before), ("simd-first", &after)] {
+            assert_eq!(
+                sel.cost_model().simd_ns_per_ptr,
+                0.5,
+                "{label}: measurement lost"
+            );
+        }
+        // a fresh calibration measures a positive per-pointer cost
+        let cal = EngineSelector::new().with_simd_calibration();
+        assert!(cal.cost_model().simd_ns_per_ptr > 0.0);
+    }
+
+    #[test]
+    fn planner_engages_past_threshold_and_stays_bit_identical() {
+        let sel = EngineSelector::new()
+            .with_shard_workers(1)
+            .with_plan_threshold(64)
+            .with_plan_tile(16);
+        let layout = ArrayLayout::new(3, 112, 5);
+        let table = BaseTable::regular(5, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 1).unwrap();
+        let mut batch = PtrBatch::new();
+        for i in 0..200u64 {
+            batch.push(
+                SharedPtr::for_index(&layout, 0, (i * 37) % 512),
+                i % 13,
+            );
+        }
+        let (mut via, mut direct) = (BatchOut::new(), BatchOut::new());
+        sel.translate(&ctx, &batch, &mut via).unwrap();
+        SoftwareEngine.translate(&ctx, &batch, &mut direct).unwrap();
+        assert_eq!(via, direct, "planned path must stay bit-identical");
+        let p = sel.plan_stats();
+        assert_eq!(p.plans, 1);
+        assert_eq!(p.tiles, 13); // ceil(200 / 16)
+        assert_eq!(p.planned_ptrs, 200);
+        assert_eq!(p.fallback, 0);
+        // increments plan too (gather disabled so the leg is reachable)
+        let sel2 = EngineSelector::new()
+            .with_shard_workers(1)
+            .with_gather_threshold(usize::MAX)
+            .with_plan_threshold(64)
+            .with_plan_tile(16);
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        sel2.increment(&ctx, &batch, &mut pa).unwrap();
+        SoftwareEngine.increment(&ctx, &batch, &mut pb).unwrap();
+        assert_eq!(pa, pb);
+        assert_eq!(sel2.plan_stats().plans, 1);
+        // a batch under one tile degenerates: counted as fallback
+        let sel3 = EngineSelector::new()
+            .with_shard_workers(1)
+            .with_plan_threshold(64)
+            .with_plan_tile(4096);
+        let mut out = BatchOut::new();
+        sel3.translate(&ctx, &batch, &mut out).unwrap();
+        assert_eq!(out, direct);
+        let p3 = sel3.plan_stats();
+        assert_eq!((p3.plans, p3.fallback), (0, 1));
+    }
+
+    #[test]
+    fn simd_faults_degrade_through_the_ladder_bit_identically() {
+        use super::super::fault::FaultSpec;
+        // the vector tier is the argmin pick here, every dispatch draws
+        // an injected error, and the ladder must absorb all of them
+        let sel = EngineSelector::new()
+            .with_shard_workers(1)
+            .with_chaos(Arc::new(FaultPlan::new(FaultSpec {
+                error: 1.0,
+                ..FaultSpec::quiet(0xFEED)
+            })));
+        let layout = ArrayLayout::new(3, 112, 5);
+        assert_eq!(sel.choice(&layout, 64), EngineChoice::Simd);
+        let table = BaseTable::regular(5, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        for i in 0..64u64 {
+            batch.push(SharedPtr::for_index(&layout, 0, i * 3), i);
+        }
+        let (mut via, mut direct) = (BatchOut::new(), BatchOut::new());
+        for _ in 0..8 {
+            sel.translate(&ctx, &batch, &mut via).unwrap();
+        }
+        SoftwareEngine.translate(&ctx, &batch, &mut direct).unwrap();
+        assert_eq!(via, direct);
+        let h = sel.health_stats();
+        let simd = h.tiers[EngineChoice::Simd.index()];
+        assert_eq!(simd.state, BreakerState::Open, "simd breaker trips");
+        assert!(simd.trips >= 1);
+        assert!(simd.failures >= u64::from(Health::TRIP_CONSEC));
+        // quarantined: the argmin re-runs over the survivors
+        assert_eq!(sel.choice(&layout, 64), EngineChoice::Software);
+        // a clean vector serve never reached the counters
+        assert_eq!(sel.simd_stats().batches, 0);
     }
 
     #[test]

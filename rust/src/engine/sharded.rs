@@ -26,6 +26,7 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use super::plan::{Tile, TilePlan};
 use super::{AddressEngine, BatchOut, EngineCtx, EngineError, PtrBatch};
 use crate::sptr::{
     increment_general, ArrayLayout, BaseTable, Locality, SharedPtr, Topology,
@@ -286,6 +287,64 @@ impl<E: AddressEngine + Send + Sync + 'static> ShardedEngine<E> {
         drop(reply_tx);
         Self::collect(reply_rx, k)
     }
+
+    /// Scatter a planned batch over the pool by **whole tiles**: each
+    /// worker gets one contiguous run of the plan's affinity-sorted
+    /// tile list ([`TilePlan::groups`]) gathered into a single
+    /// owner-coherent frame, instead of a raw index range of the
+    /// original batch.  Returns the per-group shard outputs in group
+    /// order; callers scatter them back through the tiles' original
+    /// ranges.
+    fn map_planned<'p>(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        plan: &'p TilePlan,
+        k: usize,
+        translate: bool,
+    ) -> Result<(Vec<&'p [Tile]>, Vec<ShardOut>), EngineError> {
+        let groups = plan.groups(k);
+        let owned = OwnedCtx::snapshot(ctx);
+        let (reply_tx, reply_rx) = channel();
+        for (i, group) in groups.iter().enumerate() {
+            let m: usize = group.iter().map(Tile::len).sum();
+            let mut ptrs = Vec::with_capacity(m);
+            let mut incs = Vec::with_capacity(m);
+            for t in *group {
+                ptrs.extend_from_slice(&batch.ptrs[t.lo..t.hi]);
+                incs.extend_from_slice(&batch.incs[t.lo..t.hi]);
+            }
+            let job = Job {
+                shard: i,
+                ctx: owned.clone(),
+                task: Task::Map { ptrs, incs, translate },
+                reply: reply_tx.clone(),
+            };
+            self.senders[i].send(job).map_err(|_| {
+                EngineError::Backend("sharded: worker pool shut down".into())
+            })?;
+        }
+        drop(reply_tx);
+        let parts = Self::collect(reply_rx, groups.len())?;
+        Ok((groups, parts))
+    }
+
+    /// A plan built for a different batch must be refused before any
+    /// shard work is dispatched.
+    fn check_plan(
+        batch: &PtrBatch,
+        plan: &TilePlan,
+    ) -> Result<(), EngineError> {
+        batch.check()?;
+        if batch.len() != plan.len() {
+            return Err(EngineError::Backend(format!(
+                "plan covers {} requests but batch has {}",
+                plan.len(),
+                batch.len()
+            )));
+        }
+        Ok(())
+    }
 }
 
 impl<E: AddressEngine + Send + Sync + 'static> AddressEngine
@@ -369,6 +428,110 @@ impl<E: AddressEngine + Send + Sync + 'static> AddressEngine
         drop(reply_tx);
         let parts = Self::collect(reply_rx, k)?;
         Self::splice_batches(parts, out, steps)
+    }
+
+    /// The planner-aware override: shard over planned tiles instead of
+    /// raw index ranges.  Each worker serves one contiguous run of
+    /// affinity-sorted tiles; results scatter back through every tile's
+    /// original range, so output is bit-identical to the unplanned path
+    /// at any tile size and shard count.
+    fn translate_planned(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        plan: &TilePlan,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        Self::check_plan(batch, plan)?;
+        let k = self.fanout(batch.len());
+        if k == 1 {
+            // below the pool's economy threshold: sequential
+            // cache-blocked execution on the inner engine
+            return plan.execute_translate(batch, out, &mut |sub, sink| {
+                self.inner.translate(ctx, sub, sink)
+            });
+        }
+        let (groups, parts) = self.map_planned(ctx, batch, plan, k, true)?;
+        out.clear();
+        out.ptrs.resize(batch.len(), SharedPtr::NULL);
+        out.sysva.resize(batch.len(), 0);
+        out.loc.resize(batch.len(), Locality::Local);
+        for (group, part) in groups.iter().zip(parts) {
+            let b = match part {
+                ShardOut::Batch(b) => b,
+                ShardOut::Ptrs(_) => {
+                    return Err(EngineError::Backend(
+                        "sharded: worker answered a planned translate with \
+                         increment-shaped output"
+                            .into(),
+                    ))
+                }
+            };
+            let want: usize = group.iter().map(Tile::len).sum();
+            if b.len() != want {
+                return Err(EngineError::Backend(format!(
+                    "sharded: planned group returned {} results for {want} \
+                     requests",
+                    b.len()
+                )));
+            }
+            let mut off = 0usize;
+            for t in *group {
+                out.ptrs[t.lo..t.hi]
+                    .copy_from_slice(&b.ptrs[off..off + t.len()]);
+                out.sysva[t.lo..t.hi]
+                    .copy_from_slice(&b.sysva[off..off + t.len()]);
+                out.loc[t.lo..t.hi].copy_from_slice(&b.loc[off..off + t.len()]);
+                off += t.len();
+            }
+        }
+        Ok(())
+    }
+
+    /// Increment-only form of the planned override.
+    fn increment_planned(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        plan: &TilePlan,
+        out: &mut Vec<SharedPtr>,
+    ) -> Result<(), EngineError> {
+        Self::check_plan(batch, plan)?;
+        let k = self.fanout(batch.len());
+        if k == 1 {
+            return plan.execute_increment(batch, out, &mut |sub, sink| {
+                self.inner.increment(ctx, sub, sink)
+            });
+        }
+        let (groups, parts) = self.map_planned(ctx, batch, plan, k, false)?;
+        out.clear();
+        out.resize(batch.len(), SharedPtr::NULL);
+        for (group, part) in groups.iter().zip(parts) {
+            let v = match part {
+                ShardOut::Ptrs(v) => v,
+                ShardOut::Batch(_) => {
+                    return Err(EngineError::Backend(
+                        "sharded: worker answered a planned increment with \
+                         translate-shaped output"
+                            .into(),
+                    ))
+                }
+            };
+            let want: usize = group.iter().map(Tile::len).sum();
+            if v.len() != want {
+                return Err(EngineError::Backend(format!(
+                    "sharded: planned group returned {} results for {want} \
+                     requests",
+                    v.len()
+                )));
+            }
+            let mut off = 0usize;
+            for t in *group {
+                out[t.lo..t.hi].copy_from_slice(&v[off..off + t.len()]);
+                off += t.len();
+            }
+        }
+        Ok(())
     }
 
     fn translate_one(
@@ -572,6 +735,46 @@ mod tests {
         sharded.translate(&ctx, &batch, &mut a).unwrap();
         Pow2Engine.translate(&ctx, &batch, &mut b).unwrap();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn planned_sharding_matches_unplanned_at_any_tile_size() {
+        // shard-over-tiles must stay bit-identical to both the inner
+        // engine and the unplanned sharded path, for every tile grain
+        let sharded =
+            ShardedEngine::new(SoftwareEngine, 3).with_min_shard_len(1);
+        let layout = ArrayLayout::new(3, 112, 5); // CG non-pow2 geometry
+        let table = BaseTable::regular(5, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 1).unwrap();
+        let mut batch = PtrBatch::new();
+        for i in 0..1234u64 {
+            batch.push(SharedPtr::for_index(&layout, 0, i * 7 % 4096), i % 97);
+        }
+        let mut want = BatchOut::new();
+        SoftwareEngine.translate(&ctx, &batch, &mut want).unwrap();
+        let mut want_inc = Vec::new();
+        SoftwareEngine.increment(&ctx, &batch, &mut want_inc).unwrap();
+        for tile in [1usize, 4, 64, 4096] {
+            let plan = TilePlan::from_batch(&ctx, &batch, tile).unwrap();
+            let mut got = BatchOut::new();
+            sharded
+                .translate_planned(&ctx, &batch, &plan, &mut got)
+                .unwrap();
+            assert_eq!(got, want, "translate tile={tile}");
+            let mut got_inc = Vec::new();
+            sharded
+                .increment_planned(&ctx, &batch, &plan, &mut got_inc)
+                .unwrap();
+            assert_eq!(got_inc, want_inc, "increment tile={tile}");
+        }
+        // a plan for a different batch is refused before dispatch
+        let plan = TilePlan::from_batch(&ctx, &batch, 64).unwrap();
+        let mut short = PtrBatch::new();
+        short.push(SharedPtr::NULL, 1);
+        let mut out = BatchOut::new();
+        assert!(sharded
+            .translate_planned(&ctx, &short, &plan, &mut out)
+            .is_err());
     }
 
     #[test]

@@ -1,0 +1,497 @@
+//! The vectorized software tier: lane-wise Algorithm 1 over
+//! [`PtrBatch`] chunks.
+//!
+//! The paper's premise is that per-pointer address translation is pure
+//! overhead; before hardware removes it, the host path can at least
+//! stop paying a scalar divide and modulo per pointer.  This backend
+//! processes [`SIMD_LANES`] pointers per iteration in
+//! structure-of-arrays form:
+//!
+//! ```text
+//!          lane 0     lane 1     lane 2     lane 3
+//! phase  [ p0.phase | p1.phase | p2.phase | p3.phase ]  + incs
+//! thinc  [  >>/mul  |  >>/mul  |  >>/mul  |  >>/mul  ]  blocksize
+//! thread [  &/mul   |  &/mul   |  &/mul   |  &/mul   ]  numthreads
+//! va     [  <</mul  |  <</mul  |  <</mul  |  <</mul  ]  elemsize
+//! ```
+//!
+//! * **pow2 layouts** reduce to shift/mask lanes, hoisting the Figure-3
+//!   log2 immediates already cached in [`EngineCtx`] — the same ops the
+//!   hardware pipeline wires up, replicated across lanes.
+//! * **general layouts** (CG's 112-byte rows, 56016-byte structs, any
+//!   non-pow2 thread count) replace both div/mod pairs with the
+//!   [`Recip`] multiply-by-reciprocal precomputed once per ctx — a
+//!   Granlund–Montgomery strength reduction that is *exact* for every
+//!   u64 numerator, so the lanes stay bit-identical to
+//!   [`increment_general`](crate::sptr::increment_general).
+//!
+//! Portability: `std::simd` is nightly-only, so the lanes are
+//! hand-unrolled over fixed `[u64; SIMD_LANES]` arrays — a shape LLVM
+//! auto-vectorizes on every target that has vector units and compiles
+//! to plain scalar code everywhere else, with no runtime CPU-feature
+//! dispatch to get wrong.  Batch remainders (`n % SIMD_LANES`) run
+//! through the same scalar [`SoftwareEngine::map_one`] the reference
+//! backend uses, and the conformance suite
+//! (`rust/tests/engine_conformance.rs`) checks the whole engine
+//! differentially against [`SoftwareEngine`] on every NPB layout —
+//! the runtime check that the vector math never drifts.
+//!
+//! The selector prices this tier from [`SimdEngine::calibrate`]
+//! (`simd_ns_per_ptr`) behind a serial/vector cutover threshold, and
+//! tallies [`SimdStats`] for every batch the tier serves.
+
+use std::time::Instant;
+
+use super::{
+    AddressEngine, BatchOut, EngineCtx, EngineError, PtrBatch, SoftwareEngine,
+};
+use crate::sptr::{
+    locality, ArrayLayout, BaseTable, Recip, SharedPtr, Topology,
+};
+
+/// Pointers processed per unrolled iteration (u64x4: one AVX2 register,
+/// two NEON registers; still profitable as plain unrolled scalar code).
+pub const SIMD_LANES: usize = 4;
+
+/// Counters for the vectorized tier: batches served, pointers that went
+/// through full lanes, and pointers handled by the scalar tail.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SimdStats {
+    /// Batches served by the simd tier.
+    pub batches: u64,
+    /// Pointers processed in full `SIMD_LANES`-wide chunks.
+    pub lane_ptrs: u64,
+    /// Pointers processed by the scalar remainder loop.
+    pub tail_ptrs: u64,
+}
+
+impl SimdStats {
+    /// Fold another counter snapshot into this one (per-CPU merge).
+    pub fn merge(&mut self, other: &SimdStats) {
+        self.batches += other.batches;
+        self.lane_ptrs += other.lane_ptrs;
+        self.tail_ptrs += other.tail_ptrs;
+    }
+}
+
+/// Per-batch hoisted geometry: every layout field the lane loops need,
+/// the pow2 log2 immediates when the layout has them, and the
+/// reciprocals [`EngineCtx`] precomputed for the general path.
+#[derive(Clone, Copy)]
+struct Geometry {
+    bs: u64,
+    es: u64,
+    nt: u64,
+    log2: Option<(u32, u32, u32)>,
+    rbs: Recip,
+    rnt: Recip,
+}
+
+impl Geometry {
+    #[inline]
+    fn of(ctx: &EngineCtx) -> Self {
+        let layout = *ctx.layout();
+        let (rbs, rnt) = ctx.recips();
+        debug_assert_eq!(rbs.divisor(), layout.blocksize);
+        debug_assert_eq!(rnt.divisor(), layout.numthreads as u64);
+        Self {
+            bs: layout.blocksize,
+            es: layout.elemsize,
+            nt: layout.numthreads as u64,
+            log2: ctx.log2s(),
+            rbs,
+            rnt,
+        }
+    }
+}
+
+/// One unrolled chunk of Algorithm 1, general form: both div/mod pairs
+/// strength-reduced to the precomputed reciprocals.  Each statement is
+/// a `SIMD_LANES`-wide array expression so LLVM can keep the whole
+/// chunk in vector registers.
+#[inline(always)]
+fn lanes_general(
+    g: &Geometry,
+    phase: &[u64; SIMD_LANES],
+    thread: &[u64; SIMD_LANES],
+    va: &[u64; SIMD_LANES],
+    inc: &[u64; SIMD_LANES],
+) -> [SharedPtr; SIMD_LANES] {
+    let mut phinc = [0u64; SIMD_LANES];
+    let mut thinc = [0u64; SIMD_LANES];
+    let mut nphase = [0u64; SIMD_LANES];
+    let mut tsum = [0u64; SIMD_LANES];
+    let mut blockinc = [0u64; SIMD_LANES];
+    let mut nthread = [0u64; SIMD_LANES];
+    let mut nva = [0u64; SIMD_LANES];
+    for l in 0..SIMD_LANES {
+        phinc[l] = phase[l] + inc[l];
+    }
+    for l in 0..SIMD_LANES {
+        thinc[l] = g.rbs.div(phinc[l]);
+    }
+    for l in 0..SIMD_LANES {
+        // exact quotient above, so this multiply-subtract IS the mod
+        nphase[l] = phinc[l] - thinc[l] * g.bs;
+    }
+    for l in 0..SIMD_LANES {
+        tsum[l] = thread[l] + thinc[l];
+    }
+    for l in 0..SIMD_LANES {
+        blockinc[l] = g.rnt.div(tsum[l]);
+    }
+    for l in 0..SIMD_LANES {
+        nthread[l] = tsum[l] - blockinc[l] * g.nt;
+    }
+    for l in 0..SIMD_LANES {
+        let eaddrinc =
+            (nphase[l] as i64 - phase[l] as i64) + (blockinc[l] * g.bs) as i64;
+        nva[l] = (va[l] as i64 + eaddrinc * g.es as i64) as u64;
+    }
+    std::array::from_fn(|l| SharedPtr {
+        thread: nthread[l] as u32,
+        phase: nphase[l],
+        va: nva[l],
+    })
+}
+
+/// One unrolled chunk of Algorithm 1, pow2 form: the hardware
+/// pipeline's shift/mask datapath replicated across lanes, immediates
+/// hoisted from the ctx cache.
+#[inline(always)]
+fn lanes_pow2(
+    l2bs: u32,
+    l2es: u32,
+    l2nt: u32,
+    phase: &[u64; SIMD_LANES],
+    thread: &[u64; SIMD_LANES],
+    va: &[u64; SIMD_LANES],
+    inc: &[u64; SIMD_LANES],
+) -> [SharedPtr; SIMD_LANES] {
+    let bs_mask = (1u64 << l2bs) - 1;
+    let nt_mask = (1u64 << l2nt) - 1;
+    let mut phinc = [0u64; SIMD_LANES];
+    let mut thinc = [0u64; SIMD_LANES];
+    let mut nphase = [0u64; SIMD_LANES];
+    let mut tsum = [0u64; SIMD_LANES];
+    let mut blockinc = [0u64; SIMD_LANES];
+    let mut nthread = [0u64; SIMD_LANES];
+    let mut nva = [0u64; SIMD_LANES];
+    for l in 0..SIMD_LANES {
+        phinc[l] = phase[l] + inc[l];
+    }
+    for l in 0..SIMD_LANES {
+        thinc[l] = phinc[l] >> l2bs;
+    }
+    for l in 0..SIMD_LANES {
+        nphase[l] = phinc[l] & bs_mask;
+    }
+    for l in 0..SIMD_LANES {
+        tsum[l] = thread[l] + thinc[l];
+    }
+    for l in 0..SIMD_LANES {
+        blockinc[l] = tsum[l] >> l2nt;
+    }
+    for l in 0..SIMD_LANES {
+        nthread[l] = tsum[l] & nt_mask;
+    }
+    for l in 0..SIMD_LANES {
+        let eaddrinc =
+            (nphase[l] as i64 - phase[l] as i64) + ((blockinc[l] << l2bs) as i64);
+        nva[l] = (va[l] as i64 + (eaddrinc << l2es)) as u64;
+    }
+    std::array::from_fn(|l| SharedPtr {
+        thread: nthread[l] as u32,
+        phase: nphase[l],
+        va: nva[l],
+    })
+}
+
+/// Load one chunk into SoA lane arrays and run the geometry-matched
+/// lane kernel.
+#[inline(always)]
+fn inc_chunk(
+    g: &Geometry,
+    ptrs: &[SharedPtr],
+    incs: &[u64],
+) -> [SharedPtr; SIMD_LANES] {
+    debug_assert!(ptrs.len() == SIMD_LANES && incs.len() == SIMD_LANES);
+    let mut phase = [0u64; SIMD_LANES];
+    let mut thread = [0u64; SIMD_LANES];
+    let mut va = [0u64; SIMD_LANES];
+    let mut inc = [0u64; SIMD_LANES];
+    for l in 0..SIMD_LANES {
+        phase[l] = ptrs[l].phase;
+        thread[l] = ptrs[l].thread as u64;
+        va[l] = ptrs[l].va;
+        inc[l] = incs[l];
+    }
+    match g.log2 {
+        Some((l2bs, l2es, l2nt)) => {
+            lanes_pow2(l2bs, l2es, l2nt, &phase, &thread, &va, &inc)
+        }
+        None => lanes_general(g, &phase, &thread, &va, &inc),
+    }
+}
+
+/// The vectorized software backend.  Supports every layout; bit-
+/// identical to [`SoftwareEngine`] on all of them (differentially
+/// enforced by the conformance suite).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SimdEngine;
+
+impl SimdEngine {
+    /// Measure this host's vectorized per-pointer translate cost in
+    /// nanoseconds (`simd_ns_per_ptr` for the
+    /// [`CostModel`](super::CostModel)).  Uses a non-pow2 CG-style
+    /// layout so the measurement covers the reciprocal path — the
+    /// expensive one; pow2 lanes only run faster.
+    pub fn calibrate() -> f64 {
+        const N: usize = 4096;
+        const ROUNDS: u32 = 8;
+        let layout = ArrayLayout::new(3, 112, 5);
+        let table = BaseTable::regular(5, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0)
+            .expect("calibration ctx is statically valid");
+        let mut batch = PtrBatch::with_capacity(N);
+        let mut x = 0x9E37_79B9_7F4A_7C15u64;
+        for _ in 0..N {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            batch.push(
+                SharedPtr::for_index(&layout, 0, x >> 48),
+                (x >> 32) & 0xFFF,
+            );
+        }
+        let mut out = BatchOut::new();
+        SimdEngine.translate(&ctx, &batch, &mut out).expect("calibration run");
+        let t0 = Instant::now();
+        for _ in 0..ROUNDS {
+            SimdEngine.translate(&ctx, &batch, &mut out).expect("calibration run");
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / (ROUNDS as usize * N) as f64;
+        ns.max(0.01)
+    }
+}
+
+impl AddressEngine for SimdEngine {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn supports(&self, _layout: &ArrayLayout) -> bool {
+        true
+    }
+
+    fn translate(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        batch.check()?;
+        out.clear();
+        let n = batch.len();
+        out.reserve(n);
+        let g = Geometry::of(ctx);
+        let layout = *ctx.layout();
+        let table = ctx.table();
+        let mythread = ctx.mythread();
+        let topo = *ctx.topo();
+        let lanes = n - n % SIMD_LANES;
+        let mut i = 0;
+        while i < lanes {
+            let q = inc_chunk(
+                &g,
+                &batch.ptrs[i..i + SIMD_LANES],
+                &batch.incs[i..i + SIMD_LANES],
+            );
+            // epilogue per lane: LUT gather + locality classification
+            // (inherently scalar — a table lookup per distinct thread)
+            for p in q {
+                out.push(
+                    p,
+                    p.translate(table),
+                    locality(p.thread, mythread, &topo),
+                );
+            }
+            i += SIMD_LANES;
+        }
+        for k in lanes..n {
+            // scalar tail: the reference path itself, so the remainder
+            // cannot drift from SoftwareEngine
+            let (p, sysva, loc) = SoftwareEngine::map_one(
+                &layout,
+                table,
+                mythread,
+                &topo,
+                &batch.ptrs[k],
+                batch.incs[k],
+            );
+            out.push(p, sysva, loc);
+        }
+        Ok(())
+    }
+
+    fn increment(
+        &self,
+        ctx: &EngineCtx,
+        batch: &PtrBatch,
+        out: &mut Vec<SharedPtr>,
+    ) -> Result<(), EngineError> {
+        batch.check()?;
+        out.clear();
+        let n = batch.len();
+        out.reserve(n);
+        let g = Geometry::of(ctx);
+        let layout = *ctx.layout();
+        let lanes = n - n % SIMD_LANES;
+        let mut i = 0;
+        while i < lanes {
+            let q = inc_chunk(
+                &g,
+                &batch.ptrs[i..i + SIMD_LANES],
+                &batch.incs[i..i + SIMD_LANES],
+            );
+            out.extend_from_slice(&q);
+            i += SIMD_LANES;
+        }
+        for k in lanes..n {
+            out.push(crate::sptr::increment_general(
+                &batch.ptrs[k],
+                batch.incs[k],
+                &layout,
+            ));
+        }
+        Ok(())
+    }
+
+    /// Walks already run O(1) per step through the stepper cursor;
+    /// there is nothing lane-parallel to exploit, so this tier serves
+    /// them exactly like the scalar backends.
+    fn walk(
+        &self,
+        ctx: &EngineCtx,
+        start: SharedPtr,
+        inc: u64,
+        steps: usize,
+        out: &mut BatchOut,
+    ) -> Result<(), EngineError> {
+        super::cursor_walk(ctx, start, inc, steps, out)
+    }
+
+    fn translate_one(
+        &self,
+        ctx: &EngineCtx,
+        ptr: SharedPtr,
+        inc: u64,
+    ) -> Result<(SharedPtr, u64, crate::sptr::Locality), EngineError> {
+        // single pointers take the reference scalar path directly
+        Ok(SoftwareEngine::map_one(
+            ctx.layout(),
+            ctx.table(),
+            ctx.mythread(),
+            ctx.topo(),
+            &ptr,
+            inc,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256;
+    use crate::util::testkit::check;
+
+    fn random_case(
+        rng: &mut Xoshiro256,
+        pow2: bool,
+    ) -> (ArrayLayout, BaseTable, u32, PtrBatch) {
+        let layout = if pow2 {
+            ArrayLayout::new(
+                1 << rng.below(9),
+                1 << rng.below(6),
+                1 << rng.below(6) as u32,
+            )
+        } else {
+            let elemsize = [1, 2, 4, 8, 24, 112, 56016][rng.below(7) as usize];
+            ArrayLayout::new(
+                rng.below(64) + 1,
+                elemsize,
+                rng.below(63) as u32 + 1,
+            )
+        };
+        let table = BaseTable::regular(layout.numthreads, 1 << 32, 1 << 32);
+        let mythread = rng.below(layout.numthreads as u64) as u32;
+        // sizes straddle the lane width so tails of 0..=3 all occur
+        let n = 1 + rng.below(257) as usize;
+        let mut batch = PtrBatch::with_capacity(n);
+        for _ in 0..n {
+            batch.push(
+                SharedPtr::for_index(&layout, 0, rng.below(1 << 16)),
+                rng.below(1 << 13),
+            );
+        }
+        (layout, table, mythread, batch)
+    }
+
+    #[test]
+    fn simd_matches_software_on_random_layouts() {
+        check("simd == software (translate/increment)", 96, |rng| {
+            let pow2 = rng.below(2) == 0;
+            let (layout, table, mythread, batch) = random_case(rng, pow2);
+            let ctx = EngineCtx::new(layout, &table, mythread)
+                .unwrap()
+                .with_topology(Topology {
+                    log2_threads_per_mc: 1,
+                    log2_threads_per_node: 3,
+                });
+            let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
+            SimdEngine.translate(&ctx, &batch, &mut a).unwrap();
+            SoftwareEngine.translate(&ctx, &batch, &mut b).unwrap();
+            assert_eq!(a, b, "translate layout={layout:?} n={}", batch.len());
+            let (mut pa, mut pb) = (Vec::new(), Vec::new());
+            SimdEngine.increment(&ctx, &batch, &mut pa).unwrap();
+            SoftwareEngine.increment(&ctx, &batch, &mut pb).unwrap();
+            assert_eq!(pa, pb, "increment layout={layout:?}");
+        });
+    }
+
+    #[test]
+    fn scalar_tail_sizes_are_all_exercised() {
+        // n = 1..=9 covers every n % SIMD_LANES remainder twice
+        let layout = ArrayLayout::new(3, 112, 5);
+        let table = BaseTable::regular(5, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 2).unwrap();
+        for n in 1..=9usize {
+            let mut batch = PtrBatch::with_capacity(n);
+            for i in 0..n {
+                batch.push(
+                    SharedPtr::for_index(&layout, 0, i as u64 * 7),
+                    i as u64 + 1,
+                );
+            }
+            let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
+            SimdEngine.translate(&ctx, &batch, &mut a).unwrap();
+            SoftwareEngine.translate(&ctx, &batch, &mut b).unwrap();
+            assert_eq!(a, b, "n={n}");
+        }
+    }
+
+    #[test]
+    fn translate_one_matches_reference() {
+        let layout = ArrayLayout::new(5, 24, 6);
+        let table = BaseTable::regular(6, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 1).unwrap();
+        let p = SharedPtr::for_index(&layout, 0, 11);
+        assert_eq!(
+            SimdEngine.translate_one(&ctx, p, 9).unwrap(),
+            SoftwareEngine.translate_one(&ctx, p, 9).unwrap()
+        );
+    }
+
+    #[test]
+    fn calibrate_returns_a_positive_cost() {
+        assert!(SimdEngine::calibrate() > 0.0);
+    }
+}

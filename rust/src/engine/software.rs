@@ -3,22 +3,33 @@
 //! software and the baseline every other backend must agree with.
 
 use super::{AddressEngine, BatchOut, EngineCtx, EngineError, PtrBatch};
-use crate::sptr::{increment_general, locality, ArrayLayout, Locality, SharedPtr};
+use crate::sptr::{
+    increment_general, locality, ArrayLayout, BaseTable, Locality, SharedPtr,
+    Topology,
+};
 
 /// Software Algorithm 1 (divide/modulo).  Supports all layouts.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SoftwareEngine;
 
 impl SoftwareEngine {
+    /// One fused mapping — increment, LUT translate, locality classify —
+    /// over already-hoisted context fields.  The scalar path
+    /// (`translate_one`), the batched loop below, and the simd tier's
+    /// scalar tail all route through this one function so they cannot
+    /// drift.
     #[inline]
-    fn map_one(
-        ctx: &EngineCtx,
+    pub(super) fn map_one(
+        layout: &ArrayLayout,
+        table: &BaseTable,
+        mythread: u32,
+        topo: &Topology,
         ptr: &SharedPtr,
         inc: u64,
     ) -> (SharedPtr, u64, Locality) {
-        let q = increment_general(ptr, inc, &ctx.layout);
-        let sysva = q.translate(ctx.table);
-        let loc = locality(q.thread, ctx.mythread, &ctx.topo);
+        let q = increment_general(ptr, inc, layout);
+        let sysva = q.translate(table);
+        let loc = locality(q.thread, mythread, topo);
         (q, sysva, loc)
     }
 }
@@ -41,8 +52,16 @@ impl AddressEngine for SoftwareEngine {
         batch.check()?;
         out.clear();
         out.reserve(batch.len());
+        // Hoist every context field once per batch: `layout`/`topo` are
+        // copied to locals so their fields stay in registers instead of
+        // being re-loaded through `&EngineCtx` on every element.
+        let layout = ctx.layout;
+        let table = ctx.table;
+        let mythread = ctx.mythread;
+        let topo = ctx.topo;
         for (p, &inc) in batch.ptrs.iter().zip(&batch.incs) {
-            let (q, sysva, loc) = Self::map_one(ctx, p, inc);
+            let (q, sysva, loc) =
+                Self::map_one(&layout, table, mythread, &topo, p, inc);
             out.push(q, sysva, loc);
         }
         Ok(())
@@ -57,8 +76,9 @@ impl AddressEngine for SoftwareEngine {
         batch.check()?;
         out.clear();
         out.reserve(batch.len());
+        let layout = ctx.layout; // hoisted: one load per batch, not per element
         for (p, &inc) in batch.ptrs.iter().zip(&batch.incs) {
-            out.push(increment_general(p, inc, &ctx.layout));
+            out.push(increment_general(p, inc, &layout));
         }
         Ok(())
     }
@@ -83,7 +103,14 @@ impl AddressEngine for SoftwareEngine {
         ptr: SharedPtr,
         inc: u64,
     ) -> Result<(SharedPtr, u64, Locality), EngineError> {
-        Ok(Self::map_one(ctx, &ptr, inc))
+        Ok(Self::map_one(
+            &ctx.layout,
+            ctx.table,
+            ctx.mythread,
+            &ctx.topo,
+            &ptr,
+            inc,
+        ))
     }
 }
 

@@ -265,6 +265,20 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<(), String> {
             g.plans, g.bucketed_ptrs, g.fallback,
         );
     }
+    let s = out.result.simd;
+    if s.batches > 0 {
+        println!(
+            "  simd: {} batches, {} ptrs in full lanes / {} scalar tail",
+            s.batches, s.lane_ptrs, s.tail_ptrs,
+        );
+    }
+    let p = out.result.plan;
+    if p.plans + p.fallback > 0 {
+        println!(
+            "  plan: {} tile plans ({} tiles) over {} ptrs, {} eligible batches unplanned",
+            p.plans, p.tiles, p.planned_ptrs, p.fallback,
+        );
+    }
     if chaos.is_some() {
         println!(
             "{}",

@@ -88,6 +88,13 @@ pub struct MachineResult {
     /// executed, pointers routed through per-owner buckets, and
     /// gather-eligible batches served direct.
     pub gather: crate::engine::GatherStats,
+    /// Vectorized-tier telemetry summed over cores: batches served by
+    /// the lane kernels, lane vs scalar-tail pointers.
+    pub simd: crate::engine::SimdStats,
+    /// Cache-blocked batch-planner telemetry summed over cores: plans
+    /// built, tiles dispatched, planned pointers, single-tile
+    /// fallbacks.
+    pub plan: crate::engine::PlanStats,
 }
 
 impl MachineResult {
@@ -255,6 +262,44 @@ impl MachineResult {
             "gather.fallback",
             self.gather.fallback.to_string(),
             "gather-eligible batches served direct",
+        );
+        // vectorized-tier telemetry: always present, so scalar-only
+        // runs prove their zeros and batched runs show the lane mix
+        put(
+            "simd.batches",
+            self.simd.batches.to_string(),
+            "batches served by the vectorized tier",
+        );
+        put(
+            "simd.lane_ptrs",
+            self.simd.lane_ptrs.to_string(),
+            "pointers processed in full SIMD lanes",
+        );
+        put(
+            "simd.tail_ptrs",
+            self.simd.tail_ptrs.to_string(),
+            "pointers processed by the scalar tail",
+        );
+        // cache-blocked batch-planner telemetry
+        put(
+            "plan.plans",
+            self.plan.plans.to_string(),
+            "cache-blocked tile plans executed",
+        );
+        put(
+            "plan.tiles",
+            self.plan.tiles.to_string(),
+            "tiles dispatched across all plans",
+        );
+        put(
+            "plan.planned_ptrs",
+            self.plan.planned_ptrs.to_string(),
+            "pointers routed through planned tiles",
+        );
+        put(
+            "plan.fallback",
+            self.plan.fallback.to_string(),
+            "plan-eligible batches served unplanned",
         );
         put("cache.l1d_misses", self.l1d_misses.to_string(), "sum over cores");
         put("cache.l2_misses", self.l2_misses.to_string(), "shared L2");
@@ -457,10 +502,14 @@ impl Machine {
         let mut engine_mix = EngineMix::default();
         let mut health = crate::engine::HealthStats::default();
         let mut gather = crate::engine::GatherStats::default();
+        let mut simd = crate::engine::SimdStats::default();
+        let mut plan = crate::engine::PlanStats::default();
         for c in &self.cpus {
             engine_mix.merge(&c.engine_mix());
             health.merge(&c.health());
             gather.merge(&c.gather());
+            simd.merge(&c.simd());
+            plan.merge(&c.plan());
         }
         MachineResult {
             cycles,
@@ -477,6 +526,8 @@ impl Machine {
                 .map(|tier| tier.engine.client_stats()),
             health,
             gather,
+            simd,
+            plan,
         }
     }
 }
@@ -601,6 +652,13 @@ mod tests {
             "sim.cycles",
             "sim.insts",
             "pgas.incs",
+            "simd.batches",
+            "simd.lane_ptrs",
+            "simd.tail_ptrs",
+            "plan.plans",
+            "plan.tiles",
+            "plan.planned_ptrs",
+            "plan.fallback",
             "cache.l1d_misses",
             "core0.ipc",
             "core3.cycles",

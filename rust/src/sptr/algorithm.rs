@@ -19,6 +19,81 @@ use super::{ArrayLayout, SharedPtr};
 /// its costs from the actual instruction streams the compiler emits.
 pub const SOFT_INC_OP_COUNT: u32 = 31;
 
+/// Granlund–Montgomery reciprocal: exact `n / d` (and `n % d`) for
+/// **every** `u64` numerator against a runtime-constant divisor, as a
+/// 64×64→128 multiply, an add and a shift — the strength reduction the
+/// vectorized general path applies to Algorithm 1's two divides
+/// (`blocksize`, `numthreads`), computed once per
+/// [`EngineCtx`](crate::engine::EngineCtx).
+///
+/// Construction picks `s = ⌈log2 d⌉` and the magic multiplier
+/// `m = ⌈2^(64+s) / d⌉`.  Because `2^(s-1) < d ≤ 2^s`, `m` always lies
+/// in `[2^64, 2^65)`, so only its low word `a = m − 2^64` is stored and
+/// the quotient falls out as
+///
+/// ```text
+/// q = (n + mulhi(a, n)) >> s
+/// ```
+///
+/// which is exact for all `n < 2^64` by the Granlund–Montgomery bound
+/// (`m·d − 2^(64+s) < d ≤ 2^s`).  Power-of-two divisors degenerate to
+/// `a = 0` — a pure shift — and `d = 1` to the identity.  The
+/// exhaustive small-geometry property test below pins the constants
+/// against native `/` and `%` for every layout divisor the NPB kernels
+/// can produce (threads ∈ 1..=64, blocksize ∈ 1..=32) plus the u64
+/// boundary numerators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Recip {
+    /// The divisor.
+    d: u64,
+    /// Low word of the magic multiplier (`m − 2^64`).
+    a: u64,
+    /// Post-multiply shift: `⌈log2 d⌉`.
+    s: u32,
+}
+
+impl Recip {
+    /// Precompute the reciprocal of `d`.  Panics on `d == 0` — a layout
+    /// with a zero divisor is unconstructible ([`ArrayLayout::new`]
+    /// asserts both fields positive).
+    pub fn new(d: u64) -> Self {
+        assert!(d > 0, "no reciprocal for divisor 0");
+        if d == 1 {
+            return Self { d, a: 0, s: 0 };
+        }
+        let s = 64 - (d - 1).leading_zeros(); // ceil(log2 d), in 1..=64
+        // e = 2^s - d (fits u64: d > 2^(s-1) so e < 2^(s-1) <= 2^63);
+        // the u128 shift also handles s == 64 without overflow.
+        let e = ((1u128 << s) - d as u128) as u64;
+        // a = m - 2^64 = ceil(e * 2^64 / d)
+        let a = (((e as u128) << 64) + d as u128 - 1) / d as u128;
+        debug_assert!(a < 1u128 << 64, "magic multiplier exceeds 2^65");
+        Self { d, a: a as u64, s }
+    }
+
+    /// The divisor this reciprocal encodes.
+    #[inline]
+    pub fn divisor(&self) -> u64 {
+        self.d
+    }
+
+    /// `n / self.divisor()`, exact for every `n`.
+    #[inline]
+    pub fn div(&self, n: u64) -> u64 {
+        let hi = ((self.a as u128 * n as u128) >> 64) as u64;
+        ((n as u128 + hi as u128) >> self.s) as u64
+    }
+
+    /// `(n / d, n % d)` in one go (the remainder is a fused
+    /// multiply-subtract off the exact quotient).
+    #[inline]
+    pub fn div_rem(&self, n: u64) -> (u64, u64) {
+        let q = self.div(n);
+        debug_assert_eq!(q, n / self.d);
+        (q, n - q * self.d)
+    }
+}
+
 /// Algorithm 1 verbatim (general path).
 ///
 /// ```text
@@ -36,6 +111,10 @@ pub fn increment_general(
     increment: u64,
     layout: &ArrayLayout,
 ) -> SharedPtr {
+    debug_assert!(
+        layout.blocksize > 0 && layout.numthreads > 0,
+        "degenerate layout: {layout:?}"
+    );
     let phinc = ptr.phase + increment;
     let thinc = phinc / layout.blocksize;
     let nphase = phinc % layout.blocksize;
@@ -62,6 +141,10 @@ pub fn increment_pow2(
     l2es: u32,
     l2nt: u32,
 ) -> SharedPtr {
+    debug_assert!(
+        l2bs < 64 && l2es < 64 && l2nt < 32,
+        "log2 immediates out of datapath range: bs=2^{l2bs} es=2^{l2es} nt=2^{l2nt}"
+    );
     // -- pipeline stage 1 --
     let phinc = ptr.phase + increment;
     let thinc = phinc >> l2bs;
@@ -152,6 +235,89 @@ mod tests {
         let q = increment_general(&p, 13, &layout);
         assert_eq!(q.thread, 0);
         assert_eq!(q.va, 13 * 8);
+    }
+
+    // ---- reciprocal constants pinned against native div/mod ----
+
+    /// Every numerator class that can stress the `q = (n + mulhi(a,n)) >> s`
+    /// rounding: small values, values straddling each multiple of `d`, and
+    /// the u64 boundary where the `n + mulhi` sum approaches `2^65`.
+    fn boundary_numerators(d: u64) -> Vec<u64> {
+        let mut ns = vec![0, 1, 2, d - 1, d, d + 1, u64::MAX - 1, u64::MAX];
+        for k in [2u64, 3, 7, 1 << 16, 1 << 32, (1 << 63) / d.max(1)] {
+            let m = d.saturating_mul(k);
+            ns.extend([m.saturating_sub(1), m, m.saturating_add(1)]);
+        }
+        ns
+    }
+
+    #[test]
+    fn reciprocal_is_exact_for_every_small_geometry_divisor() {
+        // Exhaustive over the satellite's full geometry envelope:
+        // every thread count the simulator can configure (1..=64) and
+        // every blocksize the NPB layout pool draws (1..=32), each
+        // divisor checked on dense small numerators plus the boundary
+        // classes above.
+        for d in 1u64..=64 {
+            let r = Recip::new(d);
+            assert_eq!(r.divisor(), d);
+            for n in 0..4096u64 {
+                assert_eq!(r.div(n), n / d, "d={d} n={n}");
+                assert_eq!(r.div_rem(n), (n / d, n % d), "d={d} n={n}");
+            }
+            for n in boundary_numerators(d) {
+                assert_eq!(r.div(n), n / d, "d={d} n={n} (boundary)");
+                assert_eq!(r.div_rem(n), (n / d, n % d), "d={d} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn reciprocal_increment_matches_native_on_every_small_layout() {
+        // The full cross product threads 1..=64 x blocksize 1..=32:
+        // recompute Algorithm 1's two div/mod pairs through Recip and
+        // demand bit-identity with increment_general on awkward
+        // phases/threads near the wrap boundaries.
+        for threads in 1u32..=64 {
+            let rnt = Recip::new(threads as u64);
+            for blocksize in 1u64..=32 {
+                let rbs = Recip::new(blocksize);
+                let layout = ArrayLayout::new(blocksize, 24, threads);
+                for idx in [0, 1, blocksize - 1, blocksize, 7 * blocksize + 3] {
+                    let p = SharedPtr::for_index(&layout, 0, idx);
+                    for inc in [0, 1, blocksize, blocksize * threads as u64 + 1, 977]
+                    {
+                        let want = increment_general(&p, inc, &layout);
+                        let phinc = p.phase + inc;
+                        let (thinc, nphase) = rbs.div_rem(phinc);
+                        let tsum = p.thread as u64 + thinc;
+                        let (blockinc, nthread) = rnt.div_rem(tsum);
+                        let eaddrinc = (nphase as i64 - p.phase as i64)
+                            + (blockinc * blocksize) as i64;
+                        let got = SharedPtr {
+                            thread: nthread as u32,
+                            phase: nphase,
+                            va: (p.va as i64 + eaddrinc * 24) as u64,
+                        };
+                        assert_eq!(got, want, "layout={layout:?} idx={idx} inc={inc}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reciprocal_pow2_divisors_degenerate_to_shifts() {
+        // Pow2 divisors must produce a zero multiplier (pure shift):
+        // that is what lets the vector path share one code shape for
+        // both layout families without a speed cliff on pow2.
+        for s in 0..=63u32 {
+            let d = 1u64 << s;
+            let r = Recip::new(d);
+            assert_eq!(r.div(u64::MAX), u64::MAX >> s, "d=2^{s}");
+            let n = d.saturating_mul(12345).saturating_add(17);
+            assert_eq!(r.div_rem(n), (n / d, n % d), "d=2^{s} n={n}");
+        }
     }
 
     #[test]

@@ -19,7 +19,7 @@ mod cursor;
 mod pack;
 mod wire;
 
-pub use algorithm::{increment_general, increment_pow2, SOFT_INC_OP_COUNT};
+pub use algorithm::{increment_general, increment_pow2, Recip, SOFT_INC_OP_COUNT};
 pub use base_table::BaseTable;
 pub use cursor::WalkCursor;
 pub use pack::{pack, unpack, PackedPtr, PHASE_BITS, THREAD_BITS, VA_BITS};

@@ -81,6 +81,16 @@ fn npb_soak_under_fault_storms_is_bit_identical() {
             let spec = FaultSpec::transient(seed);
             let out = run_point(kernel, Some(&spec));
             assert_results_identical(&base, &out, &format!("{kernel}/{seed:#x}"));
+            // the software hot-path tiers are telemetry too: storms
+            // must not shift which batches the lanes/planner served
+            assert_eq!(
+                out.result.simd, base.result.simd,
+                "{kernel}/{seed:#x}: simd telemetry moved under chaos"
+            );
+            assert_eq!(
+                out.result.plan, base.result.plan,
+                "{kernel}/{seed:#x}: plan telemetry moved under chaos"
+            );
             total_injected += out.result.health.injected_faults;
             total_fallbacks += out.result.health.fallback_runs;
             // the stats dump carries the degradation telemetry
@@ -91,6 +101,8 @@ fn npb_soak_under_fault_storms_is_bit_identical() {
                 "degrade.fallback_runs",
                 "degrade.deadline_misses",
                 "degrade.injected_faults",
+                "simd.batches",
+                "plan.plans",
             ] {
                 assert!(txt.contains(key), "{kernel}: stats_txt missing {key}");
             }
@@ -270,6 +282,68 @@ fn all_tiers_quarantined_selector_still_serves() {
         let h = sel.health_stats();
         assert_eq!(h.quarantined(), 0);
         assert_eq!(h.dispatches, 0);
+    }
+}
+
+/// Property: the vectorized tier honors the same degradation contract
+/// as every other backend.  With every dispatch faulting, a batch the
+/// argmin routes to the SIMD lanes is re-served through the fallback
+/// ladder bit-identically, the simd breaker trips open (and the argmin
+/// stops offering the tier), and the lane counters never tally a
+/// failed dispatch.
+#[test]
+fn simd_tier_faults_degrade_through_the_ladder_bit_identically() {
+    for seed in SOAK_SEEDS {
+        let plan = Arc::new(FaultPlan::new(
+            FaultSpec::parse(&format!("{seed:#x}:error=1.0")).unwrap(),
+        ));
+        let sel = EngineSelector::new()
+            .with_shard_workers(1)
+            // pin the funnel on the simd leg: no gather bucketing, no
+            // tile planning between the argmin and the dispatch
+            .with_gather_threshold(usize::MAX)
+            .with_plan_threshold(usize::MAX)
+            .with_chaos(Arc::clone(&plan));
+        let layout = ArrayLayout::new(3, 112, 5); // CG's non-pow2 rows
+        assert_eq!(sel.choice(&layout, 64), EngineChoice::Simd);
+        let table = BaseTable::regular(5, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let mut batch = PtrBatch::new();
+        for i in 0..64u64 {
+            batch.push(SharedPtr::for_index(&layout, 0, i * 3), i % 11);
+        }
+        let mut want = Vec::new();
+        AutoEngine.increment(&ctx, &batch, &mut want).unwrap();
+        for round in 0..16u64 {
+            let mut got = Vec::new();
+            let served = sel
+                .increment_choosing(&ctx, &batch, &mut got)
+                .unwrap_or_else(|e| {
+                    panic!("{seed:#x} round {round}: user-visible error: {e}")
+                });
+            assert_eq!(got, want, "{seed:#x} round {round}: wrong results");
+            assert_ne!(
+                served,
+                EngineChoice::Simd,
+                "{seed:#x} round {round}: a chaos'd simd dispatch was reported served"
+            );
+        }
+        let h = sel.health_stats();
+        let simd = &h.tiers[EngineChoice::Simd.index()];
+        assert_eq!(
+            simd.state,
+            BreakerState::Open,
+            "{seed:#x}: simd breaker never tripped"
+        );
+        assert!(h.trips() >= 1, "{seed:#x}: no breaker ever tripped");
+        assert!(h.fallback_runs > 0, "{seed:#x}: no fallback re-serves");
+        assert_eq!(
+            sel.simd_stats().batches,
+            0,
+            "{seed:#x}: failed dispatches must not tally lanes"
+        );
+        // quarantined = the argmin stops offering the tier at all
+        assert_eq!(sel.choice(&layout, 64), EngineChoice::Software);
     }
 }
 

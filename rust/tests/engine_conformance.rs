@@ -15,7 +15,8 @@
 
 use pgas_hw::engine::{
     AddressEngine, BatchOut, EngineCtx, EngineChoice, EngineSelector,
-    Leon3Engine, Pow2Engine, PtrBatch, ShardedEngine, SoftwareEngine,
+    Leon3Engine, Pow2Engine, PtrBatch, ShardedEngine, SimdEngine,
+    SoftwareEngine, TilePlan,
 };
 use pgas_hw::sptr::{
     increment_general, pack, unpack, ArrayLayout, BaseTable, SharedPtr,
@@ -109,14 +110,17 @@ fn selector_output_equals_direct_backend_output() {
 }
 
 #[test]
-fn nonpow2_layouts_fall_back_to_software_only() {
+fn nonpow2_layouts_fall_back_to_software_tiers() {
     // A single-worker selector has no shard pool: the cost model
-    // degenerates to the paper's fixed pow2-else-software policy.
+    // degenerates to pow2-else-software, with the vectorized lanes
+    // undercutting scalar software once the batch fills them.
     let sel = EngineSelector::new().with_shard_workers(1);
     let layout = ArrayLayout::new(3, 56016, 5); // CG's w/w_tmp shape
-    assert_eq!(sel.choice(&layout, 1 << 20), EngineChoice::Software);
-    // with workers available, the same huge batch goes to the pool
-    let pooled = EngineSelector::new().with_shard_workers(4);
+    assert_eq!(sel.choice(&layout, 4), EngineChoice::Software);
+    assert_eq!(sel.choice(&layout, 1 << 20), EngineChoice::Simd);
+    // with enough workers the huge batch amortizes the pool fee past
+    // even the vector lanes (12ns/8 + 1.5ns copy < 4ns simd)
+    let pooled = EngineSelector::new().with_shard_workers(8);
     assert_eq!(pooled.choice(&layout, 1 << 20), EngineChoice::Sharded);
     let table = BaseTable::regular(5, 1 << 32, 1 << 32);
     let ctx = EngineCtx::new(layout, &table, 0).unwrap();
@@ -223,6 +227,141 @@ fn sharded_pow2_inner_matches_pow2_on_pow2_layouts() {
         Pow2Engine.translate(&ctx, &batch, &mut b).unwrap();
         assert_eq!(a, b, "layout={layout:?}");
     });
+}
+
+// ---- the vectorized software tier joins the same differential suite ----
+
+/// The seven NPB-shaped layouts the kernels actually allocate: the
+/// pow2 fast-path geometries (EP/IS/MG/FT), CG's two awkward element
+/// sizes (112-byte struct rows, the 56016-byte w/w_tmp struct), and
+/// the irregular MD/SPMV record shapes — both SIMD code paths (shift/
+/// mask lanes and reciprocal lanes) and every scalar-tail length get
+/// exercised across this pool.
+fn npb_layouts() -> [ArrayLayout; 7] {
+    [
+        ArrayLayout::new(1024, 8, 16), // EP: pow2 accumulator chunks
+        ArrayLayout::new(512, 4, 32),  // IS: pow2 key buckets
+        ArrayLayout::new(3, 112, 5),   // CG: non-pow2 struct rows
+        ArrayLayout::new(1, 56016, 8), // CG: the w/w_tmp struct
+        ArrayLayout::new(8, 8, 8),     // MG/FT: pow2 grids
+        ArrayLayout::new(7, 24, 6),    // MD: neighbor-list records
+        ArrayLayout::new(13, 12, 10),  // SPMV: CSR row segments
+    ]
+}
+
+/// A deterministic batch of random in-range pointers over `layout`.
+fn batch_for(layout: &ArrayLayout, n: usize, seed: u64) -> PtrBatch {
+    let mut rng = Xoshiro256::new(seed);
+    let mut batch = PtrBatch::with_capacity(n);
+    for _ in 0..n {
+        batch.push(
+            SharedPtr::for_index(layout, 0, rng.below(1 << 16)),
+            rng.below(1 << 13),
+        );
+    }
+    batch
+}
+
+#[test]
+fn simd_matches_software_over_all_npb_layouts() {
+    // Batch lengths straddle the lane width: full-lane multiples,
+    // every tail remainder, and a sub-lane batch served tail-only.
+    for layout in npb_layouts() {
+        let table = BaseTable::regular(layout.numthreads, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 1)
+            .unwrap()
+            .with_topology(Topology {
+                log2_threads_per_mc: 1,
+                log2_threads_per_node: 2,
+            });
+        for n in [1, 3, 4, 5, 63, 64, 67, 1021] {
+            let batch = batch_for(&layout, n, 0x51D0 + n as u64);
+            let (mut v, mut s) = (BatchOut::new(), BatchOut::new());
+            SimdEngine.translate(&ctx, &batch, &mut v).unwrap();
+            SoftwareEngine.translate(&ctx, &batch, &mut s).unwrap();
+            assert_eq!(v, s, "translate layout={layout:?} n={n}");
+            let (mut pv, mut ps) = (Vec::new(), Vec::new());
+            SimdEngine.increment(&ctx, &batch, &mut pv).unwrap();
+            SoftwareEngine.increment(&ctx, &batch, &mut ps).unwrap();
+            assert_eq!(pv, ps, "increment layout={layout:?} n={n}");
+        }
+        // walks ride the shared O(1) stepper: same outputs by the
+        // same code, but the contract is worth pinning
+        let start = SharedPtr::for_index(&layout, 0, 11);
+        let (mut wv, mut ws) = (BatchOut::new(), BatchOut::new());
+        SimdEngine.walk(&ctx, start, 13, 200, &mut wv).unwrap();
+        SoftwareEngine.walk(&ctx, start, 13, 200, &mut ws).unwrap();
+        assert_eq!(wv, ws, "walk layout={layout:?}");
+    }
+}
+
+// ---- the cache-blocked batch planner joins the differential suite ----
+
+#[test]
+fn planned_execution_is_invariant_across_tile_sizes() {
+    // Degenerate single-pointer tiles, sub-lane tiles, L1-ish tiles
+    // and one-tile-covers-everything must all reproduce the direct
+    // translate/increment bit-for-bit — the planner may only reorder
+    // *work*, never *results*.
+    for layout in npb_layouts() {
+        let table = BaseTable::regular(layout.numthreads, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let batch = batch_for(&layout, 777, 0x71E5);
+        let mut want = BatchOut::new();
+        SoftwareEngine.translate(&ctx, &batch, &mut want).unwrap();
+        let mut want_inc = Vec::new();
+        SoftwareEngine.increment(&ctx, &batch, &mut want_inc).unwrap();
+        for tile in [1, 4, 64, 4096] {
+            let plan = TilePlan::from_batch(&ctx, &batch, tile).unwrap();
+            let mut got = BatchOut::new();
+            SoftwareEngine
+                .translate_planned(&ctx, &batch, &plan, &mut got)
+                .unwrap();
+            assert_eq!(got, want, "translate layout={layout:?} tile={tile}");
+            let mut got_inc = Vec::new();
+            SoftwareEngine
+                .increment_planned(&ctx, &batch, &plan, &mut got_inc)
+                .unwrap();
+            assert_eq!(got_inc, want_inc, "increment layout={layout:?} tile={tile}");
+            // the vectorized tier executes the same plan identically
+            let mut simd_got = BatchOut::new();
+            SimdEngine
+                .translate_planned(&ctx, &batch, &plan, &mut simd_got)
+                .unwrap();
+            assert_eq!(simd_got, want, "simd planned layout={layout:?} tile={tile}");
+        }
+    }
+}
+
+#[test]
+fn selector_planned_path_matches_unplanned_selector() {
+    // Same batches through a plan-eager selector (tiny threshold +
+    // tile) and a plan-never selector: outputs identical, and the
+    // eager one's counters prove the tiled path actually ran.
+    let planned = EngineSelector::new()
+        .with_shard_workers(1)
+        .with_plan_threshold(64)
+        .with_plan_tile(32);
+    let unplanned = EngineSelector::new()
+        .with_shard_workers(1)
+        .with_plan_threshold(usize::MAX);
+    for layout in npb_layouts() {
+        let table = BaseTable::regular(layout.numthreads, 1 << 32, 1 << 32);
+        let ctx = EngineCtx::new(layout, &table, 0).unwrap();
+        let batch = batch_for(&layout, 500, 0xBEEF);
+        let (mut a, mut b) = (BatchOut::new(), BatchOut::new());
+        planned.translate(&ctx, &batch, &mut a).unwrap();
+        unplanned.translate(&ctx, &batch, &mut b).unwrap();
+        assert_eq!(a, b, "planned != unplanned on {layout:?}");
+        let (mut pa, mut pb) = (Vec::new(), Vec::new());
+        planned.increment(&ctx, &batch, &mut pa).unwrap();
+        unplanned.increment(&ctx, &batch, &mut pb).unwrap();
+        assert_eq!(pa, pb, "planned inc != unplanned inc on {layout:?}");
+    }
+    let stats = planned.plan_stats();
+    assert!(stats.plans > 0, "plan-eager selector never planned: {stats:?}");
+    assert!(stats.tiles >= 2 * stats.plans);
+    assert_eq!(unplanned.plan_stats().plans, 0);
 }
 
 // ---- the Leon3 coprocessor model joins the same differential suite ----
