@@ -1,0 +1,842 @@
+//! Abstract interpretation of the kernel IR: track every integer
+//! register as an [`Affine`] expression (or a shared pointer with an
+//! affine element index), walk the structured control flow, and record
+//! one [`AccessSite`] per `SptrLd`/`SptrSt` with its index, enclosing
+//! loop ranges, path constraints and barrier segment.
+//!
+//! Loops are analyzed with a *two-iteration induction probe*: the body
+//! is walked twice from symbolic state (sites suppressed) and a
+//! register qualifies as an induction variable only when both probe
+//! iterations advance it by the same constant — which, for the IR's
+//! affine update language, is sound (a delta that depends on any
+//! modified register changes between the probes and disqualifies
+//! itself).  Qualified registers are rebound to `entry + k·delta` over
+//! a fresh loop counter before the recording pass; everything else
+//! modified degrades to unknown (pointers keep their array, losing
+//! only the index).
+
+use crate::compiler::{IrModule, Op, Val};
+use crate::isa::{Cond, IntOp};
+use crate::upc::{ArrayId, UpcRuntime};
+
+use super::footprint::{Affine, Constraint, Relation};
+use super::phases::PhaseTracker;
+
+/// Abstract value of one integer register.
+#[derive(Clone, Debug, PartialEq)]
+enum AbsVal {
+    /// A tracked affine integer.
+    Int(Affine),
+    /// A pointer into `arr`; `idx` is the affine element index when it
+    /// is still tracked (`None`: somewhere in `arr`).
+    Ptr { arr: ArrayId, idx: Option<Affine> },
+    /// The 0/1 result of an integer compare of `diff` against zero —
+    /// kept symbolic so a later `If` on it recovers the relation.
+    Cmp { diff: Affine, kind: CmpKind },
+    /// Anything the analysis cannot model.
+    Unknown,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum CmpKind {
+    /// `diff == 0`
+    Eq,
+    /// `diff < 0` (signed)
+    Lt,
+}
+
+/// One static shared-memory access: everything the race and bounds
+/// checkers need to enumerate its per-thread element footprint.
+#[derive(Clone, Debug)]
+pub struct AccessSite {
+    /// Target array.
+    pub arr: ArrayId,
+    /// Target array's name (for diagnostics).
+    pub array: String,
+    /// Target array's element count.
+    pub nelems: u64,
+    /// Is this a store?
+    pub write: bool,
+    /// Affine element index (displacement folded in), when tracked.
+    pub index: Option<Affine>,
+    /// Enclosing loop counters as `(var, trip)`.
+    pub loops: Vec<(u32, u64)>,
+    /// Path constraints the access executes under.
+    pub constraints: Vec<Constraint>,
+    /// Executed under at least one branch the analysis could not
+    /// model — the enumerated footprint over-approximates, so the
+    /// checkers must not promote findings on this site to ERROR.
+    pub opaque: bool,
+    /// Barrier segment the access falls into.
+    pub seg: usize,
+    /// Human-readable provenance (`store q at 4.for.2`).
+    pub site: String,
+}
+
+/// Result of the dataflow pass over one kernel.
+#[derive(Debug)]
+pub struct AccessTrace {
+    /// Every shared access in the kernel, in walk order.
+    pub sites: Vec<AccessSite>,
+    /// Segment tracker with loop wrap-around merges applied; its
+    /// classes are the race checker's concurrency domains.
+    pub tracker: PhaseTracker,
+    /// Provenance of barriers reached under conditional control flow
+    /// (a UPC consistency smell: threads may disagree on the barrier
+    /// sequence).
+    pub divergent_barriers: Vec<String>,
+    /// Provenance of accesses through pointers the analysis lost
+    /// track of entirely (no array attribution possible).
+    pub untracked: Vec<String>,
+}
+
+/// Run the dataflow pass: walk `module` against `rt`'s array
+/// directory with `rt.numthreads` as the concrete `THREADS`.
+pub fn trace(module: &IrModule, rt: &UpcRuntime) -> AccessTrace {
+    let mut interp = Interp {
+        rt,
+        threads: i64::from(rt.numthreads),
+        regs: vec![AbsVal::Unknown; 32],
+        loops: Vec::new(),
+        constraints: Vec::new(),
+        opaque: 0,
+        branch_depth: 0,
+        recording: true,
+        next_var: 0,
+        tracker: PhaseTracker::new(),
+        sites: Vec::new(),
+        divergent: Vec::new(),
+        untracked: Vec::new(),
+    };
+    interp.walk(&module.ops, "");
+    AccessTrace {
+        sites: interp.sites,
+        tracker: interp.tracker,
+        divergent_barriers: interp.divergent,
+        untracked: interp.untracked,
+    }
+}
+
+/// How an `If` branch constrains the state.
+enum BranchGuard {
+    /// The branch adds this constraint.
+    C(Constraint),
+    /// The branch is always taken when reached — no information.
+    Trivial,
+    /// The condition register is unknown: walk the branch opaque.
+    Opaque,
+    /// The branch is statically unreachable.
+    Dead,
+}
+
+/// Loop-register classification from the induction probe.
+#[derive(Clone, Debug, PartialEq)]
+enum LoopCls {
+    /// Not modified by the body.
+    Keep,
+    /// Integer induction: advances by a constant per iteration.
+    IndInt(i64),
+    /// Pointer induction into `arr`: index advances by a constant.
+    IndPtr(ArrayId, i64),
+    /// Stays a pointer into `arr` but the index is not inductive.
+    StickyPtr(ArrayId),
+    /// Anything else modified.
+    Clobbered,
+}
+
+struct Interp<'a> {
+    rt: &'a UpcRuntime,
+    threads: i64,
+    regs: Vec<AbsVal>,
+    loops: Vec<(u32, u64)>,
+    constraints: Vec<Constraint>,
+    opaque: u32,
+    branch_depth: u32,
+    recording: bool,
+    next_var: u32,
+    tracker: PhaseTracker,
+    sites: Vec<AccessSite>,
+    divergent: Vec<String>,
+    untracked: Vec<String>,
+}
+
+impl<'a> Interp<'a> {
+    fn fresh_var(&mut self) -> u32 {
+        let v = self.next_var;
+        self.next_var += 1;
+        v
+    }
+
+    fn val_abs(&self, v: Val) -> AbsVal {
+        match v {
+            Val::I(c) => AbsVal::Int(Affine::konst(c)),
+            Val::R(r) => self.regs[r as usize].clone(),
+        }
+    }
+
+    fn val_affine(&self, v: Val) -> Option<Affine> {
+        match self.val_abs(v) {
+            AbsVal::Int(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    fn walk(&mut self, ops: &[Op], path: &str) {
+        for (k, op) in ops.iter().enumerate() {
+            let here = format!("{path}{k}");
+            self.step(op, &here);
+        }
+    }
+
+    fn step(&mut self, op: &Op, here: &str) {
+        match op {
+            Op::Bin { op, d, a, b } => {
+                let av = self.regs[*a as usize].clone();
+                let bv = self.val_abs(*b);
+                self.regs[*d as usize] = eval_bin(*op, &av, &bv);
+            }
+            Op::Mov { d, v } => {
+                self.regs[*d as usize] = self.val_abs(*v);
+            }
+            Op::FBin { .. } | Op::FConst { .. } | Op::CvtIF { .. } | Op::St { .. } => {}
+            Op::FCmpLt { d, .. } | Op::CvtFI { d, .. } => {
+                self.regs[*d as usize] = AbsVal::Unknown;
+            }
+            Op::MyThread { d } => {
+                self.regs[*d as usize] = AbsVal::Int(Affine::mythread());
+            }
+            Op::Threads { d } => {
+                self.regs[*d as usize] = AbsVal::Int(Affine::konst(self.threads));
+            }
+            Op::PrivBase { d } | Op::LocalAddr { d, .. } => {
+                self.regs[*d as usize] = AbsVal::Unknown;
+            }
+            Op::Ld { w, d, .. } => {
+                if !w.is_float() {
+                    self.regs[*d as usize] = AbsVal::Unknown;
+                }
+            }
+            Op::SptrInit { d, arr, idx } => {
+                let idx = self.val_affine(*idx);
+                self.regs[*d as usize] = AbsVal::Ptr { arr: *arr, idx };
+            }
+            Op::SptrInc { p, arr, inc } => {
+                let inc_a = self.val_affine(*inc);
+                let new_idx = match (&self.regs[*p as usize], inc_a) {
+                    (AbsVal::Ptr { idx: Some(x), .. }, Some(i)) => Some(x.add(&i)),
+                    _ => None,
+                };
+                self.regs[*p as usize] = AbsVal::Ptr { arr: *arr, idx: new_idx };
+            }
+            Op::SptrAt { d, base, arr, idx } => {
+                let base_idx = match &self.regs[*base as usize] {
+                    AbsVal::Ptr { arr: ba, idx: Some(x) } if ba == arr => Some(x.clone()),
+                    _ => None,
+                };
+                let idx_a = self.val_affine(*idx);
+                let combined = match (base_idx, idx_a) {
+                    (Some(b), Some(i)) => Some(b.add(&i)),
+                    _ => None,
+                };
+                self.regs[*d as usize] = AbsVal::Ptr { arr: *arr, idx: combined };
+            }
+            Op::SptrLd { w, d, p, disp } => {
+                self.record(*p, *disp, false, here);
+                if !w.is_float() {
+                    self.regs[*d as usize] = AbsVal::Unknown;
+                }
+            }
+            Op::SptrSt { p, disp, .. } => {
+                self.record(*p, *disp, true, here);
+            }
+            Op::Barrier => {
+                if self.recording {
+                    if self.branch_depth > 0 {
+                        self.divergent.push(format!("barrier at {here}"));
+                    }
+                    self.tracker.barrier();
+                }
+            }
+            Op::If { cond, r, then, els } => {
+                self.do_if(*cond, *r, then, els, here);
+            }
+            Op::For { i, from, to, step, body } => {
+                self.do_for(*i, *from, *to, *step, body, here);
+            }
+            Op::DoWhile { body, .. } => {
+                self.loop_unknown_trip(None, body, &format!("{here}.do."));
+            }
+        }
+    }
+
+    // ---------------- branches ----------------
+
+    fn do_if(&mut self, cond: Cond, r: u8, then: &[Op], els: &[Op], here: &str) {
+        let rv = self.regs[r as usize].clone();
+        let g_then = guard_of(cond, &rv, true);
+        let g_else = guard_of(cond, &rv, false);
+        let entry = self.regs.clone();
+        let then_regs =
+            self.walk_branch(&g_then, then, &format!("{here}.then."));
+        self.regs = entry.clone();
+        let else_regs =
+            self.walk_branch(&g_else, els, &format!("{here}.else."));
+        self.regs = match (then_regs, else_regs) {
+            (Some(t), Some(e)) => merge_regs(&t, &e),
+            (Some(t), None) => t,
+            (None, Some(e)) => e,
+            (None, None) => entry,
+        };
+    }
+
+    /// Walk one branch under its guard; returns the exit register
+    /// state, or `None` for a statically dead branch.
+    fn walk_branch(
+        &mut self,
+        g: &BranchGuard,
+        body: &[Op],
+        path: &str,
+    ) -> Option<Vec<AbsVal>> {
+        match g {
+            BranchGuard::Dead => None,
+            BranchGuard::Trivial => {
+                self.branch_depth += 1;
+                self.walk(body, path);
+                self.branch_depth -= 1;
+                Some(self.regs.clone())
+            }
+            BranchGuard::C(c) => {
+                self.constraints.push(c.clone());
+                self.branch_depth += 1;
+                self.walk(body, path);
+                self.branch_depth -= 1;
+                self.constraints.pop();
+                Some(self.regs.clone())
+            }
+            BranchGuard::Opaque => {
+                self.opaque += 1;
+                self.branch_depth += 1;
+                self.walk(body, path);
+                self.branch_depth -= 1;
+                self.opaque -= 1;
+                Some(self.regs.clone())
+            }
+        }
+    }
+
+    // ---------------- loops ----------------
+
+    /// Run the two-iteration induction probe over `body` (sites
+    /// suppressed) and classify every register.  `i_sym`: the `For`
+    /// counter register bound to a fresh symbol during the probe.
+    fn probe_loop(&mut self, i_sym: Option<u8>, body: &[Op], path: &str) -> Vec<LoopCls> {
+        let entry = self.regs.clone();
+        let saved_rec = self.recording;
+        self.recording = false;
+        let sym = self.fresh_var();
+        if let Some(i) = i_sym {
+            self.regs[i as usize] = AbsVal::Int(Affine::var(sym));
+        }
+        self.walk(body, path);
+        let s1 = self.regs.clone();
+        if let Some(i) = i_sym {
+            self.regs[i as usize] = AbsVal::Int(Affine::var(sym));
+        }
+        self.walk(body, path);
+        let s2 = self.regs.clone();
+        self.recording = saved_rec;
+        self.regs = entry.clone();
+        (0..32)
+            .map(|r| {
+                if Some(r as u8) == i_sym {
+                    return LoopCls::Clobbered; // rebound by the caller
+                }
+                classify_reg(&entry[r], &s1[r], &s2[r])
+            })
+            .collect()
+    }
+
+    fn do_for(&mut self, i: u8, from: Val, to: Val, step: i64, body: &[Op], here: &str) {
+        let from_a = self.val_affine(from);
+        let to_a = self.val_affine(to);
+        // trip count: known iff (to - from) is a constant (register
+        // bounds like IS's `kstart = MYTHREAD*kb, kend = kstart + kb`
+        // still qualify: the difference cancels the symbolic part)
+        let trip = match (&from_a, &to_a) {
+            (Some(f), Some(t)) if step > 0 => {
+                t.sub(f).as_const().map(|span| {
+                    if span <= 0 {
+                        0
+                    } else {
+                        (span as u64).div_ceil(step as u64)
+                    }
+                })
+            }
+            _ => None,
+        };
+        if trip == Some(0) {
+            self.regs[i as usize] = AbsVal::Unknown;
+            return;
+        }
+        let path = format!("{here}.for.");
+        let cls = self.probe_loop(Some(i), body, &path);
+        match trip {
+            Some(n) => {
+                let entry = self.regs.clone();
+                let kv = self.fresh_var();
+                self.rebind(&cls, &entry, Some(kv));
+                // from_a is Some whenever trip is Some
+                let from_a = from_a.expect("trip known implies affine bounds");
+                self.regs[i as usize] =
+                    AbsVal::Int(from_a.add(&Affine::var(kv).scale(step)));
+                self.loops.push((kv, n));
+                let entry_seg = self.tracker.current();
+                self.walk(body, &path);
+                self.loops.pop();
+                if self.recording && self.tracker.current() != entry_seg {
+                    self.tracker.loop_wrap(entry_seg);
+                }
+                self.bind_exit(&cls, &entry, n as i64);
+                self.regs[i as usize] = AbsVal::Unknown;
+            }
+            None => {
+                self.loop_unknown_trip(Some(i), body, &path);
+            }
+        }
+    }
+
+    /// A loop whose trip count is unknown (`DoWhile`, or a `For` with
+    /// non-affine bounds): every modified register degrades to its
+    /// sticky classification for both the body walk and the exit.
+    fn loop_unknown_trip(&mut self, for_counter: Option<u8>, body: &[Op], path: &str) {
+        let cls = self.probe_loop(for_counter, body, path);
+        let entry = self.regs.clone();
+        self.rebind(&cls, &entry, None);
+        if let Some(i) = for_counter {
+            self.regs[i as usize] = AbsVal::Unknown;
+        }
+        let entry_seg = self.tracker.current();
+        self.walk(body, path);
+        if self.recording && self.tracker.current() != entry_seg {
+            self.tracker.loop_wrap(entry_seg);
+        }
+        // exit state: same sticky degradation (already in regs for
+        // non-inductive classes; induction without a trip degrades too)
+        self.rebind(&cls, &entry, None);
+        if let Some(i) = for_counter {
+            self.regs[i as usize] = AbsVal::Unknown;
+        }
+    }
+
+    /// Rebind registers at loop entry for the recording pass.  With
+    /// `kv = Some(v)` induction registers become `entry + k_v·delta`;
+    /// without a counter (unknown trip) they degrade sticky.
+    fn rebind(&mut self, cls: &[LoopCls], entry: &[AbsVal], kv: Option<u32>) {
+        for r in 0..32 {
+            self.regs[r] = match (&cls[r], kv) {
+                (LoopCls::Keep, _) => entry[r].clone(),
+                (LoopCls::IndInt(d), Some(v)) => match &entry[r] {
+                    AbsVal::Int(a) => {
+                        AbsVal::Int(a.add(&Affine::var(v).scale(*d)))
+                    }
+                    _ => AbsVal::Unknown,
+                },
+                (LoopCls::IndPtr(arr, d), Some(v)) => match &entry[r] {
+                    AbsVal::Ptr { idx: Some(x), .. } => AbsVal::Ptr {
+                        arr: *arr,
+                        idx: Some(x.add(&Affine::var(v).scale(*d))),
+                    },
+                    _ => AbsVal::Ptr { arr: *arr, idx: None },
+                },
+                (LoopCls::IndInt(_), None) => AbsVal::Unknown,
+                (LoopCls::IndPtr(arr, _), None)
+                | (LoopCls::StickyPtr(arr), _) => {
+                    AbsVal::Ptr { arr: *arr, idx: None }
+                }
+                (LoopCls::Clobbered, _) => AbsVal::Unknown,
+            };
+        }
+    }
+
+    /// Bind registers after a known-trip loop exits (`k = trip`).
+    fn bind_exit(&mut self, cls: &[LoopCls], entry: &[AbsVal], trip: i64) {
+        for r in 0..32 {
+            self.regs[r] = match &cls[r] {
+                LoopCls::Keep => entry[r].clone(),
+                LoopCls::IndInt(d) => match &entry[r] {
+                    AbsVal::Int(a) => AbsVal::Int(a.add_const(d * trip)),
+                    _ => AbsVal::Unknown,
+                },
+                LoopCls::IndPtr(arr, d) => match &entry[r] {
+                    AbsVal::Ptr { idx: Some(x), .. } => AbsVal::Ptr {
+                        arr: *arr,
+                        idx: Some(x.add_const(d * trip)),
+                    },
+                    _ => AbsVal::Ptr { arr: *arr, idx: None },
+                },
+                LoopCls::StickyPtr(arr) => {
+                    AbsVal::Ptr { arr: *arr, idx: None }
+                }
+                LoopCls::Clobbered => AbsVal::Unknown,
+            };
+        }
+    }
+
+    // ---------------- access sites ----------------
+
+    fn record(&mut self, p: u8, disp: i16, write: bool, here: &str) {
+        if !self.recording {
+            return;
+        }
+        let kind = if write { "store" } else { "load" };
+        match self.regs[p as usize].clone() {
+            AbsVal::Ptr { arr, idx } => {
+                let sa = self.rt.array(arr);
+                let es = sa.layout.elemsize as i64;
+                let delem = i64::from(disp).div_euclid(es.max(1));
+                let index = idx.map(|a| a.add_const(delem));
+                let disp_s = if disp == 0 {
+                    String::new()
+                } else {
+                    format!("{disp:+}B")
+                };
+                self.sites.push(AccessSite {
+                    arr,
+                    array: sa.name.clone(),
+                    nelems: sa.nelems,
+                    write,
+                    index,
+                    loops: self.loops.clone(),
+                    constraints: self.constraints.clone(),
+                    opaque: self.opaque > 0,
+                    seg: self.tracker.current(),
+                    site: format!("{kind} {}{disp_s} at {here}", sa.name),
+                });
+            }
+            _ => self.untracked.push(format!(
+                "{kind} through r{p} at {here} (pointer not statically tracked)"
+            )),
+        }
+    }
+}
+
+/// Evaluate one integer ALU op over abstract operands.
+fn eval_bin(op: IntOp, a: &AbsVal, b: &AbsVal) -> AbsVal {
+    let (aa, ba) = match (a, b) {
+        (AbsVal::Int(x), AbsVal::Int(y)) => (x, y),
+        _ => return AbsVal::Unknown,
+    };
+    match op {
+        IntOp::Add => AbsVal::Int(aa.add(ba)),
+        IntOp::Sub => AbsVal::Int(aa.sub(ba)),
+        IntOp::Mul => {
+            if let Some(c) = aa.as_const() {
+                AbsVal::Int(ba.scale(c))
+            } else if let Some(c) = ba.as_const() {
+                AbsVal::Int(aa.scale(c))
+            } else {
+                AbsVal::Unknown
+            }
+        }
+        IntOp::Sll => match ba.as_const() {
+            Some(c) if (0..63).contains(&c) => AbsVal::Int(aa.scale(1i64 << c)),
+            _ => AbsVal::Unknown,
+        },
+        IntOp::CmpEq => AbsVal::Cmp { diff: aa.sub(ba), kind: CmpKind::Eq },
+        IntOp::CmpLt => AbsVal::Cmp { diff: aa.sub(ba), kind: CmpKind::Lt },
+        _ => match (aa.as_const(), ba.as_const()) {
+            (Some(x), Some(y)) => fold_const(op, x, y)
+                .map_or(AbsVal::Unknown, |v| AbsVal::Int(Affine::konst(v))),
+            _ => AbsVal::Unknown,
+        },
+    }
+}
+
+/// Concrete fold of the remaining integer ops on two constants.
+fn fold_const(op: IntOp, x: i64, y: i64) -> Option<i64> {
+    Some(match op {
+        IntOp::Div => {
+            if y == 0 {
+                return None;
+            }
+            x.wrapping_div(y)
+        }
+        IntOp::Rem => {
+            if y == 0 {
+                return None;
+            }
+            x.wrapping_rem(y)
+        }
+        IntOp::And => x & y,
+        IntOp::Or => x | y,
+        IntOp::Xor => x ^ y,
+        IntOp::Srl => {
+            if !(0..64).contains(&y) {
+                return None;
+            }
+            ((x as u64) >> y) as i64
+        }
+        IntOp::Sra => {
+            if !(0..64).contains(&y) {
+                return None;
+            }
+            x >> y
+        }
+        IntOp::CmpLtU => i64::from((x as u64) < (y as u64)),
+        IntOp::CmpLe => i64::from(x <= y),
+        // handled symbolically above
+        IntOp::Add
+        | IntOp::Sub
+        | IntOp::Mul
+        | IntOp::Sll
+        | IntOp::CmpEq
+        | IntOp::CmpLt => return None,
+    })
+}
+
+/// Classify one register across the two probe iterations.
+fn classify_reg(entry: &AbsVal, s1: &AbsVal, s2: &AbsVal) -> LoopCls {
+    if s1 == entry && s2 == entry {
+        return LoopCls::Keep;
+    }
+    // integer induction: both iterations advance by the same constant
+    if let (AbsVal::Int(a0), AbsVal::Int(a1), AbsVal::Int(a2)) = (entry, s1, s2) {
+        if let (Some(d1), Some(d2)) =
+            (a1.sub(a0).as_const(), a2.sub(a1).as_const())
+        {
+            if d1 == d2 {
+                return LoopCls::IndInt(d1);
+            }
+        }
+        return LoopCls::Clobbered;
+    }
+    // pointer induction / sticky pointer: array must agree throughout
+    if let (
+        AbsVal::Ptr { arr: r0, idx: i0 },
+        AbsVal::Ptr { arr: r1, idx: i1 },
+        AbsVal::Ptr { arr: r2, idx: i2 },
+    ) = (entry, s1, s2)
+    {
+        if r0 == r1 && r1 == r2 {
+            if let (Some(x0), Some(x1), Some(x2)) = (i0, i1, i2) {
+                if let (Some(d1), Some(d2)) =
+                    (x1.sub(x0).as_const(), x2.sub(x1).as_const())
+                {
+                    if d1 == d2 {
+                        return LoopCls::IndPtr(*r0, d1);
+                    }
+                }
+            }
+            return LoopCls::StickyPtr(*r0);
+        }
+    }
+    LoopCls::Clobbered
+}
+
+/// Join the register states of two merging branches.
+fn merge_regs(a: &[AbsVal], b: &[AbsVal]) -> Vec<AbsVal> {
+    a.iter()
+        .zip(b.iter())
+        .map(|(x, y)| {
+            if x == y {
+                return x.clone();
+            }
+            match (x, y) {
+                (
+                    AbsVal::Ptr { arr: ax, .. },
+                    AbsVal::Ptr { arr: ay, .. },
+                ) if ax == ay => AbsVal::Ptr { arr: *ax, idx: None },
+                _ => AbsVal::Unknown,
+            }
+        })
+        .collect()
+}
+
+/// Constraint the `then`/`else` side of `If(cond, r)` adds, given the
+/// abstract value of `r`.  The lowering branches on `negate(cond)`,
+/// i.e. the `then` body runs exactly when `r cond 0` holds.
+fn guard_of(cond: Cond, rv: &AbsVal, then_side: bool) -> BranchGuard {
+    match rv {
+        AbsVal::Int(a) => {
+            let rel = match (cond, then_side) {
+                (Cond::Eq, true) => Relation::Zero,
+                (Cond::Eq, false) => Relation::NonZero,
+                (Cond::Ne, true) => Relation::NonZero,
+                (Cond::Ne, false) => Relation::Zero,
+                (Cond::Lt, true) => Relation::Neg,
+                (Cond::Lt, false) => Relation::NonNeg,
+                (Cond::Ge, true) => Relation::NonNeg,
+                (Cond::Ge, false) => Relation::Neg,
+                (Cond::Le, true) => Relation::NonPos,
+                (Cond::Le, false) => Relation::Pos,
+                (Cond::Gt, true) => Relation::Pos,
+                (Cond::Gt, false) => Relation::NonPos,
+            };
+            BranchGuard::C(Constraint { expr: a.clone(), rel })
+        }
+        AbsVal::Cmp { diff, kind } => {
+            // r is the 0/1 truth value of (diff kindOp 0); `cond`
+            // compares that truth value against zero.
+            let truth_when_taken = match cond {
+                Cond::Ne | Cond::Gt => true,  // r != 0  <=>  true
+                Cond::Eq | Cond::Le => false, // r == 0  <=>  false
+                // r in {0,1}: `r < 0` never holds, `r >= 0` always
+                Cond::Lt if then_side => return BranchGuard::Dead,
+                Cond::Lt => return BranchGuard::Trivial,
+                Cond::Ge if then_side => return BranchGuard::Trivial,
+                Cond::Ge => return BranchGuard::Dead,
+            };
+            let truth_required =
+                if then_side { truth_when_taken } else { !truth_when_taken };
+            let rel = match (kind, truth_required) {
+                (CmpKind::Eq, true) => Relation::Zero,
+                (CmpKind::Eq, false) => Relation::NonZero,
+                (CmpKind::Lt, true) => Relation::Neg,
+                (CmpKind::Lt, false) => Relation::NonNeg,
+            };
+            BranchGuard::C(Constraint { expr: diff.clone(), rel })
+        }
+        _ => BranchGuard::Opaque,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::IrBuilder;
+    use crate::isa::MemWidth;
+    use crate::upc::UpcRuntime;
+
+    use super::super::footprint::enumerate_for_thread;
+
+    fn fp(site: &AccessSite, myt: i64) -> Vec<i64> {
+        enumerate_for_thread(
+            site.index.as_ref().expect("tracked index"),
+            &site.loops,
+            &site.constraints,
+            myt,
+        )
+        .expect("under cap")
+        .into_iter()
+        .collect()
+    }
+
+    #[test]
+    fn strided_cursor_walk_is_affine() {
+        let mut rt = UpcRuntime::new(4);
+        let a = rt.alloc_shared("a", 1, 8, 64);
+        let module = {
+            let mut b = IrBuilder::new(&mut rt);
+            let myt = b.mythread();
+            let nt = b.threads();
+            let v = b.iconst(1);
+            let p = b.sptr_init(a, Val::R(myt));
+            b.for_range(Val::I(0), Val::I(16), 1, |b, _i| {
+                b.sptr_st(MemWidth::U64, v, p, 0);
+                b.sptr_inc(p, a, Val::R(nt));
+            });
+            b.finish("strided")
+        };
+        let tr = trace(&module, &rt);
+        assert_eq!(tr.sites.len(), 1);
+        let s = &tr.sites[0];
+        assert!(s.write && !s.opaque);
+        assert_eq!(s.seg, 0);
+        // thread 2 touches 2, 6, 10, ..., 62
+        let set = fp(s, 2);
+        assert_eq!(set.len(), 16);
+        assert_eq!(set[0], 2);
+        assert_eq!(set[15], 62);
+    }
+
+    #[test]
+    fn guards_and_register_bounds_are_tracked() {
+        let mut rt = UpcRuntime::new(4);
+        let a = rt.alloc_shared("a", 4, 8, 64);
+        let module = {
+            let mut b = IrBuilder::new(&mut rt);
+            let myt = b.mythread();
+            // for k in myt*4 .. myt*4+4 under an `if (myt == 0)` guard
+            let lo = b.it();
+            b.bin(IntOp::Mul, lo, myt, Val::I(4));
+            let hi = b.it();
+            b.bin(IntOp::Add, hi, lo, Val::I(4));
+            b.iff(Cond::Eq, myt, |b| {
+                b.for_range(Val::R(lo), Val::R(hi), 1, |b, i| {
+                    let p = b.sptr_init(a, Val::I(0));
+                    b.sptr_inc(p, a, Val::R(i));
+                    let t = b.it();
+                    b.sptr_ld(MemWidth::U64, t, p, 0);
+                    b.free_i(t);
+                    b.free_i(p);
+                });
+            });
+            b.finish("guarded")
+        };
+        let tr = trace(&module, &rt);
+        assert_eq!(tr.sites.len(), 1);
+        let s = &tr.sites[0];
+        assert!(!s.write && !s.opaque);
+        assert_eq!(s.constraints.len(), 1);
+        // thread 0 reads 0..4; other threads are excluded by the guard
+        assert_eq!(fp(s, 0), vec![0, 1, 2, 3]);
+        assert!(fp(s, 1).is_empty());
+    }
+
+    #[test]
+    fn barrier_bearing_loop_wraps_phases() {
+        let mut rt = UpcRuntime::new(2);
+        let a = rt.alloc_shared("a", 4, 8, 16);
+        let module = {
+            let mut b = IrBuilder::new(&mut rt);
+            let myt = b.mythread();
+            let v = b.iconst(3);
+            b.for_range(Val::I(0), Val::I(3), 1, |b, _i| {
+                let p = b.sptr_init(a, Val::R(myt));
+                b.sptr_st(MemWidth::U64, v, p, 0);
+                b.barrier();
+                let t = b.it();
+                b.sptr_ld(MemWidth::U64, t, p, 0);
+                b.free_i(t);
+                b.free_i(p);
+            });
+            b.finish("wrapped")
+        };
+        let tr = trace(&module, &rt);
+        assert_eq!(tr.sites.len(), 2);
+        let (w, r) = (&tr.sites[0], &tr.sites[1]);
+        assert_ne!(w.seg, r.seg);
+        // the wrap-around makes the post-barrier tail concurrent with
+        // the next iteration's pre-barrier head
+        assert_eq!(tr.tracker.find(w.seg), tr.tracker.find(r.seg));
+        assert!(tr.divergent_barriers.is_empty());
+    }
+
+    #[test]
+    fn non_inductive_update_degrades_soundly() {
+        let mut rt = UpcRuntime::new(2);
+        let a = rt.alloc_shared("a", 4, 8, 16);
+        let module = {
+            let mut b = IrBuilder::new(&mut rt);
+            let acc = b.iconst(0);
+            let stride = b.iconst(1);
+            let p = b.sptr_init(a, Val::I(0));
+            b.for_range(Val::I(0), Val::I(4), 1, |b, _i| {
+                // acc += stride; stride += 1  — quadratic, not affine
+                b.add(acc, acc, Val::R(stride));
+                b.add(stride, stride, Val::I(1));
+                b.sptr_inc(p, a, Val::R(acc));
+                let t = b.it();
+                b.sptr_ld(MemWidth::U64, t, p, 0);
+                b.free_i(t);
+            });
+            b.finish("quad")
+        };
+        let tr = trace(&module, &rt);
+        assert_eq!(tr.sites.len(), 1);
+        // the cursor advanced by a non-constant stride: the analysis
+        // must keep the array but drop the index
+        assert!(tr.sites[0].index.is_none());
+        assert_eq!(tr.sites[0].array, "a");
+    }
+}

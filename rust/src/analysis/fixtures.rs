@@ -1,0 +1,127 @@
+//! Deliberately-broken (and one deliberately-clean) lint fixture
+//! kernels.  These are the analyzer's own acceptance surface: `racy`
+//! must draw a phase-localized write/write race ERROR, `oob` a bounds
+//! ERROR, and `clean` nothing at all — the golden-file suite pins all
+//! three, and CI asserts `pgas-hw lint --fixtures` exits non-zero.
+
+use crate::compiler::{IrBuilder, IrModule, Val};
+use crate::isa::MemWidth;
+use crate::upc::UpcRuntime;
+
+/// One fixture kernel: its runtime (array directory) plus IR.
+pub struct Fixture {
+    /// Fixture name (`racy`, `oob`, `clean`).
+    pub name: &'static str,
+    /// Runtime the kernel was built against.
+    pub rt: UpcRuntime,
+    /// The kernel IR.
+    pub module: IrModule,
+}
+
+/// All fixture names, in lint order.
+pub const NAMES: [&str; 3] = ["racy", "oob", "clean"];
+
+/// Build a fixture by name; `None` for an unknown name.
+pub fn by_name(name: &str, threads: u32) -> Option<Fixture> {
+    match name {
+        "racy" => Some(racy(threads)),
+        "oob" => Some(oob(threads)),
+        "clean" => Some(clean(threads)),
+        _ => None,
+    }
+}
+
+/// Every thread writes the *entire* array in phase 0 — a cross-thread
+/// write/write race on every element — then reads its own element
+/// after a barrier (phase 1, race-free).  Exactly one race ERROR,
+/// localized to phase 0.
+pub fn racy(threads: u32) -> Fixture {
+    let mut rt = UpcRuntime::new(threads);
+    let a = rt.alloc_shared("racy_a", 4, 8, 64);
+    let module = {
+        let mut b = IrBuilder::new(&mut rt);
+        let v = b.iconst(7);
+        let p = b.sptr_init(a, Val::I(0));
+        b.for_range(Val::I(0), Val::I(64), 1, |b, _k| {
+            b.sptr_st(MemWidth::U64, v, p, 0);
+            b.sptr_inc(p, a, Val::I(1));
+        });
+        b.free_i(p);
+        b.free_i(v);
+        b.barrier();
+        let myt = b.mythread();
+        let q = b.sptr_init(a, Val::R(myt));
+        let t = b.it();
+        b.sptr_ld(MemWidth::U64, t, q, 0);
+        b.free_i(t);
+        b.free_i(q);
+        b.free_i(myt);
+        b.finish("racy")
+    };
+    Fixture { name: "racy", rt, module }
+}
+
+/// A cursor starts two elements before the end of a 64-element array
+/// and walks four loads — the last two land on elements 64 and 65,
+/// past `nelems`.  (The cursor is formed by increments, not
+/// `sptr_init`, precisely because the lowering's host-side `ptr()`
+/// would reject an out-of-range init at compile time.)
+pub fn oob(threads: u32) -> Fixture {
+    let mut rt = UpcRuntime::new(threads);
+    let a = rt.alloc_shared("oob_a", 4, 8, 64);
+    let module = {
+        let mut b = IrBuilder::new(&mut rt);
+        let p = b.sptr_init(a, Val::I(62));
+        b.for_range(Val::I(0), Val::I(4), 1, |b, _k| {
+            let t = b.it();
+            b.sptr_ld(MemWidth::U64, t, p, 0);
+            b.sptr_inc(p, a, Val::I(1));
+            b.free_i(t);
+        });
+        b.free_i(p);
+        b.finish("oob")
+    };
+    Fixture { name: "oob", rt, module }
+}
+
+/// The well-formed twin: two cyclic arrays written on an
+/// owner-disjoint `MYTHREAD + k·THREADS` stride (the adjacent
+/// increment pair makes the loop body a batchable window), then a
+/// barrier, then a read of the thread's own element.  Zero
+/// diagnostics.
+pub fn clean(threads: u32) -> Fixture {
+    assert!(
+        threads > 0 && 64 % threads == 0,
+        "clean fixture needs THREADS dividing 64"
+    );
+    let mut rt = UpcRuntime::new(threads);
+    let a = rt.alloc_shared("clean_a", 1, 8, 64);
+    let b_arr = rt.alloc_shared("clean_b", 1, 8, 64);
+    let module = {
+        let mut b = IrBuilder::new(&mut rt);
+        let myt = b.mythread();
+        let nt = b.threads();
+        let pa = b.sptr_init(a, Val::R(myt));
+        let pb = b.sptr_init(b_arr, Val::R(myt));
+        let v = b.iconst(1);
+        b.for_range(Val::I(0), Val::I(i64::from(64 / threads)), 1, |b, _k| {
+            b.sptr_st(MemWidth::U64, v, pa, 0);
+            b.sptr_st(MemWidth::U64, v, pb, 0);
+            b.sptr_inc(pa, a, Val::R(nt));
+            b.sptr_inc(pb, b_arr, Val::R(nt));
+        });
+        b.free_i(v);
+        b.free_i(pb);
+        b.free_i(pa);
+        b.barrier();
+        let q = b.sptr_init(a, Val::R(myt));
+        let t = b.it();
+        b.sptr_ld(MemWidth::U64, t, q, 0);
+        b.free_i(t);
+        b.free_i(q);
+        b.free_i(nt);
+        b.free_i(myt);
+        b.finish("clean")
+    };
+    Fixture { name: "clean", rt, module }
+}

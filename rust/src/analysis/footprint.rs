@@ -1,0 +1,361 @@
+//! Symbolic access footprints: affine index expressions over
+//! `MYTHREAD` and loop counters, guard constraints collected from the
+//! IR's structured branches, and the concrete per-thread enumeration
+//! the race and bounds checkers query.
+//!
+//! An [`Affine`] is `konst + myt·MYTHREAD + Σ cᵢ·kᵢ` where each `kᵢ`
+//! is a loop counter with a known trip count (`kᵢ ∈ [0, trip)`).  The
+//! dataflow pass ([`super::dataflow`]) keeps shared-pointer indices in
+//! this form whenever the kernel's address arithmetic allows it; the
+//! checkers then *enumerate* the footprint exactly for the concrete
+//! thread count being linted (the analysis is THREADS-parametric in
+//! form, concrete in evaluation — the same block-cyclic element space
+//! `engine/gather.rs` buckets at runtime).
+
+use std::collections::BTreeSet;
+use std::fmt;
+
+/// Enumeration budget per access site and thread: a site whose used
+/// loop ranges multiply out beyond this is reported *unprovable*
+/// (WARN), never silently truncated into a wrong ERROR.
+pub const ENUM_CAP: u64 = 1 << 16;
+
+/// An affine integer expression `konst + myt·MYTHREAD + Σ cᵢ·kᵢ`.
+///
+/// Loop-counter terms are kept sorted by variable id so structural
+/// equality is semantic equality.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Affine {
+    /// Constant term.
+    pub konst: i64,
+    /// Coefficient on `MYTHREAD`.
+    pub myt: i64,
+    /// `(loop variable id, coefficient)`, sorted by id, no zeros.
+    pub terms: Vec<(u32, i64)>,
+}
+
+impl Affine {
+    /// The constant `c`.
+    pub fn konst(c: i64) -> Self {
+        Affine { konst: c, myt: 0, terms: Vec::new() }
+    }
+
+    /// The expression `MYTHREAD`.
+    pub fn mythread() -> Self {
+        Affine { konst: 0, myt: 1, terms: Vec::new() }
+    }
+
+    /// The loop counter `k_v` (coefficient 1).
+    pub fn var(v: u32) -> Self {
+        Affine { konst: 0, myt: 0, terms: vec![(v, 1)] }
+    }
+
+    /// `Some(c)` when the expression is the constant `c` (no
+    /// `MYTHREAD`, no loop counters).
+    pub fn as_const(&self) -> Option<i64> {
+        if self.myt == 0 && self.terms.is_empty() {
+            Some(self.konst)
+        } else {
+            None
+        }
+    }
+
+    /// Loop-variable ids this expression mentions.
+    pub fn vars(&self) -> impl Iterator<Item = u32> + '_ {
+        self.terms.iter().map(|&(v, _)| v)
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &Affine) -> Affine {
+        let mut terms = Vec::with_capacity(self.terms.len() + other.terms.len());
+        let (mut i, mut j) = (0, 0);
+        while i < self.terms.len() || j < other.terms.len() {
+            let (v, c) = match (self.terms.get(i), other.terms.get(j)) {
+                (Some(&(va, ca)), Some(&(vb, cb))) => {
+                    if va == vb {
+                        i += 1;
+                        j += 1;
+                        (va, ca.wrapping_add(cb))
+                    } else if va < vb {
+                        i += 1;
+                        (va, ca)
+                    } else {
+                        j += 1;
+                        (vb, cb)
+                    }
+                }
+                (Some(&(va, ca)), None) => {
+                    i += 1;
+                    (va, ca)
+                }
+                (None, Some(&(vb, cb))) => {
+                    j += 1;
+                    (vb, cb)
+                }
+                (None, None) => unreachable!(),
+            };
+            if c != 0 {
+                terms.push((v, c));
+            }
+        }
+        Affine {
+            konst: self.konst.wrapping_add(other.konst),
+            myt: self.myt.wrapping_add(other.myt),
+            terms,
+        }
+    }
+
+    /// `self - other`.
+    pub fn sub(&self, other: &Affine) -> Affine {
+        self.add(&other.scale(-1))
+    }
+
+    /// `self · c`.
+    pub fn scale(&self, c: i64) -> Affine {
+        if c == 0 {
+            return Affine::konst(0);
+        }
+        Affine {
+            konst: self.konst.wrapping_mul(c),
+            myt: self.myt.wrapping_mul(c),
+            terms: self
+                .terms
+                .iter()
+                .map(|&(v, k)| (v, k.wrapping_mul(c)))
+                .collect(),
+        }
+    }
+
+    /// `self + c`.
+    pub fn add_const(&self, c: i64) -> Affine {
+        let mut out = self.clone();
+        out.konst = out.konst.wrapping_add(c);
+        out
+    }
+
+    /// Evaluate with `MYTHREAD = myt` and loop counters bound by `env`
+    /// (`env(v)` must cover every variable the expression mentions).
+    pub fn eval(&self, myt: i64, env: &dyn Fn(u32) -> i64) -> i64 {
+        let mut acc = self.konst.wrapping_add(self.myt.wrapping_mul(myt));
+        for &(v, c) in &self.terms {
+            acc = acc.wrapping_add(c.wrapping_mul(env(v)));
+        }
+        acc
+    }
+}
+
+impl fmt::Display for Affine {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        let mut put = |f: &mut fmt::Formatter<'_>, c: i64, name: &str| -> fmt::Result {
+            if c == 0 {
+                return Ok(());
+            }
+            if first {
+                first = false;
+                if c == 1 {
+                    write!(f, "{name}")?;
+                } else {
+                    write!(f, "{c}*{name}")?;
+                }
+            } else if c == 1 {
+                write!(f, "+{name}")?;
+            } else if c == -1 {
+                write!(f, "-{name}")?;
+            } else if c < 0 {
+                write!(f, "{c}*{name}")?;
+            } else {
+                write!(f, "+{c}*{name}")?;
+            }
+            Ok(())
+        };
+        put(f, self.myt, "MYTHREAD")?;
+        for &(v, c) in &self.terms {
+            put(f, c, &format!("k{v}"))?;
+        }
+        if first {
+            write!(f, "{}", self.konst)
+        } else if self.konst > 0 {
+            write!(f, "+{}", self.konst)
+        } else if self.konst < 0 {
+            write!(f, "{}", self.konst)
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// How a guard constrains its [`Affine`] expression against zero.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Relation {
+    /// `expr == 0`
+    Zero,
+    /// `expr != 0`
+    NonZero,
+    /// `expr < 0`
+    Neg,
+    /// `expr >= 0`
+    NonNeg,
+    /// `expr > 0`
+    Pos,
+    /// `expr <= 0`
+    NonPos,
+}
+
+impl Relation {
+    /// Does a concrete value satisfy the relation?
+    pub fn holds(&self, v: i64) -> bool {
+        match self {
+            Relation::Zero => v == 0,
+            Relation::NonZero => v != 0,
+            Relation::Neg => v < 0,
+            Relation::NonNeg => v >= 0,
+            Relation::Pos => v > 0,
+            Relation::NonPos => v <= 0,
+        }
+    }
+}
+
+/// One path constraint an access site executes under: `expr rel 0`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Constraint {
+    /// The guarded expression.
+    pub expr: Affine,
+    /// Its relation to zero on the taken path.
+    pub rel: Relation,
+}
+
+impl fmt::Display for Constraint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let op = match self.rel {
+            Relation::Zero => "==",
+            Relation::NonZero => "!=",
+            Relation::Neg => "<",
+            Relation::NonNeg => ">=",
+            Relation::Pos => ">",
+            Relation::NonPos => "<=",
+        };
+        write!(f, "{} {op} 0", self.expr)
+    }
+}
+
+/// Enumerate the exact element set `{ index | constraints hold }` for
+/// one thread, iterating every *used* loop counter over its trip
+/// range.  Returns `None` when the used ranges multiply out beyond
+/// [`ENUM_CAP`] (the caller downgrades the site to *unprovable*).
+///
+/// `loops` is the site's enclosing `(var, trip)` list; counters the
+/// index and constraints never mention contribute no factor.
+pub fn enumerate_for_thread(
+    index: &Affine,
+    loops: &[(u32, u64)],
+    constraints: &[Constraint],
+    myt: i64,
+) -> Option<BTreeSet<i64>> {
+    // the odometer only spins counters the site actually uses
+    let mut used: Vec<(u32, u64)> = loops
+        .iter()
+        .filter(|&&(v, _)| {
+            index.vars().any(|u| u == v)
+                || constraints.iter().any(|c| c.expr.vars().any(|u| u == v))
+        })
+        .copied()
+        .collect();
+    used.dedup_by_key(|&mut (v, _)| v);
+    let mut total: u64 = 1;
+    for &(_, trip) in &used {
+        total = total.checked_mul(trip.max(1))?;
+        if total > ENUM_CAP {
+            return None;
+        }
+    }
+    let mut out = BTreeSet::new();
+    let mut odo: Vec<u64> = vec![0; used.len()];
+    loop {
+        let env = |v: u32| -> i64 {
+            for (k, &(uv, _)) in used.iter().enumerate() {
+                if uv == v {
+                    return odo[k] as i64;
+                }
+            }
+            // a constraint/index var outside `loops` cannot occur: the
+            // dataflow pass records sites with their full loop context
+            0
+        };
+        if constraints.iter().all(|c| c.rel.holds(c.expr.eval(myt, &env))) {
+            out.insert(index.eval(myt, &env));
+        }
+        // advance the odometer
+        let mut k = 0;
+        loop {
+            if k == used.len() {
+                return Some(out);
+            }
+            odo[k] += 1;
+            if odo[k] < used[k].1 {
+                break;
+            }
+            odo[k] = 0;
+            k += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn affine_algebra() {
+        let a = Affine::mythread().scale(3).add(&Affine::var(1).scale(2));
+        let b = Affine::var(1).add(&Affine::konst(5));
+        let s = a.add(&b);
+        assert_eq!(s.myt, 3);
+        assert_eq!(s.terms, vec![(1, 3)]);
+        assert_eq!(s.konst, 5);
+        let d = s.sub(&b);
+        assert_eq!(d, a);
+        assert_eq!(Affine::konst(7).as_const(), Some(7));
+        assert_eq!(Affine::mythread().as_const(), None);
+        assert_eq!(s.eval(2, &|_| 10), 3 * 2 + 3 * 10 + 5);
+    }
+
+    #[test]
+    fn display_is_readable() {
+        let e = Affine::mythread()
+            .scale(4)
+            .add(&Affine::var(0))
+            .add_const(-2);
+        assert_eq!(e.to_string(), "4*MYTHREAD+k0-2");
+        assert_eq!(Affine::konst(0).to_string(), "0");
+    }
+
+    #[test]
+    fn enumeration_respects_guards_and_ranges() {
+        // index = myt + 4*k, k in [0,8)
+        let idx = Affine::mythread().add(&Affine::var(0).scale(4));
+        let loops = [(0u32, 8u64)];
+        let set = enumerate_for_thread(&idx, &loops, &[], 2).unwrap();
+        assert_eq!(set.len(), 8);
+        assert!(set.contains(&2) && set.contains(&30));
+        // guard k != 0 removes the first element
+        let g = Constraint { expr: Affine::var(0), rel: Relation::NonZero };
+        let set = enumerate_for_thread(&idx, &loops, &[g], 2).unwrap();
+        assert_eq!(set.len(), 7);
+        assert!(!set.contains(&2));
+        // a myt == 0 guard empties the set for other threads
+        let g0 = Constraint { expr: Affine::mythread(), rel: Relation::Zero };
+        let set = enumerate_for_thread(&idx, &loops, &[g0], 2).unwrap();
+        assert!(set.is_empty());
+    }
+
+    #[test]
+    fn enumeration_caps_loudly() {
+        let idx = Affine::var(0).add(&Affine::var(1));
+        let loops = [(0u32, 1 << 9), (1u32, 1 << 9)];
+        assert!(enumerate_for_thread(&idx, &loops, &[], 0).is_none());
+        // unused huge ranges cost nothing
+        let idx = Affine::var(0);
+        assert!(enumerate_for_thread(&idx, &loops, &[], 0).is_some());
+    }
+}

@@ -1,0 +1,521 @@
+//! Static PGAS access analyzer (`pgas-hw lint`).
+//!
+//! Three cooperating compile-time analyses over the kernel IR and its
+//! lowered [`Program`](crate::isa::Program):
+//!
+//! 1. **Barrier-phase race detector** — [`phases`] splits the kernel
+//!    into barrier-delimited segments (loop wrap-around merges
+//!    segments a back edge makes concurrent again), [`dataflow`]
+//!    computes each shared access's symbolic footprint as an affine
+//!    stride set over `MYTHREAD` and loop counters, and
+//!    [`footprint::enumerate_for_thread`] evaluates the exact
+//!    per-thread element sets so cross-thread write/write and
+//!    read/write overlaps inside one phase become ERROR diagnostics
+//!    with access-site provenance.
+//! 2. **Shared-bounds checker** — the static twin of
+//!    [`SharedArray::ptr`](crate::upc::SharedArray::ptr)'s runtime
+//!    debug assertion: every tracked footprint must stay inside
+//!    `[0, nelems)`; unprovable sites WARN instead of erroring.
+//! 3. **Batchability / engine-mix predictor** — [`predict`] replays
+//!    the pipeline's own [`plan_window`](crate::cpu::pipeline::plan_window)
+//!    eligibility over the lowered instruction stream and predicts the
+//!    kernel's [`EngineMix`](crate::cpu::pipeline::EngineMix)
+//!    categories (batched / scalar / gather), which the differential
+//!    suite checks against runtime telemetry.
+//!
+//! The analyses are *sound where they claim to be*: an ERROR is backed
+//! by a concrete witness (element, thread pair, phase); anything the
+//! abstraction loses — data-dependent indices, over-cap enumerations,
+//! opaque branches — degrades to a WARN, never a guess.
+
+pub mod dataflow;
+pub mod fixtures;
+pub mod footprint;
+pub mod phases;
+pub mod predict;
+
+use std::collections::BTreeMap;
+use std::collections::BTreeSet;
+use std::fmt;
+
+use crate::compiler::{compile, CompileOpts, IrModule, Lowering, SourceVariant};
+use crate::npb::{self, Kernel, Scale};
+use crate::upc::UpcRuntime;
+
+use dataflow::{AccessSite, AccessTrace};
+use footprint::enumerate_for_thread;
+use predict::PredictedMix;
+
+/// Diagnostic severity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// A proven defect with a concrete witness.
+    Error,
+    /// Something the analysis could not prove safe.
+    Warn,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Severity::Error => write!(f, "ERROR"),
+            Severity::Warn => write!(f, "WARN"),
+        }
+    }
+}
+
+/// One lint finding.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    /// ERROR (witnessed) or WARN (unprovable).
+    pub severity: Severity,
+    /// Stable machine code, e.g. `race/ww`, `bounds/oob`.
+    pub code: &'static str,
+    /// Concurrency-phase class the finding lives in.
+    pub phase: usize,
+    /// Array involved (empty for non-array findings).
+    pub array: String,
+    /// Human-readable explanation with the witness when there is one.
+    pub message: String,
+    /// Access-site provenance strings.
+    pub sites: Vec<String>,
+}
+
+/// Full lint result for one kernel.
+#[derive(Debug)]
+pub struct LintReport {
+    /// Kernel name.
+    pub kernel: String,
+    /// Thread count the footprints were enumerated for.
+    pub threads: u32,
+    /// Concurrency-phase classes after loop wrap-around merging.
+    pub phases: usize,
+    /// Shared access sites the dataflow pass recorded.
+    pub sites: usize,
+    /// All findings, errors first.
+    pub diagnostics: Vec<Diagnostic>,
+    /// Static engine-mix prediction from the lowered program.
+    pub predicted: PredictedMix,
+}
+
+impl LintReport {
+    /// Number of ERROR diagnostics.
+    pub fn errors(&self) -> usize {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .count()
+    }
+
+    /// Number of WARN diagnostics.
+    pub fn warnings(&self) -> usize {
+        self.diagnostics.len() - self.errors()
+    }
+
+    /// Sorted, deduplicated diagnostic codes.
+    pub fn codes(&self) -> Vec<&'static str> {
+        let set: BTreeSet<&'static str> =
+            self.diagnostics.iter().map(|d| d.code).collect();
+        set.into_iter().collect()
+    }
+
+    /// One-line deterministic summary — the form the golden suite pins.
+    pub fn summary_json(&self) -> String {
+        let codes = self
+            .codes()
+            .iter()
+            .map(|c| format!("\"{c}\""))
+            .collect::<Vec<_>>()
+            .join(",");
+        format!(
+            "{{\"kernel\":\"{}\",\"threads\":{},\"errors\":{},\"warnings\":{},\
+             \"codes\":[{}],\"batched\":{},\"scalar\":{},\"gather\":{}}}",
+            json_escape(&self.kernel),
+            self.threads,
+            self.errors(),
+            self.warnings(),
+            codes,
+            self.predicted.batched(),
+            self.predicted.scalar(),
+            self.predicted.gather(),
+        )
+    }
+
+    /// Full JSON object: summary fields plus per-diagnostic detail and
+    /// the raw prediction counters.
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{");
+        out.push_str(&format!(
+            "\"kernel\":\"{}\",\"threads\":{},\"phases\":{},\"sites\":{},",
+            json_escape(&self.kernel),
+            self.threads,
+            self.phases,
+            self.sites
+        ));
+        let p = &self.predicted;
+        out.push_str(&format!(
+            "\"predicted\":{{\"windows\":{},\"batchable_incs\":{},\
+             \"scalar_incs\":{},\"gather_windows\":{},\"batched\":{},\
+             \"scalar\":{},\"gather\":{},\"hw_incs\":{},\"soft_incs\":{},\
+             \"hw_mems\":{},\"soft_mems\":{},\"insts\":{}}},",
+            p.windows,
+            p.batchable_incs,
+            p.scalar_incs,
+            p.gather_windows,
+            p.batched(),
+            p.scalar(),
+            p.gather(),
+            p.stats.hw_incs,
+            p.stats.soft_incs,
+            p.stats.hw_mems,
+            p.stats.soft_mems,
+            p.stats.insts
+        ));
+        out.push_str("\"diagnostics\":[");
+        for (i, d) in self.diagnostics.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let sites = d
+                .sites
+                .iter()
+                .map(|s| format!("\"{}\"", json_escape(s)))
+                .collect::<Vec<_>>()
+                .join(",");
+            out.push_str(&format!(
+                "{{\"severity\":\"{}\",\"code\":\"{}\",\"phase\":{},\
+                 \"array\":\"{}\",\"message\":\"{}\",\"sites\":[{}]}}",
+                d.severity,
+                d.code,
+                d.phase,
+                json_escape(&d.array),
+                json_escape(&d.message),
+                sites
+            ));
+        }
+        out.push_str("]}");
+        out
+    }
+}
+
+/// Escape a string for inclusion in a JSON literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Lint one IR module against its runtime: dataflow, race and bounds
+/// checks, plus the engine-mix prediction from an `Hw` lowering (the
+/// variant the paper's hardware runs use, `volatile_stores` on to
+/// match the prototype compiler).
+pub fn lint_ir(name: &str, rt: &UpcRuntime, module: &IrModule) -> LintReport {
+    let tr = dataflow::trace(module, rt);
+    let (classes, nclasses) = tr.tracker.classes();
+    let mut diagnostics = Vec::new();
+    race_check(&tr, &classes, rt, &mut diagnostics);
+    bounds_check(&tr, &classes, rt, &mut diagnostics);
+    if !tr.divergent_barriers.is_empty() {
+        diagnostics.push(Diagnostic {
+            severity: Severity::Warn,
+            code: "barrier/divergent",
+            phase: 0,
+            array: String::new(),
+            message: "barrier under conditional control flow: threads may \
+                      disagree on the barrier sequence"
+                .to_string(),
+            sites: tr.divergent_barriers.clone(),
+        });
+    }
+    if !tr.untracked.is_empty() {
+        diagnostics.push(Diagnostic {
+            severity: Severity::Warn,
+            code: "ptr/untracked",
+            phase: 0,
+            array: String::new(),
+            message: "shared accesses through pointers the dataflow pass \
+                      lost track of (no array attribution)"
+                .to_string(),
+            sites: tr.untracked.clone(),
+        });
+    }
+    diagnostics.sort_by_key(|d| d.severity);
+    let opts = CompileOpts {
+        lowering: Lowering::Hw,
+        static_threads: false,
+        numthreads: rt.numthreads,
+        volatile_stores: true,
+    };
+    let compiled = compile(module, rt, &opts);
+    let predicted = predict::predict(&compiled.program, &compiled.stats);
+    LintReport {
+        kernel: name.to_string(),
+        threads: rt.numthreads,
+        phases: nclasses,
+        sites: tr.sites.len(),
+        diagnostics,
+        predicted,
+    }
+}
+
+/// Build and lint one NPB kernel (unoptimized source — the variant the
+/// hardware lowering consumes).
+pub fn lint_kernel(kernel: Kernel, threads: u32, scale: &Scale) -> LintReport {
+    let built = npb::build(kernel, threads, SourceVariant::Unoptimized, scale);
+    lint_ir(kernel.name(), &built.rt, &built.module)
+}
+
+/// Lint one fixture kernel by name.
+pub fn lint_fixture(name: &str, threads: u32) -> Option<LintReport> {
+    let fx = fixtures::by_name(name, threads)?;
+    Some(lint_ir(fx.name, &fx.rt, &fx.module))
+}
+
+/// Per-thread footprints of one site, one entry per thread; `None`
+/// when the enumeration went over [`footprint::ENUM_CAP`].
+type Footprints = Vec<Option<BTreeSet<i64>>>;
+
+fn site_footprints(site: &AccessSite, threads: u32) -> Footprints {
+    (0..threads)
+        .map(|t| {
+            site.index.as_ref().and_then(|idx| {
+                enumerate_for_thread(
+                    idx,
+                    &site.loops,
+                    &site.constraints,
+                    i64::from(t),
+                )
+            })
+        })
+        .collect()
+}
+
+/// Cross-thread race detection inside each concurrency-phase class.
+fn race_check(
+    tr: &AccessTrace,
+    classes: &[usize],
+    rt: &UpcRuntime,
+    out: &mut Vec<Diagnostic>,
+) {
+    let threads = rt.numthreads;
+    // group sites by (phase class, array)
+    let mut groups: BTreeMap<(usize, usize), Vec<usize>> = BTreeMap::new();
+    for (i, s) in tr.sites.iter().enumerate() {
+        groups.entry((classes[s.seg], s.arr.0)).or_default().push(i);
+    }
+    // footprint cache, computed lazily per site
+    let mut cache: Vec<Option<Footprints>> = vec![None; tr.sites.len()];
+    for (&(class, _), members) in &groups {
+        let mut unprovable: BTreeSet<String> = BTreeSet::new();
+        for (a_pos, &i) in members.iter().enumerate() {
+            for &j in &members[a_pos..] {
+                let (si, sj) = (&tr.sites[i], &tr.sites[j]);
+                if !(si.write || sj.write) {
+                    continue; // read/read never races
+                }
+                if i == j && !si.write {
+                    continue;
+                }
+                let exact = si.index.is_some()
+                    && sj.index.is_some()
+                    && !si.opaque
+                    && !sj.opaque;
+                if !exact {
+                    unprovable.insert(si.site.clone());
+                    unprovable.insert(sj.site.clone());
+                    continue;
+                }
+                if cache[i].is_none() {
+                    cache[i] = Some(site_footprints(si, threads));
+                }
+                if cache[j].is_none() {
+                    cache[j] = Some(site_footprints(sj, threads));
+                }
+                let (fi, fj) = (
+                    cache[i].as_ref().expect("just filled"),
+                    cache[j].as_ref().expect("just filled"),
+                );
+                if fi.iter().chain(fj.iter()).any(Option::is_none) {
+                    unprovable.insert(si.site.clone());
+                    unprovable.insert(sj.site.clone());
+                    continue;
+                }
+                let witness = (0..threads).find_map(|t| {
+                    (0..threads)
+                        .filter(|&u| u != t)
+                        .find_map(|u| {
+                            let a = fi[t as usize].as_ref().expect("checked");
+                            let b = fj[u as usize].as_ref().expect("checked");
+                            a.intersection(b).next().map(|&e| (e, t, u))
+                        })
+                });
+                if let Some((elem, t, u)) = witness {
+                    let (code, what) = if si.write && sj.write {
+                        ("race/ww", "both write")
+                    } else {
+                        ("race/rw", "read and write")
+                    };
+                    out.push(Diagnostic {
+                        severity: Severity::Error,
+                        code,
+                        phase: class,
+                        array: si.array.clone(),
+                        message: format!(
+                            "threads {t} and {u} {what} {}[{elem}] \
+                             concurrently in phase {class} (no barrier \
+                             between the accesses)",
+                            si.array
+                        ),
+                        sites: if i == j {
+                            vec![si.site.clone()]
+                        } else {
+                            vec![si.site.clone(), sj.site.clone()]
+                        },
+                    });
+                }
+            }
+        }
+        if !unprovable.is_empty() {
+            let array = tr.sites[members[0]].array.clone();
+            out.push(Diagnostic {
+                severity: Severity::Warn,
+                code: "race/unprovable",
+                phase: class,
+                array: array.clone(),
+                message: format!(
+                    "cannot prove phase-{class} accesses to {array} \
+                     race-free (data-dependent or over-cap indices)"
+                ),
+                sites: unprovable.into_iter().collect(),
+            });
+        }
+    }
+}
+
+/// Static bounds check: every tracked footprint stays in `[0, nelems)`.
+fn bounds_check(
+    tr: &AccessTrace,
+    classes: &[usize],
+    rt: &UpcRuntime,
+    out: &mut Vec<Diagnostic>,
+) {
+    let threads = rt.numthreads;
+    for s in &tr.sites {
+        let class = classes[s.seg];
+        if s.index.is_none() || s.opaque {
+            out.push(Diagnostic {
+                severity: Severity::Warn,
+                code: "bounds/unprovable",
+                phase: class,
+                array: s.array.clone(),
+                message: format!(
+                    "cannot bound this access to {} (index not statically \
+                     tracked); runtime nelems check is the only guard",
+                    s.array
+                ),
+                sites: vec![s.site.clone()],
+            });
+            continue;
+        }
+        let fps = site_footprints(s, threads);
+        if fps.iter().any(Option::is_none) {
+            out.push(Diagnostic {
+                severity: Severity::Warn,
+                code: "bounds/unprovable",
+                phase: class,
+                array: s.array.clone(),
+                message: format!(
+                    "footprint of this access to {} exceeds the enumeration \
+                     cap ({} elements)",
+                    s.array,
+                    footprint::ENUM_CAP
+                ),
+                sites: vec![s.site.clone()],
+            });
+            continue;
+        }
+        let oob = fps.iter().enumerate().find_map(|(t, fp)| {
+            fp.as_ref()
+                .expect("checked")
+                .iter()
+                .find(|&&e| e < 0 || e as u64 >= s.nelems)
+                .map(|&e| (e, t))
+        });
+        if let Some((elem, t)) = oob {
+            out.push(Diagnostic {
+                severity: Severity::Error,
+                code: "bounds/oob",
+                phase: class,
+                array: s.array.clone(),
+                message: format!(
+                    "thread {t} accesses {}[{elem}] but nelems is {} \
+                     (static twin of SharedArray::ptr's runtime assert)",
+                    s.array, s.nelems
+                ),
+                sites: vec![s.site.clone()],
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn racy_fixture_draws_one_phase_localized_race() {
+        let r = lint_fixture("racy", 4).expect("known fixture");
+        assert_eq!(r.errors(), 1, "diagnostics: {:?}", r.diagnostics);
+        assert_eq!(r.warnings(), 0, "diagnostics: {:?}", r.diagnostics);
+        let d = &r.diagnostics[0];
+        assert_eq!(d.code, "race/ww");
+        assert_eq!(d.phase, 0);
+        assert_eq!(d.array, "racy_a");
+        assert_eq!(r.phases, 2);
+    }
+
+    #[test]
+    fn oob_fixture_draws_one_bounds_error() {
+        let r = lint_fixture("oob", 4).expect("known fixture");
+        assert_eq!(r.errors(), 1, "diagnostics: {:?}", r.diagnostics);
+        assert_eq!(r.warnings(), 0, "diagnostics: {:?}", r.diagnostics);
+        let d = &r.diagnostics[0];
+        assert_eq!(d.code, "bounds/oob");
+        assert!(d.message.contains("[64]"), "message: {}", d.message);
+    }
+
+    #[test]
+    fn clean_fixture_is_silent_and_batchable() {
+        let r = lint_fixture("clean", 4).expect("known fixture");
+        assert!(r.diagnostics.is_empty(), "diagnostics: {:?}", r.diagnostics);
+        assert!(r.predicted.batched());
+        assert!(!r.predicted.gather());
+    }
+
+    #[test]
+    fn summary_json_is_deterministic() {
+        let r = lint_fixture("racy", 4).expect("known fixture");
+        assert_eq!(
+            r.summary_json(),
+            "{\"kernel\":\"racy\",\"threads\":4,\"errors\":1,\"warnings\":0,\
+             \"codes\":[\"race/ww\"],\"batched\":false,\"scalar\":true,\
+             \"gather\":false}"
+        );
+    }
+
+    #[test]
+    fn json_escaping_is_safe() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+}

@@ -1,0 +1,176 @@
+//! Barrier-phase partitioning of a kernel.
+//!
+//! A UPC barrier separates *synchronization phases*: accesses on
+//! opposite sides of a barrier can never race.  The analyzer splits a
+//! kernel into barrier-delimited segments and then merges segments
+//! that a loop back edge makes concurrent again — e.g. CG's
+//! `do { ...; barrier; ...; barrier; } while (...)` body, where the
+//! code *after* the last barrier of iteration `n` runs concurrently
+//! with the code *before* the first barrier of iteration `n+1`.  The
+//! union-find classes that remain are the analyzer's units of race
+//! checking.
+
+use crate::compiler::Op;
+
+/// Segment bookkeeping for one structured walk of a kernel: a counter
+/// of barrier-delimited segments plus a union-find over them (loop
+/// wrap-around merges the entry segment with the exit segment of any
+/// loop whose body contains a barrier).
+#[derive(Clone, Debug)]
+pub struct PhaseTracker {
+    /// `parent[s]` for the union-find; one entry per segment.
+    parent: Vec<usize>,
+    /// The segment new accesses currently fall into.
+    cur: usize,
+}
+
+impl Default for PhaseTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PhaseTracker {
+    /// A tracker with one open segment (id 0).
+    pub fn new() -> Self {
+        PhaseTracker { parent: vec![0], cur: 0 }
+    }
+
+    /// The segment currently being populated.
+    pub fn current(&self) -> usize {
+        self.cur
+    }
+
+    /// Total segments opened so far.
+    pub fn num_segs(&self) -> usize {
+        self.parent.len()
+    }
+
+    /// A barrier ends the current segment and opens the next one.
+    pub fn barrier(&mut self) -> usize {
+        let id = self.parent.len();
+        self.parent.push(id);
+        self.cur = id;
+        id
+    }
+
+    /// Representative of `seg`'s concurrency class.
+    pub fn find(&self, mut seg: usize) -> usize {
+        while self.parent[seg] != seg {
+            seg = self.parent[seg];
+        }
+        seg
+    }
+
+    /// Merge two segments into one concurrency class.
+    pub fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            // root the larger id under the smaller so class
+            // representatives are stable, earliest-segment ids
+            let (lo, hi) = if ra < rb { (ra, rb) } else { (rb, ra) };
+            self.parent[hi] = lo;
+        }
+    }
+
+    /// A loop body containing at least one barrier wrapped around:
+    /// its exit segment (the current one) is concurrent with its
+    /// entry segment.
+    pub fn loop_wrap(&mut self, entry_seg: usize) {
+        let cur = self.cur;
+        self.union(entry_seg, cur);
+    }
+
+    /// Compact class ids: maps every segment to a class index in
+    /// `0..classes`, numbering classes by first appearance.
+    pub fn classes(&self) -> (Vec<usize>, usize) {
+        let mut map = vec![usize::MAX; self.parent.len()];
+        let mut next = 0;
+        let mut out = Vec::with_capacity(self.parent.len());
+        for seg in 0..self.parent.len() {
+            let root = self.find(seg);
+            if map[root] == usize::MAX {
+                map[root] = next;
+                next += 1;
+            }
+            out.push(map[root]);
+        }
+        (out, next)
+    }
+}
+
+/// Structural phase partition of an op tree, ignoring loop
+/// wrap-around: assigns every op (in pre-order) the index of the
+/// barrier-delimited segment it falls into and returns the total
+/// segment count.  A barrier belongs to the segment it terminates.
+///
+/// This is the partitioner the property suite exercises: every op is
+/// covered exactly once, segment ids are non-decreasing in pre-order,
+/// and the segment count is exactly `1 + number of barriers`.
+pub fn flat_partition(ops: &[Op]) -> (Vec<usize>, usize) {
+    fn walk(ops: &[Op], cur: &mut usize, out: &mut Vec<usize>) {
+        for op in ops {
+            out.push(*cur);
+            match op {
+                Op::Barrier => *cur += 1,
+                Op::For { body, .. } | Op::DoWhile { body, .. } => {
+                    walk(body, cur, out);
+                }
+                Op::If { then, els, .. } => {
+                    walk(then, cur, out);
+                    walk(els, cur, out);
+                }
+                _ => {}
+            }
+        }
+    }
+    let mut out = Vec::new();
+    let mut cur = 0;
+    walk(ops, &mut cur, &mut out);
+    (out, cur + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::Val;
+
+    #[test]
+    fn tracker_segments_and_wrap() {
+        let mut t = PhaseTracker::new();
+        assert_eq!(t.current(), 0);
+        let entry = t.current();
+        t.barrier();
+        t.barrier();
+        assert_eq!(t.current(), 2);
+        assert_eq!(t.num_segs(), 3);
+        // a barrier-bearing loop wrapped: entry and exit are one class
+        t.loop_wrap(entry);
+        assert_eq!(t.find(2), t.find(0));
+        assert_ne!(t.find(1), t.find(0));
+        let (classes, n) = t.classes();
+        assert_eq!(n, 2);
+        assert_eq!(classes[0], classes[2]);
+        assert_ne!(classes[0], classes[1]);
+    }
+
+    #[test]
+    fn flat_partition_counts_every_op_once() {
+        let ops = vec![
+            Op::Mov { d: 0, v: Val::I(1) },
+            Op::Barrier,
+            Op::For {
+                i: 1,
+                from: Val::I(0),
+                to: Val::I(4),
+                step: 1,
+                body: vec![Op::Mov { d: 2, v: Val::I(0) }, Op::Barrier],
+            },
+            Op::Mov { d: 3, v: Val::I(2) },
+        ];
+        let (segs, n) = flat_partition(&ops);
+        // ops in pre-order: Mov, Barrier, For, Mov(body), Barrier(body), Mov
+        assert_eq!(segs, vec![0, 0, 1, 1, 1, 2]);
+        assert_eq!(n, 3);
+    }
+}

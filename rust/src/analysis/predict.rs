@@ -1,0 +1,224 @@
+//! Compile-time engine-mix prediction: replay the batch planner's own
+//! window eligibility ([`plan_window`]) over the lowered instruction
+//! stream and predict, before a single simulated cycle, how many PGAS
+//! increments each kernel can serve batched, which stay scalar, and
+//! whether any window is large enough for the inspector/executor
+//! gather leg.
+//!
+//! The prediction is validated *differentially* against the runtime
+//! telemetry ([`EngineMix`], [`GatherStats`]) that every simulation
+//! already reports — see [`PredictedMix::check_against`] for the exact
+//! agreement contract and why it is boolean/one-directional rather
+//! than an equality on counts.
+
+use crate::compiler::CompileStats;
+use crate::cpu::pipeline::{plan_window, EngineMix, Lookahead};
+use crate::engine::{EngineSelector, GatherStats};
+use crate::isa::{Inst, Program};
+
+/// Static per-kernel engine-mix prediction from a linear scan of the
+/// lowered [`Program`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PredictedMix {
+    /// Batchable windows found (each ≥ `MIN_RUN_INCS` increments).
+    pub windows: usize,
+    /// PGAS increments inside those windows.
+    pub batchable_incs: usize,
+    /// PGAS increments outside any batchable window.
+    pub scalar_incs: usize,
+    /// Windows whose increment count meets the gather threshold
+    /// (multi-owner batches there are inspector/executor candidates).
+    pub gather_windows: usize,
+    /// The lowering's own access-site classification, carried along
+    /// for the lint report.
+    pub stats: CompileStats,
+}
+
+/// Scan `program` exactly the way the pipeline's lookahead does — at
+/// every PGAS increment, try [`plan_window`] with the default window
+/// depth; on success skip the whole window, otherwise count the
+/// increment scalar.
+///
+/// Jumping *into* the middle of a window at runtime is harmless for
+/// the boolean agreement contract: any pc the runtime enters a window
+/// at is either a static window start itself or strictly inside one
+/// already counted here.
+pub fn predict(program: &Program, stats: &CompileStats) -> PredictedMix {
+    let insts = &program.insts;
+    let mut out = PredictedMix { stats: *stats, ..PredictedMix::default() };
+    let mut pc = 0usize;
+    while pc < insts.len() {
+        match insts[pc] {
+            Inst::PgasIncI { .. } | Inst::PgasIncR { .. } => {
+                match plan_window(insts, pc, Lookahead::DEFAULT_WINDOW) {
+                    Some(plan) => {
+                        out.windows += 1;
+                        out.batchable_incs += plan.incs;
+                        if plan.incs >= EngineSelector::DEFAULT_GATHER_THRESHOLD {
+                            out.gather_windows += 1;
+                        }
+                        pc += plan.len;
+                    }
+                    None => {
+                        out.scalar_incs += 1;
+                        pc += 1;
+                    }
+                }
+            }
+            _ => pc += 1,
+        }
+    }
+    out
+}
+
+impl PredictedMix {
+    /// Does the kernel have any statically batchable window?
+    pub fn batched(&self) -> bool {
+        self.batchable_incs > 0
+    }
+
+    /// Does the kernel have any statically scalar increment?
+    pub fn scalar(&self) -> bool {
+        self.scalar_incs > 0
+    }
+
+    /// Is any window gather-eligible by size?
+    pub fn gather(&self) -> bool {
+        self.gather_windows > 0
+    }
+
+    /// Check the prediction against one run's telemetry.
+    ///
+    /// The contract is deliberately *categorical*, not count-exact:
+    ///
+    /// 1. batched: a static window exists **iff** the runtime served
+    ///    any increment batched (the runtime window is a prefix of
+    ///    the static one — `plan_window` is monotone in `max_len` —
+    ///    so the booleans must agree even when quantum budgets clamp
+    ///    runtime windows shorter);
+    /// 2. scalar: a static scalar increment implies runtime scalar
+    ///    increments (one-directional — the runtime can *add* scalar
+    ///    increments by truncating windows at quantum boundaries);
+    /// 3. when the prediction says *no* scalar increments at all,
+    ///    runtime scalar leakage must stay under 2% of dynamic
+    ///    increments (the quantum-truncation allowance);
+    /// 4. gather: a gather-sized static window exists **iff** the
+    ///    gather leg inspected at least one batch (`plans` when the
+    ///    batch was multi-owner, `fallback` when inspection found a
+    ///    single owner — both mean a ≥-threshold batch arrived).
+    pub fn check_against(
+        &self,
+        mix: &EngineMix,
+        gather: &GatherStats,
+    ) -> Result<(), String> {
+        if self.batched() != (mix.batched_incs > 0) {
+            return Err(format!(
+                "batched disagreement: predicted {} windows / {} batchable incs, \
+                 runtime batched {} incs",
+                self.windows, self.batchable_incs, mix.batched_incs
+            ));
+        }
+        if self.scalar() && mix.scalar_incs == 0 {
+            return Err(format!(
+                "scalar disagreement: predicted {} scalar incs, runtime saw none",
+                self.scalar_incs
+            ));
+        }
+        if !self.scalar() {
+            let dynamic = mix.batched_incs + mix.scalar_incs;
+            if mix.scalar_incs * 50 > dynamic {
+                return Err(format!(
+                    "scalar leakage: predicted fully batchable, runtime ran \
+                     {} of {} incs scalar (> 2% truncation allowance)",
+                    mix.scalar_incs, dynamic
+                ));
+            }
+        }
+        let runtime_gather = gather.plans + gather.fallback > 0;
+        if self.gather() != runtime_gather {
+            return Err(format!(
+                "gather disagreement: predicted {} gather-sized windows, \
+                 runtime gather plans={} fallback={}",
+                self.gather_windows, gather.plans, gather.fallback
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::IntOp;
+
+    fn inc(rd: u8, ra: u8) -> Inst {
+        Inst::PgasIncI { rd, ra, l2es: 3, l2bs: 2, l2inc: 0 }
+    }
+
+    #[test]
+    fn adjacent_incs_form_one_window() {
+        let prog = Program::new(
+            "w",
+            vec![inc(1, 1), inc(2, 2), inc(3, 3), Inst::Halt],
+        );
+        let p = predict(&prog, &CompileStats::default());
+        assert_eq!(p.windows, 1);
+        assert_eq!(p.batchable_incs, 3);
+        assert_eq!(p.scalar_incs, 0);
+        assert_eq!(p.gather_windows, 0);
+        assert!(p.batched() && !p.scalar() && !p.gather());
+    }
+
+    #[test]
+    fn lone_and_dependent_incs_stay_scalar() {
+        // a single inc, and a pair where the second reads the first's
+        // destination — both scalar by plan_window's own rules
+        let prog = Program::new(
+            "s",
+            vec![
+                inc(1, 1),
+                Inst::Opi { op: IntOp::Add, rd: 9, ra: 9, imm: 1 },
+                Inst::Halt,
+                inc(2, 2),
+                inc(3, 2), // reads r2, written by the previous inc
+                Inst::Halt,
+            ],
+        );
+        let p = predict(&prog, &CompileStats::default());
+        assert_eq!(p.windows, 0);
+        assert_eq!(p.scalar_incs, 3);
+        assert!(p.scalar() && !p.batched());
+    }
+
+    #[test]
+    fn gather_sized_window_is_flagged() {
+        let mut insts: Vec<Inst> =
+            (0..8).map(|r| inc(r + 1, r + 1)).collect();
+        insts.push(Inst::Halt);
+        let p = predict(&Program::new("g", insts), &CompileStats::default());
+        assert_eq!(p.windows, 1);
+        assert_eq!(p.batchable_incs, 8);
+        assert_eq!(p.gather_windows, 1);
+        assert!(p.gather());
+    }
+
+    #[test]
+    fn categorical_agreement_contract() {
+        let p = PredictedMix {
+            windows: 1,
+            batchable_incs: 4,
+            scalar_incs: 0,
+            gather_windows: 0,
+            stats: CompileStats::default(),
+        };
+        let mut mix = EngineMix::default();
+        mix.batched_incs = 400;
+        mix.scalar_incs = 4; // 1% — inside the truncation allowance
+        assert!(p.check_against(&mix, &GatherStats::default()).is_ok());
+        mix.scalar_incs = 40; // 9% — leakage
+        assert!(p.check_against(&mix, &GatherStats::default()).is_err());
+        mix.scalar_incs = 0;
+        mix.batched_incs = 0; // batched disagreement
+        assert!(p.check_against(&mix, &GatherStats::default()).is_err());
+    }
+}

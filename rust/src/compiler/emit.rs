@@ -59,15 +59,43 @@ impl Asm {
     }
 
     /// Resolve all fixups and produce the program.
+    ///
+    /// Fails loudly — never emits a silently-bad [`Program`]:
+    /// * panics on any label that was created but never bound
+    ///   (a dangling `u32::MAX` branch target would otherwise survive
+    ///   into the simulator);
+    /// * panics on any branch whose resolved target lies outside the
+    ///   instruction stream — e.g. a label bound after the final emit
+    ///   — with the pc/target/program context `Program::validate`'s
+    ///   generic `expect` lacks.
     pub fn finish(mut self, name: &str) -> Program {
         for (idx, l) in std::mem::take(&mut self.fixups) {
-            let target = self.labels[l.0].expect("unbound label at finish");
+            let target = self.labels[l.0].unwrap_or_else(|| {
+                panic!(
+                    "unbound label L{} referenced by inst {idx} in `{name}`",
+                    l.0
+                )
+            });
             match &mut self.insts[idx] {
                 Inst::Br { target: t, .. }
                 | Inst::Jmp { target: t }
                 | Inst::PgasBrLoc { target: t, .. } => *t = target,
                 other => panic!("fixup on non-branch {other}"),
             }
+        }
+        let n = self.insts.len() as u32;
+        for (pc, inst) in self.insts.iter().enumerate() {
+            let target = match *inst {
+                Inst::Br { target, .. }
+                | Inst::Jmp { target }
+                | Inst::PgasBrLoc { target, .. } => target,
+                _ => continue,
+            };
+            assert!(
+                target < n,
+                "branch target {target} at pc {pc} out of range \
+                 ({n} instructions) in `{name}`"
+            );
         }
         Program::new(name, self.insts)
     }
@@ -114,6 +142,27 @@ mod tests {
         let mut a = Asm::new();
         let l = a.label();
         a.jmp(l);
+        let _ = a.finish("bad");
+    }
+
+    #[test]
+    #[should_panic(expected = "branch target")]
+    fn out_of_range_branch_target_rejected() {
+        let mut a = Asm::new();
+        // a label bound after the final instruction resolves to
+        // one-past-the-end — finish must refuse it loudly
+        let l = a.label();
+        a.jmp(l);
+        a.bind(l);
+        let _ = a.finish("bad");
+    }
+
+    #[test]
+    #[should_panic(expected = "branch target")]
+    fn raw_out_of_range_target_rejected() {
+        let mut a = Asm::new();
+        a.emit(Inst::Br { cond: Cond::Eq, ra: 0, target: 1234 });
+        a.emit(Inst::Halt);
         let _ = a.finish("bad");
     }
 }

@@ -599,6 +599,37 @@ pub fn health_table(h: &HealthStats) -> Table {
     t
 }
 
+/// The `pgas-hw lint` summary: one row per linted kernel with its
+/// phase/site census, diagnostic counts, and the static engine-mix
+/// prediction (the categories the differential suite checks against
+/// runtime telemetry).
+pub fn lint_table(reports: &[crate::analysis::LintReport]) -> Table {
+    let mut t = Table::new(
+        "Static PGAS access analysis (pgas-hw lint)",
+        &[
+            "kernel", "threads", "phases", "sites", "errors", "warnings",
+            "windows", "batchable", "scalar", "gather", "codes",
+        ],
+    );
+    for r in reports {
+        let codes = r.codes().join(",");
+        t.row(&[
+            r.kernel.clone(),
+            r.threads.to_string(),
+            r.phases.to_string(),
+            r.sites.to_string(),
+            r.errors().to_string(),
+            r.warnings().to_string(),
+            r.predicted.windows.to_string(),
+            r.predicted.batchable_incs.to_string(),
+            r.predicted.scalar_incs.to_string(),
+            r.predicted.gather_windows.to_string(),
+            if codes.is_empty() { "-".into() } else { codes },
+        ]);
+    }
+    t
+}
+
 /// Shared driver for the per-figure `cargo bench` targets: regenerate
 /// the figure's table at bench scale, then wall-time the representative
 /// point with the micro-bench harness.

@@ -79,6 +79,10 @@
 //! * [`runtime`] — artifact geometry + scalar oracle for the batched
 //!   unit; the PJRT/XLA executor itself is behind the `xla-unit`
 //!   cargo feature.
+//! * [`analysis`] — the static PGAS access analyzer behind `pgas-hw
+//!   lint`: barrier-phase race detection over affine footprints, a
+//!   static shared-bounds check, and a compile-time engine-mix
+//!   prediction differentially validated against runtime telemetry.
 //! * [`coordinator`] — campaign configuration, sweep scheduling, result
 //!   collection and the figure/table reporters.
 //! * [`daemon`] — the multi-tenant address-mapping service (`pgas-hw
@@ -90,6 +94,8 @@
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
 //! simulator and benchmarks never touch it at run time.
 
+#[warn(missing_docs)]
+pub mod analysis;
 pub mod area;
 pub mod cache;
 pub mod compiler;

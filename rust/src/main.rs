@@ -6,6 +6,9 @@
 //!   leon3        the FPGA prototype microbenchmarks (Figs. 15/16)
 //!   area         Table 4 + the component breakdown
 //!   disasm       compile a kernel and print program + PGAS census + Table 1
+//!   lint         static PGAS access analysis: barrier-phase race
+//!                detection, shared-bounds proof, engine-mix prediction;
+//!                exits non-zero on any ERROR diagnostic
 //!   verify       differential check of the AddressEngine backends
 //!                (software vs pow2 vs sharded vs the Leon3 coprocessor
 //!                model vs the remote worker-process pool; + the XLA
@@ -41,7 +44,7 @@ use pgas_hw::util::rng::Xoshiro256;
 use pgas_hw::{area, isa, leon3};
 
 fn usage() -> &'static str {
-    "usage: pgas-hw <run|sweep|leon3|area|disasm|verify|walk|serve-engine|daemon> [--key value ...]
+    "usage: pgas-hw <run|sweep|leon3|area|disasm|lint|verify|walk|serve-engine|daemon> [--key value ...]
   run    --kernel EP|IS|CG|MG|FT|MD|SPMV --variant unopt|manual|hw
          --model atomic|timing|detailed --cores N [--scale F]
          [--no-lookahead]  (disable batched PGAS-increment windows;
@@ -74,6 +77,12 @@ fn usage() -> &'static str {
   leon3  [--bench vecadd|matmul|all] [--threads 1|2|4] [--tables]
   area
   disasm --kernel K [--variant V] [--full]
+  lint   [--kernel K | --all | --fixtures] [--json]
+         [--threads N] [--scale F]
+                           (static analyzer: --all lints the seven NPB
+                            kernels, --fixtures the deliberately-broken
+                            lint fixtures; exits non-zero on any ERROR
+                            diagnostic, so CI can gate on it)
   verify [--batches N] [--artifacts DIR]
   walk   [--blocksize B] [--elemsize E] [--threads T] [--inc I]
   serve-engine --socket PATH   (worker: serve one engine session, exit)
@@ -122,6 +131,7 @@ fn main() -> ExitCode {
         "leon3" => cmd_leon3(&flags),
         "area" => cmd_area(),
         "disasm" => cmd_disasm(&flags),
+        "lint" => cmd_lint(&flags),
         "verify" => cmd_verify(&flags),
         "walk" => cmd_walk(&flags),
         "serve-engine" => cmd_serve_engine(&flags),
@@ -469,6 +479,73 @@ fn cmd_disasm(flags: &HashMap<String, String>) -> Result<(), String> {
         }
     }
     Ok(())
+}
+
+/// The static analyzer: lint NPB kernels (or the fixture kernels) and
+/// report race / bounds / engine-mix findings.  Any ERROR diagnostic
+/// makes the command fail, which is what the CI `lint-kernels` job
+/// gates on.
+fn cmd_lint(flags: &HashMap<String, String>) -> Result<(), String> {
+    use pgas_hw::analysis;
+    let threads: u32 = flags
+        .get("threads")
+        .map(|s| s.parse().map_err(|_| format!("bad threads `{s}`")))
+        .unwrap_or(Ok(4))?;
+    // quick scale by default: lint compiles but never simulates, so
+    // the small shapes are plenty
+    let scale = match flags.get("scale") {
+        Some(s) => Scale {
+            factor: s.parse().map_err(|_| format!("bad scale `{s}`"))?,
+        },
+        None => Scale::quick(),
+    };
+    let mut reports = Vec::new();
+    if flags.contains_key("fixtures") {
+        for name in analysis::fixtures::NAMES {
+            reports.push(
+                analysis::lint_fixture(name, threads).expect("known fixture"),
+            );
+        }
+    } else if flags.contains_key("all") {
+        for k in Kernel::ALL.iter().chain(Kernel::IRREGULAR.iter()) {
+            reports.push(analysis::lint_kernel(*k, threads, &scale));
+        }
+    } else if let Some(name) = flags.get("kernel") {
+        let k = Kernel::parse(name).ok_or("unknown kernel")?;
+        reports.push(analysis::lint_kernel(k, threads, &scale));
+    } else {
+        return Err(format!(
+            "lint needs --kernel K, --all, or --fixtures\n{}",
+            usage()
+        ));
+    }
+    if flags.contains_key("json") {
+        let body = reports
+            .iter()
+            .map(pgas_hw::analysis::LintReport::to_json)
+            .collect::<Vec<_>>()
+            .join(",");
+        println!("[{body}]");
+    } else {
+        println!("{}", coordinator::lint_table(&reports).render());
+        for r in &reports {
+            for d in &r.diagnostics {
+                println!(
+                    "{} [{}] {} phase {}: {}",
+                    d.severity, d.code, r.kernel, d.phase, d.message
+                );
+                for s in &d.sites {
+                    println!("    at {s}");
+                }
+            }
+        }
+    }
+    let errors: usize = reports.iter().map(analysis::LintReport::errors).sum();
+    if errors > 0 {
+        Err(format!("{errors} ERROR diagnostics"))
+    } else {
+        Ok(())
+    }
 }
 
 #[cfg(feature = "xla-unit")]

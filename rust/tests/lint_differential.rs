@@ -1,0 +1,68 @@
+//! Differential validation of the static analyzer against runtime
+//! telemetry: for each of the seven NPB kernels, (1) `lint` must
+//! report zero ERROR diagnostics, and (2) the static engine-mix
+//! prediction must agree with the observed `RunOutcome::engine_mix()`
+//! categories — batched vs scalar vs gather — at quick scale.
+//!
+//! The agreement contract lives in
+//! `analysis::predict::PredictedMix::check_against` and is categorical
+//! (booleans plus a 2% quantum-truncation allowance), not count-exact:
+//! the runtime clamps windows to the remaining quantum budget, so raw
+//! counts legitimately drift while the categories cannot.
+
+use pgas_hw::analysis;
+use pgas_hw::cpu::CpuModel;
+use pgas_hw::npb::{self, Kernel, PaperVariant, Scale};
+
+fn all_kernels() -> impl Iterator<Item = Kernel> {
+    Kernel::ALL.into_iter().chain(Kernel::IRREGULAR)
+}
+
+#[test]
+fn npb_kernels_lint_without_errors() {
+    let scale = Scale::quick();
+    for k in all_kernels() {
+        let report = analysis::lint_kernel(k, 4, &scale);
+        assert_eq!(
+            report.errors(),
+            0,
+            "{} must lint clean, got: {:?}",
+            k.name(),
+            report.diagnostics
+        );
+    }
+}
+
+#[test]
+fn static_prediction_matches_runtime_engine_mix() {
+    let scale = Scale::quick();
+    for k in all_kernels() {
+        let report = analysis::lint_kernel(k, 4, &scale);
+        let out = npb::run(k, PaperVariant::Hw, CpuModel::Atomic, 4, &scale);
+        report
+            .predicted
+            .check_against(out.engine_mix(), &out.result.gather)
+            .unwrap_or_else(|e| {
+                panic!(
+                    "{}: static/runtime engine-mix disagreement: {e} \
+                     (predicted {:?}, runtime mix {:?}, gather {:?})",
+                    k.name(),
+                    report.predicted,
+                    out.engine_mix(),
+                    out.result.gather
+                )
+            });
+    }
+}
+
+#[test]
+fn fixture_kernels_are_flagged() {
+    // the CI lint-kernels job asserts `lint --fixtures` exits non-zero;
+    // this is the same property at the library level
+    let racy = analysis::lint_fixture("racy", 4).expect("known fixture");
+    let oob = analysis::lint_fixture("oob", 4).expect("known fixture");
+    let clean = analysis::lint_fixture("clean", 4).expect("known fixture");
+    assert!(racy.errors() > 0);
+    assert!(oob.errors() > 0);
+    assert_eq!(clean.errors(), 0);
+}

@@ -1,0 +1,211 @@
+//! Golden-file and property tests for the static analyzer.
+//!
+//! The goldens pin `LintReport::summary_json()` — the fully
+//! deterministic one-line form — for the three fixture kernels; the
+//! full `to_json()` output is structure-checked but not byte-pinned
+//! (site provenance strings are an implementation detail).  The
+//! property suite drives the phase partitioner over seeded random op
+//! trees and checks its covering invariants at any barrier count.
+
+use pgas_hw::analysis::phases::flat_partition;
+use pgas_hw::analysis::{self, Severity};
+use pgas_hw::compiler::{Op, Val};
+use pgas_hw::isa::{Cond, IntOp};
+use pgas_hw::util::rng::Xoshiro256;
+
+// ---------------- golden files ----------------
+
+#[test]
+fn racy_summary_matches_golden() {
+    let r = analysis::lint_fixture("racy", 4).expect("known fixture");
+    assert_eq!(
+        r.summary_json(),
+        include_str!("golden/lint_racy.json").trim()
+    );
+}
+
+#[test]
+fn oob_summary_matches_golden() {
+    let r = analysis::lint_fixture("oob", 4).expect("known fixture");
+    assert_eq!(r.summary_json(), include_str!("golden/lint_oob.json").trim());
+}
+
+#[test]
+fn clean_summary_matches_golden() {
+    let r = analysis::lint_fixture("clean", 4).expect("known fixture");
+    assert_eq!(
+        r.summary_json(),
+        include_str!("golden/lint_clean.json").trim()
+    );
+}
+
+#[test]
+fn racy_race_is_phase_localized_with_provenance() {
+    let r = analysis::lint_fixture("racy", 4).expect("known fixture");
+    let errors: Vec<_> = r
+        .diagnostics
+        .iter()
+        .filter(|d| d.severity == Severity::Error)
+        .collect();
+    assert_eq!(errors.len(), 1);
+    let d = errors[0];
+    assert_eq!(d.code, "race/ww");
+    assert_eq!(d.phase, 0, "the race is before the barrier");
+    assert_eq!(d.array, "racy_a");
+    assert!(
+        !d.sites.is_empty() && d.sites.iter().all(|s| s.contains("store")),
+        "sites: {:?}",
+        d.sites
+    );
+    // the post-barrier read is race-free: phase count must be 2
+    assert_eq!(r.phases, 2);
+}
+
+#[test]
+fn oob_error_has_a_concrete_witness() {
+    let r = analysis::lint_fixture("oob", 4).expect("known fixture");
+    let d = &r.diagnostics[0];
+    assert_eq!(d.code, "bounds/oob");
+    assert!(
+        d.message.contains("[64]") && d.message.contains("64"),
+        "witness element missing: {}",
+        d.message
+    );
+}
+
+#[test]
+fn full_json_is_structurally_complete() {
+    for name in analysis::fixtures::NAMES {
+        let r = analysis::lint_fixture(name, 4).expect("known fixture");
+        let j = r.to_json();
+        assert!(j.starts_with('{') && j.ends_with('}'), "{name}: {j}");
+        for key in [
+            "\"kernel\":",
+            "\"threads\":",
+            "\"phases\":",
+            "\"sites\":",
+            "\"predicted\":",
+            "\"diagnostics\":",
+            "\"windows\":",
+            "\"scalar_incs\":",
+        ] {
+            assert!(j.contains(key), "{name}: missing {key} in {j}");
+        }
+        // balanced quoting — every string literal closed
+        assert_eq!(
+            j.matches('"').count() % 2,
+            0,
+            "{name}: unbalanced quotes in {j}"
+        );
+    }
+}
+
+// ---------------- phase-partitioner property suite ----------------
+
+/// Random op tree: leaves, barriers, and nested For/If/DoWhile.
+fn gen_ops(rng: &mut Xoshiro256, depth: u32, budget: &mut u32) -> Vec<Op> {
+    let mut ops = Vec::new();
+    while *budget > 0 && rng.below(5) != 0 {
+        *budget -= 1;
+        let pick = rng.below(if depth < 3 { 7 } else { 4 });
+        match pick {
+            0 | 1 => ops.push(Op::Mov { d: 0, v: Val::I(rng.below(9) as i64) }),
+            2 => ops.push(Op::Barrier),
+            3 => ops.push(Op::Bin {
+                op: IntOp::Add,
+                d: 1,
+                a: 0,
+                b: Val::I(1),
+            }),
+            4 => ops.push(Op::For {
+                i: 2,
+                from: Val::I(0),
+                to: Val::I(rng.below(5) as i64),
+                step: 1,
+                body: gen_ops(rng, depth + 1, budget),
+            }),
+            5 => ops.push(Op::If {
+                cond: Cond::Eq,
+                r: 0,
+                then: gen_ops(rng, depth + 1, budget),
+                els: gen_ops(rng, depth + 1, budget),
+            }),
+            _ => ops.push(Op::DoWhile {
+                body: gen_ops(rng, depth + 1, budget),
+                cond: Cond::Ne,
+                r: 0,
+            }),
+        }
+    }
+    ops
+}
+
+/// Pre-order op count and barrier count, the partitioner's ground truth.
+fn census(ops: &[Op]) -> (usize, usize) {
+    let mut count = 0;
+    let mut barriers = 0;
+    for op in ops {
+        count += 1;
+        match op {
+            Op::Barrier => barriers += 1,
+            Op::For { body, .. } | Op::DoWhile { body, .. } => {
+                let (c, b) = census(body);
+                count += c;
+                barriers += b;
+            }
+            Op::If { then, els, .. } => {
+                let (c, b) = census(then);
+                let (c2, b2) = census(els);
+                count += c + c2;
+                barriers += b + b2;
+            }
+            _ => {}
+        }
+    }
+    (count, barriers)
+}
+
+#[test]
+fn partition_covers_every_op_exactly_once_at_any_barrier_count() {
+    let mut rng = Xoshiro256::new(0x11A7);
+    for round in 0..200 {
+        let mut budget = 40;
+        let ops = gen_ops(&mut rng, 0, &mut budget);
+        let (count, barriers) = census(&ops);
+        let (segs, nsegs) = flat_partition(&ops);
+        // every op covered exactly once, in pre-order
+        assert_eq!(segs.len(), count, "round {round}");
+        // segment count is exactly barriers + 1, no matter the nesting
+        assert_eq!(nsegs, barriers + 1, "round {round}");
+        // ids are valid and non-decreasing in pre-order
+        assert!(segs.iter().all(|&s| s < nsegs), "round {round}");
+        assert!(
+            segs.windows(2).all(|w| w[0] <= w[1]),
+            "round {round}: segment ids must be monotone in pre-order"
+        );
+        // each segment in 0..nsegs is non-empty whenever any op landed
+        // after its opening barrier — the ids seen form a prefix set
+        if let Some(&max) = segs.iter().max() {
+            let seen: std::collections::BTreeSet<usize> =
+                segs.iter().copied().collect();
+            assert_eq!(seen.len(), max + 1, "round {round}: gap in segment ids");
+        }
+    }
+}
+
+#[test]
+fn barrier_free_tree_is_one_segment() {
+    let ops = vec![
+        Op::Mov { d: 0, v: Val::I(1) },
+        Op::For {
+            i: 1,
+            from: Val::I(0),
+            to: Val::I(4),
+            step: 1,
+            body: vec![Op::Mov { d: 2, v: Val::I(0) }],
+        },
+    ];
+    let (segs, nsegs) = flat_partition(&ops);
+    assert_eq!(nsegs, 1);
+    assert!(segs.iter().all(|&s| s == 0));
+}
